@@ -1,0 +1,66 @@
+//! Scenario: an always-on edge accelerator (Eyeriss-class, 108 KB buffer)
+//! running continuous camera inference — the workload the paper's intro
+//! motivates for compact edge devices.
+//!
+//! ```bash
+//! cargo run --release --example edge_accelerator
+//! ```
+//!
+//! Compares SRAM / conventional 2T eDRAM / MCAIMem buffers across the CNN
+//! benchmarks at a fixed frame rate, reporting per-frame buffer energy,
+//! sustained buffer power, and the battery-life multiple MCAIMem buys.
+
+use mcaimem::energy::system_eval::{evaluate, MemChoice};
+use mcaimem::scalesim::{accelerator::AcceleratorConfig, network, simulate_network};
+use mcaimem::util::table::{fnum, Table};
+
+fn main() -> anyhow::Result<()> {
+    let acc = AcceleratorConfig::eyeriss();
+    let fps = 30.0;
+    println!(
+        "edge scenario: {} ({}×{} PEs, {} KB buffer) at {fps} fps\n",
+        acc.name,
+        acc.pe_rows,
+        acc.pe_cols,
+        acc.buffer_bytes / 1024
+    );
+
+    let mut t = Table::new(
+        "per-frame buffer energy (µJ) and sustained buffer power (µW) at 30 fps",
+        &["network", "SRAM µJ", "eDRAM µJ", "MCAIMem µJ", "SRAM µW", "MCAIMem µW", "gain"],
+    );
+    let mut worst: f64 = f64::INFINITY;
+    let mut best: f64 = 0.0;
+    for name in ["LeNet", "VGG11", "AlexNet", "ResNet50"] {
+        let net = network::by_name(name).unwrap();
+        let trace = simulate_network(&net, &acc);
+        let s = evaluate(&trace, &acc, &MemChoice::Sram).total_j();
+        let e = evaluate(&trace, &acc, &MemChoice::Edram2t).total_j();
+        let m = evaluate(&trace, &acc, &MemChoice::Mcaimem { vref: 0.8 }).total_j();
+        let gain = s / m;
+        worst = worst.min(gain);
+        best = best.max(gain);
+        t.row(vec![
+            name.into(),
+            fnum(s * 1e6, 2),
+            fnum(e * 1e6, 2),
+            fnum(m * 1e6, 2),
+            fnum(s * fps * 1e6, 1),
+            fnum(m * fps * 1e6, 1),
+            format!("{}x", fnum(gain, 2)),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "buffer-energy gain across the CNN suite: {}×–{}× (paper headline: 3.4×)",
+        fnum(worst, 2),
+        fnum(best, 2)
+    );
+    println!(
+        "with the buffer at 42.5% of chip power, a {:.1}× buffer gain stretches a
+fixed battery budget by ~{:.0}% at identical frame rate.",
+        best,
+        (1.0 / (0.575 + 0.425 / best) - 1.0) * 100.0
+    );
+    Ok(())
+}

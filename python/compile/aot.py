@@ -1,0 +1,227 @@
+"""AOT compile path: train -> quantize -> lower to HLO text -> artifacts/.
+
+Python runs ONCE here (`make artifacts`); the rust binary only ever touches
+the `artifacts/` directory. Interchange is HLO *text*, not serialized
+HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction ids that the
+xla crate's xla_extension 0.5.1 rejects; the text parser reassigns ids
+(see /opt/xla-example/README.md).
+
+Artifacts produced:
+  model_clean.hlo.txt    f(x_i8[B,64], w0,b0,w1,b1,w2,b2)            -> logits_i8[B,10]
+  model_enc.hlo.txt      f(x_i8, m0..m5, w0,b0,w1,b1,w2,b2)          -> logits_i8
+  model_noenc.hlo.txt    same, without the one-enhancement encoder
+  encoder_roundtrip.hlo.txt  f(x_i8[N], mask_i8[N]) -> mcaimem_store(x, mask)
+  encode_only.hlo.txt    f(x_i8[N]) -> encode(x)
+  qmatmul.hlo.txt        f(x_i8[64,128], w_i8[128,64]) -> int32[64,64]
+  tensors/*.bin          weights, biases, test set (raw little-endian)
+  manifest.json          shapes/dtypes/scales/accuracy metadata
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import inject as k_inject
+
+BATCH = 128
+TEST_N = 2048
+ROUNDTRIP_N = 4096
+SEED = 20260710
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def save_tensor(tdir, name, arr):
+    arr = np.asarray(arr)
+    path = os.path.join(tdir, f"{name}.bin")
+    arr.tofile(path)
+    return {
+        "name": name,
+        "dtype": str(arr.dtype),
+        "shape": list(arr.shape),
+        "file": f"tensors/{name}.bin",
+    }
+
+
+def spec_of(arr):
+    return jax.ShapeDtypeStruct(np.asarray(arr).shape, np.asarray(arr).dtype)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifacts dir")
+    ap.add_argument("--steps", type=int, default=1500)
+    args = ap.parse_args()
+    out = args.out
+    tdir = os.path.join(out, "tensors")
+    os.makedirs(tdir, exist_ok=True)
+
+    key = jax.random.PRNGKey(SEED)
+    ktrain, ktest, kcalib, kmask = jax.random.split(key, 4)
+
+    # ---- train + quantize (L2 build path) --------------------------------
+    print(f"training float model ({args.steps} steps)...", flush=True)
+    params = M.train(ktrain, steps=args.steps)
+    x_test, y_test = M.make_dataset(ktest, TEST_N)
+    float_acc = float(
+        jnp.mean(jnp.argmax(M.float_forward(params, x_test), 1) == y_test)
+    )
+    x_calib, _ = M.make_dataset(kcalib, 1024)
+    q = M.quantize(params, x_calib)
+    s_in = q["act_scales"][0]
+    xq_test = M.quantize_input(x_test, s_in)
+    clean_acc = M.accuracy(M.qforward_clean(q, xq_test), y_test)
+    print(f"float acc={float_acc:.4f}  int8 clean acc={clean_acc:.4f}")
+    assert clean_acc > 0.85, "quantized model failed to train"
+
+    # ---- tensors ---------------------------------------------------------
+    tensors = []
+    weight_args = []
+    weight_names = []
+    for i in range(len(q["weights"])):
+        tensors.append(save_tensor(tdir, f"w{i}", q["weights"][i]))
+        tensors.append(save_tensor(tdir, f"b{i}", q["biases"][i]))
+        weight_args += [q["weights"][i], q["biases"][i]]
+        weight_names += [f"w{i}", f"b{i}"]
+    tensors.append(save_tensor(tdir, "x_test_i8", xq_test))
+    tensors.append(save_tensor(tdir, "y_test_i32", np.asarray(y_test, np.int32)))
+
+    # ---- lower the inference graphs --------------------------------------
+    xb = xq_test[:BATCH]
+    mask_specs = []
+    mask_shapes = []
+    h_dim = [M.INPUT_DIM] + [n for (_, n) in M.LAYER_SIZES]
+    for i in range(len(q["weights"])):
+        mask_shapes.append((BATCH, h_dim[i]))           # activation mask
+        mask_shapes.append(tuple(q["weights"][i].shape))  # weight mask
+    mask_specs = [jax.ShapeDtypeStruct(s, jnp.int8) for s in mask_shapes]
+
+    def clean_fn(x, *wb):
+        qp = rebuild_qparams(wb)
+        return (M.qforward_clean(qp, x),)
+
+    def enc_fn(x, *rest):
+        masks = list(rest[: 2 * len(q["weights"])])
+        qp = rebuild_qparams(rest[2 * len(q["weights"]):])
+        return (M.qforward_mcaimem(qp, x, masks, one_enhancement=True),)
+
+    def noenc_fn(x, *rest):
+        masks = list(rest[: 2 * len(q["weights"])])
+        qp = rebuild_qparams(rest[2 * len(q["weights"]):])
+        return (M.qforward_mcaimem(qp, x, masks, one_enhancement=False),)
+
+    def rebuild_qparams(wb):
+        ws = [wb[2 * i] for i in range(len(q["weights"]))]
+        bs = [wb[2 * i + 1] for i in range(len(q["weights"]))]
+        return {"weights": ws, "biases": bs, "requant": q["requant"]}
+
+    wb_specs = [spec_of(a) for a in weight_args]
+    xspec = jax.ShapeDtypeStruct((BATCH, M.INPUT_DIM), jnp.int8)
+
+    exports = {}
+
+    def export(name, fn, specs):
+        print(f"lowering {name}...", flush=True)
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out, fname), "w") as f:
+            f.write(text)
+        return fname
+
+    exports["model_clean"] = {
+        "file": export("model_clean", clean_fn, [xspec] + wb_specs),
+        "inputs": ["x"] + weight_names,
+    }
+    exports["model_enc"] = {
+        "file": export("model_enc", enc_fn, [xspec] + mask_specs + wb_specs),
+        "inputs": ["x"]
+        + [f"mask{i}" for i in range(len(mask_specs))]
+        + weight_names,
+    }
+    exports["model_noenc"] = {
+        "file": export("model_noenc", noenc_fn, [xspec] + mask_specs + wb_specs),
+        "inputs": ["x"]
+        + [f"mask{i}" for i in range(len(mask_specs))]
+        + weight_names,
+    }
+
+    rt_spec = jax.ShapeDtypeStruct((ROUNDTRIP_N,), jnp.int8)
+    exports["encoder_roundtrip"] = {
+        "file": export(
+            "encoder_roundtrip",
+            lambda x, m: (k_inject.mcaimem_store(x, m),),
+            [rt_spec, rt_spec],
+        ),
+        "inputs": ["x", "mask"],
+    }
+    from .kernels import one_enh as k_one_enh
+    exports["encode_only"] = {
+        "file": export(
+            "encode_only", lambda x: (k_one_enh.encode(x),), [rt_spec]
+        ),
+        "inputs": ["x"],
+    }
+    from .kernels import qmatmul as k_qmatmul
+    exports["qmatmul"] = {
+        "file": export(
+            "qmatmul",
+            lambda a, b: (k_qmatmul.qmatmul_i32(a, b),),
+            [
+                jax.ShapeDtypeStruct((64, 128), jnp.int8),
+                jax.ShapeDtypeStruct((128, 64), jnp.int8),
+            ],
+        ),
+        "inputs": ["a", "b"],
+    }
+
+    # quick sanity: enc model at p=0.05 should hold accuracy, noenc collapse
+    km = kmask
+    masks = []
+    for s in mask_shapes:
+        km, sub = jax.random.split(km)
+        masks.append(k_inject.draw_flip_mask(sub, s, 0.05))
+    acc_enc = M.accuracy(
+        M.qforward_mcaimem(q, xb, masks, one_enhancement=True), y_test[:BATCH]
+    )
+    acc_noenc = M.accuracy(
+        M.qforward_mcaimem(q, xb, masks, one_enhancement=False), y_test[:BATCH]
+    )
+    print(f"p=0.05: acc with one-enh={acc_enc:.3f}, without={acc_noenc:.3f}")
+
+    manifest = {
+        "batch": BATCH,
+        "input_dim": M.INPUT_DIM,
+        "num_classes": M.NUM_CLASSES,
+        "layer_sizes": [list(t) for t in M.LAYER_SIZES],
+        "mask_shapes": [list(s) for s in mask_shapes],
+        "requant_scales": [float(r) for r in q["requant"]],
+        "act_scales": q["act_scales"],
+        "float_acc": float_acc,
+        "int8_clean_acc": clean_acc,
+        "sanity_acc_enc_p05": acc_enc,
+        "sanity_acc_noenc_p05": acc_noenc,
+        "seed": SEED,
+        "tensors": tensors,
+        "models": exports,
+    }
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {out}/manifest.json")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

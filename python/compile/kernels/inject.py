@@ -1,0 +1,88 @@
+"""L1 Pallas kernel: asymmetric retention-error injection (paper §IV-A).
+
+Models what the 2T eDRAM planes do to stored data between refreshes: stored
+0-bits among the 7 eDRAM-mapped positions may flip to 1; stored 1-bits and
+the SRAM-protected sign bit never change. The *which bits are candidates*
+decision is physics (leakage Monte-Carlo) and lives on the Rust side /
+test harness, which passes a pre-drawn per-bit Bernoulli(p) `flip_mask`
+tensor; the kernel applies the pure bitwise memory-path transform:
+
+    aged = stored | (flip_mask & ~stored & 0x7f)
+
+Composed as encode → inject → decode it reproduces the paper's
+"inject into bit-0 post-encoder, pre-decoder" methodology (Fig. 11's
+*with one-enhancement* curve); applied raw it gives the *without* curve.
+
+TPU note: elementwise int8 VPU work, same (512, 128) VMEM tiling as
+``one_enh``; runs under ``interpret=True`` on CPU PJRT.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import one_enh
+
+
+def _inject_kernel(x_ref, m_ref, o_ref):
+    x = x_ref[...]
+    m = m_ref[...]
+    zeros = jnp.int8(0x7F) & ~x  # flippable positions: stored-0 eDRAM bits
+    o_ref[...] = x | (m & zeros)
+
+
+def _call_inject(x, mask):
+    orig_shape = x.shape
+    flat_x = x.reshape(-1)
+    flat_m = mask.reshape(-1)
+    n = flat_x.shape[0]
+    cols = 128
+    rows = -(-n // cols)
+    grid_rows = min(one_enh.BLOCK_ROWS, rows)
+    rpad = (-rows) % grid_rows
+    pad = rows * cols - n + rpad * cols
+    x2 = jnp.pad(flat_x, (0, pad)).reshape(rows + rpad, cols)
+    m2 = jnp.pad(flat_m, (0, pad)).reshape(rows + rpad, cols)
+    out = pl.pallas_call(
+        _inject_kernel,
+        out_shape=jax.ShapeDtypeStruct(x2.shape, jnp.int8),
+        grid=((rows + rpad) // grid_rows,),
+        in_specs=[
+            pl.BlockSpec((grid_rows, cols), lambda i: (i, 0)),
+            pl.BlockSpec((grid_rows, cols), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((grid_rows, cols), lambda i: (i, 0)),
+        interpret=True,
+    )(x2, m2)
+    return out.reshape(-1)[:n].reshape(orig_shape)
+
+
+@jax.jit
+def inject_raw(x, flip_mask):
+    """Apply retention flips directly to the stored image (no encoder)."""
+    assert x.dtype == jnp.int8 and flip_mask.dtype == jnp.int8
+    return _call_inject(x, flip_mask)
+
+
+@jax.jit
+def mcaimem_store(x, flip_mask):
+    """The full MCAIMem store→age→load path with the one-enhancement
+    encoder in front of the array (paper Fig. 4): encode, age in the mixed
+    array, decode on the way out."""
+    assert x.dtype == jnp.int8 and flip_mask.dtype == jnp.int8
+    enc = one_enh._call_elementwise(one_enh._one_enh_kernel, x)
+    aged = _call_inject(enc, flip_mask)
+    return one_enh._call_elementwise(one_enh._one_enh_kernel, aged)
+
+
+@functools.partial(jax.jit, static_argnames=("shape",))
+def draw_flip_mask(key, shape, p):
+    """Draw a per-bit Bernoulli(p) candidate mask as an int8 tensor (7 low
+    bits populated). Build-path helper for tests/AOT examples; the Rust
+    runtime draws masks with its own PCG64."""
+    bits = jax.random.bernoulli(key, p, shape=shape + (7,))
+    weights = (2 ** jnp.arange(7, dtype=jnp.int32))
+    packed = jnp.sum(bits.astype(jnp.int32) * weights, axis=-1)
+    return packed.astype(jnp.int8)

@@ -1,0 +1,77 @@
+"""L1 Pallas kernel: the one-enhancement encoder/decoder (paper §II-B).
+
+The transform is a sign-conditioned involution on int8: non-negative values
+have their 7 magnitude bits flipped (`x ^ 0x7f`), negatives pass through.
+In hardware this is one INV + seven XORs in front of the array (Fig. 3b);
+here it is the elementwise memory-path kernel every tensor crosses on its
+way into / out of the MCAIMem buffer.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): a pure VPU elementwise pass.
+Tiles are (8, 128)-aligned int8 blocks streamed HBM→VMEM by BlockSpec; at
+the default block of 512×128 a double-buffered pipeline needs 2×64 KiB of
+VMEM — far below the ~16 MiB/core budget, so the kernel is bandwidth-bound
+(roofline: 1 byte in / 1 byte out per element, zero FLOPs).
+
+CPU PJRT cannot execute Mosaic custom-calls, so everything runs with
+``interpret=True`` (see /opt/xla-example/README.md); correctness is pinned
+against the pure-jnp oracle in ``ref.py`` by pytest + hypothesis.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per grid step for 2-D inputs (int8 ⇒ 512×128 = 64 KiB VMEM/block).
+BLOCK_ROWS = 512
+
+
+def _one_enh_kernel(x_ref, o_ref):
+    """Flip the 7 LSBs of non-negative int8 values (involution)."""
+    x = x_ref[...]
+    mask = jnp.where(x >= 0, jnp.int8(0x7F), jnp.int8(0))
+    o_ref[...] = x ^ mask
+
+
+def _call_elementwise(kernel, x):
+    """Run an elementwise int8 kernel over a tensor of any rank.
+
+    Rank-2+ inputs are flattened to (rows, cols) and row-tiled; smaller
+    inputs run as a single block. Pallas requires static shapes, so the
+    reshape happens in the surrounding jit.
+    """
+    orig_shape = x.shape
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    # pad to a multiple of 128 lanes for clean tiling
+    cols = 128
+    rows = -(-n // cols)
+    pad = rows * cols - n
+    grid_rows = min(BLOCK_ROWS, rows)
+    # pad rows to a multiple of the block height
+    rpad = (-rows) % grid_rows
+    x2 = jnp.pad(flat, (0, pad + rpad * cols)).reshape(rows + rpad, cols)
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(x2.shape, jnp.int8),
+        grid=((rows + rpad) // grid_rows,),
+        in_specs=[pl.BlockSpec((grid_rows, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((grid_rows, cols), lambda i: (i, 0)),
+        interpret=True,
+    )(x2)
+    return out.reshape(-1)[:n].reshape(orig_shape)
+
+
+@functools.partial(jax.jit)
+def encode(x):
+    """One-enhancement encode an int8 tensor (Pallas)."""
+    assert x.dtype == jnp.int8
+    return _call_elementwise(_one_enh_kernel, x)
+
+
+@functools.partial(jax.jit)
+def decode(x):
+    """Decode = the same involution (sign bit is stored unflipped)."""
+    assert x.dtype == jnp.int8
+    return _call_elementwise(_one_enh_kernel, x)

@@ -1,0 +1,85 @@
+"""L1 Pallas kernel: INT8 × INT8 → INT32 matmul with requantization.
+
+The compute hot-spot of the quantized model (paper §II-B: INT8 two's
+complement is the operating format). Accumulates in int32, then requantizes
+with a per-tensor effective scale and optional ReLU — the standard
+integer-inference pipeline the MCAIMem buffer feeds.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): tiles target the 128×128 MXU
+with int8 operands — M×N output tiles of 128×128 with the full K dimension
+resident (K ≤ 4096 int8 ⇒ ≤512 KiB/operand-panel in VMEM, double-buffered).
+The paper's GPU-free ASIC context means no WMMA analogies are needed: the
+systolic-array mapping *is* the MXU mapping. CPU PJRT runs it under
+``interpret=True``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_M = 128
+BLOCK_N = 128
+
+
+def _qmatmul_kernel(x_ref, w_ref, o_ref):
+    """One (BLOCK_M × BLOCK_N) output tile: int8 dot in int32."""
+    x = x_ref[...].astype(jnp.int32)
+    w = w_ref[...].astype(jnp.int32)
+    o_ref[...] = jax.lax.dot_general(
+        x,
+        w,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def _pad_to(x, m, axis):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@jax.jit
+def qmatmul_i32(x, w):
+    """int8[M,K] @ int8[K,N] → int32[M,N] via the Pallas kernel."""
+    assert x.dtype == jnp.int8 and w.dtype == jnp.int8
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm = min(BLOCK_M, m) if m > 0 else 1
+    bn = min(BLOCK_N, n) if n > 0 else 1
+    xp = _pad_to(x, bm, 0)
+    wp = _pad_to(w, bn, 1)
+    mp, np_ = xp.shape[0], wp.shape[1]
+    out = pl.pallas_call(
+        _qmatmul_kernel,
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("relu",))
+def qmatmul(x, w, bias_i32, requant_scale, relu=True):
+    """Full quantized layer: int8 matmul + int32 bias + requant to int8.
+
+    `requant_scale` is the effective float scale s_x·s_w/s_out; rounding is
+    round-half-away-from-zero to match the Rust reference implementation.
+    """
+    acc = qmatmul_i32(x, w) + bias_i32[None, :]
+    y = acc.astype(jnp.float32) * requant_scale
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    q = jnp.clip(jnp.round(y), -128.0, 127.0).astype(jnp.int8)
+    return q

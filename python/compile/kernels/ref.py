@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every L1 Pallas kernel.
+
+These are the CORE correctness references: pytest (and hypothesis sweeps)
+assert the Pallas kernels match these bit-for-bit across shapes and dtypes,
+and the Rust side re-derives the same transforms independently
+(`rust/src/encode`, `rust/src/inject`), cross-checked through the AOT
+artifacts in `rust/tests/`.
+"""
+
+import jax.numpy as jnp
+
+
+def encode_ref(x):
+    """One-enhancement encode: flip the 7 LSBs of non-negative int8."""
+    assert x.dtype == jnp.int8
+    mask = jnp.where(x >= 0, jnp.int8(0x7F), jnp.int8(0))
+    return x ^ mask
+
+
+def decode_ref(x):
+    """Decode is the same involution."""
+    return encode_ref(x)
+
+
+def inject_raw_ref(x, flip_mask):
+    """Asymmetric aging: stored 0-bits in the 7 eDRAM positions flip where
+    the mask is set; the sign plane (bit 7) is SRAM-protected."""
+    assert x.dtype == jnp.int8
+    zeros = jnp.int8(0x7F) & ~x
+    return x | (flip_mask & zeros)
+
+
+def mcaimem_store_ref(x, flip_mask):
+    """encode → age → decode (the paper's Fig. 4 data path)."""
+    return decode_ref(inject_raw_ref(encode_ref(x), flip_mask))
+
+
+def qmatmul_i32_ref(x, w):
+    """int8 → int32 exact matmul."""
+    return jnp.matmul(x.astype(jnp.int32), w.astype(jnp.int32))
+
+
+def qmatmul_ref(x, w, bias_i32, requant_scale, relu=True):
+    acc = qmatmul_i32_ref(x, w) + bias_i32[None, :]
+    y = acc.astype(jnp.float32) * requant_scale
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return jnp.clip(jnp.round(y), -128.0, 127.0).astype(jnp.int8)

@@ -1,0 +1,182 @@
+"""L2: the quantized JAX model whose tensors live in MCAIMem.
+
+A three-layer INT8 MLP classifier (64 -> 128 -> 64 -> 10) over a synthetic
+"digits" dataset (10 procedural 8x8 glyph prototypes + noise). The paper's
+Fig. 11 experiment needs a *really trained, really quantized* network whose
+accuracy can be measured under retention-error injection with and without
+the one-enhancement encoder; ImageNet/GLUE checkpoints are not available
+offline (DESIGN.md section 1), so the model is trained here at artifact-build
+time and exported through the AOT path.
+
+Every weight and activation crosses the MCAIMem store path
+(encode -> age -> decode, the Fig. 4 pipeline) before each use - matching
+the paper's "inject errors into both weight and activation before every
+computation, allowing the cumulative effect".
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import inject as k_inject
+from .kernels import qmatmul as k_qmatmul
+
+LAYER_SIZES = [(64, 128), (128, 64), (64, 10)]
+NUM_CLASSES = 10
+INPUT_DIM = 64
+
+
+# --------------------------------------------------------------------------
+# Synthetic dataset: 10 procedural glyph prototypes + noise + intensity jitter
+# --------------------------------------------------------------------------
+
+def make_dataset(key, n, noise=0.55):
+    """Return (x[n, 64] float in [0,1]-ish, y[n] int32).
+
+    The glyph prototypes are drawn from a FIXED key so every split (train /
+    calibration / test) samples the same 10-class task; `key` only controls
+    the per-sample labels, intensities and noise."""
+    klabel, knoise, kint = jax.random.split(key, 3)
+    protos = (
+        jax.random.uniform(jax.random.PRNGKey(7), (NUM_CLASSES, INPUT_DIM)) > 0.55
+    ).astype(jnp.float32)
+    y = jax.random.randint(klabel, (n,), 0, NUM_CLASSES)
+    intensity = jax.random.uniform(kint, (n, 1), minval=0.7, maxval=1.0)
+    x = protos[y] * intensity + noise * jax.random.normal(knoise, (n, INPUT_DIM))
+    return x, y
+
+
+# --------------------------------------------------------------------------
+# Float training graph
+# --------------------------------------------------------------------------
+
+def init_params(key):
+    params = []
+    for i, (fan_in, fan_out) in enumerate(LAYER_SIZES):
+        key, sub = jax.random.split(key)
+        w = jax.random.normal(sub, (fan_in, fan_out)) * (2.0 / fan_in) ** 0.5
+        params.append((w, jnp.zeros((fan_out,))))
+    return params
+
+
+def float_forward(params, x):
+    h = x
+    for i, (w, b) in enumerate(params):
+        h = h @ w + b
+        if i + 1 < len(params):
+            h = jax.nn.relu(h)
+    return h
+
+
+def loss_fn(params, x, y):
+    logits = float_forward(params, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+@jax.jit
+def sgd_step(params, x, y, lr):
+    grads = jax.grad(loss_fn)(params, x, y)
+    return [(w - lr * gw, b - lr * gb) for (w, b), (gw, gb) in zip(params, grads)]
+
+
+def train(key, steps=1500, batch=256, lr=0.2, n_train=8192):
+    kdata, kinit, kshuf = jax.random.split(key, 3)
+    x, y = make_dataset(kdata, n_train)
+    params = init_params(kinit)
+    for step in range(steps):
+        kshuf, sub = jax.random.split(kshuf)
+        idx = jax.random.randint(sub, (batch,), 0, n_train)
+        params = sgd_step(params, x[idx], y[idx], lr)
+    return params
+
+
+# --------------------------------------------------------------------------
+# Post-training symmetric INT8 quantization
+# --------------------------------------------------------------------------
+
+def quantize_tensor(t):
+    scale = jnp.maximum(jnp.max(jnp.abs(t)), 1e-8) / 127.0
+    q = jnp.clip(jnp.round(t / scale), -127, 127).astype(jnp.int8)
+    return q, float(scale)
+
+
+def quantize(params, x_calib):
+    """Static post-training quantization with activation calibration.
+
+    Returns a dict with int8 weights, int32 biases, and the per-layer
+    requant scales (s_in*s_w/s_out) the integer pipeline needs.
+    """
+    # calibrate activation ranges with the float net
+    acts = [x_calib]
+    h = x_calib
+    for i, (w, b) in enumerate(params):
+        h = h @ w + b
+        if i + 1 < len(params):
+            h = jax.nn.relu(h)
+        acts.append(h)
+    act_scales = [
+        float(jnp.maximum(jnp.max(jnp.abs(a)), 1e-8) / 127.0) for a in acts
+    ]
+    qws, qbs, requant = [], [], []
+    for i, (w, b) in enumerate(params):
+        qw, s_w = quantize_tensor(w)
+        s_in = act_scales[i]
+        s_out = act_scales[i + 1]
+        qb = jnp.round(b / (s_in * s_w)).astype(jnp.int32)
+        qws.append(qw)
+        qbs.append(qb)
+        requant.append(s_in * s_w / s_out)
+    return {
+        "weights": qws,
+        "biases": qbs,
+        "requant": requant,
+        "act_scales": act_scales,
+    }
+
+
+def quantize_input(x, s_in):
+    return jnp.clip(jnp.round(x / s_in), -127, 127).astype(jnp.int8)
+
+
+# --------------------------------------------------------------------------
+# Quantized inference graphs (the exported L2 functions)
+# --------------------------------------------------------------------------
+
+def qforward_clean(qparams, x_i8):
+    """INT8 inference with an ideal buffer (no retention errors)."""
+    h = x_i8
+    n = len(qparams["weights"])
+    for i in range(n):
+        h = k_qmatmul.qmatmul(
+            h,
+            qparams["weights"][i],
+            qparams["biases"][i],
+            qparams["requant"][i],
+            relu=(i + 1 < n),
+        )
+    return h  # int8 logits
+
+
+def qforward_mcaimem(qparams, x_i8, masks, one_enhancement=True):
+    """INT8 inference with every tensor aged in the MCAIMem buffer.
+
+    `masks` is a list of 2n int8 flip-candidate tensors:
+    [act0, w0, act1, w1, ...] - one per stored tensor, drawn Bernoulli(p)
+    per eDRAM bit by the caller (Rust PCG64 at runtime; jax.random in
+    tests). `one_enhancement=False` ages the raw stored image instead
+    (Fig. 11's collapsing curve).
+    """
+    store = k_inject.mcaimem_store if one_enhancement else k_inject.inject_raw
+    h = x_i8
+    n = len(qparams["weights"])
+    for i in range(n):
+        h = store(h, masks[2 * i])
+        w = store(qparams["weights"][i], masks[2 * i + 1])
+        h = k_qmatmul.qmatmul(
+            h, w, qparams["biases"][i], qparams["requant"][i], relu=(i + 1 < n)
+        )
+    return h
+
+
+def accuracy(logits_i8, y):
+    return float(jnp.mean(jnp.argmax(logits_i8, axis=1) == y))

@@ -1,0 +1,59 @@
+"""AOT path checks: the exported HLO artifacts exist, parse, and the
+manifest is self-consistent. (Numerical equivalence of the HLO against the
+live jax functions is checked on the Rust side through PJRT.)"""
+
+import json
+import os
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_all_models_exported(manifest):
+    for name in [
+        "model_clean",
+        "model_enc",
+        "model_noenc",
+        "encoder_roundtrip",
+        "encode_only",
+        "qmatmul",
+    ]:
+        assert name in manifest["models"]
+        f = os.path.join(ART, manifest["models"][name]["file"])
+        assert os.path.exists(f), f
+        head = open(f).read(200)
+        assert "HloModule" in head, f"{name} is not HLO text"
+
+
+def test_tensors_match_declared_sizes(manifest):
+    dsize = {"int8": 1, "int32": 4, "float32": 4}
+    for t in manifest["tensors"]:
+        path = os.path.join(ART, t["file"])
+        assert os.path.exists(path), path
+        n = 1
+        for d in t["shape"]:
+            n *= d
+        assert os.path.getsize(path) == n * dsize[t["dtype"]], t["name"]
+
+
+def test_training_quality_gates(manifest):
+    assert manifest["float_acc"] > 0.9
+    assert manifest["int8_clean_acc"] > 0.9
+    # the headline sanity: encoder preserves accuracy at p=0.05, raw does not
+    assert manifest["sanity_acc_enc_p05"] > manifest["sanity_acc_noenc_p05"] + 0.2
+
+
+def test_mask_shapes_cover_all_tensors(manifest):
+    # one activation + one weight mask per layer
+    assert len(manifest["mask_shapes"]) == 2 * len(manifest["layer_sizes"])
+    assert manifest["batch"] == manifest["mask_shapes"][0][0]

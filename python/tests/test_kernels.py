@@ -1,0 +1,199 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Fixed-case tests pin the paper's worked examples; hypothesis sweeps cover
+shapes, dtypes-in-range, and the bitwise invariants (involution, sign-plane
+protection, monotone bit-adding) across the input space.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import inject as k_inject
+from compile.kernels import one_enh as k_one_enh
+from compile.kernels import qmatmul as k_qmatmul
+from compile.kernels import ref
+
+
+def i8(*shape, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(-128, 128, size=shape, dtype=np.int8))
+
+
+def mask_i8(*shape, p=0.3, seed=1):
+    rng = np.random.default_rng(seed)
+    bits = rng.random(size=shape + (7,)) < p
+    packed = (bits * (2 ** np.arange(7))).sum(-1).astype(np.int8)
+    return jnp.asarray(packed)
+
+
+# ---------------------------------------------------------------------------
+# one-enhancement encoder
+# ---------------------------------------------------------------------------
+
+class TestOneEnh:
+    def test_paper_worked_examples(self):
+        x = jnp.array([3, -3, 0, 127, -128], dtype=jnp.int8)
+        got = np.asarray(k_one_enh.encode(x)).view(np.uint8)
+        assert list(got) == [0x7C, 0xFD, 0x7F, 0x00, 0x80]
+
+    def test_matches_ref_all_256_values(self):
+        x = jnp.arange(-128, 128, dtype=jnp.int32).astype(jnp.int8)
+        np.testing.assert_array_equal(
+            np.asarray(k_one_enh.encode(x)), np.asarray(ref.encode_ref(x))
+        )
+
+    def test_involution(self):
+        x = i8(1000, seed=3)
+        np.testing.assert_array_equal(
+            np.asarray(k_one_enh.decode(k_one_enh.encode(x))), np.asarray(x)
+        )
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        rows=st.integers(1, 700),
+        cols=st.integers(1, 130),
+        seed=st.integers(0, 2**31),
+    )
+    def test_hypothesis_shapes_match_ref(self, rows, cols, seed):
+        x = i8(rows, cols, seed=seed)
+        np.testing.assert_array_equal(
+            np.asarray(k_one_enh.encode(x)), np.asarray(ref.encode_ref(x))
+        )
+
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.integers(1, 5000), seed=st.integers(0, 2**31))
+    def test_hypothesis_1d_and_sign_preserved(self, n, seed):
+        x = i8(n, seed=seed)
+        enc = np.asarray(k_one_enh.encode(x))
+        assert ((enc < 0) == (np.asarray(x) < 0)).all()
+
+    def test_3d_input(self):
+        x = i8(4, 33, 9, seed=5)
+        np.testing.assert_array_equal(
+            np.asarray(k_one_enh.encode(x)), np.asarray(ref.encode_ref(x))
+        )
+
+
+# ---------------------------------------------------------------------------
+# retention-error injection
+# ---------------------------------------------------------------------------
+
+class TestInject:
+    def test_matches_ref(self):
+        x = i8(513, 64, seed=7)
+        m = mask_i8(513, 64, seed=8)
+        np.testing.assert_array_equal(
+            np.asarray(k_inject.inject_raw(x, m)),
+            np.asarray(ref.inject_raw_ref(x, m)),
+        )
+
+    def test_zero_mask_is_identity(self):
+        x = i8(256, seed=9)
+        m = jnp.zeros_like(x)
+        np.testing.assert_array_equal(np.asarray(k_inject.inject_raw(x, m)), np.asarray(x))
+
+    def test_full_mask_saturates_zeros(self):
+        x = jnp.zeros(64, dtype=jnp.int8)
+        m = jnp.full(64, 0x7F, dtype=jnp.int8)
+        out = np.asarray(k_inject.inject_raw(x, m))
+        assert (out == 0x7F).all()
+
+    def test_only_adds_bits_never_touches_sign(self):
+        x = i8(4096, seed=10)
+        m = mask_i8(4096, p=0.5, seed=11)
+        out = np.asarray(k_inject.inject_raw(x, m)).view(np.uint8)
+        xs = np.asarray(x).view(np.uint8)
+        assert ((out & xs) == xs).all()
+        assert ((out & 0x80) == (xs & 0x80)).all()
+
+    def test_mcaimem_store_matches_ref(self):
+        x = i8(300, 50, seed=12)
+        m = mask_i8(300, 50, seed=13)
+        np.testing.assert_array_equal(
+            np.asarray(k_inject.mcaimem_store(x, m)),
+            np.asarray(ref.mcaimem_store_ref(x, m)),
+        )
+
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.integers(1, 3000), p=st.floats(0.0, 1.0), seed=st.integers(0, 2**31))
+    def test_hypothesis_store_path(self, n, p, seed):
+        x = i8(n, seed=seed)
+        m = mask_i8(n, p=p, seed=seed ^ 0xFFFF)
+        np.testing.assert_array_equal(
+            np.asarray(k_inject.mcaimem_store(x, m)),
+            np.asarray(ref.mcaimem_store_ref(x, m)),
+        )
+
+    def test_store_protects_near_zero_better_than_raw(self):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(
+            np.clip(rng.normal(0, 6, 20000).round(), -127, 127).astype(np.int8)
+        )
+        m = mask_i8(20000, p=0.05, seed=21)
+        raw = np.asarray(k_inject.inject_raw(x, m), dtype=np.int32)
+        enc = np.asarray(k_inject.mcaimem_store(x, m), dtype=np.int32)
+        x_ = np.asarray(x, dtype=np.int32)
+        assert np.abs(enc - x_).mean() < 0.4 * np.abs(raw - x_).mean()
+
+    def test_draw_flip_mask_rate(self):
+        m = k_inject.draw_flip_mask(jax.random.PRNGKey(0), (50000,), 0.1)
+        ones = np.unpackbits(np.asarray(m).view(np.uint8)[:, None], axis=1)[:, 1:].sum()
+        rate = ones / (50000 * 7)
+        assert abs(rate - 0.1) < 0.01
+
+
+# ---------------------------------------------------------------------------
+# int8 matmul
+# ---------------------------------------------------------------------------
+
+class TestQmatmul:
+    def test_exact_i32(self):
+        a = i8(64, 128, seed=30)
+        b = i8(128, 64, seed=31)
+        np.testing.assert_array_equal(
+            np.asarray(k_qmatmul.qmatmul_i32(a, b)),
+            np.asarray(ref.qmatmul_i32_ref(a, b)),
+        )
+
+    def test_non_multiple_of_block(self):
+        a = i8(130, 70, seed=32)
+        b = i8(70, 150, seed=33)
+        np.testing.assert_array_equal(
+            np.asarray(k_qmatmul.qmatmul_i32(a, b)),
+            np.asarray(ref.qmatmul_i32_ref(a, b)),
+        )
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        m=st.integers(1, 200),
+        k=st.integers(1, 200),
+        n=st.integers(1, 200),
+        seed=st.integers(0, 2**31),
+    )
+    def test_hypothesis_shapes(self, m, k, n, seed):
+        a = i8(m, k, seed=seed)
+        b = i8(k, n, seed=seed ^ 1)
+        np.testing.assert_array_equal(
+            np.asarray(k_qmatmul.qmatmul_i32(a, b)),
+            np.asarray(ref.qmatmul_i32_ref(a, b)),
+        )
+
+    def test_requant_with_relu_matches_ref(self):
+        a = i8(32, 64, seed=40)
+        b = i8(64, 48, seed=41)
+        bias = jnp.asarray(np.random.default_rng(42).integers(-1000, 1000, 48, dtype=np.int32))
+        for relu in (True, False):
+            np.testing.assert_array_equal(
+                np.asarray(k_qmatmul.qmatmul(a, b, bias, 0.0071, relu=relu)),
+                np.asarray(ref.qmatmul_ref(a, b, bias, 0.0071, relu=relu)),
+            )
+
+    def test_output_range_is_int8(self):
+        a = i8(16, 512, seed=50)
+        b = i8(512, 16, seed=51)
+        bias = jnp.zeros(16, dtype=jnp.int32)
+        out = np.asarray(k_qmatmul.qmatmul(a, b, bias, 1.0, relu=False))
+        assert out.dtype == np.int8

@@ -1,0 +1,101 @@
+"""L2 correctness: training, quantization and the MCAIMem inference path."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import inject as k_inject
+
+
+@pytest.fixture(scope="module")
+def trained():
+    key = jax.random.PRNGKey(1)
+    kt, ktest, kcal = jax.random.split(key, 3)
+    params = M.train(kt, steps=400, batch=256)
+    x_test, y_test = M.make_dataset(ktest, 512)
+    x_cal, _ = M.make_dataset(kcal, 512)
+    q = M.quantize(params, x_cal)
+    xq = M.quantize_input(x_test, q["act_scales"][0])
+    return params, q, x_test, y_test, xq
+
+
+def test_dataset_is_learnable_and_reproducible(trained):
+    params, q, x_test, y_test, xq = trained
+    acc = float(jnp.mean(jnp.argmax(M.float_forward(params, x_test), 1) == y_test))
+    assert acc > 0.9, acc
+    # same key → same data
+    a = M.make_dataset(jax.random.PRNGKey(5), 64)
+    b = M.make_dataset(jax.random.PRNGKey(5), 64)
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+
+
+def test_quantization_preserves_accuracy(trained):
+    params, q, x_test, y_test, xq = trained
+    facc = float(jnp.mean(jnp.argmax(M.float_forward(params, x_test), 1) == y_test))
+    qacc = M.accuracy(M.qforward_clean(q, xq), y_test)
+    assert qacc > facc - 0.03, (facc, qacc)
+
+
+def test_weights_are_int8_biases_int32(trained):
+    _, q, *_ = trained
+    for w in q["weights"]:
+        assert w.dtype == jnp.int8
+    for b in q["biases"]:
+        assert b.dtype == jnp.int32
+    assert len(q["requant"]) == len(q["weights"])
+
+
+def test_zero_error_mcaimem_equals_clean(trained):
+    _, q, _, y_test, xq = trained
+    masks = []
+    h = [M.INPUT_DIM] + [n for (_, n) in M.LAYER_SIZES]
+    for i in range(len(q["weights"])):
+        masks.append(jnp.zeros((xq.shape[0], h[i]), dtype=jnp.int8))
+        masks.append(jnp.zeros(q["weights"][i].shape, dtype=jnp.int8))
+    clean = M.qforward_clean(q, xq)
+    for enh in (True, False):
+        aged = M.qforward_mcaimem(q, xq, masks, one_enhancement=enh)
+        np.testing.assert_array_equal(np.asarray(clean), np.asarray(aged))
+
+
+def _masks_for(q, batch, p, key):
+    masks = []
+    h = [M.INPUT_DIM] + [n for (_, n) in M.LAYER_SIZES]
+    for i in range(len(q["weights"])):
+        key, k1, k2 = jax.random.split(key, 3)
+        masks.append(k_inject.draw_flip_mask(k1, (batch, h[i]), p))
+        masks.append(k_inject.draw_flip_mask(k2, tuple(q["weights"][i].shape), p))
+    return masks
+
+
+def test_fig11_shape_encoder_protects(trained):
+    """The paper's Fig. 11 mechanism: without one-enhancement accuracy
+    collapses, with it the model holds. Our 3-layer model is shallower than
+    the paper's CNNs (fewer cumulative injections), so the raw-storage
+    collapse needs p = 5% to fully show; the *ordering* is the invariant."""
+    _, q, _, y_test, xq = trained
+    key = jax.random.PRNGKey(9)
+    masks = _masks_for(q, xq.shape[0], 0.05, key)
+    acc_enc = M.accuracy(M.qforward_mcaimem(q, xq, masks, True), y_test)
+    acc_noenc = M.accuracy(M.qforward_mcaimem(q, xq, masks, False), y_test)
+    clean = M.accuracy(M.qforward_clean(q, xq), y_test)
+    assert acc_enc > clean - 0.05, (clean, acc_enc)
+    assert acc_noenc < acc_enc - 0.1, (acc_enc, acc_noenc)
+    # at a harsher rate the raw-storage curve collapses outright
+    masks10 = _masks_for(q, xq.shape[0], 0.15, jax.random.PRNGKey(77))
+    acc_enc10 = M.accuracy(M.qforward_mcaimem(q, xq, masks10, True), y_test)
+    acc_noenc10 = M.accuracy(M.qforward_mcaimem(q, xq, masks10, False), y_test)
+    assert acc_noenc10 < 0.5, acc_noenc10
+    assert acc_enc10 > acc_noenc10 + 0.3, (acc_enc10, acc_noenc10)
+
+
+def test_accuracy_degrades_monotonically_without_encoder(trained):
+    _, q, _, y_test, xq = trained
+    accs = []
+    for i, p in enumerate([0.01, 0.1, 0.25]):
+        masks = _masks_for(q, xq.shape[0], p, jax.random.PRNGKey(100 + i))
+        accs.append(M.accuracy(M.qforward_mcaimem(q, xq, masks, False), y_test))
+    assert accs[0] > accs[-1], accs
+    assert accs[-1] < 0.3, accs  # p=25% raw → collapse toward chance

@@ -1,0 +1,40 @@
+//! Bench + regeneration for Fig. 11 — DNN accuracy under retention errors,
+//! executed through the full PJRT path (needs `make artifacts`).
+
+use mcaimem::runtime::executor::{ModelRunner, StoreVariant};
+use mcaimem::util::benchmark::bench;
+
+fn main() {
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("bench_accuracy: artifacts not built, skipping (run `make artifacts`)");
+        return;
+    }
+    println!("== regenerating Fig. 11 (through PJRT) ==\n");
+    match mcaimem::report::fig11::fig11(dir, false) {
+        Ok(tables) => {
+            for t in tables {
+                println!("{}", t.render());
+            }
+        }
+        Err(e) => {
+            println!("fig11 failed: {e:#}");
+            return;
+        }
+    }
+
+    // serving-path latency: one batch through each model variant
+    let mut runner = ModelRunner::new(dir).expect("artifacts");
+    let x = runner.artifacts.tensor("x_test_i8").unwrap().as_i8().unwrap();
+    let batch = runner.artifacts.batch * runner.artifacts.input_dim;
+    let xs = x[..batch].to_vec();
+    let mut rng = mcaimem::util::rng::Pcg64::new(1);
+    for (name, v, p) in [
+        ("infer clean batch=128", StoreVariant::Clean, 0.0),
+        ("infer mcaimem p=1% batch=128", StoreVariant::Mcaimem, 0.01),
+        ("infer noenc p=1% batch=128", StoreVariant::McaimemNoEncoder, 0.01),
+    ] {
+        let r = bench(name, 1, 10, || runner.infer(&xs, v, p, &mut rng).unwrap());
+        println!("{}", r.report());
+    }
+}

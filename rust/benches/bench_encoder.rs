@@ -1,0 +1,43 @@
+//! Bench + regeneration for Fig. 5 (bit statistics) and the encoder hot
+//! path (the per-byte transform every tensor crosses).
+
+use mcaimem::encode::one_enhancement::{encode, encode_in_place};
+use mcaimem::encode::stats::resnet50_like_weights;
+use mcaimem::inject::{inject, Mode};
+use mcaimem::report::circuit_reports;
+use mcaimem::util::benchmark::bench_throughput;
+use mcaimem::util::rng::Pcg64;
+
+fn main() {
+    println!("== regenerating Fig. 5 ==\n");
+    for t in circuit_reports::fig5(Some(std::path::Path::new("artifacts"))) {
+        println!("{}", t.render());
+    }
+
+    let n = 1 << 20; // 1 MiB tensor
+    let data = resnet50_like_weights(1, n);
+    let mut raw: Vec<u8> = data.iter().map(|&x| x as u8).collect();
+
+    println!(
+        "{}",
+        bench_throughput("encode (alloc) 1MiB", 3, 30, n as f64, || encode(&data)).report()
+    );
+    println!(
+        "{}",
+        bench_throughput("encode_in_place 1MiB", 3, 50, n as f64, || {
+            encode_in_place(&mut raw);
+        })
+        .report()
+    );
+
+    let mut rng = Pcg64::new(2);
+    let mut buf = data.clone();
+    println!(
+        "{}",
+        bench_throughput("inject p=0.01 1MiB", 2, 10, n as f64, || {
+            buf.copy_from_slice(&data);
+            inject(&mut buf, 0.01, Mode::WithOneEnhancement, &mut rng);
+        })
+        .report()
+    );
+}

@@ -1,0 +1,12 @@
+//! Bench + regeneration for Fig. 1 — the paper's headline claims.
+
+use mcaimem::report::circuit_reports;
+use mcaimem::util::benchmark::bench;
+
+fn main() {
+    println!("== regenerating Fig. 1 ==\n");
+    for t in circuit_reports::fig1() {
+        println!("{}", t.render());
+    }
+    println!("{}", bench("report::fig1", 3, 50, circuit_reports::fig1).report());
+}

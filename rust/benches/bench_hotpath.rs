@@ -1,0 +1,78 @@
+//! Hot-path microbenches for the §Perf optimization loop (EXPERIMENTS.md):
+//! the functional array's access/refresh paths, the Monte-Carlo engine,
+//! the RNG, and the bit-plane transforms.
+
+use mcaimem::mem::mcaimem::MixedCellMemory;
+use mcaimem::util::benchmark::{bench, bench_throughput};
+use mcaimem::util::rng::Pcg64;
+
+fn main() {
+    // RNG primitives
+    let mut rng = Pcg64::new(1);
+    println!(
+        "{}",
+        bench_throughput("rng::next_u64 ×1M", 2, 20, 1e6, || {
+            let mut acc = 0u64;
+            for _ in 0..1_000_000 {
+                acc ^= rng.next_u64();
+            }
+            acc
+        })
+        .report()
+    );
+    println!(
+        "{}",
+        bench_throughput("rng::normal ×100k", 2, 20, 1e5, || {
+            let mut acc = 0.0;
+            for _ in 0..100_000 {
+                acc += rng.normal();
+            }
+            acc
+        })
+        .report()
+    );
+
+    // functional array: construction, write, aged read, refresh sweep
+    println!(
+        "{}",
+        bench("mem::new 108KB (per-cell corners)", 1, 10, || {
+            MixedCellMemory::new(108 * 1024, 7)
+        })
+        .report()
+    );
+    let mut mem = MixedCellMemory::new(108 * 1024, 7);
+    let data = vec![0x15u8; 16 * 1024];
+    let mut t = 0.0;
+    println!(
+        "{}",
+        bench_throughput("mem::write 16KB", 2, 50, 16.0 * 1024.0, || {
+            t += 1e-6;
+            mem.write(0, &data, t);
+        })
+        .report()
+    );
+    println!(
+        "{}",
+        bench_throughput("mem::read 16KB (fresh)", 2, 50, 16.0 * 1024.0, || {
+            t += 1e-6;
+            mem.read(0, 16 * 1024, t)
+        })
+        .report()
+    );
+    println!(
+        "{}",
+        bench_throughput("mem::read 16KB (stale 50µs)", 2, 50, 16.0 * 1024.0, || {
+            t += 50e-6;
+            mem.read(0, 16 * 1024, t)
+        })
+        .report()
+    );
+    println!(
+        "{}",
+        bench("mem::refresh_row (7 banks)", 2, 200, || {
+            t += 49e-9;
+            mem.refresh_row(0, t);
+        })
+        .report()
+    );
+}

@@ -1,0 +1,48 @@
+//! Bench + regeneration for the retention experiments: Fig. 2 (retention
+//! distributions), Fig. 7 (width scaling), Fig. 12 (flip-probability
+//! model + Monte-Carlo cross-check).
+
+use mcaimem::circuit::retention;
+use mcaimem::circuit::sense_amp::SenseAmp;
+use mcaimem::device::StorageLeakage;
+use mcaimem::report::circuit_reports;
+use mcaimem::util::benchmark::{bench, bench_throughput};
+
+fn main() {
+    println!("== regenerating Fig. 2 / Fig. 7 / Fig. 12 ==\n");
+    for t in circuit_reports::fig2(true) {
+        println!("{}", t.render());
+    }
+    for t in circuit_reports::fig7() {
+        println!("{}", t.render());
+    }
+    for t in circuit_reports::fig12(true) {
+        println!("{}", t.render());
+    }
+
+    // MC engine hot path: 100k-sample flip-rate estimate (the paper's
+    // Fig. 12a methodology at full scale)
+    let leak = StorageLeakage::calibrated(1.0);
+    let sa = SenseAmp::cvsa(0.8);
+    println!(
+        "{}",
+        bench_throughput("mc::flip_rate 100k samples", 1, 10, 100_000.0, || {
+            retention::flip_rate_mc(&leak, &sa, 1, 100_000, 12.57e-6, 4.0, 85.0)
+        })
+        .report()
+    );
+    println!(
+        "{}",
+        bench_throughput("mc::retention_3t 20k samples", 1, 10, 20_000.0, || {
+            retention::retention_3t(2, 20_000)
+        })
+        .report()
+    );
+    println!(
+        "{}",
+        bench("model::flip_prob closed form", 10, 1000, || {
+            leak.flip_prob(10e-6, 0.8, 4.0, 85.0)
+        })
+        .report()
+    );
+}

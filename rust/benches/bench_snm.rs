@@ -1,0 +1,41 @@
+//! Bench + regeneration for Fig. 9 (SNM / write yield).
+
+use mcaimem::circuit::snm::{CellMismatch, SnmAnalysis, FS_CORNER};
+use mcaimem::circuit::sram6t::Sram6t;
+use mcaimem::device::TechNode;
+use mcaimem::report::circuit_reports;
+use mcaimem::util::benchmark::bench;
+use mcaimem::util::rng::Pcg64;
+
+fn main() {
+    println!("== regenerating Fig. 9 ==\n");
+    for t in circuit_reports::fig9(true) {
+        println!("{}", t.render());
+    }
+
+    let tech = TechNode::lp45();
+    let a = SnmAnalysis::new(&tech, Sram6t::mcaimem());
+    println!(
+        "{}",
+        bench("snm::read_snm (240-pt butterfly)", 2, 20, || {
+            a.read_snm(&CellMismatch::default())
+        })
+        .report()
+    );
+    let ac = SnmAnalysis::new(&tech, Sram6t::mcaimem()).at_corner(FS_CORNER);
+    let mut rng = Pcg64::new(3);
+    println!(
+        "{}",
+        bench("snm::write_yield 100 samples", 1, 5, || {
+            ac.write_yield(&mut rng, 0.05, -0.1, 100)
+        })
+        .report()
+    );
+    println!(
+        "{}",
+        bench("snm::write_solve (coupled DC)", 3, 100, || {
+            ac.write_solve(&CellMismatch::default(), -0.1)
+        })
+        .report()
+    );
+}

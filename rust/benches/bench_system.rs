@@ -1,0 +1,80 @@
+//! Bench + regeneration for the system-level figures: Fig. 14 (static
+//! energy), Fig. 15a (refresh), Fig. 15b (total), Fig. 16 (ops/W), plus
+//! the event-driven simulator and an ablation over dataflows.
+
+use mcaimem::coordinator::scheduler::simulate_inference;
+use mcaimem::report::system_reports;
+use mcaimem::scalesim::accelerator::{AcceleratorConfig, Dataflow};
+use mcaimem::scalesim::systolic::layer_cost;
+use mcaimem::scalesim::simulate::simulate_network_uncached;
+use mcaimem::scalesim::network;
+use mcaimem::util::benchmark::bench;
+use mcaimem::util::table::{fnum, Table};
+
+fn main() {
+    println!("== regenerating Fig. 14 / 15a / 15b / 16 ==\n");
+    for t in system_reports::fig14() {
+        println!("{}", t.render());
+    }
+    for t in system_reports::fig15a() {
+        println!("{}", t.render());
+    }
+    for t in system_reports::fig15b() {
+        println!("{}", t.render());
+    }
+    for t in system_reports::fig16() {
+        println!("{}", t.render());
+    }
+
+    // ablation: dataflow choice vs buffer traffic (design-choice bench the
+    // DESIGN.md §3 index calls out — OS is what the paper's platforms use)
+    let mut abl = Table::new(
+        "ablation — dataflow vs on-chip traffic, ResNet50 on Eyeriss (GB per inference)",
+        &["dataflow", "reads GB", "writes GB", "cycles M"],
+    );
+    for (name, df) in [
+        ("output-stationary", Dataflow::OutputStationary),
+        ("weight-stationary", Dataflow::WeightStationary),
+        ("input-stationary", Dataflow::InputStationary),
+    ] {
+        let mut acc = AcceleratorConfig::eyeriss();
+        acc.dataflow = df;
+        let net = network::resnet50();
+        let (mut rd, mut wr, mut cy) = (0u64, 0u64, 0u64);
+        for l in &net.layers {
+            let c = layer_cost(l, &acc);
+            rd += c.sram_reads();
+            wr += c.sram_writes();
+            cy += c.cycles;
+        }
+        abl.row(vec![
+            name.into(),
+            fnum(rd as f64 / 1e9, 3),
+            fnum(wr as f64 / 1e9, 3),
+            fnum(cy as f64 / 1e6, 1),
+        ]);
+    }
+    println!("{}", abl.render());
+
+    let acc = AcceleratorConfig::eyeriss();
+    let resnet = network::resnet50();
+    println!(
+        "{}",
+        bench("scalesim::simulate_network resnet50", 2, 20, || {
+            simulate_network_uncached(&resnet, &acc)
+        })
+        .report()
+    );
+    let lenet = network::lenet();
+    println!(
+        "{}",
+        bench("coordinator::simulate_inference lenet", 1, 5, || {
+            simulate_inference(&lenet, &acc, 0.8, 1).unwrap()
+        })
+        .report()
+    );
+    println!(
+        "{}",
+        bench("report::fig15b (full suite × 2 platforms)", 1, 3, system_reports::fig15b).report()
+    );
+}

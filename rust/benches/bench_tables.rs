@@ -1,0 +1,21 @@
+//! Bench + regeneration for Table I, Table II and Fig. 13 (area/
+//! characterization tables — DESIGN.md §3).
+
+use mcaimem::report::circuit_reports;
+use mcaimem::util::benchmark::bench;
+
+fn main() {
+    println!("== regenerating Table I / Table II / Fig. 13 ==\n");
+    for t in circuit_reports::table1() {
+        println!("{}", t.render());
+    }
+    for t in circuit_reports::table2() {
+        println!("{}", t.render());
+    }
+    for t in circuit_reports::fig13() {
+        println!("{}", t.render());
+    }
+    println!("{}", bench("report::table1", 3, 50, circuit_reports::table1).report());
+    println!("{}", bench("report::table2", 3, 50, circuit_reports::table2).report());
+    println!("{}", bench("report::fig13", 3, 50, circuit_reports::fig13).report());
+}

@@ -1,0 +1,73 @@
+//! The 1T1C eDRAM cell — Table I's densest option, carried as a baseline.
+//!
+//! 4.5× denser and 5× lower static power than 6T SRAM (paper §I), but it
+//! needs a dedicated deep-trench/MIM capacitor ("additional material", the
+//! fabrication-cost argument that motivates the logic-compatible gain cells
+//! instead). DaDianNao-style accelerators use it for large on-chip buffers.
+
+use crate::device::TechNode;
+
+/// Table I (65 nm): cell size 0.22× SRAM, static power 0.2× SRAM.
+pub const AREA_REL: f64 = 0.22;
+pub const STATIC_REL: f64 = 0.20;
+
+/// 1T1C cell model.
+#[derive(Clone, Debug)]
+pub struct Edram1t1c {
+    /// Storage capacitance (F). Deep-trench caps are ~20 fF — two orders
+    /// above a gain cell's gate cap, hence the low-frequency refresh.
+    pub cap: f64,
+    /// Refresh period at 85 °C (s). DRAM-class: tens of µs on-die
+    /// (DaDianNao [6] reports refresh at this scale dominating power).
+    pub refresh_period: f64,
+}
+
+impl Edram1t1c {
+    pub fn lp65() -> Self {
+        Edram1t1c { cap: 20e-15, refresh_period: 40e-6 }
+    }
+
+    pub fn area(&self, tech: &TechNode) -> f64 {
+        AREA_REL * super::sram6t::AREA_F2 * tech.f2_area
+    }
+
+    /// Requires non-logic process steps (Table I "Additional Material: Yes").
+    pub fn needs_special_process(&self) -> bool {
+        true
+    }
+
+    pub fn transistors(&self) -> usize {
+        1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn densest_cell_in_table1() {
+        assert!(AREA_REL < super::super::edram3t::AREA_REL);
+        assert!(AREA_REL < super::super::edram2t::CONV_AREA_REL);
+        assert!(AREA_REL < 1.0);
+    }
+
+    #[test]
+    fn needs_special_process_unlike_gain_cells() {
+        assert!(Edram1t1c::lp65().needs_special_process());
+    }
+
+    #[test]
+    fn refresh_slower_than_gain_cells() {
+        // 1T1C's big cap refreshes at "Low Freq." (Table I) vs the gain
+        // cells' "High Freq."
+        let c = Edram1t1c::lp65();
+        assert!(c.refresh_period > 12.57e-6);
+    }
+
+    #[test]
+    fn density_anchor_4_5x() {
+        // paper §I: 1T1C offers 4.5× higher bit-cell density than 6T
+        assert!((1.0 / AREA_REL - 4.545).abs() < 0.05);
+    }
+}

@@ -1,0 +1,126 @@
+//! The V_REF-indexed 0→1 flip-probability model (paper §IV-B, Fig. 12).
+//!
+//! The refresh controller consumes this model to trade reference voltage
+//! against refresh period: `P_flip(t; V_REF)` gives the probability that a
+//! stored bit-0, read `t` seconds after its last refresh against reference
+//! `V_REF`, is mis-sensed as bit-1. The paper sweeps V_REF ∈
+//! {0.5, 0.6, 0.7, 0.8} V and picks 0.8 V (12.57 µs at the 1 % DNN-accuracy
+//! bound, vs 1.3 µs at 0.5 V — a ~10× refresh-energy lever).
+
+use crate::device::leakage::{StorageLeakage, MCAIMEM_WIDTH_MULT};
+
+/// The paper's candidate reference voltages (Fig. 12b).
+pub const VREF_CANDIDATES: [f64; 4] = [0.5, 0.6, 0.7, 0.8];
+/// Maximum tolerable flip rate for DNN accuracy (paper §IV-A conclusion).
+pub const MAX_FLIP_FOR_DNN: f64 = 0.01;
+
+/// Flip-probability model bound to a cell width and temperature.
+#[derive(Clone, Debug)]
+pub struct FlipModel {
+    pub leak: StorageLeakage,
+    pub width_mult: f64,
+    pub temp_c: f64,
+}
+
+impl FlipModel {
+    /// The paper's operating point: 4×-width cell, 85 °C worst case.
+    pub fn mcaimem_85c() -> Self {
+        FlipModel {
+            leak: StorageLeakage::calibrated(1.0),
+            width_mult: MCAIMEM_WIDTH_MULT,
+            temp_c: 85.0,
+        }
+    }
+
+    /// P(0→1 flip) at access time `t` with reference `vref`.
+    pub fn flip_prob(&self, t: f64, vref: f64) -> f64 {
+        self.leak.flip_prob(t, vref, self.width_mult, self.temp_c)
+    }
+
+    /// Refresh period achieving `max_flip` at `vref`.
+    pub fn refresh_period(&self, vref: f64, max_flip: f64) -> f64 {
+        self.leak.refresh_period(vref, max_flip, self.width_mult, self.temp_c)
+    }
+
+    /// The probability curve over an access-time sweep (for Fig. 12b):
+    /// returns (times_s, prob) pairs for `n` points in [0, t_max].
+    pub fn curve(&self, vref: f64, t_max: f64, n: usize) -> Vec<(f64, f64)> {
+        (0..=n)
+            .map(|i| {
+                let t = t_max * i as f64 / n as f64;
+                (t, self.flip_prob(t, vref))
+            })
+            .collect()
+    }
+
+    /// The paper's V_REF decision: largest candidate V_REF maximizes the
+    /// refresh period at the DNN flip bound.
+    pub fn best_vref(&self) -> f64 {
+        VREF_CANDIDATES
+            .iter()
+            .copied()
+            .max_by(|a, b| {
+                self.refresh_period(*a, MAX_FLIP_FOR_DNN)
+                    .partial_cmp(&self.refresh_period(*b, MAX_FLIP_FOR_DNN))
+                    .unwrap()
+            })
+            .unwrap()
+    }
+
+    /// Average flip probability seen by reads uniformly distributed inside
+    /// one refresh window of length `t_ref` (used by the error-injection
+    /// bridge: data sits a random fraction of the window before use).
+    pub fn mean_flip_in_window(&self, vref: f64, t_ref: f64, n: usize) -> f64 {
+        (0..n)
+            .map(|i| self.flip_prob(t_ref * (i as f64 + 0.5) / n as f64, vref))
+            .sum::<f64>()
+            / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_operating_point() {
+        let m = FlipModel::mcaimem_85c();
+        assert_eq!(m.best_vref(), 0.8);
+        let t = m.refresh_period(0.8, MAX_FLIP_FOR_DNN);
+        assert!((t - 12.57e-6).abs() / 12.57e-6 < 1e-3);
+    }
+
+    #[test]
+    fn refresh_period_monotone_in_vref() {
+        let m = FlipModel::mcaimem_85c();
+        let ts: Vec<f64> = VREF_CANDIDATES
+            .iter()
+            .map(|&v| m.refresh_period(v, MAX_FLIP_FOR_DNN))
+            .collect();
+        for w in ts.windows(2) {
+            assert!(w[1] > w[0], "higher V_REF must extend refresh: {ts:?}");
+        }
+    }
+
+    #[test]
+    fn curve_is_monotone_cdf() {
+        let m = FlipModel::mcaimem_85c();
+        let c = m.curve(0.8, 20e-6, 100);
+        assert_eq!(c.len(), 101);
+        assert_eq!(c[0].1, 0.0);
+        for w in c.windows(2) {
+            assert!(w[1].1 >= w[0].1);
+        }
+        assert!(c.last().unwrap().1 > 0.9); // by 20 µs nearly everything flipped
+    }
+
+    #[test]
+    fn window_average_below_boundary_value() {
+        let m = FlipModel::mcaimem_85c();
+        let t_ref = m.refresh_period(0.8, 0.01);
+        let mean = m.mean_flip_in_window(0.8, t_ref, 256);
+        let end = m.flip_prob(t_ref, 0.8);
+        assert!(mean < end, "mean {mean} < boundary {end}");
+        assert!(mean < 0.01);
+    }
+}

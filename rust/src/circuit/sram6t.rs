@@ -1,0 +1,124 @@
+//! The 6T SRAM bit-cell, including the paper's PMOS-access modification.
+//!
+//! MCAIMem swaps the usual NMOS access transistors for PMOS so the SRAM and
+//! 2T-eDRAM cells share word-line polarity and write circuitry (§III-B2).
+//! The electrical consequences — slightly higher read SNM, degraded write
+//! margin recovered by a −0.1 V word-line under-drive — are analyzed in
+//! [`super::snm`]. This module carries the cell's geometry, leakage class
+//! and device inventory.
+
+use crate::device::{Mosfet, TechNode};
+
+/// Access-transistor polarity for the 6T cell.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AccessKind {
+    Nmos,
+    /// The paper's choice: PMOS access, matching the 2T eDRAM write device.
+    Pmos,
+}
+
+/// A 6T SRAM bit-cell instance.
+#[derive(Clone, Debug)]
+pub struct Sram6t {
+    pub access: AccessKind,
+    /// Word-line write-assist under-drive (V, ≥ 0 ⇒ applied as −v on WL).
+    pub wl_underdrive: f64,
+}
+
+/// 6T SRAM cell area at 45 nm in F² (≈0.324 µm² — representative LP
+/// foundry cell; the paper's areas are ratios against this).
+pub const AREA_F2: f64 = 160.0;
+
+impl Sram6t {
+    /// The paper's MCAIMem-integrated configuration (PMOS access, −0.1 V
+    /// write assist, §III-B2 & Fig. 9b).
+    pub fn mcaimem() -> Self {
+        Sram6t { access: AccessKind::Pmos, wl_underdrive: 0.1 }
+    }
+
+    /// The conventional baseline cell.
+    pub fn conventional() -> Self {
+        Sram6t { access: AccessKind::Nmos, wl_underdrive: 0.0 }
+    }
+
+    /// Cell area (m²) on `tech`.
+    pub fn area(&self, tech: &TechNode) -> f64 {
+        AREA_F2 * tech.f2_area
+    }
+
+    /// The six devices: (pull-down NMOS ×2, pull-up PMOS ×2, access ×2).
+    /// Sizing follows the classic read-stability ratioing (PD strongest,
+    /// access intermediate, PU weakest).
+    pub fn devices(&self) -> SramDevices {
+        let access = match self.access {
+            AccessKind::Nmos => Mosfet::nmos(1.9, 1.0),
+            AccessKind::Pmos => Mosfet::pmos(1.9, 1.0),
+        };
+        SramDevices {
+            pull_down: Mosfet::nmos(2.0, 1.0),
+            pull_up: Mosfet::pmos(1.0, 1.0),
+            access,
+        }
+    }
+
+    /// Static (leakage) power class relative to the Table I SRAM baseline.
+    /// SRAM is the 1× reference.
+    pub fn static_power_rel(&self) -> f64 {
+        1.0
+    }
+
+    /// SRAM holds data statically — no refresh.
+    pub fn needs_refresh(&self) -> bool {
+        false
+    }
+
+    /// Transistor count (density discussions in §I / Table I).
+    pub fn transistors(&self) -> usize {
+        6
+    }
+}
+
+/// The cell's device inventory.
+#[derive(Clone, Debug)]
+pub struct SramDevices {
+    pub pull_down: Mosfet,
+    pub pull_up: Mosfet,
+    pub access: Mosfet,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mcaimem_cell_uses_pmos_access_with_assist() {
+        let c = Sram6t::mcaimem();
+        assert_eq!(c.access, AccessKind::Pmos);
+        assert!(c.wl_underdrive > 0.0);
+    }
+
+    #[test]
+    fn area_is_160f2() {
+        let tech = TechNode::lp45();
+        let a = Sram6t::mcaimem().area(&tech);
+        // 160 × (45nm)² = 0.324 µm²
+        assert!((crate::util::units::to_um2(a) - 0.324).abs() < 1e-6);
+    }
+
+    #[test]
+    fn device_ratioing_read_stable() {
+        let d = Sram6t::conventional().devices();
+        let tech = TechNode::lp45();
+        // classic cell ratio: pull-down stronger than access stronger than pull-up
+        assert!(d.pull_down.beta(&tech) > d.access.beta(&tech));
+        // pull-up is PMOS and weakest
+        assert!(d.pull_up.beta(&tech) < d.pull_down.beta(&tech));
+    }
+
+    #[test]
+    fn no_refresh_six_transistors() {
+        let c = Sram6t::conventional();
+        assert!(!c.needs_refresh());
+        assert_eq!(c.transistors(), 6);
+    }
+}

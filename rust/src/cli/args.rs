@@ -1,0 +1,113 @@
+//! Tiny argv parser: positional arguments plus `--key value` / `--flag`
+//! options, with typed accessors and unknown-option detection.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct ParsedArgs {
+    pub positionals: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl ParsedArgs {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects a number, got `{v}`")),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects an integer, got `{v}`")),
+        }
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+/// Declarative parser: which options take values, which are flags.
+pub struct ArgParser {
+    value_opts: Vec<&'static str>,
+    flag_opts: Vec<&'static str>,
+}
+
+impl ArgParser {
+    pub fn new(value_opts: &[&'static str], flag_opts: &[&'static str]) -> Self {
+        ArgParser { value_opts: value_opts.to_vec(), flag_opts: flag_opts.to_vec() }
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(&self, args: I) -> Result<ParsedArgs> {
+        let mut out = ParsedArgs::default();
+        let mut it = args.into_iter();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if self.flag_opts.contains(&name) {
+                    out.flags.push(name.to_string());
+                } else if self.value_opts.contains(&name) {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| anyhow!("--{name} expects a value"))?;
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    bail!("unknown option --{name}");
+                }
+            } else {
+                out.positionals.push(a);
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p() -> ArgParser {
+        ArgParser::new(&["csv", "network", "p"], &["quick", "verbose"])
+    }
+
+    fn parse(s: &str) -> Result<ParsedArgs> {
+        p().parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn positionals_options_flags() {
+        let a = parse("report fig12 --csv results --quick").unwrap();
+        assert_eq!(a.positionals, vec!["report", "fig12"]);
+        assert_eq!(a.get("csv"), Some("results"));
+        assert!(a.has_flag("quick"));
+        assert!(!a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse("--p 0.05").unwrap();
+        assert_eq!(a.get_f64("p", 0.0).unwrap(), 0.05);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        let bad = parse("--p xyz").unwrap();
+        assert!(bad.get_f64("p", 0.0).is_err());
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(parse("--nope 1").is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(parse("--csv").is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! Command-line interface (hand-rolled — clap is not in the offline crate
+//! set). Subcommands mirror the experiment surface:
+//!
+//! ```text
+//! mcaimem report <id|all> [--csv DIR] [--artifacts DIR] [--quick]
+//! mcaimem fig11 [--artifacts DIR] [--quick]
+//! mcaimem simulate --network NAME [--platform eyeriss|tpuv1] [--vref V]
+//! mcaimem serve [--artifacts DIR] [--requests N] [--variant clean|mcaimem|noenc] [--p P]
+//! mcaimem selftest [--artifacts DIR]
+//! ```
+
+pub mod args;
+
+pub use args::{ArgParser, ParsedArgs};

@@ -1,0 +1,83 @@
+//! Coordinator metrics: request latencies, throughput, buffer health.
+
+use std::time::Duration;
+
+/// Online latency/throughput accumulator.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    latencies_us: Vec<f64>,
+    pub requests: u64,
+    pub batches: u64,
+    pub padded_slots: u64,
+}
+
+impl Metrics {
+    pub fn record_latency(&mut self, d: Duration) {
+        self.latencies_us.push(d.as_secs_f64() * 1e6);
+        self.requests += 1;
+    }
+
+    pub fn record_batch(&mut self, real: usize, padded: usize) {
+        self.batches += 1;
+        self.padded_slots += (padded - real) as u64;
+    }
+
+    pub fn p50_us(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p99_us(&self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.latencies_us.is_empty() {
+            return 0.0;
+        }
+        self.latencies_us.iter().sum::<f64>() / self.latencies_us.len() as f64
+    }
+
+    fn quantile(&self, q: f64) -> f64 {
+        if self.latencies_us.is_empty() {
+            return 0.0;
+        }
+        let mut xs = self.latencies_us.clone();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        crate::util::stats::percentile_sorted(&xs, q * 100.0)
+    }
+
+    /// Batch-occupancy efficiency: fraction of executed slots that carried
+    /// real requests.
+    pub fn occupancy(&self) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        let total = self.requests + self.padded_slots;
+        self.requests as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_and_occupancy() {
+        let mut m = Metrics::default();
+        for us in [100u64, 200, 300, 400, 1000] {
+            m.record_latency(Duration::from_micros(us));
+        }
+        m.record_batch(5, 8);
+        assert_eq!(m.requests, 5);
+        assert!((m.p50_us() - 300.0).abs() < 1.0);
+        assert!(m.p99_us() > 900.0);
+        assert!((m.occupancy() - 5.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_metrics_safe() {
+        let m = Metrics::default();
+        assert_eq!(m.p50_us(), 0.0);
+        assert_eq!(m.occupancy(), 0.0);
+    }
+}

@@ -1,0 +1,20 @@
+//! L3 coordinator — the memory-system role of this paper.
+//!
+//! MCAIMem is a buffer, so the coordinator owns the buffer: a tensor-level
+//! [`buffer_manager`] backed by the *functional* mixed-cell array (real
+//! bit-planes, real flips) with its refresh controller; a [`scheduler`]
+//! that drives whole-network inference timelines through that buffer on the
+//! simulated accelerator clock (the event-driven counterpart of the
+//! closed-form energy model — the two are cross-checked in tests); and a
+//! batched inference [`server`] that executes the AOT model via PJRT while
+//! routing request tensors through the buffer path (threads + channels —
+//! the offline crate set has no tokio).
+
+pub mod buffer_manager;
+pub mod metrics;
+pub mod scheduler;
+pub mod server;
+
+pub use buffer_manager::{BufferManager, TensorHandle};
+pub use scheduler::{simulate_inference, SimReport};
+pub use server::{InferenceServer, ServerConfig, ServerStats};

@@ -1,0 +1,195 @@
+//! Event-driven inference timeline over the functional buffer.
+//!
+//! Drives one whole-network inference through the [`BufferManager`]:
+//! weights are resident; per layer, input activations are loaded, the layer
+//! "computes" for the cycle count the systolic model gives it (the buffer
+//! clock advances, refresh slots fire, static energy integrates), and
+//! outputs are stored. This is the event-driven counterpart of the
+//! closed-form model in [`crate::energy::system_eval`]; tests check the two
+//! agree on static + refresh energy to within the discretization error —
+//! the cross-validation the paper's methodology implies between its SPICE
+//! characterization and its SCALE-Sim system numbers.
+
+use anyhow::Result;
+
+use super::buffer_manager::BufferManager;
+use crate::scalesim::accelerator::AcceleratorConfig;
+use crate::scalesim::network::Network;
+use crate::scalesim::systolic::layer_cost;
+use crate::util::rng::Pcg64;
+
+/// Result of an event-driven inference simulation.
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    pub network: &'static str,
+    pub accelerator: &'static str,
+    pub sim_time_s: f64,
+    pub static_j: f64,
+    pub refresh_j: f64,
+    pub dynamic_j: f64,
+    pub refresh_ops: u64,
+    pub flips_committed: u64,
+    pub weight_bytes_resident: usize,
+}
+
+impl SimReport {
+    pub fn total_j(&self) -> f64 {
+        self.static_j + self.refresh_j + self.dynamic_j
+    }
+}
+
+/// Simulate one inference of `net` on `acc` with an MCAIMem buffer.
+///
+/// Weights for the current layer are (re)staged into the buffer when they
+/// don't fit wholesale — the double-buffered tiling every real accelerator
+/// does; activations ping-pong between two regions.
+pub fn simulate_inference(
+    net: &Network,
+    acc: &AcceleratorConfig,
+    vref: f64,
+    seed: u64,
+) -> Result<SimReport> {
+    let mut bm = BufferManager::with_vref(acc.buffer_bytes, vref, seed);
+    let mut rng = Pcg64::new(seed ^ 0x5EED);
+
+    // activation ping-pong regions sized to the worst layer (clamped to a
+    // quarter of the buffer each; bigger layers stream in tiles)
+    let max_act = net
+        .layers
+        .iter()
+        .map(|l| l.input_bytes().max(l.output_bytes()))
+        .max()
+        .unwrap_or(0)
+        .min(bm.capacity() / 4)
+        .max(1);
+    let act_a = bm.alloc(max_act)?;
+    let act_b = bm.alloc(max_act)?;
+
+    // weight staging region: the rest of the buffer (minus slack)
+    let wregion = (bm.capacity() - 2 * max_act).saturating_sub(64).max(1);
+    let weights = bm.alloc(wregion)?;
+
+    // stage the input
+    let input_len = net.layers[0].input_bytes().min(max_act);
+    let first: Vec<u8> = (0..input_len).map(|_| (rng.normal() * 12.0) as i8 as u8).collect();
+    bm.store(
+        super::buffer_manager::TensorHandle { offset: act_a.offset, len: input_len, id: act_a.id },
+        &first,
+    )?;
+    let mut src = act_a;
+    let mut dst = act_b;
+
+    for l in &net.layers {
+        let cost = layer_cost(l, acc);
+        // stage this layer's weights (tile-wise if larger than the region)
+        let wlen = l.weight_bytes().min(wregion);
+        let wdata: Vec<u8> = (0..wlen).map(|_| (rng.normal() * 10.0) as i8 as u8).collect();
+        let wh = super::buffer_manager::TensorHandle {
+            offset: weights.offset,
+            len: wlen,
+            id: weights.id,
+        };
+        bm.store(wh, &wdata)?;
+
+        // the layer reads its input once at start…
+        let rlen = l.input_bytes().min(max_act);
+        let _ = bm.load(super::buffer_manager::TensorHandle {
+            offset: src.offset,
+            len: rlen,
+            id: src.id,
+        });
+
+        // …computes for its cycle count (clock advances, refresh fires)…
+        bm.tick(cost.cycles as f64 / acc.clock_hz);
+
+        // …and writes its output.
+        let olen = l.output_bytes().min(max_act);
+        let out: Vec<u8> = (0..olen).map(|_| (rng.normal() * 12.0) as i8 as u8).collect();
+        bm.store(
+            super::buffer_manager::TensorHandle { offset: dst.offset, len: olen, id: dst.id },
+            &out,
+        )?;
+        std::mem::swap(&mut src, &mut dst);
+    }
+
+    let m = &bm.mem.meter;
+    Ok(SimReport {
+        network: net.name,
+        accelerator: acc.name,
+        sim_time_s: bm.now(),
+        static_j: m.static_j,
+        refresh_j: m.refresh_j,
+        dynamic_j: m.read_j + m.write_j,
+        refresh_ops: m.refreshes,
+        flips_committed: m.flips_committed,
+        weight_bytes_resident: wregion,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::system_eval::{evaluate, MemChoice};
+    use crate::scalesim::{network, simulate_network};
+
+    #[test]
+    fn event_driven_matches_closed_form_static_refresh() {
+        // The two models share the same cards and clock, so static and
+        // refresh energy must agree closely (the event-driven run's data
+        // pattern differs slightly from the closed-form ones-fraction
+        // estimate, so allow 30 %).
+        let net = network::lenet();
+        let acc = AcceleratorConfig::eyeriss();
+        let sim = simulate_inference(&net, &acc, 0.8, 42).unwrap();
+        let trace = simulate_network(&net, &acc);
+        let cf = evaluate(&trace, &acc, &MemChoice::Mcaimem { vref: 0.8 });
+        let rel = |a: f64, b: f64| (a - b).abs() / b.max(1e-30);
+        assert!(rel(sim.sim_time_s, trace.total_time_s) < 1e-9);
+        assert!(
+            rel(sim.static_j, cf.static_j) < 0.3,
+            "static: sim={} cf={}",
+            sim.static_j,
+            cf.static_j
+        );
+        // refresh: the closed form charges the whole buffer at DNN-data
+        // statistics; the event-driven buffer's unoccupied cells idle at
+        // bit-1 (nearly-free refresh), so it must come in *below* the
+        // closed form but within the same order of magnitude
+        assert!(
+            sim.refresh_j < cf.refresh_j && sim.refresh_j > cf.refresh_j / 5.0,
+            "refresh: sim={} cf={}",
+            sim.refresh_j,
+            cf.refresh_j
+        );
+    }
+
+    #[test]
+    fn refresh_ops_scale_with_runtime() {
+        let net = network::lenet();
+        let acc = AcceleratorConfig::eyeriss();
+        let sim = simulate_inference(&net, &acc, 0.8, 1).unwrap();
+        // expected: time / slot-interval
+        let t_ref = 12.57e-6;
+        let rows = 256.0;
+        let expect = sim.sim_time_s / (t_ref / rows);
+        let rel = (sim.refresh_ops as f64 - expect).abs() / expect;
+        assert!(rel < 0.05, "ops={} expect={expect}", sim.refresh_ops);
+    }
+
+    #[test]
+    fn lower_vref_means_more_refresh_energy() {
+        let net = network::lenet();
+        let acc = AcceleratorConfig::eyeriss();
+        let hi = simulate_inference(&net, &acc, 0.8, 2).unwrap();
+        let lo = simulate_inference(&net, &acc, 0.5, 2).unwrap();
+        assert!(lo.refresh_j > 5.0 * hi.refresh_j, "lo={} hi={}", lo.refresh_j, hi.refresh_j);
+        // flips affect only the ~1% weakest cells among freshly written
+        // zeros (each flips at most once per write); bound by traffic
+        assert!(hi.flips_committed > 0, "the weak-cell tail must exist");
+        assert!(
+            (hi.flips_committed as f64) < 0.05 * 7.0 * 200_000.0,
+            "flips={}",
+            hi.flips_committed
+        );
+    }
+}

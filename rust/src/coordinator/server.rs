@@ -1,0 +1,173 @@
+//! Batched inference server — the request loop of the L3 coordinator.
+//!
+//! A single worker thread owns the PJRT executables (they are not `Sync`)
+//! and drains an mpsc request queue; requests are grouped into the export
+//! batch size with a short batching window, padded when the window closes
+//! early, executed through the MCAIMem-aged model, and answered over
+//! per-request channels. Latency/throughput metrics are the numbers the
+//! end-to-end example reports (EXPERIMENTS.md §E2E).
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::metrics::Metrics;
+use crate::runtime::executor::{ModelRunner, StoreVariant};
+use crate::util::rng::Pcg64;
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Batching window: how long to wait for more requests before padding.
+    pub batch_window: Duration,
+    /// Which storage variant the served model uses.
+    pub variant: StoreVariant,
+    /// Retention-flip probability fed to the aged variants.
+    pub flip_p: f64,
+    pub seed: u64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            batch_window: Duration::from_millis(2),
+            variant: StoreVariant::Mcaimem,
+            flip_p: 0.01,
+            seed: 0xD00D,
+        }
+    }
+}
+
+struct Request {
+    row: Vec<i8>,
+    submitted: Instant,
+    reply: mpsc::Sender<(usize, Duration)>,
+}
+
+/// Handle to the running server.
+pub struct InferenceServer {
+    tx: mpsc::Sender<Request>,
+    worker: Option<JoinHandle<Metrics>>,
+}
+
+/// Final statistics after shutdown.
+#[derive(Clone, Debug)]
+pub struct ServerStats {
+    pub requests: u64,
+    pub batches: u64,
+    pub mean_latency_us: f64,
+    pub p50_latency_us: f64,
+    pub p99_latency_us: f64,
+    pub occupancy: f64,
+}
+
+impl InferenceServer {
+    /// Start the worker thread over an artifacts directory.
+    pub fn start(artifacts_dir: std::path::PathBuf, cfg: ServerConfig) -> Result<Self> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let worker = std::thread::Builder::new()
+            .name("mcaimem-infer".into())
+            .spawn(move || worker_loop(artifacts_dir, cfg, rx))?;
+        Ok(InferenceServer { tx, worker: Some(worker) })
+    }
+
+    /// Submit one row; blocks until the class comes back.
+    pub fn classify(&self, row: Vec<i8>) -> Result<(usize, Duration)> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Request { row, submitted: Instant::now(), reply: reply_tx })
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        Ok(reply_rx.recv()?)
+    }
+
+    /// Fire-and-forget submission returning the reply receiver (for load
+    /// generation).
+    pub fn submit(&self, row: Vec<i8>) -> Result<mpsc::Receiver<(usize, Duration)>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Request { row, submitted: Instant::now(), reply: reply_tx })
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        Ok(reply_rx)
+    }
+
+    /// Stop the server and collect metrics.
+    pub fn shutdown(mut self) -> ServerStats {
+        drop(self.tx);
+        let m = self
+            .worker
+            .take()
+            .expect("worker present")
+            .join()
+            .unwrap_or_default();
+        ServerStats {
+            requests: m.requests,
+            batches: m.batches,
+            mean_latency_us: m.mean_us(),
+            p50_latency_us: m.p50_us(),
+            p99_latency_us: m.p99_us(),
+            occupancy: m.occupancy(),
+        }
+    }
+}
+
+fn worker_loop(dir: std::path::PathBuf, cfg: ServerConfig, rx: mpsc::Receiver<Request>) -> Metrics {
+    let mut metrics = Metrics::default();
+    let mut runner = match ModelRunner::new(&dir) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("server: failed to load artifacts: {e:#}");
+            return metrics;
+        }
+    };
+    let batch = runner.artifacts.batch;
+    let dim = runner.artifacts.input_dim;
+    let mut rng = Pcg64::new(cfg.seed);
+
+    loop {
+        // block for the first request of a batch
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => break, // all senders dropped → shutdown
+        };
+        let mut pending = vec![first];
+        let window_end = Instant::now() + cfg.batch_window;
+        while pending.len() < batch {
+            let now = Instant::now();
+            if now >= window_end {
+                break;
+            }
+            match rx.recv_timeout(window_end - now) {
+                Ok(r) => pending.push(r),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+
+        // assemble padded batch
+        let real = pending.len();
+        let mut x = vec![0i8; batch * dim];
+        for (i, r) in pending.iter().enumerate() {
+            let row = &r.row;
+            let n = row.len().min(dim);
+            x[i * dim..i * dim + n].copy_from_slice(&row[..n]);
+        }
+        metrics.record_batch(real, batch);
+
+        match runner.infer(&x, cfg.variant, cfg.flip_p, &mut rng) {
+            Ok(classes) => {
+                for (i, req) in pending.into_iter().enumerate() {
+                    let latency = req.submitted.elapsed();
+                    metrics.record_latency(latency);
+                    let _ = req.reply.send((classes[i], latency));
+                }
+            }
+            Err(e) => {
+                eprintln!("server: inference failed: {e:#}");
+                // drop replies — callers see a closed channel
+            }
+        }
+    }
+    metrics
+}

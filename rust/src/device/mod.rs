@@ -1,0 +1,25 @@
+//! Analytical device models — the SPICE substitute.
+//!
+//! The paper characterizes its cells with SPICE on 45 nm (and Table I on
+//! 65 nm) low-power CMOS. This repo has no PDK, so [`tech`] provides
+//! technology cards, [`transistor`] a compact MOSFET I-V model (square-law +
+//! subthreshold, enough for VTC/SNM work), [`leakage`] the storage-node
+//! leakage composition that drives eDRAM retention, and [`variation`] the
+//! process-variation sampling used by every Monte-Carlo experiment.
+//!
+//! Calibration: all free constants are pinned to the paper's published
+//! anchors (see `DESIGN.md §4`) — e.g. the gate-tunneling exponent `alpha`
+//! is solved so the 1 %-flip time ratio between V_REF = 0.8 V and 0.5 V is
+//! 12.57 µs / 1.3 µs, and the width-scaled vs fixed leakage split is solved
+//! so a 4× storage width doubles the 0.18 V → 0.8 V charge time (paper
+//! Fig. 7b).
+
+pub mod leakage;
+pub mod tech;
+pub mod transistor;
+pub mod variation;
+
+pub use leakage::StorageLeakage;
+pub use tech::TechNode;
+pub use transistor::{Mosfet, MosKind, VthClass};
+pub use variation::VariationModel;

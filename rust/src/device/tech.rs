@@ -1,0 +1,120 @@
+//! Technology cards for the two nodes the paper uses.
+//!
+//! Table I is characterized at 65 nm low-power CMOS; everything else
+//! (retention, SNM, Table II, the system results) at 45 nm low-power CMOS.
+//! The numbers here are representative LP-process values from the public
+//! literature; the retention-critical constants are *calibrated* against the
+//! paper's anchors in [`super::leakage`].
+
+/// A CMOS technology card.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TechNode {
+    pub name: &'static str,
+    /// Feature size in nm.
+    pub feature_nm: f64,
+    /// Nominal supply voltage (V).
+    pub vdd: f64,
+    /// Regular-Vth NMOS / PMOS threshold magnitudes (V).
+    pub vth_n: f64,
+    pub vth_p: f64,
+    /// Low-Vth option (V) — the conventional 2T cell's read device.
+    pub vth_low: f64,
+    /// Subthreshold slope ideality factor n (S = n·vt·ln10).
+    pub subvt_n: f64,
+    /// Gate-oxide capacitance per area (F/m²).
+    pub cox: f64,
+    /// Process transconductance µCox for NMOS (A/V²); PMOS is
+    /// `pmos_beta_ratio` weaker.
+    pub k_n: f64,
+    pub pmos_beta_ratio: f64,
+    /// Channel-length modulation λ (1/V).
+    pub lambda: f64,
+    /// Area of one layout lambda² in m² (for F²-based cell area estimates):
+    /// one "F²" = feature² .
+    pub f2_area: f64,
+}
+
+impl TechNode {
+    /// 65 nm low-power CMOS — Table I comparisons [paper §I, ref 9].
+    pub fn lp65() -> Self {
+        TechNode {
+            name: "lp65",
+            feature_nm: 65.0,
+            vdd: 1.2,
+            vth_n: 0.45,
+            vth_p: 0.45,
+            vth_low: 0.25,
+            subvt_n: 1.5,
+            cox: 1.1e-2, // ~1.6nm EOT → ~11 fF/µm² = 1.1e-2 F/m²
+            k_n: 3.0e-4,
+            pmos_beta_ratio: 0.45,
+            lambda: 0.10,
+            f2_area: 65.0e-9 * 65.0e-9,
+        }
+    }
+
+    /// 45 nm low-power CMOS — the paper's main evaluation node (§V).
+    pub fn lp45() -> Self {
+        TechNode {
+            name: "lp45",
+            feature_nm: 45.0,
+            vdd: 1.0,
+            vth_n: 0.40,
+            vth_p: 0.42,
+            vth_low: 0.22,
+            subvt_n: 1.45,
+            cox: 1.25e-2, // ~1.4nm EOT
+            k_n: 3.4e-4,
+            pmos_beta_ratio: 0.42,
+            lambda: 0.12,
+            f2_area: 45.0e-9 * 45.0e-9,
+        }
+    }
+
+    /// Thermal voltage at temperature (°C).
+    pub fn vt(&self, temp_c: f64) -> f64 {
+        crate::util::units::thermal_voltage(temp_c)
+    }
+
+    /// Leakage temperature scaling relative to the paper's 85 °C Monte-Carlo
+    /// condition: leakage roughly doubles every 10 °C.
+    pub fn leak_temp_factor(&self, temp_c: f64) -> f64 {
+        2f64.powf((temp_c - 85.0) / 10.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cards_are_distinct_nodes() {
+        let a = TechNode::lp65();
+        let b = TechNode::lp45();
+        assert!(a.feature_nm > b.feature_nm);
+        assert!(a.vdd > b.vdd);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn vth_ordering() {
+        for t in [TechNode::lp65(), TechNode::lp45()] {
+            assert!(t.vth_low < t.vth_n, "{}: LVT must be below RVT", t.name);
+            assert!(t.vth_n < t.vdd / 2.0, "{}: RVT below VDD/2", t.name);
+        }
+    }
+
+    #[test]
+    fn leak_temp_factor_anchored_at_85c() {
+        let t = TechNode::lp45();
+        assert!((t.leak_temp_factor(85.0) - 1.0).abs() < 1e-12);
+        assert!((t.leak_temp_factor(95.0) - 2.0).abs() < 1e-12);
+        assert!((t.leak_temp_factor(25.0) - 2f64.powf(-6.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn f2_area_is_feature_squared() {
+        let t = TechNode::lp45();
+        assert!((t.f2_area - 2.025e-15).abs() < 1e-18);
+    }
+}

@@ -1,0 +1,205 @@
+//! Compact MOSFET model: square-law strong inversion + exponential
+//! subthreshold, with channel-length modulation.
+//!
+//! Accuracy target: the *relative* device behaviours the paper's circuit
+//! results rest on — VTC shapes for the butterfly/SNM analysis (Fig. 9),
+//! access-vs-latch strength ratios, and subthreshold leakage orders of
+//! magnitude. This is the level of fidelity a hand analysis or a
+//! lecture-grade simulator provides; absolute currents are not silicon.
+
+use super::tech::TechNode;
+
+/// Device polarity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MosKind {
+    Nmos,
+    Pmos,
+}
+
+/// Threshold-voltage flavor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VthClass {
+    Regular,
+    Low,
+    /// Regular Vth shifted by an externally applied bias trick (e.g. the
+    /// paper's VDD+0.4 V gate bias on the 2T write PMOS, §III-B2).
+    Shifted(i32), // shift in mV, positive = stronger off
+}
+
+/// A sized MOSFET instance.
+#[derive(Clone, Debug)]
+pub struct Mosfet {
+    pub kind: MosKind,
+    pub vth_class: VthClass,
+    /// Drawn width/length in multiples of the feature size.
+    pub w_f: f64,
+    pub l_f: f64,
+}
+
+impl Mosfet {
+    pub fn nmos(w_f: f64, l_f: f64) -> Self {
+        Mosfet { kind: MosKind::Nmos, vth_class: VthClass::Regular, w_f, l_f }
+    }
+
+    pub fn pmos(w_f: f64, l_f: f64) -> Self {
+        Mosfet { kind: MosKind::Pmos, vth_class: VthClass::Regular, w_f, l_f }
+    }
+
+    pub fn low_vth(mut self) -> Self {
+        self.vth_class = VthClass::Low;
+        self
+    }
+
+    /// Threshold magnitude (V) for this device on `tech`, with an optional
+    /// extra shift `dvth` from variation sampling.
+    pub fn vth(&self, tech: &TechNode, dvth: f64) -> f64 {
+        let base = match (self.kind, self.vth_class) {
+            (_, VthClass::Low) => tech.vth_low,
+            (MosKind::Nmos, VthClass::Regular) => tech.vth_n,
+            (MosKind::Pmos, VthClass::Regular) => tech.vth_p,
+            (MosKind::Nmos, VthClass::Shifted(mv)) => tech.vth_n + mv as f64 * 1e-3,
+            (MosKind::Pmos, VthClass::Shifted(mv)) => tech.vth_p + mv as f64 * 1e-3,
+        };
+        base + dvth
+    }
+
+    /// Transconductance factor β = k' · W/L (A/V²).
+    pub fn beta(&self, tech: &TechNode) -> f64 {
+        let kp = match self.kind {
+            MosKind::Nmos => tech.k_n,
+            MosKind::Pmos => tech.k_n * tech.pmos_beta_ratio,
+        };
+        kp * self.w_f / self.l_f
+    }
+
+    /// Drain current magnitude (A) in terms of *overdrive-referenced*
+    /// voltages: `vgs`, `vds` are magnitudes w.r.t. the source of this
+    /// device (positive numbers for a conducting configuration).
+    ///
+    /// Regions: subthreshold (exponential, with DIBL-free simple model),
+    /// triode, saturation with λ.
+    pub fn ids(&self, tech: &TechNode, vgs: f64, vds: f64, temp_c: f64, dvth: f64) -> f64 {
+        if vds <= 0.0 {
+            return 0.0;
+        }
+        let vth = self.vth(tech, dvth);
+        let vt = tech.vt(temp_c);
+        let vov = vgs - vth;
+        let beta = self.beta(tech);
+        if vov <= 0.0 {
+            // Subthreshold: I = β·(n-1)·vt²·exp(vov/(n·vt))·(1-exp(-vds/vt))
+            let n = tech.subvt_n;
+            beta * (n - 1.0) * vt * vt * (vov / (n * vt)).exp() * (1.0 - (-vds / vt).exp())
+        } else if vds < vov {
+            // Triode
+            beta * (vov * vds - 0.5 * vds * vds)
+        } else {
+            // Saturation
+            0.5 * beta * vov * vov * (1.0 + tech.lambda * (vds - vov))
+        }
+    }
+
+    /// Gate capacitance (F): Cox·W·L.
+    pub fn cgate(&self, tech: &TechNode) -> f64 {
+        let f = tech.feature_nm * 1e-9;
+        tech.cox * (self.w_f * f) * (self.l_f * f)
+    }
+
+    /// Off-state subthreshold leakage at Vgs = 0, Vds = `vds` (A).
+    pub fn ioff(&self, tech: &TechNode, vds: f64, temp_c: f64, dvth: f64) -> f64 {
+        self.ids(tech, 0.0, vds, temp_c, dvth) * tech.leak_temp_factor(temp_c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t() -> TechNode {
+        TechNode::lp45()
+    }
+
+    #[test]
+    fn regions_are_continuous_at_boundaries() {
+        let m = Mosfet::nmos(2.0, 1.0);
+        let tech = t();
+        // triode/saturation boundary at vds = vov
+        let vgs = 0.8;
+        let vov = vgs - m.vth(&tech, 0.0);
+        let below = m.ids(&tech, vgs, vov - 1e-9, 25.0, 0.0);
+        let above = m.ids(&tech, vgs, vov + 1e-9, 25.0, 0.0);
+        assert!((below - above).abs() / above < 1e-3);
+    }
+
+    #[test]
+    fn saturation_current_grows_with_overdrive() {
+        let m = Mosfet::nmos(2.0, 1.0);
+        let tech = t();
+        let i1 = m.ids(&tech, 0.6, 1.0, 25.0, 0.0);
+        let i2 = m.ids(&tech, 0.9, 1.0, 25.0, 0.0);
+        assert!(i2 > i1 * 2.0);
+    }
+
+    #[test]
+    fn subthreshold_is_exponential_in_vgs() {
+        let m = Mosfet::nmos(2.0, 1.0);
+        let tech = t();
+        let vt = tech.vt(25.0);
+        let n = tech.subvt_n;
+        let i1 = m.ids(&tech, 0.1, 1.0, 25.0, 0.0);
+        let i2 = m.ids(&tech, 0.2, 1.0, 25.0, 0.0);
+        let expected_ratio = (0.1 / (n * vt)).exp();
+        assert!((i2 / i1 - expected_ratio).abs() / expected_ratio < 1e-6);
+    }
+
+    #[test]
+    fn pmos_weaker_than_nmos_at_same_size() {
+        let n = Mosfet::nmos(2.0, 1.0);
+        let p = Mosfet::pmos(2.0, 1.0);
+        let tech = t();
+        assert!(p.beta(&tech) < n.beta(&tech));
+    }
+
+    #[test]
+    fn low_vth_leaks_more() {
+        let tech = t();
+        let rvt = Mosfet::nmos(1.0, 1.0);
+        let lvt = Mosfet::nmos(1.0, 1.0).low_vth();
+        assert!(lvt.ioff(&tech, 1.0, 25.0, 0.0) > 100.0 * rvt.ioff(&tech, 1.0, 25.0, 0.0));
+    }
+
+    #[test]
+    fn hot_leaks_more_than_cold() {
+        let tech = t();
+        let m = Mosfet::nmos(1.0, 1.0);
+        let cold = m.ioff(&tech, 1.0, 25.0, 0.0);
+        let hot = m.ioff(&tech, 1.0, 85.0, 0.0);
+        assert!(hot > 10.0 * cold);
+    }
+
+    #[test]
+    fn vth_shift_reduces_leakage() {
+        let tech = t();
+        let mut m = Mosfet::pmos(1.0, 1.0);
+        let base = m.ioff(&tech, 1.0, 85.0, 0.0);
+        // The paper's +0.4 V gate bias on the 2T write PMOS (§III-B2)
+        m.vth_class = VthClass::Shifted(400);
+        let biased = m.ioff(&tech, 1.0, 85.0, 0.0);
+        assert!(biased < base * 1e-3);
+    }
+
+    #[test]
+    fn gate_cap_scales_with_width() {
+        let tech = t();
+        let c1 = Mosfet::nmos(1.0, 1.0).cgate(&tech);
+        let c4 = Mosfet::nmos(4.0, 1.0).cgate(&tech);
+        assert!((c4 / c1 - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_vds_means_zero_current() {
+        let tech = t();
+        let m = Mosfet::nmos(1.0, 1.0);
+        assert_eq!(m.ids(&tech, 1.0, 0.0, 25.0, 0.0), 0.0);
+    }
+}

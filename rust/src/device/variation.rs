@@ -1,0 +1,101 @@
+//! Process-variation sampling for Monte-Carlo experiments.
+//!
+//! The paper runs SPICE Monte-Carlo at two scales: 1 Mb-macro cell-to-cell
+//! retention spreads (Fig. 2), and 1000-sample write-yield analysis at
+//! 25 °C (Fig. 9b), plus the 100 000-sample flip-probability model at 85 °C
+//! (Fig. 12). This module centralizes how per-instance parameters are drawn:
+//! threshold-voltage mismatch is Gaussian (Pelgrom scaling), which makes
+//! subthreshold/gate leakage lognormal.
+
+use crate::util::rng::Pcg64;
+
+/// Variation configuration for one device/cell family.
+#[derive(Clone, Copy, Debug)]
+pub struct VariationModel {
+    /// σ of Vth mismatch in volts (per device).
+    pub sigma_vth: f64,
+    /// σ of ln(leakage multiplier) (per storage node). For the widened
+    /// MCAIMem cell this is small (large-area averaging, paper's very steep
+    /// Fig. 12b CDF); conventional minimum-size gain cells spread widely
+    /// (paper Fig. 2).
+    pub sigma_ln_leak: f64,
+}
+
+impl VariationModel {
+    /// Conventional minimum-size gain cell (Fig. 2 retention spreads).
+    pub fn conventional_gain_cell() -> Self {
+        VariationModel { sigma_vth: 0.035, sigma_ln_leak: 0.35 }
+    }
+
+    /// The 4×-width MCAIMem storage cell: Pelgrom ⇒ σ ∝ 1/√(W·L), and the
+    /// paper's Fig. 12b anchors imply σ_ln ≈ 0.020 (solved in
+    /// [`super::leakage::StorageLeakage::calibrated`]).
+    pub fn mcaimem_cell() -> Self {
+        VariationModel { sigma_vth: 0.0175, sigma_ln_leak: 0.0204 }
+    }
+
+    /// 6T SRAM transistors at 45 nm (write-yield MC of Fig. 9b).
+    pub fn sram_45nm() -> Self {
+        VariationModel { sigma_vth: 0.030, sigma_ln_leak: 0.30 }
+    }
+
+    /// Draw a Vth offset (V).
+    pub fn sample_dvth(&self, rng: &mut Pcg64) -> f64 {
+        rng.normal_ms(0.0, self.sigma_vth)
+    }
+
+    /// Draw a leakage multiplier (lognormal, median 1).
+    pub fn sample_leak_mult(&self, rng: &mut Pcg64) -> f64 {
+        rng.lognormal(0.0, self.sigma_ln_leak)
+    }
+
+    /// Pelgrom area scaling: mismatch σ shrinks with √(area multiple).
+    pub fn scaled_by_area(&self, area_mult: f64) -> VariationModel {
+        assert!(area_mult > 0.0);
+        VariationModel {
+            sigma_vth: self.sigma_vth / area_mult.sqrt(),
+            sigma_ln_leak: self.sigma_ln_leak / area_mult.sqrt(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn leak_mult_median_is_one() {
+        let v = VariationModel::conventional_gain_cell();
+        let mut rng = Pcg64::new(1);
+        let mut xs: Vec<f64> = (0..20_001).map(|_| v.sample_leak_mult(&mut rng)).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = xs[xs.len() / 2];
+        assert!((med - 1.0).abs() < 0.02, "median={med}");
+    }
+
+    #[test]
+    fn dvth_centred_with_right_spread() {
+        let v = VariationModel::sram_45nm();
+        let mut rng = Pcg64::new(2);
+        let xs: Vec<f64> = (0..50_000).map(|_| v.sample_dvth(&mut rng)).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+        assert!(mean.abs() < 1e-3);
+        assert!((var.sqrt() - 0.030).abs() < 1e-3);
+    }
+
+    #[test]
+    fn pelgrom_scaling() {
+        let v = VariationModel::conventional_gain_cell();
+        let wide = v.scaled_by_area(4.0);
+        assert!((wide.sigma_vth - v.sigma_vth / 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mcaimem_cell_tighter_than_conventional() {
+        assert!(
+            VariationModel::mcaimem_cell().sigma_ln_leak
+                < VariationModel::conventional_gain_cell().sigma_ln_leak / 10.0
+        );
+    }
+}

@@ -1,0 +1,7 @@
+//! The one-enhancement encoder/decoder and DNN bit statistics (§II-B, §III-A).
+
+pub mod one_enhancement;
+pub mod stats;
+
+pub use one_enhancement::{decode, decode_in_place, encode, encode_in_place, OneEnhancement};
+pub use stats::{bit_histogram, BitStats};

@@ -1,0 +1,12 @@
+//! System-level energy composition (paper §V-B, Figs. 14–16).
+//!
+//! [`system_eval`] combines a [`crate::scalesim::NetworkTrace`] with the
+//! memory characterization cards to produce per-(network, platform, memory)
+//! static / refresh / dynamic energy breakdowns; [`opswatt`] normalizes the
+//! buffer-energy win into the chip-level performance-per-watt gain of
+//! Fig. 16.
+
+pub mod opswatt;
+pub mod system_eval;
+
+pub use system_eval::{evaluate, EnergyBreakdown, MemChoice};

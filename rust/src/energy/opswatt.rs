@@ -1,0 +1,71 @@
+//! Performance-per-watt normalization (paper Fig. 16).
+//!
+//! The buffer is only part of the chip: 42.5 % of Eyeriss' power and 37 %
+//! of TPUv1's. Replacing the SRAM buffer with MCAIMem shrinks that slice by
+//! the buffer-energy ratio; throughput is unchanged (same cycles), so the
+//! ops/W gain is
+//!
+//! ```text
+//!   gain = 1 / ((1 − f) + f·ratio) − 1,   ratio = E_mcaimem / E_sram
+//! ```
+//!
+//! With the headline 3.4× buffer ratio this lands at +42.8 % on Eyeriss and
+//! +35.4 % on TPUv1 — the paper's "between 35.4 % and a peak of 43.2 %".
+
+use super::system_eval::{evaluate, MemChoice};
+use crate::scalesim::accelerator::AcceleratorConfig;
+use crate::scalesim::simulate::NetworkTrace;
+
+/// Chip-level ops/W improvement from swapping the SRAM buffer for `mem`.
+pub fn opswatt_gain(trace: &NetworkTrace, acc: &AcceleratorConfig, mem: &MemChoice) -> f64 {
+    let sram = evaluate(trace, acc, &MemChoice::Sram).total_j();
+    let ours = evaluate(trace, acc, mem).total_j();
+    let ratio = ours / sram;
+    let f = acc.buffer_power_frac;
+    1.0 / ((1.0 - f) + f * ratio) - 1.0
+}
+
+/// The closed-form gain for a given buffer-energy ratio (used by tests and
+/// the Fig. 16 caption numbers).
+pub fn gain_for_ratio(buffer_power_frac: f64, energy_ratio: f64) -> f64 {
+    1.0 / ((1.0 - buffer_power_frac) + buffer_power_frac * energy_ratio) - 1.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scalesim::{network, simulate_network};
+
+    #[test]
+    fn paper_caption_numbers() {
+        // 3.4× buffer gain ⇒ +42.8 % (Eyeriss), +35.4 % (TPUv1)
+        let r = 1.0 / 3.4;
+        let ey = gain_for_ratio(0.425, r);
+        let tpu = gain_for_ratio(0.37, r);
+        assert!((ey - 0.428).abs() < 0.005, "ey={ey}");
+        assert!((tpu - 0.354).abs() < 0.005, "tpu={tpu}");
+    }
+
+    #[test]
+    fn gains_land_in_paper_band() {
+        // Fig. 16: 35.4 % … 43.2 % across benchmarks/platforms
+        for acc in AcceleratorConfig::paper_platforms() {
+            for net in ["AlexNet", "ResNet50", "VGG16"] {
+                let t = simulate_network(&network::by_name(net).unwrap(), &acc);
+                let g = opswatt_gain(&t, &acc, &MemChoice::Mcaimem { vref: 0.8 });
+                assert!(g > 0.25 && g < 0.50, "{net}@{}: gain={g}", acc.name);
+            }
+        }
+    }
+
+    #[test]
+    fn identity_ratio_means_no_gain() {
+        assert!(gain_for_ratio(0.425, 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn worse_buffer_means_negative_gain() {
+        // RRAM's >100× loss shows up as a large ops/W regression
+        assert!(gain_for_ratio(0.425, 100.0) < -0.9);
+    }
+}

@@ -1,0 +1,180 @@
+//! Per-inference buffer-energy evaluation (Figs. 14 / 15).
+//!
+//! Method (paper §V-B): SCALE-Sim supplies compute time (cycles @100 MHz)
+//! and on-chip access counts per layer; the memory cards supply
+//! value-dependent static power, refresh power and per-access energy; the
+//! buffer is scaled to the platform (108 KB Eyeriss / 8 MB TPUv1). MAC
+//! energy is intentionally excluded ("our evaluation is meticulously
+//! confined to the on-chip buffer performance").
+
+use crate::mem::energy::EnergyCard;
+use crate::mem::rram::RramCard;
+use crate::scalesim::accelerator::AcceleratorConfig;
+use crate::scalesim::simulate::NetworkTrace;
+
+/// Which buffer design to evaluate.
+#[derive(Clone, Debug, PartialEq)]
+pub enum MemChoice {
+    Sram,
+    /// Conventional asymmetric 2T eDRAM with C-S/A — no encoder
+    /// (the paper's eDRAM baseline).
+    Edram2t,
+    /// MCAIMem at a given V_REF, one-enhancement encoder on.
+    Mcaimem { vref: f64 },
+    /// MCAIMem with the encoder disabled (ablation, Fig. 11's "without").
+    McaimemNoEncoder { vref: f64 },
+    Rram,
+}
+
+impl MemChoice {
+    pub fn label(&self) -> String {
+        match self {
+            MemChoice::Sram => "SRAM".into(),
+            MemChoice::Edram2t => "eDRAM(2T)".into(),
+            MemChoice::Mcaimem { vref } => format!("MCAIMem@{vref}"),
+            MemChoice::McaimemNoEncoder { vref } => format!("MCAIMem@{vref}-noenc"),
+            MemChoice::Rram => "RRAM".into(),
+        }
+    }
+}
+
+/// Buffer energy for one inference.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    pub static_j: f64,
+    pub refresh_j: f64,
+    pub dynamic_j: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total_j(&self) -> f64 {
+        self.static_j + self.refresh_j + self.dynamic_j
+    }
+}
+
+/// Evaluate one (trace, platform, memory) combination.
+pub fn evaluate(trace: &NetworkTrace, acc: &AcceleratorConfig, mem: &MemChoice) -> EnergyBreakdown {
+    let buf = acc.buffer_bytes;
+    let t = trace.total_time_s;
+    let reads = trace.total_sram_reads() as usize;
+    let writes = trace.total_sram_writes() as usize;
+
+    match mem {
+        MemChoice::Rram => {
+            // An RRAM-only buffer has no cheap staging tier: the partial-sum
+            // / operand-return stream that a systolic SRAM absorbs for free
+            // hits the RRAM write path. Charge one buffer write per operand
+            // read in addition to the ofmap writes — this is what makes the
+            // NVM buffer lose by >100× (paper §V-B), and why Chimera [34]
+            // fronts its ReRAM with SRAM staging.
+            let card = RramCard::chimera_like();
+            EnergyBreakdown {
+                static_j: 0.0,
+                refresh_j: 0.0,
+                dynamic_j: card.read_energy(reads) + card.write_energy(writes + reads),
+            }
+        }
+        choice => {
+            let (card, encoded) = match choice {
+                MemChoice::Sram => (EnergyCard::sram(), false),
+                MemChoice::Edram2t => (EnergyCard::edram2t(), false),
+                MemChoice::Mcaimem { vref } => (EnergyCard::mcaimem(*vref), true),
+                MemChoice::McaimemNoEncoder { vref } => (EnergyCard::mcaimem(*vref), false),
+                MemChoice::Rram => unreachable!(),
+            };
+            let resident_frac = trace.mean_ones_frac(encoded);
+            let access_frac = trace.access_ones_frac(encoded);
+            EnergyBreakdown {
+                static_j: card.static_power(buf, resident_frac) * t,
+                refresh_j: card.refresh_power(buf, resident_frac) * t,
+                dynamic_j: card.read_energy(reads, access_frac)
+                    + card.write_energy(writes, access_frac),
+            }
+        }
+    }
+}
+
+/// The headline ratio: SRAM total over MCAIMem total for one workload.
+pub fn mcaimem_gain(trace: &NetworkTrace, acc: &AcceleratorConfig) -> f64 {
+    let sram = evaluate(trace, acc, &MemChoice::Sram).total_j();
+    let ours = evaluate(trace, acc, &MemChoice::Mcaimem { vref: 0.8 }).total_j();
+    sram / ours
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scalesim::{network, simulate_network};
+
+    fn trace_eyeriss(name: &str) -> (NetworkTrace, AcceleratorConfig) {
+        let acc = AcceleratorConfig::eyeriss();
+        (simulate_network(&network::by_name(name).unwrap(), &acc), acc)
+    }
+
+    #[test]
+    fn sram_has_no_refresh_component() {
+        let (t, acc) = trace_eyeriss("LeNet");
+        let e = evaluate(&t, &acc, &MemChoice::Sram);
+        assert_eq!(e.refresh_j, 0.0);
+        assert!(e.static_j > 0.0 && e.dynamic_j > 0.0);
+    }
+
+    #[test]
+    fn mcaimem_beats_sram_by_about_3_4x() {
+        // the headline: 3.4× total-energy gain (paper Fig. 1b / §V-B);
+        // exact multiple varies per workload — check the band on several
+        for name in ["AlexNet", "VGG16", "ResNet50"] {
+            let (t, acc) = trace_eyeriss(name);
+            let g = mcaimem_gain(&t, &acc);
+            assert!(g > 2.2 && g < 5.0, "{name}: gain={g}");
+        }
+    }
+
+    #[test]
+    fn rram_loses_by_over_100x() {
+        let (t, acc) = trace_eyeriss("ResNet50");
+        let sram = evaluate(&t, &acc, &MemChoice::Sram).total_j();
+        let rram = evaluate(&t, &acc, &MemChoice::Rram).total_j();
+        assert!(rram / sram > 100.0, "ratio={}", rram / sram);
+    }
+
+    #[test]
+    fn encoder_ablation_costs_energy() {
+        let (t, acc) = trace_eyeriss("VGG11");
+        let with = evaluate(&t, &acc, &MemChoice::Mcaimem { vref: 0.8 }).total_j();
+        let without = evaluate(&t, &acc, &MemChoice::McaimemNoEncoder { vref: 0.8 }).total_j();
+        assert!(with < without, "encoder must save energy: {with} vs {without}");
+    }
+
+    #[test]
+    fn vref_sweep_monotone_refresh() {
+        let (t, acc) = trace_eyeriss("AlexNet");
+        let mut last = f64::INFINITY;
+        for vref in [0.5, 0.6, 0.7, 0.8] {
+            let e = evaluate(&t, &acc, &MemChoice::Mcaimem { vref });
+            assert!(e.refresh_j < last, "vref={vref}");
+            last = e.refresh_j;
+        }
+    }
+
+    #[test]
+    fn edram_refresh_dominated_vs_mcaimem() {
+        // Fig. 15a: the conventional 2T pays far more refresh energy
+        let (t, acc) = trace_eyeriss("ResNet50");
+        let conv = evaluate(&t, &acc, &MemChoice::Edram2t);
+        let ours = evaluate(&t, &acc, &MemChoice::Mcaimem { vref: 0.8 });
+        assert!(conv.refresh_j > 5.0 * ours.refresh_j);
+    }
+
+    #[test]
+    fn static_energy_ranking_fig14() {
+        // Fig. 14: SRAM > MCAIMem > 2T eDRAM in static energy
+        let (t, acc) = trace_eyeriss("VGG16");
+        let s = evaluate(&t, &acc, &MemChoice::Sram).static_j;
+        let m = evaluate(&t, &acc, &MemChoice::Mcaimem { vref: 0.8 }).static_j;
+        let e = evaluate(&t, &acc, &MemChoice::Edram2t).static_j;
+        assert!(s > m && m > e, "s={s} m={m} e={e}");
+        // mixed-cell static sits 3–6× below SRAM (paper §V-A)
+        assert!(s / m > 3.0 && s / m < 6.5, "ratio={}", s / m);
+    }
+}

@@ -1,0 +1,202 @@
+//! Retention-error injection for DNN tensors (paper §IV-A).
+//!
+//! Bridges the physical flip model to tensor-level experiments: given a flip
+//! probability `p` (swept 1 %–25 % in Fig. 11), corrupt int8 data the way
+//! the mixed array would — **only 0→1 flips, only on the 7 eDRAM-mapped
+//! bits, never on the SRAM-protected sign bit** — in two modes:
+//!
+//! * *without* one-enhancement: flips hit the raw stored image;
+//! * *with* one-enhancement: data is encoded, flipped, then decoded —
+//!   reproducing the paper's "errors are injected into bit-0 post-encoder,
+//!   pre-decoder" methodology.
+//!
+//! The same kernel exists at L1 as a Pallas kernel
+//! (`python/compile/kernels/inject.py`); `rust/tests/` cross-checks the two
+//! through the AOT artifacts.
+
+use crate::encode::one_enhancement::{decode_byte, encode_byte};
+use crate::util::rng::Pcg64;
+
+/// Injection mode (Fig. 11's two curves).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    WithOneEnhancement,
+    WithoutOneEnhancement,
+}
+
+/// Flip each stored 0-bit among the 7 eDRAM bits to 1 with probability `p`.
+#[inline]
+pub fn flip_zeros_byte(stored: u8, p: f64, rng: &mut Pcg64) -> u8 {
+    let mut b = stored;
+    let mut zeros = !b & 0x7f;
+    while zeros != 0 {
+        let bit = zeros & zeros.wrapping_neg(); // lowest set zero-position
+        if rng.bernoulli(p) {
+            b |= bit;
+        }
+        zeros ^= bit;
+    }
+    b
+}
+
+/// Corrupt a tensor in place according to the retention model.
+///
+/// Implementation: geometric-jump sampling over the flat bit-position
+/// space (`len × 7` candidate positions). A Bernoulli(p) process's gaps
+/// between hits are Geometric(p), so we draw `skip = ⌊ln U / ln(1−p)⌋`
+/// per hit and touch only O(p·n) positions — exact, and ~100× faster than
+/// per-bit draws at the paper's 1 % operating point. Hits that land on a
+/// stored 1 are absorbed (bit-1 never flips), exactly as in the per-bit
+/// formulation. §Perf (EXPERIMENTS.md) records the before/after.
+pub fn inject(data: &mut [i8], p: f64, mode: Mode, rng: &mut Pcg64) {
+    if p <= 0.0 || data.is_empty() {
+        return;
+    }
+    if p >= 1.0 {
+        for v in data.iter_mut() {
+            let b = match mode {
+                Mode::WithoutOneEnhancement => *v as u8,
+                Mode::WithOneEnhancement => encode_byte(*v as u8),
+            };
+            let aged = b | 0x7f;
+            *v = match mode {
+                Mode::WithoutOneEnhancement => aged as i8,
+                Mode::WithOneEnhancement => decode_byte(aged) as i8,
+            };
+        }
+        return;
+    }
+    let total_bits = data.len() as u64 * 7;
+    let ln_q = (1.0 - p).ln();
+    let mut pos: u64 = 0;
+    loop {
+        // gap to the next Bernoulli hit (geometric, support ≥ 0)
+        let skip = (rng.f64_open().ln() / ln_q) as u64;
+        pos = match pos.checked_add(skip) {
+            Some(v) => v,
+            None => break,
+        };
+        if pos >= total_bits {
+            break;
+        }
+        let byte = (pos / 7) as usize;
+        let bit = (pos % 7) as u8;
+        let stored = match mode {
+            Mode::WithoutOneEnhancement => data[byte] as u8,
+            Mode::WithOneEnhancement => encode_byte(data[byte] as u8),
+        };
+        let aged = stored | (1 << bit); // 0→1 only; a stored 1 absorbs the hit
+        data[byte] = match mode {
+            Mode::WithoutOneEnhancement => aged as i8,
+            Mode::WithOneEnhancement => decode_byte(aged) as i8,
+        };
+        pos += 1;
+    }
+}
+
+/// Expected absolute perturbation of a single near-zero value under each
+/// mode — the analytical intuition behind Fig. 11: without the encoder a
+/// small positive value has 1-bits injected into high positions (huge error);
+/// with it, the already-one MSBs can't flip and damage is confined to LSBs.
+pub fn expected_abs_error(value: i8, p: f64, mode: Mode, trials: usize, seed: u64) -> f64 {
+    let mut rng = Pcg64::new(seed);
+    let mut total = 0.0;
+    for _ in 0..trials {
+        let mut v = [value];
+        inject(&mut v, p, mode, &mut rng);
+        total += (v[0] as i16 - value as i16).abs() as f64;
+    }
+    total / trials as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_probability_is_identity() {
+        let mut rng = Pcg64::new(1);
+        let data: Vec<i8> = (-64..64).collect();
+        for mode in [Mode::WithOneEnhancement, Mode::WithoutOneEnhancement] {
+            let mut d = data.clone();
+            inject(&mut d, 0.0, mode, &mut rng);
+            assert_eq!(d, data);
+        }
+    }
+
+    #[test]
+    fn sign_bit_never_flips() {
+        let mut rng = Pcg64::new(2);
+        let mut data: Vec<i8> = (0..1000).map(|i| (i % 256) as u8 as i8).collect();
+        let signs: Vec<bool> = data.iter().map(|&v| v < 0).collect();
+        inject(&mut data, 1.0, Mode::WithoutOneEnhancement, &mut rng);
+        let after: Vec<bool> = data.iter().map(|&v| v < 0).collect();
+        assert_eq!(signs, after);
+    }
+
+    #[test]
+    fn p_one_saturates_all_zero_bits() {
+        let mut rng = Pcg64::new(3);
+        let mut data = vec![0i8; 16];
+        inject(&mut data, 1.0, Mode::WithoutOneEnhancement, &mut rng);
+        assert!(data.iter().all(|&v| v == 0x7f));
+        // with one-enhancement, 0 encodes to 0x7f (no zero bits) → unharmed
+        let mut data2 = vec![0i8; 16];
+        inject(&mut data2, 1.0, Mode::WithOneEnhancement, &mut rng);
+        assert!(data2.iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn flip_rate_matches_p() {
+        let mut rng = Pcg64::new(4);
+        let n = 100_000;
+        let mut data = vec![0i8; n];
+        inject(&mut data, 0.1, Mode::WithoutOneEnhancement, &mut rng);
+        let flipped: u32 = data.iter().map(|&v| (v as u8).count_ones()).sum();
+        let rate = flipped as f64 / (7 * n) as f64;
+        assert!((rate - 0.1).abs() < 0.005, "rate={rate}");
+    }
+
+    #[test]
+    fn encoder_shrinks_error_for_near_zero_positives() {
+        // Fig. 11's mechanism, quantified per value: small positives are
+        // 0-dominant raw (MSB flips are catastrophic) but 1-dominant encoded
+        for v in [0i8, 1, 2, 5, 9] {
+            let without = expected_abs_error(v, 0.05, Mode::WithoutOneEnhancement, 4000, 7);
+            let with = expected_abs_error(v, 0.05, Mode::WithOneEnhancement, 4000, 7);
+            assert!(
+                with < without * 0.35,
+                "v={v}: with={with} without={without}"
+            );
+        }
+    }
+
+    #[test]
+    fn negatives_already_one_dominant_encoder_neutral() {
+        // two's-complement negatives near zero are natively 1-dominant; the
+        // encoder passes them through, so both modes damage them equally
+        for v in [-3i8, -7] {
+            let without = expected_abs_error(v, 0.05, Mode::WithoutOneEnhancement, 4000, 7);
+            let with = expected_abs_error(v, 0.05, Mode::WithOneEnhancement, 4000, 7);
+            assert!((with - without).abs() < 1e-9, "v={v}");
+        }
+    }
+
+    #[test]
+    fn errors_are_monotone_in_p() {
+        let e1 = expected_abs_error(3, 0.01, Mode::WithoutOneEnhancement, 8000, 9);
+        let e2 = expected_abs_error(3, 0.10, Mode::WithoutOneEnhancement, 8000, 9);
+        let e3 = expected_abs_error(3, 0.25, Mode::WithoutOneEnhancement, 8000, 9);
+        assert!(e1 < e2 && e2 < e3, "{e1} {e2} {e3}");
+    }
+
+    #[test]
+    fn flip_zeros_byte_only_adds_bits() {
+        let mut rng = Pcg64::new(11);
+        for b in 0..=255u8 {
+            let after = flip_zeros_byte(b, 0.5, &mut rng);
+            assert_eq!(after & b, b, "bits may only be added");
+            assert_eq!(after & 0x80, b & 0x80, "sign plane untouched");
+        }
+    }
+}

@@ -1,0 +1,43 @@
+//! # MCAIMem — mixed SRAM/eDRAM on-chip AI memory, reproduced as a full stack
+//!
+//! This crate reproduces *MCAIMem: a Mixed SRAM and eDRAM Cell for Area and
+//! Energy-efficient on-chip AI Memory* (Nguyen et al., cs.AR 2023) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the memory-system coordinator plus every
+//!   substrate the paper depends on: an analytical device/leakage model
+//!   ([`device`]), gain-cell and SRAM circuit models with Monte-Carlo
+//!   retention analysis ([`circuit`]), the mixed-cell memory with its area /
+//!   energy / refresh / V_REF machinery ([`mem`]), the one-enhancement
+//!   encoder ([`encode`]), a SCALE-Sim-style systolic-array simulator
+//!   ([`scalesim`]), and system-level energy composition ([`energy`]).
+//! * **Layer 2** — a quantized JAX model (`python/compile/model.py`) whose
+//!   every tensor is routed through the MCAIMem store path, AOT-lowered to
+//!   HLO text and executed from Rust via [`runtime`] (PJRT CPU).
+//! * **Layer 1** — Pallas kernels (`python/compile/kernels/`) for the
+//!   one-enhancement encode/decode, asymmetric retention-error injection and
+//!   INT8 matmul, verified against pure-jnp oracles.
+//!
+//! The [`report`] module regenerates every table and figure of the paper's
+//! evaluation; [`coordinator`] hosts the MCAIMem-backed buffer manager,
+//! refresh scheduler and batched inference server.
+//!
+//! See `DESIGN.md` for the substitution table (what the paper measured on
+//! SPICE/silicon vs. what this repo simulates) and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod cli;
+pub mod circuit;
+pub mod coordinator;
+pub mod device;
+pub mod encode;
+pub mod energy;
+pub mod inject;
+pub mod mem;
+pub mod report;
+pub mod runtime;
+pub mod scalesim;
+pub mod util;
+
+/// Crate-wide result type (anyhow is the only error crate in the offline set).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,227 @@
+//! `mcaimem` — leader binary: experiment reports, event-driven simulation,
+//! the batched inference server, and a self-test over the AOT artifacts.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use mcaimem::cli::ArgParser;
+use mcaimem::coordinator::scheduler::simulate_inference;
+use mcaimem::coordinator::server::{InferenceServer, ServerConfig};
+use mcaimem::runtime::executor::{ModelRunner, StoreVariant};
+use mcaimem::scalesim::accelerator::AcceleratorConfig;
+use mcaimem::scalesim::network;
+use mcaimem::util::rng::Pcg64;
+use mcaimem::util::table::fnum;
+
+const USAGE: &str = "\
+mcaimem — MCAIMem (mixed SRAM + eDRAM AI memory) reproduction
+
+USAGE:
+  mcaimem report <id|all> [--csv DIR] [--artifacts DIR] [--quick]
+      regenerate a paper table/figure (table1 table2 fig1 fig2 fig5 fig7
+      fig9 fig11 fig12 fig13 fig14 fig15a fig15b fig16)
+  mcaimem simulate --network NAME [--platform eyeriss|tpuv1] [--vref V] [--seed N]
+      event-driven inference through the functional MCAIMem buffer
+  mcaimem serve [--artifacts DIR] [--requests N] [--variant clean|mcaimem|noenc]
+                [--p P] [--window-ms MS]
+      run the batched inference server against a synthetic client load
+  mcaimem selftest [--artifacts DIR]
+      cross-check the Rust and Pallas implementations through PJRT
+";
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn artifacts_dir(args: &mcaimem::cli::ParsedArgs) -> PathBuf {
+    args.get("artifacts").map(PathBuf::from).unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+fn run() -> Result<()> {
+    let parser = ArgParser::new(
+        &[
+            "csv", "artifacts", "network", "platform", "vref", "seed", "requests", "variant",
+            "p", "window-ms",
+        ],
+        &["quick", "help"],
+    );
+    let args = parser.parse(std::env::args().skip(1))?;
+    if args.has_flag("help") || args.positionals.is_empty() {
+        print!("{USAGE}");
+        return Ok(());
+    }
+
+    match args.positionals[0].as_str() {
+        "report" => {
+            let id = args
+                .positionals
+                .get(1)
+                .map(String::as_str)
+                .unwrap_or("all");
+            let csv = args.get("csv").map(PathBuf::from);
+            let art = artifacts_dir(&args);
+            let art_opt = art.join("manifest.json").exists().then_some(art);
+            mcaimem::report::run(id, art_opt.as_deref(), csv.as_deref(), args.has_flag("quick"))
+        }
+        "fig11" => {
+            let art = artifacts_dir(&args);
+            let csv = args.get("csv").map(PathBuf::from);
+            mcaimem::report::run("fig11", Some(&art), csv.as_deref(), args.has_flag("quick"))
+        }
+        "simulate" => cmd_simulate(&args),
+        "serve" => cmd_serve(&args),
+        "selftest" => cmd_selftest(&args),
+        other => bail!("unknown command `{other}`\n{USAGE}"),
+    }
+}
+
+fn cmd_simulate(args: &mcaimem::cli::ParsedArgs) -> Result<()> {
+    let name = args
+        .get("network")
+        .ok_or_else(|| anyhow::anyhow!("simulate needs --network (e.g. LeNet, ResNet50)"))?;
+    let net = network::by_name(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown network `{name}`"))?;
+    let acc = match args.get("platform").unwrap_or("eyeriss") {
+        "eyeriss" => AcceleratorConfig::eyeriss(),
+        "tpuv1" => AcceleratorConfig::tpuv1(),
+        other => bail!("unknown platform `{other}`"),
+    };
+    let vref = args.get_f64("vref", 0.8)?;
+    let seed = args.get_usize("seed", 42)? as u64;
+    let r = simulate_inference(&net, &acc, vref, seed)?;
+    println!("event-driven MCAIMem simulation — {} on {}", r.network, r.accelerator);
+    println!("  sim time       : {} ms", fnum(r.sim_time_s * 1e3, 3));
+    println!(
+        "  refresh energy : {} µJ ({} row refreshes)",
+        fnum(r.refresh_j * 1e6, 3),
+        r.refresh_ops
+    );
+    println!("  static energy  : {} µJ", fnum(r.static_j * 1e6, 3));
+    println!("  dynamic energy : {} µJ", fnum(r.dynamic_j * 1e6, 3));
+    println!("  total          : {} µJ", fnum(r.total_j() * 1e6, 3));
+    println!("  retention flips committed: {}", r.flips_committed);
+    Ok(())
+}
+
+fn cmd_serve(args: &mcaimem::cli::ParsedArgs) -> Result<()> {
+    let art = artifacts_dir(args);
+    let requests = args.get_usize("requests", 512)?;
+    let variant = match args.get("variant").unwrap_or("mcaimem") {
+        "clean" => StoreVariant::Clean,
+        "mcaimem" => StoreVariant::Mcaimem,
+        "noenc" => StoreVariant::McaimemNoEncoder,
+        other => bail!("unknown variant `{other}`"),
+    };
+    let cfg = ServerConfig {
+        batch_window: Duration::from_millis(args.get_usize("window-ms", 2)? as u64),
+        variant,
+        flip_p: args.get_f64("p", 0.01)?,
+        seed: 0xD00D,
+    };
+
+    // load the exported test set as client traffic
+    let runner = ModelRunner::new(&art)?;
+    let x = runner.artifacts.tensor("x_test_i8")?.as_i8()?;
+    let y = runner.artifacts.tensor("y_test_i32")?.as_i32()?;
+    let dim = runner.artifacts.input_dim;
+    drop(runner);
+
+    println!(
+        "starting server ({variant:?}, p={}, {requests} requests)...",
+        cfg.flip_p
+    );
+    let server = InferenceServer::start(art, cfg)?;
+    let t0 = std::time::Instant::now();
+    let mut rxs = Vec::with_capacity(requests);
+    for i in 0..requests {
+        let row = x[(i % (x.len() / dim)) * dim..][..dim].to_vec();
+        rxs.push((i, server.submit(row)?));
+    }
+    let mut correct = 0usize;
+    let total = requests;
+    for (i, rx) in rxs {
+        let (class, _lat) = rx.recv()?;
+        if class as i32 == y[i % y.len()] {
+            correct += 1;
+        }
+    }
+    let elapsed = t0.elapsed();
+    let stats = server.shutdown();
+    println!(
+        "served {} requests in {} ms",
+        stats.requests,
+        fnum(elapsed.as_secs_f64() * 1e3, 1)
+    );
+    println!(
+        "  throughput : {} req/s",
+        fnum(stats.requests as f64 / elapsed.as_secs_f64(), 0)
+    );
+    println!(
+        "  latency    : mean {} µs  p50 {} µs  p99 {} µs",
+        fnum(stats.mean_latency_us, 0),
+        fnum(stats.p50_latency_us, 0),
+        fnum(stats.p99_latency_us, 0)
+    );
+    println!(
+        "  batches    : {} (occupancy {})",
+        stats.batches,
+        fnum(stats.occupancy, 3)
+    );
+    println!("  accuracy   : {}", fnum(correct as f64 / total as f64, 4));
+    Ok(())
+}
+
+fn cmd_selftest(args: &mcaimem::cli::ParsedArgs) -> Result<()> {
+    let art = artifacts_dir(args);
+    let mut runner = ModelRunner::new(&art)?;
+    let mut rng = Pcg64::new(7);
+
+    // 1) encoder: Pallas (through PJRT) vs the Rust implementation
+    let n = 4096;
+    let x: Vec<i8> = (0..n).map(|_| rng.next_u64() as i8).collect();
+    let pallas_enc = runner.encode_only(&x)?;
+    let rust_enc = mcaimem::encode::one_enhancement::encode(&x);
+    anyhow::ensure!(pallas_enc == rust_enc, "encode mismatch between Pallas and Rust");
+    println!("encode: Pallas == Rust over {n} random bytes OK");
+
+    // 2) store path: encode→age→decode with a shared mask
+    let mask = ModelRunner::draw_mask(&mut rng, n, 0.07);
+    let pallas_rt = runner.encoder_roundtrip(&x, &mask)?;
+    let mut rust_rt = x.clone();
+    for (v, m) in rust_rt.iter_mut().zip(&mask) {
+        let enc = mcaimem::encode::one_enhancement::encode_byte(*v as u8);
+        let aged = enc | (*m as u8 & !enc & 0x7f);
+        *v = mcaimem::encode::one_enhancement::decode_byte(aged) as i8;
+    }
+    anyhow::ensure!(pallas_rt == rust_rt, "store-path mismatch between Pallas and Rust");
+    println!("mcaimem_store: Pallas == Rust with shared mask OK");
+
+    // 3) model accuracy gates
+    let clean = runner.accuracy(StoreVariant::Clean, 0.0, 4, 1)?;
+    anyhow::ensure!(
+        (clean - runner.artifacts.int8_clean_acc).abs() < 0.05,
+        "clean accuracy {clean} drifted from manifest {}",
+        runner.artifacts.int8_clean_acc
+    );
+    println!(
+        "clean accuracy {} matches manifest {} OK",
+        fnum(clean, 4),
+        fnum(runner.artifacts.int8_clean_acc, 4)
+    );
+
+    let enc = runner.accuracy(StoreVariant::Mcaimem, 0.05, 4, 2)?;
+    let noenc = runner.accuracy(StoreVariant::McaimemNoEncoder, 0.05, 4, 2)?;
+    anyhow::ensure!(enc > noenc, "one-enhancement must protect accuracy");
+    println!(
+        "p=5%: with one-enh {} > without {} OK",
+        fnum(enc, 4),
+        fnum(noenc, 4)
+    );
+    println!("selftest OK");
+    Ok(())
+}

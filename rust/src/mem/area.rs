@@ -1,0 +1,147 @@
+//! Layout-area model (Table I ratios, Fig. 13 bank layouts, the 48 %
+//! headline).
+//!
+//! Cell areas come from the circuit layer ([`crate::circuit`]); this module
+//! composes them into arrays, banks and macros with a peripheral-overhead
+//! factor (decoders, sense amps, write drivers, control). The paper's 48 %
+//! reduction is a *cell-dominated* comparison of equal-capacity 16 KB banks,
+//! so the peripheral factor is applied symmetrically; MCAIMem's extras
+//! (reference-voltage + refresh controller, one-enhancement encoder) are
+//! charged explicitly and shown to be negligible, as in §III-A1.
+
+use super::MemKind;
+use crate::circuit::{edram1t1c, edram2t, edram3t, sram6t};
+use crate::device::TechNode;
+use crate::encode::one_enhancement::ENCODER_COST_45NM;
+
+/// Fraction of a memory macro spent on peripheral circuitry (row/col
+/// decoders, S/A stripe, write drivers, timing). Representative of compiled
+/// SRAM macros at this capacity.
+pub const PERIPHERY_FRAC: f64 = 0.25;
+
+/// Relative cell area (vs 6T SRAM = 1.0) for each comparable kind.
+pub fn cell_area_rel(kind: MemKind) -> f64 {
+    match kind {
+        MemKind::Sram6t => 1.0,
+        MemKind::Edram1t1c => edram1t1c::AREA_REL,
+        MemKind::Edram3t => edram3t::AREA_REL,
+        MemKind::Edram2t => edram2t::CONV_AREA_REL,
+        // per byte: 1 SRAM + 7 widened 2T cells, averaged per bit
+        MemKind::Mcaimem => {
+            (1.0 + 7.0 * edram2t::MCAIMEM_AREA_REL) / 8.0
+        }
+        // RRAM crossbar bit-cell (4F² ideal, ~0.1× SRAM with select device)
+        MemKind::Rram => 0.10,
+    }
+}
+
+/// Area model for a memory macro of `bytes` capacity on `tech`.
+#[derive(Clone, Debug)]
+pub struct AreaModel {
+    pub tech: TechNode,
+}
+
+impl AreaModel {
+    pub fn lp45() -> Self {
+        AreaModel { tech: TechNode::lp45() }
+    }
+
+    pub fn lp65() -> Self {
+        AreaModel { tech: TechNode::lp65() }
+    }
+
+    /// Area of the cell array only (m²).
+    pub fn array_area(&self, kind: MemKind, bytes: usize) -> f64 {
+        let sram_cell = sram6t::AREA_F2 * self.tech.f2_area;
+        (bytes * 8) as f64 * cell_area_rel(kind) * sram_cell
+    }
+
+    /// Full macro area including periphery and, for MCAIMem, the encoder +
+    /// V_REF/refresh controller overhead (m²).
+    pub fn macro_area(&self, kind: MemKind, bytes: usize) -> f64 {
+        let array = self.array_area(kind, bytes);
+        let periph = array * PERIPHERY_FRAC;
+        let extras = match kind {
+            MemKind::Mcaimem => {
+                // encoder/decoder (35.2 µm² per macro) + V_REF DAC & refresh
+                // FSM (charged at 2× the encoder as a conservative bound)
+                3.0 * ENCODER_COST_45NM.area_um2 * 1e-12
+            }
+            _ => 0.0,
+        };
+        array + periph + extras
+    }
+
+    /// The Fig. 13 comparison: area of a 16 KB bank.
+    pub fn bank16k_area(&self, kind: MemKind) -> f64 {
+        self.macro_area(kind, 16 * 1024)
+    }
+
+    /// Area reduction of MCAIMem vs SRAM at equal capacity — the headline.
+    pub fn mcaimem_reduction(&self, bytes: usize) -> f64 {
+        1.0 - self.macro_area(MemKind::Mcaimem, bytes) / self.macro_area(MemKind::Sram6t, bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::MIB;
+
+    #[test]
+    fn headline_48pct_reduction() {
+        let m = AreaModel::lp45();
+        for bytes in [16 * 1024, MIB] {
+            let red = m.mcaimem_reduction(bytes);
+            assert!((red - 0.48).abs() < 0.005, "reduction={red} at {bytes}B");
+        }
+    }
+
+    #[test]
+    fn table1_cell_ordering() {
+        // 1T1C < 3T < 2T < MCAIMem-mixed < SRAM
+        let order = [
+            MemKind::Edram1t1c,
+            MemKind::Edram3t,
+            MemKind::Edram2t,
+            MemKind::Mcaimem,
+            MemKind::Sram6t,
+        ];
+        for w in order.windows(2) {
+            assert!(
+                cell_area_rel(w[0]) < cell_area_rel(w[1]),
+                "{:?} < {:?}",
+                w[0],
+                w[1]
+            );
+        }
+    }
+
+    #[test]
+    fn encoder_area_negligible() {
+        let m = AreaModel::lp45();
+        let with = m.macro_area(MemKind::Mcaimem, 108 * 1024);
+        let array = m.array_area(MemKind::Mcaimem, 108 * 1024) * (1.0 + PERIPHERY_FRAC);
+        let overhead = (with - array) / with;
+        // paper §III-A1 quotes 0.004 % against its (larger) SRAM-referenced
+        // macro; on our tighter layout model the bound is still ≤0.1 %
+        assert!(overhead < 1e-3, "overhead={overhead}");
+    }
+
+    #[test]
+    fn area_scales_linearly_with_capacity() {
+        let m = AreaModel::lp45();
+        let a1 = m.array_area(MemKind::Sram6t, 16 * 1024);
+        let a64 = m.array_area(MemKind::Sram6t, MIB);
+        assert!((a64 / a1 - 64.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sram_1mb_macro_is_milli_mm2_scale() {
+        // sanity: 1 MB of 0.324 µm² cells ≈ 2.7 mm² array + periphery
+        let m = AreaModel::lp45();
+        let a = m.macro_area(MemKind::Sram6t, MIB);
+        let mm2 = a / 1e-6;
+        assert!(mm2 > 2.0 && mm2 < 5.0, "area={mm2} mm²");
+    }
+}

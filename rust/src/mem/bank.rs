@@ -1,0 +1,136 @@
+//! Bank geometry and address mapping.
+//!
+//! The paper's Fig. 13 layout: a 1 MB buffer is 64 banks of 16 KB; each bank
+//! is organized as rows of mixed-cell bytes (1 sign bit in the SRAM column
+//! group, 7 magnitude bits in the eDRAM column groups). Refresh is issued
+//! per row (§III-C "a refresh operation must be performed on each row of
+//! MCAIMem within 12.57 µs").
+
+/// Geometry of one bank.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BankGeometry {
+    pub bytes: usize,
+    pub rows: usize,
+    /// Bytes per row (columns / 8 bit-planes).
+    pub row_bytes: usize,
+}
+
+impl BankGeometry {
+    /// The paper's 16 KB bank: 256 rows × 64 bytes.
+    pub fn bank16k() -> Self {
+        BankGeometry { bytes: 16 * 1024, rows: 256, row_bytes: 64 }
+    }
+
+    pub fn new(bytes: usize, rows: usize) -> Self {
+        assert!(bytes % rows == 0, "rows must divide capacity");
+        BankGeometry { bytes, rows, row_bytes: bytes / rows }
+    }
+
+    /// Row index of a byte address within this bank.
+    #[inline]
+    pub fn row_of(&self, addr: usize) -> usize {
+        (addr / self.row_bytes) % self.rows
+    }
+}
+
+/// A multi-bank memory map.
+#[derive(Clone, Copy, Debug)]
+pub struct MemoryMap {
+    pub bank: BankGeometry,
+    pub banks: usize,
+}
+
+impl MemoryMap {
+    /// The paper's 1 MB buffer: 64 × 16 KB banks.
+    pub fn mb1() -> Self {
+        MemoryMap { bank: BankGeometry::bank16k(), banks: 64 }
+    }
+
+    /// A buffer of arbitrary capacity built from 16 KB banks (rounded up) —
+    /// how the Eyeriss (108 KB ⇒ 7 banks) and TPUv1 (8 MB ⇒ 512 banks)
+    /// configurations are assembled.
+    pub fn with_capacity(bytes: usize) -> Self {
+        let bank = BankGeometry::bank16k();
+        MemoryMap { bank, banks: bytes.div_ceil(bank.bytes) }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.bank.bytes * self.banks
+    }
+
+    pub fn total_rows(&self) -> usize {
+        self.bank.rows * self.banks
+    }
+
+    /// Decompose a flat byte address into (bank, row, byte-in-row).
+    #[inline]
+    pub fn locate(&self, addr: usize) -> (usize, usize, usize) {
+        assert!(addr < self.capacity(), "address {addr} out of range");
+        let bank = addr / self.bank.bytes;
+        let within = addr % self.bank.bytes;
+        (bank, within / self.bank.row_bytes, within % self.bank.row_bytes)
+    }
+
+    /// The per-row refresh interval that meets a whole-array refresh period
+    /// `t_ref`: the paper's "ordinary refresh cycle interval is calculated by
+    /// dividing the refresh time by the number of rows" (§III-C). Banks
+    /// refresh in parallel (one row per bank per slot).
+    pub fn row_refresh_interval(&self, t_ref: f64) -> f64 {
+        t_ref / self.bank.rows as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_1mb_geometry() {
+        let m = MemoryMap::mb1();
+        assert_eq!(m.banks, 64);
+        assert_eq!(m.capacity(), 1024 * 1024);
+        assert_eq!(m.bank.rows, 256);
+        assert_eq!(m.bank.row_bytes, 64);
+    }
+
+    #[test]
+    fn eyeriss_and_tpu_capacities() {
+        let ey = MemoryMap::with_capacity(108 * 1024);
+        assert_eq!(ey.banks, 7); // 108KB → 7 × 16KB
+        assert!(ey.capacity() >= 108 * 1024);
+        let tpu = MemoryMap::with_capacity(8 * 1024 * 1024);
+        assert_eq!(tpu.banks, 512);
+    }
+
+    #[test]
+    fn locate_roundtrip() {
+        let m = MemoryMap::mb1();
+        for addr in [0, 63, 64, 16 * 1024 - 1, 16 * 1024, 1024 * 1024 - 1] {
+            let (b, r, c) = m.locate(addr);
+            let back = b * m.bank.bytes + r * m.bank.row_bytes + c;
+            assert_eq!(back, addr);
+            assert!(b < m.banks && r < m.bank.rows && c < m.bank.row_bytes);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn locate_rejects_out_of_range() {
+        MemoryMap::mb1().locate(1024 * 1024);
+    }
+
+    #[test]
+    fn refresh_interval_division() {
+        let m = MemoryMap::mb1();
+        let iv = m.row_refresh_interval(12.57e-6);
+        assert!((iv - 12.57e-6 / 256.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn row_of_wraps_within_bank() {
+        let g = BankGeometry::bank16k();
+        assert_eq!(g.row_of(0), 0);
+        assert_eq!(g.row_of(64), 1);
+        assert_eq!(g.row_of(16 * 1024), 0);
+    }
+}

@@ -1,0 +1,292 @@
+//! Energy characterization — Table II and the 1:7 mixed-cell composition.
+//!
+//! Table II (1 MB designs, 45 nm post-layout SPICE in the paper; the cards
+//! here carry those published numbers):
+//!
+//! | eRAM       | static (mW)      | read (pJ/B)         | write (pJ/B)        |
+//! |------------|------------------|---------------------|---------------------|
+//! | 6T SRAM    | 19.29            | 0.08                | 0.16                |
+//! | 2T eDRAM   | 0.84 … 5.03      | 0.00016 … 0.14      | 0.00016 … 0.0184    |
+//! | MCAIMem    | 3.15 … 6.82      | 0.01014 … 0.1325    | 0.02014 … 0.0361    |
+//!
+//! The asymmetric 2T bounds are data-dependent: *min* is an all-ones array
+//! (bit-1 is held at VDD by leakage: nearly free), *max* all-zeros (bit-0
+//! leaks and must be driven). The MCAIMem row is exactly
+//! `(1·SRAM + 7·eDRAM)/8` — verified by unit + property tests, which is how
+//! the paper's own numbers compose.
+//!
+//! Access-energy unit: Table II's pJ figures are taken **per byte access**
+//! (one 8-bit word through the column path). This is the interpretation
+//! under which the paper's system-level results reproduce: per *bit* the
+//! refresh stream of a 1 MB array at 12.57 µs would alone exceed the SRAM
+//! macro's entire static power, contradicting Fig. 15. Refresh senses only
+//! the 7 eDRAM planes (the SRAM plane needs none), so a refresh pass costs
+//! 7/8 of an eDRAM read per byte — and the conventional 2T additionally
+//! pays the write-back the CVSA avoids (§III-B3).
+
+use super::MemKind;
+use crate::util::units::{MIB, PICO, MILLI};
+
+/// Data-value-dependent quantity: value at all-ones vs all-zeros, linearly
+/// interpolated by the ones fraction (each cell contributes independently).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Asym {
+    pub at_ones: f64,
+    pub at_zeros: f64,
+}
+
+impl Asym {
+    pub const fn symmetric(v: f64) -> Self {
+        Asym { at_ones: v, at_zeros: v }
+    }
+
+    /// Value at a given fraction of one-bits.
+    pub fn at(&self, ones_frac: f64) -> f64 {
+        debug_assert!((0.0..=1.0 + 1e-9).contains(&ones_frac));
+        self.at_zeros + (self.at_ones - self.at_zeros) * ones_frac
+    }
+
+    pub fn min(&self) -> f64 {
+        self.at_ones.min(self.at_zeros)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.at_ones.max(self.at_zeros)
+    }
+
+    fn scale(&self, k: f64) -> Asym {
+        Asym { at_ones: self.at_ones * k, at_zeros: self.at_zeros * k }
+    }
+
+    fn blend(&self, other: &Asym, w_self: f64) -> Asym {
+        Asym {
+            at_ones: self.at_ones * w_self + other.at_ones * (1.0 - w_self),
+            at_zeros: self.at_zeros * w_self + other.at_zeros * (1.0 - w_self),
+        }
+    }
+}
+
+/// Energy card for one memory kind, normalized to a 1 MB macro.
+#[derive(Clone, Debug)]
+pub struct EnergyCard {
+    pub kind: MemKind,
+    /// Static power of a 1 MB macro (W), data-dependent.
+    pub static_w_per_mb: Asym,
+    /// Read energy per byte access (J), data-dependent.
+    pub read_j_per_byte: Asym,
+    /// Write energy per byte access (J), data-dependent.
+    pub write_j_per_byte: Asym,
+    /// Refresh period at the operating point (s); `None` = no refresh.
+    pub refresh_period: Option<f64>,
+}
+
+/// Fraction of the mixed row that is SRAM (1 of 8 bits — the sign bit).
+pub const SRAM_SHARE: f64 = 1.0 / 8.0;
+
+impl EnergyCard {
+    /// Table II column 1: 6T SRAM.
+    pub fn sram() -> Self {
+        EnergyCard {
+            kind: MemKind::Sram6t,
+            static_w_per_mb: Asym::symmetric(19.29 * MILLI),
+            read_j_per_byte: Asym::symmetric(0.08 * PICO),
+            write_j_per_byte: Asym::symmetric(0.16 * PICO),
+            refresh_period: None,
+        }
+    }
+
+    /// Table II column 2: the asymmetric 2T eDRAM (conventional sensing —
+    /// C-S/A with a 1.3 µs refresh period; see DESIGN.md §4 for why the
+    /// paper's "from 1.3 µs to 12.57 µs" extension fixes this baseline).
+    pub fn edram2t() -> Self {
+        EnergyCard {
+            kind: MemKind::Edram2t,
+            static_w_per_mb: Asym { at_ones: 0.84 * MILLI, at_zeros: 5.03 * MILLI },
+            read_j_per_byte: Asym { at_ones: 0.00016 * PICO, at_zeros: 0.14 * PICO },
+            write_j_per_byte: Asym { at_ones: 0.00016 * PICO, at_zeros: 0.0184 * PICO },
+            refresh_period: Some(1.3e-6),
+        }
+    }
+
+    /// The mixed-cell memory at a given V_REF: the exact 1:7 composition of
+    /// the SRAM and 2T cards, refresh period from the flip model.
+    pub fn mcaimem(vref: f64) -> Self {
+        let s = Self::sram();
+        let e = Self::edram2t();
+        let flip = crate::circuit::flip_model::FlipModel::mcaimem_85c();
+        EnergyCard {
+            kind: MemKind::Mcaimem,
+            static_w_per_mb: e.static_w_per_mb.blend(&s.static_w_per_mb, 1.0 - SRAM_SHARE),
+            read_j_per_byte: e.read_j_per_byte.blend(&s.read_j_per_byte, 1.0 - SRAM_SHARE),
+            write_j_per_byte: e.write_j_per_byte.blend(&s.write_j_per_byte, 1.0 - SRAM_SHARE),
+            refresh_period: Some(
+                flip.refresh_period(vref, crate::circuit::flip_model::MAX_FLIP_FOR_DNN),
+            ),
+        }
+    }
+
+    /// MCAIMem at the paper's chosen operating point (V_REF = 0.8 V).
+    pub fn mcaimem_default() -> Self {
+        Self::mcaimem(0.8)
+    }
+
+    /// Static power (W) for a buffer of `bytes` holding data with the given
+    /// ones fraction. Scales linearly with capacity from the 1 MB macro —
+    /// exactly the paper's §V-B procedure ("reducing it to one-tenth … /
+    /// augmented … by a factor of eight").
+    pub fn static_power(&self, bytes: usize, ones_frac: f64) -> f64 {
+        self.static_w_per_mb.at(ones_frac) * bytes as f64 / MIB as f64
+    }
+
+    /// Read energy (J) for `bytes` bytes of data with the given ones frac.
+    pub fn read_energy(&self, bytes: usize, ones_frac: f64) -> f64 {
+        self.read_j_per_byte.at(ones_frac) * bytes as f64
+    }
+
+    /// Write energy (J) for `bytes` bytes.
+    pub fn write_energy(&self, bytes: usize, ones_frac: f64) -> f64 {
+        self.write_j_per_byte.at(ones_frac) * bytes as f64
+    }
+
+    /// Energy of one refresh pass over `bytes` bytes. Refresh only touches
+    /// the eDRAM cells: for MCAIMem that is 7 of 8 bit-planes read through
+    /// the CVSA (read *is* the write-back, §III-B3); the conventional 2T
+    /// refreshes every bit and pays an explicit write-back after its C-S/A
+    /// read (§II-A2).
+    pub fn refresh_pass_energy(&self, bytes: usize, ones_frac: f64) -> f64 {
+        let edram = EnergyCard::edram2t();
+        match self.kind {
+            MemKind::Edram2t => {
+                self.read_energy(bytes, ones_frac) + self.write_energy(bytes, ones_frac)
+            }
+            MemKind::Mcaimem => edram.read_energy(bytes, ones_frac) * 7.0 / 8.0,
+            _ => self.read_energy(bytes, ones_frac),
+        }
+    }
+
+    /// Refresh power (W) for a buffer of `bytes` with data `ones_frac`,
+    /// refreshing every `refresh_period`. Zero for static memories.
+    pub fn refresh_power(&self, bytes: usize, ones_frac: f64) -> f64 {
+        match self.refresh_period {
+            None => 0.0,
+            Some(t) => self.refresh_pass_energy(bytes, ones_frac) / t,
+        }
+    }
+
+    /// Effective ones fraction *inside the storage array*: for MCAIMem, only
+    /// the 7 eDRAM bits are data-dependent (the SRAM bit is symmetric), so
+    /// the caller passes the eDRAM-plane ones fraction directly; for uniform
+    /// arrays the overall fraction. Helper for Table II printing.
+    pub fn table2_row(&self) -> (f64, f64, f64, f64, f64, f64) {
+        (
+            self.static_w_per_mb.min() / MILLI,
+            self.static_w_per_mb.max() / MILLI,
+            self.read_j_per_byte.min() / PICO,
+            self.read_j_per_byte.max() / PICO,
+            self.write_j_per_byte.min() / PICO,
+            self.write_j_per_byte.max() / PICO,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const EPS: f64 = 1e-9;
+
+    #[test]
+    fn table2_mcaimem_is_exact_composition() {
+        // paper Table II MCAIMem row: static 3.15–6.82 mW,
+        // read 0.01014–0.1325 pJ, write 0.02014–0.0361 pJ
+        let m = EnergyCard::mcaimem_default();
+        let (smin, smax, rmin, rmax, wmin, wmax) = m.table2_row();
+        assert!((smin - 3.15).abs() < 0.01, "smin={smin}");
+        assert!((smax - 6.82).abs() < 0.01, "smax={smax}");
+        assert!((rmin - 0.01014).abs() < 1e-5, "rmin={rmin}");
+        assert!((rmax - 0.1325).abs() < 1e-4, "rmax={rmax}");
+        assert!((wmin - 0.02014).abs() < 1e-5, "wmin={wmin}");
+        assert!((wmax - 0.0361).abs() < 1e-4, "wmax={wmax}");
+    }
+
+    #[test]
+    fn static_power_scaling_eyeriss_and_tpu() {
+        // §V-B: Eyeriss 108 KB = 1MB × 108/1024; TPUv1 8 MB = ×8
+        let s = EnergyCard::sram();
+        let p108 = s.static_power(108 * 1024, 0.5);
+        assert!((p108 / (19.29e-3 * 108.0 / 1024.0) - 1.0).abs() < EPS);
+        let p8m = s.static_power(8 * MIB, 0.5);
+        assert!((p8m / (19.29e-3 * 8.0) - 1.0).abs() < EPS);
+    }
+
+    #[test]
+    fn edram_static_power_falls_with_ones() {
+        let e = EnergyCard::edram2t();
+        let all0 = e.static_power(MIB, 0.0);
+        let all1 = e.static_power(MIB, 1.0);
+        assert!((all0 - 5.03e-3).abs() < 1e-6);
+        assert!((all1 - 0.84e-3).abs() < 1e-6);
+        // paper: 2T offers 5.26× lower static power min-case… vs SRAM at 65nm;
+        // at 45nm Table II the all-ones ratio is 19.29/0.84 ≈ 23×
+        assert!(EnergyCard::sram().static_power(MIB, 0.5) / all1 > 20.0);
+    }
+
+    #[test]
+    fn mcaimem_refresh_period_is_12_57us() {
+        let m = EnergyCard::mcaimem_default();
+        let t = m.refresh_period.unwrap();
+        assert!((t - 12.57e-6).abs() / 12.57e-6 < 1e-3, "t={t}");
+    }
+
+    #[test]
+    fn refresh_power_vref_lever() {
+        // Fig. 15a: V_REF=0.8 cuts refresh power ~10× vs V_REF=0.5
+        let hi = EnergyCard::mcaimem(0.8);
+        let lo = EnergyCard::mcaimem(0.5);
+        let f = 0.8; // encoded DNN data ones fraction
+        let ratio = lo.refresh_power(MIB, f) / hi.refresh_power(MIB, f);
+        assert!(ratio > 9.0 && ratio < 10.5, "ratio={ratio}");
+    }
+
+    #[test]
+    fn conventional_edram_refresh_costs_double_ops() {
+        let e = EnergyCard::edram2t();
+        let m = EnergyCard::mcaimem_default();
+        // per pass, conventional pays read+write-back on all 8 planes;
+        // MCAIMem reads only its 7 eDRAM planes (refresh-by-read)
+        let pe = e.refresh_pass_energy(MIB, 0.5);
+        assert!((pe - (e.read_energy(MIB, 0.5) + e.write_energy(MIB, 0.5))).abs() < EPS);
+        let pm = m.refresh_pass_energy(MIB, 0.5);
+        assert!((pm - e.read_energy(MIB, 0.5) * 7.0 / 8.0).abs() < EPS);
+        // the refresh *stream* must stay well under the SRAM macro's static
+        // power — the sanity check that pins the per-byte interpretation
+        assert!(m.refresh_power(MIB, 0.8) < 0.25 * EnergyCard::sram().static_power(MIB, 0.8));
+    }
+
+    #[test]
+    fn sram_never_refreshes() {
+        let s = EnergyCard::sram();
+        assert_eq!(s.refresh_power(MIB, 0.3), 0.0);
+        assert!(s.refresh_period.is_none());
+    }
+
+    #[test]
+    fn one_enhancement_reduces_mcaimem_energy() {
+        // raising the ones fraction (what the encoder does) must cut both
+        // static and refresh power of the mixed array
+        let m = EnergyCard::mcaimem_default();
+        assert!(m.static_power(MIB, 0.8) < m.static_power(MIB, 0.5));
+        assert!(m.refresh_power(MIB, 0.8) < m.refresh_power(MIB, 0.5));
+        assert!(m.read_energy(MIB, 0.8) < m.read_energy(MIB, 0.5));
+    }
+
+    #[test]
+    fn asym_interpolation_endpoints_and_midpoint() {
+        let a = Asym { at_ones: 1.0, at_zeros: 3.0 };
+        assert_eq!(a.at(1.0), 1.0);
+        assert_eq!(a.at(0.0), 3.0);
+        assert_eq!(a.at(0.5), 2.0);
+        assert_eq!(a.min(), 1.0);
+        assert_eq!(a.max(), 3.0);
+    }
+}

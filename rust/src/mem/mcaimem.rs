@@ -1,0 +1,455 @@
+//! The functional MCAIMem array — real bytes, real bit-planes, physical
+//! 0→1 retention flips, refresh-by-read (paper Fig. 4/6, §III).
+//!
+//! Storage layout follows the paper's mapping (Fig. 6): bit 7 of every byte
+//! (the sign/control bit of the one-enhancement code) lives in the 6T SRAM
+//! plane and never corrupts; bits 6..0 live in 2T eDRAM planes whose stored
+//! zeros drift toward one with the calibrated flip law. All data movement
+//! passes through the one-enhancement encoder in front of the array
+//! (toggleable, so the paper's with/without-encoder ablations run on the
+//! same machinery).
+//!
+//! Aging is tracked per row. Any access that activates a row (read, write,
+//! or refresh slot) senses every column through the CVSA and writes the
+//! sensed values back (§III-B3's refresh-by-read), so flips that happened
+//! before the access are *committed* — exactly the cumulative-error
+//! behaviour the paper injects in §IV-A.
+//!
+//! Leakage is a **persistent per-cell property**: each eDRAM cell draws a
+//! z-score once (quantized to 8 bits) representing its lognormal leakage
+//! multiple. A stored 0 flips when its staleness `dt` satisfies
+//! `mult > t_nom(V_REF)/dt` ⇔ `z > ln(t_nom/dt)/σ` — so a refresh cadence
+//! faster than the weakest resident cell keeps data alive *forever*
+//! (the property a resampling model would destroy: under independent
+//! redraws every cell dies after enough refresh windows). Unwritten cells
+//! idle at bit-1, the state pull-up leakage drives them to physically.
+
+use super::bank::MemoryMap;
+use super::energy::EnergyCard;
+use crate::circuit::flip_model::FlipModel;
+use crate::util::rng::Pcg64;
+
+/// Energy/event meter for one array.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct EnergyMeter {
+    pub read_j: f64,
+    pub write_j: f64,
+    pub refresh_j: f64,
+    pub static_j: f64,
+    pub reads: u64,
+    pub writes: u64,
+    pub refreshes: u64,
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+    pub flips_committed: u64,
+}
+
+impl EnergyMeter {
+    pub fn total_j(&self) -> f64 {
+        self.read_j + self.write_j + self.refresh_j + self.static_j
+    }
+}
+
+/// The functional mixed-cell memory.
+pub struct MixedCellMemory {
+    pub map: MemoryMap,
+    pub flip: FlipModel,
+    pub vref: f64,
+    pub card: EnergyCard,
+    /// One-enhancement encoder in front of the array (paper default: on).
+    pub encode_enabled: bool,
+    /// When false the eDRAM planes are error-free (used to emulate the SRAM
+    /// baseline on identical plumbing).
+    pub inject_enabled: bool,
+    /// Bit-planes, LSB-first; plane 7 is the SRAM (sign) plane. Packed
+    /// 64 bytes/word per plane.
+    planes: [Vec<u64>; 8],
+    /// Per-cell quantized leakage z-score, one byte per eDRAM cell
+    /// (`leak_z[plane][addr]`), mapping q ∈ [0,255] → z ∈ [−4σ, +4σ].
+    leak_z: [Vec<u8>; 7],
+    /// Last row-activation time, indexed bank*rows + row (s).
+    row_time: Vec<f64>,
+    /// Running ones count over the 7 eDRAM planes (static-power estimate).
+    edram_ones: u64,
+    pub meter: EnergyMeter,
+    now: f64,
+}
+
+/// Quantization of the per-cell z-score: q ∈ [0, 255] ↔ z ∈ [−4, 4].
+#[inline]
+fn z_to_q(z: f64) -> u8 {
+    (((z + 4.0) / 8.0 * 255.0).round()).clamp(0.0, 255.0) as u8
+}
+
+impl MixedCellMemory {
+    /// A paper-default array (V_REF = 0.8, encoder on) of `bytes` capacity.
+    pub fn new(bytes: usize, seed: u64) -> Self {
+        Self::with_vref(bytes, 0.8, seed)
+    }
+
+    pub fn with_vref(bytes: usize, vref: f64, seed: u64) -> Self {
+        let map = MemoryMap::with_capacity(bytes);
+        let cap = map.capacity();
+        let words = cap.div_ceil(64);
+        let mut rng = Pcg64::new(seed);
+        // Sample each cell's process corner once (Pelgrom mismatch is a
+        // manufacturing property, not a per-access event). Sampling is via
+        // a 4096-entry inverse-CDF table on 12-bit uniforms — §Perf: the
+        // Box–Muller path made 8MB-buffer construction ~10× slower; 12-bit
+        // quantile resolution is finer than the 8-bit storage quantization.
+        let icdf: Vec<u8> = (0..4096)
+            .map(|i| z_to_q(crate::util::stats::normal_quantile((i as f64 + 0.5) / 4096.0)))
+            .collect();
+        let leak_z: [Vec<u8>; 7] = std::array::from_fn(|_| {
+            let mut v = Vec::with_capacity(cap);
+            let mut i = 0;
+            while i < cap {
+                // five 12-bit draws per u64
+                let r = rng.next_u64();
+                for k in 0..5 {
+                    if i >= cap {
+                        break;
+                    }
+                    v.push(icdf[((r >> (12 * k)) & 0xfff) as usize]);
+                    i += 1;
+                }
+            }
+            v
+        });
+        MixedCellMemory {
+            map,
+            flip: FlipModel::mcaimem_85c(),
+            vref,
+            card: EnergyCard::mcaimem(vref),
+            encode_enabled: true,
+            inject_enabled: true,
+            // power-on state: pull-up leakage parks every cell at bit-1
+            planes: std::array::from_fn(|_| vec![u64::MAX; words]),
+            leak_z,
+            row_time: vec![0.0; map.total_rows()],
+            edram_ones: (cap * 7) as u64,
+            meter: EnergyMeter::default(),
+            now: 0.0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.map.capacity()
+    }
+
+    /// Current fraction of ones in the eDRAM planes (drives static power).
+    pub fn edram_ones_frac(&self) -> f64 {
+        self.edram_ones as f64 / (self.capacity() * 7) as f64
+    }
+
+    /// Advance the wall clock, integrating static energy. Monotone.
+    pub fn advance_to(&mut self, now: f64) {
+        assert!(now + 1e-15 >= self.now, "time must be monotone");
+        let dt = now - self.now;
+        if dt > 0.0 {
+            self.meter.static_j +=
+                self.card.static_power(self.capacity(), self.edram_ones_frac()) * dt;
+        }
+        self.now = now;
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    #[inline]
+    fn get_byte_raw(&self, addr: usize) -> u8 {
+        let (w, b) = (addr / 64, addr % 64);
+        let mut v = 0u8;
+        for (p, plane) in self.planes.iter().enumerate() {
+            v |= (((plane[w] >> b) & 1) as u8) << p;
+        }
+        v
+    }
+
+    #[inline]
+    fn set_byte_raw(&mut self, addr: usize, value: u8) {
+        let (w, b) = (addr / 64, addr % 64);
+        let mask = 1u64 << b;
+        for (p, plane) in self.planes.iter_mut().enumerate() {
+            let old = (plane[w] & mask) != 0;
+            let new = (value >> p) & 1 == 1;
+            if old != new {
+                plane[w] ^= mask;
+                if p < 7 {
+                    // maintain the eDRAM ones census
+                    if new {
+                        self.edram_ones += 1;
+                    } else {
+                        self.edram_ones -= 1;
+                    }
+                }
+            }
+        }
+    }
+
+    /// The z-score threshold above which a cell's stored 0 has crossed
+    /// V_REF after `dt` seconds: `z > ln(t_nom/dt)/σ`.
+    fn z_threshold(&self, dt: f64) -> f64 {
+        let t_nom = self
+            .flip
+            .leak
+            .charge_time(self.vref, self.flip.width_mult, self.flip.temp_c);
+        (t_nom / dt).ln() / self.flip.leak.sigma_ln
+    }
+
+    /// Activate a row at the current time: age its eDRAM bits (a stored 0
+    /// flips iff the cell's *persistent* leakage corner exceeds the
+    /// staleness threshold), commit the sensed values, and reset the row
+    /// timestamp (refresh-by-read).
+    fn touch_row(&mut self, bank: usize, row: usize) {
+        let idx = bank * self.map.bank.rows + row;
+        let dt = self.now - self.row_time[idx];
+        self.row_time[idx] = self.now;
+        if !self.inject_enabled || dt <= 0.0 {
+            return;
+        }
+        let z_thr = self.z_threshold(dt);
+        if z_thr >= 4.0 {
+            return; // even a +4σ cell holds this long
+        }
+        let q_thr = z_to_q(z_thr);
+        let start = bank * self.map.bank.bytes + row * self.map.bank.row_bytes;
+        let end = start + self.map.bank.row_bytes;
+        // eDRAM planes only (0..7): weak cells' zeros flip to ones.
+        // Word-level scan (§Perf): rows are word-aligned, and encoded DNN
+        // data plus the all-ones idle state make zero bits sparse — test a
+        // whole 64-cell word at once and only visit its zero positions.
+        debug_assert!(start % 64 == 0 && end % 64 == 0);
+        for w in start / 64..end / 64 {
+            let base = w * 64;
+            for (plane, zplane) in self.planes[..7].iter_mut().zip(self.leak_z.iter()) {
+                let mut zeros = !plane[w];
+                while zeros != 0 {
+                    let b = zeros.trailing_zeros() as usize;
+                    zeros &= zeros - 1;
+                    if zplane[base + b] > q_thr {
+                        plane[w] |= 1u64 << b;
+                        self.edram_ones += 1;
+                        self.meter.flips_committed += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    fn touch_range(&mut self, addr: usize, len: usize) {
+        if len == 0 {
+            return;
+        }
+        let first = addr / self.map.bank.row_bytes;
+        let last = (addr + len - 1) / self.map.bank.row_bytes;
+        for flat_row in first..=last {
+            let bank = flat_row / self.map.bank.rows;
+            let row = flat_row % self.map.bank.rows;
+            self.touch_row(bank, row);
+        }
+    }
+
+    /// Write `data` at `addr`, time `now`. Data is encoded (if enabled)
+    /// before hitting the array, as in Fig. 4.
+    pub fn write(&mut self, addr: usize, data: &[u8], now: f64) {
+        assert!(addr + data.len() <= self.capacity(), "write out of range");
+        self.advance_to(now);
+        self.touch_range(addr, data.len());
+        let mut ones = 0u64;
+        for (i, &raw) in data.iter().enumerate() {
+            let stored = if self.encode_enabled {
+                crate::encode::one_enhancement::encode_byte(raw)
+            } else {
+                raw
+            };
+            ones += (stored & 0x7f).count_ones() as u64;
+            self.set_byte_raw(addr + i, stored);
+        }
+        let frac = ones as f64 / (data.len() * 7) as f64;
+        self.meter.write_j += self.card.write_energy(data.len(), frac);
+        self.meter.writes += 1;
+        self.meter.bytes_written += data.len() as u64;
+    }
+
+    /// Read `len` bytes at `addr`, time `now` — decoded, with any retention
+    /// flips the elapsed time produced (and committed back to the array).
+    pub fn read(&mut self, addr: usize, len: usize, now: f64) -> Vec<u8> {
+        assert!(addr + len <= self.capacity(), "read out of range");
+        self.advance_to(now);
+        self.touch_range(addr, len);
+        let mut out = Vec::with_capacity(len);
+        let mut ones = 0u64;
+        for i in 0..len {
+            let stored = self.get_byte_raw(addr + i);
+            ones += (stored & 0x7f).count_ones() as u64;
+            out.push(if self.encode_enabled {
+                crate::encode::one_enhancement::decode_byte(stored)
+            } else {
+                stored
+            });
+        }
+        let frac = ones as f64 / (len * 7).max(1) as f64;
+        self.meter.read_j += self.card.read_energy(len, frac);
+        self.meter.reads += 1;
+        self.meter.bytes_read += len as u64;
+        out
+    }
+
+    /// Apply one refresh slot (from [`super::refresh::RefreshController`]):
+    /// activates the row in every bank in parallel.
+    pub fn refresh_row(&mut self, row: usize, now: f64) {
+        self.advance_to(now);
+        for bank in 0..self.map.banks {
+            self.touch_row(bank, row);
+        }
+        let bytes = self.map.bank.row_bytes * self.map.banks;
+        self.meter.refresh_j +=
+            self.card.refresh_pass_energy(bytes, self.edram_ones_frac());
+        self.meter.refreshes += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fresh(bytes: usize) -> MixedCellMemory {
+        MixedCellMemory::new(bytes, 0xBEEF)
+    }
+
+    #[test]
+    fn roundtrip_without_aging_is_exact() {
+        let mut m = fresh(4096);
+        let data: Vec<u8> = (0..=255u8).collect();
+        m.write(100, &data, 1e-9);
+        let back = m.read(100, data.len(), 2e-9);
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn fresh_data_within_refresh_period_is_safe() {
+        let mut m = fresh(4096);
+        let data: Vec<u8> = (0..64).map(|i| i as u8).collect();
+        m.write(0, &data, 0.0);
+        // read just inside the 12.57 µs window: ≤1 % flip per bit-0; with
+        // 64 bytes the expected corruption is < 1 byte, usually zero for
+        // encoded near-zero data (few stored zeros)
+        let back = m.read(0, 64, 12.0e-6);
+        let diff = back.iter().zip(&data).filter(|(a, b)| a != b).count();
+        assert!(diff <= 4, "diff={diff}");
+    }
+
+    #[test]
+    fn stale_data_corrupts_and_errors_are_cumulative() {
+        let mut m = fresh(4096);
+        // store raw zeros with the encoder OFF: stored bytes are 0x00 —
+        // all 7 eDRAM bits are 0 and will flip eventually
+        m.encode_enabled = false;
+        m.write(0, &[0u8; 64], 0.0);
+        let back = m.read(0, 64, 200e-6); // ~16 refresh periods stale
+        let corrupted = back.iter().filter(|&&b| b != 0).count();
+        assert!(corrupted > 56, "corrupted={corrupted}/64");
+        // sign plane (bit 7) never flips
+        assert!(back.iter().all(|&b| b & 0x80 == 0));
+        // errors persist after commit: an immediate re-read returns the
+        // same corrupted values
+        let again = m.read(0, 64, 200.1e-6);
+        assert_eq!(back, again);
+    }
+
+    #[test]
+    fn encoder_protects_near_zero_data() {
+        // the paper's core claim: near-zero DNN data encoded to 1-dominant
+        // form survives staleness that destroys unencoded data
+        let data: Vec<u8> = (0..64u8).map(|i| (i % 5)).collect(); // small positives
+        let stale = 40e-6;
+
+        let mut enc = fresh(4096);
+        enc.write(0, &data, 0.0);
+        let enc_back = enc.read(0, 64, stale);
+        let enc_errs = enc_back.iter().zip(&data).filter(|(a, b)| a != b).count();
+
+        let mut raw = fresh(4096);
+        raw.encode_enabled = false;
+        raw.write(0, &data, 0.0);
+        let raw_back = raw.read(0, 64, stale);
+        let raw_errs = raw_back.iter().zip(&data).filter(|(a, b)| a != b).count();
+
+        assert!(enc_errs < raw_errs, "encoded {enc_errs} vs raw {raw_errs}");
+    }
+
+    #[test]
+    fn refresh_prevents_corruption() {
+        let mut m = fresh(4096);
+        m.encode_enabled = false; // store worst-case zeros
+        m.write(0, &[0u8; 64], 0.0);
+        // refresh row 0 every 6 µs for 120 µs (well inside retention)
+        let mut t = 0.0;
+        for _ in 0..20 {
+            t += 6e-6;
+            m.refresh_row(0, t);
+        }
+        let back = m.read(0, 64, t + 1e-6);
+        let corrupted = back.iter().filter(|&&b| b != 0).count();
+        // each 6 µs window has ~0 flip probability at V_REF 0.8
+        assert!(corrupted <= 1, "corrupted={corrupted}");
+        assert_eq!(m.meter.refreshes, 20);
+    }
+
+    #[test]
+    fn bit1_data_is_immortal() {
+        let mut m = fresh(4096);
+        m.encode_enabled = false;
+        m.write(0, &[0x7f; 64], 0.0); // all eDRAM bits = 1
+        let back = m.read(0, 64, 1.0); // one full second unrefreshed
+        assert!(back.iter().all(|&b| b == 0x7f));
+    }
+
+    #[test]
+    fn meters_accumulate() {
+        let mut m = fresh(4096);
+        m.write(0, &[1, 2, 3, 4], 1e-6);
+        let _ = m.read(0, 4, 2e-6);
+        m.refresh_row(0, 3e-6);
+        assert_eq!(m.meter.writes, 1);
+        assert_eq!(m.meter.reads, 1);
+        assert_eq!(m.meter.refreshes, 1);
+        assert!(m.meter.write_j > 0.0);
+        assert!(m.meter.read_j > 0.0);
+        assert!(m.meter.refresh_j > 0.0);
+        assert!(m.meter.static_j > 0.0);
+        assert_eq!(m.meter.bytes_written, 4);
+    }
+
+    #[test]
+    fn ones_census_tracks_writes() {
+        let mut m = fresh(4096);
+        m.encode_enabled = false;
+        assert_eq!(m.edram_ones_frac(), 1.0); // power-on: everything at 1
+        m.write(0, &[0x00; 64], 1e-9); // clear 7×64 eDRAM bits
+        let expect = 1.0 - (7 * 64) as f64 / (m.capacity() * 7) as f64;
+        assert!((m.edram_ones_frac() - expect).abs() < 1e-12);
+        m.write(0, &[0x7f; 64], 2e-9);
+        assert_eq!(m.edram_ones_frac(), 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn write_bounds_checked() {
+        let mut m = fresh(4096);
+        let cap = m.capacity();
+        m.write(cap - 2, &[0; 4], 0.0);
+    }
+
+    #[test]
+    fn static_energy_integrates_with_time() {
+        let mut m = fresh(16 * 1024);
+        m.advance_to(1e-3); // 1 ms idle at the all-ones power-on state
+        let e = m.meter.static_j;
+        // 16 KB at the all-ones corner: 3.15 mW/MB × (16/1024) MB × 1 ms
+        let expect = 3.15e-3 * (16.0 / 1024.0) * 1e-3;
+        assert!((e - expect).abs() / expect < 0.01, "e={e} expect={expect}");
+    }
+}

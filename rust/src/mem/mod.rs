@@ -1,0 +1,47 @@
+//! The memory subsystem: area/energy characterization, bank organization,
+//! refresh + V_REF control, the functional mixed-cell memory, and the RRAM
+//! baseline.
+//!
+//! * [`area`] — parametric layout-area model (Fig. 13, Table I ratios, the
+//!   48 % headline).
+//! * [`energy`] — Table II characterization cards and the 1:7 composition
+//!   law; data-value-dependent static/read/write energy.
+//! * [`bank`] — 16 KB bank geometry; 1 MB = 64 banks (Fig. 13 caption).
+//! * [`refresh`] — the global periodic row-refresh controller (§III-C).
+//! * [`vref`] — the reference-voltage controller and its refresh-period
+//!   lever (§IV-B).
+//! * [`mcaimem`] — the *functional* mixed-cell memory: real bytes, real
+//!   bit-planes, physical 0→1 flips on the eDRAM plane, refresh-by-read.
+//! * [`rram`] — the non-volatile on-chip-buffer baseline of Fig. 15b.
+
+pub mod area;
+pub mod bank;
+pub mod energy;
+pub mod mcaimem;
+pub mod refresh;
+pub mod rram;
+pub mod vref;
+
+/// The embedded-memory kinds the paper compares.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MemKind {
+    Sram6t,
+    Edram1t1c,
+    Edram3t,
+    Edram2t,
+    Mcaimem,
+    Rram,
+}
+
+impl MemKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            MemKind::Sram6t => "SRAM",
+            MemKind::Edram1t1c => "eDRAM (1T1C)",
+            MemKind::Edram3t => "Symmetric eDRAM (3T)",
+            MemKind::Edram2t => "Asymmetric eDRAM (2T)",
+            MemKind::Mcaimem => "MCAIMem",
+            MemKind::Rram => "RRAM",
+        }
+    }
+}

@@ -1,0 +1,102 @@
+//! The reference-voltage controller (§III-C, §IV-B).
+//!
+//! The CVSA's single-ended eDRAM read compares the bit-line against V_REF.
+//! Raising V_REF widens the voltage band a drifting bit-0 may occupy before
+//! it mis-reads, which extends the refresh period (the flip-probability
+//! model of Fig. 12b) — at no circuit cost beyond the reference DAC. This
+//! controller owns that decision: it maps an accuracy budget (maximum
+//! tolerable 0→1 flip rate, 1 % per §IV-A) to the operating V_REF and the
+//! resulting refresh period.
+
+use crate::circuit::flip_model::{FlipModel, MAX_FLIP_FOR_DNN, VREF_CANDIDATES};
+
+/// Operating point chosen by the controller.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct VrefPoint {
+    pub vref: f64,
+    pub refresh_period: f64,
+    /// Flip probability at exactly one refresh period (= the budget).
+    pub flip_at_period: f64,
+}
+
+/// The reference-voltage controller.
+#[derive(Clone, Debug)]
+pub struct VrefController {
+    pub model: FlipModel,
+    pub max_flip: f64,
+}
+
+impl VrefController {
+    /// Paper configuration: MCAIMem cell at 85 °C, 1 % flip budget.
+    pub fn paper_default() -> Self {
+        VrefController { model: FlipModel::mcaimem_85c(), max_flip: MAX_FLIP_FOR_DNN }
+    }
+
+    /// Evaluate one candidate V_REF.
+    pub fn point(&self, vref: f64) -> VrefPoint {
+        let t = self.model.refresh_period(vref, self.max_flip);
+        VrefPoint { vref, refresh_period: t, flip_at_period: self.max_flip }
+    }
+
+    /// All candidate operating points (the Fig. 15a sweep).
+    pub fn candidates(&self) -> Vec<VrefPoint> {
+        VREF_CANDIDATES.iter().map(|&v| self.point(v)).collect()
+    }
+
+    /// The controller's choice: the candidate maximizing refresh period
+    /// (§IV-B: "we choose a V_REF of 0.8 V to maximize bit-0's refresh
+    /// period and minimize dynamic refresh operations").
+    pub fn choose(&self) -> VrefPoint {
+        self.candidates()
+            .into_iter()
+            .max_by(|a, b| a.refresh_period.partial_cmp(&b.refresh_period).unwrap())
+            .unwrap()
+    }
+
+    /// Adaptive variant: tightest V_REF that still meets a *given* refresh
+    /// period (used when the scheduler wants a fixed refresh cadence and
+    /// asks how much reference margin is available).
+    pub fn vref_for_period(&self, t_ref: f64) -> Option<VrefPoint> {
+        self.candidates()
+            .into_iter()
+            .filter(|p| p.refresh_period >= t_ref)
+            .min_by(|a, b| a.vref.partial_cmp(&b.vref).unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chooses_vref_08_with_12_57us() {
+        let c = VrefController::paper_default();
+        let p = c.choose();
+        assert_eq!(p.vref, 0.8);
+        assert!((p.refresh_period - 12.57e-6).abs() / 12.57e-6 < 1e-3);
+    }
+
+    #[test]
+    fn candidates_cover_paper_sweep() {
+        let c = VrefController::paper_default();
+        let pts = c.candidates();
+        assert_eq!(pts.len(), 4);
+        assert_eq!(pts[0].vref, 0.5);
+        assert!((pts[0].refresh_period - 1.3e-6).abs() / 1.3e-6 < 1e-3);
+        // monotone in vref
+        for w in pts.windows(2) {
+            assert!(w[1].refresh_period > w[0].refresh_period);
+        }
+    }
+
+    #[test]
+    fn vref_for_period_picks_tightest() {
+        let c = VrefController::paper_default();
+        // a 2 µs cadence is satisfiable by 0.6/0.7/0.8 — tightest wins
+        let p = c.vref_for_period(2.0e-6).unwrap();
+        assert!(p.vref < 0.8);
+        assert!(p.refresh_period >= 2.0e-6);
+        // an impossible cadence returns None
+        assert!(c.vref_for_period(1.0).is_none());
+    }
+}

@@ -1,0 +1,314 @@
+//! Circuit-level reports: Tables I–II, Figs. 1, 2, 5, 7, 9, 12, 13.
+
+use std::path::Path;
+
+use crate::circuit::flip_model::{FlipModel, VREF_CANDIDATES};
+use crate::circuit::retention;
+use crate::circuit::snm::{CellMismatch, SnmAnalysis, FS_CORNER};
+use crate::circuit::sram6t::Sram6t;
+use crate::circuit::{edram1t1c, edram2t, edram3t};
+use crate::device::{StorageLeakage, TechNode};
+use crate::encode::one_enhancement::{encode, ENCODER_COST_45NM};
+use crate::encode::stats::{bit_histogram, resnet50_like_weights};
+use crate::mem::area::{cell_area_rel, AreaModel};
+use crate::mem::energy::EnergyCard;
+use crate::mem::MemKind;
+use crate::util::rng::Pcg64;
+use crate::util::table::{fnum, Table};
+use crate::util::units::{to_um2, to_us};
+
+fn mc_n(quick: bool, full: usize) -> usize {
+    if quick {
+        (full / 20).max(500)
+    } else {
+        full
+    }
+}
+
+/// Table I — eRAM comparison at 65 nm.
+pub fn table1() -> Vec<Table> {
+    let mut t = Table::new(
+        "Table I — embedded-RAM comparison at 65nm CMOS (ratios vs 6T SRAM)",
+        &["eRAM type", "Cell size", "Avg. static power", "Refresh", "Leakage", "Extra material"],
+    );
+    let rows: [(&str, f64, f64, &str, &str, &str); 4] = [
+        ("SRAM (6T)", 1.0, 1.0, "No Ref.", "High", "No"),
+        ("eDRAM (1T1C)", edram1t1c::AREA_REL, edram1t1c::STATIC_REL, "Low Freq.", "Low", "Yes"),
+        ("Symmetric eDRAM (3T)", edram3t::AREA_REL, edram3t::STATIC_REL, "High Freq.", "Low", "No"),
+        ("Asymmetric eDRAM (2T)", edram2t::CONV_AREA_REL, edram2t::CONV_STATIC_REL, "High Freq.", "Low", "No"),
+    ];
+    for (name, area, power, refresh, leak, mat) in rows {
+        t.row(vec![
+            name.into(),
+            format!("{}x", fnum(area, 2)),
+            format!("{}x", fnum(power, 2)),
+            refresh.into(),
+            leak.into(),
+            mat.into(),
+        ]);
+    }
+    vec![t]
+}
+
+/// Table II — 1 MB characterization at 45 nm.
+pub fn table2() -> Vec<Table> {
+    let mut t = Table::new(
+        "Table II — characterization of 1MB designs at 45nm (min/max over data patterns)",
+        &["eRAM type", "Static power (mW)", "Read (pJ/B)", "Write (pJ/B)", "Refresh period"],
+    );
+    for card in [EnergyCard::sram(), EnergyCard::edram2t(), EnergyCard::mcaimem_default()] {
+        let (smin, smax, rmin, rmax, wmin, wmax) = card.table2_row();
+        let (s, r, w) = if smin == smax {
+            (fnum(smin, 2), fnum(rmin, 5), fnum(wmin, 5))
+        } else {
+            (
+                format!("{} – {}", fnum(smin, 2), fnum(smax, 2)),
+                format!("{} – {}", fnum(rmin, 5), fnum(rmax, 5)),
+                format!("{} – {}", fnum(wmin, 5), fnum(wmax, 5)),
+            )
+        };
+        let refresh = match card.refresh_period {
+            None => "none".to_string(),
+            Some(p) => format!("{} µs", fnum(to_us(p), 2)),
+        };
+        t.row(vec![card.kind.label().into(), s, r, w, refresh]);
+    }
+    vec![t]
+}
+
+/// Fig. 1 — Eyeriss breakdown + the headline summary.
+pub fn fig1() -> Vec<Table> {
+    let mut a = Table::new(
+        "Fig. 1a — SRAM share of the Eyeriss chip [5]",
+        &["resource", "SRAM share"],
+    );
+    a.row(vec!["chip area".into(), "79.2%".into()]);
+    a.row(vec!["chip power".into(), "42.5%".into()]);
+
+    let area = AreaModel::lp45();
+    let reduction = area.mcaimem_reduction(crate::util::units::MIB);
+    // idle-buffer power ratio at the encoded DNN operating point
+    let sram = EnergyCard::sram();
+    let ours = EnergyCard::mcaimem_default();
+    let frac = 0.8; // encoded DNN ones fraction (Fig. 5)
+    let p_sram = sram.static_power(crate::util::units::MIB, frac);
+    let p_ours = ours.static_power(crate::util::units::MIB, frac)
+        + ours.refresh_power(crate::util::units::MIB, frac);
+    let mut b = Table::new(
+        "Fig. 1b — MCAIMem headline vs 6T SRAM (this repo's models)",
+        &["metric", "paper", "measured"],
+    );
+    b.row(vec![
+        "area reduction".into(),
+        "48%".into(),
+        format!("{}%", fnum(reduction * 100.0, 1)),
+    ]);
+    b.row(vec![
+        "buffer power ratio (idle, encoded data)".into(),
+        "3.4x".into(),
+        format!("{}x", fnum(p_sram / p_ours, 2)),
+    ]);
+    vec![a, b]
+}
+
+/// Fig. 2 — conventional 3T / 2T retention-time Monte-Carlo distributions.
+pub fn fig2(quick: bool) -> Vec<Table> {
+    let n = mc_n(quick, 100_000);
+    let (b1, b0) = retention::retention_3t(0xF162, n);
+    let d2 = retention::retention_2t_conventional(0xF162, n, 0.65);
+    let mut t = Table::new(
+        "Fig. 2 — gain-cell retention at 45nm LP, 85C, 0.65V read reference (MC)",
+        &["cell / bit", "median (µs)", "p1 (µs)", "p99 (µs)", "sigma/median"],
+    );
+    for d in [&b1, &b0, &d2] {
+        t.row(vec![
+            d.label.clone(),
+            fnum(to_us(d.summary.median), 3),
+            fnum(to_us(d.summary.p01), 3),
+            fnum(to_us(d.summary.p99), 3),
+            fnum(d.summary.std / d.summary.median, 3),
+        ]);
+    }
+    let mut h = Table::new(
+        "Fig. 2 (2T bit-0 histogram series)",
+        &["retention bin center (µs)", "density"],
+    );
+    for (c, dens) in d2.histogram.centers().iter().zip(d2.histogram.densities()) {
+        h.row(vec![fnum(to_us(*c), 3), fnum(dens, 5)]);
+    }
+    vec![t, h]
+}
+
+/// Fig. 3b/5 — bit-position histogram of quantized weights pre/post encoder.
+/// Uses the *actually trained* model weights when artifacts are present,
+/// falling back to the ResNet-50-statistics generator.
+pub fn fig5(artifacts: Option<&Path>) -> Vec<Table> {
+    let (weights, source): (Vec<i8>, &str) = artifacts
+        .and_then(|dir| {
+            let a = crate::runtime::artifact::Artifacts::load(dir).ok()?;
+            let mut all = Vec::new();
+            for i in 0..a.layer_sizes.len() {
+                all.extend(a.tensor(&format!("w{i}")).ok()?.as_i8().ok()?);
+            }
+            Some((all, "trained int8 model (artifacts)"))
+        })
+        .unwrap_or_else(|| {
+            (resnet50_like_weights(0xF165, 500_000), "ResNet-50-statistics generator")
+        });
+    let before = bit_histogram(&weights);
+    let after = bit_histogram(&encode(&weights));
+    let mut t = Table::new(
+        &format!("Fig. 5 — ones fraction per bit position, {source}"),
+        &["bit position", "raw", "one-enhanced"],
+    );
+    for pos in (0..8).rev() {
+        let name = if pos == 7 { "7 (sign, SRAM)".to_string() } else { format!("{pos} (eDRAM)") };
+        t.row(vec![
+            name,
+            fnum(before.ones_frac[pos], 3),
+            fnum(after.ones_frac[pos], 3),
+        ]);
+    }
+    t.row(vec![
+        "eDRAM planes mean".into(),
+        fnum(before.edram_ones_frac(), 3),
+        fnum(after.edram_ones_frac(), 3),
+    ]);
+    vec![t]
+}
+
+/// Fig. 7b — retention vs storage-node width.
+pub fn fig7() -> Vec<Table> {
+    let leak = StorageLeakage::calibrated(1.0);
+    let mut t = Table::new(
+        "Fig. 7b — bit-0 charge time 0.18V → 0.8V vs storage width (median cell, 85C)",
+        &["width multiple", "charge time (µs)", "vs 1x"],
+    );
+    let base = leak.charge_time(0.8, 1.0, 85.0);
+    for w in [1.0, 2.0, 3.0, 4.0] {
+        let tt = leak.charge_time(0.8, w, 85.0);
+        t.row(vec![
+            fnum(w, 0),
+            fnum(to_us(tt), 3),
+            format!("{}x", fnum(tt / base, 2)),
+        ]);
+    }
+    vec![t]
+}
+
+/// Fig. 9 — 6T SRAM SNM + write-yield vs word-line under-drive.
+pub fn fig9(quick: bool) -> Vec<Table> {
+    let tech = TechNode::lp45();
+    let nominal = CellMismatch::default();
+    let a_n = SnmAnalysis::new(&tech, Sram6t::conventional());
+    let a_p = SnmAnalysis::new(&tech, Sram6t::mcaimem());
+    let mut t = Table::new(
+        "Fig. 9a — read SNM by access-transistor polarity (nominal, 25C)",
+        &["access", "read SNM (mV)", "paper"],
+    );
+    t.row(vec![
+        "NMOS".into(),
+        fnum(a_n.read_snm(&nominal) * 1000.0, 1),
+        "90 mV".into(),
+    ]);
+    t.row(vec![
+        "PMOS".into(),
+        fnum(a_p.read_snm(&nominal) * 1000.0, 1),
+        "100 mV".into(),
+    ]);
+
+    let n = if quick { 200 } else { 1000 };
+    let mut y = Table::new(
+        &format!("Fig. 9b — write yield vs WL under-drive (FS corner, {n} MC samples, 25C)"),
+        &["WL voltage (V)", "PMOS access yield", "NMOS access yield"],
+    );
+    let ap = SnmAnalysis::new(&tech, Sram6t::mcaimem()).at_corner(FS_CORNER);
+    let an = SnmAnalysis::new(&tech, Sram6t::conventional()).at_corner(FS_CORNER);
+    let mut rng = Pcg64::new(0xF169);
+    let nmos_yield = an.write_yield(&mut rng, 0.05, tech.vdd, n);
+    for wl in [0.0, -0.05, -0.10, -0.15, -0.20] {
+        let py = ap.write_yield(&mut rng, 0.05, wl, n);
+        y.row(vec![fnum(wl, 2), fnum(py, 3), fnum(nmos_yield, 3)]);
+    }
+    vec![t, y]
+}
+
+/// Fig. 12 — 0→1 flip probability vs access time per V_REF (model + MC).
+pub fn fig12(quick: bool) -> Vec<Table> {
+    let model = FlipModel::mcaimem_85c();
+    let mut t = Table::new(
+        "Fig. 12b — 0→1 flip probability vs access time (closed-form model, 85C)",
+        &["access time (µs)", "VREF=0.5", "VREF=0.6", "VREF=0.7", "VREF=0.8"],
+    );
+    for i in 0..=20 {
+        let time = i as f64 * 1e-6;
+        let mut row = vec![fnum(to_us(time), 1)];
+        for vref in VREF_CANDIDATES {
+            row.push(fnum(model.flip_prob(time, vref), 4));
+        }
+        t.row(row);
+    }
+    let mut p = Table::new(
+        "Fig. 12b — refresh period at the 1% DNN bound per V_REF",
+        &["VREF (V)", "refresh period (µs)", "paper anchor"],
+    );
+    for vref in VREF_CANDIDATES {
+        let period = model.refresh_period(vref, 0.01);
+        let anchor = match vref {
+            v if v == 0.5 => "1.3 µs",
+            v if v == 0.8 => "12.57 µs",
+            _ => "—",
+        };
+        p.row(vec![fnum(vref, 1), fnum(to_us(period), 2), anchor.into()]);
+    }
+    // MC cross-check (Fig. 12a methodology): empirical flip rates
+    let n = mc_n(quick, 100_000);
+    let times: Vec<f64> = (1..=8).map(|i| i as f64 * 2e-6).collect();
+    let curves = retention::flip_curves_mc(0xF12A, n, &times, &[0.5, 0.8]);
+    let mut mc = Table::new(
+        &format!("Fig. 12a — Monte-Carlo cross-check ({n} samples/point, CVSA offset included)"),
+        &["access time (µs)", "MC P(flip) @0.5V", "model @0.5V", "MC @0.8V", "model @0.8V"],
+    );
+    for (i, &time) in times.iter().enumerate() {
+        mc.row(vec![
+            fnum(to_us(time), 1),
+            fnum(curves[0].1[i].1, 4),
+            fnum(model.flip_prob(time, 0.5), 4),
+            fnum(curves[1].1[i].1, 4),
+            fnum(model.flip_prob(time, 0.8), 4),
+        ]);
+    }
+    vec![t, p, mc]
+}
+
+/// Fig. 13 — 16 KB bank area comparison.
+pub fn fig13() -> Vec<Table> {
+    let m = AreaModel::lp45();
+    let mut t = Table::new(
+        "Fig. 13 — 16KB bank layout area (1MB = 64 banks)",
+        &["design", "bank area (µm²)", "vs SRAM", "cell ratio"],
+    );
+    let sram = m.bank16k_area(MemKind::Sram6t);
+    for kind in [MemKind::Sram6t, MemKind::Edram2t, MemKind::Mcaimem] {
+        let a = m.bank16k_area(kind);
+        t.row(vec![
+            kind.label().into(),
+            fnum(to_um2(a), 0),
+            format!("{}%", fnum(a / sram * 100.0, 1)),
+            format!("{}x", fnum(cell_area_rel(kind), 3)),
+        ]);
+    }
+    let mut h = Table::new("Fig. 13 — headline", &["metric", "value"]);
+    h.row(vec![
+        "MCAIMem area reduction @16KB bank".into(),
+        format!("{}%", fnum(m.mcaimem_reduction(16 * 1024) * 100.0, 1)),
+    ]);
+    h.row(vec![
+        "encoder area overhead".into(),
+        format!("{} µm²  ({}% of 108KB macro)", ENCODER_COST_45NM.area_um2, fnum(
+            ENCODER_COST_45NM.area_um2 / to_um2(m.macro_area(MemKind::Mcaimem, 108 * 1024)) * 100.0,
+            4
+        )),
+    ]);
+    vec![t, h]
+}

@@ -1,0 +1,43 @@
+//! Fig. 11 — DNN accuracy under retention-error injection, with and
+//! without the one-enhancement encoder.
+//!
+//! This is the experiment that runs the *real* three-layer stack: the AOT
+//! HLO (L2 jax graph calling the L1 Pallas kernels) executes through PJRT
+//! from Rust, with flip-candidate masks drawn per computation by the Rust
+//! PCG64 (cumulative weight + activation injection, exactly the paper's
+//! §IV-A protocol). The error-rate sweep is the paper's 1 %–25 %.
+
+use std::path::Path;
+
+use crate::runtime::executor::{ModelRunner, StoreVariant};
+use crate::util::table::{fnum, Table};
+use crate::Result;
+
+/// The paper's injection sweep.
+pub const ERROR_RATES: [f64; 6] = [0.01, 0.02, 0.05, 0.10, 0.15, 0.25];
+
+pub fn fig11(artifacts: &Path, quick: bool) -> Result<Vec<Table>> {
+    let mut runner = ModelRunner::new(artifacts)?;
+    let batches = if quick { 2 } else { 8 };
+    let clean = runner.accuracy(StoreVariant::Clean, 0.0, batches, 1)?;
+
+    let mut t = Table::new(
+        &format!(
+            "Fig. 11 — accuracy vs injected 0→1 flip rate (clean int8 acc {}, {} batches)",
+            fnum(clean, 4),
+            batches
+        ),
+        &["flip rate", "with one-enhancement", "without one-enhancement"],
+    );
+    for (i, &p) in ERROR_RATES.iter().enumerate() {
+        let with = runner.accuracy(StoreVariant::Mcaimem, p, batches, 100 + i as u64)?;
+        let without =
+            runner.accuracy(StoreVariant::McaimemNoEncoder, p, batches, 200 + i as u64)?;
+        t.row(vec![
+            format!("{}%", fnum(p * 100.0, 0)),
+            fnum(with, 4),
+            fnum(without, 4),
+        ]);
+    }
+    Ok(vec![t])
+}

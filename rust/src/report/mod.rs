@@ -1,0 +1,98 @@
+//! Regeneration of every table and figure in the paper's evaluation.
+//!
+//! Each `fn <id>() -> Vec<Table>` prints the same rows/series the paper
+//! reports (DESIGN.md §3 maps ids to modules); `run` dispatches by id and
+//! mirrors everything to CSV under `results/`.
+
+pub mod ablations;
+pub mod circuit_reports;
+pub mod fig11;
+pub mod system_reports;
+
+use std::path::Path;
+
+use crate::util::table::Table;
+use crate::Result;
+
+/// All report ids, in paper order.
+pub const ALL_IDS: [&str; 14] = [
+    "table1", "table2", "fig1", "fig2", "fig5", "fig7", "fig9", "fig11", "fig12", "fig13",
+    "fig14", "fig15a", "fig15b", "fig16",
+];
+
+/// Generate the tables for one id. `artifacts` is only needed by fig11
+/// (the DNN-accuracy experiment runs the AOT model through PJRT).
+pub fn generate(id: &str, artifacts: Option<&Path>, quick: bool) -> Result<Vec<Table>> {
+    Ok(match id {
+        "table1" => circuit_reports::table1(),
+        "table2" => circuit_reports::table2(),
+        "fig1" => circuit_reports::fig1(),
+        "fig2" => circuit_reports::fig2(quick),
+        "fig5" => circuit_reports::fig5(artifacts),
+        "fig7" => circuit_reports::fig7(),
+        "fig9" => circuit_reports::fig9(quick),
+        "fig11" => fig11::fig11(
+            artifacts.ok_or_else(|| anyhow::anyhow!("fig11 needs --artifacts <dir>"))?,
+            quick,
+        )?,
+        "fig12" => circuit_reports::fig12(quick),
+        "fig13" => circuit_reports::fig13(),
+        "fig14" => system_reports::fig14(),
+        "fig15a" => system_reports::fig15a(),
+        "fig15b" => system_reports::fig15b(),
+        "fig16" => system_reports::fig16(),
+        "ablation-ratio" => ablations::ratio_sweep(),
+        "ablation-rana" => ablations::rana_analysis(),
+        other => anyhow::bail!(
+            "unknown report id `{other}` (try one of {ALL_IDS:?}, ablation-ratio, ablation-rana)"
+        ),
+    })
+}
+
+/// Print tables and mirror them to CSV.
+pub fn run(id: &str, artifacts: Option<&Path>, csv_dir: Option<&Path>, quick: bool) -> Result<()> {
+    let ids: Vec<&str> = if id == "all" {
+        ALL_IDS.to_vec()
+    } else {
+        vec![id]
+    };
+    for id in ids {
+        let tables = generate(id, artifacts, quick)?;
+        for (i, t) in tables.iter().enumerate() {
+            println!("{}", t.render());
+            if let Some(dir) = csv_dir {
+                let name = if tables.len() == 1 {
+                    id.to_string()
+                } else {
+                    format!("{id}_{i}")
+                };
+                t.write_csv(dir, &name)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_non_artifact_report_generates() {
+        for id in ALL_IDS {
+            if id == "fig11" {
+                continue; // needs artifacts + PJRT
+            }
+            let tables = generate(id, None, true).unwrap_or_else(|e| panic!("{id}: {e}"));
+            assert!(!tables.is_empty(), "{id} produced no tables");
+            for t in tables {
+                assert!(!t.rows.is_empty(), "{id} produced an empty table");
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_id_is_error() {
+        assert!(generate("fig99", None, true).is_err());
+    }
+}

@@ -1,0 +1,154 @@
+//! System-level reports: Figs. 14, 15a, 15b, 16 (§V-B).
+
+use crate::energy::opswatt::opswatt_gain;
+use crate::energy::system_eval::{evaluate, MemChoice};
+use crate::scalesim::accelerator::AcceleratorConfig;
+use crate::scalesim::network::all_networks;
+use crate::scalesim::simulate_network;
+use crate::util::table::{fnum, Table};
+
+fn uj(j: f64) -> String {
+    fnum(j * 1e6, 2)
+}
+
+/// Fig. 14 — static energy per network on Eyeriss and TPUv1.
+pub fn fig14() -> Vec<Table> {
+    AcceleratorConfig::paper_platforms()
+        .into_iter()
+        .map(|acc| {
+            let mut t = Table::new(
+                &format!("Fig. 14 — static energy per inference on {} (µJ)", acc.name),
+                &["network", "SRAM", "eDRAM(2T)", "MCAIMem", "SRAM/MCAIMem"],
+            );
+            for net in all_networks() {
+                let trace = simulate_network(&net, &acc);
+                let s = evaluate(&trace, &acc, &MemChoice::Sram).static_j;
+                let e = evaluate(&trace, &acc, &MemChoice::Edram2t).static_j;
+                let m = evaluate(&trace, &acc, &MemChoice::Mcaimem { vref: 0.8 }).static_j;
+                t.row(vec![
+                    net.name.into(),
+                    uj(s),
+                    uj(e),
+                    uj(m),
+                    format!("{}x", fnum(s / m, 2)),
+                ]);
+            }
+            t
+        })
+        .collect()
+}
+
+/// Fig. 15a — refresh energy: conventional 2T vs MCAIMem per V_REF.
+pub fn fig15a() -> Vec<Table> {
+    AcceleratorConfig::paper_platforms()
+        .into_iter()
+        .map(|acc| {
+            let mut t = Table::new(
+                &format!("Fig. 15a — refresh energy per inference on {} (µJ)", acc.name),
+                &[
+                    "network",
+                    "eDRAM(2T) C-S/A",
+                    "MCAIMem@0.5",
+                    "MCAIMem@0.6",
+                    "MCAIMem@0.7",
+                    "MCAIMem@0.8",
+                ],
+            );
+            for net in all_networks() {
+                let trace = simulate_network(&net, &acc);
+                let mut row = vec![net.name.to_string()];
+                row.push(uj(evaluate(&trace, &acc, &MemChoice::Edram2t).refresh_j));
+                for vref in [0.5, 0.6, 0.7, 0.8] {
+                    row.push(uj(evaluate(&trace, &acc, &MemChoice::Mcaimem { vref }).refresh_j));
+                }
+                t.row(row);
+            }
+            t
+        })
+        .collect()
+}
+
+/// Fig. 15b — total buffer energy: SRAM / RRAM / eDRAM / MCAIMem.
+pub fn fig15b() -> Vec<Table> {
+    AcceleratorConfig::paper_platforms()
+        .into_iter()
+        .map(|acc| {
+            let mut t = Table::new(
+                &format!("Fig. 15b — total buffer energy per inference on {} (µJ)", acc.name),
+                &["network", "SRAM", "RRAM", "eDRAM(2T)", "MCAIMem@0.8", "SRAM/MCAIMem"],
+            );
+            for net in all_networks() {
+                let trace = simulate_network(&net, &acc);
+                let s = evaluate(&trace, &acc, &MemChoice::Sram).total_j();
+                let r = evaluate(&trace, &acc, &MemChoice::Rram).total_j();
+                let e = evaluate(&trace, &acc, &MemChoice::Edram2t).total_j();
+                let m = evaluate(&trace, &acc, &MemChoice::Mcaimem { vref: 0.8 }).total_j();
+                t.row(vec![
+                    net.name.into(),
+                    uj(s),
+                    uj(r),
+                    uj(e),
+                    uj(m),
+                    format!("{}x", fnum(s / m, 2)),
+                ]);
+            }
+            t
+        })
+        .collect()
+}
+
+/// Fig. 16 — normalized ops/W improvement vs the SRAM buffer.
+pub fn fig16() -> Vec<Table> {
+    let mut t = Table::new(
+        "Fig. 16 — ops/W improvement with MCAIMem@0.8 vs SRAM buffer (paper: 35.4%–43.2%)",
+        &["network", "Eyeriss", "TPUv1"],
+    );
+    let platforms = AcceleratorConfig::paper_platforms();
+    for net in all_networks() {
+        let mut row = vec![net.name.to_string()];
+        for acc in &platforms {
+            let trace = simulate_network(&net, acc);
+            let g = opswatt_gain(&trace, acc, &MemChoice::Mcaimem { vref: 0.8 });
+            row.push(format!("{}%", fnum(g * 100.0, 1)));
+        }
+        t.row(row);
+    }
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig14_covers_all_networks_on_both_platforms() {
+        let tables = fig14();
+        assert_eq!(tables.len(), 2);
+        for t in &tables {
+            assert_eq!(t.rows.len(), 7);
+        }
+    }
+
+    #[test]
+    fn fig15a_refresh_monotone_in_vref_every_row() {
+        for t in fig15a() {
+            for row in &t.rows {
+                let vals: Vec<f64> = row[2..6].iter().map(|c| c.parse().unwrap()).collect();
+                for w in vals.windows(2) {
+                    assert!(w[1] <= w[0] + 1e-9, "{row:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fig16_gains_positive() {
+        let t = &fig16()[0];
+        for row in &t.rows {
+            for cell in &row[1..] {
+                let v: f64 = cell.trim_end_matches('%').parse().unwrap();
+                assert!(v > 10.0 && v < 60.0, "{row:?}");
+            }
+        }
+    }
+}

@@ -1,0 +1,254 @@
+//! Artifact loading: manifest.json + raw tensor files.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Metadata for one serialized tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorMeta {
+    pub name: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+    pub file: String,
+}
+
+impl TensorMeta {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// A loaded tensor (raw bytes + metadata).
+#[derive(Clone, Debug)]
+pub struct TensorData {
+    pub meta: TensorMeta,
+    pub bytes: Vec<u8>,
+}
+
+impl TensorData {
+    pub fn as_i8(&self) -> Result<Vec<i8>> {
+        if self.meta.dtype != "int8" {
+            bail!("{} is {}, not int8", self.meta.name, self.meta.dtype);
+        }
+        Ok(self.bytes.iter().map(|&b| b as i8).collect())
+    }
+
+    pub fn as_i32(&self) -> Result<Vec<i32>> {
+        if self.meta.dtype != "int32" {
+            bail!("{} is {}, not int32", self.meta.name, self.meta.dtype);
+        }
+        Ok(self
+            .bytes
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// One exported HLO model entry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelMeta {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<String>,
+}
+
+/// The parsed artifacts directory.
+#[derive(Clone, Debug)]
+pub struct Artifacts {
+    pub dir: PathBuf,
+    pub batch: usize,
+    pub input_dim: usize,
+    pub num_classes: usize,
+    pub layer_sizes: Vec<(usize, usize)>,
+    pub mask_shapes: Vec<Vec<usize>>,
+    pub requant_scales: Vec<f64>,
+    pub act_scales: Vec<f64>,
+    pub float_acc: f64,
+    pub int8_clean_acc: f64,
+    pub tensors: BTreeMap<String, TensorMeta>,
+    pub models: BTreeMap<String, ModelMeta>,
+}
+
+impl Artifacts {
+    /// Parse `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Artifacts> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {dir:?}; run `make artifacts`"))?;
+        let j = Json::parse(&text)?;
+        let usize_of = |k: &str| -> Result<usize> {
+            j.get(k)?.as_usize().ok_or_else(|| anyhow!("{k} not a number"))
+        };
+        let farr = |k: &str| -> Result<Vec<f64>> {
+            Ok(j.get(k)?
+                .as_arr()
+                .ok_or_else(|| anyhow!("{k} not an array"))?
+                .iter()
+                .filter_map(|v| v.as_f64())
+                .collect())
+        };
+
+        let mut tensors = BTreeMap::new();
+        for t in j.get("tensors")?.as_arr().unwrap_or(&[]) {
+            let meta = TensorMeta {
+                name: t.get("name")?.as_str().unwrap_or_default().to_string(),
+                dtype: t.get("dtype")?.as_str().unwrap_or_default().to_string(),
+                shape: t
+                    .get("shape")?
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|v| v.as_usize())
+                    .collect(),
+                file: t.get("file")?.as_str().unwrap_or_default().to_string(),
+            };
+            tensors.insert(meta.name.clone(), meta);
+        }
+
+        let mut models = BTreeMap::new();
+        if let Some(obj) = j.get("models")?.as_obj() {
+            for (name, m) in obj {
+                models.insert(
+                    name.clone(),
+                    ModelMeta {
+                        name: name.clone(),
+                        file: m.get("file")?.as_str().unwrap_or_default().to_string(),
+                        inputs: m
+                            .get("inputs")?
+                            .as_arr()
+                            .unwrap_or(&[])
+                            .iter()
+                            .filter_map(|v| v.as_str().map(String::from))
+                            .collect(),
+                    },
+                );
+            }
+        }
+
+        let layer_sizes = j
+            .get("layer_sizes")?
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|p| {
+                let a = p.as_arr()?;
+                Some((a[0].as_usize()?, a[1].as_usize()?))
+            })
+            .collect();
+        let mask_shapes = j
+            .get("mask_shapes")?
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|s| s.as_arr().unwrap_or(&[]).iter().filter_map(|v| v.as_usize()).collect())
+            .collect();
+
+        Ok(Artifacts {
+            batch: usize_of("batch")?,
+            input_dim: usize_of("input_dim")?,
+            num_classes: usize_of("num_classes")?,
+            layer_sizes,
+            mask_shapes,
+            requant_scales: farr("requant_scales")?,
+            act_scales: farr("act_scales")?,
+            float_acc: j.get("float_acc")?.as_f64().unwrap_or(0.0),
+            int8_clean_acc: j.get("int8_clean_acc")?.as_f64().unwrap_or(0.0),
+            tensors,
+            models,
+            dir,
+        })
+    }
+
+    /// Load one tensor's raw bytes, validating the declared size.
+    pub fn tensor(&self, name: &str) -> Result<TensorData> {
+        let meta = self
+            .tensors
+            .get(name)
+            .ok_or_else(|| anyhow!("no tensor `{name}` in manifest"))?
+            .clone();
+        let bytes = std::fs::read(self.dir.join(&meta.file))?;
+        let unit = match meta.dtype.as_str() {
+            "int8" => 1,
+            "int32" | "float32" => 4,
+            other => bail!("unsupported dtype {other}"),
+        };
+        if bytes.len() != meta.elements() * unit {
+            bail!(
+                "tensor {name}: file has {} bytes, manifest implies {}",
+                bytes.len(),
+                meta.elements() * unit
+            );
+        }
+        Ok(TensorData { meta, bytes })
+    }
+
+    /// Path to one model's HLO text.
+    pub fn model_path(&self, name: &str) -> Result<PathBuf> {
+        let m = self
+            .models
+            .get(name)
+            .ok_or_else(|| anyhow!("no model `{name}` in manifest"))?;
+        Ok(self.dir.join(&m.file))
+    }
+
+    /// The weight/bias tensors in the L2 export's argument order
+    /// (w0, b0, w1, b1, ...).
+    pub fn weight_arg_names(&self) -> Vec<String> {
+        (0..self.layer_sizes.len())
+            .flat_map(|i| [format!("w{i}"), format!("b{i}")])
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn art_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn skip_if_unbuilt() -> Option<Artifacts> {
+        Artifacts::load(art_dir()).ok()
+    }
+
+    #[test]
+    fn manifest_loads_and_is_consistent() {
+        let Some(a) = skip_if_unbuilt() else { return };
+        assert_eq!(a.input_dim, 64);
+        assert_eq!(a.num_classes, 10);
+        assert_eq!(a.layer_sizes.len(), 3);
+        assert_eq!(a.mask_shapes.len(), 6);
+        assert_eq!(a.requant_scales.len(), 3);
+        assert!(a.int8_clean_acc > 0.9);
+        for m in ["model_clean", "model_enc", "model_noenc", "encoder_roundtrip"] {
+            assert!(a.models.contains_key(m), "missing model {m}");
+            assert!(a.model_path(m).unwrap().exists());
+        }
+    }
+
+    #[test]
+    fn tensors_load_with_declared_shapes() {
+        let Some(a) = skip_if_unbuilt() else { return };
+        for name in a.weight_arg_names() {
+            let t = a.tensor(&name).unwrap();
+            assert_eq!(t.bytes.len() > 0, true, "{name}");
+        }
+        let x = a.tensor("x_test_i8").unwrap();
+        assert_eq!(x.meta.shape[1], a.input_dim);
+        let y = a.tensor("y_test_i32").unwrap();
+        assert_eq!(y.as_i32().unwrap().len(), x.meta.shape[0]);
+    }
+
+    #[test]
+    fn missing_tensor_is_a_clean_error() {
+        let Some(a) = skip_if_unbuilt() else { return };
+        let err = a.tensor("nonexistent").unwrap_err().to_string();
+        assert!(err.contains("nonexistent"));
+    }
+}

@@ -1,0 +1,245 @@
+//! PJRT execution: compile HLO-text modules once, run them many times.
+//!
+//! [`Executor`] owns the PJRT CPU client; [`ModelRunner`] binds the AOT
+//! artifacts to compiled executables and exposes the experiment-facing
+//! entry points (clean inference, MCAIMem-aged inference with per-call
+//! error masks, encoder round-trip).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Context, Result};
+use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable};
+
+use super::artifact::Artifacts;
+use crate::util::rng::Pcg64;
+
+/// Thin wrapper over the PJRT CPU client.
+pub struct Executor {
+    pub client: PjRtClient,
+}
+
+impl Executor {
+    pub fn cpu() -> Result<Self> {
+        Ok(Executor { client: PjRtClient::cpu()? })
+    }
+
+    /// Compile one HLO-text file.
+    pub fn load_hlo(&self, path: &std::path::Path) -> Result<PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(self.client.compile(&comp)?)
+    }
+}
+
+/// Build an int8 literal from raw bytes.
+pub fn literal_i8(dims: &[usize], data: &[i8]) -> Result<Literal> {
+    let bytes: &[u8] = unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len()) };
+    Ok(Literal::create_from_shape_and_untyped_data(ElementType::S8, dims, bytes)?)
+}
+
+/// Build an int32 literal from values.
+pub fn literal_i32(dims: &[usize], data: &[i32]) -> Result<Literal> {
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    Ok(Literal::create_from_shape_and_untyped_data(ElementType::S32, dims, &bytes)?)
+}
+
+/// Run a compiled module, unwrapping the 1-tuple the AOT path always emits.
+pub fn run1(exe: &PjRtLoadedExecutable, inputs: &[Literal]) -> Result<Literal> {
+    let result = exe.execute::<Literal>(inputs)?[0][0].to_literal_sync()?;
+    Ok(result.to_tuple1()?)
+}
+
+/// Which aged-inference variant to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StoreVariant {
+    /// Ideal buffer — no retention errors.
+    Clean,
+    /// MCAIMem with the one-enhancement encoder (paper default).
+    Mcaimem,
+    /// MCAIMem with raw storage (Fig. 11's collapsing baseline).
+    McaimemNoEncoder,
+}
+
+/// High-level model runner bound to the artifacts directory.
+pub struct ModelRunner {
+    pub artifacts: Artifacts,
+    exec: Executor,
+    compiled: BTreeMap<String, PjRtLoadedExecutable>,
+    /// Weight/bias literals in export argument order, loaded once.
+    weight_literals: Vec<Literal>,
+}
+
+impl ModelRunner {
+    pub fn new(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let artifacts = Artifacts::load(dir)?;
+        let exec = Executor::cpu()?;
+        let mut weight_literals = Vec::new();
+        for name in artifacts.weight_arg_names() {
+            let t = artifacts.tensor(&name)?;
+            let lit = match t.meta.dtype.as_str() {
+                "int8" => literal_i8(&t.meta.shape, &t.as_i8()?)?,
+                "int32" => literal_i32(&t.meta.shape, &t.as_i32()?)?,
+                other => anyhow::bail!("unexpected weight dtype {other}"),
+            };
+            weight_literals.push(lit);
+        }
+        Ok(ModelRunner { artifacts, exec, compiled: BTreeMap::new(), weight_literals })
+    }
+
+    /// Compile (once) and fetch a model by manifest name.
+    pub fn model(&mut self, name: &str) -> Result<&PjRtLoadedExecutable> {
+        if !self.compiled.contains_key(name) {
+            let path = self.artifacts.model_path(name)?;
+            let exe = self.exec.load_hlo(&path)?;
+            self.compiled.insert(name.to_string(), exe);
+        }
+        Ok(self.compiled.get(name).unwrap())
+    }
+
+    /// Draw one flip-candidate mask tensor: each of the 7 eDRAM bit
+    /// positions set independently with probability `p` (the physics side
+    /// of §IV-A; the bitwise application happens inside the L1 kernel).
+    pub fn draw_mask(rng: &mut Pcg64, len: usize, p: f64) -> Vec<i8> {
+        (0..len)
+            .map(|_| {
+                let mut m = 0u8;
+                for bit in 0..7 {
+                    if rng.bernoulli(p) {
+                        m |= 1 << bit;
+                    }
+                }
+                m as i8
+            })
+            .collect()
+    }
+
+    /// Classify one batch (must match the export batch size). Returns the
+    /// argmax class per row.
+    pub fn infer(
+        &mut self,
+        x: &[i8],
+        variant: StoreVariant,
+        p: f64,
+        rng: &mut Pcg64,
+    ) -> Result<Vec<usize>> {
+        let batch = self.artifacts.batch;
+        let dim = self.artifacts.input_dim;
+        anyhow::ensure!(x.len() == batch * dim, "batch shape mismatch");
+        let x_lit = literal_i8(&[batch, dim], x)?;
+
+        let mut inputs = vec![x_lit];
+        let model_name = match variant {
+            StoreVariant::Clean => "model_clean",
+            StoreVariant::Mcaimem => "model_enc",
+            StoreVariant::McaimemNoEncoder => "model_noenc",
+        };
+        if variant != StoreVariant::Clean {
+            for shape in self.artifacts.mask_shapes.clone() {
+                let len: usize = shape.iter().product();
+                let mask = Self::draw_mask(rng, len, p);
+                inputs.push(literal_i8(&shape, &mask)?);
+            }
+        }
+        inputs.extend(self.weight_literals.iter().cloned());
+
+        let exe = self.model(model_name)?;
+        let logits = run1(exe, &inputs)?;
+        let vals: Vec<i8> = logits.to_vec()?;
+        let classes = self.artifacts.num_classes;
+        Ok(vals
+            .chunks(classes)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by_key(|(_, &v)| v)
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            })
+            .collect())
+    }
+
+    /// Accuracy over the exported test set (first `batches` batches).
+    pub fn accuracy(
+        &mut self,
+        variant: StoreVariant,
+        p: f64,
+        batches: usize,
+        seed: u64,
+    ) -> Result<f64> {
+        let x = self.artifacts.tensor("x_test_i8")?.as_i8()?;
+        let y = self.artifacts.tensor("y_test_i32")?.as_i32()?;
+        let batch = self.artifacts.batch;
+        let dim = self.artifacts.input_dim;
+        let avail = y.len() / batch;
+        let n = batches.min(avail);
+        let mut rng = Pcg64::new(seed);
+        let mut correct = 0usize;
+        for b in 0..n {
+            let xs = &x[b * batch * dim..(b + 1) * batch * dim];
+            let pred = self.infer(xs, variant, p, &mut rng)?;
+            for (i, &cls) in pred.iter().enumerate() {
+                if cls as i32 == y[b * batch + i] {
+                    correct += 1;
+                }
+            }
+        }
+        Ok(correct as f64 / (n * batch) as f64)
+    }
+
+    /// Run the standalone encoder round-trip artifact: store → age → load
+    /// for an arbitrary int8 vector + mask (used to cross-check the Rust
+    /// and Pallas implementations bit-for-bit).
+    pub fn encoder_roundtrip(&mut self, x: &[i8], mask: &[i8]) -> Result<Vec<i8>> {
+        anyhow::ensure!(x.len() == mask.len());
+        let n = x.len();
+        let exe = self.model("encoder_roundtrip")?;
+        let out = run1(exe, &[literal_i8(&[n], x)?, literal_i8(&[n], mask)?])?;
+        Ok(out.to_vec()?)
+    }
+
+    /// Run the standalone encode-only artifact.
+    pub fn encode_only(&mut self, x: &[i8]) -> Result<Vec<i8>> {
+        let n = x.len();
+        let exe = self.model("encode_only")?;
+        let out = run1(exe, &[literal_i8(&[n], x)?])?;
+        Ok(out.to_vec()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn draw_mask_rate() {
+        let mut rng = Pcg64::new(1);
+        let mask = ModelRunner::draw_mask(&mut rng, 20_000, 0.1);
+        let ones: u32 = mask.iter().map(|&m| (m as u8).count_ones()).sum();
+        let rate = ones as f64 / (20_000.0 * 7.0);
+        assert!((rate - 0.1).abs() < 0.01, "rate={rate}");
+        // bit 7 never set (sign plane is SRAM)
+        assert!(mask.iter().all(|&m| m >= 0));
+    }
+
+    #[test]
+    fn literal_roundtrip_i8() {
+        let data: Vec<i8> = (-64..64).collect();
+        let lit = literal_i8(&[128], &data).unwrap();
+        let back: Vec<i8> = lit.to_vec().unwrap();
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let data = vec![1i32, -2, 3_000_000, i32::MIN];
+        let lit = literal_i32(&[4], &data).unwrap();
+        let back: Vec<i32> = lit.to_vec().unwrap();
+        assert_eq!(back, data);
+    }
+}

@@ -1,0 +1,17 @@
+//! PJRT runtime: load the AOT artifacts and execute them from Rust.
+//!
+//! Python never runs on the request path. `make artifacts` lowers the L2
+//! jax graphs (which call the L1 Pallas kernels) to HLO **text**; this
+//! module parses the manifest, loads tensors, compiles each HLO module on
+//! the PJRT CPU client (`xla` crate 0.1.6 / xla_extension 0.5.1) and
+//! exposes typed `execute` helpers.
+//!
+//! Interchange is HLO text, not serialized protos — jax ≥ 0.5 emits
+//! 64-bit instruction ids that this XLA build rejects; the text parser
+//! reassigns them (see /opt/xla-example/README.md).
+
+pub mod artifact;
+pub mod executor;
+
+pub use artifact::{Artifacts, TensorData, TensorMeta};
+pub use executor::{Executor, ModelRunner};

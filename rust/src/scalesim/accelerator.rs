@@ -1,0 +1,112 @@
+//! Accelerator configurations (§V-B): Eyeriss and Google TPUv1.
+//!
+//! The paper runs both at an assumed 100 MHz ("in alignment with the slowest
+//! operational clock frequencies observed in AI accelerators — Eyeriss at
+//! 100 MHz; TPUv1 at 700 MHz"), with the on-chip buffer sized to each chip:
+//! 108 KB for Eyeriss, 8 MB for TPUv1. Eyeriss' 168 PEs are modeled as the
+//! 12×14 array SCALE-Sim uses.
+
+/// Systolic dataflow (SCALE-Sim taxonomy). The paper's platforms are
+/// output-stationary in the SCALE-Sim default configs; WS/IS are carried for
+/// the ablation benches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dataflow {
+    OutputStationary,
+    WeightStationary,
+    InputStationary,
+}
+
+/// One accelerator platform.
+#[derive(Clone, Debug)]
+pub struct AcceleratorConfig {
+    pub name: &'static str,
+    pub pe_rows: usize,
+    pub pe_cols: usize,
+    /// On-chip buffer capacity in bytes.
+    pub buffer_bytes: usize,
+    /// Simulation clock (Hz).
+    pub clock_hz: f64,
+    pub dataflow: Dataflow,
+    /// Fraction of total chip power spent in the on-chip buffer with an
+    /// SRAM design — Fig. 16's normalization (Eyeriss 42.5 % [5],
+    /// TPUv1 37 % [20]).
+    pub buffer_power_frac: f64,
+}
+
+impl AcceleratorConfig {
+    /// Eyeriss [5]: 168 PEs (12×14), 108 KB buffer, 100 MHz, buffer = 42.5 %
+    /// of chip power.
+    pub fn eyeriss() -> Self {
+        AcceleratorConfig {
+            name: "Eyeriss",
+            pe_rows: 12,
+            pe_cols: 14,
+            buffer_bytes: 108 * 1024,
+            clock_hz: 100e6,
+            dataflow: Dataflow::OutputStationary,
+            buffer_power_frac: 0.425,
+        }
+    }
+
+    /// Google TPUv1 [20]: 256×256 MACs, 8 MB activation buffer (the paper's
+    /// memory sizing), run at the study's 100 MHz; buffer = 37 % of chip
+    /// power.
+    pub fn tpuv1() -> Self {
+        AcceleratorConfig {
+            name: "TPUv1",
+            pe_rows: 256,
+            pe_cols: 256,
+            buffer_bytes: 8 * 1024 * 1024,
+            clock_hz: 100e6,
+            dataflow: Dataflow::OutputStationary,
+            buffer_power_frac: 0.37,
+        }
+    }
+
+    /// Both §V-B platforms.
+    pub fn paper_platforms() -> Vec<AcceleratorConfig> {
+        vec![Self::eyeriss(), Self::tpuv1()]
+    }
+
+    pub fn pes(&self) -> usize {
+        self.pe_rows * self.pe_cols
+    }
+
+    /// Buffer scale factor against the 1 MB characterization macro — the
+    /// paper's §V-B power-model adjustment (108 KB ⇒ ~1/10; 8 MB ⇒ 8×).
+    pub fn buffer_scale_vs_1mb(&self) -> f64 {
+        self.buffer_bytes as f64 / (1024.0 * 1024.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eyeriss_card() {
+        let e = AcceleratorConfig::eyeriss();
+        assert_eq!(e.pes(), 168);
+        assert_eq!(e.buffer_bytes, 108 * 1024);
+        // "reducing it to one-tenth of our original 1MB memory device"
+        assert!((e.buffer_scale_vs_1mb() - 0.105).abs() < 0.01);
+        assert!((e.buffer_power_frac - 0.425).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tpu_card() {
+        let t = AcceleratorConfig::tpuv1();
+        assert_eq!(t.pes(), 65536);
+        // "augmented the embedded RAM power model by a factor of eight"
+        assert!((t.buffer_scale_vs_1mb() - 8.0).abs() < 1e-12);
+        assert!((t.buffer_power_frac - 0.37).abs() < 1e-12);
+    }
+
+    #[test]
+    fn both_platforms_at_100mhz() {
+        for p in AcceleratorConfig::paper_platforms() {
+            assert_eq!(p.clock_hz, 100e6);
+            assert_eq!(p.dataflow, Dataflow::OutputStationary);
+        }
+    }
+}

@@ -1,0 +1,147 @@
+//! DNN layer shapes and their arithmetic (MACs, tensor footprints).
+//!
+//! All tensors are INT8 (1 byte/element) — the paper's operating format
+//! (§II-B: "INT8 is regarded as the optimal representation for DNN
+//! inference").
+
+/// One network layer, as mapped onto the systolic array.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LayerShape {
+    /// 2-D convolution: input H×W×C, K filters of R×S×C, stride, output
+    /// computed with `same`-style padding folded into `h_out`/`w_out`.
+    Conv {
+        name: String,
+        h: usize,
+        w: usize,
+        c: usize,
+        k: usize,
+        r: usize,
+        s: usize,
+        stride: usize,
+    },
+    /// Fully connected: `inputs → outputs`.
+    Fc { name: String, inputs: usize, outputs: usize },
+    /// General matmul M×K · K×N (transformer projections/attention).
+    Matmul { name: String, m: usize, k: usize, n: usize },
+}
+
+impl LayerShape {
+    pub fn conv(name: &str, h: usize, w: usize, c: usize, k: usize, r: usize, s: usize, stride: usize) -> Self {
+        LayerShape::Conv { name: name.into(), h, w, c, k, r, s, stride }
+    }
+
+    pub fn fc(name: &str, inputs: usize, outputs: usize) -> Self {
+        LayerShape::Fc { name: name.into(), inputs, outputs }
+    }
+
+    pub fn matmul(name: &str, m: usize, k: usize, n: usize) -> Self {
+        LayerShape::Matmul { name: name.into(), m, k, n }
+    }
+
+    pub fn name(&self) -> &str {
+        match self {
+            LayerShape::Conv { name, .. }
+            | LayerShape::Fc { name, .. }
+            | LayerShape::Matmul { name, .. } => name,
+        }
+    }
+
+    /// Output spatial size for a conv (same-padding, stride-divided).
+    pub fn out_hw(&self) -> Option<(usize, usize)> {
+        match self {
+            LayerShape::Conv { h, w, stride, .. } => {
+                Some((h.div_ceil(*stride), w.div_ceil(*stride)))
+            }
+            _ => None,
+        }
+    }
+
+    /// The canonical GEMM view (M, K, N) the systolic model maps:
+    /// conv im2col → M = out pixels, K = r·s·c, N = k filters;
+    /// fc → M = 1; matmul → as-is.
+    pub fn as_gemm(&self) -> (usize, usize, usize) {
+        match self {
+            LayerShape::Conv { c, k, r, s, .. } => {
+                let (ho, wo) = self.out_hw().unwrap();
+                (ho * wo, r * s * c, *k)
+            }
+            LayerShape::Fc { inputs, outputs, .. } => (1, *inputs, *outputs),
+            LayerShape::Matmul { m, k, n, .. } => (*m, *k, *n),
+        }
+    }
+
+    /// Multiply-accumulate count.
+    pub fn macs(&self) -> u64 {
+        let (m, k, n) = self.as_gemm();
+        m as u64 * k as u64 * n as u64
+    }
+
+    /// Weight bytes (INT8).
+    pub fn weight_bytes(&self) -> usize {
+        match self {
+            LayerShape::Conv { c, k, r, s, .. } => k * c * r * s,
+            LayerShape::Fc { inputs, outputs, .. } => inputs * outputs,
+            LayerShape::Matmul { k, n, .. } => k * n,
+        }
+    }
+
+    /// Input-activation bytes (INT8).
+    pub fn input_bytes(&self) -> usize {
+        match self {
+            LayerShape::Conv { h, w, c, .. } => h * w * c,
+            LayerShape::Fc { inputs, .. } => *inputs,
+            LayerShape::Matmul { m, k, .. } => m * k,
+        }
+    }
+
+    /// Output-activation bytes (INT8).
+    pub fn output_bytes(&self) -> usize {
+        match self {
+            LayerShape::Conv { k, .. } => {
+                let (ho, wo) = self.out_hw().unwrap();
+                ho * wo * k
+            }
+            LayerShape::Fc { outputs, .. } => *outputs,
+            LayerShape::Matmul { m, n, .. } => m * n,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_gemm_mapping() {
+        // 224×224×3, 64 filters 7×7, stride 2 → ResNet-50 stem
+        let l = LayerShape::conv("conv1", 224, 224, 3, 64, 7, 7, 2);
+        let (m, k, n) = l.as_gemm();
+        assert_eq!((m, k, n), (112 * 112, 7 * 7 * 3, 64));
+        assert_eq!(l.macs(), (112 * 112 * 147 * 64) as u64);
+        assert_eq!(l.weight_bytes(), 64 * 3 * 7 * 7);
+        assert_eq!(l.input_bytes(), 224 * 224 * 3);
+        assert_eq!(l.output_bytes(), 112 * 112 * 64);
+    }
+
+    #[test]
+    fn fc_is_single_row_gemm() {
+        let l = LayerShape::fc("fc", 2048, 1000);
+        assert_eq!(l.as_gemm(), (1, 2048, 1000));
+        assert_eq!(l.macs(), 2_048_000);
+        assert_eq!(l.weight_bytes(), 2048 * 1000);
+    }
+
+    #[test]
+    fn matmul_passthrough() {
+        let l = LayerShape::matmul("qk", 128, 768, 768);
+        assert_eq!(l.as_gemm(), (128, 768, 768));
+        assert_eq!(l.input_bytes(), 128 * 768);
+        assert_eq!(l.output_bytes(), 128 * 768);
+    }
+
+    #[test]
+    fn stride_one_preserves_spatial() {
+        let l = LayerShape::conv("c", 32, 32, 16, 32, 3, 3, 1);
+        assert_eq!(l.out_hw(), Some((32, 32)));
+    }
+}

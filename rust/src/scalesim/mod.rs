@@ -1,0 +1,25 @@
+//! SCALE-Sim-style systolic-array simulator (the paper's §V-B substrate).
+//!
+//! The paper "modified SCALE-Sim [36] to estimate the static and dynamic
+//! energy consumption of each memory device, considering the configurations
+//! of Eyeriss and Google TPUv1". SCALE-Sim is not available offline, so this
+//! module reimplements its analytical v1 model: output-stationary mapping of
+//! conv/FC/matmul layers onto an R×C MAC array, fold-based cycle counts, and
+//! per-layer on-chip SRAM access tallies — the quantities the energy model
+//! consumes.
+//!
+//! * [`layer`] — layer shapes (conv / fc / matmul) and their arithmetic.
+//! * [`network`] — full layer tables for the paper's seven benchmarks.
+//! * [`accelerator`] — Eyeriss and TPUv1 configurations (§V-B).
+//! * [`systolic`] — cycles + access counts for one layer on one array.
+//! * [`simulate`] — whole-network runs producing [`simulate::NetworkTrace`].
+
+pub mod accelerator;
+pub mod layer;
+pub mod network;
+pub mod simulate;
+pub mod systolic;
+
+pub use accelerator::AcceleratorConfig;
+pub use layer::LayerShape;
+pub use simulate::{simulate_network, LayerTrace, NetworkTrace};

@@ -1,0 +1,268 @@
+//! Layer tables for the paper's seven benchmarks (§IV-A / §V-B):
+//! LeNet-5, AlexNet, VGG-11, VGG-16, ResNet-50, I-BERT (BERT-base,
+//! integer-only), and the CycleGAN generator.
+//!
+//! Shapes are the published architectures; datasets only set the input
+//! resolution (MNIST 28×28×1, CIFAR 32×32×3, ImageNet 224×224×3,
+//! GLUE seq = 128, horse2zebra 256×256×3).
+
+use super::layer::LayerShape;
+
+/// A named benchmark network.
+#[derive(Clone, Debug)]
+pub struct Network {
+    pub name: &'static str,
+    pub layers: Vec<LayerShape>,
+}
+
+impl Network {
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    pub fn total_weight_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.weight_bytes()).sum()
+    }
+
+    pub fn max_activation_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.input_bytes() + l.output_bytes())
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// All seven paper benchmarks.
+pub fn all_networks() -> Vec<Network> {
+    vec![lenet(), alexnet(), vgg11(), vgg16(), resnet50(), ibert_base(), cyclegan()]
+}
+
+/// Look one up by (case-insensitive) name.
+pub fn by_name(name: &str) -> Option<Network> {
+    all_networks()
+        .into_iter()
+        .find(|n| n.name.eq_ignore_ascii_case(name))
+}
+
+/// LeNet-5 on MNIST (28×28×1).
+pub fn lenet() -> Network {
+    Network {
+        name: "LeNet",
+        layers: vec![
+            LayerShape::conv("conv1", 28, 28, 1, 6, 5, 5, 1),
+            LayerShape::conv("conv2", 14, 14, 6, 16, 5, 5, 1),
+            LayerShape::fc("fc1", 16 * 7 * 7, 120),
+            LayerShape::fc("fc2", 120, 84),
+            LayerShape::fc("fc3", 84, 10),
+        ],
+    }
+}
+
+/// AlexNet on ImageNet (224×224×3).
+pub fn alexnet() -> Network {
+    Network {
+        name: "AlexNet",
+        layers: vec![
+            LayerShape::conv("conv1", 224, 224, 3, 96, 11, 11, 4),
+            LayerShape::conv("conv2", 27, 27, 96, 256, 5, 5, 1),
+            LayerShape::conv("conv3", 13, 13, 256, 384, 3, 3, 1),
+            LayerShape::conv("conv4", 13, 13, 384, 384, 3, 3, 1),
+            LayerShape::conv("conv5", 13, 13, 384, 256, 3, 3, 1),
+            LayerShape::fc("fc6", 256 * 6 * 6, 4096),
+            LayerShape::fc("fc7", 4096, 4096),
+            LayerShape::fc("fc8", 4096, 1000),
+        ],
+    }
+}
+
+fn vgg_block(layers: &mut Vec<LayerShape>, idx: &mut usize, hw: usize, c_in: usize, c_out: usize, convs: usize) {
+    let mut c = c_in;
+    for _ in 0..convs {
+        *idx += 1;
+        layers.push(LayerShape::conv(&format!("conv{idx}"), hw, hw, c, c_out, 3, 3, 1));
+        c = c_out;
+    }
+}
+
+/// VGG-11 ("configuration A") on CIFAR-10 (32×32×3).
+pub fn vgg11() -> Network {
+    let mut layers = Vec::new();
+    let mut i = 0;
+    vgg_block(&mut layers, &mut i, 32, 3, 64, 1);
+    vgg_block(&mut layers, &mut i, 16, 64, 128, 1);
+    vgg_block(&mut layers, &mut i, 8, 128, 256, 2);
+    vgg_block(&mut layers, &mut i, 4, 256, 512, 2);
+    vgg_block(&mut layers, &mut i, 2, 512, 512, 2);
+    layers.push(LayerShape::fc("fc1", 512, 512));
+    layers.push(LayerShape::fc("fc2", 512, 10));
+    Network { name: "VGG11", layers }
+}
+
+/// VGG-16 on ImageNet (224×224×3).
+pub fn vgg16() -> Network {
+    let mut layers = Vec::new();
+    let mut i = 0;
+    vgg_block(&mut layers, &mut i, 224, 3, 64, 2);
+    vgg_block(&mut layers, &mut i, 112, 64, 128, 2);
+    vgg_block(&mut layers, &mut i, 56, 128, 256, 3);
+    vgg_block(&mut layers, &mut i, 28, 256, 512, 3);
+    vgg_block(&mut layers, &mut i, 14, 512, 512, 3);
+    layers.push(LayerShape::fc("fc1", 512 * 7 * 7, 4096));
+    layers.push(LayerShape::fc("fc2", 4096, 4096));
+    layers.push(LayerShape::fc("fc3", 4096, 1000));
+    Network { name: "VGG16", layers }
+}
+
+/// ResNet-50 on ImageNet: stem + [3, 4, 6, 3] bottleneck stages + fc.
+pub fn resnet50() -> Network {
+    let mut layers = vec![LayerShape::conv("conv1", 224, 224, 3, 64, 7, 7, 2)];
+    // (stage, blocks, in_hw, c_in, width)
+    let stages: [(usize, usize, usize, usize, usize); 4] = [
+        (2, 3, 56, 64, 64),
+        (3, 4, 56, 256, 128),
+        (4, 6, 28, 512, 256),
+        (5, 3, 14, 1024, 512),
+    ];
+    for (stage, blocks, in_hw, c_in_stage, width) in stages {
+        let c_out = width * 4;
+        for b in 0..blocks {
+            // first block of stages 3–5 downsamples (stride 2 on the 3×3)
+            let stride = if b == 0 && stage > 2 { 2 } else { 1 };
+            let hw_in = if b == 0 { in_hw } else { in_hw / if stage > 2 { 2 } else { 1 } };
+            let c_in = if b == 0 { c_in_stage } else { c_out };
+            let hw_mid = hw_in.div_ceil(stride);
+            let p = format!("res{stage}{}", (b'a' + b as u8) as char);
+            layers.push(LayerShape::conv(&format!("{p}_1x1a"), hw_in, hw_in, c_in, width, 1, 1, 1));
+            layers.push(LayerShape::conv(&format!("{p}_3x3"), hw_in, hw_in, width, width, 3, 3, stride));
+            layers.push(LayerShape::conv(&format!("{p}_1x1b"), hw_mid, hw_mid, width, c_out, 1, 1, 1));
+            if b == 0 {
+                layers.push(LayerShape::conv(
+                    &format!("{p}_proj"),
+                    hw_in,
+                    hw_in,
+                    c_in,
+                    c_out,
+                    1,
+                    1,
+                    stride,
+                ));
+            }
+        }
+    }
+    layers.push(LayerShape::fc("fc", 2048, 1000));
+    Network { name: "ResNet50", layers }
+}
+
+/// I-BERT = integer-only BERT-base (12 layers, hidden 768, heads 12,
+/// FFN 3072) at sequence length 128 (GLUE).
+pub fn ibert_base() -> Network {
+    let (seq, h, ffn) = (128usize, 768usize, 3072usize);
+    let mut layers = Vec::new();
+    for l in 0..12 {
+        let p = format!("enc{l}");
+        // Q, K, V, and output projections
+        for proj in ["q", "k", "v", "o"] {
+            layers.push(LayerShape::matmul(&format!("{p}_{proj}"), seq, h, h));
+        }
+        // attention scores and context (per-head K-dim folded together)
+        layers.push(LayerShape::matmul(&format!("{p}_qk"), seq, h, seq));
+        layers.push(LayerShape::matmul(&format!("{p}_av"), seq, seq, h));
+        // FFN
+        layers.push(LayerShape::matmul(&format!("{p}_ffn1"), seq, h, ffn));
+        layers.push(LayerShape::matmul(&format!("{p}_ffn2"), seq, ffn, h));
+    }
+    layers.push(LayerShape::fc("classifier", h, 2));
+    Network { name: "I-BERT", layers }
+}
+
+/// CycleGAN generator (c7s1-64, d128, d256, 9 ResNet blocks, u128, u64,
+/// c7s1-3) on horse2zebra 256×256×3. Transposed convs are modeled at their
+/// output resolution (same MAC count).
+pub fn cyclegan() -> Network {
+    let mut layers = vec![
+        LayerShape::conv("c7s1-64", 256, 256, 3, 64, 7, 7, 1),
+        LayerShape::conv("d128", 256, 256, 64, 128, 3, 3, 2),
+        LayerShape::conv("d256", 128, 128, 128, 256, 3, 3, 2),
+    ];
+    for b in 0..9 {
+        layers.push(LayerShape::conv(&format!("res{b}_a"), 64, 64, 256, 256, 3, 3, 1));
+        layers.push(LayerShape::conv(&format!("res{b}_b"), 64, 64, 256, 256, 3, 3, 1));
+    }
+    layers.push(LayerShape::conv("u128", 128, 128, 256, 128, 3, 3, 1));
+    layers.push(LayerShape::conv("u64", 256, 256, 128, 64, 3, 3, 1));
+    layers.push(LayerShape::conv("c7s1-3", 256, 256, 64, 3, 7, 7, 1));
+    Network { name: "CycleGAN", layers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seven_benchmarks_present() {
+        let nets = all_networks();
+        assert_eq!(nets.len(), 7);
+        let names: Vec<&str> = nets.iter().map(|n| n.name).collect();
+        for want in ["LeNet", "AlexNet", "VGG11", "VGG16", "ResNet50", "I-BERT", "CycleGAN"] {
+            assert!(names.contains(&want), "missing {want}");
+        }
+    }
+
+    #[test]
+    fn resnet50_shape_sanity() {
+        let n = resnet50();
+        // 1 stem + 3·3+1 + 4·3+1 + 6·3+1 + 3·3+1 convs + 1 fc = 54 layers
+        assert_eq!(n.layers.len(), 1 + (9 + 1) + (12 + 1) + (18 + 1) + (9 + 1) + 1);
+        // ~4.1 GMACs and ~25.5 M params for ImageNet ResNet-50
+        let gmacs = n.total_macs() as f64 / 1e9;
+        assert!(gmacs > 3.5 && gmacs < 4.5, "gmacs={gmacs}");
+        let mparams = n.total_weight_bytes() as f64 / 1e6;
+        assert!(mparams > 20.0 && mparams < 28.0, "mparams={mparams}");
+    }
+
+    #[test]
+    fn vgg16_is_heavier_than_vgg11() {
+        // VGG16@224 ≫ VGG11@32
+        assert!(vgg16().total_macs() > 10 * vgg11().total_macs());
+        // VGG-16 ≈ 15.5 GMACs
+        let g = vgg16().total_macs() as f64 / 1e9;
+        assert!(g > 14.0 && g < 16.5, "g={g}");
+    }
+
+    #[test]
+    fn alexnet_macs_in_range() {
+        let g = alexnet().total_macs() as f64 / 1e9;
+        // ~0.7–1.2 GMACs depending on the stem variant
+        assert!(g > 0.6 && g < 1.4, "g={g}");
+    }
+
+    #[test]
+    fn ibert_param_count() {
+        // BERT-base encoder ≈ 85 M params (without embeddings)
+        let m = ibert_base().total_weight_bytes() as f64 / 1e6;
+        assert!(m > 80.0 && m < 90.0, "m={m}");
+    }
+
+    #[test]
+    fn lenet_is_tiny() {
+        assert!(lenet().total_macs() < 10_000_000);
+        assert!(lenet().total_weight_bytes() < 200_000);
+    }
+
+    #[test]
+    fn cyclegan_activation_heavy() {
+        // generators are activation-dominated: activations exceed weights
+        let n = cyclegan();
+        assert!(n.max_activation_bytes() > n.total_weight_bytes() / 4);
+        let g = n.total_macs() as f64 / 1e9;
+        assert!(g > 30.0 && g < 80.0, "g={g}"); // ~50 GMACs at 256²
+    }
+
+    #[test]
+    fn lookup_by_name_case_insensitive() {
+        assert!(by_name("resnet50").is_some());
+        assert!(by_name("RESNET50").is_some());
+        assert!(by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,174 @@
+//! Analytical systolic-array model (SCALE-Sim v1 equations).
+//!
+//! A layer's GEMM view (M = output pixels, K = window, N = filters) is
+//! tiled onto the R×C PE array. For the output-stationary dataflow each
+//! fold computes an R×C tile of outputs by streaming K-deep operand
+//! vectors through the array:
+//!
+//! ```text
+//!   folds  = ceil(M/R) · ceil(N/C)
+//!   cycles = (2·K + R + C − 2) per fold        (fill + stream + drain)
+//! ```
+//!
+//! On-chip buffer traffic (the quantity the paper's energy model needs):
+//! every fold re-streams its operand panels from SRAM, outputs are written
+//! once —
+//!
+//! ```text
+//!   ifmap reads  = M·K · ceil(N/C)      filter reads = N·K · ceil(M/R)
+//!   ofmap writes = M·N
+//! ```
+//!
+//! WS/IS variants reorder which operand is pinned (kept for ablations);
+//! their traffic totals differ in which panel gets the fold multiplier.
+
+use super::accelerator::{AcceleratorConfig, Dataflow};
+use super::layer::LayerShape;
+
+/// Cycle and traffic results for one layer on one array.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerCost {
+    pub macs: u64,
+    pub cycles: u64,
+    pub folds: u64,
+    /// On-chip buffer reads/writes in bytes (INT8 ⇒ 1 byte per element).
+    pub ifmap_reads: u64,
+    pub filter_reads: u64,
+    pub ofmap_writes: u64,
+    /// Array utilization: MACs / (PEs × cycles).
+    pub utilization: f64,
+}
+
+impl LayerCost {
+    pub fn sram_reads(&self) -> u64 {
+        self.ifmap_reads + self.filter_reads
+    }
+
+    pub fn sram_writes(&self) -> u64 {
+        self.ofmap_writes
+    }
+}
+
+/// Evaluate one layer on an accelerator.
+pub fn layer_cost(layer: &LayerShape, acc: &AcceleratorConfig) -> LayerCost {
+    let (m, k, n) = layer.as_gemm();
+    let (r, c) = (acc.pe_rows as u64, acc.pe_cols as u64);
+    let (m, k, n) = (m as u64, k as u64, n as u64);
+    let macs = m * k * n;
+
+    let (folds, cycles, if_rd, fl_rd) = match acc.dataflow {
+        Dataflow::OutputStationary => {
+            let folds = m.div_ceil(r) * n.div_ceil(c);
+            let cycles = folds * (2 * k + r + c - 2);
+            // ifmap panel re-read per filter fold; filter panel per pixel fold
+            (folds, cycles, m * k * n.div_ceil(c), n * k * m.div_ceil(r))
+        }
+        Dataflow::WeightStationary => {
+            // weights pinned as K×N tiles; ifmap streamed per tile
+            let folds = k.div_ceil(r) * n.div_ceil(c);
+            let cycles = folds * (m + r + c - 2);
+            (folds, cycles, m * k * n.div_ceil(c), n * k)
+        }
+        Dataflow::InputStationary => {
+            let folds = k.div_ceil(r) * m.div_ceil(c);
+            let cycles = folds * (n + r + c - 2);
+            (folds, cycles, m * k, n * k * m.div_ceil(c))
+        }
+    };
+
+    LayerCost {
+        macs,
+        cycles,
+        folds,
+        ifmap_reads: if_rd,
+        filter_reads: fl_rd,
+        ofmap_writes: m * n,
+        utilization: macs as f64 / (acc.pes() as f64 * cycles as f64),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_acc() -> AcceleratorConfig {
+        AcceleratorConfig {
+            name: "test4x4",
+            pe_rows: 4,
+            pe_cols: 4,
+            buffer_bytes: 16 * 1024,
+            clock_hz: 1e6,
+            dataflow: Dataflow::OutputStationary,
+            buffer_power_frac: 0.4,
+        }
+    }
+
+    #[test]
+    fn exact_fit_single_fold() {
+        // M=4, K=8, N=4 on a 4×4 OS array: one fold
+        let l = LayerShape::matmul("m", 4, 8, 4);
+        let c = layer_cost(&l, &small_acc());
+        assert_eq!(c.folds, 1);
+        assert_eq!(c.cycles, 2 * 8 + 4 + 4 - 2);
+        assert_eq!(c.macs, 4 * 8 * 4);
+        assert_eq!(c.ifmap_reads, 4 * 8);
+        assert_eq!(c.filter_reads, 4 * 8);
+        assert_eq!(c.ofmap_writes, 16);
+    }
+
+    #[test]
+    fn folds_multiply_with_size() {
+        let l = LayerShape::matmul("m", 8, 8, 8); // 2×2 folds on 4×4
+        let c = layer_cost(&l, &small_acc());
+        assert_eq!(c.folds, 4);
+        // ifmap re-read once per filter fold (2)
+        assert_eq!(c.ifmap_reads, 8 * 8 * 2);
+        assert_eq!(c.filter_reads, 8 * 8 * 2);
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        for l in [
+            LayerShape::matmul("a", 3, 5, 3),
+            LayerShape::conv("b", 14, 14, 32, 64, 3, 3, 1),
+            LayerShape::fc("c", 100, 10),
+        ] {
+            let c = layer_cost(&l, &small_acc());
+            assert!(c.utilization > 0.0 && c.utilization <= 1.0, "{:?}", c.utilization);
+        }
+    }
+
+    #[test]
+    fn fc_underutilizes_systolic_array() {
+        // M = 1 wastes all but one row — the classic FC inefficiency
+        let l = LayerShape::fc("fc", 512, 512);
+        let c = layer_cost(&l, &small_acc());
+        assert!(c.utilization < 0.3);
+    }
+
+    #[test]
+    fn dataflows_same_macs_different_traffic() {
+        let l = LayerShape::conv("c", 28, 28, 64, 64, 3, 3, 1);
+        let mut acc = small_acc();
+        let os = layer_cost(&l, &acc);
+        acc.dataflow = Dataflow::WeightStationary;
+        let ws = layer_cost(&l, &acc);
+        acc.dataflow = Dataflow::InputStationary;
+        let is = layer_cost(&l, &acc);
+        assert_eq!(os.macs, ws.macs);
+        assert_eq!(ws.macs, is.macs);
+        assert_eq!(os.ofmap_writes, ws.ofmap_writes);
+        // WS reads each filter element exactly once
+        assert_eq!(ws.filter_reads, l.weight_bytes() as u64);
+        // IS reads each ifmap element once per im2col position (3×3 ⇒ 9×)
+        assert_eq!(is.ifmap_reads, l.input_bytes() as u64 * 9);
+    }
+
+    #[test]
+    fn cycles_scale_with_k_in_os() {
+        let a = layer_cost(&LayerShape::matmul("a", 4, 16, 4), &small_acc());
+        let b = layer_cost(&LayerShape::matmul("b", 4, 32, 4), &small_acc());
+        assert!(b.cycles > a.cycles);
+        assert_eq!(b.folds, a.folds);
+    }
+}

@@ -1,0 +1,108 @@
+//! Bench harness (criterion is not in the offline crate set).
+//!
+//! `cargo bench` targets are `harness = false` binaries that use this
+//! module: warmup + timed iterations, ns/op statistics, and throughput
+//! reporting, printed in a stable grep-friendly format:
+//!
+//! ```text
+//! bench <name> ... iters=N mean=… p50=… min=… [thrpt=…]
+//! ```
+
+use std::time::Instant;
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub min_ns: f64,
+    /// Optional elements-per-iteration for throughput reporting.
+    pub elems: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let scale = |ns: f64| -> String {
+            if ns >= 1e9 {
+                format!("{:.3} s", ns / 1e9)
+            } else if ns >= 1e6 {
+                format!("{:.3} ms", ns / 1e6)
+            } else if ns >= 1e3 {
+                format!("{:.3} µs", ns / 1e3)
+            } else {
+                format!("{:.0} ns", ns)
+            }
+        };
+        let mut s = format!(
+            "bench {:<44} iters={:<5} mean={:<12} p50={:<12} min={}",
+            self.name,
+            self.iters,
+            scale(self.mean_ns),
+            scale(self.p50_ns),
+            scale(self.min_ns),
+        );
+        if let Some(e) = self.elems {
+            let per_sec = e / (self.mean_ns / 1e9);
+            s.push_str(&format!("  thrpt={:.2} Melem/s", per_sec / 1e6));
+        }
+        s
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` runs. The closure returns
+/// a value that is black-boxed to keep the optimizer honest.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: mean,
+        p50_ns: crate::util::stats::percentile_sorted(&samples, 50.0),
+        min_ns: samples[0],
+        elems: None,
+    }
+}
+
+/// Like [`bench`] but annotates elements/iteration for throughput.
+pub fn bench_throughput<T>(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    elems: f64,
+    f: impl FnMut() -> T,
+) -> BenchResult {
+    let mut r = bench(name, warmup, iters, f);
+    r.elems = Some(elems);
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("noop-ish", 2, 16, || (0..100u64).sum::<u64>());
+        assert_eq!(r.iters, 16);
+        assert!(r.min_ns <= r.p50_ns && r.p50_ns <= r.mean_ns * 4.0);
+        assert!(r.report().contains("noop-ish"));
+    }
+
+    #[test]
+    fn throughput_reported() {
+        let r = bench_throughput("thr", 1, 8, 1000.0, || 42u64);
+        assert!(r.report().contains("Melem/s"));
+    }
+}

@@ -1,0 +1,139 @@
+//! Miniature property-based testing framework.
+//!
+//! `proptest`/`quickcheck` are not in the offline crate set; this module
+//! provides the subset the test suite needs: seeded generators, a `forall`
+//! runner with iteration counts, and shrinking-free but *reproducible*
+//! failure reports (the failing case index + seed are printed so a failure
+//! replays exactly).
+
+use super::rng::Pcg64;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // Seed fixed for CI reproducibility; override per-test when exploring.
+        Config { cases: 256, seed: 0x4D43_41A1 }
+    }
+}
+
+/// Run `prop` over `cases` generated inputs. Panics with the case index and
+/// seed on the first counterexample.
+pub fn forall<T, G, P>(cfg: Config, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Pcg64) -> T,
+    P: FnMut(&T) -> bool,
+{
+    let mut rng = Pcg64::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property falsified at case {case}/{} (seed {:#x})\ninput: {:?}",
+                cfg.cases, cfg.seed, input
+            );
+        }
+    }
+}
+
+/// Like [`forall`] but the property returns `Result<(), String>` so tests can
+/// report *why* a case failed.
+pub fn forall_explain<T, G, P>(cfg: Config, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Pcg64) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut rng = Pcg64::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property falsified at case {case}/{} (seed {:#x}): {msg}\ninput: {:?}",
+                cfg.cases, cfg.seed, input
+            );
+        }
+    }
+}
+
+// ---- common generators ----------------------------------------------------
+
+/// Vec of random bytes, length in [0, max_len].
+pub fn bytes(rng: &mut Pcg64, max_len: usize) -> Vec<u8> {
+    let len = rng.below(max_len as u64 + 1) as usize;
+    let mut v = vec![0u8; len];
+    rng.fill_bytes(&mut v);
+    v
+}
+
+/// Vec of i8 drawn from a near-zero-clustered DNN-like distribution:
+/// `round(N(0, sigma))` clamped to i8 — matches the paper's observation that
+/// quantized DNN data clusters around zero (§II-B).
+pub fn dnn_i8(rng: &mut Pcg64, len: usize, sigma: f64) -> Vec<i8> {
+    (0..len)
+        .map(|_| (rng.normal() * sigma).round().clamp(-128.0, 127.0) as i8)
+        .collect()
+}
+
+/// Uniform i8 vector (worst case for the encoder).
+pub fn uniform_i8(rng: &mut Pcg64, len: usize) -> Vec<i8> {
+    (0..len).map(|_| rng.next_u64() as i8).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_tautology() {
+        forall(Config::default(), |r| r.next_u64(), |_| true);
+    }
+
+    #[test]
+    #[should_panic(expected = "property falsified")]
+    fn forall_reports_counterexample() {
+        forall(
+            Config { cases: 50, seed: 1 },
+            |r| r.below(10),
+            |&x| x < 9, // will hit 9 within 50 cases
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "even")]
+    fn forall_explain_includes_reason() {
+        forall_explain(
+            Config { cases: 50, seed: 1 },
+            |r| r.below(4),
+            |&x| {
+                if x % 2 == 0 {
+                    Err("even".into())
+                } else {
+                    Ok(())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn dnn_i8_clusters_near_zero() {
+        let mut r = Pcg64::new(5);
+        let xs = dnn_i8(&mut r, 10_000, 10.0);
+        let near = xs.iter().filter(|&&x| x.abs() <= 20).count();
+        assert!(near as f64 / xs.len() as f64 > 0.9);
+    }
+
+    #[test]
+    fn bytes_respects_max_len() {
+        let mut r = Pcg64::new(6);
+        for _ in 0..100 {
+            assert!(bytes(&mut r, 17).len() <= 17);
+        }
+    }
+}

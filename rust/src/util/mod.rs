@@ -1,0 +1,18 @@
+//! Offline-environment substrates.
+//!
+//! The vendored crate set contains only the `xla` closure (no `rand`,
+//! `serde`, `clap`, `criterion`, `proptest`), so the pieces a production
+//! crate would normally pull from crates.io are implemented — and tested —
+//! here: a PCG64 RNG with Gaussian/lognormal draws ([`rng`]), descriptive
+//! statistics ([`stats`]), a JSON parser/writer for artifact manifests and
+//! result files ([`json`]), ASCII table rendering for the report commands
+//! ([`table`]), engineering-unit formatting ([`units`]), and a miniature
+//! property-testing framework ([`check`]).
+
+pub mod benchmark;
+pub mod check;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod units;

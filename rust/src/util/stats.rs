@@ -1,0 +1,347 @@
+//! Descriptive statistics over Monte-Carlo populations.
+//!
+//! Used by the retention / SNM / write-yield simulations to summarize sample
+//! populations the way the paper's figures do (means, spreads, percentiles,
+//! histograms, empirical CDFs).
+
+/// Summary statistics of a sample population.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    /// Population standard deviation (the MC populations here are complete).
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub median: f64,
+    pub p01: f64,
+    pub p99: f64,
+}
+
+/// Compute a [`Summary`]; returns `None` on an empty slice.
+pub fn summarize(xs: &[f64]) -> Option<Summary> {
+    if xs.is_empty() {
+        return None;
+    }
+    let n = xs.len();
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Some(Summary {
+        n,
+        mean,
+        std: var.sqrt(),
+        min: sorted[0],
+        max: sorted[n - 1],
+        median: percentile_sorted(&sorted, 50.0),
+        p01: percentile_sorted(&sorted, 1.0),
+        p99: percentile_sorted(&sorted, 99.0),
+    })
+}
+
+/// Percentile (linear interpolation) of a pre-sorted slice, `p` in [0, 100].
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let p = p.clamp(0.0, 100.0);
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = rank - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Percentile of an unsorted slice (sorts a copy).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&sorted, p)
+}
+
+/// Fixed-width histogram over [lo, hi); values outside are clamped to the
+/// edge bins (matches how the paper's retention histograms are drawn).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(bins > 0 && hi > lo);
+        Histogram { lo, hi, counts: vec![0; bins] }
+    }
+
+    pub fn from_samples(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Self {
+        let mut h = Histogram::new(lo, hi, bins);
+        for &x in xs {
+            h.add(x);
+        }
+        h
+    }
+
+    #[inline]
+    pub fn add(&mut self, x: f64) {
+        let bins = self.counts.len();
+        let idx = ((x - self.lo) / (self.hi - self.lo) * bins as f64) as i64;
+        let idx = idx.clamp(0, bins as i64 - 1) as usize;
+        self.counts[idx] += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Bin centers, aligned with `counts`.
+    pub fn centers(&self) -> Vec<f64> {
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        (0..self.counts.len())
+            .map(|i| self.lo + (i as f64 + 0.5) * w)
+            .collect()
+    }
+
+    /// Normalized densities (fraction per bin).
+    pub fn densities(&self) -> Vec<f64> {
+        let t = self.total().max(1) as f64;
+        self.counts.iter().map(|&c| c as f64 / t).collect()
+    }
+}
+
+/// Empirical CDF evaluated at `x`: fraction of samples ≤ x.
+pub fn ecdf(sorted: &[f64], x: f64) -> f64 {
+    // binary search for rightmost index with value <= x
+    let mut lo = 0usize;
+    let mut hi = sorted.len();
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        if sorted[mid] <= x {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    lo as f64 / sorted.len() as f64
+}
+
+/// Error function, Abramowitz & Stegun 7.1.26 (|ε| ≤ 1.5e-7) — enough for
+/// the flip-probability CDFs, whose calibration anchors are 2-digit.
+pub fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+/// Standard normal CDF Φ(z).
+pub fn normal_cdf(z: f64) -> f64 {
+    0.5 * (1.0 + erf(z / std::f64::consts::SQRT_2))
+}
+
+/// Inverse standard normal CDF (Acklam's rational approximation, |ε|<1.2e-8
+/// in the central region) — used to place Monte-Carlo quantile anchors.
+pub fn normal_quantile(p: f64) -> f64 {
+    assert!(p > 0.0 && p < 1.0, "quantile domain");
+    // Coefficients for Peter Acklam's algorithm.
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    let plow = 0.02425;
+    if p < plow {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - plow {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -(((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    }
+}
+
+/// Linear interpolation on a monotone (x, y) table; clamps outside the range.
+pub fn interp(xs: &[f64], ys: &[f64], x: f64) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    assert!(!xs.is_empty());
+    if x <= xs[0] {
+        return ys[0];
+    }
+    if x >= xs[xs.len() - 1] {
+        return ys[ys.len() - 1];
+    }
+    let mut i = 0;
+    while xs[i + 1] < x {
+        i += 1;
+    }
+    let t = (x - xs[i]) / (xs[i + 1] - xs[i]);
+    ys[i] * (1.0 - t) + ys[i + 1] * t
+}
+
+/// Inverse interpolation: find x where the monotone-increasing y(x) table
+/// crosses `target`. Returns `None` if never crossed.
+pub fn crossing(xs: &[f64], ys: &[f64], target: f64) -> Option<f64> {
+    assert_eq!(xs.len(), ys.len());
+    for i in 1..xs.len() {
+        let (y0, y1) = (ys[i - 1], ys[i]);
+        if (y0 <= target && y1 >= target) || (y0 >= target && y1 <= target) {
+            if (y1 - y0).abs() < 1e-300 {
+                return Some(xs[i - 1]);
+            }
+            let t = (target - y0) / (y1 - y0);
+            return Some(xs[i - 1] + t * (xs[i] - xs[i - 1]));
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_constant() {
+        let s = summarize(&[2.0; 10]).unwrap();
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.min, 2.0);
+        assert_eq!(s.max, 2.0);
+        assert_eq!(s.median, 2.0);
+    }
+
+    #[test]
+    fn summary_empty_is_none() {
+        assert!(summarize(&[]).is_none());
+    }
+
+    #[test]
+    fn summary_known_values() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert!((s.std - (1.25f64).sqrt()).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!((s.median - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [10.0, 20.0, 30.0, 40.0];
+        assert_eq!(percentile(&xs, 0.0), 10.0);
+        assert_eq!(percentile(&xs, 100.0), 40.0);
+        assert!((percentile(&xs, 50.0) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_bins_and_clamping() {
+        let h = Histogram::from_samples(&[-1.0, 0.1, 0.5, 0.9, 2.0], 0.0, 1.0, 2);
+        assert_eq!(h.counts, vec![2, 3]); // -1 clamps low; 0.5 rounds into bin 1; 2.0 clamps high
+        assert_eq!(h.total(), 5);
+    }
+
+    #[test]
+    fn histogram_centers() {
+        let h = Histogram::new(0.0, 1.0, 4);
+        let c = h.centers();
+        assert!((c[0] - 0.125).abs() < 1e-12);
+        assert!((c[3] - 0.875).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_densities_sum_to_one() {
+        let h = Histogram::from_samples(&[0.1, 0.2, 0.3, 0.7], 0.0, 1.0, 5);
+        let total: f64 = h.densities().iter().sum();
+        assert!((total - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ecdf_basic() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(ecdf(&xs, 0.5), 0.0);
+        assert_eq!(ecdf(&xs, 2.0), 0.5);
+        assert_eq!(ecdf(&xs, 10.0), 1.0);
+    }
+
+    #[test]
+    fn interp_and_clamp() {
+        let xs = [0.0, 1.0, 2.0];
+        let ys = [0.0, 10.0, 40.0];
+        assert_eq!(interp(&xs, &ys, -5.0), 0.0);
+        assert_eq!(interp(&xs, &ys, 5.0), 40.0);
+        assert!((interp(&xs, &ys, 0.5) - 5.0).abs() < 1e-12);
+        assert!((interp(&xs, &ys, 1.5) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn erf_known_points() {
+        assert!(erf(0.0).abs() < 1e-6);
+        assert!((erf(1.0) - 0.8427007929).abs() < 1e-6);
+        assert!((erf(-1.0) + 0.8427007929).abs() < 1e-6);
+        assert!((erf(3.0) - 0.9999779).abs() < 1e-6);
+    }
+
+    #[test]
+    fn normal_cdf_symmetry() {
+        assert!((normal_cdf(0.0) - 0.5).abs() < 1e-6);
+        for z in [0.5, 1.0, 2.326] {
+            assert!((normal_cdf(z) + normal_cdf(-z) - 1.0).abs() < 1e-7);
+        }
+        // 1% tail at z = -2.3263
+        assert!((normal_cdf(-2.3263) - 0.01).abs() < 1e-4);
+    }
+
+    #[test]
+    fn quantile_inverts_cdf() {
+        for p in [0.001, 0.01, 0.25, 0.5, 0.75, 0.99, 0.999] {
+            let z = normal_quantile(p);
+            assert!((normal_cdf(z) - p).abs() < 1e-6, "p={p} z={z}");
+        }
+    }
+
+    #[test]
+    fn crossing_finds_threshold() {
+        let xs = [0.0, 1.0, 2.0, 3.0];
+        let ys = [0.0, 0.1, 0.5, 0.9];
+        let x = crossing(&xs, &ys, 0.3).unwrap();
+        assert!((x - 1.5).abs() < 1e-12);
+        assert!(crossing(&xs, &ys, 2.0).is_none());
+    }
+}

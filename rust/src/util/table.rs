@@ -1,0 +1,211 @@
+//! ASCII table rendering + CSV output for the report commands.
+//!
+//! Every `mcaimem report <id>` command prints the paper's rows/series as an
+//! aligned text table and mirrors them to `results/<id>.csv`.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::Result;
+
+/// Column alignment.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// An in-memory table: header row + data rows of strings.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width mismatch in table `{}`",
+            self.title
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    /// Render with box-drawing rules. First column left-aligned, numeric
+    /// columns right-aligned (detected per column over data cells).
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let aligns: Vec<Align> = (0..ncols)
+            .map(|i| {
+                if i == 0 {
+                    Align::Left
+                } else if self.rows.iter().all(|r| looks_numeric(&r[i])) && !self.rows.is_empty() {
+                    Align::Right
+                } else {
+                    Align::Left
+                }
+            })
+            .collect();
+
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            let _ = writeln!(out, "{}", self.title);
+        }
+        let sep = |out: &mut String| {
+            out.push('+');
+            for w in &widths {
+                for _ in 0..w + 2 {
+                    out.push('-');
+                }
+                out.push('+');
+            }
+            out.push('\n');
+        };
+        let render_row = |out: &mut String, cells: &[String]| {
+            out.push('|');
+            for (i, c) in cells.iter().enumerate() {
+                let pad = widths[i] - c.chars().count();
+                out.push(' ');
+                match aligns[i] {
+                    Align::Left => {
+                        out.push_str(c);
+                        for _ in 0..pad {
+                            out.push(' ');
+                        }
+                    }
+                    Align::Right => {
+                        for _ in 0..pad {
+                            out.push(' ');
+                        }
+                        out.push_str(c);
+                    }
+                }
+                out.push_str(" |");
+            }
+            out.push('\n');
+        };
+        sep(&mut out);
+        render_row(&mut out, &self.header);
+        sep(&mut out);
+        for row in &self.rows {
+            render_row(&mut out, row);
+        }
+        sep(&mut out);
+        out
+    }
+
+    /// CSV serialization (RFC 4180 quoting).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let esc = |s: &str| -> String {
+            if s.contains(',') || s.contains('"') || s.contains('\n') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let _ = writeln!(
+            out,
+            "{}",
+            self.header.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",")
+        );
+        for row in &self.rows {
+            let _ = writeln!(
+                out,
+                "{}",
+                row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(",")
+            );
+        }
+        out
+    }
+
+    /// Write the CSV mirror under `dir` (created if needed).
+    pub fn write_csv(&self, dir: &Path, name: &str) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join(format!("{name}.csv")), self.to_csv())?;
+        Ok(())
+    }
+}
+
+fn looks_numeric(s: &str) -> bool {
+    let t = s.trim_end_matches(['%', 'x', '×']);
+    !t.is_empty() && t.parse::<f64>().is_ok()
+}
+
+/// Format a float with `digits` significant decimals, trimming zeros the way
+/// the paper's tables print (e.g. `0.00016`, `19.29`, `3.4`).
+pub fn fnum(x: f64, digits: usize) -> String {
+    let s = format!("{:.*}", digits, x);
+    if s.contains('.') {
+        let t = s.trim_end_matches('0').trim_end_matches('.');
+        t.to_string()
+    } else {
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("T", &["name", "val"]);
+        t.row(vec!["a".into(), "1.5".into()]);
+        t.row(vec!["long-name".into(), "22".into()]);
+        let r = t.render();
+        assert!(r.contains("| name      |"));
+        assert!(r.contains("| 1.5 |")); // right-aligned numeric
+        assert!(r.contains("|  22 |"));
+        assert!(r.lines().filter(|l| l.starts_with('+')).count() == 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn row_width_checked() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn csv_quotes_specials() {
+        let mut t = Table::new("T", &["k", "v"]);
+        t.row(vec!["a,b".into(), "say \"hi\"".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"a,b\""));
+        assert!(csv.contains("\"say \"\"hi\"\"\""));
+    }
+
+    #[test]
+    fn fnum_trims() {
+        assert_eq!(fnum(19.29, 2), "19.29");
+        assert_eq!(fnum(3.40, 2), "3.4");
+        assert_eq!(fnum(0.00016, 5), "0.00016");
+        assert_eq!(fnum(5.0, 2), "5");
+    }
+
+    #[test]
+    fn numeric_detection_handles_units() {
+        assert!(looks_numeric("48%"));
+        assert!(looks_numeric("3.4x"));
+        assert!(!looks_numeric("SRAM"));
+    }
+}

@@ -1,0 +1,114 @@
+//! Engineering units used throughout the memory models.
+//!
+//! Internal convention (documented once here, relied on everywhere):
+//! * time    — seconds
+//! * energy  — joules
+//! * power   — watts
+//! * area    — square metres
+//! * voltage — volts
+//! * current — amperes
+//! * capacitance — farads
+//!
+//! Paper-facing output uses µs / pJ / mW / µm² — the helpers here convert
+//! and pretty-print with SI prefixes.
+
+pub const NANO: f64 = 1e-9;
+pub const MICRO: f64 = 1e-6;
+pub const MILLI: f64 = 1e-3;
+pub const PICO: f64 = 1e-12;
+pub const FEMTO: f64 = 1e-15;
+pub const KILO: f64 = 1e3;
+pub const MEGA: f64 = 1e6;
+pub const GIGA: f64 = 1e9;
+
+/// Bytes per kibibyte/mebibyte (the paper's "108KB", "1MB", "8MB" are binary).
+pub const KIB: usize = 1024;
+pub const MIB: usize = 1024 * 1024;
+
+/// Convert seconds → microseconds.
+pub fn to_us(seconds: f64) -> f64 {
+    seconds / MICRO
+}
+
+/// Convert joules → picojoules.
+pub fn to_pj(joules: f64) -> f64 {
+    joules / PICO
+}
+
+/// Convert watts → milliwatts.
+pub fn to_mw(watts: f64) -> f64 {
+    watts / MILLI
+}
+
+/// Convert m² → µm².
+pub fn to_um2(m2: f64) -> f64 {
+    m2 / (MICRO * MICRO)
+}
+
+/// Pretty-print a value with an SI prefix, e.g. `si(1.23e-5, "s") == "12.3 µs"`.
+pub fn si(value: f64, unit: &str) -> String {
+    if value == 0.0 {
+        return format!("0 {unit}");
+    }
+    let prefixes: &[(f64, &str)] = &[
+        (1e12, "T"),
+        (1e9, "G"),
+        (1e6, "M"),
+        (1e3, "k"),
+        (1.0, ""),
+        (1e-3, "m"),
+        (1e-6, "µ"),
+        (1e-9, "n"),
+        (1e-12, "p"),
+        (1e-15, "f"),
+        (1e-18, "a"),
+    ];
+    let mag = value.abs();
+    for &(scale, p) in prefixes {
+        if mag >= scale {
+            return format!("{} {}{}", super::table::fnum(value / scale, 3), p, unit);
+        }
+    }
+    format!("{value:e} {unit}")
+}
+
+/// Boltzmann constant (J/K) — used by the subthreshold slope model.
+pub const K_BOLTZMANN: f64 = 1.380_649e-23;
+/// Elementary charge (C).
+pub const Q_ELECTRON: f64 = 1.602_176_634e-19;
+
+/// Thermal voltage kT/q at a temperature in °C.
+pub fn thermal_voltage(temp_c: f64) -> f64 {
+    K_BOLTZMANN * (temp_c + 273.15) / Q_ELECTRON
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions() {
+        assert!((to_us(12.57e-6) - 12.57).abs() < 1e-9);
+        assert!((to_pj(0.08e-12) - 0.08).abs() < 1e-12);
+        assert!((to_mw(19.29e-3) - 19.29).abs() < 1e-9);
+        assert!((to_um2(35.2e-12) - 35.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn si_prefix_selection() {
+        assert_eq!(si(12.57e-6, "s"), "12.57 µs");
+        assert_eq!(si(19.29e-3, "W"), "19.29 mW");
+        assert_eq!(si(0.0, "J"), "0 J");
+        assert_eq!(si(1.5e3, "Hz"), "1.5 kHz");
+        assert_eq!(si(0.16e-12, "J"), "160 fJ");
+    }
+
+    #[test]
+    fn thermal_voltage_at_room_and_hot() {
+        let vt25 = thermal_voltage(25.0);
+        let vt85 = thermal_voltage(85.0);
+        assert!((vt25 - 0.0257).abs() < 0.0005, "vt25={vt25}");
+        assert!(vt85 > vt25); // leakage worsens when hot
+        assert!((vt85 - 0.0309).abs() < 0.0005, "vt85={vt85}");
+    }
+}

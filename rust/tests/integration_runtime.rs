@@ -1,0 +1,128 @@
+//! Integration tests over the AOT artifacts + PJRT runtime — the
+//! cross-language correctness seam: the L1 Pallas kernels (compiled into
+//! the HLO) must agree bit-for-bit with the independent Rust
+//! implementations, and the L2 model must reproduce the Fig. 11 behaviour
+//! when driven from Rust.
+//!
+//! These tests skip (with a note) when `artifacts/` has not been built;
+//! `make test` builds it first.
+
+use mcaimem::encode::one_enhancement::{decode_byte, encode, encode_byte};
+use mcaimem::inject::{inject, Mode};
+use mcaimem::runtime::executor::{ModelRunner, StoreVariant};
+use mcaimem::util::rng::Pcg64;
+
+fn runner() -> Option<ModelRunner> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match ModelRunner::new(&dir) {
+        Ok(r) => Some(r),
+        Err(e) => {
+            eprintln!("skipping (artifacts not built): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn pallas_encode_matches_rust_encode_bit_for_bit() {
+    let Some(mut r) = runner() else { return };
+    let mut rng = Pcg64::new(11);
+    let x: Vec<i8> = (0..4096).map(|_| rng.next_u64() as i8).collect();
+    let pallas = r.encode_only(&x).unwrap();
+    assert_eq!(pallas, encode(&x));
+}
+
+#[test]
+fn pallas_store_path_matches_rust_store_path() {
+    let Some(mut r) = runner() else { return };
+    let mut rng = Pcg64::new(13);
+    for p in [0.0, 0.05, 0.5, 1.0] {
+        let x: Vec<i8> = (0..4096).map(|_| rng.next_u64() as i8).collect();
+        let mask = ModelRunner::draw_mask(&mut rng, x.len(), p);
+        let pallas = r.encoder_roundtrip(&x, &mask).unwrap();
+        // rust reference: encode → or-in masked zeros → decode
+        let rust: Vec<i8> = x
+            .iter()
+            .zip(&mask)
+            .map(|(&v, &m)| {
+                let e = encode_byte(v as u8);
+                decode_byte(e | (m as u8 & !e & 0x7f)) as i8
+            })
+            .collect();
+        assert_eq!(pallas, rust, "p={p}");
+    }
+}
+
+#[test]
+fn store_path_statistics_match_rust_inject_model() {
+    // same transform, independent mask draws: the *distribution* of damage
+    // must agree between the PJRT path and rust/src/inject
+    let Some(mut r) = runner() else { return };
+    let mut rng = Pcg64::new(17);
+    let p = 0.1;
+    let x: Vec<i8> = (0..4096).map(|_| (rng.normal() * 8.0) as i8).collect(); // roundtrip artifact is fixed at 4096
+
+    let mask = ModelRunner::draw_mask(&mut rng, x.len(), p);
+    let pallas = r.encoder_roundtrip(&x, &mask).unwrap();
+    let err_pallas: f64 = x
+        .iter()
+        .zip(&pallas)
+        .map(|(&a, &b)| (a as i16 - b as i16).abs() as f64)
+        .sum::<f64>()
+        / x.len() as f64;
+
+    let mut rust = x.clone();
+    inject(&mut rust, p, Mode::WithOneEnhancement, &mut rng);
+    let err_rust: f64 = x
+        .iter()
+        .zip(&rust)
+        .map(|(&a, &b)| (a as i16 - b as i16).abs() as f64)
+        .sum::<f64>()
+        / x.len() as f64;
+
+    let rel = (err_pallas - err_rust).abs() / err_rust.max(1e-9);
+    assert!(rel < 0.15, "pallas={err_pallas} rust={err_rust}");
+}
+
+#[test]
+fn clean_accuracy_matches_manifest() {
+    let Some(mut r) = runner() else { return };
+    let acc = r.accuracy(StoreVariant::Clean, 0.0, 8, 3).unwrap();
+    assert!((acc - r.artifacts.int8_clean_acc).abs() < 0.05, "acc={acc}");
+    assert!(acc > 0.9);
+}
+
+#[test]
+fn clean_inference_is_deterministic() {
+    let Some(mut r) = runner() else { return };
+    let x = r.artifacts.tensor("x_test_i8").unwrap().as_i8().unwrap();
+    let batch = r.artifacts.batch * r.artifacts.input_dim;
+    let mut rng = Pcg64::new(5);
+    let a = r.infer(&x[..batch], StoreVariant::Clean, 0.0, &mut rng).unwrap();
+    let b = r.infer(&x[..batch], StoreVariant::Clean, 0.0, &mut rng).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn fig11_ordering_holds_through_pjrt() {
+    let Some(mut r) = runner() else { return };
+    let with = r.accuracy(StoreVariant::Mcaimem, 0.10, 4, 7).unwrap();
+    let without = r.accuracy(StoreVariant::McaimemNoEncoder, 0.10, 4, 7).unwrap();
+    assert!(
+        with > without + 0.3,
+        "one-enhancement must dominate at 10%: with={with} without={without}"
+    );
+    // without-encoder at 25% collapses toward chance (paper: "plummets")
+    let collapsed = r.accuracy(StoreVariant::McaimemNoEncoder, 0.25, 4, 9).unwrap();
+    assert!(collapsed < 0.35, "collapsed={collapsed}");
+}
+
+#[test]
+fn zero_flip_rate_equals_clean_through_aged_graph() {
+    let Some(mut r) = runner() else { return };
+    let clean = r.accuracy(StoreVariant::Clean, 0.0, 4, 1).unwrap();
+    let aged0 = r.accuracy(StoreVariant::Mcaimem, 0.0, 4, 1).unwrap();
+    let aged0n = r.accuracy(StoreVariant::McaimemNoEncoder, 0.0, 4, 1).unwrap();
+    assert_eq!(clean, aged0);
+    assert_eq!(clean, aged0n);
+}

@@ -1,0 +1,117 @@
+//! Whole-system integration: the paper's headline claims as executable
+//! gates, report generation, and closed-form ↔ event-driven agreement.
+
+use mcaimem::coordinator::scheduler::simulate_inference;
+use mcaimem::energy::opswatt::opswatt_gain;
+use mcaimem::energy::system_eval::{evaluate, mcaimem_gain, MemChoice};
+use mcaimem::mem::area::AreaModel;
+use mcaimem::mem::MemKind;
+use mcaimem::scalesim::accelerator::AcceleratorConfig;
+use mcaimem::scalesim::{network, simulate_network};
+use mcaimem::util::units::MIB;
+
+#[test]
+fn headline_area_reduction_is_48_percent() {
+    let red = AreaModel::lp45().mcaimem_reduction(MIB);
+    assert!((red - 0.48).abs() < 0.005, "reduction={red}");
+}
+
+#[test]
+fn headline_energy_gain_near_3_4x_on_the_benchmark_suite() {
+    // the paper's single headline number is the suite-level gain; per
+    // workload it varies. Gate: geometric mean across CNNs on Eyeriss
+    // within [2.7, 4.2] and every workload > 2.2×.
+    let acc = AcceleratorConfig::eyeriss();
+    let mut logsum = 0.0;
+    let mut n = 0.0;
+    for net in network::all_networks() {
+        let t = simulate_network(&net, &acc);
+        let g = mcaimem_gain(&t, &acc);
+        assert!(g > 2.2, "{}: gain={g}", net.name);
+        logsum += g.ln();
+        n += 1.0;
+    }
+    let gmean = (logsum / n).exp();
+    assert!(gmean > 2.7 && gmean < 4.2, "geometric-mean gain={gmean}");
+}
+
+#[test]
+fn opswatt_band_matches_fig16() {
+    for acc in AcceleratorConfig::paper_platforms() {
+        for net in network::all_networks() {
+            let t = simulate_network(&net, &acc);
+            let g = opswatt_gain(&t, &acc, &MemChoice::Mcaimem { vref: 0.8 });
+            assert!(
+                g > 0.20 && g < 0.55,
+                "{}@{}: ops/W gain {g} out of band",
+                net.name,
+                acc.name
+            );
+        }
+    }
+}
+
+#[test]
+fn memory_ranking_is_stable_across_workloads_and_platforms() {
+    // total energy: MCAIMem < SRAM < RRAM on every (net, platform);
+    // eDRAM is refresh-crippled: always worse than MCAIMem
+    for acc in AcceleratorConfig::paper_platforms() {
+        for net in network::all_networks() {
+            let t = simulate_network(&net, &acc);
+            let m = evaluate(&t, &acc, &MemChoice::Mcaimem { vref: 0.8 }).total_j();
+            let s = evaluate(&t, &acc, &MemChoice::Sram).total_j();
+            let e = evaluate(&t, &acc, &MemChoice::Edram2t).total_j();
+            let r = evaluate(&t, &acc, &MemChoice::Rram).total_j();
+            assert!(m < s && s < r, "{}@{}", net.name, acc.name);
+            assert!(m < e, "{}@{}", net.name, acc.name);
+        }
+    }
+}
+
+#[test]
+fn all_reports_generate_with_nonempty_rows() {
+    for id in mcaimem::report::ALL_IDS {
+        if id == "fig11" {
+            continue; // artifact-dependent; covered in integration_runtime
+        }
+        let tables = mcaimem::report::generate(id, None, true).unwrap();
+        assert!(!tables.is_empty());
+        for t in tables {
+            assert!(!t.rows.is_empty(), "{id}");
+            // CSV mirror renders
+            assert!(t.to_csv().lines().count() >= 2);
+        }
+    }
+}
+
+#[test]
+fn event_driven_and_closed_form_agree_on_scale() {
+    // over several networks the two estimates stay within 2× (different
+    // data-occupancy assumptions; see scheduler.rs doc-comment)
+    let acc = AcceleratorConfig::eyeriss();
+    for name in ["LeNet", "VGG11"] {
+        let net = network::by_name(name).unwrap();
+        let sim = simulate_inference(&net, &acc, 0.8, 3).unwrap();
+        let t = simulate_network(&net, &acc);
+        let cf = evaluate(&t, &acc, &MemChoice::Mcaimem { vref: 0.8 });
+        let ratio = sim.total_j() / cf.total_j();
+        assert!(ratio > 0.5 && ratio < 2.0, "{name}: ratio={ratio}");
+    }
+}
+
+#[test]
+fn cell_area_ordering_matches_table1() {
+    use mcaimem::mem::area::cell_area_rel;
+    assert!(cell_area_rel(MemKind::Edram1t1c) < cell_area_rel(MemKind::Edram3t));
+    assert!(cell_area_rel(MemKind::Edram3t) < cell_area_rel(MemKind::Edram2t));
+    assert!(cell_area_rel(MemKind::Edram2t) < 1.0);
+}
+
+#[test]
+fn tpu_and_eyeriss_scale_static_power_correctly() {
+    // TPUv1's 8 MB buffer must burn ~76× the static power of Eyeriss' 108 KB
+    let e = AcceleratorConfig::eyeriss();
+    let t = AcceleratorConfig::tpuv1();
+    let ratio = t.buffer_scale_vs_1mb() / e.buffer_scale_vs_1mb();
+    assert!((ratio - 8.0 * 1024.0 / 108.0).abs() < 0.5, "ratio={ratio}");
+}

@@ -1,0 +1,243 @@
+//! Property-based tests over the crate's core invariants, using the
+//! in-tree mini-framework (`util::check`) — seeded, reproducible, with
+//! counterexample reporting.
+
+use mcaimem::encode::one_enhancement::{decode, encode, encode_byte};
+use mcaimem::encode::stats::bit_histogram;
+use mcaimem::inject::{flip_zeros_byte, inject, Mode};
+use mcaimem::mem::bank::MemoryMap;
+use mcaimem::mem::energy::EnergyCard;
+use mcaimem::mem::mcaimem::MixedCellMemory;
+use mcaimem::util::check::{self, Config};
+use mcaimem::util::json::Json;
+use mcaimem::util::rng::Pcg64;
+use mcaimem::util::stats::{normal_cdf, normal_quantile};
+
+fn cfg(cases: usize, seed: u64) -> Config {
+    Config { cases, seed }
+}
+
+#[test]
+fn prop_encoder_is_involution() {
+    check::forall(
+        cfg(512, 1),
+        |r| check::uniform_i8(r, 257),
+        |xs| decode(&encode(xs)) == *xs,
+    );
+}
+
+#[test]
+fn prop_encoder_preserves_sign_and_order_of_magnitude_bits() {
+    check::forall(
+        cfg(512, 2),
+        |r| r.next_u64() as u8,
+        |&b| {
+            let e = encode_byte(b);
+            // sign plane untouched; transform is a bijection on the low 7
+            e & 0x80 == b & 0x80 && encode_byte(e) == b
+        },
+    );
+}
+
+#[test]
+fn prop_encoding_never_reduces_ones_for_nonnegative() {
+    // for v ≥ 0 near zero, the encoder adds ones; globally it's a bijection
+    // so we check the *distributional* property on DNN-like data
+    check::forall(
+        cfg(64, 3),
+        |r| check::dnn_i8(r, 2048, 9.0),
+        |xs| {
+            let before = bit_histogram(xs).edram_ones_frac();
+            let after = bit_histogram(&encode(xs)).edram_ones_frac();
+            after >= before
+        },
+    );
+}
+
+#[test]
+fn prop_inject_only_adds_bits_and_never_touches_sign() {
+    check::forall_explain(
+        cfg(256, 4),
+        |r| {
+            let xs = check::uniform_i8(r, 300);
+            let p = r.f64();
+            let seed = r.next_u64();
+            (xs, p, seed)
+        },
+        |(xs, p, seed)| {
+            let mut rng = Pcg64::new(*seed);
+            let mut ys = xs.clone();
+            inject(&mut ys, *p, Mode::WithoutOneEnhancement, &mut rng);
+            for (&a, &b) in xs.iter().zip(&ys) {
+                let (a, b) = (a as u8, b as u8);
+                if b & a != a {
+                    return Err(format!("bit removed: {a:08b} → {b:08b}"));
+                }
+                if (a ^ b) & 0x80 != 0 {
+                    return Err("sign flipped".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_flip_zeros_byte_idempotent_at_p1() {
+    check::forall(
+        cfg(256, 5),
+        |r| (r.next_u64() as u8, r.next_u64()),
+        |&(b, seed)| {
+            let mut rng = Pcg64::new(seed);
+            // at p = 1 every low-7 zero flips: result is exactly b | 0x7f
+            flip_zeros_byte(b, 1.0, &mut rng) == (b | 0x7f)
+        },
+    );
+}
+
+#[test]
+fn prop_memory_roundtrip_is_exact_when_fresh() {
+    check::forall_explain(
+        cfg(48, 6),
+        |r| {
+            let data = check::bytes(r, 512);
+            let offset = r.below(1024) as usize;
+            let seed = r.next_u64();
+            (data, offset, seed)
+        },
+        |(data, offset, seed)| {
+            if data.is_empty() {
+                return Ok(());
+            }
+            let mut m = MixedCellMemory::new(16 * 1024, *seed);
+            m.write(*offset, data, 1e-9);
+            let back = m.read(*offset, data.len(), 2e-9);
+            if back != *data {
+                return Err("fresh read mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_memory_errors_monotone_in_staleness() {
+    // reading later never yields fewer corrupted bytes (flips only add)
+    check::forall_explain(
+        cfg(24, 7),
+        |r| r.next_u64(),
+        |&seed| {
+            let mut m = MixedCellMemory::new(16 * 1024, seed);
+            m.encode_enabled = false;
+            let data = vec![0u8; 128];
+            m.write(0, &data, 0.0);
+            let t1 = m.read(0, 128, 20e-6);
+            let e1 = t1.iter().filter(|&&b| b != 0).count();
+            let t2 = m.read(0, 128, 60e-6);
+            let e2 = t2.iter().filter(|&&b| b != 0).count();
+            if e2 < e1 {
+                return Err(format!("errors shrank: {e1} → {e2}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_mixed_card_is_weighted_average_of_components() {
+    // the 1:7 composition law holds for every ones-fraction, not just the
+    // table-II endpoints
+    check::forall(
+        cfg(256, 8),
+        |r| r.f64(),
+        |&f| {
+            let s = EnergyCard::sram();
+            let e = EnergyCard::edram2t();
+            let m = EnergyCard::mcaimem_default();
+            let blend = |sv: f64, ev: f64| (sv + 7.0 * ev) / 8.0;
+            let ok = |a: f64, b: f64| (a - b).abs() < 1e-18 + 1e-9 * b.abs();
+            ok(
+                m.static_power(1 << 20, f),
+                blend(s.static_power(1 << 20, f), e.static_power(1 << 20, f)),
+            ) && ok(
+                m.read_energy(1024, f),
+                blend(s.read_energy(1024, f), e.read_energy(1024, f)),
+            ) && ok(
+                m.write_energy(1024, f),
+                blend(s.write_energy(1024, f), e.write_energy(1024, f)),
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_memorymap_locate_is_bijective() {
+    check::forall(
+        cfg(512, 9),
+        |r| {
+            let banks = 1 + r.below(32) as usize;
+            let addr_frac = r.f64();
+            (banks, addr_frac)
+        },
+        |&(banks, addr_frac)| {
+            let map = MemoryMap::with_capacity(banks * 16 * 1024);
+            let addr = ((map.capacity() - 1) as f64 * addr_frac) as usize;
+            let (b, r_, c) = map.locate(addr);
+            b * map.bank.bytes + r_ * map.bank.row_bytes + c == addr
+        },
+    );
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    fn random_json(rng: &mut Pcg64, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.bernoulli(0.5)),
+            2 => Json::Num((rng.next_u64() as i32 as f64) / 8.0),
+            3 => Json::Str(format!("s{}", rng.below(1000))),
+            4 => Json::Arr((0..rng.below(4)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(4))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    check::forall(
+        cfg(256, 10),
+        |r| random_json(r, 3),
+        |j| {
+            Json::parse(&j.to_string()).unwrap() == *j
+                && Json::parse(&j.to_pretty()).unwrap() == *j
+        },
+    );
+}
+
+#[test]
+fn prop_normal_quantile_inverts_cdf() {
+    check::forall(
+        cfg(512, 11),
+        |r| 0.001 + 0.998 * r.f64(),
+        |&p| (normal_cdf(normal_quantile(p)) - p).abs() < 1e-5,
+    );
+}
+
+#[test]
+fn prop_flip_model_monotone_in_time_and_vref() {
+    let model = mcaimem::circuit::flip_model::FlipModel::mcaimem_85c();
+    check::forall(
+        cfg(256, 12),
+        |r| {
+            let t1 = r.range(0.0, 30e-6);
+            let t2 = t1 + r.range(0.0, 30e-6);
+            let v1 = r.range(0.45, 0.75);
+            let v2 = v1 + r.range(0.0, 0.85 - v1);
+            (t1, t2, v1, v2)
+        },
+        |&(t1, t2, v1, v2)| {
+            model.flip_prob(t2, v1) + 1e-12 >= model.flip_prob(t1, v1)
+                && model.flip_prob(t1, v2) <= model.flip_prob(t1, v1) + 1e-12
+        },
+    );
+}
