@@ -1,12 +1,22 @@
 //! Bench + regeneration for Fig. 1 — the paper's headline claims.
+//! Mirrors results to `BENCH_headline.json` (perf trajectory, see
+//! EXPERIMENTS.md §Perf). Pass `--quick` for the CI smoke run.
 
 use mcaimem::report::circuit_reports;
-use mcaimem::util::benchmark::bench;
+use mcaimem::util::benchmark::{bench, BenchSuite};
 
 fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
     println!("== regenerating Fig. 1 ==\n");
     for t in circuit_reports::fig1() {
         println!("{}", t.render());
     }
-    println!("{}", bench("report::fig1", 3, 50, circuit_reports::fig1).report());
+    let mut suite = BenchSuite::new("headline");
+    println!(
+        "{}",
+        suite
+            .record(bench("report::fig1", 3, if quick { 5 } else { 50 }, circuit_reports::fig1))
+            .report()
+    );
+    suite.write_json_at_repo_root();
 }

@@ -1,78 +1,147 @@
 //! Hot-path microbenches for the §Perf optimization loop (EXPERIMENTS.md):
-//! the functional array's access/refresh paths, the Monte-Carlo engine,
-//! the RNG, and the bit-plane transforms.
+//! the functional array's access/refresh paths — word-parallel vs the
+//! retained scalar reference — the Monte-Carlo engine, the RNG, and the
+//! bit-plane transforms.
+//!
+//! Pass `--quick` (CI smoke) to cut iteration counts ~10×. Results are
+//! mirrored to `BENCH_hotpath.json` for the cross-PR perf trajectory.
 
+use mcaimem::mem::bitplane;
 use mcaimem::mem::mcaimem::MixedCellMemory;
-use mcaimem::util::benchmark::{bench, bench_throughput};
+use mcaimem::util::benchmark::{bench, bench_throughput, BenchSuite};
 use mcaimem::util::rng::Pcg64;
+use mcaimem::util::table::fnum;
 
 fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let it = |n: usize| if quick { (n / 10).max(2) } else { n };
+    let mut suite = BenchSuite::new("hotpath");
+
     // RNG primitives
     let mut rng = Pcg64::new(1);
     println!(
         "{}",
-        bench_throughput("rng::next_u64 ×1M", 2, 20, 1e6, || {
-            let mut acc = 0u64;
-            for _ in 0..1_000_000 {
-                acc ^= rng.next_u64();
-            }
-            acc
-        })
-        .report()
+        suite
+            .record(bench_throughput("rng::next_u64 ×1M", 2, it(20), 1e6, || {
+                let mut acc = 0u64;
+                for _ in 0..1_000_000 {
+                    acc ^= rng.next_u64();
+                }
+                acc
+            }))
+            .report()
     );
     println!(
         "{}",
-        bench_throughput("rng::normal ×100k", 2, 20, 1e5, || {
-            let mut acc = 0.0;
-            for _ in 0..100_000 {
-                acc += rng.normal();
-            }
-            acc
-        })
-        .report()
+        suite
+            .record(bench_throughput("rng::normal ×100k", 2, it(20), 1e5, || {
+                let mut acc = 0.0;
+                for _ in 0..100_000 {
+                    acc += rng.normal();
+                }
+                acc
+            }))
+            .report()
     );
 
-    // functional array: construction, write, aged read, refresh sweep
+    // the SWAR transform itself (per 64-byte block)
+    let mut block = [0u8; 64];
+    rng.fill_bytes(&mut block);
     println!(
         "{}",
-        bench("mem::new 108KB (per-cell corners)", 1, 10, || {
-            MixedCellMemory::new(108 * 1024, 7)
-        })
-        .report()
+        suite
+            .record(bench_throughput("bitplane::roundtrip ×16k blocks", 2, it(50), (64 * 16384) as f64, || {
+                let mut acc = 0u64;
+                for _ in 0..16_384 {
+                    let pl = bitplane::bytes_to_planes(&block);
+                    let back = bitplane::planes_to_bytes(&pl);
+                    acc ^= back[0] as u64;
+                    block[0] = block[0].wrapping_add(1);
+                }
+                acc
+            }))
+            .report()
     );
-    let mut mem = MixedCellMemory::new(108 * 1024, 7);
+
+    // functional array: construction, then write/read on both paths
+    println!(
+        "{}",
+        suite
+            .record(bench("mem::new 108KB (per-cell corners)", 1, it(10), || {
+                MixedCellMemory::new(108 * 1024, 7)
+            }))
+            .report()
+    );
+
     let data = vec![0x15u8; 16 * 1024];
     let mut t = 0.0;
+    let mut mem = MixedCellMemory::new(108 * 1024, 7);
+    for (label, word_parallel) in [("scalar ref", false), ("word-parallel", true)] {
+        mem.word_parallel = word_parallel;
+        println!(
+            "{}",
+            suite
+                .record(bench_throughput(
+                    &format!("mem::write 16KB ({label})"),
+                    2,
+                    it(50),
+                    16.0 * 1024.0,
+                    || {
+                        t += 1e-6;
+                        mem.write(0, &data, t);
+                    }
+                ))
+                .report()
+        );
+        println!(
+            "{}",
+            suite
+                .record(bench_throughput(
+                    &format!("mem::read 16KB (fresh, {label})"),
+                    2,
+                    it(50),
+                    16.0 * 1024.0,
+                    || {
+                        t += 1e-6;
+                        mem.read(0, 16 * 1024, t)
+                    }
+                ))
+                .report()
+        );
+    }
+    for (name, ratio) in [
+        ("write", suite.ratio("mem::write 16KB (scalar ref)", "mem::write 16KB (word-parallel)")),
+        (
+            "read",
+            suite.ratio(
+                "mem::read 16KB (fresh, scalar ref)",
+                "mem::read 16KB (fresh, word-parallel)",
+            ),
+        ),
+    ] {
+        if let Some(r) = ratio {
+            println!("speedup mem::{name} 16KB: {}x (word-parallel vs scalar, target ≥8x)", fnum(r, 2));
+        }
+    }
+
     println!(
         "{}",
-        bench_throughput("mem::write 16KB", 2, 50, 16.0 * 1024.0, || {
-            t += 1e-6;
-            mem.write(0, &data, t);
-        })
-        .report()
+        suite
+            .record(bench_throughput("mem::read 16KB (stale 50µs)", 2, it(50), 16.0 * 1024.0, || {
+                t += 50e-6;
+                mem.read(0, 16 * 1024, t)
+            }))
+            .report()
     );
     println!(
         "{}",
-        bench_throughput("mem::read 16KB (fresh)", 2, 50, 16.0 * 1024.0, || {
-            t += 1e-6;
-            mem.read(0, 16 * 1024, t)
-        })
-        .report()
+        suite
+            .record(bench("mem::refresh_row (7 banks)", 2, it(200), || {
+                t += 49e-9;
+                mem.refresh_row(0, t);
+            }))
+            .report()
     );
-    println!(
-        "{}",
-        bench_throughput("mem::read 16KB (stale 50µs)", 2, 50, 16.0 * 1024.0, || {
-            t += 50e-6;
-            mem.read(0, 16 * 1024, t)
-        })
-        .report()
-    );
-    println!(
-        "{}",
-        bench("mem::refresh_row (7 banks)", 2, 200, || {
-            t += 49e-9;
-            mem.refresh_row(0, t);
-        })
-        .report()
-    );
+
+    suite.write_json_at_repo_root();
 }

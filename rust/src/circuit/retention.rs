@@ -10,7 +10,8 @@ use crate::circuit::edram2t::Edram2t;
 use crate::circuit::edram3t::Edram3t;
 use crate::circuit::sense_amp::SenseAmp;
 use crate::device::{StorageLeakage, VariationModel};
-use crate::util::rng::Pcg64;
+use crate::util::par::{par_shards, MC_SHARDS};
+use crate::util::rng::{shard_seeds, Pcg64};
 use crate::util::stats::{summarize, Histogram, Summary};
 
 /// Result of a retention-distribution MC run.
@@ -36,11 +37,25 @@ fn dist_from_samples(label: &str, samples: &[f64]) -> RetentionDist {
 }
 
 /// Fig. 2(a): conventional 3T retention distribution for both stored bits.
+///
+/// §Perf: sharded across [`MC_SHARDS`] scoped threads with per-shard PCG64
+/// streams — results depend only on `(seed, n)`, not on core count.
 pub fn retention_3t(seed: u64, n: usize) -> (RetentionDist, RetentionDist) {
     let cell = Edram3t::lp45();
-    let mut rng = Pcg64::new(seed);
-    let bit1: Vec<f64> = (0..n).map(|_| cell.sample_retention(&mut rng, true)).collect();
-    let bit0: Vec<f64> = (0..n).map(|_| cell.sample_retention(&mut rng, false)).collect();
+    let seeds = shard_seeds(seed, MC_SHARDS);
+    let chunks = par_shards(n, MC_SHARDS, |i, r| {
+        let mut rng = Pcg64::new(seeds[i]);
+        let bit1: Vec<f64> =
+            r.clone().map(|_| cell.sample_retention(&mut rng, true)).collect();
+        let bit0: Vec<f64> = r.map(|_| cell.sample_retention(&mut rng, false)).collect();
+        (bit1, bit0)
+    });
+    let mut bit1 = Vec::with_capacity(n);
+    let mut bit0 = Vec::with_capacity(n);
+    for (a, b) in chunks {
+        bit1.extend(a);
+        bit0.extend(b);
+    }
     (
         dist_from_samples("3T bit-1 (decay to 0.65V)", &bit1),
         dist_from_samples("3T bit-0 (rise to 0.65V)", &bit0),
@@ -49,23 +64,30 @@ pub fn retention_3t(seed: u64, n: usize) -> (RetentionDist, RetentionDist) {
 
 /// Fig. 2(b): conventional 2T retention — asymmetric: only bit-0 fails
 /// (rises past the read reference); bit-1 is held near VDD by the PMOS
-/// write device's leakage.
+/// write device's leakage. Sharded like [`retention_3t`].
 pub fn retention_2t_conventional(seed: u64, n: usize, read_ref: f64) -> RetentionDist {
     let leak = StorageLeakage::calibrated(1.0);
     // conventional minimum-size cell: width 1×, wide process spread
     let var = VariationModel::conventional_gain_cell();
     let cell = Edram2t::conventional();
-    let mut rng = Pcg64::new(seed);
     let t_nom = leak.charge_time(read_ref, cell.width_mult, 85.0);
-    let samples: Vec<f64> = (0..n)
-        .map(|_| t_nom / var.sample_leak_mult(&mut rng))
-        .collect();
+    let seeds = shard_seeds(seed, MC_SHARDS);
+    let chunks = par_shards(n, MC_SHARDS, |i, r| {
+        let mut rng = Pcg64::new(seeds[i]);
+        r.map(|_| t_nom / var.sample_leak_mult(&mut rng)).collect::<Vec<f64>>()
+    });
+    let samples: Vec<f64> = chunks.into_iter().flatten().collect();
     dist_from_samples("2T bit-0 (rise to read ref)", &samples)
 }
 
 /// One point of the Fig. 12a statistical flip-model development: simulate
 /// `n` cells storing bit-0, age them `access_time`, read against a real
 /// sense amp (offset included), and count flips.
+///
+/// §Perf: cells are independent, so the population splits into
+/// [`MC_SHARDS`] fixed shards evaluated on scoped threads, each with its
+/// own seeded PCG64 stream; the flip counts sum in shard order. The
+/// 100 000-sample Fig. 12a point is the dominant cost of every V_REF sweep.
 pub fn flip_rate_mc(
     leak: &StorageLeakage,
     sa: &SenseAmp,
@@ -75,15 +97,17 @@ pub fn flip_rate_mc(
     width_mult: f64,
     temp_c: f64,
 ) -> f64 {
-    let mut rng = Pcg64::new(seed);
-    let flips = (0..n)
-        .filter(|_| {
+    let seeds = shard_seeds(seed, MC_SHARDS);
+    let counts = par_shards(n, MC_SHARDS, |i, r| {
+        let mut rng = Pcg64::new(seeds[i]);
+        r.filter(|_| {
             let mult = leak.sample_leak_mult(&mut rng);
             let v = leak.voltage_at(access_time, width_mult, temp_c, mult);
             sa.sense_mc(v, &mut rng) // bit-0 read as 1 ⇒ flip
         })
-        .count();
-    flips as f64 / n as f64
+        .count()
+    });
+    counts.iter().sum::<usize>() as f64 / n as f64
 }
 
 /// Full Fig. 12b reproduction: empirical flip-probability curves per V_REF.

@@ -281,14 +281,19 @@ impl<'a> SnmAnalysis<'a> {
 
     /// Monte-Carlo write yield over `n` mismatch samples at word-line `wl`
     /// (paper Fig. 9b: 1000 samples, 25 °C).
+    ///
+    /// §Perf: mismatch samples are drawn *sequentially* from the caller's
+    /// RNG (cheap — six normals each), then the expensive coupled-DC
+    /// `write_margin` solves fan out across scoped threads. The caller's
+    /// RNG stream and the returned yield are bit-identical to the old
+    /// sequential implementation; only wall-clock changes.
     pub fn write_yield(&self, rng: &mut Pcg64, sigma_vth: f64, wl: f64, n: usize) -> f64 {
-        let ok = (0..n)
-            .filter(|_| {
-                let mm = CellMismatch::sample(rng, sigma_vth);
-                self.write_margin(&mm, wl) > 0.0
-            })
-            .count();
-        ok as f64 / n as f64
+        let samples: Vec<CellMismatch> =
+            (0..n).map(|_| CellMismatch::sample(rng, sigma_vth)).collect();
+        let counts = crate::util::par::par_shards(n, crate::util::par::MC_SHARDS, |_, r| {
+            samples[r].iter().filter(|mm| self.write_margin(mm, wl) > 0.0).count()
+        });
+        counts.iter().sum::<usize>() as f64 / n.max(1) as f64
     }
 }
 

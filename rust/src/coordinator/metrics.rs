@@ -1,6 +1,6 @@
 //! Coordinator metrics: request latencies, throughput, buffer health.
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Online latency/throughput accumulator.
 #[derive(Clone, Debug, Default)]
@@ -9,17 +9,69 @@ pub struct Metrics {
     pub requests: u64,
     pub batches: u64,
     pub padded_slots: u64,
+    /// Request payload bytes accepted into batches (throughput counter —
+    /// with the word-parallel array this, not the store path, should bound
+    /// serving rate).
+    pub bytes_in: u64,
+    /// Wall clock of the first and latest activity — the serving window
+    /// for sustained-rate figures (an idle tail before shutdown must not
+    /// deflate the rates).
+    started: Option<Instant>,
+    last_activity: Option<Instant>,
 }
 
 impl Metrics {
+    fn touch(&mut self) {
+        let now = Instant::now();
+        if self.started.is_none() {
+            self.started = Some(now);
+        }
+        self.last_activity = Some(now);
+    }
+
     pub fn record_latency(&mut self, d: Duration) {
+        self.touch();
         self.latencies_us.push(d.as_secs_f64() * 1e6);
         self.requests += 1;
     }
 
     pub fn record_batch(&mut self, real: usize, padded: usize) {
+        self.touch();
         self.batches += 1;
         self.padded_slots += (padded - real) as u64;
+    }
+
+    pub fn record_bytes_in(&mut self, bytes: usize) {
+        self.touch();
+        self.bytes_in += bytes as u64;
+    }
+
+    /// Length of the serving window: first activity → latest activity
+    /// (0 if nothing served yet).
+    pub fn elapsed_s(&self) -> f64 {
+        match (self.started, self.last_activity) {
+            (Some(a), Some(b)) => (b - a).as_secs_f64(),
+            _ => 0.0,
+        }
+    }
+
+    /// Sustained request rate (req/s) over the serving window.
+    pub fn requests_per_s(&self) -> f64 {
+        let dt = self.elapsed_s();
+        if dt <= 0.0 {
+            return 0.0;
+        }
+        self.requests as f64 / dt
+    }
+
+    /// Sustained inbound payload throughput (bytes/s) over the serving
+    /// window.
+    pub fn bytes_per_s(&self) -> f64 {
+        let dt = self.elapsed_s();
+        if dt <= 0.0 {
+            return 0.0;
+        }
+        self.bytes_in as f64 / dt
     }
 
     pub fn p50_us(&self) -> f64 {
@@ -79,5 +131,24 @@ mod tests {
         let m = Metrics::default();
         assert_eq!(m.p50_us(), 0.0);
         assert_eq!(m.occupancy(), 0.0);
+        assert_eq!(m.requests_per_s(), 0.0);
+        assert_eq!(m.bytes_per_s(), 0.0);
+    }
+
+    #[test]
+    fn byte_throughput_uses_the_serving_window() {
+        let mut m = Metrics::default();
+        m.record_batch(2, 4);
+        m.record_bytes_in(100);
+        m.record_bytes_in(28);
+        assert_eq!(m.bytes_in, 128);
+        std::thread::sleep(Duration::from_millis(5));
+        m.record_latency(Duration::from_micros(250)); // closes the window
+        let active = m.elapsed_s();
+        assert!(active > 0.0);
+        assert!(m.bytes_per_s() > 0.0);
+        // an idle tail after the last activity must not deflate the rates
+        std::thread::sleep(Duration::from_millis(10));
+        assert_eq!(m.elapsed_s(), active);
     }
 }

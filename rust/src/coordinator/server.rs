@@ -61,6 +61,13 @@ pub struct ServerStats {
     pub p50_latency_us: f64,
     pub p99_latency_us: f64,
     pub occupancy: f64,
+    /// Request payload bytes accepted over the server's lifetime.
+    pub bytes_in: u64,
+    /// Sustained request rate (req/s) measured worker-side.
+    pub requests_per_s: f64,
+    /// Sustained inbound payload throughput (bytes/s) measured worker-side
+    /// — the counter that reflects the array's store-path speed.
+    pub bytes_per_s: f64,
 }
 
 impl InferenceServer {
@@ -108,6 +115,9 @@ impl InferenceServer {
             p50_latency_us: m.p50_us(),
             p99_latency_us: m.p99_us(),
             occupancy: m.occupancy(),
+            bytes_in: m.bytes_in,
+            requests_per_s: m.requests_per_s(),
+            bytes_per_s: m.bytes_per_s(),
         }
     }
 }
@@ -152,6 +162,7 @@ fn worker_loop(dir: std::path::PathBuf, cfg: ServerConfig, rx: mpsc::Receiver<Re
             let row = &r.row;
             let n = row.len().min(dim);
             x[i * dim..i * dim + n].copy_from_slice(&row[..n]);
+            metrics.record_bytes_in(n);
         }
         metrics.record_batch(real, batch);
 

@@ -60,6 +60,28 @@ pub fn decode(data: &[i8]) -> Vec<i8> {
     encode(data)
 }
 
+/// Word-level encode over one transposed 64-byte block (§Perf: the
+/// word-parallel array path in `mem::mcaimem`). In bit-plane form the
+/// conditional 7-bit flip keyed by the sign bit collapses to
+/// `plane[p] ^= !plane[7]` for the seven eDRAM planes — seven XORs per 64
+/// bytes instead of 64 per-byte transforms. `planes[7]` (the SRAM sign
+/// plane) is the key and is never modified, exactly mirroring
+/// [`encode_byte`]'s sign-conditional involution.
+#[inline]
+pub fn encode_words(planes: &mut [u64; 8]) {
+    let key = !planes[7];
+    for plane in planes[..7].iter_mut() {
+        *plane ^= key;
+    }
+}
+
+/// Word-level decode — the same involution (the sign plane is the key and
+/// is stored uncorrupted in SRAM, so decode always sees the right key).
+#[inline]
+pub fn decode_words(planes: &mut [u64; 8]) {
+    encode_words(planes);
+}
+
 /// In-place encode over raw bytes (the hot path used by the buffer manager —
 /// zero-allocation).
 pub fn encode_in_place(data: &mut [u8]) {
@@ -164,6 +186,24 @@ mod tests {
         encode_in_place(&mut raw);
         let in_place: Vec<i8> = raw.iter().map(|&x| x as i8).collect();
         assert_eq!(functional, in_place);
+    }
+
+    #[test]
+    fn encode_words_matches_per_byte_encode() {
+        use crate::mem::bitplane::{bytes_to_planes, planes_to_bytes};
+        let mut rng = crate::util::rng::Pcg64::new(0xE14C);
+        for _ in 0..1_000 {
+            let mut bytes = [0u8; 64];
+            rng.fill_bytes(&mut bytes);
+            let mut planes = bytes_to_planes(&bytes);
+            encode_words(&mut planes);
+            let word_path = planes_to_bytes(&planes);
+            let byte_path: Vec<u8> = bytes.iter().map(|&b| encode_byte(b)).collect();
+            assert_eq!(word_path.as_slice(), byte_path.as_slice());
+            // involution at the word level too
+            decode_words(&mut planes);
+            assert_eq!(planes_to_bytes(&planes), bytes);
+        }
     }
 
     #[test]

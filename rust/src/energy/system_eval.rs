@@ -106,7 +106,7 @@ mod tests {
     use super::*;
     use crate::scalesim::{network, simulate_network};
 
-    fn trace_eyeriss(name: &str) -> (NetworkTrace, AcceleratorConfig) {
+    fn trace_eyeriss(name: &str) -> (std::sync::Arc<NetworkTrace>, AcceleratorConfig) {
         let acc = AcceleratorConfig::eyeriss();
         (simulate_network(&network::by_name(name).unwrap(), &acc), acc)
     }

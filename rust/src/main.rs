@@ -158,8 +158,10 @@ fn cmd_serve(args: &mcaimem::cli::ParsedArgs) -> Result<()> {
         fnum(elapsed.as_secs_f64() * 1e3, 1)
     );
     println!(
-        "  throughput : {} req/s",
-        fnum(stats.requests as f64 / elapsed.as_secs_f64(), 0)
+        "  throughput : {} req/s client-side, {} req/s / {} KB/s worker-side",
+        fnum(stats.requests as f64 / elapsed.as_secs_f64(), 0),
+        fnum(stats.requests_per_s, 0),
+        fnum(stats.bytes_per_s / 1024.0, 1)
     );
     println!(
         "  latency    : mean {} µs  p50 {} µs  p99 {} µs",

@@ -1,0 +1,132 @@
+//! SWAR 8×64 bit-matrix transpose between byte order and bit-plane order.
+//!
+//! The functional array stores each byte as one bit in each of 8 bit-planes
+//! (plane `p` bit `j` = bit `p` of byte `j`). The scalar path moves data one
+//! byte at a time — 8 masked read-modify-writes per byte. The word-parallel
+//! path instead converts 64 bytes at once into 8 whole plane words (and
+//! back) with an 8×8-blocked bit-matrix transpose:
+//!
+//! 1. load the 64 bytes as eight `u64`s (8 bytes each, little-endian),
+//! 2. transpose each `u64` as an 8×8 bit matrix ([`transpose8x8`],
+//!    Hacker's Delight §7-3 — three mask/shift/xor swap stages),
+//! 3. gather byte `p` of each transposed word into plane word `p`
+//!    (an 8×8 *byte* transpose, plain shifts).
+//!
+//! The inverse runs the same two steps backwards; `transpose8x8` is an
+//! involution, so round-tripping is exact by construction (and property
+//! tested below against the bit-by-bit reference).
+//!
+//! §Perf: ~0.2 k ALU ops per 64-byte block versus ~3 k bit-indexed
+//! read-modify-writes on the scalar path — the transform that makes
+//! `MixedCellMemory::{read,write}` word-parallel (see `mem::mcaimem`).
+
+/// Transpose a `u64` viewed as an 8×8 bit matrix (row `r` = byte `r`,
+/// column `c` = bit `c` within the byte). Involution.
+#[inline]
+pub fn transpose8x8(mut x: u64) -> u64 {
+    let t = (x ^ (x >> 7)) & 0x00AA_00AA_00AA_00AA;
+    x ^= t ^ (t << 7);
+    let t = (x ^ (x >> 14)) & 0x0000_CCCC_0000_CCCC;
+    x ^= t ^ (t << 14);
+    let t = (x ^ (x >> 28)) & 0x0000_0000_F0F0_F0F0;
+    x ^= t ^ (t << 28);
+    x
+}
+
+/// 64 bytes → 8 plane words: `planes[p]` bit `j` = bit `p` of `bytes[j]`.
+#[inline]
+pub fn bytes_to_planes(bytes: &[u8; 64]) -> [u64; 8] {
+    let mut planes = [0u64; 8];
+    for i in 0..8 {
+        let w = u64::from_le_bytes(bytes[8 * i..8 * i + 8].try_into().unwrap());
+        let t = transpose8x8(w);
+        for (p, plane) in planes.iter_mut().enumerate() {
+            *plane |= ((t >> (8 * p)) & 0xff) << (8 * i);
+        }
+    }
+    planes
+}
+
+/// 8 plane words → 64 bytes: exact inverse of [`bytes_to_planes`].
+#[inline]
+pub fn planes_to_bytes(planes: &[u64; 8]) -> [u8; 64] {
+    let mut out = [0u8; 64];
+    for i in 0..8 {
+        let mut t = 0u64;
+        for (p, plane) in planes.iter().enumerate() {
+            t |= ((plane >> (8 * i)) & 0xff) << (8 * p);
+        }
+        let w = transpose8x8(t);
+        out[8 * i..8 * i + 8].copy_from_slice(&w.to_le_bytes());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    /// Bit-by-bit reference for the forward transform.
+    fn reference_planes(bytes: &[u8; 64]) -> [u64; 8] {
+        let mut planes = [0u64; 8];
+        for (j, &b) in bytes.iter().enumerate() {
+            for (p, plane) in planes.iter_mut().enumerate() {
+                *plane |= (((b >> p) & 1) as u64) << j;
+            }
+        }
+        planes
+    }
+
+    #[test]
+    fn transpose8x8_is_involution() {
+        let mut rng = Pcg64::new(1);
+        for _ in 0..10_000 {
+            let x = rng.next_u64();
+            assert_eq!(transpose8x8(transpose8x8(x)), x);
+        }
+    }
+
+    #[test]
+    fn transpose8x8_known_patterns() {
+        // identity matrix (bit r of byte r set) is symmetric
+        let ident = (0..8).fold(0u64, |acc, r| acc | (1u64 << (8 * r + r)));
+        assert_eq!(transpose8x8(ident), ident);
+        // row 0 all-ones ↔ bit 0 of every byte
+        assert_eq!(transpose8x8(0xff), 0x0101_0101_0101_0101);
+        assert_eq!(transpose8x8(0x0101_0101_0101_0101), 0xff);
+        assert_eq!(transpose8x8(0), 0);
+        assert_eq!(transpose8x8(u64::MAX), u64::MAX);
+    }
+
+    #[test]
+    fn forward_matches_bit_reference() {
+        let mut rng = Pcg64::new(2);
+        for _ in 0..2_000 {
+            let mut bytes = [0u8; 64];
+            rng.fill_bytes(&mut bytes);
+            assert_eq!(bytes_to_planes(&bytes), reference_planes(&bytes));
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_exact() {
+        let mut rng = Pcg64::new(3);
+        for _ in 0..2_000 {
+            let mut bytes = [0u8; 64];
+            rng.fill_bytes(&mut bytes);
+            assert_eq!(planes_to_bytes(&bytes_to_planes(&bytes)), bytes);
+        }
+    }
+
+    #[test]
+    fn plane_semantics() {
+        // byte 5 = 0x80 → only plane 7 (the SRAM sign plane) has bit 5
+        let mut bytes = [0u8; 64];
+        bytes[5] = 0x80;
+        let planes = bytes_to_planes(&bytes);
+        for (p, plane) in planes.iter().enumerate() {
+            assert_eq!(*plane, if p == 7 { 1 << 5 } else { 0 }, "plane {p}");
+        }
+    }
+}

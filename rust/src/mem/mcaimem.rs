@@ -23,6 +23,18 @@
 //! (the property a resampling model would destroy: under independent
 //! redraws every cell dies after enough refresh windows). Unwritten cells
 //! idle at bit-1, the state pull-up leakage drives them to physically.
+//!
+//! §Perf: the access hot path is **word-parallel**. Aligned 64-byte blocks
+//! move through an 8×64 SWAR bit-matrix transpose ([`super::bitplane`]) —
+//! 64 bytes become 8 whole plane words per step — the one-enhancement
+//! encode/decode collapses to seven plane-word XORs
+//! ([`crate::encode::one_enhancement::encode_words`]), and the ones census
+//! feeding the energy model is `count_ones()` per word instead of per-bit
+//! masking. Unaligned heads/tails and the `word_parallel = false` toggle
+//! fall back to the retained scalar reference path, which is bit-exact
+//! against the word path (including `EnergyMeter` totals) — property
+//! tested in `tests/property_tests.rs` and raced in
+//! `benches/bench_hotpath.rs` (see EXPERIMENTS.md §Perf for numbers).
 
 use super::bank::MemoryMap;
 use super::energy::EnergyCard;
@@ -61,6 +73,11 @@ pub struct MixedCellMemory {
     /// When false the eDRAM planes are error-free (used to emulate the SRAM
     /// baseline on identical plumbing).
     pub inject_enabled: bool,
+    /// Use the word-parallel (SWAR bit-plane transpose) access path for
+    /// aligned 64-byte blocks. The scalar byte-at-a-time path is retained
+    /// as a bit-exact reference (`word_parallel = false`) for equivalence
+    /// tests and the before/after benchmarks.
+    pub word_parallel: bool,
     /// Bit-planes, LSB-first; plane 7 is the SRAM (sign) plane. Packed
     /// 64 bytes/word per plane.
     planes: [Vec<u64>; 8],
@@ -123,6 +140,7 @@ impl MixedCellMemory {
             card: EnergyCard::mcaimem(vref),
             encode_enabled: true,
             inject_enabled: true,
+            word_parallel: true,
             // power-on state: pull-up leakage parks every cell at bit-1
             planes: std::array::from_fn(|_| vec![u64::MAX; words]),
             leak_z,
@@ -220,22 +238,35 @@ impl MixedCellMemory {
         // Word-level scan (§Perf): rows are word-aligned, and encoded DNN
         // data plus the all-ones idle state make zero bits sparse — test a
         // whole 64-cell word at once and only visit its zero positions.
+        // The leak-row slice (and its bounds check) is hoisted out of the
+        // bit loop, flips accumulate into a per-word mask, and the census /
+        // meter commit once per row instead of per bit.
         debug_assert!(start % 64 == 0 && end % 64 == 0);
+        let mut committed = 0u64;
         for w in start / 64..end / 64 {
             let base = w * 64;
             for (plane, zplane) in self.planes[..7].iter_mut().zip(self.leak_z.iter()) {
                 let mut zeros = !plane[w];
+                if zeros == 0 {
+                    continue;
+                }
+                let zrow = &zplane[base..base + 64];
+                let mut flips = 0u64;
                 while zeros != 0 {
                     let b = zeros.trailing_zeros() as usize;
                     zeros &= zeros - 1;
-                    if zplane[base + b] > q_thr {
-                        plane[w] |= 1u64 << b;
-                        self.edram_ones += 1;
-                        self.meter.flips_committed += 1;
+                    if zrow[b] > q_thr {
+                        flips |= 1u64 << b;
                     }
+                }
+                if flips != 0 {
+                    plane[w] |= flips;
+                    committed += flips.count_ones() as u64;
                 }
             }
         }
+        self.edram_ones += committed;
+        self.meter.flips_committed += committed;
     }
 
     fn touch_range(&mut self, addr: usize, len: usize) {
@@ -251,23 +282,133 @@ impl MixedCellMemory {
         }
     }
 
+    /// Store one byte (encode + plane update), returning its stored eDRAM
+    /// ones count — the scalar reference step both paths share for
+    /// unaligned heads/tails.
+    #[inline]
+    fn store_byte(&mut self, addr: usize, raw: u8) -> u64 {
+        let stored = if self.encode_enabled {
+            crate::encode::one_enhancement::encode_byte(raw)
+        } else {
+            raw
+        };
+        self.set_byte_raw(addr, stored);
+        (stored & 0x7f).count_ones() as u64
+    }
+
+    /// Fetch + decode one byte into `out`, returning its stored eDRAM ones
+    /// count (counted pre-decode, like the energy model expects).
+    #[inline]
+    fn fetch_byte(&self, addr: usize, out: &mut Vec<u8>) -> u64 {
+        let stored = self.get_byte_raw(addr);
+        out.push(if self.encode_enabled {
+            crate::encode::one_enhancement::decode_byte(stored)
+        } else {
+            stored
+        });
+        (stored & 0x7f).count_ones() as u64
+    }
+
+    /// Scalar reference store path (byte at a time through every plane).
+    fn store_scalar(&mut self, addr: usize, data: &[u8]) -> u64 {
+        let mut ones = 0u64;
+        for (i, &raw) in data.iter().enumerate() {
+            ones += self.store_byte(addr + i, raw);
+        }
+        ones
+    }
+
+    /// Word-parallel store: aligned 64-byte blocks go through the SWAR
+    /// transpose + word-level encode; ragged edges reuse the scalar step.
+    fn store_words(&mut self, addr: usize, data: &[u8]) -> u64 {
+        let end = addr + data.len();
+        let mut a = addr;
+        let mut ones = 0u64;
+        let head_end = end.min((addr + 63) & !63);
+        while a < head_end {
+            ones += self.store_byte(a, data[a - addr]);
+            a += 1;
+        }
+        while a + 64 <= end {
+            let chunk: &[u8; 64] = data[a - addr..a - addr + 64].try_into().unwrap();
+            let mut pl = super::bitplane::bytes_to_planes(chunk);
+            if self.encode_enabled {
+                crate::encode::one_enhancement::encode_words(&mut pl);
+            }
+            let w = a / 64;
+            for (p, &new) in pl.iter().enumerate().take(7) {
+                let newly = new.count_ones() as u64;
+                ones += newly;
+                self.edram_ones += newly;
+                self.edram_ones -= self.planes[p][w].count_ones() as u64;
+                self.planes[p][w] = new;
+            }
+            self.planes[7][w] = pl[7];
+            a += 64;
+        }
+        while a < end {
+            ones += self.store_byte(a, data[a - addr]);
+            a += 1;
+        }
+        ones
+    }
+
+    /// Scalar reference fetch path.
+    fn fetch_scalar(&self, addr: usize, len: usize, out: &mut Vec<u8>) -> u64 {
+        let mut ones = 0u64;
+        for i in 0..len {
+            ones += self.fetch_byte(addr + i, out);
+        }
+        ones
+    }
+
+    /// Word-parallel fetch: whole plane words → popcount census →
+    /// word-level decode → inverse transpose.
+    fn fetch_words(&self, addr: usize, len: usize, out: &mut Vec<u8>) -> u64 {
+        let end = addr + len;
+        let mut a = addr;
+        let mut ones = 0u64;
+        let head_end = end.min((addr + 63) & !63);
+        while a < head_end {
+            ones += self.fetch_byte(a, out);
+            a += 1;
+        }
+        while a + 64 <= end {
+            let w = a / 64;
+            let mut pl = [0u64; 8];
+            for (p, plane) in self.planes.iter().enumerate() {
+                pl[p] = plane[w];
+            }
+            for &word in pl.iter().take(7) {
+                ones += word.count_ones() as u64;
+            }
+            if self.encode_enabled {
+                crate::encode::one_enhancement::decode_words(&mut pl);
+            }
+            out.extend_from_slice(&super::bitplane::planes_to_bytes(&pl));
+            a += 64;
+        }
+        while a < end {
+            ones += self.fetch_byte(a, out);
+            a += 1;
+        }
+        ones
+    }
+
     /// Write `data` at `addr`, time `now`. Data is encoded (if enabled)
     /// before hitting the array, as in Fig. 4.
     pub fn write(&mut self, addr: usize, data: &[u8], now: f64) {
         assert!(addr + data.len() <= self.capacity(), "write out of range");
         self.advance_to(now);
         self.touch_range(addr, data.len());
-        let mut ones = 0u64;
-        for (i, &raw) in data.iter().enumerate() {
-            let stored = if self.encode_enabled {
-                crate::encode::one_enhancement::encode_byte(raw)
-            } else {
-                raw
-            };
-            ones += (stored & 0x7f).count_ones() as u64;
-            self.set_byte_raw(addr + i, stored);
-        }
-        let frac = ones as f64 / (data.len() * 7) as f64;
+        let ones = if self.word_parallel {
+            self.store_words(addr, data)
+        } else {
+            self.store_scalar(addr, data)
+        };
+        // `.max(1)` guards the empty write: 0/0 would poison `write_j` with
+        // NaN (the read path below has always carried the same guard).
+        let frac = ones as f64 / (data.len() * 7).max(1) as f64;
         self.meter.write_j += self.card.write_energy(data.len(), frac);
         self.meter.writes += 1;
         self.meter.bytes_written += data.len() as u64;
@@ -280,16 +421,11 @@ impl MixedCellMemory {
         self.advance_to(now);
         self.touch_range(addr, len);
         let mut out = Vec::with_capacity(len);
-        let mut ones = 0u64;
-        for i in 0..len {
-            let stored = self.get_byte_raw(addr + i);
-            ones += (stored & 0x7f).count_ones() as u64;
-            out.push(if self.encode_enabled {
-                crate::encode::one_enhancement::decode_byte(stored)
-            } else {
-                stored
-            });
-        }
+        let ones = if self.word_parallel {
+            self.fetch_words(addr, len, &mut out)
+        } else {
+            self.fetch_scalar(addr, len, &mut out)
+        };
         let frac = ones as f64 / (len * 7).max(1) as f64;
         self.meter.read_j += self.card.read_energy(len, frac);
         self.meter.reads += 1;
@@ -433,6 +569,51 @@ mod tests {
         assert!((m.edram_ones_frac() - expect).abs() < 1e-12);
         m.write(0, &[0x7f; 64], 2e-9);
         assert_eq!(m.edram_ones_frac(), 1.0);
+    }
+
+    #[test]
+    fn empty_write_does_not_poison_the_meter() {
+        // regression: `write` divided by `data.len() * 7` without the
+        // `.max(1)` guard its twin `read` carries, so a zero-length write
+        // turned `meter.write_j` into NaN forever after
+        for word_parallel in [true, false] {
+            let mut m = fresh(4096);
+            m.word_parallel = word_parallel;
+            m.write(0, &[], 1e-9);
+            assert!(m.meter.write_j == 0.0, "wp={word_parallel}: {}", m.meter.write_j);
+            assert_eq!(m.meter.writes, 1);
+            assert_eq!(m.meter.bytes_written, 0);
+            m.write(0, &[1, 2, 3], 2e-9);
+            assert!(
+                m.meter.write_j.is_finite() && m.meter.write_j > 0.0,
+                "wp={word_parallel}: {}",
+                m.meter.write_j
+            );
+            let empty = m.read(0, 0, 3e-9);
+            assert!(empty.is_empty() && m.meter.read_j == 0.0);
+        }
+    }
+
+    #[test]
+    fn word_parallel_matches_scalar_reference() {
+        // same seed → same per-cell leakage corners; identical op sequence
+        // through both paths must give identical bytes, meters and census
+        // (the heavy randomized version lives in tests/property_tests.rs)
+        let mut fast = fresh(16 * 1024);
+        let mut slow = fresh(16 * 1024);
+        slow.word_parallel = false;
+        let data: Vec<u8> = (0..777u32).map(|i| (i * 37 + 11) as u8).collect();
+        for (addr, stale) in [(0usize, 1e-6), (13, 20e-6), (64, 1e-6), (100, 45e-6)] {
+            let t = fast.now() + stale;
+            fast.write(addr, &data, t);
+            slow.write(addr, &data, t);
+            let t2 = t + stale;
+            let a = fast.read(addr, data.len(), t2);
+            let b = slow.read(addr, data.len(), t2);
+            assert_eq!(a, b, "addr={addr} stale={stale}");
+        }
+        assert_eq!(fast.meter, slow.meter);
+        assert_eq!(fast.edram_ones_frac(), slow.edram_ones_frac());
     }
 
     #[test]

@@ -7,6 +7,8 @@
 //! * [`energy`] — Table II characterization cards and the 1:7 composition
 //!   law; data-value-dependent static/read/write energy.
 //! * [`bank`] — 16 KB bank geometry; 1 MB = 64 banks (Fig. 13 caption).
+//! * [`bitplane`] — SWAR 8×64 bit-matrix transpose powering the
+//!   word-parallel access path of [`mcaimem`].
 //! * [`refresh`] — the global periodic row-refresh controller (§III-C).
 //! * [`vref`] — the reference-voltage controller and its refresh-period
 //!   lever (§IV-B).
@@ -16,6 +18,7 @@
 
 pub mod area;
 pub mod bank;
+pub mod bitplane;
 pub mod energy;
 pub mod mcaimem;
 pub mod refresh;

@@ -55,16 +55,7 @@ pub fn run1(exe: &PjRtLoadedExecutable, inputs: &[Literal]) -> Result<Literal> {
     Ok(result.to_tuple1()?)
 }
 
-/// Which aged-inference variant to run.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum StoreVariant {
-    /// Ideal buffer — no retention errors.
-    Clean,
-    /// MCAIMem with the one-enhancement encoder (paper default).
-    Mcaimem,
-    /// MCAIMem with raw storage (Fig. 11's collapsing baseline).
-    McaimemNoEncoder,
-}
+pub use super::StoreVariant;
 
 /// High-level model runner bound to the artifacts directory.
 pub struct ModelRunner {
@@ -102,21 +93,10 @@ impl ModelRunner {
         Ok(self.compiled.get(name).unwrap())
     }
 
-    /// Draw one flip-candidate mask tensor: each of the 7 eDRAM bit
-    /// positions set independently with probability `p` (the physics side
-    /// of §IV-A; the bitwise application happens inside the L1 kernel).
+    /// Draw one flip-candidate mask tensor (delegates to the implementation
+    /// shared with the no-pjrt stub, so the two builds cannot drift).
     pub fn draw_mask(rng: &mut Pcg64, len: usize, p: f64) -> Vec<i8> {
-        (0..len)
-            .map(|_| {
-                let mut m = 0u8;
-                for bit in 0..7 {
-                    if rng.bernoulli(p) {
-                        m |= 1 << bit;
-                    }
-                }
-                m as i8
-            })
-            .collect()
+        super::draw_mask(rng, len, p)
     }
 
     /// Classify one batch (must match the export batch size). Returns the

@@ -11,7 +11,47 @@
 //! reassigns them (see /opt/xla-example/README.md).
 
 pub mod artifact;
+
+/// Real PJRT executor — requires the offline `xla` crate, gated behind the
+/// `pjrt` feature. Without it an API-identical stub is compiled whose
+/// constructors return a clean error, so artifact-dependent tests, the
+/// inference server and the `serve`/`selftest` commands skip gracefully.
+#[cfg(feature = "pjrt")]
+pub mod executor;
+#[cfg(not(feature = "pjrt"))]
+#[path = "executor_stub.rs"]
 pub mod executor;
 
 pub use artifact::{Artifacts, TensorData, TensorMeta};
 pub use executor::{Executor, ModelRunner};
+
+/// Which aged-inference variant to run. Defined here — not in the
+/// executor — so the real (`pjrt`) and stub builds share one type and
+/// cannot drift.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StoreVariant {
+    /// Ideal buffer — no retention errors.
+    Clean,
+    /// MCAIMem with the one-enhancement encoder (paper default).
+    Mcaimem,
+    /// MCAIMem with raw storage (Fig. 11's collapsing baseline).
+    McaimemNoEncoder,
+}
+
+/// Draw one flip-candidate mask tensor: each of the 7 eDRAM bit positions
+/// set independently with probability `p` (the physics side of §IV-A; the
+/// bitwise application happens inside the L1 kernel). Pure Rust — shared by
+/// the real and stub executors so the two builds cannot drift.
+pub fn draw_mask(rng: &mut crate::util::rng::Pcg64, len: usize, p: f64) -> Vec<i8> {
+    (0..len)
+        .map(|_| {
+            let mut m = 0u8;
+            for bit in 0..7 {
+                if rng.bernoulli(p) {
+                    m |= 1 << bit;
+                }
+            }
+            m as i8
+        })
+        .collect()
+}

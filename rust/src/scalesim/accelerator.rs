@@ -9,7 +9,7 @@
 /// Systolic dataflow (SCALE-Sim taxonomy). The paper's platforms are
 /// output-stationary in the SCALE-Sim default configs; WS/IS are carried for
 /// the ablation benches.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Dataflow {
     OutputStationary,
     WeightStationary,

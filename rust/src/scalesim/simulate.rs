@@ -9,7 +9,9 @@
 //! single number that modulates static/refresh/access energy in the mixed
 //! array (paper Fig. 5 → Fig. 14/15 pipeline).
 
-use super::accelerator::AcceleratorConfig;
+use std::sync::Arc;
+
+use super::accelerator::{AcceleratorConfig, Dataflow};
 use super::network::Network;
 use super::systolic::{layer_cost, LayerCost};
 use crate::encode::one_enhancement::encode;
@@ -98,26 +100,40 @@ fn layer_bit_stats(seed: u64, weight_bytes: usize, act_bytes: usize) -> (f64, f6
     (raw, enc)
 }
 
+/// Memo key: every field that shapes a trace, as cheap copyable values —
+/// no allocation, no `format!` (§Perf: the old cache built three `String`s
+/// per lookup and cloned the whole multi-layer trace on every hit).
+type TraceKey = (&'static str, &'static str, Dataflow, usize, usize, u64);
+
+fn trace_key(net: &Network, acc: &AcceleratorConfig) -> TraceKey {
+    (
+        net.name,
+        acc.name,
+        acc.dataflow,
+        acc.pe_rows,
+        acc.pe_cols,
+        acc.clock_hz.to_bits(),
+    )
+}
+
 /// Simulate a network on an accelerator, memoized by (network, platform,
-/// dataflow) — the report suite evaluates the same trace under many memory
-/// configurations (Figs. 14–16), and traces are deterministic.
-pub fn simulate_network(net: &Network, acc: &AcceleratorConfig) -> NetworkTrace {
+/// dataflow, array geometry, clock) — the report suite evaluates the same
+/// trace under many memory configurations (Figs. 14–16), and traces are
+/// deterministic. Hits share one immutable trace via `Arc` instead of deep
+/// cloning the per-layer vectors.
+pub fn simulate_network(net: &Network, acc: &AcceleratorConfig) -> Arc<NetworkTrace> {
     use std::collections::HashMap;
     use std::sync::{Mutex, OnceLock};
-    static CACHE: OnceLock<Mutex<HashMap<(String, String, String), NetworkTrace>>> =
-        OnceLock::new();
-    let key = (
-        net.name.to_string(),
-        acc.name.to_string(),
-        format!("{:?}{}x{}@{}", acc.dataflow, acc.pe_rows, acc.pe_cols, acc.clock_hz),
-    );
+    static CACHE: OnceLock<Mutex<HashMap<TraceKey, Arc<NetworkTrace>>>> = OnceLock::new();
+    let key = trace_key(net, acc);
     let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
     if let Some(t) = cache.lock().unwrap().get(&key) {
-        return t.clone();
+        return Arc::clone(t);
     }
-    let trace = simulate_network_uncached(net, acc);
-    cache.lock().unwrap().insert(key, trace.clone());
-    trace
+    let trace = Arc::new(simulate_network_uncached(net, acc));
+    // two threads may race the compute (harmless — traces are deterministic)
+    // but the first insert wins, so cached Arcs stay pointer-stable
+    Arc::clone(cache.lock().unwrap().entry(key).or_insert(trace))
 }
 
 /// The uncached worker (exposed for benchmarking the true cost).
@@ -206,5 +222,20 @@ mod tests {
     fn runtime_is_cycles_over_clock() {
         let t = simulate_network(&network::lenet(), &AcceleratorConfig::eyeriss());
         assert!((t.total_time_s - t.total_cycles as f64 / 100e6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn memo_hits_share_one_allocation() {
+        let net = network::lenet();
+        let acc = AcceleratorConfig::eyeriss();
+        let a = simulate_network(&net, &acc);
+        let b = simulate_network(&net, &acc);
+        assert!(Arc::ptr_eq(&a, &b), "cache hit must not deep-clone");
+        // a different geometry misses the cache
+        let mut acc2 = AcceleratorConfig::eyeriss();
+        acc2.pe_rows += 1;
+        let c = simulate_network(&net, &acc2);
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(a.total_macs, c.total_macs);
     }
 }

@@ -7,8 +7,15 @@
 //! ```text
 //! bench <name> ... iters=N mean=… p50=… min=… [thrpt=…]
 //! ```
+//!
+//! For the perf trajectory across PRs, a [`BenchSuite`] collects results
+//! and mirrors them to a machine-readable `BENCH_<suite>.json` (name,
+//! ns/iter, elems/s) next to the human report.
 
+use std::path::Path;
 use std::time::Instant;
+
+use crate::util::json::Json;
 
 /// One benchmark measurement.
 #[derive(Clone, Debug)]
@@ -75,6 +82,109 @@ pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> 
     }
 }
 
+impl BenchResult {
+    /// Elements per second (bytes/s for byte-counted benches); `None` when
+    /// the bench carries no element count.
+    pub fn elems_per_s(&self) -> Option<f64> {
+        self.elems.map(|e| e / (self.mean_ns / 1e9))
+    }
+
+    fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("name", Json::Str(self.name.clone())),
+            ("iters", Json::Num(self.iters as f64)),
+            ("ns_per_iter", Json::Num(self.mean_ns)),
+            ("p50_ns", Json::Num(self.p50_ns)),
+            ("min_ns", Json::Num(self.min_ns)),
+        ];
+        if let Some(e) = self.elems {
+            fields.push(("elems", Json::Num(e)));
+            fields.push(("elems_per_s", Json::Num(self.elems_per_s().unwrap_or(0.0))));
+        }
+        Json::obj(fields)
+    }
+}
+
+/// Collects [`BenchResult`]s and mirrors them to `BENCH_<suite>.json` — the
+/// machine-readable perf trajectory tracked across PRs (see EXPERIMENTS.md
+/// §Perf).
+#[derive(Clone, Debug, Default)]
+pub struct BenchSuite {
+    pub suite: String,
+    pub results: Vec<BenchResult>,
+}
+
+impl BenchSuite {
+    pub fn new(suite: &str) -> Self {
+        BenchSuite { suite: suite.to_string(), results: Vec::new() }
+    }
+
+    /// Record a result, returning it for further use (printing, ratios).
+    pub fn record(&mut self, r: BenchResult) -> BenchResult {
+        self.results.push(r.clone());
+        r
+    }
+
+    /// Mean-ns ratio of two recorded benches (`a_ns / b_ns`) — how the
+    /// hotpath suite reports scalar-vs-word-parallel speedups.
+    pub fn ratio(&self, slow: &str, fast: &str) -> Option<f64> {
+        let find = |n: &str| self.results.iter().find(|r| r.name == n);
+        Some(find(slow)?.mean_ns / find(fast)?.mean_ns)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("suite", Json::Str(self.suite.clone())),
+            ("schema", Json::Num(1.0)),
+            ("results", Json::Arr(self.results.iter().map(|r| r.to_json()).collect())),
+        ])
+    }
+
+    /// Write `BENCH_<suite>.json` under `dir`. Best-effort: benches must
+    /// not fail on a read-only FS.
+    pub fn write_json(&self, dir: &Path) -> Option<std::path::PathBuf> {
+        let path = dir.join(format!("BENCH_{}.json", self.suite));
+        match std::fs::write(&path, self.to_json().to_pretty()) {
+            Ok(()) => Some(path),
+            Err(e) => {
+                eprintln!("bench: could not write {}: {e}", path.display());
+                None
+            }
+        }
+    }
+
+    /// Write `BENCH_<suite>.json` at the repository root and log where it
+    /// landed — the shared epilogue for every `harness = false` bench.
+    ///
+    /// Root resolution: the compile-time manifest dir's parent (the
+    /// workspace root) when the binary still runs in the checkout it was
+    /// built from — exact, and immune to stray `Cargo.toml`s above the
+    /// repo. If that path no longer exists (relocated/prebuilt binary),
+    /// fall back to the nearest enclosing cargo root from the CWD, else
+    /// the CWD itself.
+    pub fn write_json_at_repo_root(&self) -> Option<std::path::PathBuf> {
+        let baked = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let root = if baked.join("Cargo.toml").exists() {
+            baked
+                .parent()
+                .filter(|p| p.join("Cargo.toml").exists())
+                .unwrap_or(baked)
+                .to_path_buf()
+        } else {
+            let cwd = std::env::current_dir().unwrap_or_else(|_| ".".into());
+            cwd.ancestors()
+                .find(|a| a.join("Cargo.toml").exists())
+                .unwrap_or(&cwd)
+                .to_path_buf()
+        };
+        let written = self.write_json(&root);
+        if let Some(p) = &written {
+            println!("wrote {}", p.display());
+        }
+        written
+    }
+}
+
 /// Like [`bench`] but annotates elements/iteration for throughput.
 pub fn bench_throughput<T>(
     name: &str,
@@ -104,5 +214,40 @@ mod tests {
     fn throughput_reported() {
         let r = bench_throughput("thr", 1, 8, 1000.0, || 42u64);
         assert!(r.report().contains("Melem/s"));
+        assert!(r.elems_per_s().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn suite_json_roundtrips_and_ratios() {
+        let mut suite = BenchSuite::new("testsuite");
+        suite.record(BenchResult {
+            name: "slow".into(),
+            iters: 4,
+            mean_ns: 200.0,
+            p50_ns: 200.0,
+            min_ns: 180.0,
+            elems: Some(64.0),
+        });
+        suite.record(BenchResult {
+            name: "fast".into(),
+            iters: 4,
+            mean_ns: 20.0,
+            p50_ns: 20.0,
+            min_ns: 19.0,
+            elems: Some(64.0),
+        });
+        assert!((suite.ratio("slow", "fast").unwrap() - 10.0).abs() < 1e-12);
+        assert!(suite.ratio("slow", "missing").is_none());
+        let j = Json::parse(&suite.to_json().to_pretty()).unwrap();
+        assert_eq!(j.get("suite").unwrap().as_str(), Some("testsuite"));
+        let rs = j.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(rs.len(), 2);
+        assert_eq!(rs[0].get("name").unwrap().as_str(), Some("slow"));
+        assert_eq!(rs[0].get("ns_per_iter").unwrap().as_f64(), Some(200.0));
+        let dir = std::env::temp_dir();
+        let path = suite.write_json(&dir).unwrap();
+        let back = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(back, suite.to_json());
+        let _ = std::fs::remove_file(path);
     }
 }

@@ -12,6 +12,7 @@
 pub mod benchmark;
 pub mod check;
 pub mod json;
+pub mod par;
 pub mod rng;
 pub mod stats;
 pub mod table;

@@ -126,6 +126,16 @@ impl Pcg64 {
     }
 }
 
+/// `k` decorrelated shard seeds derived from one master seed (SplitMix64
+/// whitening) — the per-shard stream assignment for the parallel
+/// Monte-Carlo sweeps in [`crate::util::par`]. Depends only on `seed` and
+/// the shard index, never on thread scheduling, so sharded results are
+/// reproducible on any machine.
+pub fn shard_seeds(seed: u64, k: usize) -> Vec<u64> {
+    let mut sm = SplitMix64::new(seed ^ 0x9E37_79B9_0000_5EED);
+    (0..k).map(|_| sm.next_u64()).collect()
+}
+
 /// SplitMix64 — seeding/whitening generator (Steele et al.).
 #[derive(Clone, Debug)]
 pub struct SplitMix64 {
@@ -252,6 +262,20 @@ mod tests {
         let mut buf = [0u8; 13];
         r.fill_bytes(&mut buf);
         assert!(buf.iter().any(|&b| b != 0));
+    }
+
+    #[test]
+    fn shard_seeds_deterministic_and_distinct() {
+        let a = shard_seeds(42, 32);
+        let b = shard_seeds(42, 32);
+        assert_eq!(a, b);
+        let mut uniq = a.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), 32, "seeds must be distinct");
+        // different master seed → unrelated shard seeds
+        let c = shard_seeds(43, 32);
+        assert!(a.iter().zip(&c).all(|(x, y)| x != y));
     }
 
     #[test]

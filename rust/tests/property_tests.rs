@@ -121,6 +121,72 @@ fn prop_memory_roundtrip_is_exact_when_fresh() {
 }
 
 #[test]
+fn prop_word_parallel_path_matches_scalar_reference() {
+    // The tentpole invariant: the SWAR word-parallel access path must be
+    // bit-exact against the retained scalar reference — returned bytes,
+    // committed retention flips, the eDRAM ones census AND every
+    // EnergyMeter field (ones counts feed the energy model) — across
+    // random lengths, alignments, staleness gaps and encoder settings.
+    check::forall_explain(
+        cfg(32, 13),
+        |r| {
+            let seed = r.next_u64();
+            let encode_enabled = r.bernoulli(0.8);
+            // a mixed op sequence: (addr, len, staleness, is_write)
+            let ops: Vec<(usize, usize, f64, bool)> = (0..8)
+                .map(|_| {
+                    (
+                        r.below(12 * 1024) as usize,
+                        r.below(900) as usize,
+                        r.range(0.0, 40e-6),
+                        r.bernoulli(0.5),
+                    )
+                })
+                .collect();
+            let fill = r.next_u64();
+            (seed, encode_enabled, ops, fill)
+        },
+        |(seed, encode_enabled, ops, fill)| {
+            let mut fast = MixedCellMemory::new(16 * 1024, *seed);
+            let mut slow = MixedCellMemory::new(16 * 1024, *seed);
+            fast.encode_enabled = *encode_enabled;
+            slow.encode_enabled = *encode_enabled;
+            slow.word_parallel = false;
+            let mut data_rng = Pcg64::new(*fill);
+            let mut now = 0.0;
+            for &(addr, len, stale, is_write) in ops {
+                now += stale;
+                if is_write {
+                    let mut data = vec![0u8; len];
+                    data_rng.fill_bytes(&mut data);
+                    fast.write(addr, &data, now);
+                    slow.write(addr, &data, now);
+                } else {
+                    let a = fast.read(addr, len, now);
+                    let b = slow.read(addr, len, now);
+                    if a != b {
+                        let diff = a.iter().zip(&b).filter(|(x, y)| x != y).count();
+                        return Err(format!(
+                            "read mismatch at addr={addr} len={len} now={now}: {diff} bytes differ"
+                        ));
+                    }
+                }
+                if fast.meter != slow.meter {
+                    return Err(format!(
+                        "meter diverged after op (addr={addr} len={len} write={is_write}):\n fast={:?}\n slow={:?}",
+                        fast.meter, slow.meter
+                    ));
+                }
+                if fast.edram_ones_frac() != slow.edram_ones_frac() {
+                    return Err("ones census diverged".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_memory_errors_monotone_in_staleness() {
     // reading later never yields fewer corrupted bytes (flips only add)
     check::forall_explain(
