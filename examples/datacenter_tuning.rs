@@ -11,7 +11,8 @@
 //! and pick the operating point; then report the fleet-level ops/W gain.
 
 use mcaimem::energy::opswatt::opswatt_gain;
-use mcaimem::energy::system_eval::{evaluate, MemChoice};
+use mcaimem::energy::system_eval::evaluate;
+use mcaimem::mem::backend::BackendSpec;
 use mcaimem::mem::vref::VrefController;
 use mcaimem::scalesim::{accelerator::AcceleratorConfig, network, simulate_network};
 use mcaimem::util::table::{fnum, Table};
@@ -35,7 +36,7 @@ fn main() -> anyhow::Result<()> {
     let net = network::resnet50();
     let trace = simulate_network(&net, &acc);
     for p in ctrl.candidates() {
-        let e = evaluate(&trace, &acc, &MemChoice::Mcaimem { vref: p.vref });
+        let e = evaluate(&trace, &acc, &BackendSpec::Mcaimem { vref: p.vref, encode: true });
         t.row(vec![
             fnum(p.vref, 1),
             fnum(to_us(p.refresh_period), 2),
@@ -58,9 +59,10 @@ fn main() -> anyhow::Result<()> {
     for name in ["ResNet50", "I-BERT", "VGG16", "CycleGAN"] {
         let net = network::by_name(name).unwrap();
         let trace = simulate_network(&net, &acc);
-        let s = evaluate(&trace, &acc, &MemChoice::Sram).total_j();
-        let m = evaluate(&trace, &acc, &MemChoice::Mcaimem { vref: chosen.vref }).total_j();
-        let g = opswatt_gain(&trace, &acc, &MemChoice::Mcaimem { vref: chosen.vref });
+        let ours = BackendSpec::Mcaimem { vref: chosen.vref, encode: true };
+        let s = evaluate(&trace, &acc, &BackendSpec::Sram).total_j();
+        let m = evaluate(&trace, &acc, &ours).total_j();
+        let g = opswatt_gain(&trace, &acc, &ours);
         f.row(vec![
             name.into(),
             format!("{}x", fnum(s / m, 2)),
@@ -70,8 +72,8 @@ fn main() -> anyhow::Result<()> {
     println!("{}", f.render());
 
     // 3. Why not NVM: the RRAM counterfactual the paper closes with.
-    let rram = evaluate(&trace, &acc, &MemChoice::Rram).total_j();
-    let sram = evaluate(&trace, &acc, &MemChoice::Sram).total_j();
+    let rram = evaluate(&trace, &acc, &BackendSpec::Rram).total_j();
+    let sram = evaluate(&trace, &acc, &BackendSpec::Sram).total_j();
     println!(
         "counterfactual RRAM buffer on ResNet50: {}× MORE energy than SRAM
 (write-path dominated — the paper's argument for eDRAM over NVM).",

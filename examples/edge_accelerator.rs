@@ -10,7 +10,8 @@
 //! benchmarks at a fixed frame rate, reporting per-frame buffer energy,
 //! sustained buffer power, and the battery-life multiple MCAIMem buys.
 
-use mcaimem::energy::system_eval::{evaluate, MemChoice};
+use mcaimem::energy::system_eval::evaluate;
+use mcaimem::mem::backend::BackendSpec;
 use mcaimem::scalesim::{accelerator::AcceleratorConfig, network, simulate_network};
 use mcaimem::util::table::{fnum, Table};
 
@@ -34,9 +35,9 @@ fn main() -> anyhow::Result<()> {
     for name in ["LeNet", "VGG11", "AlexNet", "ResNet50"] {
         let net = network::by_name(name).unwrap();
         let trace = simulate_network(&net, &acc);
-        let s = evaluate(&trace, &acc, &MemChoice::Sram).total_j();
-        let e = evaluate(&trace, &acc, &MemChoice::Edram2t).total_j();
-        let m = evaluate(&trace, &acc, &MemChoice::Mcaimem { vref: 0.8 }).total_j();
+        let s = evaluate(&trace, &acc, &BackendSpec::Sram).total_j();
+        let e = evaluate(&trace, &acc, &BackendSpec::Edram2t).total_j();
+        let m = evaluate(&trace, &acc, &BackendSpec::mcaimem_default()).total_j();
         let gain = s / m;
         worst = worst.min(gain);
         best = best.max(gain);

@@ -20,9 +20,10 @@ use std::time::Duration;
 
 use mcaimem::coordinator::scheduler::simulate_inference;
 use mcaimem::coordinator::server::{InferenceServer, ServerConfig};
-use mcaimem::energy::system_eval::{evaluate, mcaimem_gain, MemChoice};
+use mcaimem::energy::system_eval::{evaluate, mcaimem_gain};
 use mcaimem::mem::area::AreaModel;
-use mcaimem::runtime::executor::{ModelRunner, StoreVariant};
+use mcaimem::mem::backend::BackendSpec;
+use mcaimem::runtime::executor::ModelRunner;
 use mcaimem::scalesim::{accelerator::AcceleratorConfig, network, simulate_network};
 use mcaimem::util::table::{fnum, Table};
 use mcaimem::util::units::MIB;
@@ -42,7 +43,7 @@ fn main() -> anyhow::Result<()> {
         fnum(runner.artifacts.float_acc, 4),
         fnum(runner.artifacts.int8_clean_acc, 4)
     );
-    let clean = runner.accuracy(StoreVariant::Clean, 0.0, 8, 1)?;
+    let clean = runner.accuracy(&BackendSpec::Sram, 0.0, 8, 1)?;
     println!("clean int8 accuracy re-measured from Rust: {}", fnum(clean, 4));
 
     // ---- 2. Fig. 11 sweep through the real kernels ------------------------
@@ -52,8 +53,13 @@ fn main() -> anyhow::Result<()> {
         &["flip rate", "with one-enhancement", "without"],
     );
     for (i, p) in [0.01, 0.05, 0.10, 0.25].into_iter().enumerate() {
-        let with = runner.accuracy(StoreVariant::Mcaimem, p, 8, 50 + i as u64)?;
-        let without = runner.accuracy(StoreVariant::McaimemNoEncoder, p, 8, 90 + i as u64)?;
+        let with = runner.accuracy(&BackendSpec::mcaimem_default(), p, 8, 50 + i as u64)?;
+        let without = runner.accuracy(
+            &BackendSpec::Mcaimem { vref: 0.8, encode: false },
+            p,
+            8,
+            90 + i as u64,
+        )?;
         t.row(vec![format!("{}%", fnum(p * 100.0, 0)), fnum(with, 4), fnum(without, 4)]);
     }
     println!("{}", t.render());
@@ -63,7 +69,7 @@ fn main() -> anyhow::Result<()> {
     println!("== L3 batched serving ==");
     let cfg = ServerConfig {
         batch_window: Duration::from_millis(1),
-        variant: StoreVariant::Mcaimem,
+        backend: BackendSpec::mcaimem_default(),
         flip_p: 0.01,
         seed: 0xE2E,
     };
@@ -104,9 +110,9 @@ fn main() -> anyhow::Result<()> {
     let acc = AcceleratorConfig::eyeriss();
     let net = network::resnet50();
     let trace = simulate_network(&net, &acc);
-    let sram = evaluate(&trace, &acc, &MemChoice::Sram);
-    let ours = evaluate(&trace, &acc, &MemChoice::Mcaimem { vref: 0.8 });
-    let event = simulate_inference(&net, &acc, 0.8, 7)?;
+    let sram = evaluate(&trace, &acc, &BackendSpec::Sram);
+    let ours = evaluate(&trace, &acc, &BackendSpec::mcaimem_default());
+    let event = simulate_inference(&net, &acc, &BackendSpec::mcaimem_default(), 7)?;
     println!(
         "ResNet50 @ Eyeriss closed-form : SRAM {} µJ vs MCAIMem {} µJ  ({}×)",
         fnum(sram.total_j() * 1e6, 1),

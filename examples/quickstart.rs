@@ -12,7 +12,8 @@ use mcaimem::circuit::flip_model::FlipModel;
 use mcaimem::device::StorageLeakage;
 use mcaimem::encode::one_enhancement as enc;
 use mcaimem::encode::stats::bit_histogram;
-use mcaimem::energy::system_eval::{evaluate, MemChoice};
+use mcaimem::energy::system_eval::evaluate;
+use mcaimem::mem::backend::BackendSpec;
 use mcaimem::mem::area::AreaModel;
 use mcaimem::mem::mcaimem::MixedCellMemory;
 use mcaimem::mem::MemKind;
@@ -68,8 +69,8 @@ fn main() -> anyhow::Result<()> {
     );
     let acc = AcceleratorConfig::eyeriss();
     let trace = simulate_network(&network::resnet50(), &acc);
-    let sram = evaluate(&trace, &acc, &MemChoice::Sram).total_j();
-    let ours = evaluate(&trace, &acc, &MemChoice::Mcaimem { vref: 0.8 }).total_j();
+    let sram = evaluate(&trace, &acc, &BackendSpec::Sram).total_j();
+    let ours = evaluate(&trace, &acc, &BackendSpec::mcaimem_default()).total_j();
     println!(
         "ResNet-50 on Eyeriss, buffer energy/inference: SRAM {:.1} µJ → MCAIMem {:.1} µJ ({:.2}×)",
         sram * 1e6,

@@ -1,7 +1,8 @@
 //! Bench + regeneration for Fig. 11 — DNN accuracy under retention errors,
 //! executed through the full PJRT path (needs `make artifacts`).
 
-use mcaimem::runtime::executor::{ModelRunner, StoreVariant};
+use mcaimem::mem::backend::BackendSpec;
+use mcaimem::runtime::executor::ModelRunner;
 use mcaimem::util::benchmark::bench;
 
 fn main() {
@@ -23,18 +24,22 @@ fn main() {
         }
     }
 
-    // serving-path latency: one batch through each model variant
+    // serving-path latency: one batch served from each backend
     let mut runner = ModelRunner::new(dir).expect("artifacts");
     let x = runner.artifacts.tensor("x_test_i8").unwrap().as_i8().unwrap();
     let batch = runner.artifacts.batch * runner.artifacts.input_dim;
     let xs = x[..batch].to_vec();
     let mut rng = mcaimem::util::rng::Pcg64::new(1);
-    for (name, v, p) in [
-        ("infer clean batch=128", StoreVariant::Clean, 0.0),
-        ("infer mcaimem p=1% batch=128", StoreVariant::Mcaimem, 0.01),
-        ("infer noenc p=1% batch=128", StoreVariant::McaimemNoEncoder, 0.01),
+    for (name, spec, p) in [
+        ("infer sram (clean) batch=128", BackendSpec::Sram, 0.0),
+        ("infer mcaimem p=1% batch=128", BackendSpec::mcaimem_default(), 0.01),
+        (
+            "infer noenc p=1% batch=128",
+            BackendSpec::Mcaimem { vref: 0.8, encode: false },
+            0.01,
+        ),
     ] {
-        let r = bench(name, 1, 10, || runner.infer(&xs, v, p, &mut rng).unwrap());
+        let r = bench(name, 1, 10, || runner.infer(&xs, &spec, p, &mut rng).unwrap());
         println!("{}", r.report());
     }
 }

@@ -69,7 +69,13 @@ fn main() {
     println!(
         "{}",
         bench("coordinator::simulate_inference lenet", 1, 5, || {
-            simulate_inference(&lenet, &acc, 0.8, 1).unwrap()
+            simulate_inference(
+                &lenet,
+                &acc,
+                &mcaimem::mem::backend::BackendSpec::mcaimem_default(),
+                1,
+            )
+            .unwrap()
         })
         .report()
     );

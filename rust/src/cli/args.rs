@@ -1,5 +1,6 @@
 //! Tiny argv parser: positional arguments plus `--key value` / `--flag`
-//! options, with typed accessors and unknown-option detection.
+//! options, with typed accessors and unknown-option detection that
+//! suggests the nearest known option (edit distance ≤ 2).
 
 use std::collections::BTreeMap;
 
@@ -61,7 +62,10 @@ impl ArgParser {
                         .ok_or_else(|| anyhow!("--{name} expects a value"))?;
                     out.options.insert(name.to_string(), v);
                 } else {
-                    bail!("unknown option --{name}");
+                    match self.nearest_option(name) {
+                        Some(sugg) => bail!("unknown option --{name} (did you mean --{sugg}?)"),
+                        None => bail!("unknown option --{name}"),
+                    }
                 }
             } else {
                 out.positionals.push(a);
@@ -69,6 +73,41 @@ impl ArgParser {
         }
         Ok(out)
     }
+
+    /// The known option closest to `name` within edit distance 2, if any
+    /// (ties break toward the earliest declared option).
+    fn nearest_option(&self, name: &str) -> Option<&'static str> {
+        let mut best: Option<(usize, &'static str)> = None;
+        for &cand in self.value_opts.iter().chain(self.flag_opts.iter()) {
+            let d = edit_distance(name, cand);
+            let better = match best {
+                Some((bd, _)) => d < bd,
+                None => true,
+            };
+            if d <= 2 && better {
+                best = Some((d, cand));
+            }
+        }
+        best.map(|(_, cand)| cand)
+    }
+}
+
+/// Levenshtein distance (insert/delete/substitute, unit costs) — small
+/// inputs only, O(|a|·|b|) with a single rolling row.
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut row: Vec<usize> = (0..=b.len()).collect();
+    for (i, &ca) in a.iter().enumerate() {
+        let mut prev_diag = row[0];
+        row[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev_diag + usize::from(ca != cb);
+            prev_diag = row[j + 1];
+            row[j + 1] = sub.min(row[j] + 1).min(prev_diag + 1);
+        }
+    }
+    row[b.len()]
 }
 
 #[cfg(test)]
@@ -104,6 +143,36 @@ mod tests {
     #[test]
     fn unknown_option_rejected() {
         assert!(parse("--nope 1").is_err());
+    }
+
+    #[test]
+    fn unknown_option_suggests_nearest() {
+        // one deletion away from `network`
+        let err = parse("--netork LeNet").unwrap_err().to_string();
+        assert!(err.contains("did you mean --network?"), "err={err}");
+        // one substitution away from the flag `quick`
+        let err = parse("--quack").unwrap_err().to_string();
+        assert!(err.contains("did you mean --quick?"), "err={err}");
+        // two edits away still suggests
+        let err = parse("--csvv2 x").unwrap_err().to_string();
+        assert!(err.contains("did you mean --csv?"), "err={err}");
+    }
+
+    #[test]
+    fn far_off_options_get_no_suggestion() {
+        let err = parse("--zzzzzzz 1").unwrap_err().to_string();
+        assert!(err.contains("unknown option --zzzzzzz"), "err={err}");
+        assert!(!err.contains("did you mean"), "err={err}");
+    }
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance("", ""), 0);
+        assert_eq!(edit_distance("abc", "abc"), 0);
+        assert_eq!(edit_distance("abc", "ab"), 1);
+        assert_eq!(edit_distance("abc", "axc"), 1);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
+        assert_eq!(edit_distance("", "ab"), 2);
     }
 
     #[test]

@@ -1,11 +1,14 @@
 //! Command-line interface (hand-rolled — clap is not in the offline crate
-//! set). Subcommands mirror the experiment surface:
+//! set). Subcommands mirror the experiment surface, and all of them share
+//! one `--backend` flag taking the [`crate::mem::backend::BackendSpec`]
+//! grammar (`sram | edram2t | rram | mcaimem[@VREF[-noenc]]`, comma-list
+//! where a sweep makes sense):
 //!
 //! ```text
-//! mcaimem report <id|all> [--csv DIR] [--artifacts DIR] [--quick]
+//! mcaimem report <id|all> [--csv DIR] [--artifacts DIR] [--backend SPECS] [--quick]
 //! mcaimem fig11 [--artifacts DIR] [--quick]
-//! mcaimem simulate --network NAME [--platform eyeriss|tpuv1] [--vref V]
-//! mcaimem serve [--artifacts DIR] [--requests N] [--variant clean|mcaimem|noenc] [--p P]
+//! mcaimem simulate --network NAME [--platform eyeriss|tpuv1] [--backend SPECS]
+//! mcaimem serve [--artifacts DIR] [--requests N] [--backend SPEC] [--p P]
 //! mcaimem selftest [--artifacts DIR]
 //! ```
 

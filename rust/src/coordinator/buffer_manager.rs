@@ -1,15 +1,18 @@
-//! Tensor-level buffer manager over the functional MCAIMem array.
+//! Tensor-level buffer manager over any [`MemoryBackend`].
 //!
-//! Owns allocation (bump allocator with free-list reuse — DNN buffers
-//! allocate/release in layer order), the refresh controller wired to the
-//! array's bank geometry, and the virtual clock. Every `store`/`load` goes
-//! through the mixed-cell array's encoder + aging machinery, so anything
-//! scheduled on top of this manager sees *physical* retention behaviour,
-//! not a statistical abstraction.
+//! Owns allocation (bump allocator with a coalescing, frontier-reclaiming
+//! free list — DNN buffers allocate/release in layer order), the refresh
+//! controller wired to the backend's bank geometry (disabled for
+//! technologies that need no manager-driven refresh), and the virtual
+//! clock. Every `store`/`load` goes through the backend's device API, so
+//! anything scheduled on top of this manager sees the *physical* behaviour
+//! of the chosen technology — the mixed-cell array's encoder + aging
+//! machinery for `mcaimem@…`, plain persistence for `sram`/`rram`, the
+//! analytic refresh stream for `edram2t`.
 
 use anyhow::{bail, Result};
 
-use crate::mem::mcaimem::MixedCellMemory;
+use crate::mem::backend::{self, BackendSpec, MemoryBackend};
 use crate::mem::refresh::RefreshController;
 
 /// Handle to an allocated tensor region.
@@ -20,12 +23,18 @@ pub struct TensorHandle {
     pub id: u64,
 }
 
-/// The MCAIMem-backed buffer manager.
+/// The backend-generic buffer manager.
 pub struct BufferManager {
-    pub mem: MixedCellMemory,
+    pub mem: Box<dyn MemoryBackend>,
     pub refresh: RefreshController,
-    free: Vec<(usize, usize)>,      // (offset, len), sorted by offset
-    allocated: Vec<(usize, usize)>, // live regions
+    free: Vec<(usize, usize)>,           // (offset, len), sorted by offset
+    allocated: Vec<(usize, usize, u64)>, // live regions (offset, len, id)
+    /// Bump frontier: no byte at or above this offset has ever been
+    /// allocated *and not reclaimed*. Frees that reach the frontier shrink
+    /// it back, so layer-order alloc/free cycles cannot leak capacity.
+    frontier: usize,
+    /// High-water mark of the frontier — the peak footprint.
+    peak: usize,
     next_id: u64,
     now: f64,
 }
@@ -34,18 +43,30 @@ impl BufferManager {
     /// A manager over `bytes` of mixed-cell memory at the paper's operating
     /// point (V_REF = 0.8 ⇒ 12.57 µs whole-array refresh).
     pub fn new(bytes: usize, seed: u64) -> Self {
-        Self::with_vref(bytes, 0.8, seed)
+        Self::from_spec(&BackendSpec::mcaimem_default(), bytes, seed)
     }
 
-    pub fn with_vref(bytes: usize, vref: f64, seed: u64) -> Self {
-        let mem = MixedCellMemory::with_vref(bytes, vref, seed);
-        let t_ref = mem.card.refresh_period.expect("mcaimem refreshes");
-        let rows = mem.map.bank.rows;
+    /// A manager over any backend spec — the one construction path every
+    /// technology shares.
+    pub fn from_spec(spec: &BackendSpec, bytes: usize, seed: u64) -> Self {
+        let mem = backend::build(spec, bytes, seed);
+        let refresh = match mem.refresh_due() {
+            Some(t_ref) => RefreshController::new(mem.rows_per_bank(), t_ref),
+            None => {
+                // no manager-driven refresh: park a disabled controller so
+                // the tick loop stays uniform
+                let mut rc = RefreshController::new(1, 1.0);
+                rc.enabled = false;
+                rc
+            }
+        };
         BufferManager {
-            refresh: RefreshController::new(rows, t_ref),
+            refresh,
             mem,
             free: Vec::new(),
             allocated: Vec::new(),
+            frontier: 0,
+            peak: 0,
             next_id: 0,
             now: 0.0,
         }
@@ -60,7 +81,7 @@ impl BufferManager {
     }
 
     /// Advance the virtual clock, firing any due refresh slots into the
-    /// array (each slot refreshes one row across all banks in parallel).
+    /// backend (each slot refreshes one row across all banks in parallel).
     pub fn tick(&mut self, dt: f64) {
         assert!(dt >= 0.0);
         let target = self.now + dt;
@@ -69,7 +90,7 @@ impl BufferManager {
             // exceeds t_ref even under coarse ticks
             self.mem.refresh_row(op.row, op.due);
         }
-        self.mem.advance_to(target);
+        self.mem.tick(target);
         self.now = target;
     }
 
@@ -86,30 +107,60 @@ impl BufferManager {
                 self.free.sort_unstable();
             }
             self.next_id += 1;
-            self.allocated.push((off, len));
+            self.allocated.push((off, len, self.next_id));
             return Ok(TensorHandle { offset: off, len, id: self.next_id });
         }
-        // bump from the high-water mark (end of last free/used region)
-        let used_end = self.high_water();
-        if used_end + len > self.capacity() {
+        // bump from the frontier
+        if self.frontier + len > self.capacity() {
             bail!(
-                "out of buffer memory: want {len} at {used_end}, capacity {}",
+                "out of buffer memory: want {len} at {}, capacity {}",
+                self.frontier,
                 self.capacity()
             );
         }
-        self.allocated.push((used_end, len));
+        let off = self.frontier;
+        self.frontier += len;
+        self.peak = self.peak.max(self.frontier);
         self.next_id += 1;
-        Ok(TensorHandle { offset: used_end, len, id: self.next_id })
+        self.allocated.push((off, len, self.next_id));
+        Ok(TensorHandle { offset: off, len, id: self.next_id })
     }
 
-    /// Release a region for reuse.
+    /// Release a region for reuse: coalesce with adjacent free ranges, and
+    /// return any free tail that reaches the bump frontier to the bump
+    /// pool — without this, layer-order alloc/free cycles whose sizes grow
+    /// leak capacity (a freed block below the frontier is invisible to
+    /// bump allocation).
+    ///
+    /// A handle that does not match a live allocation — double release,
+    /// fabricated handle, or a stale handle whose region has since been
+    /// handed to a new owner (the `id` disambiguates) — is ignored:
+    /// freeing it anyway would insert a range that overlaps live regions
+    /// or the bump pool and let two later allocations alias the same bytes.
     pub fn release(&mut self, h: TensorHandle) {
-        if let Some(pos) = self.allocated.iter().position(|&(o, l)| o == h.offset && l == h.len) {
-            self.allocated.remove(pos);
+        match self
+            .allocated
+            .iter()
+            .position(|&(o, l, id)| o == h.offset && l == h.len && id == h.id)
+        {
+            Some(pos) => {
+                self.allocated.remove(pos);
+            }
+            None => return,
         }
         self.free.push((h.offset, h.len));
         self.free.sort_unstable();
         self.coalesce();
+        // reclaim the tail: after coalescing, only the last free block can
+        // touch the frontier
+        while let Some(&(off, len)) = self.free.last() {
+            if off + len == self.frontier {
+                self.frontier = off;
+                self.free.pop();
+            } else {
+                break;
+            }
+        }
     }
 
     fn coalesce(&mut self) {
@@ -126,33 +177,31 @@ impl BufferManager {
         self.free = merged;
     }
 
-    fn high_water(&self) -> usize {
-        self.allocated
-            .iter()
-            .chain(self.free.iter())
-            .map(|&(o, l)| o + l)
-            .max()
-            .unwrap_or(0)
-    }
-
     /// Store tensor bytes at the current clock.
     pub fn store(&mut self, h: TensorHandle, data: &[u8]) -> Result<()> {
         if data.len() != h.len {
             bail!("store size mismatch: handle {} vs data {}", h.len, data.len());
         }
-        self.mem.write(h.offset, data, self.now);
+        self.mem.store(h.offset, data, self.now);
         Ok(())
     }
 
-    /// Load tensor bytes at the current clock (ages + commits flips).
+    /// Load tensor bytes at the current clock (ages + commits flips on
+    /// backends that age).
     pub fn load(&mut self, h: TensorHandle) -> Vec<u8> {
-        self.mem.read(h.offset, h.len, self.now)
+        self.mem.load(h.offset, h.len, self.now)
     }
 
     /// Fraction of capacity currently allocated.
     pub fn utilization(&self) -> f64 {
-        let used: usize = self.allocated.iter().map(|&(_, l)| l).sum();
+        let used: usize = self.allocated.iter().map(|&(_, l, _)| l).sum();
         used as f64 / self.capacity() as f64
+    }
+
+    /// Peak footprint (max bump-frontier position) over the manager's
+    /// lifetime — the regression metric for free-list fragmentation.
+    pub fn peak_usage(&self) -> usize {
+        self.peak
     }
 }
 
@@ -187,6 +236,23 @@ mod tests {
     }
 
     #[test]
+    fn every_backend_drives_the_same_manager() {
+        for spec in BackendSpec::default_sweep() {
+            let mut bm = BufferManager::from_spec(&spec, 32 * 1024, 5);
+            let h = bm.alloc(128).unwrap();
+            let data: Vec<u8> = (0..128).map(|i| i as u8).collect();
+            bm.store(h, &data).unwrap();
+            bm.tick(1e-6);
+            assert_eq!(bm.load(h), data, "{spec}");
+            assert!(bm.mem.meter().write_j > 0.0, "{spec}");
+            // static memories never see manager-driven refresh slots
+            if bm.mem.refresh_due().is_none() {
+                assert_eq!(bm.refresh.issued, 0, "{spec}");
+            }
+        }
+    }
+
+    #[test]
     fn alloc_release_reuse() {
         let mut bm = BufferManager::new(16 * 1024, 3);
         let a = bm.alloc(1000).unwrap();
@@ -199,16 +265,79 @@ mod tests {
     }
 
     #[test]
-    fn coalescing_merges_adjacent_frees() {
+    fn frees_reaching_the_frontier_are_reclaimed() {
         let mut bm = BufferManager::new(16 * 1024, 4);
         let a = bm.alloc(100).unwrap();
         let b = bm.alloc(100).unwrap();
         bm.release(a);
-        bm.release(b);
-        assert_eq!(bm.free.len(), 1);
-        assert_eq!(bm.free[0], (0, 200));
-        let big = bm.alloc(200).unwrap();
+        bm.release(b); // coalesces to (0, 200), which touches the frontier
+        assert!(bm.free.is_empty(), "tail free block must return to the bump pool");
+        // a *larger* allocation than either freed block now fits at 0 —
+        // the case the old high-water bump leaked on
+        let big = bm.alloc(300).unwrap();
         assert_eq!(big.offset, 0);
+        assert_eq!(bm.peak_usage(), 300);
+    }
+
+    #[test]
+    fn grow_shrink_cycles_do_not_leak_capacity() {
+        // alloc/free a growing sequence: without frontier reclaim every
+        // cycle leaks the previous (smaller) block
+        let mut bm = BufferManager::new(16 * 1024, 4);
+        for len in [100usize, 200, 400, 800, 1600] {
+            let h = bm.alloc(len).unwrap();
+            bm.release(h);
+        }
+        assert_eq!(bm.peak_usage(), 1600);
+    }
+
+    #[test]
+    fn resnet50_layer_cycle_peak_is_stable_across_passes() {
+        // regression for free-list fragmentation: running the full
+        // ResNet-50 layer-order alloc/free sequence twice must not grow
+        // the peak footprint — pass 2 replays into a fully reclaimed
+        // allocator, so any difference is leaked capacity
+        let net = crate::scalesim::network::resnet50();
+        let mut bm = BufferManager::from_spec(&BackendSpec::Sram, 8 * 1024 * 1024, 1);
+        let cap_alloc = |b: usize| b.clamp(1, 1024 * 1024);
+        let mut peaks = Vec::new();
+        for pass in 0..2 {
+            let mut act: Option<TensorHandle> = None;
+            for l in &net.layers {
+                let w = bm.alloc(cap_alloc(l.weight_bytes())).unwrap();
+                let inp = match act.take() {
+                    Some(h) => h,
+                    None => bm.alloc(cap_alloc(l.input_bytes())).unwrap(),
+                };
+                let out = bm.alloc(cap_alloc(l.output_bytes())).unwrap();
+                bm.release(inp);
+                bm.release(w);
+                act = Some(out);
+            }
+            if let Some(h) = act {
+                bm.release(h);
+            }
+            assert_eq!(bm.utilization(), 0.0, "pass {pass}: everything was freed");
+            peaks.push(bm.peak_usage());
+        }
+        assert_eq!(peaks[0], peaks[1], "second pass must not grow the peak footprint");
+    }
+
+    #[test]
+    fn stale_or_double_release_is_ignored() {
+        let mut bm = BufferManager::new(16 * 1024, 7);
+        let a = bm.alloc(100).unwrap();
+        bm.release(a);
+        bm.release(a); // double release: must not poison the free list
+        bm.release(TensorHandle { offset: 5000, len: 64, id: 999 }); // fabricated
+        let b = bm.alloc(100).unwrap();
+        // stale handle whose (offset, len) was re-allocated to `b`: the id
+        // mismatch must protect b's live region from being freed
+        assert_eq!(b.offset, a.offset);
+        bm.release(a);
+        let c = bm.alloc(100).unwrap();
+        assert_ne!(b.offset, c.offset, "live regions must never alias");
+        assert_eq!(bm.peak_usage(), 200);
     }
 
     #[test]

@@ -1,18 +1,22 @@
 //! Event-driven inference timeline over the functional buffer.
 //!
-//! Drives one whole-network inference through the [`BufferManager`]:
-//! weights are resident; per layer, input activations are loaded, the layer
-//! "computes" for the cycle count the systolic model gives it (the buffer
-//! clock advances, refresh slots fire, static energy integrates), and
-//! outputs are stored. This is the event-driven counterpart of the
-//! closed-form model in [`crate::energy::system_eval`]; tests check the two
-//! agree on static + refresh energy to within the discretization error —
-//! the cross-validation the paper's methodology implies between its SPICE
-//! characterization and its SCALE-Sim system numbers.
+//! Drives one whole-network inference through the [`BufferManager`] on any
+//! [`BackendSpec`]: weights are resident; per layer, input activations are
+//! loaded, the layer "computes" for the cycle count the systolic model
+//! gives it (the buffer clock advances, refresh slots fire, static energy
+//! integrates), and outputs are stored. This is the event-driven
+//! counterpart of the closed-form model in [`crate::energy::system_eval`],
+//! and the "identical scheduler path" a backend sweep
+//! (`mcaimem simulate --backend sram,edram2t,rram,mcaimem@0.8`) runs every
+//! technology through; tests check the closed form and the event-driven
+//! run agree on static + refresh energy to within the discretization
+//! error — the cross-validation the paper's methodology implies between
+//! its SPICE characterization and its SCALE-Sim system numbers.
 
 use anyhow::Result;
 
 use super::buffer_manager::BufferManager;
+use crate::mem::backend::BackendSpec;
 use crate::scalesim::accelerator::AcceleratorConfig;
 use crate::scalesim::network::Network;
 use crate::scalesim::systolic::layer_cost;
@@ -23,6 +27,8 @@ use crate::util::rng::Pcg64;
 pub struct SimReport {
     pub network: &'static str,
     pub accelerator: &'static str,
+    /// Grammar form of the backend this run used (parseable).
+    pub backend: String,
     pub sim_time_s: f64,
     pub static_j: f64,
     pub refresh_j: f64,
@@ -30,6 +36,8 @@ pub struct SimReport {
     pub refresh_ops: u64,
     pub flips_committed: u64,
     pub weight_bytes_resident: usize,
+    /// Macro area (m²) of the buffer at this capacity on 45 nm LP.
+    pub area_m2: f64,
 }
 
 impl SimReport {
@@ -38,7 +46,8 @@ impl SimReport {
     }
 }
 
-/// Simulate one inference of `net` on `acc` with an MCAIMem buffer.
+/// Simulate one inference of `net` on `acc` with the buffer technology
+/// `spec` — every backend runs the identical schedule.
 ///
 /// Weights for the current layer are (re)staged into the buffer when they
 /// don't fit wholesale — the double-buffered tiling every real accelerator
@@ -46,10 +55,10 @@ impl SimReport {
 pub fn simulate_inference(
     net: &Network,
     acc: &AcceleratorConfig,
-    vref: f64,
+    spec: &BackendSpec,
     seed: u64,
 ) -> Result<SimReport> {
-    let mut bm = BufferManager::with_vref(acc.buffer_bytes, vref, seed);
+    let mut bm = BufferManager::from_spec(spec, acc.buffer_bytes, seed);
     let mut rng = Pcg64::new(seed ^ 0x5EED);
 
     // activation ping-pong regions sized to the worst layer (clamped to a
@@ -112,10 +121,12 @@ pub fn simulate_inference(
         std::mem::swap(&mut src, &mut dst);
     }
 
-    let m = &bm.mem.meter;
+    let area_m2 = bm.mem.area();
+    let m = bm.mem.meter();
     Ok(SimReport {
         network: net.name,
         accelerator: acc.name,
+        backend: spec.to_string(),
         sim_time_s: bm.now(),
         static_j: m.static_j,
         refresh_j: m.refresh_j,
@@ -123,13 +134,14 @@ pub fn simulate_inference(
         refresh_ops: m.refreshes,
         flips_committed: m.flips_committed,
         weight_bytes_resident: wregion,
+        area_m2,
     })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::energy::system_eval::{evaluate, MemChoice};
+    use crate::energy::system_eval::evaluate;
     use crate::scalesim::{network, simulate_network};
 
     #[test]
@@ -140,9 +152,9 @@ mod tests {
         // estimate, so allow 30 %).
         let net = network::lenet();
         let acc = AcceleratorConfig::eyeriss();
-        let sim = simulate_inference(&net, &acc, 0.8, 42).unwrap();
+        let sim = simulate_inference(&net, &acc, &BackendSpec::mcaimem_default(), 42).unwrap();
         let trace = simulate_network(&net, &acc);
-        let cf = evaluate(&trace, &acc, &MemChoice::Mcaimem { vref: 0.8 });
+        let cf = evaluate(&trace, &acc, &BackendSpec::mcaimem_default());
         let rel = |a: f64, b: f64| (a - b).abs() / b.max(1e-30);
         assert!(rel(sim.sim_time_s, trace.total_time_s) < 1e-9);
         assert!(
@@ -164,10 +176,33 @@ mod tests {
     }
 
     #[test]
+    fn every_backend_runs_the_identical_schedule() {
+        // the sweep promise: one scheduler path, any technology — same
+        // wall-clock timeline, per-backend meters/area
+        let net = network::lenet();
+        let acc = AcceleratorConfig::eyeriss();
+        let mut runs = Vec::new();
+        for spec in BackendSpec::default_sweep() {
+            let r = simulate_inference(&net, &acc, &spec, 9).unwrap();
+            assert_eq!(r.backend, spec.to_string());
+            assert!(r.area_m2 > 0.0, "{spec}");
+            runs.push(r);
+        }
+        for w in runs.windows(2) {
+            assert!((w[0].sim_time_s - w[1].sim_time_s).abs() < 1e-15, "same schedule");
+        }
+        let by = |s: &str| runs.iter().find(|r| r.backend == s).unwrap();
+        assert_eq!(by("sram").refresh_j, 0.0);
+        assert_eq!(by("rram").static_j, 0.0);
+        assert!(by("edram2t").refresh_j > by("mcaimem@0.8").refresh_j);
+        assert!(by("rram").dynamic_j > 50.0 * by("sram").dynamic_j);
+    }
+
+    #[test]
     fn refresh_ops_scale_with_runtime() {
         let net = network::lenet();
         let acc = AcceleratorConfig::eyeriss();
-        let sim = simulate_inference(&net, &acc, 0.8, 1).unwrap();
+        let sim = simulate_inference(&net, &acc, &BackendSpec::mcaimem_default(), 1).unwrap();
         // expected: time / slot-interval
         let t_ref = 12.57e-6;
         let rows = 256.0;
@@ -180,8 +215,10 @@ mod tests {
     fn lower_vref_means_more_refresh_energy() {
         let net = network::lenet();
         let acc = AcceleratorConfig::eyeriss();
-        let hi = simulate_inference(&net, &acc, 0.8, 2).unwrap();
-        let lo = simulate_inference(&net, &acc, 0.5, 2).unwrap();
+        let hi = simulate_inference(&net, &acc, &BackendSpec::mcaimem_default(), 2).unwrap();
+        let lo =
+            simulate_inference(&net, &acc, &BackendSpec::Mcaimem { vref: 0.5, encode: true }, 2)
+                .unwrap();
         assert!(lo.refresh_j > 5.0 * hi.refresh_j, "lo={} hi={}", lo.refresh_j, hi.refresh_j);
         // flips affect only the ~1% weakest cells among freshly written
         // zeros (each flips at most once per write); bound by traffic

@@ -14,7 +14,8 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use super::metrics::Metrics;
-use crate::runtime::executor::{ModelRunner, StoreVariant};
+use crate::mem::backend::BackendSpec;
+use crate::runtime::executor::ModelRunner;
 use crate::util::rng::Pcg64;
 
 /// Server configuration.
@@ -22,9 +23,10 @@ use crate::util::rng::Pcg64;
 pub struct ServerConfig {
     /// Batching window: how long to wait for more requests before padding.
     pub batch_window: Duration,
-    /// Which storage variant the served model uses.
-    pub variant: StoreVariant,
-    /// Retention-flip probability fed to the aged variants.
+    /// Which buffer technology the served model stores tensors in (same
+    /// spec grammar as everywhere else: `sram`, `mcaimem@0.8`, …).
+    pub backend: BackendSpec,
+    /// Retention-flip probability fed to the aged backends.
     pub flip_p: f64,
     pub seed: u64,
 }
@@ -33,7 +35,7 @@ impl Default for ServerConfig {
     fn default() -> Self {
         ServerConfig {
             batch_window: Duration::from_millis(2),
-            variant: StoreVariant::Mcaimem,
+            backend: BackendSpec::mcaimem_default(),
             flip_p: 0.01,
             seed: 0xD00D,
         }
@@ -166,7 +168,7 @@ fn worker_loop(dir: std::path::PathBuf, cfg: ServerConfig, rx: mpsc::Receiver<Re
         }
         metrics.record_batch(real, batch);
 
-        match runner.infer(&x, cfg.variant, cfg.flip_p, &mut rng) {
+        match runner.infer(&x, &cfg.backend, cfg.flip_p, &mut rng) {
             Ok(classes) => {
                 for (i, req) in pending.into_iter().enumerate() {
                     let latency = req.submitted.elapsed();

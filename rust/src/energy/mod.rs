@@ -1,12 +1,14 @@
 //! System-level energy composition (paper §V-B, Figs. 14–16).
 //!
 //! [`system_eval`] combines a [`crate::scalesim::NetworkTrace`] with the
-//! memory characterization cards to produce per-(network, platform, memory)
-//! static / refresh / dynamic energy breakdowns; [`opswatt`] normalizes the
-//! buffer-energy win into the chip-level performance-per-watt gain of
-//! Fig. 16.
+//! memory characterization cards to produce per-(network, platform,
+//! backend) static / refresh / dynamic energy breakdowns — the backend is
+//! named by the repo-wide [`crate::mem::backend::BackendSpec`]; [`opswatt`]
+//! normalizes the buffer-energy win into the chip-level
+//! performance-per-watt gain of Fig. 16.
 
 pub mod opswatt;
 pub mod system_eval;
 
-pub use system_eval::{evaluate, EnergyBreakdown, MemChoice};
+pub use crate::mem::backend::BackendSpec;
+pub use system_eval::{evaluate, EnergyBreakdown};

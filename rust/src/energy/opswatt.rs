@@ -12,14 +12,15 @@
 //! With the headline 3.4× buffer ratio this lands at +42.8 % on Eyeriss and
 //! +35.4 % on TPUv1 — the paper's "between 35.4 % and a peak of 43.2 %".
 
-use super::system_eval::{evaluate, MemChoice};
+use super::system_eval::evaluate;
+use crate::mem::backend::BackendSpec;
 use crate::scalesim::accelerator::AcceleratorConfig;
 use crate::scalesim::simulate::NetworkTrace;
 
-/// Chip-level ops/W improvement from swapping the SRAM buffer for `mem`.
-pub fn opswatt_gain(trace: &NetworkTrace, acc: &AcceleratorConfig, mem: &MemChoice) -> f64 {
-    let sram = evaluate(trace, acc, &MemChoice::Sram).total_j();
-    let ours = evaluate(trace, acc, mem).total_j();
+/// Chip-level ops/W improvement from swapping the SRAM buffer for `spec`.
+pub fn opswatt_gain(trace: &NetworkTrace, acc: &AcceleratorConfig, spec: &BackendSpec) -> f64 {
+    let sram = evaluate(trace, acc, &BackendSpec::Sram).total_j();
+    let ours = evaluate(trace, acc, spec).total_j();
     let ratio = ours / sram;
     let f = acc.buffer_power_frac;
     1.0 / ((1.0 - f) + f * ratio) - 1.0
@@ -52,7 +53,7 @@ mod tests {
         for acc in AcceleratorConfig::paper_platforms() {
             for net in ["AlexNet", "ResNet50", "VGG16"] {
                 let t = simulate_network(&network::by_name(net).unwrap(), &acc);
-                let g = opswatt_gain(&t, &acc, &MemChoice::Mcaimem { vref: 0.8 });
+                let g = opswatt_gain(&t, &acc, &BackendSpec::mcaimem_default());
                 assert!(g > 0.25 && g < 0.50, "{net}@{}: gain={g}", acc.name);
             }
         }

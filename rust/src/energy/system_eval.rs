@@ -6,37 +6,17 @@
 //! buffer is scaled to the platform (108 KB Eyeriss / 8 MB TPUv1). MAC
 //! energy is intentionally excluded ("our evaluation is meticulously
 //! confined to the on-chip buffer performance").
+//!
+//! The buffer design under evaluation is named by the repo-wide
+//! [`BackendSpec`] — the same spec the CLI parses and the functional
+//! backends are built from — so the closed-form numbers here and the
+//! event-driven run in [`crate::coordinator::scheduler`] always talk about
+//! the same technology.
 
-use crate::mem::energy::EnergyCard;
+use crate::mem::backend::BackendSpec;
 use crate::mem::rram::RramCard;
 use crate::scalesim::accelerator::AcceleratorConfig;
 use crate::scalesim::simulate::NetworkTrace;
-
-/// Which buffer design to evaluate.
-#[derive(Clone, Debug, PartialEq)]
-pub enum MemChoice {
-    Sram,
-    /// Conventional asymmetric 2T eDRAM with C-S/A — no encoder
-    /// (the paper's eDRAM baseline).
-    Edram2t,
-    /// MCAIMem at a given V_REF, one-enhancement encoder on.
-    Mcaimem { vref: f64 },
-    /// MCAIMem with the encoder disabled (ablation, Fig. 11's "without").
-    McaimemNoEncoder { vref: f64 },
-    Rram,
-}
-
-impl MemChoice {
-    pub fn label(&self) -> String {
-        match self {
-            MemChoice::Sram => "SRAM".into(),
-            MemChoice::Edram2t => "eDRAM(2T)".into(),
-            MemChoice::Mcaimem { vref } => format!("MCAIMem@{vref}"),
-            MemChoice::McaimemNoEncoder { vref } => format!("MCAIMem@{vref}-noenc"),
-            MemChoice::Rram => "RRAM".into(),
-        }
-    }
-}
 
 /// Buffer energy for one inference.
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -52,15 +32,19 @@ impl EnergyBreakdown {
     }
 }
 
-/// Evaluate one (trace, platform, memory) combination.
-pub fn evaluate(trace: &NetworkTrace, acc: &AcceleratorConfig, mem: &MemChoice) -> EnergyBreakdown {
+/// Evaluate one (trace, platform, backend) combination.
+pub fn evaluate(
+    trace: &NetworkTrace,
+    acc: &AcceleratorConfig,
+    spec: &BackendSpec,
+) -> EnergyBreakdown {
     let buf = acc.buffer_bytes;
     let t = trace.total_time_s;
     let reads = trace.total_sram_reads() as usize;
     let writes = trace.total_sram_writes() as usize;
 
-    match mem {
-        MemChoice::Rram => {
+    match spec {
+        BackendSpec::Rram => {
             // An RRAM-only buffer has no cheap staging tier: the partial-sum
             // / operand-return stream that a systolic SRAM absorbs for free
             // hits the RRAM write path. Charge one buffer write per operand
@@ -74,14 +58,9 @@ pub fn evaluate(trace: &NetworkTrace, acc: &AcceleratorConfig, mem: &MemChoice) 
                 dynamic_j: card.read_energy(reads) + card.write_energy(writes + reads),
             }
         }
-        choice => {
-            let (card, encoded) = match choice {
-                MemChoice::Sram => (EnergyCard::sram(), false),
-                MemChoice::Edram2t => (EnergyCard::edram2t(), false),
-                MemChoice::Mcaimem { vref } => (EnergyCard::mcaimem(*vref), true),
-                MemChoice::McaimemNoEncoder { vref } => (EnergyCard::mcaimem(*vref), false),
-                MemChoice::Rram => unreachable!(),
-            };
+        spec => {
+            let card = spec.energy_card();
+            let encoded = spec.encoded();
             let resident_frac = trace.mean_ones_frac(encoded);
             let access_frac = trace.access_ones_frac(encoded);
             EnergyBreakdown {
@@ -96,8 +75,8 @@ pub fn evaluate(trace: &NetworkTrace, acc: &AcceleratorConfig, mem: &MemChoice) 
 
 /// The headline ratio: SRAM total over MCAIMem total for one workload.
 pub fn mcaimem_gain(trace: &NetworkTrace, acc: &AcceleratorConfig) -> f64 {
-    let sram = evaluate(trace, acc, &MemChoice::Sram).total_j();
-    let ours = evaluate(trace, acc, &MemChoice::Mcaimem { vref: 0.8 }).total_j();
+    let sram = evaluate(trace, acc, &BackendSpec::Sram).total_j();
+    let ours = evaluate(trace, acc, &BackendSpec::mcaimem_default()).total_j();
     sram / ours
 }
 
@@ -111,10 +90,14 @@ mod tests {
         (simulate_network(&network::by_name(name).unwrap(), &acc), acc)
     }
 
+    fn mcaimem(vref: f64) -> BackendSpec {
+        BackendSpec::Mcaimem { vref, encode: true }
+    }
+
     #[test]
     fn sram_has_no_refresh_component() {
         let (t, acc) = trace_eyeriss("LeNet");
-        let e = evaluate(&t, &acc, &MemChoice::Sram);
+        let e = evaluate(&t, &acc, &BackendSpec::Sram);
         assert_eq!(e.refresh_j, 0.0);
         assert!(e.static_j > 0.0 && e.dynamic_j > 0.0);
     }
@@ -133,16 +116,17 @@ mod tests {
     #[test]
     fn rram_loses_by_over_100x() {
         let (t, acc) = trace_eyeriss("ResNet50");
-        let sram = evaluate(&t, &acc, &MemChoice::Sram).total_j();
-        let rram = evaluate(&t, &acc, &MemChoice::Rram).total_j();
+        let sram = evaluate(&t, &acc, &BackendSpec::Sram).total_j();
+        let rram = evaluate(&t, &acc, &BackendSpec::Rram).total_j();
         assert!(rram / sram > 100.0, "ratio={}", rram / sram);
     }
 
     #[test]
     fn encoder_ablation_costs_energy() {
         let (t, acc) = trace_eyeriss("VGG11");
-        let with = evaluate(&t, &acc, &MemChoice::Mcaimem { vref: 0.8 }).total_j();
-        let without = evaluate(&t, &acc, &MemChoice::McaimemNoEncoder { vref: 0.8 }).total_j();
+        let with = evaluate(&t, &acc, &mcaimem(0.8)).total_j();
+        let without =
+            evaluate(&t, &acc, &BackendSpec::Mcaimem { vref: 0.8, encode: false }).total_j();
         assert!(with < without, "encoder must save energy: {with} vs {without}");
     }
 
@@ -151,7 +135,7 @@ mod tests {
         let (t, acc) = trace_eyeriss("AlexNet");
         let mut last = f64::INFINITY;
         for vref in [0.5, 0.6, 0.7, 0.8] {
-            let e = evaluate(&t, &acc, &MemChoice::Mcaimem { vref });
+            let e = evaluate(&t, &acc, &mcaimem(vref));
             assert!(e.refresh_j < last, "vref={vref}");
             last = e.refresh_j;
         }
@@ -161,8 +145,8 @@ mod tests {
     fn edram_refresh_dominated_vs_mcaimem() {
         // Fig. 15a: the conventional 2T pays far more refresh energy
         let (t, acc) = trace_eyeriss("ResNet50");
-        let conv = evaluate(&t, &acc, &MemChoice::Edram2t);
-        let ours = evaluate(&t, &acc, &MemChoice::Mcaimem { vref: 0.8 });
+        let conv = evaluate(&t, &acc, &BackendSpec::Edram2t);
+        let ours = evaluate(&t, &acc, &mcaimem(0.8));
         assert!(conv.refresh_j > 5.0 * ours.refresh_j);
     }
 
@@ -170,11 +154,28 @@ mod tests {
     fn static_energy_ranking_fig14() {
         // Fig. 14: SRAM > MCAIMem > 2T eDRAM in static energy
         let (t, acc) = trace_eyeriss("VGG16");
-        let s = evaluate(&t, &acc, &MemChoice::Sram).static_j;
-        let m = evaluate(&t, &acc, &MemChoice::Mcaimem { vref: 0.8 }).static_j;
-        let e = evaluate(&t, &acc, &MemChoice::Edram2t).static_j;
+        let s = evaluate(&t, &acc, &BackendSpec::Sram).static_j;
+        let m = evaluate(&t, &acc, &mcaimem(0.8)).static_j;
+        let e = evaluate(&t, &acc, &BackendSpec::Edram2t).static_j;
         assert!(s > m && m > e, "s={s} m={m} e={e}");
         // mixed-cell static sits 3–6× below SRAM (paper §V-A)
         assert!(s / m > 3.0 && s / m < 6.5, "ratio={}", s / m);
+    }
+
+    #[test]
+    fn spec_strings_evaluate_identically_to_constructed_specs() {
+        // the CLI path ("mcaimem@0.8" parsed) and the programmatic path
+        // must be indistinguishable
+        let (t, acc) = trace_eyeriss("AlexNet");
+        for (s, spec) in [
+            ("sram", BackendSpec::Sram),
+            ("edram2t", BackendSpec::Edram2t),
+            ("rram", BackendSpec::Rram),
+            ("mcaimem@0.7-noenc", BackendSpec::Mcaimem { vref: 0.7, encode: false }),
+        ] {
+            let parsed: BackendSpec = s.parse().unwrap();
+            assert_eq!(parsed, spec);
+            assert_eq!(evaluate(&t, &acc, &parsed), evaluate(&t, &acc, &spec), "{s}");
+        }
     }
 }

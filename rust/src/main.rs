@@ -1,5 +1,11 @@
 //! `mcaimem` — leader binary: experiment reports, event-driven simulation,
 //! the batched inference server, and a self-test over the AOT artifacts.
+//!
+//! Every subcommand shares one `--backend` flag taking the repo-wide spec
+//! grammar (`sram | edram2t | rram | mcaimem[@VREF[-noenc]]`, comma-list
+//! where a sweep makes sense), so the same spec string selects the buffer
+//! technology in closed-form reports, the event-driven scheduler, and the
+//! serving path.
 
 use std::path::PathBuf;
 use std::time::Duration;
@@ -9,26 +15,34 @@ use anyhow::{bail, Result};
 use mcaimem::cli::ArgParser;
 use mcaimem::coordinator::scheduler::simulate_inference;
 use mcaimem::coordinator::server::{InferenceServer, ServerConfig};
-use mcaimem::runtime::executor::{ModelRunner, StoreVariant};
+use mcaimem::mem::backend::BackendSpec;
+use mcaimem::runtime::executor::ModelRunner;
 use mcaimem::scalesim::accelerator::AcceleratorConfig;
 use mcaimem::scalesim::network;
 use mcaimem::util::rng::Pcg64;
-use mcaimem::util::table::fnum;
+use mcaimem::util::table::{fnum, Table};
 
 const USAGE: &str = "\
 mcaimem — MCAIMem (mixed SRAM + eDRAM AI memory) reproduction
 
 USAGE:
-  mcaimem report <id|all> [--csv DIR] [--artifacts DIR] [--quick]
+  mcaimem report <id|all> [--csv DIR] [--artifacts DIR] [--backend SPECS] [--quick]
       regenerate a paper table/figure (table1 table2 fig1 fig2 fig5 fig7
-      fig9 fig11 fig12 fig13 fig14 fig15a fig15b fig16)
-  mcaimem simulate --network NAME [--platform eyeriss|tpuv1] [--vref V] [--seed N]
-      event-driven inference through the functional MCAIMem buffer
-  mcaimem serve [--artifacts DIR] [--requests N] [--variant clean|mcaimem|noenc]
-                [--p P] [--window-ms MS]
-      run the batched inference server against a synthetic client load
+      fig9 fig11 fig12 fig13 fig14 fig15a fig15b fig16); --backend overrides
+      the backend sweep of fig14/fig15a/fig15b
+  mcaimem simulate --network NAME [--platform eyeriss|tpuv1] [--backend SPECS] [--seed N]
+      event-driven inference through the functional buffer; SPECS may be a
+      comma list — every backend runs the identical schedule and prints its
+      energy meter and macro area
+  mcaimem serve [--artifacts DIR] [--requests N] [--backend SPEC] [--p P] [--window-ms MS]
+      run the batched inference server against a synthetic client load,
+      storing tensors in the chosen backend
   mcaimem selftest [--artifacts DIR]
       cross-check the Rust and Pallas implementations through PJRT
+
+BACKEND SPECS:
+  sram | edram2t | rram | mcaimem[@VREF[-noenc]]     (default mcaimem@0.8)
+  e.g. --backend sram,edram2t,rram,mcaimem@0.8,mcaimem@0.7-noenc
 ";
 
 fn main() {
@@ -42,11 +56,26 @@ fn artifacts_dir(args: &mcaimem::cli::ParsedArgs) -> PathBuf {
     args.get("artifacts").map(PathBuf::from).unwrap_or_else(|| PathBuf::from("artifacts"))
 }
 
+/// The shared `--backend` flag as a sweep list (default: the paper's
+/// operating point).
+fn backend_list(args: &mcaimem::cli::ParsedArgs) -> Result<Vec<BackendSpec>> {
+    BackendSpec::parse_list(args.get("backend").unwrap_or("mcaimem@0.8"))
+}
+
+/// The shared `--backend` flag where exactly one spec makes sense.
+fn backend_single(args: &mcaimem::cli::ParsedArgs) -> Result<BackendSpec> {
+    let specs = backend_list(args)?;
+    if specs.len() != 1 {
+        bail!("this subcommand takes exactly one --backend spec, got {}", specs.len());
+    }
+    Ok(specs[0])
+}
+
 fn run() -> Result<()> {
     let parser = ArgParser::new(
         &[
-            "csv", "artifacts", "network", "platform", "vref", "seed", "requests", "variant",
-            "p", "window-ms",
+            "csv", "artifacts", "network", "platform", "backend", "seed", "requests", "p",
+            "window-ms",
         ],
         &["quick", "help"],
     );
@@ -64,14 +93,24 @@ fn run() -> Result<()> {
                 .map(String::as_str)
                 .unwrap_or("all");
             let csv = args.get("csv").map(PathBuf::from);
+            let backends = args
+                .get("backend")
+                .map(BackendSpec::parse_list)
+                .transpose()?;
             let art = artifacts_dir(&args);
             let art_opt = art.join("manifest.json").exists().then_some(art);
-            mcaimem::report::run(id, art_opt.as_deref(), csv.as_deref(), args.has_flag("quick"))
+            mcaimem::report::run(
+                id,
+                art_opt.as_deref(),
+                csv.as_deref(),
+                args.has_flag("quick"),
+                backends.as_deref(),
+            )
         }
         "fig11" => {
             let art = artifacts_dir(&args);
             let csv = args.get("csv").map(PathBuf::from);
-            mcaimem::report::run("fig11", Some(&art), csv.as_deref(), args.has_flag("quick"))
+            mcaimem::report::run("fig11", Some(&art), csv.as_deref(), args.has_flag("quick"), None)
         }
         "simulate" => cmd_simulate(&args),
         "serve" => cmd_serve(&args),
@@ -91,35 +130,54 @@ fn cmd_simulate(args: &mcaimem::cli::ParsedArgs) -> Result<()> {
         "tpuv1" => AcceleratorConfig::tpuv1(),
         other => bail!("unknown platform `{other}`"),
     };
-    let vref = args.get_f64("vref", 0.8)?;
+    let specs = backend_list(args)?;
     let seed = args.get_usize("seed", 42)? as u64;
-    let r = simulate_inference(&net, &acc, vref, seed)?;
-    println!("event-driven MCAIMem simulation — {} on {}", r.network, r.accelerator);
-    println!("  sim time       : {} ms", fnum(r.sim_time_s * 1e3, 3));
-    println!(
-        "  refresh energy : {} µJ ({} row refreshes)",
-        fnum(r.refresh_j * 1e6, 3),
-        r.refresh_ops
+
+    let mut t = Table::new(
+        &format!(
+            "event-driven buffer simulation — {} on {} ({} backend{}, identical schedule)",
+            net.name,
+            acc.name,
+            specs.len(),
+            if specs.len() == 1 { "" } else { "s" }
+        ),
+        &[
+            "backend",
+            "time (ms)",
+            "static (µJ)",
+            "refresh (µJ)",
+            "dynamic (µJ)",
+            "total (µJ)",
+            "refresh ops",
+            "flips",
+            "area (mm²)",
+        ],
     );
-    println!("  static energy  : {} µJ", fnum(r.static_j * 1e6, 3));
-    println!("  dynamic energy : {} µJ", fnum(r.dynamic_j * 1e6, 3));
-    println!("  total          : {} µJ", fnum(r.total_j() * 1e6, 3));
-    println!("  retention flips committed: {}", r.flips_committed);
+    for spec in &specs {
+        let r = simulate_inference(&net, &acc, spec, seed)?;
+        t.row(vec![
+            spec.label(),
+            fnum(r.sim_time_s * 1e3, 3),
+            fnum(r.static_j * 1e6, 3),
+            fnum(r.refresh_j * 1e6, 3),
+            fnum(r.dynamic_j * 1e6, 3),
+            fnum(r.total_j() * 1e6, 3),
+            r.refresh_ops.to_string(),
+            r.flips_committed.to_string(),
+            fnum(r.area_m2 * 1e6, 3),
+        ]);
+    }
+    println!("{}", t.render());
     Ok(())
 }
 
 fn cmd_serve(args: &mcaimem::cli::ParsedArgs) -> Result<()> {
     let art = artifacts_dir(args);
     let requests = args.get_usize("requests", 512)?;
-    let variant = match args.get("variant").unwrap_or("mcaimem") {
-        "clean" => StoreVariant::Clean,
-        "mcaimem" => StoreVariant::Mcaimem,
-        "noenc" => StoreVariant::McaimemNoEncoder,
-        other => bail!("unknown variant `{other}`"),
-    };
+    let backend = backend_single(args)?;
     let cfg = ServerConfig {
         batch_window: Duration::from_millis(args.get_usize("window-ms", 2)? as u64),
-        variant,
+        backend,
         flip_p: args.get_f64("p", 0.01)?,
         seed: 0xD00D,
     };
@@ -132,7 +190,8 @@ fn cmd_serve(args: &mcaimem::cli::ParsedArgs) -> Result<()> {
     drop(runner);
 
     println!(
-        "starting server ({variant:?}, p={}, {requests} requests)...",
+        "starting server ({}, p={}, {requests} requests)...",
+        cfg.backend.label(),
         cfg.flip_p
     );
     let server = InferenceServer::start(art, cfg)?;
@@ -203,8 +262,9 @@ fn cmd_selftest(args: &mcaimem::cli::ParsedArgs) -> Result<()> {
     anyhow::ensure!(pallas_rt == rust_rt, "store-path mismatch between Pallas and Rust");
     println!("mcaimem_store: Pallas == Rust with shared mask OK");
 
-    // 3) model accuracy gates
-    let clean = runner.accuracy(StoreVariant::Clean, 0.0, 4, 1)?;
+    // 3) model accuracy gates — served from an ideal (SRAM) buffer vs the
+    // aged mixed-cell backends
+    let clean = runner.accuracy(&BackendSpec::Sram, 0.0, 4, 1)?;
     anyhow::ensure!(
         (clean - runner.artifacts.int8_clean_acc).abs() < 0.05,
         "clean accuracy {clean} drifted from manifest {}",
@@ -216,8 +276,9 @@ fn cmd_selftest(args: &mcaimem::cli::ParsedArgs) -> Result<()> {
         fnum(runner.artifacts.int8_clean_acc, 4)
     );
 
-    let enc = runner.accuracy(StoreVariant::Mcaimem, 0.05, 4, 2)?;
-    let noenc = runner.accuracy(StoreVariant::McaimemNoEncoder, 0.05, 4, 2)?;
+    let enc = runner.accuracy(&BackendSpec::mcaimem_default(), 0.05, 4, 2)?;
+    let noenc =
+        runner.accuracy(&BackendSpec::Mcaimem { vref: 0.8, encode: false }, 0.05, 4, 2)?;
     anyhow::ensure!(enc > noenc, "one-enhancement must protect accuracy");
     println!(
         "p=5%: with one-enh {} > without {} OK",

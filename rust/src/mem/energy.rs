@@ -130,6 +130,23 @@ impl EnergyCard {
         Self::mcaimem(0.8)
     }
 
+    /// The Chimera-like RRAM buffer in card form (so the unified
+    /// [`crate::mem::backend::MemoryBackend`] surface has one card type):
+    /// zero standby power, no refresh, data-independent access energy from
+    /// [`crate::mem::rram::RramCard`]. The paper's system-level RRAM
+    /// *evaluation policy* (charging a buffer write per operand read — no
+    /// cheap staging tier) lives in `energy::system_eval`, not here.
+    pub fn rram() -> Self {
+        let r = crate::mem::rram::RramCard::chimera_like();
+        EnergyCard {
+            kind: MemKind::Rram,
+            static_w_per_mb: Asym::symmetric(0.0),
+            read_j_per_byte: Asym::symmetric(r.read_j_per_byte),
+            write_j_per_byte: Asym::symmetric(r.write_j_per_byte),
+            refresh_period: None,
+        }
+    }
+
     /// Static power (W) for a buffer of `bytes` holding data with the given
     /// ones fraction. Scales linearly with capacity from the 1 MB macro —
     /// exactly the paper's §V-B procedure ("reducing it to one-tenth … /
@@ -278,6 +295,16 @@ mod tests {
         assert!(m.static_power(MIB, 0.8) < m.static_power(MIB, 0.5));
         assert!(m.refresh_power(MIB, 0.8) < m.refresh_power(MIB, 0.5));
         assert!(m.read_energy(MIB, 0.8) < m.read_energy(MIB, 0.5));
+    }
+
+    #[test]
+    fn rram_card_matches_the_rram_model() {
+        let c = EnergyCard::rram();
+        let r = crate::mem::rram::RramCard::chimera_like();
+        assert_eq!(c.static_power(MIB, 0.3), 0.0);
+        assert_eq!(c.refresh_power(MIB, 0.3), 0.0);
+        assert!((c.read_energy(1024, 0.5) - r.read_energy(1024)).abs() < EPS);
+        assert!((c.write_energy(1024, 0.5) - r.write_energy(1024)).abs() < EPS);
     }
 
     #[test]

@@ -54,6 +54,9 @@ pub struct EnergyMeter {
     pub bytes_read: u64,
     pub bytes_written: u64,
     pub flips_committed: u64,
+    /// Access-latency time accrued by slow technologies (s) — only the
+    /// RRAM backend's SET/RESET programming path populates this today.
+    pub busy_s: f64,
 }
 
 impl EnergyMeter {

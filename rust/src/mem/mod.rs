@@ -1,7 +1,25 @@
 //! The memory subsystem: area/energy characterization, bank organization,
-//! refresh + V_REF control, the functional mixed-cell memory, and the RRAM
-//! baseline.
+//! refresh + V_REF control, the functional mixed-cell memory, the baseline
+//! buffer designs, and the **unified backend API** that lets every consumer
+//! treat them interchangeably.
 //!
+//! Two levels of naming, one spec:
+//!
+//! * [`MemKind`] — the *circuit-level characterization key*: which Table
+//!   I/II row, which cell layout. Used by the [`area`] and [`energy`] cards.
+//! * [`backend::BackendSpec`] — the *system-level spec* (`"sram"`,
+//!   `"edram2t"`, `"rram"`, `"mcaimem@0.8"`, `"mcaimem@0.7-noenc"`): the
+//!   one parseable type the CLI, the buffer manager, the inference server,
+//!   the closed-form evaluator and the report sweeps all accept. It maps
+//!   onto `MemKind` via [`backend::BackendSpec::kind`].
+//!
+//! Modules:
+//!
+//! * [`backend`] — the [`backend::MemoryBackend`] trait
+//!   (`store`/`load`/`tick`/`refresh_due`/`meter`/`energy_card`/`area`/
+//!   `label`), the `BackendSpec` grammar, and the
+//!   `build(spec, bytes, seed)` factory producing any buffer design behind
+//!   one device API.
 //! * [`area`] — parametric layout-area model (Fig. 13, Table I ratios, the
 //!   48 % headline).
 //! * [`energy`] — Table II characterization cards and the 1:7 composition
@@ -15,8 +33,12 @@
 //! * [`mcaimem`] — the *functional* mixed-cell memory: real bytes, real
 //!   bit-planes, physical 0→1 flips on the eDRAM plane, refresh-by-read.
 //! * [`rram`] — the non-volatile on-chip-buffer baseline of Fig. 15b.
+//!
+//! See EXPERIMENTS.md §Backends for the spec grammar, the trait contract
+//! and the functional-vs-analytic table.
 
 pub mod area;
+pub mod backend;
 pub mod bank;
 pub mod bitplane;
 pub mod energy;
@@ -25,7 +47,11 @@ pub mod refresh;
 pub mod rram;
 pub mod vref;
 
-/// The embedded-memory kinds the paper compares.
+pub use backend::{build, BackendSpec, MemoryBackend};
+
+/// The embedded-memory kinds the paper compares — the circuit-level
+/// characterization key (see [`backend::BackendSpec`] for the system-level
+/// spec that selects a runnable backend).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum MemKind {
     Sram6t,

@@ -110,7 +110,7 @@ pub fn rana_analysis() -> Vec<Table> {
             let saved = crate::energy::system_eval::evaluate(
                 &trace,
                 &acc,
-                &crate::energy::system_eval::MemChoice::Mcaimem { vref: 0.8 },
+                &crate::mem::backend::BackendSpec::mcaimem_default(),
             )
             .refresh_j;
             t.row(vec![

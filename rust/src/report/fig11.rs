@@ -9,7 +9,8 @@
 
 use std::path::Path;
 
-use crate::runtime::executor::{ModelRunner, StoreVariant};
+use crate::mem::backend::BackendSpec;
+use crate::runtime::executor::ModelRunner;
 use crate::util::table::{fnum, Table};
 use crate::Result;
 
@@ -19,7 +20,8 @@ pub const ERROR_RATES: [f64; 6] = [0.01, 0.02, 0.05, 0.10, 0.15, 0.25];
 pub fn fig11(artifacts: &Path, quick: bool) -> Result<Vec<Table>> {
     let mut runner = ModelRunner::new(artifacts)?;
     let batches = if quick { 2 } else { 8 };
-    let clean = runner.accuracy(StoreVariant::Clean, 0.0, batches, 1)?;
+    // an ideal (SRAM) buffer serves the clean baseline
+    let clean = runner.accuracy(&BackendSpec::Sram, 0.0, batches, 1)?;
 
     let mut t = Table::new(
         &format!(
@@ -30,9 +32,13 @@ pub fn fig11(artifacts: &Path, quick: bool) -> Result<Vec<Table>> {
         &["flip rate", "with one-enhancement", "without one-enhancement"],
     );
     for (i, &p) in ERROR_RATES.iter().enumerate() {
-        let with = runner.accuracy(StoreVariant::Mcaimem, p, batches, 100 + i as u64)?;
-        let without =
-            runner.accuracy(StoreVariant::McaimemNoEncoder, p, batches, 200 + i as u64)?;
+        let with = runner.accuracy(&BackendSpec::mcaimem_default(), p, batches, 100 + i as u64)?;
+        let without = runner.accuracy(
+            &BackendSpec::Mcaimem { vref: 0.8, encode: false },
+            p,
+            batches,
+            200 + i as u64,
+        )?;
         t.row(vec![
             format!("{}%", fnum(p * 100.0, 0)),
             fnum(with, 4),

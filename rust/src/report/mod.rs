@@ -11,6 +11,7 @@ pub mod system_reports;
 
 use std::path::Path;
 
+use crate::mem::backend::BackendSpec;
 use crate::util::table::Table;
 use crate::Result;
 
@@ -20,9 +21,21 @@ pub const ALL_IDS: [&str; 14] = [
     "fig14", "fig15a", "fig15b", "fig16",
 ];
 
-/// Generate the tables for one id. `artifacts` is only needed by fig11
-/// (the DNN-accuracy experiment runs the AOT model through PJRT).
+/// Generate the tables for one id with each figure's default backend
+/// sweep. `artifacts` is only needed by fig11 (the DNN-accuracy experiment
+/// runs the AOT model through PJRT).
 pub fn generate(id: &str, artifacts: Option<&Path>, quick: bool) -> Result<Vec<Table>> {
+    generate_with(id, artifacts, quick, None)
+}
+
+/// Generate the tables for one id; `backends` (the CLI's `--backend` list)
+/// overrides the backend sweep of the system-level figures.
+pub fn generate_with(
+    id: &str,
+    artifacts: Option<&Path>,
+    quick: bool,
+    backends: Option<&[BackendSpec]>,
+) -> Result<Vec<Table>> {
     Ok(match id {
         "table1" => circuit_reports::table1(),
         "table2" => circuit_reports::table2(),
@@ -37,9 +50,18 @@ pub fn generate(id: &str, artifacts: Option<&Path>, quick: bool) -> Result<Vec<T
         )?,
         "fig12" => circuit_reports::fig12(quick),
         "fig13" => circuit_reports::fig13(),
-        "fig14" => system_reports::fig14(),
-        "fig15a" => system_reports::fig15a(),
-        "fig15b" => system_reports::fig15b(),
+        "fig14" => match backends {
+            Some(specs) => system_reports::fig14_for(specs),
+            None => system_reports::fig14(),
+        },
+        "fig15a" => match backends {
+            Some(specs) => system_reports::fig15a_for(specs),
+            None => system_reports::fig15a(),
+        },
+        "fig15b" => match backends {
+            Some(specs) => system_reports::fig15b_for(specs),
+            None => system_reports::fig15b(),
+        },
         "fig16" => system_reports::fig16(),
         "ablation-ratio" => ablations::ratio_sweep(),
         "ablation-rana" => ablations::rana_analysis(),
@@ -50,14 +72,20 @@ pub fn generate(id: &str, artifacts: Option<&Path>, quick: bool) -> Result<Vec<T
 }
 
 /// Print tables and mirror them to CSV.
-pub fn run(id: &str, artifacts: Option<&Path>, csv_dir: Option<&Path>, quick: bool) -> Result<()> {
+pub fn run(
+    id: &str,
+    artifacts: Option<&Path>,
+    csv_dir: Option<&Path>,
+    quick: bool,
+    backends: Option<&[BackendSpec]>,
+) -> Result<()> {
     let ids: Vec<&str> = if id == "all" {
         ALL_IDS.to_vec()
     } else {
         vec![id]
     };
     for id in ids {
-        let tables = generate(id, artifacts, quick)?;
+        let tables = generate_with(id, artifacts, quick, backends)?;
         for (i, t) in tables.iter().enumerate() {
             println!("{}", t.render());
             if let Some(dir) = csv_dir {

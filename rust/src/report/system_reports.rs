@@ -1,7 +1,13 @@
 //! System-level reports: Figs. 14, 15a, 15b, 16 (§V-B).
+//!
+//! Every driver iterates a `Vec<BackendSpec>` — the same spec the CLI
+//! parses (`--backend sram,edram2t,rram,mcaimem@0.8`) — so a sweep over
+//! any backend set (and any number of V_REF points) runs through one code
+//! path instead of bespoke match arms per figure.
 
 use crate::energy::opswatt::opswatt_gain;
-use crate::energy::system_eval::{evaluate, MemChoice};
+use crate::energy::system_eval::evaluate;
+use crate::mem::backend::BackendSpec;
 use crate::scalesim::accelerator::AcceleratorConfig;
 use crate::scalesim::network::all_networks;
 use crate::scalesim::simulate_network;
@@ -11,56 +17,41 @@ fn uj(j: f64) -> String {
     fnum(j * 1e6, 2)
 }
 
-/// Fig. 14 — static energy per network on Eyeriss and TPUv1.
-pub fn fig14() -> Vec<Table> {
+fn spec(s: &str) -> BackendSpec {
+    s.parse().expect("static spec")
+}
+
+/// Header columns for a backend sweep plus a baseline/ours ratio column.
+fn sweep_header(specs: &[BackendSpec]) -> Vec<String> {
+    let mut h = vec!["network".to_string()];
+    h.extend(specs.iter().map(BackendSpec::label));
+    h.push(format!(
+        "{}/{}",
+        specs.first().expect("non-empty sweep").label(),
+        specs.last().expect("non-empty sweep").label()
+    ));
+    h
+}
+
+/// Fig. 14 — static energy per network on Eyeriss and TPUv1, for any
+/// backend sweep (first spec is the baseline of the ratio column, last
+/// the proposal).
+pub fn fig14_for(specs: &[BackendSpec]) -> Vec<Table> {
+    let header = sweep_header(specs);
     AcceleratorConfig::paper_platforms()
         .into_iter()
         .map(|acc| {
             let mut t = Table::new(
                 &format!("Fig. 14 — static energy per inference on {} (µJ)", acc.name),
-                &["network", "SRAM", "eDRAM(2T)", "MCAIMem", "SRAM/MCAIMem"],
+                &header.iter().map(String::as_str).collect::<Vec<_>>(),
             );
             for net in all_networks() {
                 let trace = simulate_network(&net, &acc);
-                let s = evaluate(&trace, &acc, &MemChoice::Sram).static_j;
-                let e = evaluate(&trace, &acc, &MemChoice::Edram2t).static_j;
-                let m = evaluate(&trace, &acc, &MemChoice::Mcaimem { vref: 0.8 }).static_j;
-                t.row(vec![
-                    net.name.into(),
-                    uj(s),
-                    uj(e),
-                    uj(m),
-                    format!("{}x", fnum(s / m, 2)),
-                ]);
-            }
-            t
-        })
-        .collect()
-}
-
-/// Fig. 15a — refresh energy: conventional 2T vs MCAIMem per V_REF.
-pub fn fig15a() -> Vec<Table> {
-    AcceleratorConfig::paper_platforms()
-        .into_iter()
-        .map(|acc| {
-            let mut t = Table::new(
-                &format!("Fig. 15a — refresh energy per inference on {} (µJ)", acc.name),
-                &[
-                    "network",
-                    "eDRAM(2T) C-S/A",
-                    "MCAIMem@0.5",
-                    "MCAIMem@0.6",
-                    "MCAIMem@0.7",
-                    "MCAIMem@0.8",
-                ],
-            );
-            for net in all_networks() {
-                let trace = simulate_network(&net, &acc);
+                let vals: Vec<f64> =
+                    specs.iter().map(|s| evaluate(&trace, &acc, s).static_j).collect();
                 let mut row = vec![net.name.to_string()];
-                row.push(uj(evaluate(&trace, &acc, &MemChoice::Edram2t).refresh_j));
-                for vref in [0.5, 0.6, 0.7, 0.8] {
-                    row.push(uj(evaluate(&trace, &acc, &MemChoice::Mcaimem { vref }).refresh_j));
-                }
+                row.extend(vals.iter().map(|&v| uj(v)));
+                row.push(format!("{}x", fnum(vals[0] / vals[vals.len() - 1], 2)));
                 t.row(row);
             }
             t
@@ -68,33 +59,73 @@ pub fn fig15a() -> Vec<Table> {
         .collect()
 }
 
-/// Fig. 15b — total buffer energy: SRAM / RRAM / eDRAM / MCAIMem.
-pub fn fig15b() -> Vec<Table> {
+/// Fig. 14 with the paper's default sweep.
+pub fn fig14() -> Vec<Table> {
+    fig14_for(&[spec("sram"), spec("edram2t"), spec("mcaimem@0.8")])
+}
+
+/// Fig. 15a — refresh energy per backend (the paper sweeps the
+/// conventional 2T against MCAIMem at several V_REF points; any spec list
+/// works).
+pub fn fig15a_for(specs: &[BackendSpec]) -> Vec<Table> {
+    let mut header = vec!["network".to_string()];
+    header.extend(specs.iter().map(BackendSpec::label));
+    AcceleratorConfig::paper_platforms()
+        .into_iter()
+        .map(|acc| {
+            let mut t = Table::new(
+                &format!("Fig. 15a — refresh energy per inference on {} (µJ)", acc.name),
+                &header.iter().map(String::as_str).collect::<Vec<_>>(),
+            );
+            for net in all_networks() {
+                let trace = simulate_network(&net, &acc);
+                let mut row = vec![net.name.to_string()];
+                row.extend(specs.iter().map(|s| uj(evaluate(&trace, &acc, s).refresh_j)));
+                t.row(row);
+            }
+            t
+        })
+        .collect()
+}
+
+/// Fig. 15a with the paper's V_REF sweep.
+pub fn fig15a() -> Vec<Table> {
+    fig15a_for(&[
+        spec("edram2t"),
+        spec("mcaimem@0.5"),
+        spec("mcaimem@0.6"),
+        spec("mcaimem@0.7"),
+        spec("mcaimem@0.8"),
+    ])
+}
+
+/// Fig. 15b — total buffer energy across technologies.
+pub fn fig15b_for(specs: &[BackendSpec]) -> Vec<Table> {
+    let header = sweep_header(specs);
     AcceleratorConfig::paper_platforms()
         .into_iter()
         .map(|acc| {
             let mut t = Table::new(
                 &format!("Fig. 15b — total buffer energy per inference on {} (µJ)", acc.name),
-                &["network", "SRAM", "RRAM", "eDRAM(2T)", "MCAIMem@0.8", "SRAM/MCAIMem"],
+                &header.iter().map(String::as_str).collect::<Vec<_>>(),
             );
             for net in all_networks() {
                 let trace = simulate_network(&net, &acc);
-                let s = evaluate(&trace, &acc, &MemChoice::Sram).total_j();
-                let r = evaluate(&trace, &acc, &MemChoice::Rram).total_j();
-                let e = evaluate(&trace, &acc, &MemChoice::Edram2t).total_j();
-                let m = evaluate(&trace, &acc, &MemChoice::Mcaimem { vref: 0.8 }).total_j();
-                t.row(vec![
-                    net.name.into(),
-                    uj(s),
-                    uj(r),
-                    uj(e),
-                    uj(m),
-                    format!("{}x", fnum(s / m, 2)),
-                ]);
+                let vals: Vec<f64> =
+                    specs.iter().map(|s| evaluate(&trace, &acc, s).total_j()).collect();
+                let mut row = vec![net.name.to_string()];
+                row.extend(vals.iter().map(|&v| uj(v)));
+                row.push(format!("{}x", fnum(vals[0] / vals[vals.len() - 1], 2)));
+                t.row(row);
             }
             t
         })
         .collect()
+}
+
+/// Fig. 15b with the paper's technology set.
+pub fn fig15b() -> Vec<Table> {
+    fig15b_for(&[spec("sram"), spec("rram"), spec("edram2t"), spec("mcaimem@0.8")])
 }
 
 /// Fig. 16 — normalized ops/W improvement vs the SRAM buffer.
@@ -108,7 +139,7 @@ pub fn fig16() -> Vec<Table> {
         let mut row = vec![net.name.to_string()];
         for acc in &platforms {
             let trace = simulate_network(&net, acc);
-            let g = opswatt_gain(&trace, acc, &MemChoice::Mcaimem { vref: 0.8 });
+            let g = opswatt_gain(&trace, acc, &BackendSpec::mcaimem_default());
             row.push(format!("{}%", fnum(g * 100.0, 1)));
         }
         t.row(row);
@@ -148,6 +179,22 @@ mod tests {
             for cell in &row[1..] {
                 let v: f64 = cell.trim_end_matches('%').parse().unwrap();
                 assert!(v > 10.0 && v < 60.0, "{row:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn custom_sweeps_drive_the_same_drivers() {
+        // the api_redesign promise: a user-supplied spec list (several
+        // V_REF points included) flows through the identical driver
+        let specs = BackendSpec::parse_list("sram,mcaimem@0.6,mcaimem@0.7,mcaimem@0.8").unwrap();
+        let tables = fig15b_for(&specs);
+        assert_eq!(tables.len(), 2);
+        for t in &tables {
+            // network + 4 backends + ratio
+            assert_eq!(t.header.len(), 6, "{:?}", t.header);
+            for row in &t.rows {
+                assert_eq!(row.len(), 6);
             }
         }
     }

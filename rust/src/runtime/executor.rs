@@ -55,7 +55,7 @@ pub fn run1(exe: &PjRtLoadedExecutable, inputs: &[Literal]) -> Result<Literal> {
     Ok(result.to_tuple1()?)
 }
 
-pub use super::StoreVariant;
+use crate::mem::backend::BackendSpec;
 
 /// High-level model runner bound to the artifacts directory.
 pub struct ModelRunner {
@@ -99,12 +99,12 @@ impl ModelRunner {
         super::draw_mask(rng, len, p)
     }
 
-    /// Classify one batch (must match the export batch size). Returns the
-    /// argmax class per row.
+    /// Classify one batch (must match the export batch size) as served
+    /// from the buffer technology `spec`. Returns the argmax class per row.
     pub fn infer(
         &mut self,
         x: &[i8],
-        variant: StoreVariant,
+        spec: &BackendSpec,
         p: f64,
         rng: &mut Pcg64,
     ) -> Result<Vec<usize>> {
@@ -114,12 +114,8 @@ impl ModelRunner {
         let x_lit = literal_i8(&[batch, dim], x)?;
 
         let mut inputs = vec![x_lit];
-        let model_name = match variant {
-            StoreVariant::Clean => "model_clean",
-            StoreVariant::Mcaimem => "model_enc",
-            StoreVariant::McaimemNoEncoder => "model_noenc",
-        };
-        if variant != StoreVariant::Clean {
+        let (model_name, aged) = super::serving_model(spec);
+        if aged {
             for shape in self.artifacts.mask_shapes.clone() {
                 let len: usize = shape.iter().product();
                 let mask = Self::draw_mask(rng, len, p);
@@ -144,10 +140,11 @@ impl ModelRunner {
             .collect())
     }
 
-    /// Accuracy over the exported test set (first `batches` batches).
+    /// Accuracy over the exported test set (first `batches` batches)
+    /// served from the buffer technology `spec`.
     pub fn accuracy(
         &mut self,
-        variant: StoreVariant,
+        spec: &BackendSpec,
         p: f64,
         batches: usize,
         seed: u64,
@@ -162,7 +159,7 @@ impl ModelRunner {
         let mut correct = 0usize;
         for b in 0..n {
             let xs = &x[b * batch * dim..(b + 1) * batch * dim];
-            let pred = self.infer(xs, variant, p, &mut rng)?;
+            let pred = self.infer(xs, spec, p, &mut rng)?;
             for (i, &cls) in pred.iter().enumerate() {
                 if cls as i32 == y[b * batch + i] {
                     correct += 1;

@@ -1,9 +1,10 @@
 //! Stub executor used when the crate is built **without** the `pjrt`
 //! feature (the offline `xla` crate is not vendored into this tree).
 //!
-//! The public surface mirrors `executor.rs` exactly — [`StoreVariant`],
-//! [`Executor`], [`ModelRunner`] with its `artifacts` field and methods —
-//! so every caller compiles unchanged. Constructors return a clean error,
+//! The public surface mirrors `executor.rs` exactly — [`Executor`],
+//! [`ModelRunner`] with its `artifacts` field and methods (taking the same
+//! [`BackendSpec`] the real build serves) — so every caller compiles
+//! unchanged. Constructors return a clean error,
 //! which is the signal the integration tests, the inference server and the
 //! `selftest` / `serve` commands already interpret as "skip: PJRT not
 //! available". Pure-Rust helpers that don't need PJRT (mask drawing) are
@@ -12,6 +13,7 @@
 use anyhow::{bail, Result};
 
 use super::artifact::Artifacts;
+use crate::mem::backend::BackendSpec;
 use crate::util::rng::Pcg64;
 
 const UNAVAILABLE: &str = "built without the `pjrt` feature: PJRT execution is unavailable \
@@ -25,8 +27,6 @@ impl Executor {
         bail!("{UNAVAILABLE}")
     }
 }
-
-pub use super::StoreVariant;
 
 /// Stub model runner: construction always fails, so artifact-dependent
 /// tests and commands skip gracefully.
@@ -51,7 +51,7 @@ impl ModelRunner {
     pub fn infer(
         &mut self,
         _x: &[i8],
-        _variant: StoreVariant,
+        _spec: &BackendSpec,
         _p: f64,
         _rng: &mut Pcg64,
     ) -> Result<Vec<usize>> {
@@ -60,7 +60,7 @@ impl ModelRunner {
 
     pub fn accuracy(
         &mut self,
-        _variant: StoreVariant,
+        _spec: &BackendSpec,
         _p: f64,
         _batches: usize,
         _seed: u64,
@@ -90,6 +90,19 @@ mod tests {
         assert!((rate - 0.1).abs() < 0.01, "rate={rate}");
         // bit 7 never set (sign plane is SRAM)
         assert!(mask.iter().all(|&m| m >= 0));
+    }
+
+    #[test]
+    fn serving_model_mapping_covers_every_spec() {
+        use crate::runtime::serving_model;
+        assert_eq!(serving_model(&BackendSpec::Sram), ("model_clean", false));
+        assert_eq!(serving_model(&BackendSpec::Rram), ("model_clean", false));
+        assert_eq!(serving_model(&BackendSpec::mcaimem_default()), ("model_enc", true));
+        assert_eq!(
+            serving_model(&BackendSpec::Mcaimem { vref: 0.7, encode: false }),
+            ("model_noenc", true)
+        );
+        assert_eq!(serving_model(&BackendSpec::Edram2t), ("model_noenc", true));
     }
 
     #[test]

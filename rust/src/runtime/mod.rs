@@ -25,17 +25,25 @@ pub mod executor;
 pub use artifact::{Artifacts, TensorData, TensorMeta};
 pub use executor::{Executor, ModelRunner};
 
-/// Which aged-inference variant to run. Defined here — not in the
-/// executor — so the real (`pjrt`) and stub builds share one type and
-/// cannot drift.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum StoreVariant {
-    /// Ideal buffer — no retention errors.
-    Clean,
-    /// MCAIMem with the one-enhancement encoder (paper default).
-    Mcaimem,
-    /// MCAIMem with raw storage (Fig. 11's collapsing baseline).
-    McaimemNoEncoder,
+use crate::mem::backend::BackendSpec;
+
+/// Map a buffer backend to the AOT model artifact that serves it, plus
+/// whether that artifact takes flip-candidate masks. Defined here — not in
+/// the executor — so the real (`pjrt`) and stub builds share one mapping
+/// and cannot drift.
+///
+/// * `sram` / `rram` hold data faithfully → the clean graph (no masks).
+/// * `mcaimem@V` → the one-enhancement-encoded aged graph.
+/// * `mcaimem@V-noenc` and `edram2t` → the raw-storage aged graph (the
+///   conventional 2T stores unencoded bytes; its sign bit riding the
+///   no-flip plane of the export is a modeling limit noted in
+///   EXPERIMENTS.md §Backends).
+pub fn serving_model(spec: &BackendSpec) -> (&'static str, bool) {
+    match spec {
+        BackendSpec::Sram | BackendSpec::Rram => ("model_clean", false),
+        BackendSpec::Mcaimem { encode: true, .. } => ("model_enc", true),
+        BackendSpec::Mcaimem { encode: false, .. } | BackendSpec::Edram2t => ("model_noenc", true),
+    }
 }
 
 /// Draw one flip-candidate mask tensor: each of the 7 eDRAM bit positions

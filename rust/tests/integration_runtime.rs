@@ -9,8 +9,13 @@
 
 use mcaimem::encode::one_enhancement::{decode_byte, encode, encode_byte};
 use mcaimem::inject::{inject, Mode};
-use mcaimem::runtime::executor::{ModelRunner, StoreVariant};
+use mcaimem::mem::backend::BackendSpec;
+use mcaimem::runtime::executor::ModelRunner;
 use mcaimem::util::rng::Pcg64;
+
+const CLEAN: BackendSpec = BackendSpec::Sram;
+const AGED: BackendSpec = BackendSpec::mcaimem_default();
+const AGED_NOENC: BackendSpec = BackendSpec::Mcaimem { vref: 0.8, encode: false };
 
 fn runner() -> Option<ModelRunner> {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -87,7 +92,7 @@ fn store_path_statistics_match_rust_inject_model() {
 #[test]
 fn clean_accuracy_matches_manifest() {
     let Some(mut r) = runner() else { return };
-    let acc = r.accuracy(StoreVariant::Clean, 0.0, 8, 3).unwrap();
+    let acc = r.accuracy(&CLEAN, 0.0, 8, 3).unwrap();
     assert!((acc - r.artifacts.int8_clean_acc).abs() < 0.05, "acc={acc}");
     assert!(acc > 0.9);
 }
@@ -98,31 +103,31 @@ fn clean_inference_is_deterministic() {
     let x = r.artifacts.tensor("x_test_i8").unwrap().as_i8().unwrap();
     let batch = r.artifacts.batch * r.artifacts.input_dim;
     let mut rng = Pcg64::new(5);
-    let a = r.infer(&x[..batch], StoreVariant::Clean, 0.0, &mut rng).unwrap();
-    let b = r.infer(&x[..batch], StoreVariant::Clean, 0.0, &mut rng).unwrap();
+    let a = r.infer(&x[..batch], &CLEAN, 0.0, &mut rng).unwrap();
+    let b = r.infer(&x[..batch], &CLEAN, 0.0, &mut rng).unwrap();
     assert_eq!(a, b);
 }
 
 #[test]
 fn fig11_ordering_holds_through_pjrt() {
     let Some(mut r) = runner() else { return };
-    let with = r.accuracy(StoreVariant::Mcaimem, 0.10, 4, 7).unwrap();
-    let without = r.accuracy(StoreVariant::McaimemNoEncoder, 0.10, 4, 7).unwrap();
+    let with = r.accuracy(&AGED, 0.10, 4, 7).unwrap();
+    let without = r.accuracy(&AGED_NOENC, 0.10, 4, 7).unwrap();
     assert!(
         with > without + 0.3,
         "one-enhancement must dominate at 10%: with={with} without={without}"
     );
     // without-encoder at 25% collapses toward chance (paper: "plummets")
-    let collapsed = r.accuracy(StoreVariant::McaimemNoEncoder, 0.25, 4, 9).unwrap();
+    let collapsed = r.accuracy(&AGED_NOENC, 0.25, 4, 9).unwrap();
     assert!(collapsed < 0.35, "collapsed={collapsed}");
 }
 
 #[test]
 fn zero_flip_rate_equals_clean_through_aged_graph() {
     let Some(mut r) = runner() else { return };
-    let clean = r.accuracy(StoreVariant::Clean, 0.0, 4, 1).unwrap();
-    let aged0 = r.accuracy(StoreVariant::Mcaimem, 0.0, 4, 1).unwrap();
-    let aged0n = r.accuracy(StoreVariant::McaimemNoEncoder, 0.0, 4, 1).unwrap();
+    let clean = r.accuracy(&CLEAN, 0.0, 4, 1).unwrap();
+    let aged0 = r.accuracy(&AGED, 0.0, 4, 1).unwrap();
+    let aged0n = r.accuracy(&AGED_NOENC, 0.0, 4, 1).unwrap();
     assert_eq!(clean, aged0);
     assert_eq!(clean, aged0n);
 }

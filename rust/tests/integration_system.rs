@@ -3,8 +3,9 @@
 
 use mcaimem::coordinator::scheduler::simulate_inference;
 use mcaimem::energy::opswatt::opswatt_gain;
-use mcaimem::energy::system_eval::{evaluate, mcaimem_gain, MemChoice};
+use mcaimem::energy::system_eval::{evaluate, mcaimem_gain};
 use mcaimem::mem::area::AreaModel;
+use mcaimem::mem::backend::BackendSpec;
 use mcaimem::mem::MemKind;
 use mcaimem::scalesim::accelerator::AcceleratorConfig;
 use mcaimem::scalesim::{network, simulate_network};
@@ -40,7 +41,7 @@ fn opswatt_band_matches_fig16() {
     for acc in AcceleratorConfig::paper_platforms() {
         for net in network::all_networks() {
             let t = simulate_network(&net, &acc);
-            let g = opswatt_gain(&t, &acc, &MemChoice::Mcaimem { vref: 0.8 });
+            let g = opswatt_gain(&t, &acc, &BackendSpec::mcaimem_default());
             assert!(
                 g > 0.20 && g < 0.55,
                 "{}@{}: ops/W gain {g} out of band",
@@ -58,10 +59,10 @@ fn memory_ranking_is_stable_across_workloads_and_platforms() {
     for acc in AcceleratorConfig::paper_platforms() {
         for net in network::all_networks() {
             let t = simulate_network(&net, &acc);
-            let m = evaluate(&t, &acc, &MemChoice::Mcaimem { vref: 0.8 }).total_j();
-            let s = evaluate(&t, &acc, &MemChoice::Sram).total_j();
-            let e = evaluate(&t, &acc, &MemChoice::Edram2t).total_j();
-            let r = evaluate(&t, &acc, &MemChoice::Rram).total_j();
+            let m = evaluate(&t, &acc, &BackendSpec::mcaimem_default()).total_j();
+            let s = evaluate(&t, &acc, &BackendSpec::Sram).total_j();
+            let e = evaluate(&t, &acc, &BackendSpec::Edram2t).total_j();
+            let r = evaluate(&t, &acc, &BackendSpec::Rram).total_j();
             assert!(m < s && s < r, "{}@{}", net.name, acc.name);
             assert!(m < e, "{}@{}", net.name, acc.name);
         }
@@ -91,9 +92,9 @@ fn event_driven_and_closed_form_agree_on_scale() {
     let acc = AcceleratorConfig::eyeriss();
     for name in ["LeNet", "VGG11"] {
         let net = network::by_name(name).unwrap();
-        let sim = simulate_inference(&net, &acc, 0.8, 3).unwrap();
+        let sim = simulate_inference(&net, &acc, &BackendSpec::mcaimem_default(), 3).unwrap();
         let t = simulate_network(&net, &acc);
-        let cf = evaluate(&t, &acc, &MemChoice::Mcaimem { vref: 0.8 });
+        let cf = evaluate(&t, &acc, &BackendSpec::mcaimem_default());
         let ratio = sim.total_j() / cf.total_j();
         assert!(ratio > 0.5 && ratio < 2.0, "{name}: ratio={ratio}");
     }
