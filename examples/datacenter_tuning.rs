@@ -1,83 +1,125 @@
-//! Scenario: a TPUv1-class datacenter accelerator (8 MB on-chip buffer)
-//! serving ResNet-50 and I-BERT — the paper's large-deployment regime —
-//! with the V_REF controller tuned per the accuracy budget.
+//! Scenario: tuning a datacenter serving tier — find the knee of the
+//! latency/throughput curve per buffer backend.
 //!
 //! ```bash
 //! cargo run --release --example datacenter_tuning
 //! ```
 //!
-//! Shows the reference-voltage controller's decision procedure (§IV-B):
-//! sweep the candidate V_REFs, show the refresh-energy consequence of each,
-//! and pick the operating point; then report the fleet-level ops/W gain.
+//! A datacenter deployment does not run a buffer technology at one offered
+//! load; it provisions the tier at the *knee* — the highest offered rate
+//! the tier sustains before queueing blows the latency budget or admission
+//! control starts shedding. This example drives the sharded worker pool
+//! (4 workers × 4 shards, a ResNet-50 + I-BERT tenant mix) with open-loop
+//! Poisson traffic at an escalating offered rate, per backend:
+//!
+//! 1. sweep offered req/s and record achieved rate, p99 latency, rejects;
+//! 2. pick the knee: the highest offered rate still achieving ≥95 % of
+//!    offered with p99 under the latency SLO;
+//! 3. report per-backend provisioning: knee throughput, latency at the
+//!    knee, and the serving energy per request the shard meters charge —
+//!    where MCAIMem's refresh/static advantage shows up as J/request at
+//!    equal service.
 
-use mcaimem::energy::opswatt::opswatt_gain;
-use mcaimem::energy::system_eval::evaluate;
+use mcaimem::coordinator::loadgen::{self, Arrival, LoadConfig, Tenant};
+use mcaimem::coordinator::pool::{PoolConfig, WorkerPool};
 use mcaimem::mem::backend::BackendSpec;
-use mcaimem::mem::vref::VrefController;
-use mcaimem::scalesim::{accelerator::AcceleratorConfig, network, simulate_network};
 use mcaimem::util::table::{fnum, Table};
-use mcaimem::util::units::to_us;
+
+/// Latency budget for knee detection (µs, p99).
+const SLO_P99_US: f64 = 20_000.0;
+/// Achieved/offered ratio below which the tier is saturated.
+const GOODPUT: f64 = 0.95;
+
+struct KneePoint {
+    offered_rps: f64,
+    achieved_rps: f64,
+    p99_us: f64,
+    rejected: u64,
+    energy_per_req_j: f64,
+}
+
+fn drive(backend: &BackendSpec, offered_rps: f64, requests: usize, seed: u64) -> anyhow::Result<KneePoint> {
+    let cfg = PoolConfig {
+        backend: *backend,
+        workers: 4,
+        shards: 4,
+        buffer_bytes: 4 * 64 * 1024,
+        seed,
+        ..PoolConfig::default()
+    };
+    let pool = WorkerPool::start(cfg)?;
+    let load = LoadConfig {
+        arrival: Arrival::OpenPoisson { rps: offered_rps },
+        tenants: Tenant::default_mix(),
+        requests,
+        retry_rejects: false,
+        seed,
+    };
+    let report = loadgen::run(&pool, &load);
+    let stats = pool.shutdown();
+    let energy: f64 = stats.shards.iter().map(|s| s.energy_j).sum();
+    Ok(KneePoint {
+        offered_rps,
+        achieved_rps: report.achieved_rps,
+        p99_us: report.p99_latency_us,
+        rejected: report.rejected,
+        energy_per_req_j: energy / (report.completed.max(1)) as f64,
+    })
+}
 
 fn main() -> anyhow::Result<()> {
-    let acc = AcceleratorConfig::tpuv1();
-    println!(
-        "datacenter scenario: {} ({} MACs, {} MB buffer)\n",
-        acc.name,
-        acc.pes(),
-        acc.buffer_bytes / (1024 * 1024)
+    println!("datacenter tuning: 4 workers × 4 shards, ResNet-50 + I-BERT mix");
+    println!("SLO: p99 ≤ {} ms, goodput ≥ {}% of offered\n", SLO_P99_US / 1e3, GOODPUT * 100.0);
+
+    // offered-rate ladder: geometric so the knee lands inside the range on
+    // slow and fast hosts alike
+    let ladder: Vec<f64> = (0..7).map(|i| 2_000.0 * 1.8f64.powi(i)).collect();
+    let requests = 600;
+
+    let mut knees = Table::new(
+        "per-backend provisioning point (knee of the latency/throughput curve)",
+        &["backend", "knee (req/s)", "p99 @ knee (ms)", "µJ/request @ knee"],
     );
 
-    // 1. The V_REF controller's decision table (§IV-B).
-    let ctrl = VrefController::paper_default();
-    let mut t = Table::new(
-        "V_REF controller candidates (1% flip budget, 85°C)",
-        &["V_REF (V)", "refresh period (µs)", "refresh energy share on ResNet50"],
-    );
-    let net = network::resnet50();
-    let trace = simulate_network(&net, &acc);
-    for p in ctrl.candidates() {
-        let e = evaluate(&trace, &acc, &BackendSpec::Mcaimem { vref: p.vref, encode: true });
-        t.row(vec![
-            fnum(p.vref, 1),
-            fnum(to_us(p.refresh_period), 2),
-            format!("{}%", fnum(e.refresh_j / e.total_j() * 100.0, 1)),
-        ]);
+    for spec in BackendSpec::default_sweep() {
+        let mut curve = Table::new(
+            &format!("{} — offered vs achieved", spec.label()),
+            &["offered req/s", "achieved req/s", "p99 (ms)", "rejected"],
+        );
+        let mut knee: Option<KneePoint> = None;
+        for (i, &rps) in ladder.iter().enumerate() {
+            let p = drive(&spec, rps, requests, 0xDC + i as u64)?;
+            curve.row(vec![
+                fnum(p.offered_rps, 0),
+                fnum(p.achieved_rps, 0),
+                fnum(p.p99_us / 1e3, 2),
+                p.rejected.to_string(),
+            ]);
+            let healthy =
+                p.achieved_rps >= GOODPUT * p.offered_rps && p.p99_us <= SLO_P99_US;
+            if healthy {
+                knee = Some(p);
+            } else if knee.is_some() {
+                break; // past the knee — the curve only degrades from here
+            }
+        }
+        println!("{}", curve.render());
+        match knee {
+            Some(k) => knees.row(vec![
+                spec.label(),
+                fnum(k.achieved_rps, 0),
+                fnum(k.p99_us / 1e3, 2),
+                fnum(k.energy_per_req_j * 1e6, 3),
+            ]),
+            None => knees.row(vec![spec.label(), "below ladder".into(), "—".into(), "—".into()]),
+        };
     }
-    println!("{}", t.render());
-    let chosen = ctrl.choose();
-    println!(
-        "controller picks V_REF={} ({} µs refresh) — the paper's operating point\n",
-        chosen.vref,
-        fnum(to_us(chosen.refresh_period), 2)
-    );
 
-    // 2. Fleet economics: ops/W gains per served model.
-    let mut f = Table::new(
-        "chip-level ops/W gain vs the SRAM buffer (paper band: 35.4%–43.2%)",
-        &["model", "buffer gain", "ops/W gain"],
-    );
-    for name in ["ResNet50", "I-BERT", "VGG16", "CycleGAN"] {
-        let net = network::by_name(name).unwrap();
-        let trace = simulate_network(&net, &acc);
-        let ours = BackendSpec::Mcaimem { vref: chosen.vref, encode: true };
-        let s = evaluate(&trace, &acc, &BackendSpec::Sram).total_j();
-        let m = evaluate(&trace, &acc, &ours).total_j();
-        let g = opswatt_gain(&trace, &acc, &ours);
-        f.row(vec![
-            name.into(),
-            format!("{}x", fnum(s / m, 2)),
-            format!("{}%", fnum(g * 100.0, 1)),
-        ]);
-    }
-    println!("{}", f.render());
-
-    // 3. Why not NVM: the RRAM counterfactual the paper closes with.
-    let rram = evaluate(&trace, &acc, &BackendSpec::Rram).total_j();
-    let sram = evaluate(&trace, &acc, &BackendSpec::Sram).total_j();
+    println!("{}", knees.render());
     println!(
-        "counterfactual RRAM buffer on ResNet50: {}× MORE energy than SRAM
-(write-path dominated — the paper's argument for eDRAM over NVM).",
-        fnum(rram / sram, 0)
+        "reading: all backends share one engine latency, so knees land close in req/s —\n\
+         the technologies separate on µJ/request (MCAIMem's static+refresh advantage) and\n\
+         on area per provisioned shard (48% smaller than SRAM at equal capacity)."
     );
     Ok(())
 }

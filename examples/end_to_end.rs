@@ -87,7 +87,7 @@ fn main() -> anyhow::Result<()> {
     }
     let mut correct = 0;
     for (i, rx) in rxs {
-        let (class, _) = rx.recv()?;
+        let (class, _) = rx.recv()??;
         if class as i32 == y[i % y.len()] {
             correct += 1;
         }

@@ -5,6 +5,13 @@
 //!
 //! Pass `--quick` (CI smoke) to cut iteration counts ~10×. Results are
 //! mirrored to `BENCH_hotpath.json` for the cross-PR perf trajectory.
+//!
+//! Pass `--compare BENCH_baseline/BENCH_hotpath.json` to diff this run
+//! against a committed baseline and **fail** (exit 1) when a word-parallel
+//! bench regresses by more than `--gate-pct` (default 15) percent — the CI
+//! bench-regression gate. The delta table is printed, and appended to
+//! `$GITHUB_STEP_SUMMARY` when that is set. An empty baseline (the
+//! toolchain-less placeholder) skips the gate with a note.
 
 use mcaimem::mem::bitplane;
 use mcaimem::mem::mcaimem::MixedCellMemory;
@@ -13,7 +20,11 @@ use mcaimem::util::rng::Pcg64;
 use mcaimem::util::table::fnum;
 
 fn main() {
-    let quick = std::env::args().any(|a| a == "--quick");
+    let argv: Vec<String> = std::env::args().collect();
+    let quick = argv.iter().any(|a| a == "--quick");
+    let flag_value = |flag: &str| {
+        argv.iter().position(|a| a == flag).and_then(|i| argv.get(i + 1)).cloned()
+    };
     let it = |n: usize| if quick { (n / 10).max(2) } else { n };
     let mut suite = BenchSuite::new("hotpath");
 
@@ -144,4 +155,53 @@ fn main() {
     );
 
     suite.write_json_at_repo_root();
+
+    // CI bench-regression gate: compare against a committed baseline and
+    // fail on >gate-pct regression of the word-parallel path
+    if let Some(path) = flag_value("--compare") {
+        let gate_pct: f64 = flag_value("--gate-pct")
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(15.0);
+        let baseline = match BenchSuite::load_json(std::path::Path::new(&path)) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("bench gate: cannot load baseline {path}: {e:#}");
+                std::process::exit(1);
+            }
+        };
+        if baseline.results.is_empty() {
+            println!(
+                "bench gate: baseline {path} is the toolchain-less placeholder (no results) — \
+                 gate skipped; refresh it from this run's BENCH_hotpath.json"
+            );
+            return;
+        }
+        let report = mcaimem::util::benchmark::compare(&baseline, &suite);
+        let md = format!(
+            "## bench_hotpath vs {path} (gate: word-parallel ≤ +{gate_pct}%)\n\n{}",
+            report.markdown()
+        );
+        println!("{md}");
+        if let Ok(summary) = std::env::var("GITHUB_STEP_SUMMARY") {
+            use std::io::Write;
+            if let Ok(mut f) = std::fs::OpenOptions::new().append(true).create(true).open(summary)
+            {
+                let _ = writeln!(f, "{md}");
+            }
+        }
+        let bad = report.regressions(gate_pct, |n| n.contains("word-parallel"));
+        if !bad.is_empty() {
+            for d in &bad {
+                eprintln!(
+                    "bench gate FAIL: {} regressed {:.1}% (baseline {:.0} ns → {:.0} ns)",
+                    d.name,
+                    d.pct(),
+                    d.base_ns,
+                    d.cur_ns
+                );
+            }
+            std::process::exit(1);
+        }
+        println!("bench gate OK: no word-parallel regression above {gate_pct}%");
+    }
 }

@@ -1,17 +1,23 @@
 //! Bench + regeneration for the system-level figures: Fig. 14 (static
 //! energy), Fig. 15a (refresh), Fig. 15b (total), Fig. 16 (ops/W), plus
-//! the event-driven simulator and an ablation over dataflows.
+//! the event-driven simulator, an ablation over dataflows, and the
+//! serving-tier **saturation sweep** (workers × shards → sustained req/s —
+//! the ≥3× scaling check of `--shards 4 --workers 4` over 1×1).
+//!
+//! Pass `--quick` to shrink the sweep for CI smoke runs.
 
 use mcaimem::coordinator::scheduler::simulate_inference;
-use mcaimem::report::system_reports;
+use mcaimem::mem::backend::BackendSpec;
+use mcaimem::report::{serving, system_reports};
 use mcaimem::scalesim::accelerator::{AcceleratorConfig, Dataflow};
-use mcaimem::scalesim::systolic::layer_cost;
-use mcaimem::scalesim::simulate::simulate_network_uncached;
 use mcaimem::scalesim::network;
+use mcaimem::scalesim::simulate::simulate_network_uncached;
+use mcaimem::scalesim::systolic::layer_cost;
 use mcaimem::util::benchmark::bench;
 use mcaimem::util::table::{fnum, Table};
 
 fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
     println!("== regenerating Fig. 14 / 15a / 15b / 16 ==\n");
     for t in system_reports::fig14() {
         println!("{}", t.render());
@@ -83,4 +89,27 @@ fn main() {
         "{}",
         bench("report::fig15b (full suite × 2 platforms)", 1, 3, system_reports::fig15b).report()
     );
+
+    // serving-tier saturation sweep: closed-loop sustained req/s per
+    // (workers, shards) combo — the acceptance check is the 4×4 row
+    // sustaining ≥3× the 1×1 row on the same host
+    println!("\n== serving-tier saturation sweep ==\n");
+    let requests = if quick { 240 } else { 2000 };
+    let spec = BackendSpec::mcaimem_default();
+    match serving::saturation_sweep(&spec, &serving::DEFAULT_SWEEP, requests, 42) {
+        Ok((table, points)) => {
+            println!("{}", table.render());
+            let base = points.iter().find(|p| p.workers == 1 && p.shards == 1);
+            let four = points.iter().find(|p| p.workers == 4 && p.shards == 4);
+            if let (Some(b), Some(f)) = (base, four) {
+                let ratio = f.achieved_rps / b.achieved_rps.max(1e-9);
+                println!(
+                    "scaling 4×4 vs 1×1: {}x (target ≥3x){}",
+                    fnum(ratio, 2),
+                    if ratio >= 3.0 { "" } else { "  ** below target on this host **" }
+                );
+            }
+        }
+        Err(e) => eprintln!("saturation sweep failed: {e:#}"),
+    }
 }

@@ -8,7 +8,7 @@
 //! mcaimem report <id|all> [--csv DIR] [--artifacts DIR] [--backend SPECS] [--quick]
 //! mcaimem fig11 [--artifacts DIR] [--quick]
 //! mcaimem simulate --network NAME [--platform eyeriss|tpuv1] [--backend SPECS]
-//! mcaimem serve [--artifacts DIR] [--requests N] [--backend SPEC] [--p P]
+//! mcaimem serve [--backend SPEC] [--shards N] [--workers K] [--target-rps R] [--sweep]
 //! mcaimem selftest [--artifacts DIR]
 //! ```
 

@@ -49,7 +49,20 @@ impl BufferManager {
     /// A manager over any backend spec — the one construction path every
     /// technology shares.
     pub fn from_spec(spec: &BackendSpec, bytes: usize, seed: u64) -> Self {
-        let mem = backend::build(spec, bytes, seed);
+        Self::from_backend(backend::build(spec, bytes, seed))
+    }
+
+    /// A manager over `shards` striped bank shards of `spec` (the serving
+    /// tier's banked buffer — see [`crate::mem::sharded`]).
+    pub fn sharded(spec: &BackendSpec, shards: usize, bytes: usize, seed: u64) -> Result<Self> {
+        Ok(Self::from_backend(Box::new(crate::mem::sharded::ShardedBackend::new(
+            spec, shards, bytes, seed,
+        )?)))
+    }
+
+    /// A manager over an already-built backend (the general form `from_spec`
+    /// and `sharded` delegate to).
+    pub fn from_backend(mem: Box<dyn MemoryBackend>) -> Self {
         let refresh = match mem.refresh_due() {
             Some(t_ref) => RefreshController::new(mem.rows_per_bank(), t_ref),
             None => {

@@ -1,0 +1,317 @@
+//! Load generation for the serving tier: open-loop Poisson and closed-loop
+//! arrivals, per-tenant request mixes across networks.
+//!
+//! * **Open-loop Poisson** — arrivals fire on an absolute exponential
+//!   schedule regardless of completions (the datacenter regime: traffic
+//!   does not slow down because the server is slow). Offered rate is the
+//!   control knob; the achieved rate and the latency distribution are the
+//!   measurements. Above saturation the admission controller sheds the
+//!   excess as rejects instead of letting latency collapse.
+//! * **Closed-loop** — C clients each keep exactly one request in flight
+//!   (submit → wait → resubmit), optionally honouring reject retry-after
+//!   hints. This measures the tier's *sustained* service capacity, which is
+//!   what the saturation sweep reports.
+//! * **Tenant mixes** — each request draws a tenant by weight; a tenant is
+//!   a named network with its own input width, so a mix models several
+//!   models sharing one serving tier.
+//!
+//! Everything is seeded ([`Pcg64`]) — the arrival schedule and every
+//! payload byte are reproducible run-to-run; only wall-clock timing varies.
+
+use std::time::{Duration, Instant};
+
+use super::pool::{SubmitError, WorkerPool};
+use crate::scalesim::network;
+use crate::util::rng::Pcg64;
+use crate::util::stats::percentile_sorted;
+
+/// Arrival process driving the pool.
+#[derive(Clone, Copy, Debug)]
+pub enum Arrival {
+    /// Open loop: Poisson arrivals at `rps` requests/s, regardless of
+    /// completions.
+    OpenPoisson { rps: f64 },
+    /// Closed loop: `clients` callers, one request in flight each.
+    ClosedLoop { clients: usize },
+}
+
+/// One tenant of the serving tier: a named model with a request width and
+/// a share of the traffic.
+#[derive(Clone, Debug)]
+pub struct Tenant {
+    pub name: String,
+    pub weight: f64,
+    /// Request payload bytes (the network's input width, clamped to the
+    /// staging row).
+    pub dim: usize,
+}
+
+impl Tenant {
+    /// A tenant serving one of the repo's networks (dim = the network's
+    /// input size, clamped to a serving row).
+    pub fn for_network(name: &str, weight: f64) -> Option<Tenant> {
+        let net = network::by_name(name)?;
+        let dim = net.layers.first().map(|l| l.input_bytes()).unwrap_or(784).clamp(16, 784);
+        Some(Tenant { name: net.name.to_string(), weight, dim })
+    }
+
+    /// The default two-tenant mix (vision + language traffic).
+    pub fn default_mix() -> Vec<Tenant> {
+        ["ResNet50", "I-BERT"]
+            .iter()
+            .filter_map(|n| Tenant::for_network(n, 1.0))
+            .collect()
+    }
+}
+
+/// Load-generation configuration.
+#[derive(Clone, Debug)]
+pub struct LoadConfig {
+    pub arrival: Arrival,
+    /// Tenant mix (weights need not sum to 1; empty = one synthetic
+    /// 784-byte tenant).
+    pub tenants: Vec<Tenant>,
+    /// Total requests to offer.
+    pub requests: usize,
+    /// Honour reject retry-after hints (closed-loop callers back off and
+    /// retry; open-loop arrivals are lost — an open-loop client cannot
+    /// defer traffic).
+    pub retry_rejects: bool,
+    pub seed: u64,
+}
+
+impl Default for LoadConfig {
+    fn default() -> Self {
+        LoadConfig {
+            arrival: Arrival::ClosedLoop { clients: 4 },
+            tenants: Vec::new(),
+            requests: 512,
+            retry_rejects: true,
+            seed: 0x10AD,
+        }
+    }
+}
+
+/// What the load run measured.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    /// Requests the generator tried to submit (excluding retries).
+    pub offered: usize,
+    /// Requests past admission control.
+    pub accepted: usize,
+    /// Rejection events (with retries one request can reject many times).
+    pub rejected: u64,
+    /// Requests answered with a class.
+    pub completed: usize,
+    /// Requests answered with an inference error.
+    pub errors: usize,
+    pub wall_s: f64,
+    /// Completed requests per wall second.
+    pub achieved_rps: f64,
+    pub p50_latency_us: f64,
+    pub p99_latency_us: f64,
+}
+
+impl LoadReport {
+    fn from_outcomes(offered: usize, rejected: u64, lat_us: &mut Vec<f64>, errors: usize, wall_s: f64) -> Self {
+        lat_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let completed = lat_us.len();
+        LoadReport {
+            offered,
+            accepted: completed + errors,
+            rejected,
+            completed,
+            errors,
+            wall_s,
+            achieved_rps: completed as f64 / wall_s.max(1e-9),
+            p50_latency_us: if completed == 0 { 0.0 } else { percentile_sorted(lat_us, 50.0) },
+            p99_latency_us: if completed == 0 { 0.0 } else { percentile_sorted(lat_us, 99.0) },
+        }
+    }
+}
+
+/// The deterministic Poisson arrival schedule: `n` exponential
+/// inter-arrival gaps (s) at rate `rps`. Pure function of the seed — the
+/// reproducibility the serving tests lean on.
+pub fn poisson_interarrivals(seed: u64, rps: f64, n: usize) -> Vec<f64> {
+    assert!(rps > 0.0);
+    let mut rng = Pcg64::new(seed);
+    (0..n).map(|_| -rng.f64_open().ln() / rps).collect()
+}
+
+/// Draw a request payload for a weighted-random tenant.
+fn draw_request(rng: &mut Pcg64, tenants: &[Tenant]) -> Vec<i8> {
+    let dim = if tenants.is_empty() {
+        784
+    } else {
+        let total: f64 = tenants.iter().map(|t| t.weight).sum();
+        let mut x = rng.f64() * total;
+        let mut pick = tenants.len() - 1;
+        for (i, t) in tenants.iter().enumerate() {
+            if x < t.weight {
+                pick = i;
+                break;
+            }
+            x -= t.weight;
+        }
+        tenants[pick].dim
+    };
+    (0..dim).map(|_| rng.next_u64() as i8).collect()
+}
+
+/// Sleep until `target` without burning a core: coarse sleep to ~200 µs
+/// short, then yield-spin the remainder.
+fn pace_until(target: Instant) {
+    loop {
+        let now = Instant::now();
+        if now >= target {
+            return;
+        }
+        let left = target - now;
+        if left > Duration::from_micros(200) {
+            std::thread::sleep(left - Duration::from_micros(100));
+        } else {
+            std::thread::yield_now();
+        }
+    }
+}
+
+/// Drive `pool` with the configured load; blocks until every offered
+/// request resolved (completed, errored, or rejected).
+pub fn run(pool: &WorkerPool, cfg: &LoadConfig) -> LoadReport {
+    match cfg.arrival {
+        Arrival::OpenPoisson { rps } => run_open(pool, cfg, rps),
+        Arrival::ClosedLoop { clients } => run_closed(pool, cfg, clients),
+    }
+}
+
+fn run_open(pool: &WorkerPool, cfg: &LoadConfig, rps: f64) -> LoadReport {
+    let gaps = poisson_interarrivals(cfg.seed, rps, cfg.requests);
+    let mut rng = Pcg64::new(cfg.seed ^ 0xFEED);
+    let mut receivers = Vec::with_capacity(cfg.requests);
+    let mut rejected = 0u64;
+    let start = Instant::now();
+    let mut due = start;
+    for gap in gaps {
+        due += Duration::from_secs_f64(gap);
+        pace_until(due);
+        let row = draw_request(&mut rng, &cfg.tenants);
+        match pool.submit(row) {
+            Ok(rx) => receivers.push(rx),
+            Err(SubmitError::Rejected { .. }) => rejected += 1, // open loop sheds
+            Err(SubmitError::Closed) => break,
+        }
+    }
+    // drain: latency was measured worker-side at reply time, so a late
+    // collector does not distort it
+    let mut lat_us = Vec::with_capacity(receivers.len());
+    let mut errors = 0usize;
+    for rx in receivers {
+        match rx.recv() {
+            Ok(Ok((_, d))) => lat_us.push(d.as_secs_f64() * 1e6),
+            Ok(Err(_)) => errors += 1,
+            Err(_) => errors += 1, // pool died mid-flight
+        }
+    }
+    let wall_s = start.elapsed().as_secs_f64();
+    LoadReport::from_outcomes(cfg.requests, rejected, &mut lat_us, errors, wall_s)
+}
+
+fn run_closed(pool: &WorkerPool, cfg: &LoadConfig, clients: usize) -> LoadReport {
+    let clients = clients.max(1);
+    let start = Instant::now();
+    let results: Vec<(Vec<f64>, u64, usize, usize)> = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(clients);
+        for c in 0..clients {
+            let share = cfg.requests / clients + usize::from(c < cfg.requests % clients);
+            let mut rng = Pcg64::new(cfg.seed ^ (0xC11E47 + c as u64));
+            handles.push(scope.spawn(move || {
+                let mut lat_us = Vec::with_capacity(share);
+                let mut rejected = 0u64;
+                let mut errors = 0usize;
+                let mut offered = 0usize;
+                for _ in 0..share {
+                    offered += 1;
+                    let row = draw_request(&mut rng, &cfg.tenants);
+                    loop {
+                        match pool.submit(row.clone()) {
+                            Ok(rx) => {
+                                match rx.recv() {
+                                    Ok(Ok((_, d))) => lat_us.push(d.as_secs_f64() * 1e6),
+                                    _ => errors += 1,
+                                }
+                                break;
+                            }
+                            Err(SubmitError::Rejected { retry_after, .. }) => {
+                                rejected += 1;
+                                if !cfg.retry_rejects {
+                                    break;
+                                }
+                                std::thread::sleep(retry_after);
+                            }
+                            Err(SubmitError::Closed) => break,
+                        }
+                    }
+                }
+                (lat_us, rejected, errors, offered)
+            }));
+        }
+        handles.into_iter().map(|h| h.join().expect("client thread")).collect()
+    });
+    let wall_s = start.elapsed().as_secs_f64();
+    let mut lat_us = Vec::new();
+    let mut rejected = 0u64;
+    let mut errors = 0usize;
+    let mut offered = 0usize;
+    for (l, r, e, o) in results {
+        lat_us.extend(l);
+        rejected += r;
+        errors += e;
+        offered += o;
+    }
+    LoadReport::from_outcomes(offered, rejected, &mut lat_us, errors, wall_s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_schedule_is_deterministic_with_the_right_mean() {
+        let a = poisson_interarrivals(42, 1000.0, 4000);
+        let b = poisson_interarrivals(42, 1000.0, 4000);
+        assert_eq!(a, b, "same seed, same schedule");
+        let c = poisson_interarrivals(43, 1000.0, 4000);
+        assert_ne!(a, c, "different seed, different schedule");
+        let mean = a.iter().sum::<f64>() / a.len() as f64;
+        assert!((mean - 1e-3).abs() < 1e-4, "mean gap {mean} vs 1 ms");
+        assert!(a.iter().all(|&g| g > 0.0));
+    }
+
+    #[test]
+    fn tenant_mix_draws_every_tenant() {
+        let tenants = vec![
+            Tenant { name: "a".into(), weight: 1.0, dim: 16 },
+            Tenant { name: "b".into(), weight: 3.0, dim: 32 },
+        ];
+        let mut rng = Pcg64::new(5);
+        let mut counts = [0usize; 2];
+        for _ in 0..2000 {
+            let row = draw_request(&mut rng, &tenants);
+            match row.len() {
+                16 => counts[0] += 1,
+                32 => counts[1] += 1,
+                other => panic!("unexpected dim {other}"),
+            }
+        }
+        let frac_b = counts[1] as f64 / 2000.0;
+        assert!((frac_b - 0.75).abs() < 0.05, "weighted draw off: {frac_b}");
+    }
+
+    #[test]
+    fn default_mix_resolves_networks() {
+        let mix = Tenant::default_mix();
+        assert_eq!(mix.len(), 2);
+        assert!(mix.iter().all(|t| (16..=784).contains(&t.dim)));
+    }
+}

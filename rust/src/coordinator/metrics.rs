@@ -13,6 +13,9 @@ pub struct Metrics {
     /// with the word-parallel array this, not the store path, should bound
     /// serving rate).
     pub bytes_in: u64,
+    /// Requests answered with an inference error (every pending request in
+    /// a failed batch — never silently dropped).
+    pub errors: u64,
     /// Wall clock of the first and latest activity — the serving window
     /// for sustained-rate figures (an idle tail before shutdown must not
     /// deflate the rates).
@@ -44,6 +47,33 @@ impl Metrics {
     pub fn record_bytes_in(&mut self, bytes: usize) {
         self.touch();
         self.bytes_in += bytes as u64;
+    }
+
+    /// A request answered with an error (failed batch). Counts toward the
+    /// serving window but not toward latency quantiles.
+    pub fn record_error(&mut self) {
+        self.touch();
+        self.errors += 1;
+    }
+
+    /// Fold another worker's accumulator into this one — how the pool
+    /// aggregates per-worker metrics at shutdown. Latency samples concat;
+    /// the serving window spans the union of both windows.
+    pub fn merge(&mut self, other: &Metrics) {
+        self.latencies_us.extend_from_slice(&other.latencies_us);
+        self.requests += other.requests;
+        self.batches += other.batches;
+        self.padded_slots += other.padded_slots;
+        self.bytes_in += other.bytes_in;
+        self.errors += other.errors;
+        self.started = match (self.started, other.started) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+        self.last_activity = match (self.last_activity, other.last_activity) {
+            (Some(a), Some(b)) => Some(a.max(b)),
+            (a, b) => a.or(b),
+        };
     }
 
     /// Length of the serving window: first activity → latest activity
@@ -133,6 +163,31 @@ mod tests {
         assert_eq!(m.occupancy(), 0.0);
         assert_eq!(m.requests_per_s(), 0.0);
         assert_eq!(m.bytes_per_s(), 0.0);
+    }
+
+    #[test]
+    fn merge_concats_samples_and_spans_windows() {
+        let mut a = Metrics::default();
+        a.record_latency(Duration::from_micros(100));
+        a.record_batch(1, 4);
+        std::thread::sleep(Duration::from_millis(2));
+        let mut b = Metrics::default();
+        b.record_latency(Duration::from_micros(300));
+        b.record_error();
+        a.merge(&b);
+        assert_eq!(a.requests, 2);
+        assert_eq!(a.errors, 1);
+        assert_eq!(a.padded_slots, 3);
+        assert!((a.mean_us() - 200.0).abs() < 1.0);
+        // the merged window spans a's start to b's last activity
+        assert!(a.elapsed_s() >= 0.002);
+        let merged_into_empty = {
+            let mut m = Metrics::default();
+            m.merge(&a);
+            m
+        };
+        assert_eq!(merged_into_empty.requests, 2);
+        assert!(merged_into_empty.elapsed_s() > 0.0);
     }
 
     #[test]

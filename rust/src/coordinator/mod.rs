@@ -1,20 +1,27 @@
 //! L3 coordinator — the memory-system role of this paper.
 //!
 //! MCAIMem is a buffer, so the coordinator owns the buffer: a tensor-level
-//! [`buffer_manager`] backed by the *functional* mixed-cell array (real
-//! bit-planes, real flips) with its refresh controller; a [`scheduler`]
+//! [`buffer_manager`] backed by any [`crate::mem::MemoryBackend`] (the
+//! functional mixed-cell array with its refresh controller, or any
+//! baseline) with sharded striping for the serving tier; a [`scheduler`]
 //! that drives whole-network inference timelines through that buffer on the
 //! simulated accelerator clock (the event-driven counterpart of the
-//! closed-form energy model — the two are cross-checked in tests); and a
-//! batched inference [`server`] that executes the AOT model via PJRT while
-//! routing request tensors through the buffer path (threads + channels —
-//! the offline crate set has no tokio).
+//! closed-form energy model — the two are cross-checked in tests); the
+//! single-worker batched inference [`server`]; and the production-scale
+//! serving tier — a [`pool`] of K workers over N bank shards behind a
+//! work-stealing, admission-controlled queue, driven by the [`loadgen`]
+//! arrival processes (threads + channels — the offline crate set has no
+//! tokio).
 
 pub mod buffer_manager;
+pub mod loadgen;
 pub mod metrics;
+pub mod pool;
 pub mod scheduler;
 pub mod server;
 
 pub use buffer_manager::{BufferManager, TensorHandle};
+pub use loadgen::{Arrival, LoadConfig, LoadReport, Tenant};
+pub use pool::{PoolConfig, SubmitError, WorkerPool};
 pub use scheduler::{simulate_inference, SimReport};
-pub use server::{InferenceServer, ServerConfig, ServerStats};
+pub use server::{InferenceServer, ServerConfig, ServerStats, ShardStat};

@@ -1,0 +1,606 @@
+//! Sharded multi-worker serving tier — the production-scale front-end.
+//!
+//! Replaces the one-thread/one-buffer/one-queue server for heavy traffic:
+//! K workers each own an inference engine plus a [`BufferManager`] over
+//! their slice of the tier's N bank shards (a [`ShardedBackend`] stripe —
+//! per-shard meters, staggered refresh), fed by a bounded work-stealing
+//! queue with admission control:
+//!
+//! * **Work stealing** — each worker has its own deque; submissions land
+//!   round-robin, a worker drains its own deque front-first and steals from
+//!   the *back* of its neighbours when idle, so a slow worker cannot
+//!   strand queued requests.
+//! * **Admission control** — when total queue depth reaches the
+//!   `high_water` mark, `submit` refuses with a retry-after hint instead of
+//!   letting the queue grow without bound (reject-with-retry-after beats
+//!   unbounded latency collapse under overload). The mark is advisory:
+//!   concurrent submitters may overshoot it by a few requests.
+//! * **Exactly-once replies** — every accepted request is answered exactly
+//!   once: with its class on success, or with the batch's inference error
+//!   on failure (never a silently dropped channel).
+//!
+//! Engines: with PJRT artifacts each worker owns a [`ModelRunner`]; without
+//! them a [`SyntheticEngine`] classifies deterministically while *really*
+//! blocking for the configured accelerator execution latency — so the tier
+//! is latency-bound exactly like a PJRT-backed worker, and multi-worker
+//! scaling measures true pipeline parallelism, not an idle spin. In both
+//! cases every request's payload is staged through the worker's buffer
+//! shard (store → compute tick → load), so the chosen memory technology
+//! sees the real serving traffic: occupancy, refresh and energy all accrue
+//! on the per-shard meters surfaced in [`ServerStats::shards`].
+
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use super::buffer_manager::BufferManager;
+use super::metrics::Metrics;
+use super::server::{Reply, ServerStats, ShardStat};
+use crate::mem::backend::BackendSpec;
+use crate::mem::mcaimem::EnergyMeter;
+use crate::runtime::executor::ModelRunner;
+use crate::util::rng::{shard_seeds, Pcg64};
+
+/// Serving-tier configuration.
+#[derive(Clone, Debug)]
+pub struct PoolConfig {
+    /// Buffer technology every shard is built from.
+    pub backend: BackendSpec,
+    /// Worker threads (each owns an engine + its shard slice).
+    pub workers: usize,
+    /// Bank shards striped across the tier (`shards >= workers`; shards
+    /// are dealt to workers round-robin, remainder to the first workers).
+    pub shards: usize,
+    /// Total buffer capacity across all shards (must divide by `shards`).
+    pub buffer_bytes: usize,
+    /// Batching window: how long a worker waits to fill a batch.
+    pub batch_window: Duration,
+    /// Admission high-water mark: total queued requests at or above this
+    /// are rejected with a retry-after hint.
+    pub high_water: usize,
+    /// Virtual buffer-clock advance per executed batch (refresh slots fire,
+    /// static energy integrates).
+    pub sim_compute_s: f64,
+    /// Retention-flip probability fed to aged (PJRT) engines.
+    pub flip_p: f64,
+    /// Per-batch service-time estimate (µs) scaling the retry-after hint.
+    pub est_service_us: u64,
+    pub seed: u64,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig {
+            backend: BackendSpec::mcaimem_default(),
+            workers: 1,
+            shards: 1,
+            buffer_bytes: 256 * 1024,
+            batch_window: Duration::from_micros(200),
+            high_water: 256,
+            sim_compute_s: 2e-6,
+            flip_p: 0.01,
+            est_service_us: 300,
+            seed: 0xD00D,
+        }
+    }
+}
+
+/// Why a submission was refused.
+#[derive(Debug)]
+pub enum SubmitError {
+    /// Queue depth at/above the high-water mark: try again after the hint.
+    Rejected { depth: usize, retry_after: Duration },
+    /// The pool has shut down.
+    Closed,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Rejected { depth, retry_after } => write!(
+                f,
+                "admission refused: queue depth {depth}, retry after {:.1} ms",
+                retry_after.as_secs_f64() * 1e3
+            ),
+            SubmitError::Closed => write!(f, "pool closed"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// One worker's inference engine: turns a staged `batch × dim` int8 tensor
+/// into per-row class indices.
+pub trait InferEngine: Send {
+    /// Rows per executed batch.
+    fn batch(&self) -> usize;
+    /// Bytes per row.
+    fn dim(&self) -> usize;
+    fn infer(&mut self, x: &[i8]) -> Result<Vec<usize>>;
+}
+
+/// PJRT-less engine: a deterministic classifier plus a *real* block for the
+/// modeled accelerator execution latency, so pool throughput is
+/// latency-bound the way a PJRT-backed worker is. The classifier is a
+/// stable byte hash — meaningless labels, but bit-reproducible, which is
+/// what the serving-tier tests need.
+pub struct SyntheticEngine {
+    pub batch: usize,
+    pub dim: usize,
+    pub classes: usize,
+    /// Modeled accelerator execution latency per batch (really slept).
+    pub exec_latency: Duration,
+}
+
+impl Default for SyntheticEngine {
+    fn default() -> Self {
+        SyntheticEngine {
+            batch: 4,
+            dim: 784,
+            classes: 10,
+            exec_latency: Duration::from_micros(250),
+        }
+    }
+}
+
+impl InferEngine for SyntheticEngine {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn infer(&mut self, x: &[i8]) -> Result<Vec<usize>> {
+        anyhow::ensure!(x.len() == self.batch * self.dim, "batch shape mismatch");
+        if !self.exec_latency.is_zero() {
+            std::thread::sleep(self.exec_latency);
+        }
+        Ok(x.chunks(self.dim)
+            .map(|row| {
+                let mut h = 0xcbf2_9ce4_8422_2325u64;
+                for &v in row {
+                    h = (h ^ v as u8 as u64).wrapping_mul(0x0000_0100_0000_01B3);
+                }
+                (h % self.classes as u64) as usize
+            })
+            .collect())
+    }
+}
+
+/// PJRT-backed engine: one [`ModelRunner`] per worker (executables are not
+/// `Sync`), serving the aged model for the pool's backend spec.
+pub struct PjrtEngine {
+    runner: ModelRunner,
+    spec: BackendSpec,
+    flip_p: f64,
+    rng: Pcg64,
+}
+
+impl PjrtEngine {
+    pub fn new(dir: &std::path::Path, spec: BackendSpec, flip_p: f64, seed: u64) -> Result<Self> {
+        Ok(PjrtEngine { runner: ModelRunner::new(dir)?, spec, flip_p, rng: Pcg64::new(seed) })
+    }
+}
+
+impl InferEngine for PjrtEngine {
+    fn batch(&self) -> usize {
+        self.runner.artifacts.batch
+    }
+
+    fn dim(&self) -> usize {
+        self.runner.artifacts.input_dim
+    }
+
+    fn infer(&mut self, x: &[i8]) -> Result<Vec<usize>> {
+        self.runner.infer(x, &self.spec, self.flip_p, &mut self.rng)
+    }
+}
+
+struct Job {
+    row: Vec<i8>,
+    submitted: Instant,
+    reply: mpsc::Sender<Reply>,
+}
+
+struct Shared {
+    /// One deque per worker (owner pops the front, thieves pop the back).
+    queues: Vec<Mutex<VecDeque<Job>>>,
+    /// Total queued (not yet popped) requests — the admission signal.
+    depth: AtomicUsize,
+    closed: AtomicBool,
+    sleep_mx: Mutex<()>,
+    cv: Condvar,
+    rejected: AtomicU64,
+    /// Queue depth sampled at every accepted submit (for the p99 readout).
+    depth_samples: Mutex<Vec<f64>>,
+    rr: AtomicUsize,
+}
+
+impl Shared {
+    fn try_pop(&self, k: usize) -> Option<Job> {
+        if let Some(j) = self.queues[k].lock().unwrap().pop_front() {
+            self.depth.fetch_sub(1, Ordering::Relaxed);
+            return Some(j);
+        }
+        let n = self.queues.len();
+        for i in 1..n {
+            if let Some(j) = self.queues[(k + i) % n].lock().unwrap().pop_back() {
+                self.depth.fetch_sub(1, Ordering::Relaxed);
+                return Some(j);
+            }
+        }
+        None
+    }
+
+    /// Block until a job is available; `None` once the pool is closed and
+    /// every queue has drained.
+    fn pop_or_wait(&self, k: usize) -> Option<Job> {
+        loop {
+            if let Some(j) = self.try_pop(k) {
+                return Some(j);
+            }
+            if self.closed.load(Ordering::SeqCst) {
+                // final drain check: a job may have landed between the pop
+                // and the flag read
+                return self.try_pop(k);
+            }
+            let guard = self.sleep_mx.lock().unwrap();
+            // the 1 ms timeout bounds any missed-wakeup window
+            let _ = self.cv.wait_timeout(guard, Duration::from_millis(1)).unwrap();
+        }
+    }
+}
+
+struct WorkerReport {
+    metrics: Metrics,
+    shard_meters: Vec<EnergyMeter>,
+}
+
+/// Handle to the running serving tier.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    cfg: PoolConfig,
+    batch: usize,
+    workers: Vec<JoinHandle<WorkerReport>>,
+}
+
+impl WorkerPool {
+    /// Start with PJRT engines when `artifacts` holds a usable export,
+    /// falling back to [`SyntheticEngine`]s (with a note) otherwise — the
+    /// path `mcaimem serve` takes.
+    pub fn start_with_artifacts(cfg: PoolConfig, artifacts: Option<PathBuf>) -> Result<WorkerPool> {
+        let seeds = shard_seeds(cfg.seed ^ 0xE4617E, cfg.workers.max(1));
+        if let Some(dir) = artifacts {
+            match PjrtEngine::new(&dir, cfg.backend, cfg.flip_p, seeds[0]) {
+                Ok(first) => {
+                    let mut engines: Vec<Box<dyn InferEngine>> = vec![Box::new(first)];
+                    for &s in &seeds[1..] {
+                        engines.push(Box::new(PjrtEngine::new(&dir, cfg.backend, cfg.flip_p, s)?));
+                    }
+                    return Self::start_with_engines(cfg, engines);
+                }
+                Err(e) => {
+                    eprintln!("pool: PJRT unavailable ({e:#}); using the synthetic engine");
+                }
+            }
+        }
+        Self::start(cfg)
+    }
+
+    /// Start with default [`SyntheticEngine`]s (no artifacts needed).
+    pub fn start(cfg: PoolConfig) -> Result<WorkerPool> {
+        let engines =
+            (0..cfg.workers).map(|_| Box::new(SyntheticEngine::default()) as Box<dyn InferEngine>);
+        Self::start_with_engines(cfg, engines.collect())
+    }
+
+    /// Start with one pre-built engine per worker (tests inject failing or
+    /// gated engines here).
+    pub fn start_with_engines(
+        cfg: PoolConfig,
+        engines: Vec<Box<dyn InferEngine>>,
+    ) -> Result<WorkerPool> {
+        if cfg.workers == 0 {
+            bail!("pool needs at least one worker");
+        }
+        if engines.len() != cfg.workers {
+            bail!("{} engines for {} workers", engines.len(), cfg.workers);
+        }
+        if cfg.shards < cfg.workers {
+            bail!(
+                "{} shards cannot feed {} workers (need shards >= workers)",
+                cfg.shards,
+                cfg.workers
+            );
+        }
+        if cfg.buffer_bytes % cfg.shards != 0 {
+            bail!("buffer bytes {} not divisible by {} shards", cfg.buffer_bytes, cfg.shards);
+        }
+        let batch = engines[0].batch();
+        let shared = Arc::new(Shared {
+            queues: (0..cfg.workers).map(|_| Mutex::new(VecDeque::new())).collect(),
+            depth: AtomicUsize::new(0),
+            closed: AtomicBool::new(false),
+            sleep_mx: Mutex::new(()),
+            cv: Condvar::new(),
+            rejected: AtomicU64::new(0),
+            depth_samples: Mutex::new(Vec::new()),
+            rr: AtomicUsize::new(0),
+        });
+
+        // deal shards to workers: shards/workers each, remainder to the
+        // first workers
+        let base = cfg.shards / cfg.workers;
+        let rem = cfg.shards % cfg.workers;
+        let shard_bytes = cfg.buffer_bytes / cfg.shards;
+        let seeds = shard_seeds(cfg.seed, cfg.workers);
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for (k, engine) in engines.into_iter().enumerate() {
+            let n_k = base + usize::from(k < rem);
+            let bm = BufferManager::sharded(&cfg.backend, n_k, n_k * shard_bytes, seeds[k])?;
+            let need = engine.batch() * engine.dim();
+            if bm.capacity() < need {
+                bail!(
+                    "worker {k}: shard slice of {} B cannot stage a {} B batch",
+                    bm.capacity(),
+                    need
+                );
+            }
+            let shared = Arc::clone(&shared);
+            let cfgc = cfg.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("mcaimem-pool-{k}"))
+                    .spawn(move || worker_loop(k, shared, cfgc, engine, bm))?,
+            );
+        }
+        Ok(WorkerPool { shared, cfg, batch, workers })
+    }
+
+    /// Rows per batch of the workers' engines.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Current total queue depth (advisory).
+    pub fn depth(&self) -> usize {
+        self.shared.depth.load(Ordering::Relaxed)
+    }
+
+    /// Submit one row. `Err(Rejected)` above the high-water mark — callers
+    /// should back off for the hinted duration before retrying.
+    pub fn submit(&self, row: Vec<i8>) -> std::result::Result<mpsc::Receiver<Reply>, SubmitError> {
+        if self.shared.closed.load(Ordering::SeqCst) {
+            return Err(SubmitError::Closed);
+        }
+        let depth = self.shared.depth.load(Ordering::Relaxed);
+        if depth >= self.cfg.high_water {
+            self.shared.rejected.fetch_add(1, Ordering::Relaxed);
+            let over = (depth + 1 - self.cfg.high_water) as u64;
+            // backlog above the mark, in batches, times the service estimate
+            let us = (over * self.cfg.est_service_us)
+                / (self.cfg.workers as u64 * self.batch as u64).max(1);
+            let floor = (self.cfg.est_service_us / 2).min(50_000);
+            let retry_after = Duration::from_micros(us.clamp(floor, 50_000));
+            return Err(SubmitError::Rejected { depth, retry_after });
+        }
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let job = Job { row, submitted: Instant::now(), reply: reply_tx };
+        let k = self.shared.rr.fetch_add(1, Ordering::Relaxed) % self.cfg.workers;
+        // count the job before it becomes poppable: a fast worker popping
+        // (and decrementing) between push and a late increment would wrap
+        // the counter to usize::MAX
+        let d = self.shared.depth.fetch_add(1, Ordering::Relaxed) + 1;
+        self.shared.queues[k].lock().unwrap().push_back(job);
+        self.shared.depth_samples.lock().unwrap().push(d as f64);
+        self.shared.cv.notify_one();
+        Ok(reply_rx)
+    }
+
+    /// Submit one row and block for its reply.
+    pub fn classify(&self, row: Vec<i8>) -> Result<(usize, Duration)> {
+        let rx = self.submit(row).map_err(|e| anyhow::anyhow!("{e}"))?;
+        rx.recv()?
+    }
+
+    /// Stop the tier: close admission, drain every queue, join the workers
+    /// and aggregate their metrics plus the per-shard meter break-down.
+    pub fn shutdown(self) -> ServerStats {
+        self.shared.closed.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        let mut merged = Metrics::default();
+        let mut shards = Vec::new();
+        for (k, w) in self.workers.into_iter().enumerate() {
+            let report = w.join().unwrap_or_else(|_| WorkerReport {
+                metrics: Metrics::default(),
+                shard_meters: Vec::new(),
+            });
+            merged.merge(&report.metrics);
+            for m in report.shard_meters {
+                shards.push((k, m));
+            }
+        }
+        let total_rw: u64 = shards
+            .iter()
+            .map(|(_, m)| m.bytes_read + m.bytes_written)
+            .sum();
+        let mut stats = ServerStats::from_metrics(&merged);
+        stats.rejected = self.shared.rejected.load(Ordering::Relaxed);
+        stats.queue_depth_p99 = {
+            let mut xs = self.shared.depth_samples.lock().unwrap().clone();
+            if xs.is_empty() {
+                0.0
+            } else {
+                xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                crate::util::stats::percentile_sorted(&xs, 99.0)
+            }
+        };
+        stats.shards = shards
+            .into_iter()
+            .enumerate()
+            .map(|(i, (worker, m))| {
+                let rw = m.bytes_read + m.bytes_written;
+                ShardStat {
+                    shard: i,
+                    worker,
+                    bytes_rw: rw,
+                    occupancy: rw as f64 / total_rw.max(1) as f64,
+                    refreshes: m.refreshes,
+                    energy_j: m.total_j(),
+                }
+            })
+            .collect();
+        stats
+    }
+}
+
+fn worker_loop(
+    k: usize,
+    shared: Arc<Shared>,
+    cfg: PoolConfig,
+    mut engine: Box<dyn InferEngine>,
+    mut bm: BufferManager,
+) -> WorkerReport {
+    let mut metrics = Metrics::default();
+    let batch = engine.batch();
+    let dim = engine.dim();
+    let stage = bm.alloc(batch * dim).expect("stage capacity validated at start");
+
+    while let Some(first) = shared.pop_or_wait(k) {
+        let mut pending = vec![first];
+        let deadline = Instant::now() + cfg.batch_window;
+        while pending.len() < batch {
+            if let Some(j) = shared.try_pop(k) {
+                pending.push(j);
+                continue;
+            }
+            let now = Instant::now();
+            if now >= deadline || shared.closed.load(Ordering::SeqCst) {
+                break;
+            }
+            let guard = shared.sleep_mx.lock().unwrap();
+            let _ = shared
+                .cv
+                .wait_timeout(guard, (deadline - now).min(Duration::from_micros(200)))
+                .unwrap();
+        }
+
+        // assemble the padded batch
+        let real = pending.len();
+        let mut x = vec![0i8; batch * dim];
+        for (i, job) in pending.iter().enumerate() {
+            let n = job.row.len().min(dim);
+            for (dstv, &srcv) in x[i * dim..i * dim + n].iter_mut().zip(&job.row[..n]) {
+                *dstv = srcv;
+            }
+            metrics.record_bytes_in(n);
+        }
+        metrics.record_batch(real, batch);
+
+        // stage the batch through this worker's buffer shards: the memory
+        // technology sees the serving traffic (store → compute → load)
+        let bytes: Vec<u8> = x.iter().map(|&v| v as u8).collect();
+        let staged = match bm.store(stage, &bytes) {
+            Ok(()) => {
+                bm.tick(cfg.sim_compute_s);
+                bm.load(stage)
+            }
+            Err(_) => bytes, // sizes are validated at start; defensive only
+        };
+        let staged_i8: Vec<i8> = staged.iter().map(|&b| b as i8).collect();
+
+        match engine.infer(&staged_i8) {
+            Ok(classes) => {
+                for (i, job) in pending.into_iter().enumerate() {
+                    let latency = job.submitted.elapsed();
+                    metrics.record_latency(latency);
+                    let _ = job.reply.send(Ok((classes[i], latency)));
+                }
+            }
+            Err(e) => {
+                // answer every pending request with the error — exactly
+                // once, never a dropped channel
+                let msg = format!("inference failed: {e:#}");
+                for job in pending {
+                    metrics.record_error();
+                    let _ = job.reply.send(Err(anyhow::anyhow!("{msg}")));
+                }
+            }
+        }
+    }
+
+    WorkerReport { metrics, shard_meters: bm.mem.shard_meters() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg(workers: usize, shards: usize) -> PoolConfig {
+        PoolConfig {
+            backend: BackendSpec::Sram,
+            workers,
+            shards,
+            buffer_bytes: shards * 16 * 1024,
+            high_water: 10_000,
+            seed: 11,
+            ..PoolConfig::default()
+        }
+    }
+
+    fn fast_engines(workers: usize) -> Vec<Box<dyn InferEngine>> {
+        (0..workers)
+            .map(|_| {
+                Box::new(SyntheticEngine { exec_latency: Duration::ZERO, ..Default::default() })
+                    as Box<dyn InferEngine>
+            })
+            .collect()
+    }
+
+    #[test]
+    fn classify_roundtrips_deterministically() {
+        let pool =
+            WorkerPool::start_with_engines(quick_cfg(2, 2), fast_engines(2)).unwrap();
+        let row = vec![5i8; 784];
+        let (a, _) = pool.classify(row.clone()).unwrap();
+        let (b, _) = pool.classify(row).unwrap();
+        assert_eq!(a, b, "same row, same class");
+        let stats = pool.shutdown();
+        assert_eq!(stats.requests, 2);
+        assert_eq!(stats.rejected, 0);
+        assert_eq!(stats.shards.len(), 2);
+    }
+
+    #[test]
+    fn geometry_validation() {
+        assert!(WorkerPool::start_with_engines(quick_cfg(0, 1), fast_engines(0)).is_err());
+        // fewer shards than workers
+        assert!(WorkerPool::start_with_engines(quick_cfg(4, 2), fast_engines(4)).is_err());
+        // indivisible buffer
+        let mut cfg = quick_cfg(1, 3);
+        cfg.buffer_bytes = 100_000;
+        assert!(WorkerPool::start_with_engines(cfg, fast_engines(1)).is_err());
+    }
+
+    #[test]
+    fn shard_slices_cover_all_shards() {
+        // 5 shards over 2 workers: 3 + 2
+        let mut cfg = quick_cfg(2, 5);
+        cfg.buffer_bytes = 5 * 16 * 1024;
+        let pool = WorkerPool::start_with_engines(cfg, fast_engines(2)).unwrap();
+        let _ = pool.classify(vec![1i8; 784]).unwrap();
+        let stats = pool.shutdown();
+        assert_eq!(stats.shards.len(), 5);
+        let by_worker: Vec<usize> =
+            (0..2).map(|w| stats.shards.iter().filter(|s| s.worker == w).count()).collect();
+        assert_eq!(by_worker, vec![3, 2]);
+    }
+}

@@ -1,11 +1,17 @@
-//! Batched inference server — the request loop of the L3 coordinator.
+//! Batched inference server — the single-worker (K = 1) serving path.
 //!
-//! A single worker thread owns the PJRT executables (they are not `Sync`)
-//! and drains an mpsc request queue; requests are grouped into the export
-//! batch size with a short batching window, padded when the window closes
-//! early, executed through the MCAIMem-aged model, and answered over
-//! per-request channels. Latency/throughput metrics are the numbers the
-//! end-to-end example reports (EXPERIMENTS.md §E2E).
+//! One worker thread owns the PJRT executables (they are not `Sync`) and
+//! drains an mpsc request queue; requests are grouped into the export batch
+//! size with a short batching window, padded when the window closes early,
+//! executed through the MCAIMem-aged model, and answered over per-request
+//! channels. Every pending request is answered exactly once — a failed
+//! `infer` call answers each caller with the error instead of dropping the
+//! reply channels (callers must never hang with no context).
+//!
+//! The production-scale serving tier is [`super::pool::WorkerPool`]: K of
+//! these loops over sharded buffers behind one admission-controlled queue.
+//! This single-worker server is kept as the minimal PJRT path the
+//! end-to-end example drives; [`ServerStats`] is shared between the two.
 
 use std::sync::mpsc;
 use std::thread::JoinHandle;
@@ -42,16 +48,39 @@ impl Default for ServerConfig {
     }
 }
 
+/// One reply: class index + request latency, or the inference error that
+/// sank the batch this request rode in.
+pub type Reply = Result<(usize, Duration)>;
+
 struct Request {
     row: Vec<i8>,
     submitted: Instant,
-    reply: mpsc::Sender<(usize, Duration)>,
+    reply: mpsc::Sender<Reply>,
 }
 
 /// Handle to the running server.
 pub struct InferenceServer {
     tx: mpsc::Sender<Request>,
     worker: Option<JoinHandle<Metrics>>,
+}
+
+/// Per-shard serving counters (one row of the `ServerStats::shards`
+/// break-down; produced by the worker pool from
+/// [`crate::mem::backend::MemoryBackend::shard_meters`]).
+#[derive(Clone, Debug)]
+pub struct ShardStat {
+    pub shard: usize,
+    /// Which worker owns this shard.
+    pub worker: usize,
+    /// Payload bytes moved through this shard (reads + writes).
+    pub bytes_rw: u64,
+    /// Fraction of the tier's total shard traffic this shard carried —
+    /// ~1/N when striping balances.
+    pub occupancy: f64,
+    /// Manager-driven refresh slots this shard executed.
+    pub refreshes: u64,
+    /// Total energy charged to this shard (J).
+    pub energy_j: f64,
 }
 
 /// Final statistics after shutdown.
@@ -70,6 +99,39 @@ pub struct ServerStats {
     /// Sustained inbound payload throughput (bytes/s) measured worker-side
     /// — the counter that reflects the array's store-path speed.
     pub bytes_per_s: f64,
+    /// Requests answered with an inference error (never silently dropped).
+    pub errors: u64,
+    /// Requests refused by admission control (pool only; 0 for the
+    /// single-worker server, which applies no admission control).
+    pub rejected: u64,
+    /// p99 of the admission-queue depth sampled at every accepted submit
+    /// (pool only).
+    pub queue_depth_p99: f64,
+    /// Per-shard occupancy/refresh/energy counters (pool only; empty for
+    /// the single-worker server, which owns no buffer shards).
+    pub shards: Vec<ShardStat>,
+}
+
+impl ServerStats {
+    /// Lift a worker-side accumulator into the user-facing stats (the
+    /// pool fills in the admission/shard fields afterwards).
+    pub fn from_metrics(m: &Metrics) -> Self {
+        ServerStats {
+            requests: m.requests,
+            batches: m.batches,
+            mean_latency_us: m.mean_us(),
+            p50_latency_us: m.p50_us(),
+            p99_latency_us: m.p99_us(),
+            occupancy: m.occupancy(),
+            bytes_in: m.bytes_in,
+            requests_per_s: m.requests_per_s(),
+            bytes_per_s: m.bytes_per_s(),
+            errors: m.errors,
+            rejected: 0,
+            queue_depth_p99: 0.0,
+            shards: Vec::new(),
+        }
+    }
 }
 
 impl InferenceServer {
@@ -82,18 +144,19 @@ impl InferenceServer {
         Ok(InferenceServer { tx, worker: Some(worker) })
     }
 
-    /// Submit one row; blocks until the class comes back.
+    /// Submit one row; blocks until the class comes back (or surfaces the
+    /// inference error that sank this request's batch).
     pub fn classify(&self, row: Vec<i8>) -> Result<(usize, Duration)> {
         let (reply_tx, reply_rx) = mpsc::channel();
         self.tx
             .send(Request { row, submitted: Instant::now(), reply: reply_tx })
             .map_err(|_| anyhow::anyhow!("server stopped"))?;
-        Ok(reply_rx.recv()?)
+        reply_rx.recv()?
     }
 
     /// Fire-and-forget submission returning the reply receiver (for load
     /// generation).
-    pub fn submit(&self, row: Vec<i8>) -> Result<mpsc::Receiver<(usize, Duration)>> {
+    pub fn submit(&self, row: Vec<i8>) -> Result<mpsc::Receiver<Reply>> {
         let (reply_tx, reply_rx) = mpsc::channel();
         self.tx
             .send(Request { row, submitted: Instant::now(), reply: reply_tx })
@@ -110,17 +173,7 @@ impl InferenceServer {
             .expect("worker present")
             .join()
             .unwrap_or_default();
-        ServerStats {
-            requests: m.requests,
-            batches: m.batches,
-            mean_latency_us: m.mean_us(),
-            p50_latency_us: m.p50_us(),
-            p99_latency_us: m.p99_us(),
-            occupancy: m.occupancy(),
-            bytes_in: m.bytes_in,
-            requests_per_s: m.requests_per_s(),
-            bytes_per_s: m.bytes_per_s(),
-        }
+        ServerStats::from_metrics(&m)
     }
 }
 
@@ -129,7 +182,14 @@ fn worker_loop(dir: std::path::PathBuf, cfg: ServerConfig, rx: mpsc::Receiver<Re
     let mut runner = match ModelRunner::new(&dir) {
         Ok(r) => r,
         Err(e) => {
-            eprintln!("server: failed to load artifacts: {e:#}");
+            // answer every request (present and future) with the startup
+            // error instead of going dark
+            let msg = format!("server failed to load artifacts: {e:#}");
+            eprintln!("server: {msg}");
+            while let Ok(req) = rx.recv() {
+                metrics.record_error();
+                let _ = req.reply.send(Err(anyhow::anyhow!("{msg}")));
+            }
             return metrics;
         }
     };
@@ -173,12 +233,18 @@ fn worker_loop(dir: std::path::PathBuf, cfg: ServerConfig, rx: mpsc::Receiver<Re
                 for (i, req) in pending.into_iter().enumerate() {
                     let latency = req.submitted.elapsed();
                     metrics.record_latency(latency);
-                    let _ = req.reply.send((classes[i], latency));
+                    let _ = req.reply.send(Ok((classes[i], latency)));
                 }
             }
             Err(e) => {
-                eprintln!("server: inference failed: {e:#}");
-                // drop replies — callers see a closed channel
+                // answer each pending request with the error — concurrent
+                // callers must see the failure, not a closed channel
+                let msg = format!("inference failed: {e:#}");
+                eprintln!("server: {msg}");
+                for req in pending {
+                    metrics.record_error();
+                    let _ = req.reply.send(Err(anyhow::anyhow!("{msg}")));
+                }
             }
         }
     }

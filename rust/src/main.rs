@@ -1,5 +1,6 @@
 //! `mcaimem` — leader binary: experiment reports, event-driven simulation,
-//! the batched inference server, and a self-test over the AOT artifacts.
+//! the sharded multi-worker serving tier, and a self-test over the AOT
+//! artifacts.
 //!
 //! Every subcommand shares one `--backend` flag taking the repo-wide spec
 //! grammar (`sram | edram2t | rram | mcaimem[@VREF[-noenc]]`, comma-list
@@ -13,8 +14,9 @@ use std::time::Duration;
 use anyhow::{bail, Result};
 
 use mcaimem::cli::ArgParser;
+use mcaimem::coordinator::loadgen::{Arrival, LoadConfig, Tenant};
+use mcaimem::coordinator::pool::{PoolConfig, WorkerPool};
 use mcaimem::coordinator::scheduler::simulate_inference;
-use mcaimem::coordinator::server::{InferenceServer, ServerConfig};
 use mcaimem::mem::backend::BackendSpec;
 use mcaimem::runtime::executor::ModelRunner;
 use mcaimem::scalesim::accelerator::AcceleratorConfig;
@@ -34,9 +36,16 @@ USAGE:
       event-driven inference through the functional buffer; SPECS may be a
       comma list — every backend runs the identical schedule and prints its
       energy meter and macro area
-  mcaimem serve [--artifacts DIR] [--requests N] [--backend SPEC] [--p P] [--window-ms MS]
-      run the batched inference server against a synthetic client load,
-      storing tensors in the chosen backend
+  mcaimem serve [--backend SPEC] [--shards N] [--workers K] [--target-rps R]
+                [--requests N] [--clients C] [--high-water H] [--buffer-kb KB]
+                [--mix NET,NET] [--p P] [--window-ms MS] [--artifacts DIR]
+                [--sweep] [--no-retry]
+      run the sharded multi-worker serving tier: K workers over N striped
+      bank shards behind an admission-controlled work-stealing queue.
+      --target-rps > 0 drives open-loop Poisson arrivals; otherwise C
+      closed-loop clients (default 4×K). --sweep prints the workers×shards
+      saturation sweep instead. PJRT engines are used when --artifacts
+      holds an export; otherwise a latency-faithful synthetic engine.
   mcaimem selftest [--artifacts DIR]
       cross-check the Rust and Pallas implementations through PJRT
 
@@ -75,9 +84,10 @@ fn run() -> Result<()> {
     let parser = ArgParser::new(
         &[
             "csv", "artifacts", "network", "platform", "backend", "seed", "requests", "p",
-            "window-ms",
+            "window-ms", "shards", "workers", "target-rps", "clients", "high-water",
+            "buffer-kb", "mix",
         ],
-        &["quick", "help"],
+        &["quick", "help", "sweep", "no-retry"],
     );
     let args = parser.parse(std::env::args().skip(1))?;
     if args.has_flag("help") || args.positionals.is_empty() {
@@ -172,68 +182,107 @@ fn cmd_simulate(args: &mcaimem::cli::ParsedArgs) -> Result<()> {
 }
 
 fn cmd_serve(args: &mcaimem::cli::ParsedArgs) -> Result<()> {
-    let art = artifacts_dir(args);
-    let requests = args.get_usize("requests", 512)?;
     let backend = backend_single(args)?;
-    let cfg = ServerConfig {
-        batch_window: Duration::from_millis(args.get_usize("window-ms", 2)? as u64),
+    let requests = args.get_usize("requests", 1024)?;
+    let seed = args.get_usize("seed", 0xD00D)? as u64;
+
+    if args.has_flag("sweep") {
+        let (table, points) = mcaimem::report::serving::saturation_sweep(
+            &backend,
+            &mcaimem::report::serving::DEFAULT_SWEEP,
+            requests,
+            seed,
+        )?;
+        println!("{}", table.render());
+        if let (Some(base), Some(peak)) = (points.first(), points.iter().reduce(|a, b| {
+            if b.achieved_rps > a.achieved_rps { b } else { a }
+        })) {
+            println!(
+                "peak {} req/s at {} workers × {} shards ({}x over 1×1)",
+                fnum(peak.achieved_rps, 0),
+                peak.workers,
+                peak.shards,
+                fnum(peak.achieved_rps / base.achieved_rps.max(1e-9), 2)
+            );
+        }
+        return Ok(());
+    }
+
+    let workers = args.get_usize("workers", 1)?;
+    let shards = args.get_usize("shards", workers)?;
+    let cfg = PoolConfig {
         backend,
+        workers,
+        shards,
+        buffer_bytes: args.get_usize("buffer-kb", shards * 64)? * 1024,
+        batch_window: match args.get_usize("window-ms", 0)? {
+            0 => Duration::from_micros(200),
+            ms => Duration::from_millis(ms as u64),
+        },
+        high_water: args.get_usize("high-water", 256)?,
         flip_p: args.get_f64("p", 0.01)?,
-        seed: 0xD00D,
+        seed,
+        ..PoolConfig::default()
     };
 
-    // load the exported test set as client traffic
-    let runner = ModelRunner::new(&art)?;
-    let x = runner.artifacts.tensor("x_test_i8")?.as_i8()?;
-    let y = runner.artifacts.tensor("y_test_i32")?.as_i32()?;
-    let dim = runner.artifacts.input_dim;
-    drop(runner);
+    let art = artifacts_dir(args);
+    let art_opt = art.join("manifest.json").exists().then_some(art);
+    let target_rps = args.get_f64("target-rps", 0.0)?;
+    let tenants = match args.get("mix") {
+        None => Vec::new(),
+        Some(list) => list
+            .split(',')
+            .filter(|n| !n.trim().is_empty())
+            .map(|n| {
+                Tenant::for_network(n.trim(), 1.0)
+                    .ok_or_else(|| anyhow::anyhow!("unknown network `{n}` in --mix"))
+            })
+            .collect::<Result<Vec<_>>>()?,
+    };
+    let load = LoadConfig {
+        arrival: if target_rps > 0.0 {
+            Arrival::OpenPoisson { rps: target_rps }
+        } else {
+            Arrival::ClosedLoop { clients: args.get_usize("clients", 4 * workers)? }
+        },
+        tenants,
+        requests,
+        retry_rejects: !args.has_flag("no-retry"),
+        seed: seed ^ 0x10AD,
+    };
 
     println!(
-        "starting server ({}, p={}, {requests} requests)...",
+        "serving tier: {} × {} workers × {} shards, high-water {}, {}",
         cfg.backend.label(),
-        cfg.flip_p
-    );
-    let server = InferenceServer::start(art, cfg)?;
-    let t0 = std::time::Instant::now();
-    let mut rxs = Vec::with_capacity(requests);
-    for i in 0..requests {
-        let row = x[(i % (x.len() / dim)) * dim..][..dim].to_vec();
-        rxs.push((i, server.submit(row)?));
-    }
-    let mut correct = 0usize;
-    let total = requests;
-    for (i, rx) in rxs {
-        let (class, _lat) = rx.recv()?;
-        if class as i32 == y[i % y.len()] {
-            correct += 1;
+        cfg.workers,
+        cfg.shards,
+        cfg.high_water,
+        match load.arrival {
+            Arrival::OpenPoisson { rps } => format!("open-loop Poisson @ {} req/s", fnum(rps, 0)),
+            Arrival::ClosedLoop { clients } => format!("closed loop × {clients} clients"),
         }
+    );
+    let pool = WorkerPool::start_with_artifacts(cfg, art_opt)?;
+    let report = mcaimem::coordinator::loadgen::run(&pool, &load);
+    let stats = pool.shutdown();
+
+    println!(
+        "offered {} requests in {} ms: {} completed, {} errors, {} rejected",
+        report.offered,
+        fnum(report.wall_s * 1e3, 1),
+        report.completed,
+        report.errors,
+        report.rejected
+    );
+    println!(
+        "  achieved   : {} req/s (client)  p50 {} µs  p99 {} µs",
+        fnum(report.achieved_rps, 0),
+        fnum(report.p50_latency_us, 0),
+        fnum(report.p99_latency_us, 0)
+    );
+    for t in mcaimem::report::serving::stats_tables(&stats) {
+        println!("{}", t.render());
     }
-    let elapsed = t0.elapsed();
-    let stats = server.shutdown();
-    println!(
-        "served {} requests in {} ms",
-        stats.requests,
-        fnum(elapsed.as_secs_f64() * 1e3, 1)
-    );
-    println!(
-        "  throughput : {} req/s client-side, {} req/s / {} KB/s worker-side",
-        fnum(stats.requests as f64 / elapsed.as_secs_f64(), 0),
-        fnum(stats.requests_per_s, 0),
-        fnum(stats.bytes_per_s / 1024.0, 1)
-    );
-    println!(
-        "  latency    : mean {} µs  p50 {} µs  p99 {} µs",
-        fnum(stats.mean_latency_us, 0),
-        fnum(stats.p50_latency_us, 0),
-        fnum(stats.p99_latency_us, 0)
-    );
-    println!(
-        "  batches    : {} (occupancy {})",
-        stats.batches,
-        fnum(stats.occupancy, 3)
-    );
-    println!("  accuracy   : {}", fnum(correct as f64 / total as f64, 4));
     Ok(())
 }
 

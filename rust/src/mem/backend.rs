@@ -192,7 +192,10 @@ impl fmt::Display for BackendSpec {
 ///   honor by driving [`MemoryBackend::refresh_row`] (None = the backend
 ///   needs no manager-driven refresh — static, non-volatile, or
 ///   self-charged analytically in `tick`).
-pub trait MemoryBackend {
+///
+/// Backends are `Send` (plain simulated state), so a worker pool can own
+/// one buffer manager per thread.
+pub trait MemoryBackend: Send {
     /// The spec this backend was built from (round-trips through `build`).
     fn spec(&self) -> BackendSpec;
 
@@ -227,6 +230,14 @@ pub trait MemoryBackend {
 
     /// The shared energy/event meter.
     fn meter(&self) -> &EnergyMeter;
+
+    /// Per-shard meter snapshots. Single-array backends report one shard
+    /// (their own meter); [`super::sharded::ShardedBackend`] overrides this
+    /// with one entry per bank shard so the serving tier can surface
+    /// per-shard occupancy/refresh counters.
+    fn shard_meters(&self) -> Vec<EnergyMeter> {
+        vec![self.meter().clone()]
+    }
 
     /// The Table II characterization card energy is charged from.
     fn energy_card(&self) -> &EnergyCard;

@@ -63,6 +63,22 @@ impl EnergyMeter {
     pub fn total_j(&self) -> f64 {
         self.read_j + self.write_j + self.refresh_j + self.static_j
     }
+
+    /// Accumulate another meter into this one (field-wise sum) — how the
+    /// sharded backend folds per-shard meters into one read-out.
+    pub fn merge(&mut self, other: &EnergyMeter) {
+        self.read_j += other.read_j;
+        self.write_j += other.write_j;
+        self.refresh_j += other.refresh_j;
+        self.static_j += other.static_j;
+        self.reads += other.reads;
+        self.writes += other.writes;
+        self.refreshes += other.refreshes;
+        self.bytes_read += other.bytes_read;
+        self.bytes_written += other.bytes_written;
+        self.flips_committed += other.flips_committed;
+        self.busy_s += other.busy_s;
+    }
 }
 
 /// The functional mixed-cell memory.

@@ -33,6 +33,9 @@
 //! * [`mcaimem`] — the *functional* mixed-cell memory: real bytes, real
 //!   bit-planes, physical 0→1 flips on the eDRAM plane, refresh-by-read.
 //! * [`rram`] — the non-volatile on-chip-buffer baseline of Fig. 15b.
+//! * [`sharded`] — N independently-clocked bank shards of any backend
+//!   behind one device API: striped addresses, merged meters, staggered
+//!   refresh (the serving tier's banked buffer).
 //!
 //! See EXPERIMENTS.md §Backends for the spec grammar, the trait contract
 //! and the functional-vs-analytic table.
@@ -45,9 +48,11 @@ pub mod energy;
 pub mod mcaimem;
 pub mod refresh;
 pub mod rram;
+pub mod sharded;
 pub mod vref;
 
 pub use backend::{build, BackendSpec, MemoryBackend};
+pub use sharded::ShardedBackend;
 
 /// The embedded-memory kinds the paper compares — the circuit-level
 /// characterization key (see [`backend::BackendSpec`] for the system-level

@@ -1,0 +1,339 @@
+//! Banked serving buffer: stripe any [`BackendSpec`] across N shards.
+//!
+//! The paper's per-macro claims (48 % area, 3.4× energy) deploy, in a real
+//! accelerator, as *banked* buffers behind a serving front-end. This module
+//! scales the buffer *up* without touching the backend zoo: a
+//! [`ShardedBackend`] holds N independently-clocked shards of the same
+//! technology and presents them as one [`MemoryBackend`]:
+//!
+//! * **Striping** — the address space is interleaved at [`STRIPE`]-byte
+//!   granularity (the word-parallel block size, so aligned accesses stay on
+//!   the SWAR fast path inside each shard): global byte `a` lives in shard
+//!   `(a / STRIPE) % n` at local offset `(a / (STRIPE·n))·STRIPE + a %
+//!   STRIPE`. A contiguous store/load fans out round-robin, so traffic —
+//!   and therefore dynamic energy — balances across shards.
+//! * **Independent clocks** — each shard advances its own device clock only
+//!   when it is accessed or ticked; `tick` brings all shards to `now`.
+//! * **Merged meters** — every shard charges its own [`EnergyMeter`]; the
+//!   trait-level [`MemoryBackend::meter`] is the field-wise sum, refreshed
+//!   after every mutating call, and [`MemoryBackend::shard_meters`] exposes
+//!   the per-shard break-down for serving stats. Striping conserves bytes
+//!   and data values, so the merged meter matches an unsharded array of the
+//!   same total capacity on identical traffic (within the statistical
+//!   wobble of per-shard weak-cell populations — tested to 1 %).
+//! * **Staggered refresh** — one manager-driven refresh slot maps to row
+//!   `(row + shard·rows/n) mod rows` in each shard, so no two shards
+//!   refresh the same row index in the same slot: refresh current draw is
+//!   spread evenly across the banks instead of pulsing the whole macro.
+
+use anyhow::{bail, Result};
+
+use super::backend::{self, BackendSpec, MemoryBackend};
+use super::energy::EnergyCard;
+use super::mcaimem::EnergyMeter;
+use crate::util::rng::shard_seeds;
+
+/// Striping granularity (bytes): the word-parallel block size, so aligned
+/// traffic stays block-aligned inside every shard.
+pub const STRIPE: usize = 64;
+
+/// N independently-clocked shards of one backend technology behind the
+/// single-array device API.
+pub struct ShardedBackend {
+    spec: BackendSpec,
+    shards: Vec<Box<dyn MemoryBackend>>,
+    /// Field-wise sum of the shard meters, refreshed after every mutating
+    /// call (so `meter()` can hand out a plain reference).
+    merged: EnergyMeter,
+    card: EnergyCard,
+    shard_capacity: usize,
+}
+
+impl ShardedBackend {
+    /// Build `n` shards of `spec`, `bytes` total (each shard gets
+    /// `bytes / n`, rounded up to whole banks by the backend factory).
+    /// Shard seeds derive deterministically from `seed`, so each shard has
+    /// its own weak-cell population — as N physically distinct banks would.
+    pub fn new(spec: &BackendSpec, n: usize, bytes: usize, seed: u64) -> Result<Self> {
+        if n == 0 {
+            bail!("sharded backend needs at least one shard");
+        }
+        if bytes % n != 0 {
+            bail!("buffer bytes {bytes} not divisible by {n} shards");
+        }
+        // the striped address map is a bijection only when every shard is
+        // a whole number of stripes
+        if (bytes / n) % STRIPE != 0 {
+            bail!(
+                "shard size {} is not a multiple of the {STRIPE}-byte stripe",
+                bytes / n
+            );
+        }
+        let seeds = shard_seeds(seed, n);
+        let shards: Vec<Box<dyn MemoryBackend>> =
+            seeds.iter().map(|&s| backend::build(spec, bytes / n, s)).collect();
+        let shard_capacity = shards[0].capacity();
+        let mut b = ShardedBackend {
+            spec: *spec,
+            shards,
+            merged: EnergyMeter::default(),
+            card: spec.energy_card(),
+            shard_capacity,
+        };
+        b.remerge();
+        Ok(b)
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn remerge(&mut self) {
+        let mut m = EnergyMeter::default();
+        for s in &self.shards {
+            m.merge(s.meter());
+        }
+        self.merged = m;
+    }
+
+    /// Walk a global `[addr, addr+len)` range as (shard, local_addr,
+    /// global_offset, chunk_len) stripe pieces.
+    fn chunks(&self, addr: usize, len: usize) -> impl Iterator<Item = (usize, usize, usize, usize)> {
+        let n = self.shards.len();
+        let mut a = addr;
+        let end = addr + len;
+        std::iter::from_fn(move || {
+            if a >= end {
+                return None;
+            }
+            let block = a / STRIPE;
+            let lane = a % STRIPE;
+            let shard = block % n;
+            let local = (block / n) * STRIPE + lane;
+            let take = (STRIPE - lane).min(end - a);
+            let piece = (shard, local, a - addr, take);
+            a += take;
+            Some(piece)
+        })
+    }
+}
+
+impl MemoryBackend for ShardedBackend {
+    fn spec(&self) -> BackendSpec {
+        self.spec
+    }
+
+    fn capacity(&self) -> usize {
+        self.shard_capacity * self.shards.len()
+    }
+
+    fn now(&self) -> f64 {
+        // shards are independently clocked; the array-level clock is the
+        // furthest-advanced shard
+        self.shards.iter().map(|s| s.now()).fold(0.0, f64::max)
+    }
+
+    fn store(&mut self, addr: usize, data: &[u8], now: f64) {
+        assert!(addr + data.len() <= self.capacity(), "write out of range");
+        let pieces: Vec<_> = self.chunks(addr, data.len()).collect();
+        for (shard, local, off, len) in pieces {
+            self.shards[shard].store(local, &data[off..off + len], now);
+        }
+        self.remerge();
+    }
+
+    fn load(&mut self, addr: usize, len: usize, now: f64) -> Vec<u8> {
+        assert!(addr + len <= self.capacity(), "read out of range");
+        let mut out = vec![0u8; len];
+        let pieces: Vec<_> = self.chunks(addr, len).collect();
+        for (shard, local, off, clen) in pieces {
+            let piece = self.shards[shard].load(local, clen, now);
+            out[off..off + clen].copy_from_slice(&piece);
+        }
+        self.remerge();
+        out
+    }
+
+    fn tick(&mut self, now: f64) {
+        for s in &mut self.shards {
+            s.tick(now);
+        }
+        self.remerge();
+    }
+
+    fn refresh_due(&self) -> Option<f64> {
+        self.shards[0].refresh_due()
+    }
+
+    /// One manager slot refreshes a *different* row in every shard
+    /// (staggered by `rows/n`), so the whole array still turns over within
+    /// one refresh period but no two shards pulse the same row index in
+    /// the same slot.
+    fn refresh_row(&mut self, row: usize, now: f64) {
+        let rows = self.rows_per_bank();
+        let n = self.shards.len();
+        let phase = (rows / n).max(1);
+        for (i, s) in self.shards.iter_mut().enumerate() {
+            s.refresh_row((row + i * phase) % rows, now);
+        }
+        self.remerge();
+    }
+
+    fn rows_per_bank(&self) -> usize {
+        self.shards[0].rows_per_bank()
+    }
+
+    fn meter(&self) -> &EnergyMeter {
+        &self.merged
+    }
+
+    fn shard_meters(&self) -> Vec<EnergyMeter> {
+        self.shards.iter().map(|s| s.meter().clone()).collect()
+    }
+
+    fn energy_card(&self) -> &EnergyCard {
+        &self.card
+    }
+
+    fn label(&self) -> String {
+        format!("{}×{}", self.spec.label(), self.shards.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drive(mem: &mut dyn MemoryBackend, seed: u64) -> Vec<u8> {
+        // a deterministic mixed workload: aligned + unaligned stores/loads
+        // with interleaved ticks
+        let mut rng = crate::util::rng::Pcg64::new(seed);
+        let mut t = 0.0;
+        let mut echo = Vec::new();
+        for i in 0..40 {
+            let len = [64usize, 256, 100, 1024][i % 4];
+            let addr = (i * 977) % (mem.capacity() - len);
+            let data: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+            t += 1e-6;
+            mem.store(addr, &data, t);
+            t += 1e-6;
+            echo.extend(mem.load(addr, len, t));
+            mem.tick(t + 0.5e-6);
+            t += 0.5e-6;
+        }
+        echo
+    }
+
+    #[test]
+    fn striping_roundtrips_bytes_exactly() {
+        for spec in [BackendSpec::Sram, BackendSpec::mcaimem_default()] {
+            let mut sh = ShardedBackend::new(&spec, 4, 64 * 1024, 9).unwrap();
+            let data: Vec<u8> = (0..997).map(|i| (i * 31) as u8).collect();
+            sh.store(129, &data, 1e-6); // deliberately unaligned
+            assert_eq!(sh.load(129, data.len(), 2e-6), data, "{spec}");
+            assert_eq!(sh.meter().bytes_written, 997);
+            assert_eq!(sh.meter().bytes_read, 997);
+        }
+    }
+
+    #[test]
+    fn address_map_is_a_bijection() {
+        // every global address maps to a unique (shard, local) slot and
+        // chunks tile the range exactly
+        let sh = ShardedBackend::new(&BackendSpec::Sram, 4, 64 * 1024, 1).unwrap();
+        let mut seen = std::collections::BTreeSet::new();
+        for a in 0..4096usize {
+            let pieces: Vec<_> = sh.chunks(a, 1).collect();
+            assert_eq!(pieces.len(), 1);
+            let (shard, local, off, len) = pieces[0];
+            assert_eq!((off, len), (0, 1));
+            assert!(local < sh.shard_capacity);
+            assert!(seen.insert((shard, local)), "alias at {a}");
+        }
+        // one full-stripe-width range covers all shards evenly
+        let pieces: Vec<_> = sh.chunks(0, 4 * STRIPE).collect();
+        let shards: Vec<usize> = pieces.iter().map(|p| p.0).collect();
+        assert_eq!(shards, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn merged_meter_matches_unsharded_within_1pct() {
+        for spec in
+            [BackendSpec::Sram, BackendSpec::Edram2t, BackendSpec::Rram, BackendSpec::mcaimem_default()]
+        {
+            let mut flat = backend::build(&spec, 64 * 1024, 7);
+            let mut sh = ShardedBackend::new(&spec, 4, 64 * 1024, 7).unwrap();
+            assert_eq!(flat.capacity(), sh.capacity(), "{spec}");
+            let a = drive(flat.as_mut(), 33);
+            let b = drive(&mut sh, 33);
+            // data round-trips identically except for mcaimem's per-cell
+            // weak-bit wobble (different shard seeds → different corners)
+            if !matches!(spec, BackendSpec::Mcaimem { .. }) {
+                assert_eq!(a, b, "{spec}");
+            }
+            let (fm, sm) = (flat.meter(), sh.meter());
+            assert_eq!(fm.bytes_written, sm.bytes_written, "{spec}");
+            assert_eq!(fm.bytes_read, sm.bytes_read, "{spec}");
+            let rel = (fm.total_j() - sm.total_j()).abs() / fm.total_j().max(1e-30);
+            assert!(rel < 0.01, "{spec}: flat={} sharded={} rel={rel}", fm.total_j(), sm.total_j());
+        }
+    }
+
+    #[test]
+    fn shard_meters_sum_to_the_merged_meter() {
+        let mut sh = ShardedBackend::new(&BackendSpec::mcaimem_default(), 4, 64 * 1024, 3).unwrap();
+        let _ = drive(&mut sh, 5);
+        let per = sh.shard_meters();
+        assert_eq!(per.len(), 4);
+        let mut sum = EnergyMeter::default();
+        for m in &per {
+            sum.merge(m);
+        }
+        assert!((sum.total_j() - sh.meter().total_j()).abs() < 1e-18);
+        assert_eq!(sum.bytes_written, sh.meter().bytes_written);
+        // striping balances traffic: no shard is starved
+        for m in &per {
+            assert!(m.bytes_written > 0, "striping must spread writes");
+        }
+    }
+
+    #[test]
+    fn refresh_is_staggered_across_shards() {
+        let mut sh = ShardedBackend::new(&BackendSpec::mcaimem_default(), 4, 64 * 1024, 3).unwrap();
+        assert!(sh.refresh_due().is_some());
+        let rows = sh.rows_per_bank();
+        // slot 0 must hit 4 distinct row indices: 0, 64, 128, 192 for 256
+        // rows / 4 shards
+        let phase = rows / 4;
+        let expect: Vec<usize> = (0..4).map(|i| (i * phase) % rows).collect();
+        let distinct: std::collections::BTreeSet<_> = expect.iter().collect();
+        assert_eq!(distinct.len(), 4, "stagger phases collide");
+        let before = sh.shard_meters();
+        sh.refresh_row(0, 1e-6);
+        let after = sh.shard_meters();
+        for (b, a) in before.iter().zip(&after) {
+            assert_eq!(a.refreshes, b.refreshes + 1, "every shard refreshes each slot");
+        }
+    }
+
+    #[test]
+    fn shards_are_independently_clocked() {
+        let mut sh = ShardedBackend::new(&BackendSpec::Sram, 2, 32 * 1024, 1).unwrap();
+        // an access touching only shard 0 (first stripe) advances only its
+        // clock
+        sh.store(0, &[1u8; 16], 5e-6);
+        assert_eq!(sh.shards[0].now(), 5e-6);
+        assert_eq!(sh.shards[1].now(), 0.0);
+        assert_eq!(sh.now(), 5e-6);
+        sh.tick(7e-6);
+        assert_eq!(sh.shards[1].now(), 7e-6);
+    }
+
+    #[test]
+    fn bad_geometry_is_a_clean_error() {
+        assert!(ShardedBackend::new(&BackendSpec::Sram, 0, 64 * 1024, 1).is_err());
+        assert!(ShardedBackend::new(&BackendSpec::Sram, 3, 64 * 1024 + 1, 1).is_err());
+        // divisible by n but shard size not a whole number of stripes
+        assert!(ShardedBackend::new(&BackendSpec::Sram, 2, 192, 1).is_err());
+    }
+}

@@ -7,6 +7,7 @@
 pub mod ablations;
 pub mod circuit_reports;
 pub mod fig11;
+pub mod serving;
 pub mod system_reports;
 
 use std::path::Path;

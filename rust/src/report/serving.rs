@@ -1,0 +1,167 @@
+//! Serving-tier read-outs: pool statistics tables and the saturation
+//! sweep (workers × shards → sustained req/s).
+//!
+//! The sweep is the system-level counterpart of the paper's per-macro
+//! claims: it measures how far the banked buffer + worker pool scales the
+//! serving rate on one host, and it is what CI/benches print to check the
+//! ≥3× scaling of `--shards 4 --workers 4` over `--shards 1 --workers 1`.
+
+use crate::coordinator::loadgen::{self, Arrival, LoadConfig};
+use crate::coordinator::pool::{PoolConfig, WorkerPool};
+use crate::coordinator::server::ServerStats;
+use crate::mem::backend::BackendSpec;
+use crate::util::table::{fnum, Table};
+use crate::Result;
+
+/// Render the tier-level stats block (one row) plus the per-shard
+/// break-down.
+pub fn stats_tables(stats: &ServerStats) -> Vec<Table> {
+    let mut summary = Table::new(
+        "serving-tier statistics",
+        &[
+            "requests", "errors", "rejected", "batches", "occupancy", "req/s", "KB/s",
+            "p50 (µs)", "p99 (µs)", "queue p99",
+        ],
+    );
+    summary.row(vec![
+        stats.requests.to_string(),
+        stats.errors.to_string(),
+        stats.rejected.to_string(),
+        stats.batches.to_string(),
+        fnum(stats.occupancy, 3),
+        fnum(stats.requests_per_s, 0),
+        fnum(stats.bytes_per_s / 1024.0, 1),
+        fnum(stats.p50_latency_us, 0),
+        fnum(stats.p99_latency_us, 0),
+        fnum(stats.queue_depth_p99, 1),
+    ]);
+    let mut out = vec![summary];
+    if !stats.shards.is_empty() {
+        let mut t = Table::new(
+            "per-shard break-down (striping should balance occupancy at ~1/N)",
+            &["shard", "worker", "bytes r+w", "occupancy", "refresh ops", "energy (µJ)"],
+        );
+        for s in &stats.shards {
+            t.row(vec![
+                s.shard.to_string(),
+                s.worker.to_string(),
+                s.bytes_rw.to_string(),
+                fnum(s.occupancy, 3),
+                s.refreshes.to_string(),
+                fnum(s.energy_j * 1e6, 3),
+            ]);
+        }
+        out.push(t);
+    }
+    out
+}
+
+/// One point of the saturation sweep.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub workers: usize,
+    pub shards: usize,
+    pub achieved_rps: f64,
+    pub p99_latency_us: f64,
+    pub rejected: u64,
+    /// Speedup over the (1, 1) single-worker/single-shard point.
+    pub speedup: f64,
+}
+
+/// Closed-loop saturation sweep: for each (workers, shards) combo, drive
+/// the tier with `4 × workers` clients for `requests` requests and record
+/// the sustained req/s. Returns the rendered table plus the raw points
+/// (the first combo is the speedup baseline).
+pub fn saturation_sweep(
+    backend: &BackendSpec,
+    combos: &[(usize, usize)],
+    requests: usize,
+    seed: u64,
+) -> Result<(Table, Vec<SweepPoint>)> {
+    let mut t = Table::new(
+        &format!("saturation sweep — {} (closed loop, sustained req/s)", backend.label()),
+        &["workers", "shards", "req/s", "p99 (µs)", "rejected", "speedup vs 1×1"],
+    );
+    let mut points: Vec<SweepPoint> = Vec::with_capacity(combos.len());
+    for &(workers, shards) in combos {
+        let cfg = PoolConfig {
+            backend: *backend,
+            workers,
+            shards,
+            buffer_bytes: shards * 64 * 1024,
+            seed,
+            ..PoolConfig::default()
+        };
+        let pool = WorkerPool::start(cfg)?;
+        let load = LoadConfig {
+            arrival: Arrival::ClosedLoop { clients: 4 * workers },
+            requests,
+            seed,
+            ..LoadConfig::default()
+        };
+        let report = loadgen::run(&pool, &load);
+        let _ = pool.shutdown();
+        let base = points.first().map(|p: &SweepPoint| p.achieved_rps).unwrap_or(0.0);
+        let speedup =
+            if base > 0.0 { report.achieved_rps / base } else { 1.0 };
+        t.row(vec![
+            workers.to_string(),
+            shards.to_string(),
+            fnum(report.achieved_rps, 0),
+            fnum(report.p99_latency_us, 0),
+            report.rejected.to_string(),
+            format!("{}x", fnum(speedup, 2)),
+        ]);
+        points.push(SweepPoint {
+            workers,
+            shards,
+            achieved_rps: report.achieved_rps,
+            p99_latency_us: report.p99_latency_us,
+            rejected: report.rejected,
+            speedup,
+        });
+    }
+    Ok((t, points))
+}
+
+/// The default sweep grid: single worker, scale workers+shards together.
+pub const DEFAULT_SWEEP: [(usize, usize); 4] = [(1, 1), (2, 2), (4, 4), (4, 8)];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::server::ShardStat;
+
+    #[test]
+    fn stats_tables_render_shard_rows() {
+        let mut m = crate::coordinator::metrics::Metrics::default();
+        m.record_latency(std::time::Duration::from_micros(100));
+        m.record_batch(1, 4);
+        let mut stats = ServerStats::from_metrics(&m);
+        stats.shards = vec![ShardStat {
+            shard: 0,
+            worker: 0,
+            bytes_rw: 1024,
+            occupancy: 1.0,
+            refreshes: 3,
+            energy_j: 1e-6,
+        }];
+        stats.rejected = 7;
+        let tables = stats_tables(&stats);
+        assert_eq!(tables.len(), 2);
+        let rendered = tables[1].render();
+        assert!(rendered.contains("1024"), "{rendered}");
+        assert!(tables[0].render().contains('7'));
+    }
+
+    #[test]
+    fn tiny_sweep_produces_monotone_points() {
+        // smallest possible sweep — just proves the plumbing end-to-end
+        let (t, points) =
+            saturation_sweep(&BackendSpec::Sram, &[(1, 1)], 24, 3).unwrap();
+        assert_eq!(points.len(), 1);
+        assert!(points[0].achieved_rps > 0.0);
+        assert!((points[0].speedup - 1.0).abs() < 1e-12);
+        assert!(t.render().contains("req/s"));
+    }
+}

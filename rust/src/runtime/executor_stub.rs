@@ -1,5 +1,7 @@
-//! Stub executor used when the crate is built **without** the `pjrt`
-//! feature (the offline `xla` crate is not vendored into this tree).
+//! Stub executor used whenever real PJRT execution is not available:
+//! built without the `pjrt` feature, or with it but without the offline
+//! `xla` crate wired in (`mcaimem_xla` cfg — see `rust/build.rs`; the
+//! crate is not vendored into this tree).
 //!
 //! The public surface mirrors `executor.rs` exactly — [`Executor`],
 //! [`ModelRunner`] with its `artifacts` field and methods (taking the same
@@ -16,8 +18,9 @@ use super::artifact::Artifacts;
 use crate::mem::backend::BackendSpec;
 use crate::util::rng::Pcg64;
 
-const UNAVAILABLE: &str = "built without the `pjrt` feature: PJRT execution is unavailable \
-     (enable `--features pjrt` with the offline `xla` crate to run AOT artifacts)";
+const UNAVAILABLE: &str = "PJRT execution is unavailable in this build \
+     (enable `--features pjrt` AND wire the offline `xla` crate via \
+     MCAIMEM_XLA_DIR + a path dependency to run AOT artifacts)";
 
 /// Stub of the PJRT CPU client wrapper.
 pub struct Executor;

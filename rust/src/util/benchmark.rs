@@ -185,6 +185,113 @@ impl BenchSuite {
     }
 }
 
+impl BenchSuite {
+    /// Parse a `BENCH_<suite>.json` file back into a suite (the baseline
+    /// side of [`compare`]).
+    pub fn load_json(path: &Path) -> crate::Result<BenchSuite> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        let j = Json::parse(&text)?;
+        let suite = j.get("suite")?.as_str().unwrap_or("unknown").to_string();
+        let mut results = Vec::new();
+        for r in j.get("results")?.as_arr().unwrap_or(&[]) {
+            results.push(BenchResult {
+                name: r.get("name")?.as_str().unwrap_or_default().to_string(),
+                iters: r.get("iters")?.as_usize().unwrap_or(0),
+                mean_ns: r.get("ns_per_iter")?.as_f64().unwrap_or(0.0),
+                p50_ns: r.get("p50_ns")?.as_f64().unwrap_or(0.0),
+                min_ns: r.get("min_ns")?.as_f64().unwrap_or(0.0),
+                elems: r.get("elems").ok().and_then(|e| e.as_f64()),
+            });
+        }
+        Ok(BenchSuite { suite, results })
+    }
+}
+
+/// One baseline-vs-current pair in a [`CompareReport`].
+#[derive(Clone, Debug)]
+pub struct BenchDelta {
+    pub name: String,
+    pub base_ns: f64,
+    pub cur_ns: f64,
+}
+
+impl BenchDelta {
+    /// Signed change in mean ns/iter: positive = slower than baseline.
+    pub fn pct(&self) -> f64 {
+        if self.base_ns <= 0.0 {
+            return 0.0;
+        }
+        (self.cur_ns - self.base_ns) / self.base_ns * 100.0
+    }
+}
+
+/// Baseline-vs-current comparison — the CI bench-regression gate.
+#[derive(Clone, Debug, Default)]
+pub struct CompareReport {
+    pub deltas: Vec<BenchDelta>,
+    /// Benches present in the baseline but not the current run.
+    pub missing: Vec<String>,
+    /// Benches present only in the current run (new, ungated).
+    pub added: Vec<String>,
+}
+
+impl CompareReport {
+    /// Deltas slower than `pct` percent among benches whose name matches
+    /// `filter` — the gate condition. Regressions only; speedups pass.
+    pub fn regressions<'a>(
+        &'a self,
+        pct: f64,
+        filter: impl Fn(&str) -> bool + 'a,
+    ) -> Vec<&'a BenchDelta> {
+        self.deltas.iter().filter(|d| filter(&d.name) && d.pct() > pct).collect()
+    }
+
+    /// The delta table, markdown-formatted (rendered into the CI job
+    /// summary).
+    pub fn markdown(&self) -> String {
+        let mut s = String::from("| bench | baseline ns | current ns | delta |\n|---|---:|---:|---:|\n");
+        for d in &self.deltas {
+            s.push_str(&format!(
+                "| {} | {:.0} | {:.0} | {}{:.1}% |\n",
+                d.name,
+                d.base_ns,
+                d.cur_ns,
+                if d.pct() > 0.0 { "+" } else { "" },
+                d.pct()
+            ));
+        }
+        for m in &self.missing {
+            s.push_str(&format!("| {m} | — | *missing from current run* | |\n"));
+        }
+        for a in &self.added {
+            s.push_str(&format!("| {a} | *new* | | |\n"));
+        }
+        s
+    }
+}
+
+/// Pair up baseline and current results by bench name.
+pub fn compare(baseline: &BenchSuite, current: &BenchSuite) -> CompareReport {
+    let mut report = CompareReport::default();
+    for b in &baseline.results {
+        match current.results.iter().find(|c| c.name == b.name) {
+            Some(c) => report.deltas.push(BenchDelta {
+                name: b.name.clone(),
+                base_ns: b.mean_ns,
+                cur_ns: c.mean_ns,
+            }),
+            None => report.missing.push(b.name.clone()),
+        }
+    }
+    for c in &current.results {
+        if !baseline.results.iter().any(|b| b.name == c.name) {
+            report.added.push(c.name.clone());
+        }
+    }
+    report
+}
+
 /// Like [`bench`] but annotates elements/iteration for throughput.
 pub fn bench_throughput<T>(
     name: &str,
@@ -215,6 +322,67 @@ mod tests {
         let r = bench_throughput("thr", 1, 8, 1000.0, || 42u64);
         assert!(r.report().contains("Melem/s"));
         assert!(r.elems_per_s().unwrap() > 0.0);
+    }
+
+    fn res(name: &str, mean_ns: f64) -> BenchResult {
+        BenchResult {
+            name: name.into(),
+            iters: 4,
+            mean_ns,
+            p50_ns: mean_ns,
+            min_ns: mean_ns * 0.9,
+            elems: None,
+        }
+    }
+
+    #[test]
+    fn compare_flags_regressions_not_speedups() {
+        let mut base = BenchSuite::new("hotpath");
+        base.record(res("mem::write 16KB (word-parallel)", 100.0));
+        base.record(res("mem::read 16KB (fresh, word-parallel)", 100.0));
+        base.record(res("rng::next_u64 ×1M", 50.0));
+        base.record(res("gone", 10.0));
+        let mut cur = BenchSuite::new("hotpath");
+        cur.record(res("mem::write 16KB (word-parallel)", 120.0)); // +20% — regression
+        cur.record(res("mem::read 16KB (fresh, word-parallel)", 80.0)); // −20% — speedup
+        cur.record(res("rng::next_u64 ×1M", 200.0)); // +300% but filtered out
+        cur.record(res("brand-new", 1.0));
+        let rep = compare(&base, &cur);
+        assert_eq!(rep.deltas.len(), 3);
+        assert_eq!(rep.missing, vec!["gone".to_string()]);
+        assert_eq!(rep.added, vec!["brand-new".to_string()]);
+        let gate = rep.regressions(15.0, |n| n.contains("word-parallel"));
+        assert_eq!(gate.len(), 1, "only the write regression trips the gate");
+        assert_eq!(gate[0].name, "mem::write 16KB (word-parallel)");
+        assert!((gate[0].pct() - 20.0).abs() < 1e-9);
+        // within tolerance passes
+        assert!(rep.regressions(25.0, |n| n.contains("word-parallel")).is_empty());
+        let md = rep.markdown();
+        assert!(md.contains("+20.0%"), "{md}");
+        assert!(md.contains("missing from current run"), "{md}");
+    }
+
+    #[test]
+    fn suite_json_loads_back_for_comparison() {
+        let mut suite = BenchSuite::new("gatesuite");
+        suite.record(BenchResult {
+            name: "x".into(),
+            iters: 8,
+            mean_ns: 123.0,
+            p50_ns: 120.0,
+            min_ns: 110.0,
+            elems: Some(64.0),
+        });
+        let dir = std::env::temp_dir();
+        let path = suite.write_json(&dir).unwrap();
+        let back = BenchSuite::load_json(&path).unwrap();
+        assert_eq!(back.suite, "gatesuite");
+        assert_eq!(back.results.len(), 1);
+        assert_eq!(back.results[0].mean_ns, 123.0);
+        assert_eq!(back.results[0].elems, Some(64.0));
+        let rep = compare(&suite, &back);
+        assert!(rep.regressions(0.0, |_| true).is_empty());
+        let _ = std::fs::remove_file(path);
     }
 
     #[test]
