@@ -1,0 +1,76 @@
+"""Generate checked-in fixture vectors for the Pallas<->Rust inject cross-check.
+
+Runs the L1 Pallas retention-injection kernels (``inject.inject_raw`` and
+``inject.mcaimem_store``, interpret=True on CPU) over deterministic inputs
+and writes ``rust/tests/fixtures/inject_fixtures.json``. The Rust side
+(``rust/tests/inject_fixtures.rs``) replays the same transform through
+``inject::apply_flip_mask`` / ``inject::inject_with_mask`` and asserts
+byte-identical outputs — no Python needed at test time.
+
+Cases cover every stored byte value (x = 0..255 as int8) against structured
+masks (all-zeros, all-ones = 0x7f, alternating bits) plus seeded random
+vectors, so both the "0->1 only, 7 eDRAM bits only" clipping and the
+encode->inject->decode composition are pinned.
+
+Usage:  python python/compile/kernels/gen_inject_fixtures.py
+"""
+
+import json
+import pathlib
+import sys
+
+import numpy as np
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+import jax.numpy as jnp  # noqa: E402
+
+from kernels import inject  # noqa: E402
+
+OUT = pathlib.Path(__file__).resolve().parents[3] / "rust" / "tests" / "fixtures"
+
+
+def _case(name, x, mask):
+    x = np.asarray(x, dtype=np.int8)
+    mask = np.asarray(mask, dtype=np.int8)
+    assert np.all((mask.astype(np.uint8) & 0x80) == 0), "masks carry 7 low bits only"
+    raw = np.asarray(inject.inject_raw(jnp.asarray(x), jnp.asarray(mask)))
+    store = np.asarray(inject.mcaimem_store(jnp.asarray(x), jnp.asarray(mask)))
+    return {
+        "name": name,
+        "x": x.tolist(),
+        "mask": mask.tolist(),
+        "raw": raw.astype(np.int8).tolist(),
+        "store": store.astype(np.int8).tolist(),
+    }
+
+
+def main():
+    rng = np.random.default_rng(0xF1B5)
+    all_bytes = np.arange(256, dtype=np.uint8).astype(np.int8)
+    cases = [
+        _case("all-bytes/mask-zero", all_bytes, np.zeros(256, dtype=np.int8)),
+        _case("all-bytes/mask-full", all_bytes, np.full(256, 0x7F, dtype=np.int8)),
+        _case("all-bytes/mask-odd-bits", all_bytes, np.full(256, 0x55, dtype=np.int8)),
+        _case("all-bytes/mask-even-bits", all_bytes, np.full(256, 0x2A, dtype=np.int8)),
+    ]
+    for i in range(4):
+        n = int(rng.integers(100, 1000))
+        x = rng.integers(-128, 128, size=n).astype(np.int8)
+        mask = (rng.integers(0, 256, size=n) & 0x7F).astype(np.int8)
+        cases.append(_case(f"random-{i}", x, mask))
+
+    fixtures = {
+        "generator": "python/compile/kernels/gen_inject_fixtures.py "
+        "(Pallas inject_raw / mcaimem_store, interpret=True)",
+        "kernel": "aged = stored | (mask & ~stored & 0x7f)",
+        "cases": cases,
+    }
+    OUT.mkdir(parents=True, exist_ok=True)
+    path = OUT / "inject_fixtures.json"
+    path.write_text(json.dumps(fixtures, indent=1) + "\n")
+    print(f"wrote {path} ({len(cases)} cases)")
+
+
+if __name__ == "__main__":
+    main()

@@ -11,7 +11,9 @@
 //! bench regresses by more than `--gate-pct` (default 15) percent — the CI
 //! bench-regression gate. The delta table is printed, and appended to
 //! `$GITHUB_STEP_SUMMARY` when that is set. An empty baseline (the
-//! toolchain-less placeholder) skips the gate with a note.
+//! toolchain-less placeholder) skips the gate with a note, and a
+//! *partially* empty one (entries without measurements, or benches the
+//! baseline lacks) skips just those entries with a note.
 
 use mcaimem::mem::bitplane;
 use mcaimem::mem::mcaimem::MixedCellMemory;
@@ -182,12 +184,32 @@ fn main() {
             report.markdown()
         );
         println!("{md}");
+        // the job summary gets the table before ANY gate verdict, so every
+        // failure mode (regression or schema drift) is diagnosable from CI
         if let Ok(summary) = std::env::var("GITHUB_STEP_SUMMARY") {
             use std::io::Write;
             if let Ok(mut f) = std::fs::OpenOptions::new().append(true).create(true).open(summary)
             {
                 let _ = writeln!(f, "{md}");
             }
+        }
+        // entries the gate could not judge (placeholder baseline rows,
+        // benches missing from this run) skip with a note, like the fully
+        // empty baseline does — never a hard failure
+        if let Some(note) = report.skip_note() {
+            println!("{note}");
+        }
+        // a non-empty baseline where NOTHING could be judged is not a
+        // partial placeholder — it's schema drift (renamed fields, renamed
+        // benches) and must fail loudly rather than silently disable the
+        // gate
+        if report.deltas.is_empty() {
+            eprintln!(
+                "bench gate FAIL: baseline {path} has {} entries but none could be compared \
+                 (all skipped/missing) — schema drift? regenerate the baseline",
+                baseline.results.len()
+            );
+            std::process::exit(1);
         }
         let bad = report.regressions(gate_pct, |n| n.contains("word-parallel"));
         if !bad.is_empty() {

@@ -9,6 +9,7 @@
 //! mcaimem fig11 [--artifacts DIR] [--quick]
 //! mcaimem simulate --network NAME [--platform eyeriss|tpuv1] [--backend SPECS]
 //! mcaimem serve [--backend SPEC] [--shards N] [--workers K] [--target-rps R] [--sweep]
+//! mcaimem conform [--backend SPECS] [--ops N] [--seed S] [--quick] [--replay FILE]
 //! mcaimem selftest [--artifacts DIR]
 //! ```
 

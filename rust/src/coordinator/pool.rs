@@ -303,7 +303,8 @@ impl WorkerPool {
     }
 
     /// Start with one pre-built engine per worker (tests inject failing or
-    /// gated engines here).
+    /// gated engines here). Builds each worker's sharded buffer slice from
+    /// the config and delegates to [`Self::start_with_buffers`].
     pub fn start_with_engines(
         cfg: PoolConfig,
         engines: Vec<Box<dyn InferEngine>>,
@@ -311,6 +312,8 @@ impl WorkerPool {
         if cfg.workers == 0 {
             bail!("pool needs at least one worker");
         }
+        // fast-fail before paying per-worker buffer construction (mcaimem
+        // backends sample O(capacity) leakage corners per worker)
         if engines.len() != cfg.workers {
             bail!("{} engines for {} workers", engines.len(), cfg.workers);
         }
@@ -324,6 +327,42 @@ impl WorkerPool {
         if cfg.buffer_bytes % cfg.shards != 0 {
             bail!("buffer bytes {} not divisible by {} shards", cfg.buffer_bytes, cfg.shards);
         }
+        // deal shards to workers: shards/workers each, remainder to the
+        // first workers
+        let base = cfg.shards / cfg.workers;
+        let rem = cfg.shards % cfg.workers;
+        let shard_bytes = cfg.buffer_bytes / cfg.shards;
+        let seeds = shard_seeds(cfg.seed, cfg.workers);
+        let buffers = (0..cfg.workers)
+            .map(|k| {
+                let n_k = base + usize::from(k < rem);
+                BufferManager::sharded(&cfg.backend, n_k, n_k * shard_bytes, seeds[k])
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Self::start_with_buffers(cfg, engines, buffers)
+    }
+
+    /// Start with one pre-built engine AND buffer manager per worker — the
+    /// general form. This is the hook that threads a recording or otherwise
+    /// customized backend through the serving tier unchanged: build each
+    /// worker's buffer over any [`crate::mem::backend::MemoryBackend`]
+    /// (e.g. a [`crate::sim::trace::TracingBackend`]-wrapped shard stripe
+    /// via `BufferManager::from_backend`) and the pool stages its real
+    /// serving traffic through it.
+    pub fn start_with_buffers(
+        cfg: PoolConfig,
+        engines: Vec<Box<dyn InferEngine>>,
+        buffers: Vec<BufferManager>,
+    ) -> Result<WorkerPool> {
+        if cfg.workers == 0 {
+            bail!("pool needs at least one worker");
+        }
+        if engines.len() != cfg.workers {
+            bail!("{} engines for {} workers", engines.len(), cfg.workers);
+        }
+        if buffers.len() != cfg.workers {
+            bail!("{} buffer managers for {} workers", buffers.len(), cfg.workers);
+        }
         let batch = engines[0].batch();
         let shared = Arc::new(Shared {
             queues: (0..cfg.workers).map(|_| Mutex::new(VecDeque::new())).collect(),
@@ -336,16 +375,8 @@ impl WorkerPool {
             rr: AtomicUsize::new(0),
         });
 
-        // deal shards to workers: shards/workers each, remainder to the
-        // first workers
-        let base = cfg.shards / cfg.workers;
-        let rem = cfg.shards % cfg.workers;
-        let shard_bytes = cfg.buffer_bytes / cfg.shards;
-        let seeds = shard_seeds(cfg.seed, cfg.workers);
         let mut workers = Vec::with_capacity(cfg.workers);
-        for (k, engine) in engines.into_iter().enumerate() {
-            let n_k = base + usize::from(k < rem);
-            let bm = BufferManager::sharded(&cfg.backend, n_k, n_k * shard_bytes, seeds[k])?;
+        for (k, (engine, bm)) in engines.into_iter().zip(buffers).enumerate() {
             let need = engine.batch() * engine.dim();
             if bm.capacity() < need {
                 bail!(
@@ -588,6 +619,26 @@ mod tests {
         let mut cfg = quick_cfg(1, 3);
         cfg.buffer_bytes = 100_000;
         assert!(WorkerPool::start_with_engines(cfg, fast_engines(1)).is_err());
+    }
+
+    #[test]
+    fn custom_buffers_thread_through_the_pool() {
+        // the start_with_buffers hook: callers can hand the pool arbitrary
+        // pre-built buffers (how sim::trace records serving traffic)
+        let cfg = quick_cfg(2, 2);
+        let buffers: Vec<BufferManager> = (0..2)
+            .map(|k| BufferManager::from_spec(&BackendSpec::Sram, 16 * 1024, k as u64))
+            .collect();
+        let pool = WorkerPool::start_with_buffers(cfg, fast_engines(2), buffers).unwrap();
+        let (a, _) = pool.classify(vec![3i8; 784]).unwrap();
+        let (b, _) = pool.classify(vec![3i8; 784]).unwrap();
+        assert_eq!(a, b);
+        let stats = pool.shutdown();
+        assert_eq!(stats.requests, 2);
+        // one buffer manager per worker must be enforced
+        let short: Vec<BufferManager> =
+            vec![BufferManager::from_spec(&BackendSpec::Sram, 16 * 1024, 9)];
+        assert!(WorkerPool::start_with_buffers(quick_cfg(2, 2), fast_engines(2), short).is_err());
     }
 
     #[test]

@@ -24,6 +24,37 @@ pub enum Mode {
     WithoutOneEnhancement,
 }
 
+/// Apply a pre-drawn per-bit flip mask to one stored byte — the pure
+/// memory-path transform `aged = stored | (mask & !stored & 0x7f)`, exactly
+/// the Pallas `_inject_kernel` in `python/compile/kernels/inject.py`. Only
+/// 0→1, only the 7 eDRAM bits; the sign plane and every stored 1 absorb
+/// mask hits. [`flip_zeros_byte`] is the probabilistic form (it draws the
+/// mask bit-by-bit); this deterministic form is what the Pallas↔Rust
+/// fixture cross-check in `tests/inject_fixtures.rs` pins.
+#[inline]
+pub fn apply_flip_mask(stored: u8, mask: u8) -> u8 {
+    stored | (mask & !stored & 0x7f)
+}
+
+/// Corrupt a tensor with pre-drawn per-byte flip masks (7 low bits each) —
+/// the deterministic twin of [`inject`], mirroring the Pallas kernels:
+/// `Mode::WithoutOneEnhancement` is `inject_raw`, `Mode::WithOneEnhancement`
+/// is `mcaimem_store` (encode → age in the array → decode).
+pub fn inject_with_mask(data: &mut [i8], masks: &[i8], mode: Mode) {
+    assert_eq!(data.len(), masks.len(), "one mask byte per data byte");
+    for (v, &m) in data.iter_mut().zip(masks) {
+        let stored = match mode {
+            Mode::WithoutOneEnhancement => *v as u8,
+            Mode::WithOneEnhancement => encode_byte(*v as u8),
+        };
+        let aged = apply_flip_mask(stored, m as u8);
+        *v = match mode {
+            Mode::WithoutOneEnhancement => aged as i8,
+            Mode::WithOneEnhancement => decode_byte(aged) as i8,
+        };
+    }
+}
+
 /// Flip each stored 0-bit among the 7 eDRAM bits to 1 with probability `p`.
 #[inline]
 pub fn flip_zeros_byte(stored: u8, p: f64, rng: &mut Pcg64) -> u8 {
@@ -188,6 +219,46 @@ mod tests {
         let e2 = expected_abs_error(3, 0.10, Mode::WithoutOneEnhancement, 8000, 9);
         let e3 = expected_abs_error(3, 0.25, Mode::WithoutOneEnhancement, 8000, 9);
         assert!(e1 < e2 && e2 < e3, "{e1} {e2} {e3}");
+    }
+
+    #[test]
+    fn apply_flip_mask_matches_the_kernel_algebra() {
+        for b in 0..=255u8 {
+            for m in [0x00u8, 0x7f, 0x55, 0x2a, 0x13] {
+                let after = apply_flip_mask(b, m);
+                assert_eq!(after & b, b, "bits may only be added");
+                assert_eq!(after & 0x80, b & 0x80, "sign plane untouched");
+                // hits on stored 1s are absorbed; hits on stored 0s land
+                assert_eq!(after, b | (m & !b & 0x7f));
+            }
+        }
+    }
+
+    #[test]
+    fn flip_zeros_byte_saturates_to_the_full_mask() {
+        // p = 1 must equal the deterministic transform with an all-ones
+        // mask — the bridge between the probabilistic and masked forms
+        let mut rng = Pcg64::new(21);
+        for b in 0..=255u8 {
+            assert_eq!(flip_zeros_byte(b, 1.0, &mut rng), apply_flip_mask(b, 0x7f));
+        }
+    }
+
+    #[test]
+    fn inject_with_mask_modes_compose_like_the_pallas_kernels() {
+        let data: Vec<i8> = (0..=255u8).map(|b| b as i8).collect();
+        let masks = vec![0x29i8; 256];
+        let mut raw = data.clone();
+        inject_with_mask(&mut raw, &masks, Mode::WithoutOneEnhancement);
+        for (&before, &after) in data.iter().zip(&raw) {
+            assert_eq!(after as u8, apply_flip_mask(before as u8, 0x29));
+        }
+        let mut enc = data.clone();
+        inject_with_mask(&mut enc, &masks, Mode::WithOneEnhancement);
+        for (&before, &after) in data.iter().zip(&enc) {
+            let e = encode_byte(before as u8);
+            assert_eq!(after as u8, decode_byte(apply_flip_mask(e, 0x29)));
+        }
     }
 
     #[test]

@@ -20,7 +20,9 @@
 //!
 //! The [`report`] module regenerates every table and figure of the paper's
 //! evaluation; [`coordinator`] hosts the MCAIMem-backed buffer manager,
-//! refresh scheduler and batched inference server.
+//! refresh scheduler and batched inference server; [`sim`] is the
+//! verification backbone — deterministic trace record/replay plus a
+//! golden-model differential oracle (`mcaimem conform`).
 //!
 //! See `DESIGN.md` for the substitution table (what the paper measured on
 //! SPICE/silicon vs. what this repo simulates) and `EXPERIMENTS.md` for
@@ -37,6 +39,7 @@ pub mod mem;
 pub mod report;
 pub mod runtime;
 pub mod scalesim;
+pub mod sim;
 pub mod util;
 
 /// Crate-wide result type (anyhow is the only error crate in the offline set).

@@ -46,6 +46,16 @@ USAGE:
       closed-loop clients (default 4×K). --sweep prints the workers×shards
       saturation sweep instead. PJRT engines are used when --artifacts
       holds an export; otherwise a latency-faithful synthetic engine.
+  mcaimem conform [--backend SPECS] [--ops N] [--seed S] [--shards N]
+                  [--bytes-kb KB] [--no-shrink] [--quick] [--save-dir DIR]
+                  [--replay FILE]
+      seeded randomized conformance campaign: every backend must replay its
+      own recorded trace exactly, and MCAIMem specs must match the golden
+      model (sim::oracle) bit- and meter-exactly — flat and sharded (×N)
+      geometries. Failures shrink (ddmin; disable with --no-shrink) to
+      minimal reproducing traces saved under --save-dir. --quick bounds the
+      run for CI (<30 s). --replay re-runs a saved failure trace (e.g. a
+      CI artifact) locally
   mcaimem selftest [--artifacts DIR]
       cross-check the Rust and Pallas implementations through PJRT
 
@@ -85,9 +95,9 @@ fn run() -> Result<()> {
         &[
             "csv", "artifacts", "network", "platform", "backend", "seed", "requests", "p",
             "window-ms", "shards", "workers", "target-rps", "clients", "high-water",
-            "buffer-kb", "mix",
+            "buffer-kb", "mix", "ops", "bytes-kb", "save-dir", "replay",
         ],
-        &["quick", "help", "sweep", "no-retry"],
+        &["quick", "help", "sweep", "no-retry", "no-shrink"],
     );
     let args = parser.parse(std::env::args().skip(1))?;
     if args.has_flag("help") || args.positionals.is_empty() {
@@ -124,6 +134,7 @@ fn run() -> Result<()> {
         }
         "simulate" => cmd_simulate(&args),
         "serve" => cmd_serve(&args),
+        "conform" => cmd_conform(&args),
         "selftest" => cmd_selftest(&args),
         other => bail!("unknown command `{other}`\n{USAGE}"),
     }
@@ -284,6 +295,84 @@ fn cmd_serve(args: &mcaimem::cli::ParsedArgs) -> Result<()> {
         println!("{}", t.render());
     }
     Ok(())
+}
+
+fn cmd_conform(args: &mcaimem::cli::ParsedArgs) -> Result<()> {
+    use mcaimem::sim::campaign::{verify_oracle, verify_self, CampaignConfig};
+    use mcaimem::sim::trace::Trace;
+
+    // --replay FILE: re-run one saved trace (a CI failure artifact) locally
+    if let Some(file) = args.get("replay") {
+        let trace = Trace::load(std::path::Path::new(file))?;
+        println!(
+            "replaying {} ops against {} ({}){}",
+            trace.entries.len(),
+            trace.spec.label(),
+            if trace.shards == 0 { "flat".to_string() } else { format!("sharded×{}", trace.shards) },
+            if matches!(trace.spec, BackendSpec::Mcaimem { .. }) { " + golden model" } else { "" },
+        );
+        let mut failed = false;
+        let rep = verify_self(&trace)?;
+        match rep.divergence {
+            None => println!("self-replay: exact over {} ops", rep.ops),
+            Some(d) => {
+                failed = true;
+                println!("self-replay DIVERGED at {d}");
+            }
+        }
+        if matches!(trace.spec, BackendSpec::Mcaimem { .. }) {
+            let rep = verify_oracle(&trace)?;
+            match rep.divergence {
+                None => println!("vs oracle: exact over {} ops", rep.ops),
+                Some(d) => {
+                    failed = true;
+                    println!("vs oracle DIVERGED at {d}");
+                }
+            }
+        }
+        if failed {
+            bail!("replay diverged");
+        }
+        return Ok(());
+    }
+
+    let specs = BackendSpec::parse_list(
+        args.get("backend")
+            .unwrap_or("sram,edram2t,rram,mcaimem@0.8,mcaimem@0.7-noenc"),
+    )?;
+    let mut cfg = CampaignConfig {
+        ops: args.get_usize("ops", 20_000)?,
+        seed: args.get_usize("seed", 7)? as u64,
+        bytes: args.get_usize("bytes-kb", 64)? * 1024,
+        shards: args.get_usize("shards", 4)?,
+        // on by default so a failing run always leaves a minimal trace
+        // artifact; --no-shrink skips the (re-record-heavy) minimization
+        // when debugging a long campaign by hand
+        shrink: !args.has_flag("no-shrink"),
+    };
+    if args.has_flag("quick") {
+        cfg = cfg.quick();
+    }
+
+    let (table, outcomes, ok) = mcaimem::report::conformance::conformance(&specs, &cfg)?;
+    println!("{}", table.render());
+    if ok {
+        println!(
+            "conformance OK: {} runs replayed exactly (self + oracle where applicable)",
+            outcomes.len()
+        );
+        return Ok(());
+    }
+    let dir = std::path::PathBuf::from(args.get("save-dir").unwrap_or("."));
+    let written = mcaimem::report::conformance::save_failures(&outcomes, &dir)?;
+    for p in &written {
+        eprintln!(
+            "minimal reproducing trace saved: {} (replay with `mcaimem conform --replay {}`)",
+            p.display(),
+            p.display()
+        );
+    }
+    bail!("conformance FAILED: {} failing run(s)", outcomes.iter().filter(|o| !o.ok()).count());
 }
 
 fn cmd_selftest(args: &mcaimem::cli::ParsedArgs) -> Result<()> {

@@ -112,8 +112,11 @@ pub struct MixedCellMemory {
 }
 
 /// Quantization of the per-cell z-score: q ∈ [0, 255] ↔ z ∈ [−4, 4].
+/// Public because it is part of the *specification* of the per-cell
+/// leakage population: the golden model ([`crate::sim::oracle`]) must
+/// sample bit-identical corners to be a meaningful differential oracle.
 #[inline]
-fn z_to_q(z: f64) -> u8 {
+pub fn z_to_q(z: f64) -> u8 {
     (((z + 4.0) / 8.0 * 255.0).round()).clamp(0.0, 255.0) as u8
 }
 

@@ -37,6 +37,18 @@ use crate::util::rng::shard_seeds;
 /// traffic stays block-aligned inside every shard.
 pub const STRIPE: usize = 64;
 
+/// The row a manager-driven refresh slot `row` maps to in shard `shard` of
+/// `n` shards over `rows` rows per bank: `(row + shard·⌊rows/n⌋) mod rows`.
+/// For every shard this is a rotation of `0..rows` — a bijection — so one
+/// full period of slots refreshes **every row of every shard exactly once**,
+/// including when `rows % n != 0` (the phase need not divide `rows`; any
+/// constant offset rotates the cycle without dropping or doubling a row).
+#[inline]
+pub fn staggered_row(row: usize, shard: usize, rows: usize, n: usize) -> usize {
+    let phase = (rows / n).max(1);
+    (row + shard * phase) % rows
+}
+
 /// N independently-clocked shards of one backend technology behind the
 /// single-array device API.
 pub struct ShardedBackend {
@@ -172,9 +184,8 @@ impl MemoryBackend for ShardedBackend {
     fn refresh_row(&mut self, row: usize, now: f64) {
         let rows = self.rows_per_bank();
         let n = self.shards.len();
-        let phase = (rows / n).max(1);
         for (i, s) in self.shards.iter_mut().enumerate() {
-            s.refresh_row((row + i * phase) % rows, now);
+            s.refresh_row(staggered_row(row, i, rows, n), now);
         }
         self.remerge();
     }
@@ -314,6 +325,50 @@ mod tests {
         for (b, a) in before.iter().zip(&after) {
             assert_eq!(a.refreshes, b.refreshes + 1, "every shard refreshes each slot");
         }
+    }
+
+    #[test]
+    fn stagger_covers_every_row_exactly_once_even_when_rows_dont_divide() {
+        // one full period of manager slots (row = 0..rows) must hit every
+        // row of every shard exactly once — including shard counts that do
+        // NOT divide the 256 rows (the invariant was previously asserted
+        // only in prose). The stagger is a rotation, so any phase works;
+        // this pins it for the awkward counts.
+        let rows = 256;
+        for n in [2usize, 3, 5, 6, 7, 9] {
+            for shard in 0..n {
+                let mut seen = vec![false; rows];
+                for row in 0..rows {
+                    let r = staggered_row(row, shard, rows, n);
+                    assert!(r < rows);
+                    assert!(!seen[r], "n={n} shard={shard}: row {r} refreshed twice");
+                    seen[r] = true;
+                }
+                assert!(seen.iter().all(|&s| s), "n={n} shard={shard}: a row was starved");
+            }
+            // distinct shards refresh distinct rows within one slot while
+            // n <= rows/phase (true for all n <= 16 at 256 rows)
+            let slot0: std::collections::BTreeSet<usize> =
+                (0..n).map(|s| staggered_row(0, s, rows, n)).collect();
+            assert_eq!(slot0.len(), n, "n={n}: stagger phases collide in slot 0");
+        }
+    }
+
+    #[test]
+    fn non_divisible_shard_count_refreshes_through_the_device_api() {
+        // 3 shards × 16 KB: 256 % 3 != 0 — drive one full period of slots
+        // and check every shard saw exactly `rows` refresh ops
+        let spec = BackendSpec::mcaimem_default();
+        let mut sh = ShardedBackend::new(&spec, 3, 48 * 1024, 5).unwrap();
+        let rows = sh.rows_per_bank();
+        let slot = sh.refresh_due().unwrap() / rows as f64;
+        for row in 0..rows {
+            sh.refresh_row(row, (row + 1) as f64 * slot);
+        }
+        for (i, m) in sh.shard_meters().iter().enumerate() {
+            assert_eq!(m.refreshes, rows as u64, "shard {i} must refresh once per slot");
+        }
+        assert_eq!(sh.meter().refreshes, 3 * rows as u64);
     }
 
     #[test]

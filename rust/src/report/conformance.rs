@@ -1,0 +1,110 @@
+//! Conformance campaign report — the table `mcaimem conform` renders.
+//!
+//! One row per (backend, geometry): the generated op mix, whether the
+//! backend replayed its own recorded trace exactly, whether the MCAIMem
+//! specs matched the golden model ([`crate::sim::oracle`]) bit- and
+//! meter-exactly, and — on failure — the size of the shrunk minimal
+//! reproducing trace plus the first divergence. Failing minimal traces are
+//! saved as JSON artifacts so CI uploads them and anyone can replay with
+//! `mcaimem conform --replay <file>`.
+
+use std::path::{Path, PathBuf};
+
+use crate::mem::backend::BackendSpec;
+use crate::sim::campaign::{self, CampaignConfig, SpecOutcome};
+use crate::util::table::Table;
+use crate::Result;
+
+/// Run the campaign over `specs` and render the outcome table. Returns the
+/// table, the raw outcomes, and whether everything passed.
+pub fn conformance(
+    specs: &[BackendSpec],
+    cfg: &CampaignConfig,
+) -> Result<(Table, Vec<SpecOutcome>, bool)> {
+    let outcomes = campaign::run(specs, cfg)?;
+    let mut t = Table::new(
+        &format!(
+            "conformance campaign — {} ops/run, seed {}, {} KB buffers (self-replay + golden-model oracle)",
+            cfg.ops,
+            cfg.seed,
+            cfg.bytes / 1024
+        ),
+        &[
+            "backend",
+            "geometry",
+            "stores",
+            "loads",
+            "ticks",
+            "refreshes",
+            "self-replay",
+            "vs oracle",
+            "failure",
+        ],
+    );
+    let mut all_ok = true;
+    for o in &outcomes {
+        all_ok &= o.ok();
+        let (s, l, k, r) = o.counts;
+        let failure = match o.failures.first() {
+            None => "—".to_string(),
+            Some(f) => format!("{} (minimal {} ops)", f.divergence, f.minimal.entries.len()),
+        };
+        t.row(vec![
+            o.spec.label(),
+            o.geometry(),
+            s.to_string(),
+            l.to_string(),
+            k.to_string(),
+            r.to_string(),
+            if o.self_replay_ok { "exact".into() } else { "DIVERGED".into() },
+            match o.oracle_ok {
+                None => "—".into(),
+                Some(true) => "exact".into(),
+                Some(false) => "DIVERGED".into(),
+            },
+            failure,
+        ]);
+    }
+    Ok((t, outcomes, all_ok))
+}
+
+/// Save every failing minimal trace under `dir` as
+/// `conformance_failure_<spec>_<geometry>_<stage>.json`. Returns the paths
+/// written (empty when everything passed).
+pub fn save_failures(outcomes: &[SpecOutcome], dir: &Path) -> Result<Vec<PathBuf>> {
+    let mut written = Vec::new();
+    for o in outcomes {
+        for f in &o.failures {
+            let name = format!(
+                "conformance_failure_{}_{}_{}.json",
+                o.spec.to_string().replace(['@', '.'], "_"),
+                o.geometry().replace('×', "x"),
+                f.stage
+            );
+            let path = dir.join(name);
+            f.minimal.save(&path)?;
+            written.push(path);
+        }
+    }
+    Ok(written)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_conformance_table_renders_green() {
+        let cfg = CampaignConfig { ops: 80, seed: 3, bytes: 32 * 1024, shards: 2, shrink: false };
+        let specs = [BackendSpec::Sram, BackendSpec::mcaimem_default()];
+        let (table, outcomes, ok) = conformance(&specs, &cfg).unwrap();
+        assert!(ok, "{outcomes:?}");
+        assert_eq!(outcomes.len(), 4, "flat + sharded per spec");
+        let rendered = table.render();
+        assert!(rendered.contains("exact"), "{rendered}");
+        assert!(!rendered.contains("DIVERGED"), "{rendered}");
+        // nothing to save when green
+        let dir = std::env::temp_dir();
+        assert!(save_failures(&outcomes, &dir).unwrap().is_empty());
+    }
+}

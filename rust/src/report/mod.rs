@@ -6,6 +6,7 @@
 
 pub mod ablations;
 pub mod circuit_reports;
+pub mod conformance;
 pub mod fig11;
 pub mod serving;
 pub mod system_reports;

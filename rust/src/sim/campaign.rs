@@ -1,0 +1,474 @@
+//! Seeded randomized conformance campaigns + failure shrinking.
+//!
+//! A campaign, for one backend spec and geometry:
+//!
+//! 1. generates an adversarial op sequence ([`gen_ops`]): unaligned and
+//!    aligned stores/loads, zero-length ops, grow/shrink address frontiers,
+//!    end-of-capacity accesses, row-boundary straddles, same-instant
+//!    back-to-back ops, refresh-boundary ticks (just under / just over a
+//!    refresh slot and a whole retention period), and manager refresh
+//!    slots;
+//! 2. records the trace by driving a [`TracingBackend`]-wrapped target;
+//! 3. **self-replay**: rebuilds an identical backend from the trace header
+//!    and replays — any divergence means nondeterminism in the backend
+//!    (the property every later perf PR must preserve);
+//! 4. **oracle replay** (MCAIMem specs): replays the same trace against the
+//!    golden model ([`OracleBackend`]) — any divergence means the optimized
+//!    paths (SWAR word-parallel array, striped sharding) disagree with the
+//!    naive reference semantics.
+//!
+//! Failures shrink to a minimal reproducing trace with [`shrink_ops`]
+//! (ddmin over op subsequences). Expectations recorded under the full
+//! sequence go stale when ops are dropped, so every candidate subsequence
+//! is **re-recorded on a fresh reference** before re-checking — see
+//! [`minimize`]. Op times are absolute, so any subsequence stays monotone.
+
+use anyhow::Result;
+
+use crate::mem::backend::{self, BackendSpec, MemoryBackend};
+use crate::mem::sharded::ShardedBackend;
+use crate::sim::oracle::OracleBackend;
+use crate::sim::replay::{replay, ReplayReport};
+use crate::sim::trace::{apply_op, digest, Op, Trace, TracingBackend};
+use crate::util::rng::Pcg64;
+
+/// Campaign knobs (the CLI's `mcaimem conform` flags map 1:1 onto this).
+#[derive(Clone, Debug)]
+pub struct CampaignConfig {
+    /// Ops per (spec, geometry) run.
+    pub ops: usize,
+    /// Master seed; per-spec op streams derive from it deterministically.
+    pub seed: u64,
+    /// Requested backend capacity (bytes).
+    pub bytes: usize,
+    /// Sharded geometry to exercise in addition to the flat one
+    /// (0 disables the sharded pass).
+    pub shards: usize,
+    /// Shrink failures to minimal reproducing traces.
+    pub shrink: bool,
+}
+
+impl Default for CampaignConfig {
+    fn default() -> Self {
+        CampaignConfig { ops: 20_000, seed: 7, bytes: 64 * 1024, shards: 4, shrink: true }
+    }
+}
+
+impl CampaignConfig {
+    /// The CI smoke configuration: bounded well under 30 s.
+    pub fn quick(self) -> Self {
+        CampaignConfig { ops: self.ops.min(1500), bytes: self.bytes.min(64 * 1024), ..self }
+    }
+}
+
+/// One failed check, with its shrunk reproduction.
+#[derive(Clone, Debug)]
+pub struct FailureReport {
+    /// Which check failed: `"self-replay"` or `"oracle"`.
+    pub stage: &'static str,
+    /// First divergence of the *original* failing run.
+    pub divergence: String,
+    /// Minimal reproducing trace (the full trace when shrinking is off).
+    pub minimal: Trace,
+}
+
+/// Outcome of one (spec, geometry) campaign run.
+#[derive(Clone, Debug)]
+pub struct SpecOutcome {
+    pub spec: BackendSpec,
+    /// 0 = flat, n = striped across n shards.
+    pub shards: usize,
+    /// (stores, loads, ticks, refreshes) generated.
+    pub counts: (usize, usize, usize, usize),
+    pub self_replay_ok: bool,
+    /// `None` for non-MCAIMem specs (the oracle models MCAIMem semantics).
+    pub oracle_ok: Option<bool>,
+    pub failures: Vec<FailureReport>,
+}
+
+impl SpecOutcome {
+    pub fn ok(&self) -> bool {
+        self.self_replay_ok && self.oracle_ok.unwrap_or(true)
+    }
+
+    /// Geometry label for tables/artifacts (`flat` / `sharded×4`).
+    pub fn geometry(&self) -> String {
+        if self.shards == 0 { "flat".into() } else { format!("sharded×{}", self.shards) }
+    }
+}
+
+/// Generate `n` adversarial ops for a backend of `cap` usable bytes.
+/// Deterministic in `seed`; independent of the backend's data.
+pub fn gen_ops(cap: usize, refresh_due: Option<f64>, rows: usize, seed: u64, n: usize) -> Vec<Op> {
+    let mut rng = Pcg64::new(seed);
+    let t_ref = refresh_due.unwrap_or(12.57e-6);
+    let slot = t_ref / rows.max(1) as f64;
+    let len_menu = [0usize, 1, 3, 7, 8, 63, 64, 65, 100, 128, 192, 256, 1000];
+    let mut t = 0.0f64;
+    let mut frontier = 0usize;
+    let mut ops = Vec::with_capacity(n);
+    for _ in 0..n {
+        // time advance: same-instant, sub-slot, refresh-slot and
+        // whole-period boundary straddles, and long stale gaps
+        t += match rng.below(10) {
+            0 => 0.0,
+            1 => 1e-9,
+            2 => slot * 0.999,
+            3 => slot * 1.001,
+            4 => t_ref * 0.499,
+            5 => t_ref * 0.999,
+            6 => t_ref * 1.001,
+            7 => t_ref * 3.7,
+            _ => rng.f64() * 5e-6,
+        };
+        let len = len_menu[rng.below(len_menu.len() as u64) as usize].min(cap);
+        let addr = match rng.below(5) {
+            // 64-byte aligned (the word-parallel / stripe fast path)
+            0 => ((rng.below((cap / 64) as u64) as usize) * 64).min(cap - len),
+            // anywhere, unaligned
+            1 => rng.below((cap - len + 1) as u64) as usize,
+            // pinned to the end of capacity
+            2 => cap - len,
+            // grow/shrink frontier walk: extend the touched high-water
+            // region, then collapse it
+            3 => {
+                let a = frontier.min(cap - len);
+                frontier =
+                    if rng.bernoulli(0.7) { (frontier + len.max(1)).min(cap - 1) } else { frontier / 2 };
+                a
+            }
+            // straddle a row boundary
+            _ => {
+                let row_start = (rng.below((cap / 64) as u64) as usize) * 64;
+                row_start.saturating_sub(len / 2).min(cap - len)
+            }
+        };
+        match rng.below(100) {
+            0..=34 => {
+                let data: Vec<u8> = match rng.below(4) {
+                    0 => vec![0u8; len],    // worst-case zeros (all eDRAM bits leak)
+                    1 => vec![0x7f; len],   // immortal all-ones magnitude
+                    2 => (0..len).map(|j| (j % 7) as u8).collect(), // near-zero DNN-ish
+                    _ => (0..len).map(|_| rng.next_u64() as u8).collect(),
+                };
+                ops.push(Op::Store { addr, data, t });
+            }
+            35..=69 => ops.push(Op::Load { addr, len, t }),
+            70..=84 => ops.push(Op::Tick { t }),
+            _ => match refresh_due {
+                Some(_) => ops.push(Op::RefreshRow { row: rng.below(rows as u64) as usize, t }),
+                None => ops.push(Op::Tick { t }),
+            },
+        }
+    }
+    ops
+}
+
+/// Build the campaign target for one (spec, geometry).
+fn build(spec: &BackendSpec, shards: usize, bytes: usize, seed: u64) -> Result<Box<dyn MemoryBackend>> {
+    if shards == 0 {
+        Ok(backend::build(spec, bytes, seed))
+    } else {
+        Ok(Box::new(ShardedBackend::new(spec, shards, bytes, seed)?))
+    }
+}
+
+/// Record the campaign trace for one (spec, geometry): generate ops and
+/// drive them through a [`TracingBackend`]-wrapped target.
+pub fn record(spec: &BackendSpec, shards: usize, cfg: &CampaignConfig) -> Result<Trace> {
+    let inner = build(spec, shards, cfg.bytes, cfg.seed)?;
+    let cap = inner.capacity();
+    let refresh = inner.refresh_due();
+    let rows = inner.rows_per_bank();
+    // decorrelate the op stream per spec and geometry
+    let op_seed = cfg.seed ^ digest(spec.to_string().as_bytes()) ^ (shards as u64).rotate_left(17);
+    let (mut traced, log) = TracingBackend::wrap(inner, cfg.bytes, cfg.seed, shards);
+    for op in gen_ops(cap, refresh, rows, op_seed, cfg.ops) {
+        apply_op(traced.as_mut(), &op);
+    }
+    let t = log.lock().unwrap().clone();
+    Ok(t)
+}
+
+/// ddmin over op subsequences: repeatedly drop chunks (halving the chunk
+/// size down to single ops) while `still_fails` holds, bounded by
+/// `max_checks` re-executions. Returns the reduced sequence (never empty —
+/// a failure needs at least one op).
+pub fn shrink_ops(
+    mut ops: Vec<Op>,
+    max_checks: usize,
+    still_fails: &mut dyn FnMut(&[Op]) -> bool,
+) -> Vec<Op> {
+    let mut checks = 0usize;
+    let mut chunk = (ops.len() / 2).max(1);
+    loop {
+        let mut shrunk = false;
+        let mut i = 0;
+        while i < ops.len() && checks < max_checks {
+            let end = (i + chunk).min(ops.len());
+            let mut candidate = Vec::with_capacity(ops.len() - (end - i));
+            candidate.extend_from_slice(&ops[..i]);
+            candidate.extend_from_slice(&ops[end..]);
+            checks += 1;
+            if !candidate.is_empty() && still_fails(&candidate) {
+                ops = candidate;
+                shrunk = true; // same i now points at the next chunk
+            } else {
+                i += chunk;
+            }
+        }
+        if checks >= max_checks || (chunk == 1 && !shrunk) {
+            return ops;
+        }
+        if !shrunk {
+            chunk = (chunk / 2).max(1);
+        }
+    }
+}
+
+/// Shrink a failing trace to a minimal one. Every candidate subsequence is
+/// re-recorded on a fresh reference (built by `make_reference`) so its
+/// expectations are self-consistent, then replayed against a fresh target
+/// (built by `make_target`); the candidate "still fails" if that replay
+/// diverges. Returns the minimal re-recorded trace.
+pub fn minimize(
+    header: &Trace,
+    make_reference: &mut dyn FnMut() -> Box<dyn MemoryBackend>,
+    make_target: &mut dyn FnMut() -> Box<dyn MemoryBackend>,
+) -> Trace {
+    let rerecord = |ops: &[Op], reference: &mut dyn MemoryBackend| -> Trace {
+        header.record_onto(reference, ops)
+    };
+    let mut still_fails = |ops: &[Op]| -> bool {
+        let mut reference = make_reference();
+        let candidate = rerecord(ops, reference.as_mut());
+        let mut target = make_target();
+        replay(&candidate, target.as_mut()).divergence.is_some()
+    };
+    let minimal_ops = shrink_ops(header.ops(), 10_000, &mut still_fails);
+    let mut reference = make_reference();
+    rerecord(&minimal_ops, reference.as_mut())
+}
+
+/// Replay `trace` against a fresh identical backend (self-conformance).
+pub fn verify_self(trace: &Trace) -> Result<ReplayReport> {
+    let mut target = trace.build_target()?;
+    Ok(replay(trace, target.as_mut()))
+}
+
+/// Replay `trace` against the golden model (MCAIMem specs only).
+pub fn verify_oracle(trace: &Trace) -> Result<ReplayReport> {
+    let mut orc = OracleBackend::for_trace(trace)?;
+    Ok(replay(trace, &mut orc))
+}
+
+/// Run the full campaign for one (spec, geometry).
+pub fn run_one(spec: &BackendSpec, shards: usize, cfg: &CampaignConfig) -> Result<SpecOutcome> {
+    let trace = record(spec, shards, cfg)?;
+    let mut outcome = SpecOutcome {
+        spec: *spec,
+        shards,
+        counts: trace.op_counts(),
+        self_replay_ok: true,
+        oracle_ok: None,
+        failures: Vec::new(),
+    };
+
+    let rep = verify_self(&trace)?;
+    if let Some(div) = rep.divergence {
+        outcome.self_replay_ok = false;
+        let minimal = if cfg.shrink {
+            minimize(
+                &trace,
+                &mut || trace.build_target().expect("header validated"),
+                &mut || trace.build_target().expect("header validated"),
+            )
+        } else {
+            trace.clone()
+        };
+        outcome.failures.push(FailureReport {
+            stage: "self-replay",
+            divergence: div.to_string(),
+            minimal,
+        });
+    }
+
+    if matches!(spec, BackendSpec::Mcaimem { .. }) {
+        let rep = verify_oracle(&trace)?;
+        outcome.oracle_ok = Some(rep.exact());
+        if let Some(div) = rep.divergence {
+            let minimal = if cfg.shrink {
+                minimize(
+                    &trace,
+                    &mut || trace.build_target().expect("header validated"),
+                    &mut || {
+                        Box::new(OracleBackend::for_trace(&trace).expect("mcaimem spec"))
+                            as Box<dyn MemoryBackend>
+                    },
+                )
+            } else {
+                trace.clone()
+            };
+            outcome.failures.push(FailureReport {
+                stage: "oracle",
+                divergence: div.to_string(),
+                minimal,
+            });
+        }
+    }
+    Ok(outcome)
+}
+
+/// Run the campaign for every spec, flat plus (when `cfg.shards > 0`) the
+/// striped geometry.
+pub fn run(specs: &[BackendSpec], cfg: &CampaignConfig) -> Result<Vec<SpecOutcome>> {
+    let mut out = Vec::new();
+    for spec in specs {
+        out.push(run_one(spec, 0, cfg)?);
+        if cfg.shards > 0 {
+            out.push(run_one(spec, cfg.shards, cfg)?);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> CampaignConfig {
+        CampaignConfig { ops: 120, seed: 7, bytes: 32 * 1024, shards: 2, shrink: true }
+    }
+
+    #[test]
+    fn gen_ops_is_deterministic_and_adversarial() {
+        let a = gen_ops(64 * 1024, Some(12.57e-6), 256, 5, 500);
+        let b = gen_ops(64 * 1024, Some(12.57e-6), 256, 5, 500);
+        assert_eq!(a, b, "same seed, same ops");
+        // the mix contains the adversarial shapes the issue names
+        assert!(a.iter().any(|o| matches!(o, Op::Store { data, .. } if data.is_empty())),
+            "zero-length stores");
+        assert!(a.iter().any(
+            |o| matches!(o, Op::Store { addr, data, .. } if (addr % 64 != 0) && !data.is_empty())
+        ), "unaligned stores");
+        assert!(a.iter().any(|o| matches!(o, Op::RefreshRow { .. })), "refresh slots");
+        // times are monotone (the device asserts this; the generator must
+        // never violate it)
+        for w in a.windows(2) {
+            assert!(w[1].time() >= w[0].time());
+        }
+        // same-instant back-to-back ops exist
+        assert!(a.windows(2).any(|w| w[1].time() == w[0].time()));
+    }
+
+    #[test]
+    fn no_refresh_backends_get_no_refresh_ops() {
+        let ops = gen_ops(16 * 1024, None, 1, 9, 300);
+        assert!(ops.iter().all(|o| !matches!(o, Op::RefreshRow { .. })));
+    }
+
+    #[test]
+    fn quick_campaign_passes_for_every_default_spec() {
+        let cfg = tiny();
+        for spec in BackendSpec::default_sweep() {
+            for shards in [0usize, 2] {
+                let out = run_one(&spec, shards, &cfg).unwrap();
+                assert!(out.ok(), "{spec} {}: {:?}", out.geometry(), out.failures);
+                if matches!(spec, BackendSpec::Mcaimem { .. }) {
+                    assert_eq!(out.oracle_ok, Some(true), "{spec}");
+                } else {
+                    assert_eq!(out.oracle_ok, None, "{spec}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shrink_ops_reduces_to_the_culprit() {
+        // synthetic predicate: fails iff the sequence still contains a
+        // store to addr 777 AND a load of addr 777 (order preserved)
+        let mut ops = gen_ops(16 * 1024, None, 1, 11, 200);
+        let t_end = ops.last().unwrap().time() + 1e-6;
+        ops.push(Op::Store { addr: 777, data: vec![1, 2, 3], t: t_end });
+        ops.push(Op::Load { addr: 777, len: 3, t: t_end + 1e-6 });
+        let mut fails = |ops: &[Op]| {
+            let s = ops.iter().position(|o| matches!(o, Op::Store { addr: 777, .. }));
+            let l = ops.iter().rposition(|o| matches!(o, Op::Load { addr: 777, .. }));
+            matches!((s, l), (Some(si), Some(li)) if si < li)
+        };
+        let minimal = shrink_ops(ops, 10_000, &mut fails);
+        assert_eq!(minimal.len(), 2, "ddmin must isolate the two culprit ops");
+    }
+
+    #[test]
+    fn minimize_rerecords_consistent_expectations() {
+        // a target whose only defect is on loads longer than 64 bytes —
+        // minimize must find a short reproducing trace whose expectations
+        // are freshly recorded (replaying the minimal trace on a GOOD
+        // target must be exact)
+        let spec = BackendSpec::Sram;
+        let cfg = CampaignConfig { ops: 150, ..tiny() };
+        let trace = record(&spec, 0, &cfg).unwrap();
+        let minimal = minimize(
+            &trace,
+            &mut || trace.build_target().unwrap(),
+            &mut || {
+                Box::new(Corrupting { inner: trace.build_target().unwrap() })
+                    as Box<dyn MemoryBackend>
+            },
+        );
+        assert!(!minimal.entries.is_empty());
+        assert!(minimal.entries.len() <= 20, "shrunk to {} ops", minimal.entries.len());
+        // minimal trace is internally consistent: exact on a good target
+        let mut good = trace.build_target().unwrap();
+        assert!(replay(&minimal, good.as_mut()).exact());
+        // and still failing on the corrupt one
+        let mut bad = Corrupting { inner: trace.build_target().unwrap() };
+        assert!(replay(&minimal, &mut bad).divergence.is_some());
+    }
+
+    /// Test double: corrupts the first byte of any load longer than 64 B.
+    struct Corrupting {
+        inner: Box<dyn MemoryBackend>,
+    }
+
+    impl MemoryBackend for Corrupting {
+        fn spec(&self) -> BackendSpec {
+            self.inner.spec()
+        }
+        fn capacity(&self) -> usize {
+            self.inner.capacity()
+        }
+        fn now(&self) -> f64 {
+            self.inner.now()
+        }
+        fn store(&mut self, addr: usize, data: &[u8], now: f64) {
+            self.inner.store(addr, data, now)
+        }
+        fn load(&mut self, addr: usize, len: usize, now: f64) -> Vec<u8> {
+            let mut out = self.inner.load(addr, len, now);
+            if out.len() > 64 {
+                out[0] ^= 1; // the off-by-one under test
+            }
+            out
+        }
+        fn tick(&mut self, now: f64) {
+            self.inner.tick(now)
+        }
+        fn refresh_due(&self) -> Option<f64> {
+            self.inner.refresh_due()
+        }
+        fn refresh_row(&mut self, row: usize, now: f64) {
+            self.inner.refresh_row(row, now)
+        }
+        fn rows_per_bank(&self) -> usize {
+            self.inner.rows_per_bank()
+        }
+        fn meter(&self) -> &crate::mem::mcaimem::EnergyMeter {
+            self.inner.meter()
+        }
+        fn energy_card(&self) -> &crate::mem::energy::EnergyCard {
+            self.inner.energy_card()
+        }
+    }
+}

@@ -1,0 +1,32 @@
+//! Deterministic conformance machinery: trace record/replay plus the
+//! golden-model differential oracle.
+//!
+//! The paper's headline (48 % area, 3.4× energy *without accuracy loss*,
+//! §IV) only holds if every optimized path in this repo — the SWAR
+//! word-parallel array, the striped [`crate::mem::sharded::ShardedBackend`],
+//! the serving tier's staged traffic — is bit- and joule-identical to the
+//! plain MCAIMem semantics under arbitrary traffic. This module is the
+//! verification backbone that later perf/scale PRs replay against:
+//!
+//! * [`trace`] — a compact, versioned operation trace
+//!   (`Op::{Store,Load,Tick,RefreshRow}` with addresses, payload bytes,
+//!   load digests and per-op expected [`EnergyMeter`] outcomes), plus
+//!   [`trace::TracingBackend`], a recorder that wraps any
+//!   [`crate::mem::backend::MemoryBackend`] and threads through
+//!   `BufferManager` / `WorkerPool` unchanged.
+//! * [`replay`] — re-executes a trace against any backend and diffs bytes,
+//!   flip counts and meters field-by-field with first-divergence reporting.
+//! * [`oracle`] — the pure-Rust golden reference model: naive byte-per-cell
+//!   MCAIMem semantics (no SWAR, no bit-planes, explicit per-cell retention
+//!   clocks) used as the differential oracle.
+//! * [`campaign`] — the seeded randomized conformance campaign behind
+//!   `mcaimem conform`: adversarial op sequences (unaligned stores,
+//!   grow/shrink frontiers, refresh-boundary ticks, zero-length ops) and a
+//!   ddmin shrinker that reduces failures to minimal reproducing traces.
+//!
+//! [`EnergyMeter`]: crate::mem::mcaimem::EnergyMeter
+
+pub mod campaign;
+pub mod oracle;
+pub mod replay;
+pub mod trace;

@@ -1,0 +1,505 @@
+//! The golden reference model: naive byte-per-cell MCAIMem semantics.
+//!
+//! [`OracleBackend`] re-derives the functional array's behaviour with none
+//! of the production machinery: no SWAR bit-plane transpose, no word-level
+//! encode, no sparse zero-scans, no packed plane words — just one stored
+//! byte per address, one leakage corner and one **explicit per-cell
+//! retention clock** per eDRAM bit, aged bit by bit. It is the differential
+//! oracle the conformance campaign replays every recorded trace against:
+//! if the optimized paths (word-parallel array, striped sharding) and this
+//! deliberately boring model ever disagree — in a single byte, a single
+//! committed flip, or a single meter field — the campaign fails and shrinks
+//! the divergence to a minimal trace.
+//!
+//! What *is* shared with the production model, on purpose:
+//!
+//! * the Table II characterization card ([`EnergyCard`]) and the calibrated
+//!   [`FlipModel`] — these are *data* (published numbers / fitted physics),
+//!   not mechanism, and the meter-exactness requirement makes re-deriving
+//!   the same f64s through different arithmetic meaningless;
+//! * the per-cell leakage population: [`z_to_q`] quantization,
+//!   [`normal_quantile`] inverse CDF and the seeded PCG64 draw order are
+//!   the *specification* of the manufactured array (a different corner
+//!   assignment would be a different chip, not a different implementation);
+//! * the bank geometry ([`MemoryMap`]) and, for sharded oracles, the
+//!   [`shard_seeds`] derivation and stripe address map — re-expressed here
+//!   with naive arithmetic.
+//!
+//! Everything behavioural — aging, flip commit, census, energy accounting
+//! order, refresh-by-read, stagger — is re-implemented from the documented
+//! semantics. Per-cell clocks stay row-uniform by construction (the array
+//! activates whole rows); carrying them per cell anyway is the point of an
+//! oracle: the redundancy is what a row-clock bug would diverge against.
+
+use anyhow::{bail, Result};
+
+use crate::circuit::flip_model::FlipModel;
+use crate::encode::one_enhancement::{decode_byte, encode_byte};
+use crate::mem::backend::{BackendSpec, MemoryBackend};
+use crate::mem::bank::MemoryMap;
+use crate::mem::energy::EnergyCard;
+use crate::mem::mcaimem::{z_to_q, EnergyMeter};
+use crate::mem::sharded::{staggered_row, STRIPE};
+use crate::sim::trace::Trace;
+use crate::util::rng::{shard_seeds, Pcg64};
+use crate::util::stats::normal_quantile;
+
+/// One naive mixed-cell array: a byte per address, a leakage corner and a
+/// retention clock per eDRAM cell.
+pub struct OracleArray {
+    map: MemoryMap,
+    flip: FlipModel,
+    vref: f64,
+    card: EnergyCard,
+    encode: bool,
+    /// The stored byte (post-encoder image, all 8 bits) per address.
+    stored: Vec<u8>,
+    /// Per-cell quantized leakage z-score, `leak_q[plane][addr]`, sampled
+    /// with the exact seeded draw order of the production array.
+    leak_q: [Vec<u8>; 7],
+    /// Per-cell last-commit time (s), `cell_time[plane][addr]`.
+    cell_time: [Vec<f64>; 7],
+    /// Ones census over the 7 eDRAM planes.
+    edram_ones: u64,
+    meter: EnergyMeter,
+    now: f64,
+}
+
+impl OracleArray {
+    pub fn new(bytes: usize, vref: f64, encode: bool, seed: u64) -> Self {
+        let map = MemoryMap::with_capacity(bytes);
+        let cap = map.capacity();
+        // identical corner sampling to MixedCellMemory::with_vref: a
+        // 4096-entry inverse-CDF table over 12-bit uniforms, five draws per
+        // u64, plane-major
+        let icdf: Vec<u8> = (0..4096)
+            .map(|i| z_to_q(normal_quantile((i as f64 + 0.5) / 4096.0)))
+            .collect();
+        let mut rng = Pcg64::new(seed);
+        let mut leak_q: [Vec<u8>; 7] = std::array::from_fn(|_| Vec::new());
+        for plane in leak_q.iter_mut() {
+            let mut v = Vec::with_capacity(cap);
+            let mut i = 0;
+            while i < cap {
+                let r = rng.next_u64();
+                for k in 0..5 {
+                    if i >= cap {
+                        break;
+                    }
+                    v.push(icdf[((r >> (12 * k)) & 0xfff) as usize]);
+                    i += 1;
+                }
+            }
+            *plane = v;
+        }
+        OracleArray {
+            map,
+            flip: FlipModel::mcaimem_85c(),
+            vref,
+            card: EnergyCard::mcaimem(vref),
+            encode,
+            // power-on state: pull-up leakage parks every cell at bit-1
+            stored: vec![0xff; cap],
+            leak_q,
+            cell_time: std::array::from_fn(|_| vec![0.0; cap]),
+            edram_ones: (cap * 7) as u64,
+            meter: EnergyMeter::default(),
+            now: 0.0,
+        }
+    }
+
+    fn capacity(&self) -> usize {
+        self.stored.len()
+    }
+
+    fn edram_ones_frac(&self) -> f64 {
+        self.edram_ones as f64 / (self.capacity() * 7) as f64
+    }
+
+    fn advance_to(&mut self, now: f64) {
+        assert!(now + 1e-15 >= self.now, "time must be monotone");
+        let dt = now - self.now;
+        if dt > 0.0 {
+            self.meter.static_j +=
+                self.card.static_power(self.capacity(), self.edram_ones_frac()) * dt;
+        }
+        self.now = now;
+    }
+
+    /// Age every eDRAM cell of one flat row (bank-major row index): commit
+    /// the cell's stored 0 to 1 iff its persistent leakage corner exceeds
+    /// the staleness threshold, and stamp the cell's retention clock.
+    fn age_row(&mut self, flat_row: usize) {
+        let start = flat_row * self.map.bank.row_bytes;
+        let end = start + self.map.bank.row_bytes;
+        let t_nom = self
+            .flip
+            .leak
+            .charge_time(self.vref, self.flip.width_mult, self.flip.temp_c);
+        for a in start..end {
+            for p in 0..7 {
+                let dt = self.now - self.cell_time[p][a];
+                self.cell_time[p][a] = self.now;
+                if dt <= 0.0 {
+                    continue;
+                }
+                let z_thr = (t_nom / dt).ln() / self.flip.leak.sigma_ln;
+                if z_thr >= 4.0 {
+                    continue; // even a +4σ cell holds this long
+                }
+                let q_thr = z_to_q(z_thr);
+                if (self.stored[a] >> p) & 1 == 0 && self.leak_q[p][a] > q_thr {
+                    self.stored[a] |= 1 << p;
+                    self.edram_ones += 1;
+                    self.meter.flips_committed += 1;
+                }
+            }
+        }
+    }
+
+    fn age_range(&mut self, addr: usize, len: usize) {
+        if len == 0 {
+            return;
+        }
+        let first = addr / self.map.bank.row_bytes;
+        let last = (addr + len - 1) / self.map.bank.row_bytes;
+        for flat_row in first..=last {
+            self.age_row(flat_row);
+        }
+    }
+
+    fn store(&mut self, addr: usize, data: &[u8], now: f64) {
+        assert!(addr + data.len() <= self.capacity(), "write out of range");
+        self.advance_to(now);
+        self.age_range(addr, data.len());
+        let mut ones = 0u64;
+        for (i, &raw) in data.iter().enumerate() {
+            let img = if self.encode { encode_byte(raw) } else { raw };
+            let old = self.stored[addr + i];
+            for p in 0..7 {
+                let was = (old >> p) & 1;
+                let is = (img >> p) & 1;
+                if was != is {
+                    if is == 1 {
+                        self.edram_ones += 1;
+                    } else {
+                        self.edram_ones -= 1;
+                    }
+                }
+            }
+            self.stored[addr + i] = img;
+            ones += (img & 0x7f).count_ones() as u64;
+        }
+        let frac = ones as f64 / (data.len() * 7).max(1) as f64;
+        self.meter.write_j += self.card.write_energy(data.len(), frac);
+        self.meter.writes += 1;
+        self.meter.bytes_written += data.len() as u64;
+    }
+
+    fn load(&mut self, addr: usize, len: usize, now: f64) -> Vec<u8> {
+        assert!(addr + len <= self.capacity(), "read out of range");
+        self.advance_to(now);
+        self.age_range(addr, len);
+        let mut out = Vec::with_capacity(len);
+        let mut ones = 0u64;
+        for a in addr..addr + len {
+            let img = self.stored[a];
+            ones += (img & 0x7f).count_ones() as u64;
+            out.push(if self.encode { decode_byte(img) } else { img });
+        }
+        let frac = ones as f64 / (len * 7).max(1) as f64;
+        self.meter.read_j += self.card.read_energy(len, frac);
+        self.meter.reads += 1;
+        self.meter.bytes_read += len as u64;
+        out
+    }
+
+    fn tick(&mut self, now: f64) {
+        self.advance_to(now);
+    }
+
+    fn refresh_row(&mut self, row: usize, now: f64) {
+        self.advance_to(now);
+        for bank in 0..self.map.banks {
+            self.age_row(bank * self.map.bank.rows + row);
+        }
+        let bytes = self.map.bank.row_bytes * self.map.banks;
+        self.meter.refresh_j += self.card.refresh_pass_energy(bytes, self.edram_ones_frac());
+        self.meter.refreshes += 1;
+    }
+}
+
+/// The golden model behind the device trait: one or more [`OracleArray`]
+/// shards presented as a single [`MemoryBackend`], mirroring the flat and
+/// striped geometries a trace can be recorded against.
+pub struct OracleBackend {
+    spec: BackendSpec,
+    /// `false` = one flat array driven directly; `true` = 64-byte stripe
+    /// walk over `arrays` with per-chunk device events.
+    striped: bool,
+    arrays: Vec<OracleArray>,
+    merged: EnergyMeter,
+    card: EnergyCard,
+}
+
+fn spec_params(spec: &BackendSpec) -> Result<(f64, bool)> {
+    match spec {
+        BackendSpec::Mcaimem { vref, encode } => Ok((*vref, *encode)),
+        other => bail!("the golden model covers MCAIMem semantics only (got `{other}`)"),
+    }
+}
+
+impl OracleBackend {
+    /// A flat (unsharded) golden array for `spec` — the counterpart of
+    /// `backend::build(spec, bytes, seed)`.
+    pub fn new(spec: &BackendSpec, bytes: usize, seed: u64) -> Result<OracleBackend> {
+        let (vref, encode) = spec_params(spec)?;
+        let mut b = OracleBackend {
+            spec: *spec,
+            striped: false,
+            arrays: vec![OracleArray::new(bytes, vref, encode, seed)],
+            merged: EnergyMeter::default(),
+            card: EnergyCard::mcaimem(vref),
+        };
+        b.remerge();
+        Ok(b)
+    }
+
+    /// A striped golden array — the counterpart of `ShardedBackend::new`:
+    /// same shard-seed derivation, same stripe map, same staggered refresh.
+    pub fn sharded(spec: &BackendSpec, n: usize, bytes: usize, seed: u64) -> Result<OracleBackend> {
+        let (vref, encode) = spec_params(spec)?;
+        if n == 0 {
+            bail!("sharded oracle needs at least one shard");
+        }
+        if bytes % n != 0 || (bytes / n) % STRIPE != 0 {
+            bail!("oracle shard geometry must mirror ShardedBackend: {bytes} bytes / {n} shards");
+        }
+        let arrays = shard_seeds(seed, n)
+            .into_iter()
+            .map(|s| OracleArray::new(bytes / n, vref, encode, s))
+            .collect();
+        let mut b = OracleBackend {
+            spec: *spec,
+            striped: true,
+            arrays,
+            merged: EnergyMeter::default(),
+            card: EnergyCard::mcaimem(vref),
+        };
+        b.remerge();
+        Ok(b)
+    }
+
+    /// The golden counterpart of [`Trace::build_target`]: flat for
+    /// `shards == 0`, striped otherwise.
+    pub fn for_trace(trace: &Trace) -> Result<OracleBackend> {
+        if trace.shards == 0 {
+            Self::new(&trace.spec, trace.bytes, trace.seed)
+        } else {
+            Self::sharded(&trace.spec, trace.shards, trace.bytes, trace.seed)
+        }
+    }
+
+    fn remerge(&mut self) {
+        let mut m = EnergyMeter::default();
+        for a in &self.arrays {
+            m.merge(&a.meter);
+        }
+        self.merged = m;
+    }
+
+    /// Naive stripe walk: global `[addr, addr+len)` as (shard, local,
+    /// offset, chunk_len) pieces, one piece per 64-byte stripe crossing.
+    fn pieces(&self, addr: usize, len: usize) -> Vec<(usize, usize, usize, usize)> {
+        let n = self.arrays.len();
+        let mut out = Vec::new();
+        let mut a = addr;
+        let end = addr + len;
+        while a < end {
+            let block = a / STRIPE;
+            let lane = a % STRIPE;
+            let shard = block % n;
+            let local = (block / n) * STRIPE + lane;
+            let take = (STRIPE - lane).min(end - a);
+            out.push((shard, local, a - addr, take));
+            a += take;
+        }
+        out
+    }
+}
+
+impl MemoryBackend for OracleBackend {
+    fn spec(&self) -> BackendSpec {
+        self.spec
+    }
+
+    fn capacity(&self) -> usize {
+        self.arrays.iter().map(|a| a.capacity()).sum()
+    }
+
+    fn now(&self) -> f64 {
+        self.arrays.iter().map(|a| a.now).fold(0.0, f64::max)
+    }
+
+    fn store(&mut self, addr: usize, data: &[u8], now: f64) {
+        assert!(addr + data.len() <= self.capacity(), "write out of range");
+        if self.striped {
+            for (shard, local, off, len) in self.pieces(addr, data.len()) {
+                self.arrays[shard].store(local, &data[off..off + len], now);
+            }
+        } else {
+            self.arrays[0].store(addr, data, now);
+        }
+        self.remerge();
+    }
+
+    fn load(&mut self, addr: usize, len: usize, now: f64) -> Vec<u8> {
+        assert!(addr + len <= self.capacity(), "read out of range");
+        let out = if self.striped {
+            let mut out = vec![0u8; len];
+            for (shard, local, off, clen) in self.pieces(addr, len) {
+                let piece = self.arrays[shard].load(local, clen, now);
+                out[off..off + clen].copy_from_slice(&piece);
+            }
+            out
+        } else {
+            self.arrays[0].load(addr, len, now)
+        };
+        self.remerge();
+        out
+    }
+
+    fn tick(&mut self, now: f64) {
+        for a in &mut self.arrays {
+            a.tick(now);
+        }
+        self.remerge();
+    }
+
+    fn refresh_due(&self) -> Option<f64> {
+        self.card.refresh_period
+    }
+
+    fn refresh_row(&mut self, row: usize, now: f64) {
+        let rows = self.rows_per_bank();
+        if self.striped {
+            let n = self.arrays.len();
+            for (i, a) in self.arrays.iter_mut().enumerate() {
+                a.refresh_row(staggered_row(row, i, rows, n), now);
+            }
+        } else {
+            self.arrays[0].refresh_row(row, now);
+        }
+        self.remerge();
+    }
+
+    fn rows_per_bank(&self) -> usize {
+        self.arrays[0].map.bank.rows
+    }
+
+    fn meter(&self) -> &EnergyMeter {
+        &self.merged
+    }
+
+    fn shard_meters(&self) -> Vec<EnergyMeter> {
+        self.arrays.iter().map(|a| a.meter.clone()).collect()
+    }
+
+    fn energy_card(&self) -> &EnergyCard {
+        &self.card
+    }
+
+    fn label(&self) -> String {
+        format!("oracle({})", self.spec.label())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::backend;
+    use crate::mem::mcaimem::MixedCellMemory;
+
+    #[test]
+    fn oracle_rejects_non_mcaimem_specs() {
+        assert!(OracleBackend::new(&BackendSpec::Sram, 16 * 1024, 1).is_err());
+        assert!(OracleBackend::new(&BackendSpec::mcaimem_default(), 16 * 1024, 1).is_ok());
+    }
+
+    #[test]
+    fn oracle_corners_match_the_production_sampling() {
+        // the leakage population is part of the array's identity: a fresh
+        // store of worst-case zeros aged far past retention must corrupt
+        // the exact same cells in oracle and production array
+        let spec = BackendSpec::Mcaimem { vref: 0.8, encode: false };
+        let mut real = backend::build(&spec, 16 * 1024, 0xC0FFEE);
+        let mut orc = OracleBackend::new(&spec, 16 * 1024, 0xC0FFEE).unwrap();
+        let zeros = vec![0u8; 256];
+        real.store(0, &zeros, 0.0);
+        orc.store(0, &zeros, 0.0);
+        let a = real.load(0, 256, 200e-6);
+        let b = orc.load(0, 256, 200e-6);
+        assert_eq!(a, b, "aged bytes must corrupt identically");
+        assert!(a.iter().any(|&v| v != 0), "200 µs staleness must corrupt something");
+        assert_eq!(real.meter().flips_committed, orc.meter().flips_committed);
+    }
+
+    #[test]
+    fn oracle_meter_is_bit_exact_on_a_mixed_workload() {
+        let spec = BackendSpec::mcaimem_default();
+        let mut real = backend::build(&spec, 32 * 1024, 7);
+        let mut orc = OracleBackend::new(&spec, 32 * 1024, 7).unwrap();
+        let mut t = 0.0;
+        for i in 0..30usize {
+            let len = [0usize, 1, 63, 64, 65, 200][i % 6];
+            let addr = (i * 911) % (32 * 1024 - 256);
+            let data: Vec<u8> = (0..len).map(|j| (i * 31 + j) as u8).collect();
+            t += [0.0, 1e-9, 5e-6, 14e-6][i % 4];
+            real.store(addr, &data, t);
+            orc.store(addr, &data, t);
+            t += 2e-6;
+            assert_eq!(real.load(addr, len, t), orc.load(addr, len, t), "op {i}");
+            real.refresh_row(i % 256, t);
+            orc.refresh_row(i % 256, t);
+        }
+        let (rm, om) = (real.meter().clone(), orc.meter().clone());
+        assert_eq!(rm, om, "meters must match field-for-field");
+        // and bit-exactly on the float fields
+        assert_eq!(rm.static_j.to_bits(), om.static_j.to_bits());
+        assert_eq!(rm.write_j.to_bits(), om.write_j.to_bits());
+        assert_eq!(rm.read_j.to_bits(), om.read_j.to_bits());
+        assert_eq!(rm.refresh_j.to_bits(), om.refresh_j.to_bits());
+    }
+
+    #[test]
+    fn oracle_is_scalar_path_equivalent_too() {
+        // the oracle must agree with the *scalar* reference path as well as
+        // the word-parallel default (they are property-tested equal, but
+        // the oracle is an independent third implementation)
+        let mut scalar = MixedCellMemory::with_vref(16 * 1024, 0.7, 5);
+        scalar.word_parallel = false;
+        let mut orc = OracleArray::new(16 * 1024, 0.7, true, 5);
+        let data: Vec<u8> = (0..300u32).map(|i| (i * 7 + 3) as u8).collect();
+        scalar.write(17, &data, 1e-6);
+        orc.store(17, &data, 1e-6);
+        assert_eq!(scalar.read(17, 300, 30e-6), orc.load(17, 300, 30e-6));
+        assert_eq!(scalar.meter, orc.meter);
+    }
+
+    #[test]
+    fn sharded_oracle_mirrors_the_striped_backend() {
+        let spec = BackendSpec::mcaimem_default();
+        let mut real = crate::mem::sharded::ShardedBackend::new(&spec, 4, 64 * 1024, 9).unwrap();
+        let mut orc = OracleBackend::sharded(&spec, 4, 64 * 1024, 9).unwrap();
+        assert_eq!(real.capacity(), orc.capacity());
+        let data: Vec<u8> = (0..997u32).map(|i| (i * 13) as u8).collect();
+        real.store(129, &data, 1e-6); // unaligned, crosses stripes
+        orc.store(129, &data, 1e-6);
+        real.refresh_row(3, 2e-6);
+        orc.refresh_row(3, 2e-6);
+        assert_eq!(real.load(129, 997, 20e-6), orc.load(129, 997, 20e-6));
+        assert_eq!(real.meter(), orc.meter());
+        assert_eq!(real.shard_meters(), orc.shard_meters());
+        assert_eq!(real.now().to_bits(), orc.now().to_bits());
+    }
+}

@@ -1,0 +1,226 @@
+//! Trace replay with first-divergence reporting.
+//!
+//! [`replay`] re-executes a [`Trace`] op-by-op against any
+//! [`MemoryBackend`] and checks, after every op, that the target reproduced
+//! the recorded outcome: the load-byte digest, the device clock, and the
+//! full [`EnergyMeter`] **field by field** (floats compared by bit pattern,
+//! so a NaN poisoning or a last-ulp drift is caught, not masked by IEEE
+//! `==` semantics). The first mismatch stops the replay and is reported
+//! with the op index, the op itself, and the expected/observed values —
+//! exactly what a CI artifact needs for a local repro.
+
+use crate::mem::backend::MemoryBackend;
+use crate::mem::mcaimem::EnergyMeter;
+use crate::sim::trace::{apply_op, Trace};
+
+/// The first point where a replay disagreed with the recorded expectations.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Divergence {
+    /// Index of the diverging op within the trace.
+    pub index: usize,
+    /// Human description of the op ([`crate::sim::trace::Op::describe`]).
+    pub op: String,
+    /// What disagreed: `"bytes"`, `"clock"`, or `"meter.<field>"`.
+    pub field: String,
+    pub expected: String,
+    pub got: String,
+}
+
+impl std::fmt::Display for Divergence {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "op {} ({}): {} expected {} got {}",
+            self.index, self.op, self.field, self.expected, self.got
+        )
+    }
+}
+
+/// Outcome of one replay run.
+#[derive(Clone, Debug)]
+pub struct ReplayReport {
+    /// Ops executed (all of them when the replay is exact; the diverging
+    /// op's index + 1 otherwise).
+    pub ops: usize,
+    pub divergence: Option<Divergence>,
+}
+
+impl ReplayReport {
+    pub fn exact(&self) -> bool {
+        self.divergence.is_none()
+    }
+}
+
+/// Field-by-field meter diff; floats by bit pattern, counters exactly.
+/// Returns the first differing `(field, expected, got)`.
+pub fn meter_diff(
+    expected: &EnergyMeter,
+    got: &EnergyMeter,
+) -> Option<(&'static str, String, String)> {
+    let f = |name, a: f64, b: f64| {
+        (a.to_bits() != b.to_bits()).then(|| (name, format!("{a:e}"), format!("{b:e}")))
+    };
+    let u = |name, a: u64, b: u64| (a != b).then(|| (name, a.to_string(), b.to_string()));
+    None.or_else(|| u("reads", expected.reads, got.reads))
+        .or_else(|| u("writes", expected.writes, got.writes))
+        .or_else(|| u("refreshes", expected.refreshes, got.refreshes))
+        .or_else(|| u("bytes_read", expected.bytes_read, got.bytes_read))
+        .or_else(|| u("bytes_written", expected.bytes_written, got.bytes_written))
+        .or_else(|| u("flips_committed", expected.flips_committed, got.flips_committed))
+        .or_else(|| f("read_j", expected.read_j, got.read_j))
+        .or_else(|| f("write_j", expected.write_j, got.write_j))
+        .or_else(|| f("refresh_j", expected.refresh_j, got.refresh_j))
+        .or_else(|| f("static_j", expected.static_j, got.static_j))
+        .or_else(|| f("busy_s", expected.busy_s, got.busy_s))
+}
+
+/// Re-execute `trace` against `target`, stopping at the first divergence.
+pub fn replay(trace: &Trace, target: &mut dyn MemoryBackend) -> ReplayReport {
+    for (index, entry) in trace.entries.iter().enumerate() {
+        let dig = apply_op(target, &entry.op);
+        let diverge = |field: String, expected: String, got: String| Divergence {
+            index,
+            op: entry.op.describe(),
+            field,
+            expected,
+            got,
+        };
+        if let (Some(want), Some(have)) = (entry.expect.digest, dig) {
+            if want != have {
+                return ReplayReport {
+                    ops: index + 1,
+                    divergence: Some(diverge(
+                        "bytes".into(),
+                        format!("{want:016x}"),
+                        format!("{have:016x}"),
+                    )),
+                };
+            }
+        }
+        if entry.expect.now.to_bits() != target.now().to_bits() {
+            return ReplayReport {
+                ops: index + 1,
+                divergence: Some(diverge(
+                    "clock".into(),
+                    format!("{:e}", entry.expect.now),
+                    format!("{:e}", target.now()),
+                )),
+            };
+        }
+        if let Some((field, expected, got)) = meter_diff(&entry.expect.meter, target.meter()) {
+            return ReplayReport {
+                ops: index + 1,
+                divergence: Some(diverge(format!("meter.{field}"), expected, got)),
+            };
+        }
+    }
+    ReplayReport { ops: trace.entries.len(), divergence: None }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::backend::{self, BackendSpec};
+    use crate::sim::trace::{Op, TracingBackend};
+
+    fn recorded(spec: &BackendSpec) -> Trace {
+        let (mut b, log) = TracingBackend::wrap(backend::build(spec, 16 * 1024, 3), 16 * 1024, 3, 0);
+        let data: Vec<u8> = (0..200).map(|i| i as u8).collect();
+        b.store(40, &data, 1e-6);
+        let _ = b.load(40, 200, 2e-6);
+        b.tick(5e-6);
+        if b.refresh_due().is_some() {
+            b.refresh_row(0, 6e-6);
+        }
+        let t = log.lock().unwrap().clone();
+        t
+    }
+
+    #[test]
+    fn every_backend_replays_its_own_trace_exactly() {
+        for spec in BackendSpec::default_sweep() {
+            let trace = recorded(&spec);
+            let mut target = trace.build_target().unwrap();
+            let rep = replay(&trace, target.as_mut());
+            assert!(rep.exact(), "{spec}: {}", rep.divergence.unwrap());
+            assert_eq!(rep.ops, trace.entries.len());
+        }
+    }
+
+    #[test]
+    fn byte_divergence_is_caught_and_located() {
+        let trace = recorded(&BackendSpec::Sram);
+        // replay against a *different seed* SRAM: bytes identical (SRAM is
+        // seedless), so first corrupt the expectation instead
+        let mut broken = trace.clone();
+        for e in broken.entries.iter_mut() {
+            if let Some(d) = e.expect.digest.as_mut() {
+                *d ^= 1;
+            }
+        }
+        let mut target = trace.build_target().unwrap();
+        let rep = replay(&broken, target.as_mut());
+        let d = rep.divergence.expect("must diverge");
+        assert_eq!(d.field, "bytes");
+        assert_eq!(d.index, 1, "the load is op 1");
+        assert!(d.op.contains("load"), "{}", d.op);
+    }
+
+    #[test]
+    fn meter_divergence_names_the_field() {
+        let trace = recorded(&BackendSpec::Rram);
+        let mut broken = trace.clone();
+        broken.entries[0].expect.meter.write_j *= 1.0 + 1e-12; // one-ulp-ish nudge
+        let mut target = trace.build_target().unwrap();
+        let rep = replay(&broken, target.as_mut());
+        let d = rep.divergence.expect("must diverge");
+        assert_eq!(d.field, "meter.write_j");
+        assert_eq!(d.index, 0);
+        assert_eq!(rep.ops, 1, "replay stops at the first divergence");
+    }
+
+    #[test]
+    fn meter_diff_is_nan_safe_and_exhaustive() {
+        let a = EnergyMeter::default();
+        assert_eq!(meter_diff(&a, &a), None);
+        let mut nan = a.clone();
+        nan.static_j = f64::NAN;
+        // NaN != NaN under IEEE ==, but bit-compare sees them as equal —
+        // and a NaN vs a number is a divergence
+        assert_eq!(meter_diff(&nan, &nan), None);
+        assert!(meter_diff(&a, &nan).is_some());
+        let mut c = a.clone();
+        c.flips_committed = 1;
+        assert_eq!(meter_diff(&a, &c).unwrap().0, "flips_committed");
+    }
+
+    #[test]
+    fn cross_seed_mcaimem_replay_diverges() {
+        // different construction seed → different weak-cell population →
+        // stale reads corrupt differently; the replay must catch it
+        let spec = BackendSpec::Mcaimem { vref: 0.8, encode: false };
+        let (mut b, log) = TracingBackend::wrap(backend::build(&spec, 16 * 1024, 1), 16 * 1024, 1, 0);
+        b.store(0, &vec![0u8; 256], 0.0);
+        let _ = b.load(0, 256, 300e-6); // way past retention
+        let mut trace = log.lock().unwrap().clone();
+        trace.seed = 2; // lie about the seed → different corners on rebuild
+        let mut target = trace.build_target().unwrap();
+        let rep = replay(&trace, target.as_mut());
+        assert!(rep.divergence.is_some(), "cross-seed corruption must differ");
+    }
+
+    #[test]
+    fn clock_divergence_is_caught() {
+        let trace = recorded(&BackendSpec::Sram);
+        let mut broken = trace.clone();
+        if let Op::Tick { t } = &mut broken.entries[2].op {
+            *t += 1e-9; // op drifts, expectation doesn't
+        } else {
+            panic!("op 2 is the tick");
+        }
+        let mut target = trace.build_target().unwrap();
+        let rep = replay(&broken, target.as_mut());
+        let d = rep.divergence.expect("must diverge");
+        assert_eq!(d.field, "clock");
+    }
+}

@@ -1,0 +1,545 @@
+//! The versioned operation trace and the recording backend wrapper.
+//!
+//! A [`Trace`] is a replayable transcript of device-level traffic against
+//! one backend: the header pins the backend geometry (`spec`, requested
+//! `bytes`, construction `seed`, shard count), and every entry carries the
+//! operation plus the *expected outcome* observed at record time — the
+//! FNV-1a digest of loaded bytes and the full [`EnergyMeter`] snapshot
+//! (bytes, events, joules, committed flips) after the op. Replaying the
+//! trace against any backend ([`crate::sim::replay`]) therefore checks
+//! byte-exactness *and* meter-exactness op by op, and reports the first
+//! divergence with a field-by-field diff.
+//!
+//! Traces serialize to versioned JSON (via [`crate::util::json`]) so a CI
+//! failure can upload its minimal reproducing trace as an artifact and
+//! anyone can replay it locally with `mcaimem conform --replay <file>`.
+//! f64 meter fields round-trip exactly: the writer emits the shortest
+//! representation that parses back to the same bits.
+//!
+//! [`TracingBackend`] records live traffic: it wraps any
+//! `Box<dyn MemoryBackend>` behind the same trait, so it threads through
+//! [`crate::coordinator::buffer_manager::BufferManager`] (and, via
+//! [`crate::coordinator::pool::WorkerPool::start_with_buffers`], the whole
+//! serving tier) unchanged — the layers above never know they are being
+//! recorded.
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Result};
+
+use crate::mem::backend::{self, BackendSpec, MemoryBackend};
+use crate::mem::energy::EnergyCard;
+use crate::mem::mcaimem::EnergyMeter;
+use crate::mem::sharded::ShardedBackend;
+use crate::util::json::Json;
+
+/// Trace format version — bump on any schema change so stale artifacts are
+/// rejected with a clear error instead of mis-replayed.
+pub const TRACE_VERSION: u64 = 1;
+
+/// One device-level operation, with its absolute device time (s). Times are
+/// absolute (not deltas) so a subsequence of a trace is still monotone —
+/// the property the shrinker leans on.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Op {
+    Store { addr: usize, data: Vec<u8>, t: f64 },
+    Load { addr: usize, len: usize, t: f64 },
+    Tick { t: f64 },
+    RefreshRow { row: usize, t: f64 },
+}
+
+impl Op {
+    /// Absolute device time of this op.
+    pub fn time(&self) -> f64 {
+        match self {
+            Op::Store { t, .. } | Op::Load { t, .. } | Op::Tick { t } | Op::RefreshRow { t, .. } => {
+                *t
+            }
+        }
+    }
+
+    /// Compact human label for divergence reports.
+    pub fn describe(&self) -> String {
+        match self {
+            Op::Store { addr, data, t } => {
+                format!("store addr={addr} len={} t={t:e}", data.len())
+            }
+            Op::Load { addr, len, t } => format!("load addr={addr} len={len} t={t:e}"),
+            Op::Tick { t } => format!("tick t={t:e}"),
+            Op::RefreshRow { row, t } => format!("refresh_row row={row} t={t:e}"),
+        }
+    }
+}
+
+/// The outcome recorded after one op: what replay must reproduce.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Expect {
+    /// FNV-1a 64 digest of the returned bytes (loads only).
+    pub digest: Option<u64>,
+    /// Full meter snapshot after the op.
+    pub meter: EnergyMeter,
+    /// Device clock after the op.
+    pub now: f64,
+}
+
+/// One trace entry: the op plus its recorded expectation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEntry {
+    pub op: Op,
+    pub expect: Expect,
+}
+
+/// A replayable transcript of traffic against one backend geometry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Trace {
+    pub version: u64,
+    pub spec: BackendSpec,
+    /// Requested capacity (bytes) the backend was built with (the factory
+    /// rounds up to whole banks — rebuilding from `bytes` reproduces the
+    /// exact geometry).
+    pub bytes: usize,
+    /// Construction seed (per-cell leakage corners, shard seed derivation).
+    pub seed: u64,
+    /// Shard count: `0` means a flat (unsharded) backend; `n >= 1` means a
+    /// [`ShardedBackend`] with `n` shards. A 1-shard stripe is *not* the
+    /// flat array — striping splits every access into 64-byte chunk events,
+    /// so the meters differ — hence the explicit 0 for flat.
+    pub shards: usize,
+    pub entries: Vec<TraceEntry>,
+}
+
+/// FNV-1a 64-bit digest — the payload fingerprint loads are checked by.
+pub fn digest(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+impl Trace {
+    /// An empty trace for the given geometry.
+    pub fn new(spec: BackendSpec, bytes: usize, seed: u64, shards: usize) -> Trace {
+        Trace { version: TRACE_VERSION, spec, bytes, seed, shards, entries: Vec::new() }
+    }
+
+    /// Build the backend this trace was recorded against (flat or sharded).
+    pub fn build_target(&self) -> Result<Box<dyn MemoryBackend>> {
+        if self.shards == 0 {
+            Ok(backend::build(&self.spec, self.bytes, self.seed))
+        } else {
+            Ok(Box::new(ShardedBackend::new(&self.spec, self.shards, self.bytes, self.seed)?))
+        }
+    }
+
+    /// The bare op sequence (what the shrinker permutes subsets of).
+    pub fn ops(&self) -> Vec<Op> {
+        self.entries.iter().map(|e| e.op.clone()).collect()
+    }
+
+    /// Record expectations for `ops` by driving `target` (freshly built for
+    /// this trace's geometry) through them. This is how the shrinker
+    /// re-baselines a candidate subsequence: expectations recorded under
+    /// the full sequence go stale the moment an op is dropped, so every
+    /// candidate is re-recorded on a fresh reference before re-checking.
+    pub fn record_onto(&self, target: &mut dyn MemoryBackend, ops: &[Op]) -> Trace {
+        let mut out = Trace::new(self.spec, self.bytes, self.seed, self.shards);
+        for op in ops {
+            let dig = apply_op(target, op);
+            out.entries.push(TraceEntry {
+                op: op.clone(),
+                expect: Expect { digest: dig, meter: target.meter().clone(), now: target.now() },
+            });
+        }
+        out
+    }
+
+    /// Per-op-kind counts: (stores, loads, ticks, refreshes).
+    pub fn op_counts(&self) -> (usize, usize, usize, usize) {
+        let mut c = (0, 0, 0, 0);
+        for e in &self.entries {
+            match e.op {
+                Op::Store { .. } => c.0 += 1,
+                Op::Load { .. } => c.1 += 1,
+                Op::Tick { .. } => c.2 += 1,
+                Op::RefreshRow { .. } => c.3 += 1,
+            }
+        }
+        c
+    }
+
+    // -- JSON serialization -------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("version", Json::Num(self.version as f64)),
+            ("spec", Json::Str(self.spec.to_string())),
+            ("bytes", Json::Num(self.bytes as f64)),
+            // hex string, not a JSON number: seeds are full 64-bit values
+            // (shard_seeds outputs routinely exceed 2^53) and an f64
+            // round-trip would silently rebuild a different weak-cell
+            // population — corrupting the --replay artifact contract
+            ("seed", Json::Str(format!("{:016x}", self.seed))),
+            ("shards", Json::Num(self.shards as f64)),
+            (
+                "ops",
+                Json::Arr(self.entries.iter().map(entry_to_json).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Trace> {
+        let version = j.get("version")?.as_f64().unwrap_or(0.0) as u64;
+        if version != TRACE_VERSION {
+            bail!("trace version {version} (this build replays version {TRACE_VERSION})");
+        }
+        let spec: BackendSpec = j.get("spec")?.as_str().unwrap_or("").parse()?;
+        let mut t = Trace::new(
+            spec,
+            j.get("bytes")?.as_usize().unwrap_or(0),
+            u64::from_str_radix(j.get("seed")?.as_str().unwrap_or("0"), 16)?,
+            j.get("shards")?.as_usize().unwrap_or(0),
+        );
+        for e in j.get("ops")?.as_arr().unwrap_or(&[]) {
+            t.entries.push(entry_from_json(e)?);
+        }
+        Ok(t)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_pretty())
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Trace> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Trace::from_json(&Json::parse(&text)?)
+    }
+}
+
+/// Execute one op against a backend, returning the load digest if any.
+/// Shared by the recorder and the replay engine so both sides drive the
+/// device identically.
+pub fn apply_op(target: &mut dyn MemoryBackend, op: &Op) -> Option<u64> {
+    match op {
+        Op::Store { addr, data, t } => {
+            target.store(*addr, data, *t);
+            None
+        }
+        Op::Load { addr, len, t } => Some(digest(&target.load(*addr, *len, *t))),
+        Op::Tick { t } => {
+            target.tick(*t);
+            None
+        }
+        Op::RefreshRow { row, t } => {
+            target.refresh_row(*row, *t);
+            None
+        }
+    }
+}
+
+fn hex_encode(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        s.push_str(&format!("{b:02x}"));
+    }
+    s
+}
+
+fn hex_decode(s: &str) -> Result<Vec<u8>> {
+    if s.len() % 2 != 0 {
+        bail!("odd-length hex payload");
+    }
+    (0..s.len() / 2)
+        .map(|i| {
+            u8::from_str_radix(&s[2 * i..2 * i + 2], 16)
+                .map_err(|e| anyhow::anyhow!("bad hex byte at {i}: {e}"))
+        })
+        .collect()
+}
+
+/// The meter as JSON — field names match [`EnergyMeter`] so divergence
+/// reports and artifacts read the same.
+pub fn meter_to_json(m: &EnergyMeter) -> Json {
+    Json::obj(vec![
+        ("read_j", Json::Num(m.read_j)),
+        ("write_j", Json::Num(m.write_j)),
+        ("refresh_j", Json::Num(m.refresh_j)),
+        ("static_j", Json::Num(m.static_j)),
+        ("reads", Json::Num(m.reads as f64)),
+        ("writes", Json::Num(m.writes as f64)),
+        ("refreshes", Json::Num(m.refreshes as f64)),
+        ("bytes_read", Json::Num(m.bytes_read as f64)),
+        ("bytes_written", Json::Num(m.bytes_written as f64)),
+        ("flips_committed", Json::Num(m.flips_committed as f64)),
+        ("busy_s", Json::Num(m.busy_s)),
+    ])
+}
+
+pub fn meter_from_json(j: &Json) -> Result<EnergyMeter> {
+    let f = |k: &str| -> Result<f64> { Ok(j.get(k)?.as_f64().unwrap_or(0.0)) };
+    Ok(EnergyMeter {
+        read_j: f("read_j")?,
+        write_j: f("write_j")?,
+        refresh_j: f("refresh_j")?,
+        static_j: f("static_j")?,
+        reads: f("reads")? as u64,
+        writes: f("writes")? as u64,
+        refreshes: f("refreshes")? as u64,
+        bytes_read: f("bytes_read")? as u64,
+        bytes_written: f("bytes_written")? as u64,
+        flips_committed: f("flips_committed")? as u64,
+        busy_s: f("busy_s")?,
+    })
+}
+
+fn entry_to_json(e: &TraceEntry) -> Json {
+    let mut fields = match &e.op {
+        Op::Store { addr, data, t } => vec![
+            ("op", Json::Str("store".into())),
+            ("addr", Json::Num(*addr as f64)),
+            ("data", Json::Str(hex_encode(data))),
+            ("t", Json::Num(*t)),
+        ],
+        Op::Load { addr, len, t } => vec![
+            ("op", Json::Str("load".into())),
+            ("addr", Json::Num(*addr as f64)),
+            ("len", Json::Num(*len as f64)),
+            ("t", Json::Num(*t)),
+        ],
+        Op::Tick { t } => vec![("op", Json::Str("tick".into())), ("t", Json::Num(*t))],
+        Op::RefreshRow { row, t } => vec![
+            ("op", Json::Str("refresh".into())),
+            ("row", Json::Num(*row as f64)),
+            ("t", Json::Num(*t)),
+        ],
+    };
+    if let Some(d) = e.expect.digest {
+        fields.push(("digest", Json::Str(format!("{d:016x}"))));
+    }
+    fields.push(("meter", meter_to_json(&e.expect.meter)));
+    fields.push(("now", Json::Num(e.expect.now)));
+    Json::obj(fields)
+}
+
+fn entry_from_json(j: &Json) -> Result<TraceEntry> {
+    let t = j.get("t")?.as_f64().unwrap_or(0.0);
+    let op = match j.get("op")?.as_str().unwrap_or("") {
+        "store" => Op::Store {
+            addr: j.get("addr")?.as_usize().unwrap_or(0),
+            data: hex_decode(j.get("data")?.as_str().unwrap_or(""))?,
+            t,
+        },
+        "load" => Op::Load {
+            addr: j.get("addr")?.as_usize().unwrap_or(0),
+            len: j.get("len")?.as_usize().unwrap_or(0),
+            t,
+        },
+        "tick" => Op::Tick { t },
+        "refresh" => Op::RefreshRow { row: j.get("row")?.as_usize().unwrap_or(0), t },
+        other => bail!("unknown trace op `{other}`"),
+    };
+    let dig = match j.get("digest") {
+        Ok(d) => Some(u64::from_str_radix(d.as_str().unwrap_or(""), 16)?),
+        Err(_) => None,
+    };
+    Ok(TraceEntry {
+        op,
+        expect: Expect {
+            digest: dig,
+            meter: meter_from_json(j.get("meter")?)?,
+            now: j.get("now")?.as_f64().unwrap_or(0.0),
+        },
+    })
+}
+
+/// Shared handle to a trace being recorded (the recorder moves into the
+/// layers above with the backend; the caller keeps this to read the trace
+/// back out after the run).
+pub type TraceHandle = Arc<Mutex<Trace>>;
+
+/// A recording wrapper around any backend: every device-API call is
+/// delegated to the inner backend and appended (with its observed outcome)
+/// to the shared trace. Implements [`MemoryBackend`] itself, so it threads
+/// through `BufferManager`, `ShardedBackend` composition and the worker
+/// pool unchanged.
+pub struct TracingBackend {
+    inner: Box<dyn MemoryBackend>,
+    log: TraceHandle,
+}
+
+impl TracingBackend {
+    /// Wrap `inner`, which the caller built for `(spec, bytes, seed,
+    /// shards)` — the header replay needs to rebuild an identical target
+    /// (`shards = 0` for a flat backend, `n` for a `ShardedBackend`).
+    /// Returns the boxed wrapper plus the live trace handle.
+    pub fn wrap(
+        inner: Box<dyn MemoryBackend>,
+        bytes: usize,
+        seed: u64,
+        shards: usize,
+    ) -> (Box<dyn MemoryBackend>, TraceHandle) {
+        let log = Arc::new(Mutex::new(Trace::new(inner.spec(), bytes, seed, shards)));
+        let handle = Arc::clone(&log);
+        (Box::new(TracingBackend { inner, log }), handle)
+    }
+
+    fn record(&mut self, op: Op, dig: Option<u64>) {
+        let expect =
+            Expect { digest: dig, meter: self.inner.meter().clone(), now: self.inner.now() };
+        self.log.lock().unwrap().entries.push(TraceEntry { op, expect });
+    }
+}
+
+impl MemoryBackend for TracingBackend {
+    fn spec(&self) -> BackendSpec {
+        self.inner.spec()
+    }
+
+    fn capacity(&self) -> usize {
+        self.inner.capacity()
+    }
+
+    fn now(&self) -> f64 {
+        self.inner.now()
+    }
+
+    fn store(&mut self, addr: usize, data: &[u8], now: f64) {
+        self.inner.store(addr, data, now);
+        self.record(Op::Store { addr, data: data.to_vec(), t: now }, None);
+    }
+
+    fn load(&mut self, addr: usize, len: usize, now: f64) -> Vec<u8> {
+        let out = self.inner.load(addr, len, now);
+        self.record(Op::Load { addr, len, t: now }, Some(digest(&out)));
+        out
+    }
+
+    fn tick(&mut self, now: f64) {
+        self.inner.tick(now);
+        self.record(Op::Tick { t: now }, None);
+    }
+
+    fn refresh_due(&self) -> Option<f64> {
+        self.inner.refresh_due()
+    }
+
+    fn refresh_row(&mut self, row: usize, now: f64) {
+        self.inner.refresh_row(row, now);
+        self.record(Op::RefreshRow { row, t: now }, None);
+    }
+
+    fn rows_per_bank(&self) -> usize {
+        self.inner.rows_per_bank()
+    }
+
+    fn meter(&self) -> &EnergyMeter {
+        self.inner.meter()
+    }
+
+    fn shard_meters(&self) -> Vec<EnergyMeter> {
+        self.inner.shard_meters()
+    }
+
+    fn energy_card(&self) -> &EnergyCard {
+        self.inner.energy_card()
+    }
+
+    fn label(&self) -> String {
+        self.inner.label()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_trace() -> Trace {
+        let spec = BackendSpec::Sram;
+        let (mut b, log) = TracingBackend::wrap(backend::build(&spec, 16 * 1024, 3), 16 * 1024, 3, 0);
+        b.store(5, &[1, 2, 3], 1e-6);
+        let out = b.load(5, 3, 2e-6);
+        assert_eq!(out, vec![1, 2, 3]);
+        b.tick(3e-6);
+        let t = log.lock().unwrap().clone();
+        t
+    }
+
+    #[test]
+    fn recorder_captures_ops_and_outcomes() {
+        let t = sample_trace();
+        assert_eq!(t.entries.len(), 3);
+        assert_eq!(t.op_counts(), (1, 1, 1, 0));
+        match &t.entries[1] {
+            TraceEntry { op: Op::Load { addr: 5, len: 3, .. }, expect } => {
+                assert_eq!(expect.digest, Some(digest(&[1, 2, 3])));
+                assert_eq!(expect.meter.bytes_read, 3);
+            }
+            other => panic!("unexpected entry {other:?}"),
+        }
+        // meters are cumulative snapshots: later entries dominate earlier
+        assert!(t.entries[2].expect.meter.static_j >= t.entries[0].expect.meter.static_j);
+    }
+
+    #[test]
+    fn trace_json_roundtrips_exactly() {
+        let t = sample_trace();
+        let j = t.to_json();
+        let back = Trace::from_json(&Json::parse(&j.to_pretty()).unwrap()).unwrap();
+        assert_eq!(back, t, "JSON round-trip must preserve every field bit-exactly");
+    }
+
+    #[test]
+    fn full_64_bit_seeds_survive_the_json_roundtrip() {
+        // seeds are full u64 (shard_seeds values exceed 2^53); a JSON
+        // number would corrupt them through the f64 path
+        let mut t = sample_trace();
+        t.seed = 0xFFFF_FFFF_FFFF_FFFE; // not representable as f64
+        let back = Trace::from_json(&Json::parse(&t.to_json().to_pretty()).unwrap()).unwrap();
+        assert_eq!(back.seed, 0xFFFF_FFFF_FFFF_FFFE);
+    }
+
+    #[test]
+    fn version_mismatch_is_rejected() {
+        let mut j = sample_trace().to_json();
+        if let Json::Obj(o) = &mut j {
+            o.insert("version".into(), Json::Num(999.0));
+        }
+        let err = Trace::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("version 999"), "{err}");
+    }
+
+    #[test]
+    fn digest_is_stable_and_length_sensitive() {
+        assert_eq!(digest(b""), 0xcbf2_9ce4_8422_2325);
+        assert_ne!(digest(b"a"), digest(b"b"));
+        assert_ne!(digest(&[0]), digest(&[0, 0]));
+        // pinned FNV-1a vector ("a" = 0x61)
+        assert_eq!(digest(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+
+    #[test]
+    fn hex_roundtrip() {
+        let data: Vec<u8> = (0..=255).collect();
+        assert_eq!(hex_decode(&hex_encode(&data)).unwrap(), data);
+        assert!(hex_decode("abc").is_err());
+        assert!(hex_decode("zz").is_err());
+    }
+
+    #[test]
+    fn record_onto_rebaselines_a_subsequence() {
+        let t = sample_trace();
+        let ops = t.ops();
+        // drop the store: the load's digest/meter must be re-recorded, not
+        // inherited from the full run
+        let mut fresh = t.build_target().unwrap();
+        let sub = t.record_onto(fresh.as_mut(), &ops[1..]);
+        assert_eq!(sub.entries.len(), 2);
+        assert_ne!(
+            sub.entries[0].expect.digest,
+            t.entries[1].expect.digest,
+            "load of never-written bytes must digest differently"
+        );
+    }
+}

@@ -187,20 +187,43 @@ impl BenchSuite {
 
 impl BenchSuite {
     /// Parse a `BENCH_<suite>.json` file back into a suite (the baseline
-    /// side of [`compare`]).
+    /// side of [`compare`]). Tolerant of *partially* filled files: a result
+    /// entry missing fields (a hand-seeded or placeholder baseline) loads
+    /// with zero defaults instead of failing the whole gate — [`compare`]
+    /// then sidelines zero-ns entries as skip-with-note. A file that does
+    /// not parse as JSON, or that lacks the `results` array entirely
+    /// (renamed key, truncation), is still a loud error.
     pub fn load_json(path: &Path) -> crate::Result<BenchSuite> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
         let j = Json::parse(&text)?;
-        let suite = j.get("suite")?.as_str().unwrap_or("unknown").to_string();
+        let field = |r: &Json, k: &str| r.get(k).ok().and_then(|v| v.as_f64()).unwrap_or(0.0);
+        let suite = j
+            .get("suite")
+            .ok()
+            .and_then(|s| s.as_str())
+            .unwrap_or("unknown")
+            .to_string();
+        // the `results` key itself is NOT optional: a baseline without it
+        // (renamed key, truncated file) is schema drift and must fail the
+        // gate loudly — only fields *within* an entry are tolerated
+        let results_json = j
+            .get("results")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("`results` in {} is not an array", path.display()))?;
         let mut results = Vec::new();
-        for r in j.get("results")?.as_arr().unwrap_or(&[]) {
+        for r in results_json {
             results.push(BenchResult {
-                name: r.get("name")?.as_str().unwrap_or_default().to_string(),
-                iters: r.get("iters")?.as_usize().unwrap_or(0),
-                mean_ns: r.get("ns_per_iter")?.as_f64().unwrap_or(0.0),
-                p50_ns: r.get("p50_ns")?.as_f64().unwrap_or(0.0),
-                min_ns: r.get("min_ns")?.as_f64().unwrap_or(0.0),
+                name: r
+                    .get("name")
+                    .ok()
+                    .and_then(|n| n.as_str())
+                    .unwrap_or_default()
+                    .to_string(),
+                iters: field(r, "iters") as usize,
+                mean_ns: field(r, "ns_per_iter"),
+                p50_ns: field(r, "p50_ns"),
+                min_ns: field(r, "min_ns"),
                 elems: r.get("elems").ok().and_then(|e| e.as_f64()),
             });
         }
@@ -234,6 +257,12 @@ pub struct CompareReport {
     pub missing: Vec<String>,
     /// Benches present only in the current run (new, ungated).
     pub added: Vec<String>,
+    /// Baseline entries that carry no usable measurement (zero/absent
+    /// ns/iter — a partially filled or placeholder baseline). These are
+    /// sidelined with a note instead of gating: only an entry with a real
+    /// baseline number can regress. An *entirely* empty baseline skips the
+    /// whole gate upstream; a partially empty one must not hard-fail it.
+    pub skipped: Vec<String>,
 }
 
 impl CompareReport {
@@ -264,17 +293,57 @@ impl CompareReport {
         for m in &self.missing {
             s.push_str(&format!("| {m} | — | *missing from current run* | |\n"));
         }
+        for k in &self.skipped {
+            s.push_str(&format!("| {k} | *no baseline measurement* | *skipped* | |\n"));
+        }
         for a in &self.added {
             s.push_str(&format!("| {a} | *new* | | |\n"));
         }
         s
     }
+
+    /// One-line note about entries the gate could not judge (skipped
+    /// placeholder baselines, benches missing from the current run) —
+    /// empty when every pair was compared for real.
+    pub fn skip_note(&self) -> Option<String> {
+        if self.skipped.is_empty() && self.missing.is_empty() {
+            return None;
+        }
+        let mut parts = Vec::new();
+        if !self.skipped.is_empty() {
+            parts.push(format!(
+                "{} baseline entr{} without a measurement skipped ({})",
+                self.skipped.len(),
+                if self.skipped.len() == 1 { "y" } else { "ies" },
+                self.skipped.join(", ")
+            ));
+        }
+        if !self.missing.is_empty() {
+            parts.push(format!(
+                "{} baseline bench(es) missing from this run ({})",
+                self.missing.len(),
+                self.missing.join(", ")
+            ));
+        }
+        Some(format!(
+            "bench gate note: {} — refresh the committed baseline from a full run",
+            parts.join("; ")
+        ))
+    }
 }
 
-/// Pair up baseline and current results by bench name.
+/// Pair up baseline and current results by bench name. Baseline entries
+/// without a usable measurement (ns/iter ≤ 0 — placeholder or hand-seeded
+/// partial files) land in `skipped`, not `deltas`: a partially empty
+/// baseline degrades to skip-with-note exactly like the fully empty one,
+/// never to a hard gate failure.
 pub fn compare(baseline: &BenchSuite, current: &BenchSuite) -> CompareReport {
     let mut report = CompareReport::default();
     for b in &baseline.results {
+        if b.mean_ns <= 0.0 {
+            report.skipped.push(b.name.clone());
+            continue;
+        }
         match current.results.iter().find(|c| c.name == b.name) {
             Some(c) => report.deltas.push(BenchDelta {
                 name: b.name.clone(),
@@ -360,6 +429,69 @@ mod tests {
         let md = rep.markdown();
         assert!(md.contains("+20.0%"), "{md}");
         assert!(md.contains("missing from current run"), "{md}");
+    }
+
+    #[test]
+    fn partially_empty_baseline_skips_with_note_instead_of_gating() {
+        // a baseline whose entries carry no measurement (hand-seeded or
+        // placeholder partial file) must sideline those entries — never
+        // flag them as regressions, never hard-error
+        let mut base = BenchSuite::new("hotpath");
+        base.record(res("mem::write 16KB (word-parallel)", 100.0));
+        base.record(res("mem::read 16KB (fresh, word-parallel)", 0.0)); // placeholder
+        let mut cur = BenchSuite::new("hotpath");
+        cur.record(res("mem::write 16KB (word-parallel)", 105.0));
+        cur.record(res("mem::read 16KB (fresh, word-parallel)", 99999.0));
+        let rep = compare(&base, &cur);
+        assert_eq!(rep.deltas.len(), 1, "only the measured pair is gated");
+        assert_eq!(rep.skipped, vec!["mem::read 16KB (fresh, word-parallel)".to_string()]);
+        assert!(rep.regressions(15.0, |n| n.contains("word-parallel")).is_empty());
+        let note = rep.skip_note().expect("skips must be surfaced");
+        assert!(note.contains("without a measurement"), "{note}");
+        assert!(rep.markdown().contains("no baseline measurement"), "{}", rep.markdown());
+        // fully measured baselines carry no note
+        let clean = compare(&cur, &cur);
+        assert!(clean.skip_note().is_none());
+        // a baseline where NOTHING is judgeable is distinguishable from the
+        // partial case (the gate treats it as schema drift and fails):
+        // deltas empty, skips present
+        let mut dead = BenchSuite::new("hotpath");
+        dead.record(res("mem::write 16KB (word-parallel)", 0.0));
+        let drift = compare(&dead, &cur);
+        assert!(drift.deltas.is_empty() && !drift.skipped.is_empty());
+    }
+
+    #[test]
+    fn load_json_tolerates_missing_entry_fields() {
+        // entries missing iters/p50/min (a partially filled baseline) must
+        // load with defaults, not fail the gate before it starts
+        let dir = std::env::temp_dir();
+        let path = dir.join("BENCH_partial_gate_test.json");
+        std::fs::write(
+            &path,
+            r#"{"suite": "hotpath", "results": [
+                {"name": "only-name"},
+                {"name": "with-ns", "ns_per_iter": 42.0}
+            ]}"#,
+        )
+        .unwrap();
+        let suite = BenchSuite::load_json(&path).unwrap();
+        assert_eq!(suite.results.len(), 2);
+        assert_eq!(suite.results[0].mean_ns, 0.0);
+        assert_eq!(suite.results[1].mean_ns, 42.0);
+        // but a baseline without the `results` key at all is schema drift
+        // and must fail loudly, not load as an empty (gate-skipping) suite
+        std::fs::write(&path, r#"{"suite": "hotpath"}"#).unwrap();
+        assert!(BenchSuite::load_json(&path).is_err());
+        // and through compare: the field-less entry is skipped, the real
+        // one gates normally
+        let mut cur = BenchSuite::new("hotpath");
+        cur.record(res("only-name", 10.0));
+        cur.record(res("with-ns", 43.0));
+        let rep = compare(&suite, &cur);
+        assert_eq!(rep.skipped, vec!["only-name".to_string()]);
+        assert_eq!(rep.deltas.len(), 1);
+        let _ = std::fs::remove_file(path);
     }
 
     #[test]

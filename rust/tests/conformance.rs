@@ -1,0 +1,233 @@
+//! End-to-end conformance acceptance tests (ISSUE 4): every backend
+//! replays its own recorded trace exactly; MCAIMem (word-parallel, flat
+//! and sharded ×4) matches the golden model bit- and meter-exactly; the
+//! recorder threads through `BufferManager` and `WorkerPool` unchanged; an
+//! intentionally injected off-by-one is caught and shrunk to a minimal
+//! reproducing trace; and failure artifacts round-trip through JSON.
+//!
+//! The CLI campaign (`mcaimem conform --ops 20000 ...`) runs the same
+//! machinery at full depth; these tests keep op counts test-suite friendly.
+
+use std::time::Duration;
+
+use mcaimem::coordinator::buffer_manager::BufferManager;
+use mcaimem::coordinator::pool::{InferEngine, PoolConfig, SyntheticEngine, WorkerPool};
+use mcaimem::mem::backend::{self, BackendSpec, MemoryBackend};
+use mcaimem::mem::energy::EnergyCard;
+use mcaimem::mem::mcaimem::EnergyMeter;
+use mcaimem::mem::sharded::ShardedBackend;
+use mcaimem::sim::campaign::{self, minimize, CampaignConfig};
+use mcaimem::sim::oracle::OracleBackend;
+use mcaimem::sim::replay::replay;
+use mcaimem::sim::trace::{Trace, TracingBackend};
+
+fn acceptance_specs() -> Vec<BackendSpec> {
+    BackendSpec::parse_list("sram,edram2t,rram,mcaimem@0.8,mcaimem@0.7-noenc").unwrap()
+}
+
+#[test]
+fn every_backend_replays_its_own_campaign_trace_exactly() {
+    let cfg = CampaignConfig { ops: 300, seed: 7, bytes: 64 * 1024, shards: 4, shrink: false };
+    for spec in acceptance_specs() {
+        for shards in [0usize, 4] {
+            let trace = campaign::record(&spec, shards, &cfg).unwrap();
+            let rep = campaign::verify_self(&trace).unwrap();
+            assert!(
+                rep.exact(),
+                "{spec} shards={shards}: {}",
+                rep.divergence.unwrap()
+            );
+        }
+    }
+}
+
+#[test]
+fn mcaimem_sharded_x4_matches_the_golden_model_bit_and_meter_exactly() {
+    // the acceptance configuration: word-parallel mcaimem@0.8 striped
+    // across 4 shards, diffed against the naive byte-per-cell oracle
+    let cfg = CampaignConfig { ops: 400, seed: 7, bytes: 64 * 1024, shards: 4, shrink: false };
+    for spec in ["mcaimem@0.8", "mcaimem@0.7-noenc"] {
+        let spec: BackendSpec = spec.parse().unwrap();
+        for shards in [0usize, 4] {
+            let trace = campaign::record(&spec, shards, &cfg).unwrap();
+            let rep = campaign::verify_oracle(&trace).unwrap();
+            assert!(
+                rep.exact(),
+                "{spec} shards={shards} diverged from the oracle: {}",
+                rep.divergence.unwrap()
+            );
+            assert_eq!(rep.ops, trace.entries.len());
+        }
+    }
+}
+
+#[test]
+fn tracing_backend_threads_through_buffer_manager() {
+    // the recorder sits below the manager: allocation, refresh-controller
+    // slots and tensor traffic all land in the trace, and the trace
+    // replays exactly on a fresh identical backend
+    let spec = BackendSpec::mcaimem_default();
+    let inner = backend::build(&spec, 64 * 1024, 11);
+    let (traced, log) = TracingBackend::wrap(inner, 64 * 1024, 11, 0);
+    let mut bm = BufferManager::from_backend(traced);
+    let h = bm.alloc(1000).unwrap();
+    let data: Vec<u8> = (0..1000u32).map(|i| (i * 13) as u8).collect();
+    bm.store(h, &data).unwrap();
+    for _ in 0..40 {
+        bm.tick(1e-6); // fires refresh slots into the recorded backend
+    }
+    assert_eq!(bm.load(h), data);
+    let trace = log.lock().unwrap().clone();
+    let (_, _, _, refreshes) = trace.op_counts();
+    assert!(refreshes > 0, "manager-driven refresh must appear in the trace");
+    let mut target = trace.build_target().unwrap();
+    let rep = replay(&trace, target.as_mut());
+    assert!(rep.exact(), "{}", rep.divergence.unwrap());
+    // and the same trace matches the golden model
+    let mut orc = OracleBackend::for_trace(&trace).unwrap();
+    let rep = replay(&trace, &mut orc);
+    assert!(rep.exact(), "oracle: {}", rep.divergence.unwrap());
+}
+
+#[test]
+fn tracing_backend_threads_through_the_worker_pool() {
+    // record real serving traffic: a worker stages every batch through its
+    // buffer (store → tick → load), all below the recorder. Wall-clock
+    // batching is nondeterministic; the recorded device schedule replays
+    // exactly regardless.
+    let spec = BackendSpec::mcaimem_default();
+    let sharded = ShardedBackend::new(&spec, 2, 64 * 1024, 21).unwrap();
+    let (traced, log) = TracingBackend::wrap(Box::new(sharded), 64 * 1024, 21, 2);
+    let buffers = vec![BufferManager::from_backend(traced)];
+    let cfg = PoolConfig {
+        backend: spec,
+        workers: 1,
+        shards: 2,
+        buffer_bytes: 64 * 1024,
+        batch_window: Duration::from_micros(50),
+        high_water: 10_000,
+        seed: 21,
+        ..PoolConfig::default()
+    };
+    let engines: Vec<Box<dyn InferEngine>> = vec![Box::new(SyntheticEngine {
+        exec_latency: Duration::ZERO,
+        ..Default::default()
+    })];
+    let pool = WorkerPool::start_with_buffers(cfg, engines, buffers).unwrap();
+    for i in 0..12 {
+        let (_, _) = pool.classify(vec![i as i8; 784]).unwrap();
+    }
+    let stats = pool.shutdown();
+    assert_eq!(stats.requests, 12);
+
+    let trace = log.lock().unwrap().clone();
+    assert!(!trace.entries.is_empty(), "serving traffic must be recorded");
+    let (stores, loads, _, _) = trace.op_counts();
+    assert!(stores > 0 && loads > 0, "staged batches are stores+loads");
+    let mut target = trace.build_target().unwrap();
+    let rep = replay(&trace, target.as_mut());
+    assert!(rep.exact(), "{}", rep.divergence.unwrap());
+}
+
+/// The "scratch branch with an off-by-one" of the acceptance criteria:
+/// loads of ≥ 2 bytes return the byte at `len-2` in the last position.
+struct OffByOne {
+    inner: Box<dyn MemoryBackend>,
+}
+
+impl MemoryBackend for OffByOne {
+    fn spec(&self) -> BackendSpec {
+        self.inner.spec()
+    }
+    fn capacity(&self) -> usize {
+        self.inner.capacity()
+    }
+    fn now(&self) -> f64 {
+        self.inner.now()
+    }
+    fn store(&mut self, addr: usize, data: &[u8], now: f64) {
+        self.inner.store(addr, data, now)
+    }
+    fn load(&mut self, addr: usize, len: usize, now: f64) -> Vec<u8> {
+        let mut out = self.inner.load(addr, len, now);
+        if let [.., a, b] = out.as_mut_slice() {
+            *b = *a; // the off-by-one: last byte fetched from len-2
+        }
+        out
+    }
+    fn tick(&mut self, now: f64) {
+        self.inner.tick(now)
+    }
+    fn refresh_due(&self) -> Option<f64> {
+        self.inner.refresh_due()
+    }
+    fn refresh_row(&mut self, row: usize, now: f64) {
+        self.inner.refresh_row(row, now)
+    }
+    fn rows_per_bank(&self) -> usize {
+        self.inner.rows_per_bank()
+    }
+    fn meter(&self) -> &EnergyMeter {
+        self.inner.meter()
+    }
+    fn energy_card(&self) -> &EnergyCard {
+        self.inner.energy_card()
+    }
+}
+
+#[test]
+fn injected_off_by_one_is_caught_and_shrunk_to_a_minimal_trace() {
+    let cfg = CampaignConfig { ops: 500, seed: 7, bytes: 64 * 1024, shards: 0, shrink: true };
+    let spec = BackendSpec::mcaimem_default();
+    let trace = campaign::record(&spec, 0, &cfg).unwrap();
+
+    // the bug is caught...
+    let mut buggy = OffByOne { inner: trace.build_target().unwrap() };
+    let rep = replay(&trace, &mut buggy);
+    let div = rep.divergence.expect("the off-by-one must be caught");
+    assert_eq!(div.field, "bytes", "a byte-level bug diverges on bytes: {div}");
+
+    // ...and shrunk to a minimal reproducing trace of at most 20 ops
+    let minimal = minimize(
+        &trace,
+        &mut || trace.build_target().unwrap(),
+        &mut || Box::new(OffByOne { inner: trace.build_target().unwrap() }) as Box<dyn MemoryBackend>,
+    );
+    assert!(
+        (1..=20).contains(&minimal.entries.len()),
+        "shrunk to {} ops (acceptance bound: ≤ 20)",
+        minimal.entries.len()
+    );
+    // the minimal trace is a real reproduction: exact on the good build,
+    // diverging on the buggy one
+    let mut good = trace.build_target().unwrap();
+    assert!(replay(&minimal, good.as_mut()).exact());
+    let mut bad = OffByOne { inner: trace.build_target().unwrap() };
+    assert!(replay(&minimal, &mut bad).divergence.is_some());
+
+    // failure artifact round-trip: save → load → still reproduces (what a
+    // CI artifact replayed locally via `mcaimem conform --replay` does)
+    let path = std::env::temp_dir().join("mcaimem_conformance_minimal_trace.json");
+    minimal.save(&path).unwrap();
+    let loaded = Trace::load(&path).unwrap();
+    assert_eq!(loaded, minimal);
+    let mut bad = OffByOne { inner: loaded.build_target().unwrap() };
+    assert!(replay(&loaded, &mut bad).divergence.is_some());
+    let _ = std::fs::remove_file(path);
+}
+
+#[test]
+fn campaign_runner_end_to_end_is_green_for_the_acceptance_sweep() {
+    // the `mcaimem conform` path in miniature: all five acceptance specs,
+    // flat + sharded ×4, self-replay + oracle where applicable
+    let cfg = CampaignConfig { ops: 150, seed: 7, bytes: 64 * 1024, shards: 4, shrink: true };
+    let outcomes = campaign::run(&acceptance_specs(), &cfg).unwrap();
+    assert_eq!(outcomes.len(), 10, "5 specs × (flat + sharded)");
+    for o in &outcomes {
+        assert!(o.ok(), "{} {}: {:?}", o.spec, o.geometry(), o.failures);
+        assert!(o.failures.is_empty());
+    }
+    // oracle coverage exactly on the mcaimem specs
+    let oracled = outcomes.iter().filter(|o| o.oracle_ok == Some(true)).count();
+    assert_eq!(oracled, 4, "2 mcaimem specs × 2 geometries");
+}

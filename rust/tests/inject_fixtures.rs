@@ -1,0 +1,82 @@
+//! Pallas↔Rust inject cross-check (the test `inject::mod` docs promise).
+//!
+//! `python/compile/kernels/gen_inject_fixtures.py` runs the L1 Pallas
+//! retention-injection kernels (`inject_raw`, `mcaimem_store`,
+//! interpret=True) over deterministic vectors and checks the outputs into
+//! `tests/fixtures/inject_fixtures.json`. This test replays the identical
+//! transform through `inject::apply_flip_mask` / `inject::inject_with_mask`
+//! and asserts byte-identical results — Pallas is the recorded side, so no
+//! Python runs at test time.
+
+use std::path::Path;
+
+use mcaimem::inject::{apply_flip_mask, inject_with_mask, Mode};
+use mcaimem::util::json::Json;
+
+fn fixture_i8(case: &Json, key: &str) -> Vec<i8> {
+    case.get(key)
+        .unwrap_or_else(|e| panic!("fixture case missing `{key}`: {e}"))
+        .as_arr()
+        .expect("fixture arrays are JSON arrays")
+        .iter()
+        .map(|v| v.as_f64().expect("fixture entries are numbers") as i64 as i8)
+        .collect()
+}
+
+#[test]
+fn rust_inject_matches_pallas_fixture_vectors() {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/inject_fixtures.json");
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()));
+    let fixtures = Json::parse(&text).expect("fixture JSON parses");
+    let cases = fixtures.get("cases").unwrap().as_arr().unwrap();
+    assert!(cases.len() >= 4, "fixture file should carry several cases");
+
+    let mut vectors = 0usize;
+    for case in cases {
+        let name = case.get("name").unwrap().as_str().unwrap_or("?").to_string();
+        let x = fixture_i8(case, "x");
+        let mask = fixture_i8(case, "mask");
+        let raw = fixture_i8(case, "raw");
+        let store = fixture_i8(case, "store");
+        assert_eq!(x.len(), mask.len(), "{name}");
+        assert_eq!(x.len(), raw.len(), "{name}");
+        assert_eq!(x.len(), store.len(), "{name}");
+
+        // inject_raw: flips applied to the raw stored image
+        let mut got_raw = x.clone();
+        inject_with_mask(&mut got_raw, &mask, Mode::WithoutOneEnhancement);
+        assert_eq!(got_raw, raw, "{name}: inject_raw path diverged from Pallas");
+
+        // mcaimem_store: encode → age → decode
+        let mut got_store = x.clone();
+        inject_with_mask(&mut got_store, &mask, Mode::WithOneEnhancement);
+        assert_eq!(got_store, store, "{name}: mcaimem_store path diverged from Pallas");
+
+        // byte-level form agrees with the slice-level form
+        for ((&xv, &mv), &rv) in x.iter().zip(&mask).zip(&raw) {
+            assert_eq!(apply_flip_mask(xv as u8, mv as u8), rv as u8, "{name}");
+        }
+        vectors += x.len();
+    }
+    assert!(vectors > 3000, "fixtures should pin thousands of vectors, got {vectors}");
+}
+
+#[test]
+fn fixture_masks_respect_the_edram_plane_domain() {
+    // defense for regenerated fixtures: masks must never carry the sign bit
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/inject_fixtures.json");
+    let fixtures = Json::parse(&std::fs::read_to_string(path).unwrap()).unwrap();
+    for case in fixtures.get("cases").unwrap().as_arr().unwrap() {
+        for m in fixture_i8(case, "mask") {
+            assert_eq!(m as u8 & 0x80, 0, "mask byte {m} touches the sign plane");
+        }
+        // and the outputs only ever ADD bits relative to the input image
+        let x = fixture_i8(case, "x");
+        let raw = fixture_i8(case, "raw");
+        for (&before, &after) in x.iter().zip(&raw) {
+            assert_eq!(after as u8 & before as u8, before as u8);
+            assert_eq!(after as u8 & 0x80, before as u8 & 0x80);
+        }
+    }
+}
