@@ -7,11 +7,15 @@
 //! ```text
 //! mcaimem report <id|all> [--csv DIR] [--artifacts DIR] [--backend SPECS] [--quick]
 //! mcaimem fig11 [--artifacts DIR] [--quick]
-//! mcaimem simulate --network NAME [--platform eyeriss|tpuv1] [--backend SPECS]
+//! mcaimem simulate --network NAME [--platform eyeriss|tpuv1] [--backend SPECS] [--json FILE]
+//! mcaimem explore [--space SPEC] [--strategy grid|random|halving] [--json FILE] [--quick]
 //! mcaimem serve [--backend SPEC] [--shards N] [--workers K] [--target-rps R] [--sweep]
-//! mcaimem conform [--backend SPECS] [--ops N] [--seed S] [--quick] [--replay FILE]
+//! mcaimem conform [--backend SPECS] [--ops N] [--seed S] [--quick] [--replay FILE] [--json FILE]
 //! mcaimem selftest [--artifacts DIR]
 //! ```
+//!
+//! `explore` additionally takes the design-space grammar of
+//! [`crate::dse::space`] (`ratio=1..15,vref=0.6:0.9:0.05,geom=256x64|512x64`).
 
 pub mod args;
 

@@ -44,6 +44,28 @@ impl SimReport {
     pub fn total_j(&self) -> f64 {
         self.static_j + self.refresh_j + self.dynamic_j
     }
+
+    /// Machine-readable form for `mcaimem simulate --json` (serde-free via
+    /// [`crate::util::json`]): every meter/area field plus the parseable
+    /// backend spec, so DSE runs and CI can diff results without scraping
+    /// the rendered table.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("network", Json::Str(self.network.to_string())),
+            ("accelerator", Json::Str(self.accelerator.to_string())),
+            ("backend", Json::Str(self.backend.clone())),
+            ("sim_time_s", Json::Num(self.sim_time_s)),
+            ("static_j", Json::Num(self.static_j)),
+            ("refresh_j", Json::Num(self.refresh_j)),
+            ("dynamic_j", Json::Num(self.dynamic_j)),
+            ("total_j", Json::Num(self.total_j())),
+            ("refresh_ops", Json::Num(self.refresh_ops as f64)),
+            ("flips_committed", Json::Num(self.flips_committed as f64)),
+            ("weight_bytes_resident", Json::Num(self.weight_bytes_resident as f64)),
+            ("area_m2", Json::Num(self.area_m2)),
+        ])
+    }
 }
 
 /// Simulate one inference of `net` on `acc` with the buffer technology
@@ -143,6 +165,21 @@ mod tests {
     use super::*;
     use crate::energy::system_eval::evaluate;
     use crate::scalesim::{network, simulate_network};
+
+    #[test]
+    fn sim_report_json_roundtrips() {
+        let net = network::lenet();
+        let acc = AcceleratorConfig::eyeriss();
+        let r = simulate_inference(&net, &acc, &BackendSpec::mcaimem_default(), 5).unwrap();
+        let j = crate::util::json::Json::parse(&r.to_json().to_pretty()).unwrap();
+        assert_eq!(j.get("backend").unwrap().as_str().unwrap(), "mcaimem@0.8");
+        assert_eq!(j.get("network").unwrap().as_str().unwrap(), "LeNet");
+        let total = j.get("total_j").unwrap().as_f64().unwrap();
+        assert!((total - r.total_j()).abs() <= 1e-12 * r.total_j());
+        // the spec string in the artifact parses back to the spec
+        let spec: BackendSpec = j.get("backend").unwrap().as_str().unwrap().parse().unwrap();
+        assert_eq!(spec, BackendSpec::mcaimem_default());
+    }
 
     #[test]
     fn event_driven_matches_closed_form_static_refresh() {

@@ -1,0 +1,41 @@
+//! Design-space exploration: automated Pareto search over mixed-cell
+//! buffer designs.
+//!
+//! The paper's whole claim is a resolved three-way trade-off —
+//! performance, area and energy — evaluated at hand-picked points (the
+//! 1S·7E ratio, four V_REF candidates, fixed 256 × 64 B banks). This
+//! subsystem turns the repo's evaluators into a *search*: a parameterized
+//! design space, one composed evaluator, non-dominated sorting with a
+//! hypervolume indicator, and pluggable search strategies — in the spirit
+//! of the gain-cell memory-compiler DSE line of work (PAPERS.md).
+//!
+//! * [`space`] — the [`space::DesignPoint`] grammar (mixed-cell ratio
+//!   1S·NE for N ∈ 0..=15, V_REF, encoder switch, bank geometry, shard
+//!   count, refresh policy) with `FromStr`/`Display` round-tripping and
+//!   range/grid expansion (`ratio=1..15`, `vref=0.6:0.9:0.05`,
+//!   `geom=256x64|512x64`).
+//! * [`eval`] — `evaluate(&DesignPoint, &EvalContext) -> Objectives`
+//!   composing circuit retention/SNM sampling, the ratio-parameterized
+//!   area and Table II energy cards and the cached scalesim trace into an
+//!   objectives vector (area, energy/inference, latency, refresh power,
+//!   accuracy proxy), memoized on a content-hashed key and fanned out over
+//!   [`crate::util::par`] with seed-derived determinism.
+//! * [`pareto`] — non-dominated sorting, exact hypervolume (recursive
+//!   slicing), frontier JSON artifacts and run-to-run diffing.
+//! * [`search`] — exhaustive grid, seeded random and successive-halving
+//!   strategies behind the [`search::SearchStrategy`] trait.
+//!
+//! The CLI front end is `mcaimem explore` (see
+//! [`crate::report::pareto`] for the rendered frontier table and the JSON
+//! artifact CI diffs); EXPERIMENTS.md §Exploration documents the grammar
+//! and how to read the output.
+
+pub mod eval;
+pub mod pareto;
+pub mod search;
+pub mod space;
+
+pub use eval::{evaluate, evaluate_many, EvalCache, EvalContext, Objectives};
+pub use pareto::{diff, Frontier, FrontierDiff};
+pub use search::{SearchReport, SearchStrategy};
+pub use space::{DesignPoint, RefreshPolicy, Space};

@@ -1,0 +1,413 @@
+//! Pareto machinery: non-dominated sorting, the hypervolume indicator and
+//! frontier diffing between runs.
+//!
+//! All objectives are minimized. Dominance is the usual weak form:
+//! `a` dominates `b` iff `a ≤ b` component-wise with at least one strict
+//! `<` — exact ties survive on the frontier together, which keeps the
+//! result deterministic under duplicated evaluations.
+//!
+//! The hypervolume is computed exactly by recursive slicing (the classic
+//! HSO scheme): slice the last objective between consecutive frontier
+//! values, recurse on the non-dominated projection of each slab. Points
+//! are normalized to the evaluated set's per-dimension range first, with
+//! the reference at 1.1 — so the indicator is comparable between runs of
+//! the same space and a bigger number always means a better frontier.
+//!
+//! [`Frontier`] is the JSON-portable artifact (`frontier.json` from
+//! `mcaimem explore`); [`diff`] compares two of them by canonical
+//! design-point string so CI can flag points falling off the frontier.
+
+use std::collections::BTreeSet;
+
+use anyhow::anyhow;
+
+use super::eval::Objectives;
+use super::space::DesignPoint;
+use crate::util::json::Json;
+use crate::Result;
+
+/// `a` dominates `b` (all objectives ≤, at least one <).
+pub fn dominates(a: &[f64], b: &[f64]) -> bool {
+    debug_assert_eq!(a.len(), b.len());
+    let mut strict = false;
+    for (x, y) in a.iter().zip(b) {
+        if x > y {
+            return false;
+        }
+        if x < y {
+            strict = true;
+        }
+    }
+    strict
+}
+
+/// Indices of the non-dominated points (first Pareto front), in input
+/// order. O(n²) — fine for the grid sizes the explorer produces.
+pub fn pareto_indices(vectors: &[Vec<f64>]) -> Vec<usize> {
+    (0..vectors.len())
+        .filter(|&i| {
+            !vectors
+                .iter()
+                .enumerate()
+                .any(|(j, v)| j != i && dominates(v, &vectors[i]))
+        })
+        .collect()
+}
+
+/// Full non-dominated sorting: front 0 is the Pareto set, front k the
+/// Pareto set after removing fronts 0..k. Used by successive halving to
+/// rank survivors.
+pub fn nd_sort(vectors: &[Vec<f64>]) -> Vec<Vec<usize>> {
+    let mut remaining: Vec<usize> = (0..vectors.len()).collect();
+    let mut fronts = Vec::new();
+    while !remaining.is_empty() {
+        let front: Vec<usize> = remaining
+            .iter()
+            .copied()
+            .filter(|&i| {
+                !remaining
+                    .iter()
+                    .any(|&j| j != i && dominates(&vectors[j], &vectors[i]))
+            })
+            .collect();
+        // a cycle is impossible under strict dominance, but guard anyway
+        if front.is_empty() {
+            fronts.push(remaining.clone());
+            break;
+        }
+        remaining.retain(|i| !front.contains(i));
+        fronts.push(front);
+    }
+    fronts
+}
+
+/// Normalize each dimension to the set's [min, max] range (degenerate
+/// dimensions collapse to 0). Returns the normalized vectors.
+pub fn normalize(vectors: &[Vec<f64>]) -> Vec<Vec<f64>> {
+    if vectors.is_empty() {
+        return Vec::new();
+    }
+    let d = vectors[0].len();
+    let mut lo = vec![f64::INFINITY; d];
+    let mut hi = vec![f64::NEG_INFINITY; d];
+    for v in vectors {
+        for k in 0..d {
+            lo[k] = lo[k].min(v[k]);
+            hi[k] = hi[k].max(v[k]);
+        }
+    }
+    vectors
+        .iter()
+        .map(|v| {
+            (0..d)
+                .map(|k| {
+                    let span = hi[k] - lo[k];
+                    if span > 0.0 {
+                        (v[k] - lo[k]) / span
+                    } else {
+                        0.0
+                    }
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Exact hypervolume (minimization) dominated by `points` relative to
+/// `reference`; points at or beyond the reference in any dimension
+/// contribute nothing. Recursive slicing on the last dimension.
+pub fn hypervolume(points: &[Vec<f64>], reference: &[f64]) -> f64 {
+    let d = reference.len();
+    let inside: Vec<Vec<f64>> = points
+        .iter()
+        .filter(|p| p.iter().zip(reference).all(|(x, r)| x < r))
+        .cloned()
+        .collect();
+    let front: Vec<Vec<f64>> = pareto_indices(&inside)
+        .into_iter()
+        .map(|i| inside[i].clone())
+        .collect();
+    hv_rec(&front, &reference[..d])
+}
+
+fn hv_rec(front: &[Vec<f64>], reference: &[f64]) -> f64 {
+    let d = reference.len();
+    if front.is_empty() {
+        return 0.0;
+    }
+    if d == 1 {
+        let best = front.iter().map(|p| p[0]).fold(f64::INFINITY, f64::min);
+        return (reference[0] - best).max(0.0);
+    }
+    // slice along the last dimension, ascending
+    let mut order: Vec<&Vec<f64>> = front.iter().collect();
+    order.sort_by(|a, b| a[d - 1].partial_cmp(&b[d - 1]).unwrap());
+    let mut vol = 0.0;
+    for i in 0..order.len() {
+        let z = order[i][d - 1];
+        let z_next = if i + 1 < order.len() {
+            order[i + 1][d - 1]
+        } else {
+            reference[d - 1]
+        };
+        let depth = z_next - z;
+        if depth <= 0.0 {
+            continue;
+        }
+        // points active in this slab: everything with z ≤ current slice
+        let slab: Vec<Vec<f64>> = order[..=i]
+            .iter()
+            .map(|p| p[..d - 1].to_vec())
+            .collect();
+        let slab_front: Vec<Vec<f64>> = pareto_indices(&slab)
+            .into_iter()
+            .map(|k| slab[k].clone())
+            .collect();
+        vol += depth * hv_rec(&slab_front, &reference[..d - 1]);
+    }
+    vol
+}
+
+/// Normalized hypervolume of the whole evaluated set (reference 1.1 per
+/// dimension) — the run-level quality indicator the explorer reports.
+pub fn normalized_hypervolume(vectors: &[Vec<f64>]) -> f64 {
+    let normed = normalize(vectors);
+    let d = vectors.first().map(|v| v.len()).unwrap_or(0);
+    let reference = vec![1.1; d];
+    hypervolume(&normed, &reference)
+}
+
+// ---------------------------------------------------------------------------
+// Frontier artifact + diffing.
+// ---------------------------------------------------------------------------
+
+/// One evaluated frontier member.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FrontierPoint {
+    pub point: DesignPoint,
+    pub objectives: Objectives,
+}
+
+/// The Pareto frontier of one run, sorted by canonical point string so the
+/// JSON artifact is byte-stable regardless of evaluation order.
+#[derive(Clone, Debug, Default)]
+pub struct Frontier {
+    pub points: Vec<FrontierPoint>,
+}
+
+impl Frontier {
+    /// Extract the frontier from an evaluated set.
+    pub fn from_evaluated(evaluated: &[(DesignPoint, Objectives)]) -> Frontier {
+        let vectors: Vec<Vec<f64>> =
+            evaluated.iter().map(|(_, o)| o.vector().to_vec()).collect();
+        let mut points: Vec<FrontierPoint> = pareto_indices(&vectors)
+            .into_iter()
+            .map(|i| FrontierPoint { point: evaluated[i].0.clone(), objectives: evaluated[i].1 })
+            .collect();
+        points.sort_by(|a, b| a.point.to_string().cmp(&b.point.to_string()));
+        points.dedup_by(|a, b| a.point == b.point);
+        Frontier { points }
+    }
+
+    pub fn contains(&self, p: &DesignPoint) -> bool {
+        self.points.iter().any(|fp| fp.point == *p)
+    }
+
+    pub fn get(&self, p: &DesignPoint) -> Option<&FrontierPoint> {
+        self.points.iter().find(|fp| fp.point == *p)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.points
+                .iter()
+                .map(|fp| {
+                    Json::obj(vec![
+                        ("point", Json::Str(fp.point.to_string())),
+                        ("label", Json::Str(fp.point.short_label())),
+                        ("objectives", fp.objectives.to_json()),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    pub fn from_json(j: &Json) -> Result<Frontier> {
+        let arr = j.as_arr().ok_or_else(|| anyhow!("frontier JSON must be an array"))?;
+        let mut points = Vec::with_capacity(arr.len());
+        for e in arr {
+            points.push(FrontierPoint {
+                point: e
+                    .get("point")?
+                    .as_str()
+                    .ok_or_else(|| anyhow!("frontier `point` must be a string"))?
+                    .parse()?,
+                objectives: Objectives::from_json(e.get("objectives")?)?,
+            });
+        }
+        Ok(Frontier { points })
+    }
+}
+
+/// Difference between two frontiers (by canonical design-point string).
+#[derive(Clone, Debug, Default)]
+pub struct FrontierDiff {
+    /// Points on the new frontier that the old one didn't have.
+    pub added: Vec<String>,
+    /// Points the old frontier had that dropped off.
+    pub removed: Vec<String>,
+    /// Points on both.
+    pub kept: Vec<String>,
+}
+
+impl FrontierDiff {
+    pub fn is_unchanged(&self) -> bool {
+        self.added.is_empty() && self.removed.is_empty()
+    }
+}
+
+/// Compare two frontiers.
+pub fn diff(old: &Frontier, new: &Frontier) -> FrontierDiff {
+    let old_keys: BTreeSet<String> = old.points.iter().map(|p| p.point.to_string()).collect();
+    let new_keys: BTreeSet<String> = new.points.iter().map(|p| p.point.to_string()).collect();
+    FrontierDiff {
+        added: new_keys.difference(&old_keys).cloned().collect(),
+        removed: old_keys.difference(&new_keys).cloned().collect(),
+        kept: new_keys.intersection(&old_keys).cloned().collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(xs: &[f64]) -> Vec<f64> {
+        xs.to_vec()
+    }
+
+    #[test]
+    fn dominance_basics() {
+        assert!(dominates(&[1.0, 1.0], &[2.0, 2.0]));
+        assert!(dominates(&[1.0, 2.0], &[2.0, 2.0]));
+        assert!(!dominates(&[2.0, 2.0], &[1.0, 2.0]));
+        assert!(!dominates(&[1.0, 3.0], &[2.0, 2.0]), "trade-off: neither dominates");
+        assert!(!dominates(&[1.0, 1.0], &[1.0, 1.0]), "a point never dominates itself");
+    }
+
+    #[test]
+    fn pareto_front_of_a_staircase() {
+        let pts = vec![
+            v(&[1.0, 4.0]), // front
+            v(&[2.0, 3.0]), // front
+            v(&[3.0, 3.5]), // dominated by (2,3)
+            v(&[4.0, 1.0]), // front
+            v(&[2.0, 3.0]), // exact tie with index 1 — both survive
+        ];
+        assert_eq!(pareto_indices(&pts), vec![0, 1, 3, 4]);
+    }
+
+    #[test]
+    fn nd_sort_ranks_peel_off() {
+        let pts = vec![
+            v(&[1.0, 4.0]),
+            v(&[4.0, 1.0]),
+            v(&[2.0, 5.0]),
+            v(&[5.0, 2.0]),
+            v(&[6.0, 6.0]),
+        ];
+        let fronts = nd_sort(&pts);
+        assert_eq!(fronts[0], vec![0, 1]);
+        assert_eq!(fronts[1], vec![2, 3]);
+        assert_eq!(fronts[2], vec![4]);
+    }
+
+    #[test]
+    fn hypervolume_rectangles() {
+        // one point (0,0) against ref (1,1): the unit square
+        assert!((hypervolume(&[v(&[0.0, 0.0])], &[1.0, 1.0]) - 1.0).abs() < 1e-12);
+        // two staircase points: 0.5×1 + 0.5×0.5 = 0.75
+        let hv = hypervolume(&[v(&[0.0, 0.5]), v(&[0.5, 0.0])], &[1.0, 1.0]);
+        assert!((hv - 0.75).abs() < 1e-12, "hv={hv}");
+        // a dominated point adds nothing
+        let hv2 = hypervolume(
+            &[v(&[0.0, 0.5]), v(&[0.5, 0.0]), v(&[0.6, 0.6])],
+            &[1.0, 1.0],
+        );
+        assert!((hv2 - 0.75).abs() < 1e-12);
+        // 3-D cube corner
+        let hv3 = hypervolume(&[v(&[0.0, 0.0, 0.0])], &[1.0, 1.0, 1.0]);
+        assert!((hv3 - 1.0).abs() < 1e-12);
+        // a point outside the reference is ignored
+        assert_eq!(hypervolume(&[v(&[2.0, 0.0])], &[1.0, 1.0]), 0.0);
+    }
+
+    #[test]
+    fn hypervolume_grows_with_better_fronts() {
+        let reference = [1.1, 1.1, 1.1];
+        let weak = hypervolume(&[v(&[0.5, 0.5, 0.5])], &reference);
+        let strong = hypervolume(&[v(&[0.5, 0.5, 0.5]), v(&[0.1, 0.9, 0.2])], &reference);
+        assert!(strong > weak);
+    }
+
+    #[test]
+    fn normalization_and_indicator() {
+        let vs = vec![v(&[10.0, 1000.0]), v(&[20.0, 500.0]), v(&[30.0, 2000.0])];
+        let n = normalize(&vs);
+        assert!((n[0][0] - 0.0).abs() < 1e-12 && (n[0][1] - 1.0 / 3.0).abs() < 1e-12);
+        assert!((n[1][0] - 0.5).abs() < 1e-12 && (n[1][1] - 0.0).abs() < 1e-12);
+        assert!((n[2][0] - 1.0).abs() < 1e-12 && (n[2][1] - 1.0).abs() < 1e-12);
+        // a degenerate (constant) dimension collapses to 0
+        let flat = normalize(&[v(&[1.0, 5.0]), v(&[2.0, 5.0])]);
+        assert_eq!(flat[0][1], 0.0);
+        assert_eq!(flat[1][1], 0.0);
+        let hv = normalized_hypervolume(&vs);
+        assert!(hv > 0.0 && hv < 1.1f64.powi(2));
+    }
+
+    #[test]
+    fn frontier_roundtrip_and_diff() {
+        let paper = DesignPoint::paper();
+        let other: DesignPoint = "ratio=3,vref=0.7".parse().unwrap();
+        let o1 = Objectives {
+            area_mm2: 1.0,
+            energy_j: 2.0,
+            latency_s: 3.0,
+            refresh_w: 0.5,
+            err_proxy: 0.1,
+        };
+        let o2 = Objectives { area_mm2: 2.0, energy_j: 1.0, ..o1 };
+        let f = Frontier::from_evaluated(&[(paper.clone(), o1), (other.clone(), o2)]);
+        assert_eq!(f.points.len(), 2, "trade-off keeps both");
+        assert!(f.contains(&paper));
+        let json = f.to_json().to_pretty();
+        let back = Frontier::from_json(&Json::parse(&json).unwrap()).unwrap();
+        assert_eq!(back.points.len(), 2);
+        assert!(back.contains(&paper) && back.contains(&other));
+
+        // drop the paper point and diff
+        let f2 = Frontier::from_evaluated(&[(other.clone(), o2)]);
+        let d = diff(&f, &f2);
+        assert_eq!(d.removed, vec![paper.to_string()]);
+        assert!(d.added.is_empty());
+        assert_eq!(d.kept, vec![other.to_string()]);
+        assert!(!d.is_unchanged());
+        assert!(diff(&f, &f).is_unchanged());
+    }
+
+    #[test]
+    fn frontier_extraction_drops_dominated_points() {
+        let a = DesignPoint::paper();
+        let b: DesignPoint = "ratio=5".parse().unwrap();
+        let good = Objectives {
+            area_mm2: 1.0,
+            energy_j: 1.0,
+            latency_s: 1.0,
+            refresh_w: 1.0,
+            err_proxy: 1.0,
+        };
+        let bad = Objectives { area_mm2: 2.0, energy_j: 2.0, ..good };
+        let f = Frontier::from_evaluated(&[(a.clone(), good), (b, bad)]);
+        assert_eq!(f.points.len(), 1);
+        assert!(f.contains(&a));
+    }
+}

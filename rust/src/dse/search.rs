@@ -1,0 +1,253 @@
+//! Search strategies over a design [`Space`], behind one
+//! [`SearchStrategy`] trait.
+//!
+//! * [`ExhaustiveGrid`] — evaluate every point of the expanded grid (the
+//!   default; the repo's evaluators are cheap enough for hundreds of
+//!   points in seconds).
+//! * [`SeededRandom`] — a deterministic uniform sample of the grid without
+//!   replacement (Fisher–Yates on a seeded PCG64): the budget-bounded
+//!   probe for spaces too big to enumerate.
+//! * [`SuccessiveHalving`] — fidelity-laddered pruning: evaluate the whole
+//!   grid at a fraction of the Monte-Carlo fidelity, keep the best
+//!   `1/eta` by non-dominated rank (ties broken by normalized scalar
+//!   score, then canonical string — fully deterministic), and re-evaluate
+//!   the survivors at full fidelity. Low-fidelity rungs share the same
+//!   memo cache keyed by fidelity, so nothing is recomputed.
+//!
+//! Every strategy returns the full list of (point, objectives) pairs it
+//! evaluated **at final fidelity**, from which the caller extracts the
+//! frontier; `evals` counts every evaluation including pruned rungs.
+
+use anyhow::bail;
+
+use super::eval::{evaluate_many, EvalCache, EvalContext, Objectives};
+use super::pareto::{nd_sort, normalize};
+use super::space::{DesignPoint, Space};
+use crate::util::rng::Pcg64;
+use crate::Result;
+
+/// Result of one search run.
+#[derive(Clone, Debug)]
+pub struct SearchReport {
+    /// Points evaluated at the strategy's final fidelity, in deterministic
+    /// order — the frontier candidates.
+    pub evaluated: Vec<(DesignPoint, Objectives)>,
+    /// Total evaluations across all rungs/samples (≥ `evaluated.len()`).
+    pub evals: usize,
+    pub strategy: &'static str,
+}
+
+/// One search strategy over a design space.
+pub trait SearchStrategy {
+    fn name(&self) -> &'static str;
+
+    /// Run the search: expand (part of) `space`, drive the evaluator
+    /// through `cache`, and return the final-fidelity evaluations.
+    fn run(&self, space: &Space, ctx: &EvalContext, cache: &EvalCache) -> Result<SearchReport>;
+}
+
+/// Build a strategy from its CLI name.
+pub fn by_name(name: &str, samples: usize, seed: u64) -> Result<Box<dyn SearchStrategy>> {
+    Ok(match name {
+        "grid" => Box::new(ExhaustiveGrid),
+        "random" => Box::new(SeededRandom { samples, seed }),
+        "halving" => Box::new(SuccessiveHalving { eta: 4 }),
+        other => bail!("unknown search strategy `{other}` (grid | random | halving)"),
+    })
+}
+
+/// Evaluate every point of the grid.
+pub struct ExhaustiveGrid;
+
+impl SearchStrategy for ExhaustiveGrid {
+    fn name(&self) -> &'static str {
+        "grid"
+    }
+
+    fn run(&self, space: &Space, ctx: &EvalContext, cache: &EvalCache) -> Result<SearchReport> {
+        let points = space.expand()?;
+        let objectives = evaluate_many(&points, ctx, cache);
+        let evals = points.len();
+        Ok(SearchReport {
+            evaluated: points.into_iter().zip(objectives).collect(),
+            evals,
+            strategy: self.name(),
+        })
+    }
+}
+
+/// A deterministic uniform sample of the grid, without replacement.
+pub struct SeededRandom {
+    pub samples: usize,
+    pub seed: u64,
+}
+
+impl SearchStrategy for SeededRandom {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn run(&self, space: &Space, ctx: &EvalContext, cache: &EvalCache) -> Result<SearchReport> {
+        let mut points = space.expand()?;
+        let mut rng = Pcg64::new(self.seed ^ 0x5A4D_0000_5EED);
+        rng.shuffle(&mut points);
+        points.truncate(self.samples.max(1));
+        // canonical order so the report (and frontier JSON) is stable
+        points.sort_by_key(|p| p.to_string());
+        let objectives = evaluate_many(&points, ctx, cache);
+        let evals = points.len();
+        Ok(SearchReport {
+            evaluated: points.into_iter().zip(objectives).collect(),
+            evals,
+            strategy: self.name(),
+        })
+    }
+}
+
+/// Fidelity-laddered pruning: a cheap full-grid pass, then full fidelity
+/// on the survivors. Promotion keeps exactly `ceil(n/eta)` candidates
+/// ranked by non-dominated front, then normalized scalar score — a
+/// budget-capped compromise: low-fidelity Pareto members beyond the
+/// budget ARE pruned, so the halving frontier is a (cheap) subset of the
+/// grid frontier, not a replacement for it. Fully deterministic: ranking
+/// ties break on the canonical point string, no randomness involved.
+pub struct SuccessiveHalving {
+    /// Keep 1/eta of the candidates per rung (≥ 2).
+    pub eta: usize,
+}
+
+impl SuccessiveHalving {
+    /// Rank candidates: non-dominated front index first, then normalized
+    /// scalar score, then canonical string. Returns indices best-first.
+    fn ranked(evaluated: &[(DesignPoint, Objectives)]) -> Vec<usize> {
+        let vectors: Vec<Vec<f64>> =
+            evaluated.iter().map(|(_, o)| o.vector().to_vec()).collect();
+        let fronts = nd_sort(&vectors);
+        let normed = normalize(&vectors);
+        let mut rank = vec![0usize; vectors.len()];
+        for (r, front) in fronts.iter().enumerate() {
+            for &i in front {
+                rank[i] = r;
+            }
+        }
+        let score: Vec<f64> = normed.iter().map(|v| v.iter().sum()).collect();
+        let mut order: Vec<usize> = (0..vectors.len()).collect();
+        order.sort_by(|&a, &b| {
+            rank[a]
+                .cmp(&rank[b])
+                .then(score[a].partial_cmp(&score[b]).unwrap())
+                .then(evaluated[a].0.to_string().cmp(&evaluated[b].0.to_string()))
+        });
+        order
+    }
+}
+
+impl SearchStrategy for SuccessiveHalving {
+    fn name(&self) -> &'static str {
+        "halving"
+    }
+
+    fn run(&self, space: &Space, ctx: &EvalContext, cache: &EvalCache) -> Result<SearchReport> {
+        let eta = self.eta.max(2);
+        let points = space.expand()?;
+        let mut evals = 0usize;
+
+        // rung 0: the whole grid at reduced Monte-Carlo fidelity
+        let lo_ctx = ctx.with_fidelity((ctx.fidelity / eta).max(256));
+        let lo = evaluate_many(&points, &lo_ctx, cache);
+        evals += points.len();
+        let lo_evaluated: Vec<(DesignPoint, Objectives)> =
+            points.into_iter().zip(lo).collect();
+
+        // promote exactly ceil(n/eta), best-ranked first (see struct docs:
+        // non-dominated members past the budget are deliberately pruned)
+        let order = Self::ranked(&lo_evaluated);
+        let keep = (lo_evaluated.len().div_ceil(eta)).max(1);
+        let mut survivors: Vec<DesignPoint> = order[..keep.min(order.len())]
+            .iter()
+            .map(|&i| lo_evaluated[i].0.clone())
+            .collect();
+        survivors.sort_by_key(|p| p.to_string());
+
+        // rung 1: survivors at full fidelity
+        let objectives = evaluate_many(&survivors, ctx, cache);
+        evals += survivors.len();
+        Ok(SearchReport {
+            evaluated: survivors.into_iter().zip(objectives).collect(),
+            evals,
+            strategy: self.name(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scalesim::{network, AcceleratorConfig};
+
+    fn ctx() -> EvalContext {
+        EvalContext::new(network::lenet(), AcceleratorConfig::eyeriss(), 7, 512)
+    }
+
+    fn small_space() -> Space {
+        Space::parse("ratio=3|7|11,vref=0.7|0.8,geom=256x64").unwrap()
+    }
+
+    #[test]
+    fn grid_evaluates_every_point() {
+        let c = ctx();
+        let cache = EvalCache::new();
+        let r = ExhaustiveGrid.run(&small_space(), &c, &cache).unwrap();
+        assert_eq!(r.evals, 6);
+        assert_eq!(r.evaluated.len(), 6);
+        assert_eq!(r.strategy, "grid");
+    }
+
+    #[test]
+    fn random_is_a_deterministic_subsample() {
+        let c = ctx();
+        let s = SeededRandom { samples: 3, seed: 9 };
+        let a = s.run(&small_space(), &c, &EvalCache::new()).unwrap();
+        let b = s.run(&small_space(), &c, &EvalCache::new()).unwrap();
+        assert_eq!(a.evaluated.len(), 3);
+        let keys = |r: &SearchReport| {
+            r.evaluated.iter().map(|(p, _)| p.to_string()).collect::<Vec<_>>()
+        };
+        assert_eq!(keys(&a), keys(&b), "same seed ⇒ same sample");
+        // oversampling clamps to the full grid
+        let all = SeededRandom { samples: 100, seed: 9 }
+            .run(&small_space(), &c, &EvalCache::new())
+            .unwrap();
+        assert_eq!(all.evaluated.len(), 6);
+    }
+
+    #[test]
+    fn halving_prunes_but_keeps_the_strong_points() {
+        let c = ctx();
+        let cache = EvalCache::new();
+        let space = Space::parse("ratio=1..12,vref=0.7|0.8|0.9").unwrap(); // 36 points
+        let r = SuccessiveHalving { eta: 4 }.run(&space, &c, &cache).unwrap();
+        assert_eq!(r.evals, 36 + 9, "full low-fidelity rung + survivors");
+        assert_eq!(r.evaluated.len(), 9);
+        // survivors at full fidelity match direct evaluation
+        for (p, o) in &r.evaluated {
+            assert_eq!(*o, super::super::eval::evaluate(p, &c), "{p}");
+        }
+        // determinism
+        let r2 = SuccessiveHalving { eta: 4 }
+            .run(&space, &c, &EvalCache::new())
+            .unwrap();
+        let keys = |r: &SearchReport| {
+            r.evaluated.iter().map(|(p, _)| p.to_string()).collect::<Vec<_>>()
+        };
+        assert_eq!(keys(&r), keys(&r2));
+    }
+
+    #[test]
+    fn by_name_dispatch() {
+        assert_eq!(by_name("grid", 0, 0).unwrap().name(), "grid");
+        assert_eq!(by_name("random", 8, 1).unwrap().name(), "random");
+        assert_eq!(by_name("halving", 0, 1).unwrap().name(), "halving");
+        assert!(by_name("annealing", 0, 0).is_err());
+    }
+}

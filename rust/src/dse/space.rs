@@ -1,0 +1,538 @@
+//! The design-point grammar: one parseable type for a full buffer design.
+//!
+//! [`crate::mem::backend::BackendSpec`] names a buffer *technology*; a
+//! [`DesignPoint`] names a complete buffer *design* — the mixed-cell ratio
+//! 1S·NE, the reference voltage, the one-enhancement encoder switch, the
+//! bank geometry, the shard count and the refresh policy. Every knob the
+//! paper either fixes (ratio = 7, 256 × 64 B banks) or sweeps by hand
+//! (V_REF ∈ {0.5..0.8}) becomes an explorable axis.
+//!
+//! ## Grammar
+//!
+//! A point is a comma-separated `key=value` list; omitted keys take the
+//! paper's operating point. `Display` always emits the canonical full form
+//! and `FromStr` round-trips it:
+//!
+//! ```text
+//! ratio=7,vref=0.8,enc=on,geom=256x64,shards=1,refresh=periodic
+//! ```
+//!
+//! A [`Space`] uses the same keys but each value may be an axis:
+//!
+//! ```text
+//! ratio=1..15              integer inclusive range
+//! vref=0.6:0.9:0.05        stepped float range (inclusive of both ends)
+//! geom=256x64|512x64       `|`-separated alternatives
+//! refresh=periodic|gated
+//! ```
+//!
+//! [`Space::expand`] takes the cartesian product in fixed axis order
+//! (ratio, vref, enc, geom, shards, refresh), so grid order — and with it
+//! every downstream artifact — is deterministic.
+
+use std::fmt;
+use std::str::FromStr;
+
+use anyhow::{anyhow, bail, Result};
+
+/// How the eDRAM planes are kept alive.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum RefreshPolicy {
+    /// The paper's §III-C controller: every row refreshed once per
+    /// retention period.
+    Periodic,
+    /// RANA-style refresh elimination (related work [39]): no refresh at
+    /// all — data must turn over faster than retention or it corrupts.
+    Gated,
+}
+
+impl RefreshPolicy {
+    pub fn label(&self) -> &'static str {
+        match self {
+            RefreshPolicy::Periodic => "periodic",
+            RefreshPolicy::Gated => "gated",
+        }
+    }
+}
+
+impl FromStr for RefreshPolicy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "periodic" => Ok(RefreshPolicy::Periodic),
+            "gated" => Ok(RefreshPolicy::Gated),
+            other => bail!("unknown refresh policy `{other}` (periodic | gated)"),
+        }
+    }
+}
+
+/// One complete buffer design — the unit the explorer evaluates.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DesignPoint {
+    /// Mixed-cell ratio N of 1S·NE: one SRAM cell per N eDRAM cells.
+    /// 0 = pure SRAM (the reference technology), 7 = the paper's cell.
+    pub ratio: u32,
+    /// CVSA reference voltage (V).
+    pub vref: f64,
+    /// One-enhancement encoder in front of the array.
+    pub encode: bool,
+    /// Bank rows.
+    pub rows: usize,
+    /// Bank row width in bytes (columns / 8).
+    pub row_bytes: usize,
+    /// Independently clocked bank shards.
+    pub shards: usize,
+    /// Refresh policy for the eDRAM planes.
+    pub refresh: RefreshPolicy,
+}
+
+/// Validation bounds (kept wide but finite so a typo'd grid can't explode).
+pub const MAX_RATIO: u32 = 15;
+pub const VREF_RANGE: (f64, f64) = (0.3, 0.95);
+pub const ROWS_RANGE: (usize, usize) = (16, 4096);
+pub const ROW_BYTES_RANGE: (usize, usize) = (8, 1024);
+pub const SHARDS_RANGE: (usize, usize) = (1, 64);
+
+impl DesignPoint {
+    /// The paper's operating point: 1S·7E @ V_REF = 0.8 V, encoder on,
+    /// 256 × 64 B banks, one shard, periodic refresh.
+    pub fn paper() -> Self {
+        DesignPoint {
+            ratio: 7,
+            vref: 0.8,
+            encode: true,
+            rows: 256,
+            row_bytes: 64,
+            shards: 1,
+            refresh: RefreshPolicy::Periodic,
+        }
+    }
+
+    /// The SRAM reference design the paper compares against: ratio 0 at
+    /// the same geometry (V_REF/encoder/refresh are inert without eDRAM
+    /// cells; they stay at canonical values so the point round-trips).
+    pub fn sram_reference() -> Self {
+        DesignPoint { ratio: 0, encode: false, ..Self::paper() }
+    }
+
+    /// Columns of one bank (8 bit-planes per byte).
+    pub fn cols(&self) -> usize {
+        self.row_bytes * 8
+    }
+
+    /// Whether the byte-oriented functional array can represent this ratio
+    /// exactly (see [`crate::mem::mcaimem::sram_plane_mask`]).
+    pub fn functional_ratio(&self) -> bool {
+        self.ratio <= 7 && 8 % (self.ratio + 1) == 0
+    }
+
+    /// FNV-1a content hash of the canonical form — the memo key of the
+    /// evaluator and the seed material for its per-point Monte-Carlo
+    /// streams (machine-independent by construction).
+    pub fn content_hash(&self) -> u64 {
+        fnv1a(self.to_string().as_bytes())
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.ratio > MAX_RATIO {
+            bail!("ratio {} out of range 0..={MAX_RATIO}", self.ratio);
+        }
+        if !(VREF_RANGE.0..=VREF_RANGE.1).contains(&self.vref) {
+            bail!("vref {} out of range {:?}", self.vref, VREF_RANGE);
+        }
+        if !(ROWS_RANGE.0..=ROWS_RANGE.1).contains(&self.rows) {
+            bail!("rows {} out of range {:?}", self.rows, ROWS_RANGE);
+        }
+        if !(ROW_BYTES_RANGE.0..=ROW_BYTES_RANGE.1).contains(&self.row_bytes) {
+            bail!("row bytes {} out of range {:?}", self.row_bytes, ROW_BYTES_RANGE);
+        }
+        if !(SHARDS_RANGE.0..=SHARDS_RANGE.1).contains(&self.shards) {
+            bail!("shards {} out of range {:?}", self.shards, SHARDS_RANGE);
+        }
+        Ok(())
+    }
+
+    /// Compact human label: `1S7E@0.8` plus any non-default fields.
+    pub fn short_label(&self) -> String {
+        let mut s = format!("1S{}E@{}", self.ratio, self.vref);
+        if !self.encode {
+            s.push_str(" noenc");
+        }
+        if (self.rows, self.row_bytes) != (256, 64) {
+            s.push_str(&format!(" {}x{}", self.rows, self.row_bytes));
+        }
+        if self.shards != 1 {
+            s.push_str(&format!(" s{}", self.shards));
+        }
+        if self.refresh != RefreshPolicy::Periodic {
+            s.push_str(" gated");
+        }
+        s
+    }
+}
+
+impl fmt::Display for DesignPoint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "ratio={},vref={},enc={},geom={}x{},shards={},refresh={}",
+            self.ratio,
+            self.vref,
+            if self.encode { "on" } else { "off" },
+            self.rows,
+            self.row_bytes,
+            self.shards,
+            self.refresh.label()
+        )
+    }
+}
+
+impl FromStr for DesignPoint {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        let mut p = DesignPoint::paper();
+        for (key, value) in split_fields(s)? {
+            match key {
+                "ratio" => p.ratio = parse_num(key, value)?,
+                "vref" => p.vref = parse_num(key, value)?,
+                "enc" => p.encode = parse_enc(value)?,
+                "geom" => (p.rows, p.row_bytes) = parse_geom(value)?,
+                "shards" => p.shards = parse_num(key, value)?,
+                "refresh" => p.refresh = value.parse()?,
+                other => bail!("unknown design-point key `{other}` ({GRAMMAR})"),
+            }
+        }
+        p.validate()?;
+        Ok(p)
+    }
+}
+
+const GRAMMAR: &str =
+    "keys: ratio, vref, enc, geom (ROWSxROWBYTES), shards, refresh (periodic|gated)";
+
+fn split_fields(s: &str) -> Result<Vec<(&str, &str)>> {
+    let mut out = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (k, v) = part
+            .split_once('=')
+            .ok_or_else(|| anyhow!("expected key=value, got `{part}` ({GRAMMAR})"))?;
+        out.push((k.trim(), v.trim()));
+    }
+    if out.is_empty() {
+        bail!("empty design-point spec ({GRAMMAR})");
+    }
+    Ok(out)
+}
+
+fn parse_num<T: FromStr>(key: &str, v: &str) -> Result<T> {
+    v.parse()
+        .map_err(|_| anyhow!("bad value `{v}` for `{key}`"))
+}
+
+fn parse_enc(v: &str) -> Result<bool> {
+    match v {
+        "on" | "true" | "1" => Ok(true),
+        "off" | "false" | "0" => Ok(false),
+        other => bail!("bad value `{other}` for `enc` (on | off)"),
+    }
+}
+
+fn parse_geom(v: &str) -> Result<(usize, usize)> {
+    let (r, c) = v
+        .split_once('x')
+        .ok_or_else(|| anyhow!("bad geometry `{v}` (expected ROWSxROWBYTES, e.g. 256x64)"))?;
+    Ok((parse_num("geom rows", r)?, parse_num("geom row-bytes", c)?))
+}
+
+/// FNV-1a 64-bit — the trace format's digest
+/// ([`crate::sim::trace::digest`]), re-exported so the memo keys and the
+/// trace checksums share one implementation.
+pub use crate::sim::trace::digest as fnv1a;
+
+// ---------------------------------------------------------------------------
+// Space: per-axis value lists + grid expansion.
+// ---------------------------------------------------------------------------
+
+/// A design space: one list of candidate values per axis. Expanded to the
+/// cartesian product by [`Space::expand`].
+#[derive(Clone, Debug)]
+pub struct Space {
+    pub ratios: Vec<u32>,
+    pub vrefs: Vec<f64>,
+    pub encs: Vec<bool>,
+    pub geoms: Vec<(usize, usize)>,
+    pub shards: Vec<usize>,
+    pub refresh: Vec<RefreshPolicy>,
+    /// The spec string this space was parsed from (for artifacts).
+    pub spec: String,
+}
+
+impl Space {
+    /// The default exploration grid: every mixed ratio × a V_REF sweep
+    /// bracketing the paper's candidates × two bank geometries — 210
+    /// points, comfortably covering the acceptance bar while staying
+    /// seconds-fast to evaluate.
+    pub const DEFAULT: &'static str =
+        "ratio=1..15,vref=0.6:0.9:0.05,enc=on,geom=256x64|512x64,shards=1,refresh=periodic";
+
+    /// The CI smoke grid: the paper point with its ratio/vref/encoder
+    /// neighbours — 18 points (the degenerate SRAM reference is always
+    /// appended by the explore driver, so it needn't be on the grid).
+    pub const QUICK: &'static str =
+        "ratio=3|7|15,vref=0.7:0.9:0.1,enc=on|off,geom=256x64,shards=1,refresh=periodic";
+
+    /// Parse a space spec (the point grammar with axis values).
+    pub fn parse(s: &str) -> Result<Space> {
+        let mut sp = Space {
+            ratios: vec![7],
+            vrefs: vec![0.8],
+            encs: vec![true],
+            geoms: vec![(256, 64)],
+            shards: vec![1],
+            refresh: vec![RefreshPolicy::Periodic],
+            spec: s.trim().to_string(),
+        };
+        for (key, value) in split_fields(s)? {
+            match key {
+                "ratio" => sp.ratios = expand_ints(key, value)?,
+                "vref" => sp.vrefs = expand_floats(key, value)?,
+                "enc" => sp.encs = expand_with(value, parse_enc)?,
+                "geom" => sp.geoms = expand_with(value, parse_geom)?,
+                "shards" => sp.shards = expand_ints_usize(key, value)?,
+                "refresh" => sp.refresh = expand_with(value, |v| v.parse::<RefreshPolicy>())?,
+                other => bail!("unknown design-space key `{other}` ({GRAMMAR})"),
+            }
+        }
+        // validate the corners once; expand() re-checks every point
+        for p in [sp.corner(true), sp.corner(false)] {
+            p.validate()?;
+        }
+        Ok(sp)
+    }
+
+    fn corner(&self, first: bool) -> DesignPoint {
+        let pick = |n: usize| if first { 0 } else { n - 1 };
+        DesignPoint {
+            ratio: self.ratios[pick(self.ratios.len())],
+            vref: self.vrefs[pick(self.vrefs.len())],
+            encode: self.encs[pick(self.encs.len())],
+            rows: self.geoms[pick(self.geoms.len())].0,
+            row_bytes: self.geoms[pick(self.geoms.len())].1,
+            shards: self.shards[pick(self.shards.len())],
+            refresh: self.refresh[pick(self.refresh.len())],
+        }
+    }
+
+    /// Number of points the grid expands to.
+    pub fn len(&self) -> usize {
+        self.ratios.len()
+            * self.vrefs.len()
+            * self.encs.len()
+            * self.geoms.len()
+            * self.shards.len()
+            * self.refresh.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The full cartesian grid in deterministic axis order.
+    pub fn expand(&self) -> Result<Vec<DesignPoint>> {
+        let mut out = Vec::with_capacity(self.len());
+        for &ratio in &self.ratios {
+            for &vref in &self.vrefs {
+                for &encode in &self.encs {
+                    for &(rows, row_bytes) in &self.geoms {
+                        for &shards in &self.shards {
+                            for &refresh in &self.refresh {
+                                let p = DesignPoint {
+                                    ratio,
+                                    vref,
+                                    encode,
+                                    rows,
+                                    row_bytes,
+                                    shards,
+                                    refresh,
+                                };
+                                p.validate()?;
+                                out.push(p);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+fn expand_with<T, F: Fn(&str) -> Result<T>>(v: &str, f: F) -> Result<Vec<T>> {
+    v.split('|').map(|p| f(p.trim())).collect()
+}
+
+/// `a..b` inclusive integer range, `a|b|c` list, or a scalar.
+fn expand_ints(key: &str, v: &str) -> Result<Vec<u32>> {
+    if let Some((lo, hi)) = v.split_once("..") {
+        let lo: u32 = parse_num(key, lo)?;
+        let hi: u32 = parse_num(key, hi)?;
+        if hi < lo {
+            bail!("empty range `{v}` for `{key}`");
+        }
+        return Ok((lo..=hi).collect());
+    }
+    expand_with(v, |p| parse_num(key, p))
+}
+
+/// `lo:hi:step` inclusive stepped range (values rounded to 1e-6 so the
+/// grid round-trips through `Display`), `a|b` list, or a scalar.
+fn expand_floats(key: &str, v: &str) -> Result<Vec<f64>> {
+    let parts: Vec<&str> = v.split(':').collect();
+    if parts.len() == 3 {
+        let lo: f64 = parse_num(key, parts[0])?;
+        let hi: f64 = parse_num(key, parts[1])?;
+        let step: f64 = parse_num(key, parts[2])?;
+        if step <= 0.0 || hi < lo {
+            bail!("bad stepped range `{v}` for `{key}`");
+        }
+        let n = ((hi - lo) / step + 1e-9).floor() as usize;
+        return Ok((0..=n)
+            .map(|i| ((lo + i as f64 * step) * 1e6).round() / 1e6)
+            .collect());
+    }
+    if parts.len() != 1 {
+        bail!("bad range `{v}` for `{key}` (use lo:hi:step)");
+    }
+    expand_with(v, |p| parse_num(key, p))
+}
+
+/// The same integer grammar for usize-typed axes (shards).
+fn expand_ints_usize(key: &str, v: &str) -> Result<Vec<usize>> {
+    Ok(expand_ints(key, v)?.into_iter().map(|x| x as usize).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn point_roundtrips_through_display() {
+        let canon = "ratio=7,vref=0.8,enc=on,geom=256x64,shards=1,refresh=periodic";
+        let p: DesignPoint = canon.parse().unwrap();
+        assert_eq!(p, DesignPoint::paper());
+        assert_eq!(p.to_string(), canon);
+        for s in [
+            "ratio=3,vref=0.65,enc=off,geom=512x32,shards=4,refresh=gated",
+            "ratio=0,vref=0.8,enc=off,geom=256x64,shards=1,refresh=periodic",
+            "ratio=15,vref=0.9,enc=on,geom=128x128,shards=2,refresh=periodic",
+        ] {
+            let p: DesignPoint = s.parse().unwrap();
+            assert_eq!(p.to_string(), s, "{s}");
+            let again: DesignPoint = p.to_string().parse().unwrap();
+            assert_eq!(again, p, "{s}");
+        }
+    }
+
+    #[test]
+    fn omitted_fields_take_the_paper_defaults() {
+        let p: DesignPoint = "ratio=3".parse().unwrap();
+        assert_eq!(p, DesignPoint { ratio: 3, ..DesignPoint::paper() });
+        let p: DesignPoint = "vref=0.7,refresh=gated".parse().unwrap();
+        assert_eq!(p.ratio, 7);
+        assert_eq!(p.refresh, RefreshPolicy::Gated);
+    }
+
+    #[test]
+    fn bad_points_rejected() {
+        for s in [
+            "",
+            "ratio=16",
+            "vref=0.2",
+            "vref=abc",
+            "geom=256",
+            "geom=0x64",
+            "shards=0",
+            "refresh=sometimes",
+            "color=red",
+            "ratio",
+        ] {
+            assert!(s.parse::<DesignPoint>().is_err(), "`{s}` must not parse");
+        }
+    }
+
+    #[test]
+    fn space_expansion_grammar() {
+        let sp = Space::parse("ratio=1..4,vref=0.6:0.8:0.1,geom=256x64|512x64").unwrap();
+        assert_eq!(sp.ratios, vec![1, 2, 3, 4]);
+        assert_eq!(sp.vrefs, vec![0.6, 0.7, 0.8]);
+        assert_eq!(sp.geoms, vec![(256, 64), (512, 64)]);
+        assert_eq!(sp.len(), 4 * 3 * 2);
+        let pts = sp.expand().unwrap();
+        assert_eq!(pts.len(), 24);
+        // deterministic axis order: ratio is the slowest axis
+        assert_eq!(pts[0].ratio, 1);
+        assert_eq!(pts[23].ratio, 4);
+        // every point is unique
+        let mut keys: Vec<String> = pts.iter().map(|p| p.to_string()).collect();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), 24);
+    }
+
+    #[test]
+    fn stepped_floats_land_on_clean_values() {
+        let sp = Space::parse("vref=0.6:0.9:0.05").unwrap();
+        assert_eq!(sp.vrefs, vec![0.6, 0.65, 0.7, 0.75, 0.8, 0.85, 0.9]);
+        // every value survives a Display → FromStr round-trip
+        for &v in &sp.vrefs {
+            let p = DesignPoint { vref: v, ..DesignPoint::paper() };
+            let again: DesignPoint = p.to_string().parse().unwrap();
+            assert_eq!(again.vref, v);
+        }
+    }
+
+    #[test]
+    fn default_space_meets_the_acceptance_floor() {
+        let sp = Space::parse(Space::DEFAULT).unwrap();
+        assert!(sp.len() >= 200, "default grid must be ≥200 points, got {}", sp.len());
+        let pts = sp.expand().unwrap();
+        assert!(pts.contains(&DesignPoint::paper()), "paper point must be in the default grid");
+        let quick = Space::parse(Space::QUICK).unwrap();
+        assert!(quick.expand().unwrap().contains(&DesignPoint::paper()));
+        assert!(quick.len() <= 32, "quick grid stays CI-fast");
+    }
+
+    #[test]
+    fn bad_spaces_rejected() {
+        for s in ["ratio=9..2", "vref=0.9:0.6:0.05", "vref=0.6:0.9:0", "ratio=1..99"] {
+            assert!(Space::parse(s).is_err(), "`{s}` must not parse");
+        }
+    }
+
+    #[test]
+    fn content_hash_is_stable_and_discriminating() {
+        let a = DesignPoint::paper().content_hash();
+        assert_eq!(a, DesignPoint::paper().content_hash());
+        let b = DesignPoint { ratio: 6, ..DesignPoint::paper() }.content_hash();
+        assert_ne!(a, b);
+        // pinned: the canonical string of the paper point never changes
+        assert_eq!(
+            a,
+            fnv1a(b"ratio=7,vref=0.8,enc=on,geom=256x64,shards=1,refresh=periodic")
+        );
+    }
+
+    #[test]
+    fn functional_ratio_detection() {
+        for (n, ok) in [(0u32, true), (1, true), (3, true), (7, true), (2, false), (5, false), (15, false)] {
+            let p = DesignPoint { ratio: n, ..DesignPoint::paper() };
+            assert_eq!(p.functional_ratio(), ok, "n={n}");
+        }
+    }
+}

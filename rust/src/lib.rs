@@ -22,7 +22,9 @@
 //! evaluation; [`coordinator`] hosts the MCAIMem-backed buffer manager,
 //! refresh scheduler and batched inference server; [`sim`] is the
 //! verification backbone — deterministic trace record/replay plus a
-//! golden-model differential oracle (`mcaimem conform`).
+//! golden-model differential oracle (`mcaimem conform`); [`dse`] turns the
+//! evaluators into an automated Pareto search over mixed-cell geometries
+//! (`mcaimem explore`).
 //!
 //! See `DESIGN.md` for the substitution table (what the paper measured on
 //! SPICE/silicon vs. what this repo simulates) and `EXPERIMENTS.md` for
@@ -32,6 +34,7 @@ pub mod cli;
 pub mod circuit;
 pub mod coordinator;
 pub mod device;
+pub mod dse;
 pub mod encode;
 pub mod energy;
 pub mod inject;

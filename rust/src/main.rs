@@ -33,9 +33,22 @@ USAGE:
       fig9 fig11 fig12 fig13 fig14 fig15a fig15b fig16); --backend overrides
       the backend sweep of fig14/fig15a/fig15b
   mcaimem simulate --network NAME [--platform eyeriss|tpuv1] [--backend SPECS] [--seed N]
+                   [--json FILE]
       event-driven inference through the functional buffer; SPECS may be a
       comma list — every backend runs the identical schedule and prints its
-      energy meter and macro area
+      energy meter and macro area; --json mirrors the per-backend reports
+      to a machine-readable file
+  mcaimem explore [--space SPEC] [--strategy grid|random|halving] [--samples N]
+                  [--network NAME] [--platform eyeriss|tpuv1] [--seed N]
+                  [--fidelity N] [--json FILE] [--diff FILE] [--quick] [--paper-gate]
+      design-space exploration: expand the design grid (SPEC grammar:
+      ratio=1..15,vref=0.6:0.9:0.05,enc=on,geom=256x64|512x64,shards=1,
+      refresh=periodic|gated), evaluate every point in parallel through
+      the composed circuit/area/energy/scalesim models, and print the
+      Pareto frontier + hypervolume. --json writes the frontier artifact;
+      --diff compares against a previous artifact; --quick runs the small
+      pinned CI grid and gates on the paper point staying on the frontier
+      (--paper-gate adds the same gate to any run)
   mcaimem serve [--backend SPEC] [--shards N] [--workers K] [--target-rps R]
                 [--requests N] [--clients C] [--high-water H] [--buffer-kb KB]
                 [--mix NET,NET] [--p P] [--window-ms MS] [--artifacts DIR]
@@ -48,7 +61,7 @@ USAGE:
       holds an export; otherwise a latency-faithful synthetic engine.
   mcaimem conform [--backend SPECS] [--ops N] [--seed S] [--shards N]
                   [--bytes-kb KB] [--no-shrink] [--quick] [--save-dir DIR]
-                  [--replay FILE]
+                  [--replay FILE] [--json FILE]
       seeded randomized conformance campaign: every backend must replay its
       own recorded trace exactly, and MCAIMem specs must match the golden
       model (sim::oracle) bit- and meter-exactly — flat and sharded (×N)
@@ -95,9 +108,10 @@ fn run() -> Result<()> {
         &[
             "csv", "artifacts", "network", "platform", "backend", "seed", "requests", "p",
             "window-ms", "shards", "workers", "target-rps", "clients", "high-water",
-            "buffer-kb", "mix", "ops", "bytes-kb", "save-dir", "replay",
+            "buffer-kb", "mix", "ops", "bytes-kb", "save-dir", "replay", "json", "space",
+            "strategy", "samples", "fidelity", "diff",
         ],
-        &["quick", "help", "sweep", "no-retry", "no-shrink"],
+        &["quick", "help", "sweep", "no-retry", "no-shrink", "paper-gate"],
     );
     let args = parser.parse(std::env::args().skip(1))?;
     if args.has_flag("help") || args.positionals.is_empty() {
@@ -133,11 +147,21 @@ fn run() -> Result<()> {
             mcaimem::report::run("fig11", Some(&art), csv.as_deref(), args.has_flag("quick"), None)
         }
         "simulate" => cmd_simulate(&args),
+        "explore" => cmd_explore(&args),
         "serve" => cmd_serve(&args),
         "conform" => cmd_conform(&args),
         "selftest" => cmd_selftest(&args),
         other => bail!("unknown command `{other}`\n{USAGE}"),
     }
+}
+
+/// The shared `--platform` flag.
+fn platform(args: &mcaimem::cli::ParsedArgs) -> Result<AcceleratorConfig> {
+    Ok(match args.get("platform").unwrap_or("eyeriss") {
+        "eyeriss" => AcceleratorConfig::eyeriss(),
+        "tpuv1" => AcceleratorConfig::tpuv1(),
+        other => bail!("unknown platform `{other}`"),
+    })
 }
 
 fn cmd_simulate(args: &mcaimem::cli::ParsedArgs) -> Result<()> {
@@ -146,11 +170,7 @@ fn cmd_simulate(args: &mcaimem::cli::ParsedArgs) -> Result<()> {
         .ok_or_else(|| anyhow::anyhow!("simulate needs --network (e.g. LeNet, ResNet50)"))?;
     let net = network::by_name(name)
         .ok_or_else(|| anyhow::anyhow!("unknown network `{name}`"))?;
-    let acc = match args.get("platform").unwrap_or("eyeriss") {
-        "eyeriss" => AcceleratorConfig::eyeriss(),
-        "tpuv1" => AcceleratorConfig::tpuv1(),
-        other => bail!("unknown platform `{other}`"),
-    };
+    let acc = platform(args)?;
     let specs = backend_list(args)?;
     let seed = args.get_usize("seed", 42)? as u64;
 
@@ -174,6 +194,7 @@ fn cmd_simulate(args: &mcaimem::cli::ParsedArgs) -> Result<()> {
             "area (mm²)",
         ],
     );
+    let mut reports = Vec::with_capacity(specs.len());
     for spec in &specs {
         let r = simulate_inference(&net, &acc, spec, seed)?;
         t.row(vec![
@@ -187,8 +208,96 @@ fn cmd_simulate(args: &mcaimem::cli::ParsedArgs) -> Result<()> {
             r.flips_committed.to_string(),
             fnum(r.area_m2 * 1e6, 3),
         ]);
+        reports.push(r);
     }
     println!("{}", t.render());
+    if let Some(path) = args.get("json") {
+        use mcaimem::util::json::Json;
+        let doc = Json::obj(vec![
+            ("command", Json::Str("simulate".into())),
+            ("network", Json::Str(net.name.into())),
+            ("platform", Json::Str(acc.name.into())),
+            ("seed", Json::Num(seed as f64)),
+            ("reports", Json::Arr(reports.iter().map(|r| r.to_json()).collect())),
+        ]);
+        std::fs::write(path, doc.to_pretty())?;
+        println!("machine-readable report written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_explore(args: &mcaimem::cli::ParsedArgs) -> Result<()> {
+    use mcaimem::dse::{search, EvalCache, EvalContext, Space};
+    use mcaimem::report::pareto::{frontier_from_artifact, render_diff, ExploreOutcome};
+
+    let quick = args.has_flag("quick");
+    let spec = args
+        .get("space")
+        .unwrap_or(if quick { Space::QUICK } else { Space::DEFAULT });
+    let space = Space::parse(spec)?;
+    let name = args.get("network").unwrap_or("ResNet50");
+    let net = network::by_name(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown network `{name}`"))?;
+    let acc = platform(args)?;
+    let seed = args.get_usize("seed", 42)? as u64;
+    let fidelity = args.get_usize(
+        "fidelity",
+        if quick { 1024 } else { EvalContext::DEFAULT_FIDELITY },
+    )?;
+    let strategy = search::by_name(
+        args.get("strategy").unwrap_or("grid"),
+        args.get_usize("samples", 64)?,
+        seed,
+    )?;
+
+    println!(
+        "exploring {} design points — {} strategy, {} on {}, seed {}",
+        space.len(),
+        strategy.name(),
+        net.name,
+        acc.name,
+        seed
+    );
+    let ctx = EvalContext::new(net, acc, seed, fidelity);
+    let cache = EvalCache::new();
+    let report = strategy.run(&space, &ctx, &cache)?;
+    let outcome = ExploreOutcome::new(report, &ctx, &cache, seed, &space.spec);
+    println!("{}", outcome.table().render());
+
+    match outcome.paper_ok() {
+        None => println!("paper point 1S7E@0.8 was not part of this space"),
+        Some(ok) => println!(
+            "paper point 1S7E@0.8: {} — {}% area reduction, {}x energy gain vs SRAM, {} the frontier",
+            if ok { "OK" } else { "FAILED" },
+            fnum(outcome.paper_area_reduction().unwrap_or(0.0) * 100.0, 1),
+            fnum(outcome.paper_energy_gain().unwrap_or(0.0), 2),
+            if outcome.frontier.contains(&mcaimem::dse::DesignPoint::paper()) {
+                "ON"
+            } else {
+                "OFF"
+            }
+        ),
+    }
+
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, outcome.to_json().to_pretty())?;
+        println!("frontier artifact written to {path}");
+    }
+    if let Some(old) = args.get("diff") {
+        let old_frontier = frontier_from_artifact(&std::fs::read_to_string(old)?)?;
+        let d = mcaimem::dse::pareto::diff(&old_frontier, &outcome.frontier);
+        println!("{}", render_diff(&d));
+    }
+    if quick || args.has_flag("paper-gate") {
+        match outcome.paper_ok() {
+            Some(true) => {}
+            // `None` is unreachable (the paper point is force-evaluated),
+            // but an explicitly requested gate must never silently pass
+            _ => bail!(
+                "paper-point gate FAILED: 1S7E@0.8 must stay on the frontier with ≥40% area and ≥3x energy vs SRAM"
+            ),
+        }
+    }
     Ok(())
 }
 
@@ -356,6 +465,11 @@ fn cmd_conform(args: &mcaimem::cli::ParsedArgs) -> Result<()> {
 
     let (table, outcomes, ok) = mcaimem::report::conformance::conformance(&specs, &cfg)?;
     println!("{}", table.render());
+    if let Some(path) = args.get("json") {
+        let doc = mcaimem::report::conformance::outcomes_json(&outcomes, &cfg);
+        std::fs::write(path, doc.to_pretty())?;
+        println!("machine-readable report written to {path}");
+    }
     if ok {
         println!(
             "conformance OK: {} runs replayed exactly (self + oracle where applicable)",

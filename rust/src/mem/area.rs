@@ -8,6 +8,26 @@
 //! so the peripheral factor is applied symmetrically; MCAIMem's extras
 //! (reference-voltage + refresh controller, one-enhancement encoder) are
 //! charged explicitly and shown to be negligible, as in §III-A1.
+//!
+//! ## The mixed-cell ratio as a parameter
+//!
+//! The paper fixes the composition at **1S·7E** (one 6T SRAM cell per seven
+//! widened 2T eDRAM cells — one byte, sign bit in SRAM). The design-space
+//! explorer ([`crate::dse`]) sweeps the ratio **1S·NE for N ∈ 0..=15**, so
+//! the area model takes N as a parameter: [`mixed_cell_area_rel`],
+//! [`AreaModel::array_area_mixed`], [`AreaModel::macro_area_mixed`]. The
+//! fixed-kind entry points delegate to N = 7 and are bit-identical to the
+//! pre-parameterized model; N = 0 degenerates to pure SRAM (and matches the
+//! SRAM macro exactly — no encoder/V_REF extras without eDRAM cells).
+//!
+//! [`AreaModel::macro_area_banked`] additionally exposes the bank geometry
+//! (rows × row-bytes): periphery is split into row circuitry (word-line
+//! drivers + row decoder, ∝ rows) and column circuitry (S/A stripe, write
+//! drivers, column mux, ∝ columns), so per-bit periphery goes as
+//! `1/cols + 1/rows` — normalized to [`PERIPHERY_FRAC`] at the paper's
+//! 256 × 64 B bank. Squarer, larger banks amortize periphery; skewed or
+//! small banks pay for it. (The energy cost of longer lines is the
+//! evaluator's side of the trade — see `dse::eval`.)
 
 use super::MemKind;
 use crate::circuit::{edram1t1c, edram2t, edram3t, sram6t};
@@ -15,9 +35,23 @@ use crate::device::TechNode;
 use crate::encode::one_enhancement::ENCODER_COST_45NM;
 
 /// Fraction of a memory macro spent on peripheral circuitry (row/col
-/// decoders, S/A stripe, write drivers, timing). Representative of compiled
+/// decoders, S/A stripe, write drivers, timing) at the paper's reference
+/// bank geometry (256 rows × 512 columns). Representative of compiled
 /// SRAM macros at this capacity.
 pub const PERIPHERY_FRAC: f64 = 0.25;
+
+/// Reference bank geometry the periphery fraction is calibrated at: the
+/// paper's 16 KB bank, 256 rows × 64 bytes (= 512 bit columns).
+pub const REF_ROWS: usize = 256;
+pub const REF_COLS: usize = 512;
+
+/// Relative cell area (vs 6T SRAM = 1.0) of the 1S·NE mixed composition:
+/// one 6T SRAM cell per `n` widened 2T eDRAM cells, averaged per bit.
+/// `n = 7` is the paper's cell; `n = 0` is pure SRAM (rel = 1.0).
+pub fn mixed_cell_area_rel(n: u32) -> f64 {
+    let n = n as f64;
+    (1.0 + n * edram2t::MCAIMEM_AREA_REL) / (n + 1.0)
+}
 
 /// Relative cell area (vs 6T SRAM = 1.0) for each comparable kind.
 pub fn cell_area_rel(kind: MemKind) -> f64 {
@@ -27,9 +61,7 @@ pub fn cell_area_rel(kind: MemKind) -> f64 {
         MemKind::Edram3t => edram3t::AREA_REL,
         MemKind::Edram2t => edram2t::CONV_AREA_REL,
         // per byte: 1 SRAM + 7 widened 2T cells, averaged per bit
-        MemKind::Mcaimem => {
-            (1.0 + 7.0 * edram2t::MCAIMEM_AREA_REL) / 8.0
-        }
+        MemKind::Mcaimem => mixed_cell_area_rel(7),
         // RRAM crossbar bit-cell (4F² ideal, ~0.1× SRAM with select device)
         MemKind::Rram => 0.10,
     }
@@ -56,20 +88,64 @@ impl AreaModel {
         (bytes * 8) as f64 * cell_area_rel(kind) * sram_cell
     }
 
+    /// Cell-array area (m²) of a 1S·NE mixed macro of `bytes` capacity.
+    pub fn array_area_mixed(&self, bytes: usize, ratio: u32) -> f64 {
+        let sram_cell = sram6t::AREA_F2 * self.tech.f2_area;
+        (bytes * 8) as f64 * mixed_cell_area_rel(ratio) * sram_cell
+    }
+
+    /// The encoder + V_REF DAC + refresh-FSM extras charged to a mixed
+    /// macro (m²): encoder/decoder (35.2 µm² per macro) plus V_REF DAC &
+    /// refresh FSM at 2× the encoder as a conservative bound. Zero for a
+    /// pure-SRAM composition (`ratio == 0`): no eDRAM cells means no
+    /// reference voltage, no refresh and nothing to encode for.
+    fn mixed_extras(ratio: u32) -> f64 {
+        if ratio == 0 {
+            0.0
+        } else {
+            3.0 * ENCODER_COST_45NM.area_um2 * 1e-12
+        }
+    }
+
     /// Full macro area including periphery and, for MCAIMem, the encoder +
     /// V_REF/refresh controller overhead (m²).
     pub fn macro_area(&self, kind: MemKind, bytes: usize) -> f64 {
         let array = self.array_area(kind, bytes);
         let periph = array * PERIPHERY_FRAC;
         let extras = match kind {
-            MemKind::Mcaimem => {
-                // encoder/decoder (35.2 µm² per macro) + V_REF DAC & refresh
-                // FSM (charged at 2× the encoder as a conservative bound)
-                3.0 * ENCODER_COST_45NM.area_um2 * 1e-12
-            }
+            MemKind::Mcaimem => Self::mixed_extras(7),
             _ => 0.0,
         };
         array + periph + extras
+    }
+
+    /// Full 1S·NE mixed-macro area (m²) at the paper's reference bank
+    /// geometry. `ratio = 7` is bit-identical to
+    /// `macro_area(MemKind::Mcaimem, bytes)`; `ratio = 0` to
+    /// `macro_area(MemKind::Sram6t, bytes)`.
+    pub fn macro_area_mixed(&self, bytes: usize, ratio: u32) -> f64 {
+        self.macro_area_banked(bytes, ratio, REF_ROWS, 64)
+    }
+
+    /// Full 1S·NE mixed-macro area (m²) for banks of `rows` × `row_bytes`.
+    /// Periphery splits into row circuitry (∝ rows per bank) and column
+    /// circuitry (∝ columns), so the per-bit overhead is
+    /// `(1/cols + 1/rows)` normalized to [`PERIPHERY_FRAC`] at the
+    /// 256 × 512-column reference bank.
+    pub fn macro_area_banked(
+        &self,
+        bytes: usize,
+        ratio: u32,
+        rows: usize,
+        row_bytes: usize,
+    ) -> f64 {
+        assert!(rows > 0 && row_bytes > 0, "degenerate bank geometry");
+        let array = self.array_area_mixed(bytes, ratio);
+        let cols = (row_bytes * 8) as f64;
+        let geom = (1.0 / cols + 1.0 / rows as f64)
+            / (1.0 / REF_COLS as f64 + 1.0 / REF_ROWS as f64);
+        let periph = array * (PERIPHERY_FRAC * geom);
+        array + periph + Self::mixed_extras(ratio)
     }
 
     /// The Fig. 13 comparison: area of a 16 KB bank.
@@ -134,6 +210,76 @@ mod tests {
         let a1 = m.array_area(MemKind::Sram6t, 16 * 1024);
         let a64 = m.array_area(MemKind::Sram6t, MIB);
         assert!((a64 / a1 - 64.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ratio_area_monotone_in_edram_share() {
+        // property: every extra eDRAM cell per SRAM cell shrinks both the
+        // relative cell and the full macro (2T cell < SRAM cell, extras are
+        // sub-0.1 % of any macro at these capacities)
+        let m = AreaModel::lp45();
+        for bytes in [16 * 1024, MIB] {
+            for n in 0..15u32 {
+                assert!(
+                    mixed_cell_area_rel(n + 1) < mixed_cell_area_rel(n),
+                    "cell rel must fall: n={n}"
+                );
+                assert!(
+                    m.macro_area_mixed(bytes, n + 1) < m.macro_area_mixed(bytes, n),
+                    "macro must shrink: n={n} bytes={bytes}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ratio7_reproduces_table1_and_the_48pct_headline_exactly() {
+        // N = 7 is the paper's cell: the parameterized model must be
+        // bit-identical to the fixed-kind entry points that pin Table I and
+        // the 48 % headline
+        let m = AreaModel::lp45();
+        assert_eq!(mixed_cell_area_rel(7), cell_area_rel(MemKind::Mcaimem));
+        let rel = mixed_cell_area_rel(7);
+        assert!((rel - 0.52).abs() < 1e-12, "Table I: mixed cell = 52 % of SRAM, got {rel}");
+        for bytes in [16 * 1024, 108 * 1024, MIB] {
+            assert_eq!(
+                m.macro_area_mixed(bytes, 7),
+                m.macro_area(MemKind::Mcaimem, bytes),
+                "bytes={bytes}"
+            );
+            let red = 1.0 - m.macro_area_mixed(bytes, 7) / m.macro_area(MemKind::Sram6t, bytes);
+            assert!((red - 0.48).abs() < 0.005, "reduction={red} at {bytes}B");
+        }
+    }
+
+    #[test]
+    fn ratio0_degenerates_to_the_sram_macro() {
+        // N = 0 (no eDRAM cells) must match the SRAM model exactly — cell,
+        // macro (no encoder/V_REF extras), and the built SRAM backend's area
+        let m = AreaModel::lp45();
+        assert_eq!(mixed_cell_area_rel(0), 1.0);
+        for bytes in [16 * 1024, MIB] {
+            assert_eq!(m.macro_area_mixed(bytes, 0), m.macro_area(MemKind::Sram6t, bytes));
+        }
+        use crate::mem::backend::MemoryBackend;
+        let sram = crate::mem::backend::build(&crate::mem::BackendSpec::Sram, MIB, 1);
+        assert_eq!(m.macro_area_mixed(MIB, 0), sram.area());
+    }
+
+    #[test]
+    fn banked_geometry_periphery_model() {
+        let m = AreaModel::lp45();
+        let bytes = MIB;
+        let reference = m.macro_area_banked(bytes, 7, 256, 64);
+        // the reference geometry is the calibration point
+        assert_eq!(reference, m.macro_area_mixed(bytes, 7));
+        // larger banks amortize periphery; smaller banks pay more
+        assert!(m.macro_area_banked(bytes, 7, 512, 64) < reference);
+        assert!(m.macro_area_banked(bytes, 7, 128, 32) > reference);
+        // the split is symmetric in rows vs columns: 512×32 B (256 cols)
+        // has the same 1/cols + 1/rows as the 256×64 B reference
+        let skewed = m.macro_area_banked(bytes, 7, 512, 32);
+        assert!((skewed / reference - 1.0).abs() < 1e-12, "{skewed} vs {reference}");
     }
 
     #[test]

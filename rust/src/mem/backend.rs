@@ -109,12 +109,19 @@ impl BackendSpec {
     }
 
     /// Parse a comma-separated sweep list (`"sram,edram2t,mcaimem@0.8"`).
+    /// Repeated specs are deduplicated order-preserving (first occurrence
+    /// wins), so a sweep like `--backend sram,sram,mcaimem@0.8` doesn't
+    /// evaluate — and print — the same column twice. Dedup happens on the
+    /// *parsed* value, so textual variants (`mcaimem@0.80`, `MCAIMem@0.8`)
+    /// of one spec collapse too.
     pub fn parse_list(s: &str) -> Result<Vec<BackendSpec>> {
-        let specs: Vec<BackendSpec> = s
-            .split(',')
-            .filter(|p| !p.trim().is_empty())
-            .map(str::parse)
-            .collect::<Result<_>>()?;
+        let mut specs: Vec<BackendSpec> = Vec::new();
+        for part in s.split(',').filter(|p| !p.trim().is_empty()) {
+            let spec: BackendSpec = part.parse()?;
+            if !specs.contains(&spec) {
+                specs.push(spec);
+            }
+        }
         if specs.is_empty() {
             bail!("empty backend list `{s}`");
         }
@@ -278,7 +285,18 @@ pub struct McaimemBackend {
 
 impl McaimemBackend {
     pub fn new(bytes: usize, vref: f64, encode: bool, seed: u64) -> Self {
-        let mut mem = MixedCellMemory::with_vref(bytes, vref, seed);
+        Self::with_ratio(bytes, vref, encode, 7, seed)
+    }
+
+    /// A functional mixed array at an explicit 1S·NE cell ratio (one of
+    /// the byte-tiling ratios 0/1/3/7 — see
+    /// [`MixedCellMemory::with_geometry`]). `BackendSpec` deliberately has
+    /// no ratio field (the paper's 1S·7E is *the* spec); non-default
+    /// ratios are a design-space-exploration construction, so
+    /// [`MemoryBackend::spec`] reports the nearest spec while `area` and
+    /// `label` reflect the true composition.
+    pub fn with_ratio(bytes: usize, vref: f64, encode: bool, ratio: u32, seed: u64) -> Self {
+        let mut mem = MixedCellMemory::with_geometry(bytes, vref, ratio, seed);
         mem.encode_enabled = encode;
         McaimemBackend { mem }
     }
@@ -327,6 +345,18 @@ impl MemoryBackend for McaimemBackend {
 
     fn energy_card(&self) -> &EnergyCard {
         &self.mem.card
+    }
+
+    fn area(&self) -> f64 {
+        AreaModel::lp45().macro_area_mixed(self.capacity(), self.mem.ratio)
+    }
+
+    fn label(&self) -> String {
+        if self.mem.ratio == 7 {
+            self.spec().label()
+        } else {
+            format!("{} (1S{}E)", self.spec().label(), self.mem.ratio)
+        }
     }
 }
 
@@ -648,6 +678,46 @@ mod tests {
         let specs = BackendSpec::parse_list("sram, edram2t ,mcaimem@0.8,mcaimem@0.7-noenc").unwrap();
         assert_eq!(specs.len(), 4);
         assert!(BackendSpec::parse_list("  ,, ").is_err());
+    }
+
+    #[test]
+    fn parse_list_dedupes_order_preserving() {
+        // repeated specs collapse to the first occurrence, order kept
+        let specs = BackendSpec::parse_list("sram,sram,mcaimem@0.8,sram,edram2t").unwrap();
+        assert_eq!(
+            specs,
+            vec![BackendSpec::Sram, BackendSpec::mcaimem_default(), BackendSpec::Edram2t]
+        );
+        // dedup is on the parsed value: textual variants of one spec merge
+        let specs = BackendSpec::parse_list("mcaimem@0.80,MCAIMem@0.8,mcaimem").unwrap();
+        assert_eq!(specs, vec![BackendSpec::mcaimem_default()]);
+        // distinct V_REFs / encoder settings are distinct specs
+        let specs =
+            BackendSpec::parse_list("mcaimem@0.8,mcaimem@0.7,mcaimem@0.8-noenc").unwrap();
+        assert_eq!(specs.len(), 3);
+    }
+
+    #[test]
+    fn ratio_backend_area_and_label() {
+        let default = McaimemBackend::new(64 * 1024, 0.8, true, 1);
+        let r7 = McaimemBackend::with_ratio(64 * 1024, 0.8, true, 7, 1);
+        assert_eq!(
+            MemoryBackend::area(&default),
+            MemoryBackend::area(&r7),
+            "ratio 7 is the default composition"
+        );
+        assert_eq!(r7.label(), "MCAIMem@0.8");
+        let r3 = McaimemBackend::with_ratio(64 * 1024, 0.8, true, 3, 1);
+        assert!(
+            MemoryBackend::area(&r3) > MemoryBackend::area(&r7),
+            "more SRAM cells per byte must cost area"
+        );
+        assert_eq!(r3.label(), "MCAIMem@0.8 (1S3E)");
+        // a ratio-3 array still round-trips data
+        let mut r3 = r3;
+        let data: Vec<u8> = (0..=255).collect();
+        r3.store(0, &data, 1e-9);
+        assert_eq!(r3.load(0, 256, 2e-9), data);
     }
 
     #[test]

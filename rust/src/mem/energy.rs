@@ -78,9 +78,14 @@ pub struct EnergyCard {
     pub write_j_per_byte: Asym,
     /// Refresh period at the operating point (s); `None` = no refresh.
     pub refresh_period: Option<f64>,
+    /// Fraction of the array's cells that are eDRAM (the cells a refresh
+    /// pass must sense): 1.0 for a pure gain-cell array, `N/(N+1)` for a
+    /// 1S·NE mixed composition, 0.0 for static/non-volatile arrays.
+    pub edram_frac: f64,
 }
 
-/// Fraction of the mixed row that is SRAM (1 of 8 bits — the sign bit).
+/// Fraction of the mixed row that is SRAM at the paper's 1S·7E composition
+/// (1 of 8 bits — the sign bit).
 pub const SRAM_SHARE: f64 = 1.0 / 8.0;
 
 impl EnergyCard {
@@ -92,6 +97,7 @@ impl EnergyCard {
             read_j_per_byte: Asym::symmetric(0.08 * PICO),
             write_j_per_byte: Asym::symmetric(0.16 * PICO),
             refresh_period: None,
+            edram_frac: 0.0,
         }
     }
 
@@ -105,23 +111,36 @@ impl EnergyCard {
             read_j_per_byte: Asym { at_ones: 0.00016 * PICO, at_zeros: 0.14 * PICO },
             write_j_per_byte: Asym { at_ones: 0.00016 * PICO, at_zeros: 0.0184 * PICO },
             refresh_period: Some(1.3e-6),
+            edram_frac: 1.0,
         }
     }
 
     /// The mixed-cell memory at a given V_REF: the exact 1:7 composition of
     /// the SRAM and 2T cards, refresh period from the flip model.
     pub fn mcaimem(vref: f64) -> Self {
+        Self::mcaimem_ratio(vref, 7)
+    }
+
+    /// The 1S·NE mixed-cell card: one SRAM cell per `ratio` eDRAM cells,
+    /// so the SRAM share of every per-cell quantity is `1/(ratio+1)` (the
+    /// paper's 1:7 composition law generalized — `ratio = 7` reproduces
+    /// Table II's MCAIMem row exactly, `ratio = 0` degenerates to the pure
+    /// SRAM card with no refresh). Retention physics is per-cell, so the
+    /// refresh period depends only on V_REF, not on the ratio.
+    pub fn mcaimem_ratio(vref: f64, ratio: u32) -> Self {
         let s = Self::sram();
         let e = Self::edram2t();
         let flip = crate::circuit::flip_model::FlipModel::mcaimem_85c();
+        let sram_share = 1.0 / (ratio as f64 + 1.0);
         EnergyCard {
             kind: MemKind::Mcaimem,
-            static_w_per_mb: e.static_w_per_mb.blend(&s.static_w_per_mb, 1.0 - SRAM_SHARE),
-            read_j_per_byte: e.read_j_per_byte.blend(&s.read_j_per_byte, 1.0 - SRAM_SHARE),
-            write_j_per_byte: e.write_j_per_byte.blend(&s.write_j_per_byte, 1.0 - SRAM_SHARE),
-            refresh_period: Some(
-                flip.refresh_period(vref, crate::circuit::flip_model::MAX_FLIP_FOR_DNN),
-            ),
+            static_w_per_mb: e.static_w_per_mb.blend(&s.static_w_per_mb, 1.0 - sram_share),
+            read_j_per_byte: e.read_j_per_byte.blend(&s.read_j_per_byte, 1.0 - sram_share),
+            write_j_per_byte: e.write_j_per_byte.blend(&s.write_j_per_byte, 1.0 - sram_share),
+            refresh_period: (ratio > 0).then(|| {
+                flip.refresh_period(vref, crate::circuit::flip_model::MAX_FLIP_FOR_DNN)
+            }),
+            edram_frac: 1.0 - sram_share,
         }
     }
 
@@ -144,6 +163,7 @@ impl EnergyCard {
             read_j_per_byte: Asym::symmetric(r.read_j_per_byte),
             write_j_per_byte: Asym::symmetric(r.write_j_per_byte),
             refresh_period: None,
+            edram_frac: 0.0,
         }
     }
 
@@ -166,7 +186,8 @@ impl EnergyCard {
     }
 
     /// Energy of one refresh pass over `bytes` bytes. Refresh only touches
-    /// the eDRAM cells: for MCAIMem that is 7 of 8 bit-planes read through
+    /// the eDRAM cells: for a 1S·NE mixed array that is the `edram_frac`
+    /// (= N/(N+1); 7 of 8 bit-planes at the paper's ratio) read through
     /// the CVSA (read *is* the write-back, §III-B3); the conventional 2T
     /// refreshes every bit and pays an explicit write-back after its C-S/A
     /// read (§II-A2).
@@ -176,7 +197,7 @@ impl EnergyCard {
             MemKind::Edram2t => {
                 self.read_energy(bytes, ones_frac) + self.write_energy(bytes, ones_frac)
             }
-            MemKind::Mcaimem => edram.read_energy(bytes, ones_frac) * 7.0 / 8.0,
+            MemKind::Mcaimem => edram.read_energy(bytes, ones_frac) * self.edram_frac,
             _ => self.read_energy(bytes, ones_frac),
         }
     }
@@ -305,6 +326,44 @@ mod tests {
         assert_eq!(c.refresh_power(MIB, 0.3), 0.0);
         assert!((c.read_energy(1024, 0.5) - r.read_energy(1024)).abs() < EPS);
         assert!((c.write_energy(1024, 0.5) - r.write_energy(1024)).abs() < EPS);
+    }
+
+    #[test]
+    fn ratio_card_composition_law() {
+        let s = EnergyCard::sram();
+        let e = EnergyCard::edram2t();
+        // ratio 7 is bit-identical to the Table II MCAIMem card
+        let m7 = EnergyCard::mcaimem_ratio(0.8, 7);
+        let m = EnergyCard::mcaimem_default();
+        assert_eq!(m7.static_w_per_mb, m.static_w_per_mb);
+        assert_eq!(m7.read_j_per_byte, m.read_j_per_byte);
+        assert_eq!(m7.write_j_per_byte, m.write_j_per_byte);
+        assert_eq!(m7.refresh_period, m.refresh_period);
+        assert_eq!(m7.edram_frac, 7.0 / 8.0);
+        // ratio 0 degenerates to pure SRAM: no refresh, SRAM numbers
+        let m0 = EnergyCard::mcaimem_ratio(0.8, 0);
+        assert_eq!(m0.refresh_period, None);
+        assert_eq!(m0.edram_frac, 0.0);
+        assert_eq!(m0.static_power(MIB, 0.3), s.static_power(MIB, 0.3));
+        assert_eq!(m0.read_energy(1024, 0.9), s.read_energy(1024, 0.9));
+        assert_eq!(m0.refresh_power(MIB, 0.5), 0.0);
+        // static power falls monotonically as the eDRAM share grows (at the
+        // all-ones corner the 2T cell is ~23× cheaper than SRAM)
+        let mut last = f64::INFINITY;
+        for n in 0..=15u32 {
+            let c = EnergyCard::mcaimem_ratio(0.8, n);
+            let p = c.static_power(MIB, 1.0);
+            assert!(p < last, "n={n}: {p} !< {last}");
+            last = p;
+            // the card interpolates between the two Table II columns
+            assert!(p >= e.static_power(MIB, 1.0) && p <= s.static_power(MIB, 1.0));
+        }
+        // refresh pass senses exactly the eDRAM fraction of the cells
+        let m3 = EnergyCard::mcaimem_ratio(0.8, 3);
+        let pass = m3.refresh_pass_energy(MIB, 0.5);
+        assert!((pass - e.read_energy(MIB, 0.5) * 0.75).abs() < EPS);
+        // retention physics is per-cell: the period depends on V_REF only
+        assert_eq!(m3.refresh_period, m7.refresh_period);
     }
 
     #[test]

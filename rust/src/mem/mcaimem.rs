@@ -24,6 +24,16 @@
 //! redraws every cell dies after enough refresh windows). Unwritten cells
 //! idle at bit-1, the state pull-up leakage drives them to physically.
 //!
+//! §Ratio: the 1S·NE mixed composition is a **parameter** (paper default
+//! N = 7). SRAM cells stripe at density `1/(N+1)` anchored at the sign
+//! bit ([`sram_plane_mask`]); the functional array supports the ratios
+//! whose groups tile a byte (N ∈ {0, 1, 3, 7}) — `N = 0` is pure SRAM on
+//! identical plumbing — while the analytic design-space evaluator
+//! ([`crate::dse`]) covers the full 0..=15 range with the same striping
+//! law. Area/energy cards take the ratio through
+//! [`super::area::AreaModel::macro_area_mixed`] and
+//! [`EnergyCard::mcaimem_ratio`].
+//!
 //! §Perf: the access hot path is **word-parallel**. Aligned 64-byte blocks
 //! move through an 8×64 SWAR bit-matrix transpose ([`super::bitplane`]) —
 //! 64 bytes become 8 whole plane words per step — the one-enhancement
@@ -40,6 +50,33 @@ use super::bank::MemoryMap;
 use super::energy::EnergyCard;
 use crate::circuit::flip_model::FlipModel;
 use crate::util::rng::Pcg64;
+
+/// The SRAM bit positions of one byte for a 1S·NE mixed composition that
+/// tiles a byte exactly (`(n+1)` divides 8, i.e. n ∈ {0, 1, 3, 7} —
+/// debug-asserted): cells stripe as groups of `n+1` bits whose
+/// most-significant bit is the SRAM cell, so bit `i` is SRAM iff
+/// `(7 − i) % (n + 1) == 0`. The paper's `n = 7` gives `0x80` — exactly
+/// the sign plane. `n = 0` is all-SRAM (`0xff`). This mask is part of the
+/// array *specification*: the golden model and the analytic design-space
+/// evaluator must stripe identically — for byte-tiling ratios the
+/// evaluator's global stripe (`global_cell_index % (n+1) == 0`, see
+/// `dse::eval`) reduces to exactly this per-byte mask; non-tiling ratios
+/// have no uniform per-byte mask and exist only in the analytic model.
+#[inline]
+pub fn sram_plane_mask(n: u32) -> u8 {
+    debug_assert!(
+        n <= 7 && 8 % (n + 1) == 0,
+        "per-byte mask defined only for byte-tiling ratios 0/1/3/7, got {n}"
+    );
+    let group = n + 1;
+    let mut mask = 0u8;
+    for i in 0..8u32 {
+        if (7 - i) % group == 0 {
+            mask |= 1 << i;
+        }
+    }
+    mask
+}
 
 /// Energy/event meter for one array.
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -86,6 +123,10 @@ pub struct MixedCellMemory {
     pub map: MemoryMap,
     pub flip: FlipModel,
     pub vref: f64,
+    /// Mixed-cell ratio N of the 1S·NE composition (paper default 7). The
+    /// functional array supports the byte-tiling ratios {0, 1, 3, 7}; the
+    /// analytic design-space evaluator covers the full 0..=15 range.
+    pub ratio: u32,
     pub card: EnergyCard,
     /// One-enhancement encoder in front of the array (paper default: on).
     pub encode_enabled: bool,
@@ -97,9 +138,14 @@ pub struct MixedCellMemory {
     /// as a bit-exact reference (`word_parallel = false`) for equivalence
     /// tests and the before/after benchmarks.
     pub word_parallel: bool,
-    /// Bit-planes, LSB-first; plane 7 is the SRAM (sign) plane. Packed
-    /// 64 bytes/word per plane.
+    /// Bit-planes, LSB-first; at the paper's ratio plane 7 is the SRAM
+    /// (sign) plane, generally [`sram_plane_mask`] selects the SRAM planes.
+    /// Packed 64 bytes/word per plane.
     planes: [Vec<u64>; 8],
+    /// Bit mask of the eDRAM planes (`!sram_plane_mask(ratio)`).
+    edram_mask: u8,
+    /// Number of eDRAM planes (`edram_mask.count_ones()`).
+    n_edram: usize,
     /// Per-cell quantized leakage z-score, one byte per eDRAM cell
     /// (`leak_z[plane][addr]`), mapping q ∈ [0,255] → z ∈ [−4σ, +4σ].
     leak_z: [Vec<u8>; 7],
@@ -127,6 +173,23 @@ impl MixedCellMemory {
     }
 
     pub fn with_vref(bytes: usize, vref: f64, seed: u64) -> Self {
+        Self::with_geometry(bytes, vref, 7, seed)
+    }
+
+    /// A mixed array with an explicit 1S·NE cell ratio. Only the ratios
+    /// whose `(n+1)`-cell groups tile a byte exactly (n ∈ {0, 1, 3, 7}) are
+    /// representable by the byte-oriented functional array; the analytic
+    /// evaluator in [`crate::dse`] covers the full 0..=15 range. `n = 0`
+    /// behaves as SRAM on identical plumbing (no eDRAM planes, no flips,
+    /// no refresh).
+    pub fn with_geometry(bytes: usize, vref: f64, ratio: u32, seed: u64) -> Self {
+        assert!(
+            ratio <= 7 && 8 % (ratio + 1) == 0,
+            "functional array supports byte-tiling ratios 0/1/3/7, got 1S·{ratio}E \
+             (use dse::eval for the analytic full range)"
+        );
+        let edram_mask = !sram_plane_mask(ratio);
+        let n_edram = edram_mask.count_ones() as usize;
         let map = MemoryMap::with_capacity(bytes);
         let cap = map.capacity();
         let words = cap.div_ceil(64);
@@ -159,15 +222,18 @@ impl MixedCellMemory {
             map,
             flip: FlipModel::mcaimem_85c(),
             vref,
-            card: EnergyCard::mcaimem(vref),
+            ratio,
+            card: EnergyCard::mcaimem_ratio(vref, ratio),
             encode_enabled: true,
             inject_enabled: true,
             word_parallel: true,
             // power-on state: pull-up leakage parks every cell at bit-1
             planes: std::array::from_fn(|_| vec![u64::MAX; words]),
+            edram_mask,
+            n_edram,
             leak_z,
             row_time: vec![0.0; map.total_rows()],
-            edram_ones: (cap * 7) as u64,
+            edram_ones: (cap * n_edram) as u64,
             meter: EnergyMeter::default(),
             now: 0.0,
         }
@@ -178,8 +244,9 @@ impl MixedCellMemory {
     }
 
     /// Current fraction of ones in the eDRAM planes (drives static power).
+    /// 0 for a ratio-0 (pure SRAM) array, which has no eDRAM planes.
     pub fn edram_ones_frac(&self) -> f64 {
-        self.edram_ones as f64 / (self.capacity() * 7) as f64
+        self.edram_ones as f64 / (self.capacity() * self.n_edram).max(1) as f64
     }
 
     /// Advance the wall clock, integrating static energy. Monotone.
@@ -216,7 +283,7 @@ impl MixedCellMemory {
             let new = (value >> p) & 1 == 1;
             if old != new {
                 plane[w] ^= mask;
-                if p < 7 {
+                if self.edram_mask & (1 << p) != 0 {
                     // maintain the eDRAM ones census
                     if new {
                         self.edram_ones += 1;
@@ -264,10 +331,16 @@ impl MixedCellMemory {
         // bit loop, flips accumulate into a per-word mask, and the census /
         // meter commit once per row instead of per bit.
         debug_assert!(start % 64 == 0 && end % 64 == 0);
+        let edram_mask = self.edram_mask;
         let mut committed = 0u64;
         for w in start / 64..end / 64 {
             let base = w * 64;
-            for (plane, zplane) in self.planes[..7].iter_mut().zip(self.leak_z.iter()) {
+            for (p, (plane, zplane)) in
+                self.planes[..7].iter_mut().zip(self.leak_z.iter()).enumerate()
+            {
+                if edram_mask & (1 << p) == 0 {
+                    continue; // SRAM plane: never corrupts
+                }
                 let mut zeros = !plane[w];
                 if zeros == 0 {
                     continue;
@@ -315,7 +388,7 @@ impl MixedCellMemory {
             raw
         };
         self.set_byte_raw(addr, stored);
-        (stored & 0x7f).count_ones() as u64
+        (stored & self.edram_mask).count_ones() as u64
     }
 
     /// Fetch + decode one byte into `out`, returning its stored eDRAM ones
@@ -328,7 +401,7 @@ impl MixedCellMemory {
         } else {
             stored
         });
-        (stored & 0x7f).count_ones() as u64
+        (stored & self.edram_mask).count_ones() as u64
     }
 
     /// Scalar reference store path (byte at a time through every plane).
@@ -358,14 +431,15 @@ impl MixedCellMemory {
                 crate::encode::one_enhancement::encode_words(&mut pl);
             }
             let w = a / 64;
-            for (p, &new) in pl.iter().enumerate().take(7) {
-                let newly = new.count_ones() as u64;
-                ones += newly;
-                self.edram_ones += newly;
-                self.edram_ones -= self.planes[p][w].count_ones() as u64;
+            for (p, &new) in pl.iter().enumerate() {
+                if self.edram_mask & (1 << p) != 0 {
+                    let newly = new.count_ones() as u64;
+                    ones += newly;
+                    self.edram_ones += newly;
+                    self.edram_ones -= self.planes[p][w].count_ones() as u64;
+                }
                 self.planes[p][w] = new;
             }
-            self.planes[7][w] = pl[7];
             a += 64;
         }
         while a < end {
@@ -400,9 +474,9 @@ impl MixedCellMemory {
             let mut pl = [0u64; 8];
             for (p, plane) in self.planes.iter().enumerate() {
                 pl[p] = plane[w];
-            }
-            for &word in pl.iter().take(7) {
-                ones += word.count_ones() as u64;
+                if self.edram_mask & (1 << p) != 0 {
+                    ones += plane[w].count_ones() as u64;
+                }
             }
             if self.encode_enabled {
                 crate::encode::one_enhancement::decode_words(&mut pl);
@@ -428,9 +502,10 @@ impl MixedCellMemory {
         } else {
             self.store_scalar(addr, data)
         };
-        // `.max(1)` guards the empty write: 0/0 would poison `write_j` with
-        // NaN (the read path below has always carried the same guard).
-        let frac = ones as f64 / (data.len() * 7).max(1) as f64;
+        // `.max(1)` guards the empty write (and the ratio-0 array, which
+        // has no eDRAM planes): 0/0 would poison `write_j` with NaN (the
+        // read path below has always carried the same guard).
+        let frac = ones as f64 / (data.len() * self.n_edram).max(1) as f64;
         self.meter.write_j += self.card.write_energy(data.len(), frac);
         self.meter.writes += 1;
         self.meter.bytes_written += data.len() as u64;
@@ -448,7 +523,7 @@ impl MixedCellMemory {
         } else {
             self.fetch_scalar(addr, len, &mut out)
         };
-        let frac = ones as f64 / (len * 7).max(1) as f64;
+        let frac = ones as f64 / (len * self.n_edram).max(1) as f64;
         self.meter.read_j += self.card.read_energy(len, frac);
         self.meter.reads += 1;
         self.meter.bytes_read += len as u64;
@@ -636,6 +711,72 @@ mod tests {
         }
         assert_eq!(fast.meter, slow.meter);
         assert_eq!(fast.edram_ones_frac(), slow.edram_ones_frac());
+    }
+
+    #[test]
+    fn sram_plane_mask_stripes_from_the_sign_bit() {
+        assert_eq!(sram_plane_mask(7), 0x80); // the paper's cell: sign only
+        assert_eq!(sram_plane_mask(3), 0x88); // groups of 4: bits 7 and 3
+        assert_eq!(sram_plane_mask(1), 0xAA); // groups of 2: odd bits
+        assert_eq!(sram_plane_mask(0), 0xFF); // pure SRAM
+        for n in [0u32, 1, 3, 7] {
+            assert!(sram_plane_mask(n) & 0x80 != 0, "sign always protected in-byte: n={n}");
+        }
+    }
+
+    #[test]
+    fn ratio_controls_which_planes_corrupt() {
+        // store raw zeros (encoder off) and age far past retention: only
+        // the eDRAM planes flip; every SRAM plane of the stripe holds
+        for (ratio, sram_mask) in [(7u32, 0x80u8), (3, 0x88), (1, 0xAA)] {
+            let mut m = MixedCellMemory::with_geometry(4096, 0.8, ratio, 0xBEEF);
+            m.encode_enabled = false;
+            m.write(0, &[0u8; 64], 0.0);
+            let back = m.read(0, 64, 500e-6); // ~40 refresh periods stale
+            assert!(
+                back.iter().all(|&b| b & sram_mask == 0),
+                "ratio={ratio}: SRAM planes must hold zeros"
+            );
+            let corrupted = back.iter().filter(|&&b| b != 0).count();
+            assert!(corrupted > 56, "ratio={ratio}: corrupted={corrupted}/64");
+        }
+    }
+
+    #[test]
+    fn ratio0_is_sram_on_identical_plumbing() {
+        let mut m = MixedCellMemory::with_geometry(4096, 0.8, 0, 1);
+        m.encode_enabled = false;
+        assert_eq!(m.card.refresh_period, None);
+        assert_eq!(m.edram_ones_frac(), 0.0);
+        m.write(0, &[0u8; 64], 0.0);
+        let back = m.read(0, 64, 1.0); // a full second unrefreshed
+        assert!(back.iter().all(|&b| b == 0), "no eDRAM planes → no flips");
+        assert_eq!(m.meter.flips_committed, 0);
+    }
+
+    #[test]
+    fn ratio_word_and_scalar_paths_agree() {
+        for ratio in [1u32, 3] {
+            let mut fast = MixedCellMemory::with_geometry(16 * 1024, 0.8, ratio, 7);
+            let mut slow = MixedCellMemory::with_geometry(16 * 1024, 0.8, ratio, 7);
+            slow.word_parallel = false;
+            let data: Vec<u8> = (0..300u32).map(|i| (i * 31 + 5) as u8).collect();
+            for (addr, stale) in [(0usize, 1e-6), (13, 30e-6), (64, 45e-6)] {
+                let t = fast.now() + stale;
+                fast.write(addr, &data, t);
+                slow.write(addr, &data, t);
+                let a = fast.read(addr, data.len(), t + stale);
+                let b = slow.read(addr, data.len(), t + stale);
+                assert_eq!(a, b, "ratio={ratio} addr={addr}");
+            }
+            assert_eq!(fast.meter, slow.meter, "ratio={ratio}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "byte-tiling ratios")]
+    fn non_tiling_ratio_rejected_by_the_functional_array() {
+        let _ = MixedCellMemory::with_geometry(4096, 0.8, 5, 1);
     }
 
     #[test]

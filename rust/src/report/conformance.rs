@@ -68,6 +68,62 @@ pub fn conformance(
     Ok((t, outcomes, all_ok))
 }
 
+/// Machine-readable campaign report for `mcaimem conform --json`
+/// (serde-free via [`crate::util::json`]): config echo, one record per
+/// (backend, geometry) run with op counts and verdicts, and the overall
+/// pass flag — what CI diffs instead of scraping the table.
+pub fn outcomes_json(outcomes: &[SpecOutcome], cfg: &CampaignConfig) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    let runs: Vec<Json> = outcomes
+        .iter()
+        .map(|o| {
+            let (s, l, k, r) = o.counts;
+            Json::obj(vec![
+                ("backend", Json::Str(o.spec.to_string())),
+                ("geometry", Json::Str(o.geometry().replace('×', "x"))),
+                ("stores", Json::Num(s as f64)),
+                ("loads", Json::Num(l as f64)),
+                ("ticks", Json::Num(k as f64)),
+                ("refreshes", Json::Num(r as f64)),
+                ("self_replay_ok", Json::Bool(o.self_replay_ok)),
+                (
+                    "oracle_ok",
+                    match o.oracle_ok {
+                        None => Json::Null,
+                        Some(b) => Json::Bool(b),
+                    },
+                ),
+                (
+                    "failures",
+                    Json::Arr(
+                        o.failures
+                            .iter()
+                            .map(|f| {
+                                Json::obj(vec![
+                                    ("stage", Json::Str(f.stage.to_string())),
+                                    ("divergence", Json::Str(f.divergence.clone())),
+                                    (
+                                        "minimal_ops",
+                                        Json::Num(f.minimal.entries.len() as f64),
+                                    ),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("ops", Json::Num(cfg.ops as f64)),
+        ("seed", Json::Num(cfg.seed as f64)),
+        ("bytes", Json::Num(cfg.bytes as f64)),
+        ("shards", Json::Num(cfg.shards as f64)),
+        ("ok", Json::Bool(outcomes.iter().all(|o| o.ok()))),
+        ("runs", Json::Arr(runs)),
+    ])
+}
+
 /// Save every failing minimal trace under `dir` as
 /// `conformance_failure_<spec>_<geometry>_<stage>.json`. Returns the paths
 /// written (empty when everything passed).
@@ -106,5 +162,17 @@ mod tests {
         // nothing to save when green
         let dir = std::env::temp_dir();
         assert!(save_failures(&outcomes, &dir).unwrap().is_empty());
+
+        // the --json report round-trips and carries the verdicts
+        let j = crate::util::json::Json::parse(&outcomes_json(&outcomes, &cfg).to_pretty())
+            .unwrap();
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("seed").unwrap().as_usize(), Some(3));
+        let runs = j.get("runs").unwrap().as_arr().unwrap();
+        assert_eq!(runs.len(), outcomes.len());
+        for r in runs {
+            assert_eq!(r.get("self_replay_ok").unwrap().as_bool(), Some(true));
+            assert!(r.get("backend").unwrap().as_str().is_some());
+        }
     }
 }

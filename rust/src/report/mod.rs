@@ -8,6 +8,7 @@ pub mod ablations;
 pub mod circuit_reports;
 pub mod conformance;
 pub mod fig11;
+pub mod pareto;
 pub mod serving;
 pub mod system_reports;
 

@@ -1,0 +1,119 @@
+//! Acceptance tests for the design-space exploration subsystem (ISSUE 5):
+//!
+//! * a ≥200-point grid (ratio × V_REF × geometry) completes and is
+//!   deterministic — same seed ⇒ byte-identical frontier JSON;
+//! * evaluation fans out over `util::par` (checked by equivalence of the
+//!   parallel batch path and direct sequential evaluation);
+//! * the discovered frontier contains the paper's 1S7E@V_REF=0.8
+//!   configuration, dominating SRAM by ≥40 % area and ≥3× energy per
+//!   inference.
+
+use mcaimem::dse::search::{ExhaustiveGrid, SearchStrategy};
+use mcaimem::dse::{evaluate, EvalCache, EvalContext, DesignPoint, Space};
+use mcaimem::report::pareto::ExploreOutcome;
+use mcaimem::scalesim::{network, AcceleratorConfig};
+
+/// The explore default: ResNet50 on Eyeriss, pinned seed.
+fn default_ctx(fidelity: usize) -> EvalContext {
+    EvalContext::new(network::resnet50(), AcceleratorConfig::eyeriss(), 42, fidelity)
+}
+
+fn run_default_grid(ctx: &EvalContext) -> (ExploreOutcome, EvalCache) {
+    let space = Space::parse(Space::DEFAULT).unwrap();
+    assert!(space.len() >= 200, "acceptance demands a ≥200-point grid, got {}", space.len());
+    let cache = EvalCache::new();
+    let report = ExhaustiveGrid.run(&space, ctx, &cache).unwrap();
+    (ExploreOutcome::new(report, ctx, &cache, 42, &space.spec), cache)
+}
+
+#[test]
+fn default_grid_is_deterministic_and_byte_identical() {
+    let ctx = default_ctx(1024);
+    let (a, _) = run_default_grid(&ctx);
+    let (b, _) = run_default_grid(&ctx);
+    let ja = a.to_json().to_pretty();
+    let jb = b.to_json().to_pretty();
+    assert_eq!(ja, jb, "same seed must give a byte-identical frontier artifact");
+    // and a fresh context with the same seed reproduces it too
+    let ctx2 = default_ctx(1024);
+    let (c, _) = run_default_grid(&ctx2);
+    assert_eq!(ja, c.to_json().to_pretty());
+}
+
+#[test]
+fn paper_point_is_on_the_frontier_and_dominates_sram() {
+    let ctx = default_ctx(1024);
+    let (outcome, _) = run_default_grid(&ctx);
+    assert!(
+        outcome.frontier.contains(&DesignPoint::paper()),
+        "1S7E@0.8 must be on the discovered frontier"
+    );
+    let area_red = outcome.paper_area_reduction().unwrap();
+    let energy_gain = outcome.paper_energy_gain().unwrap();
+    assert!(area_red >= 0.40, "area reduction vs SRAM {area_red} < 40%");
+    assert!(energy_gain >= 3.0, "energy gain vs SRAM {energy_gain} < 3x");
+    assert_eq!(outcome.paper_ok(), Some(true));
+    assert!(outcome.hypervolume > 0.0);
+}
+
+#[test]
+fn parallel_batch_matches_sequential_evaluation() {
+    // evaluate_many shards over util::par with a fixed shard count; the
+    // objectives must be identical to direct sequential evaluation
+    let ctx = default_ctx(512);
+    let cache = EvalCache::new();
+    let points: Vec<DesignPoint> = Space::parse("ratio=1..15,vref=0.7|0.8")
+        .unwrap()
+        .expand()
+        .unwrap();
+    let batch = mcaimem::dse::evaluate_many(&points, &ctx, &cache);
+    assert_eq!(batch.len(), 30);
+    for (p, o) in points.iter().zip(&batch) {
+        assert_eq!(*o, evaluate(p, &ctx), "{p}");
+    }
+    assert_eq!(cache.misses(), 30);
+    // a second batch is served entirely from the memo cache
+    let again = mcaimem::dse::evaluate_many(&points, &ctx, &cache);
+    assert_eq!(cache.misses(), 30);
+    assert_eq!(cache.hits(), 30);
+    assert_eq!(batch, again);
+}
+
+#[test]
+fn quick_grid_gates_the_paper_point() {
+    // the CI smoke path: the pinned quick grid must keep the paper point
+    // on the frontier with the same dominance margins
+    let ctx = default_ctx(1024);
+    let space = Space::parse(Space::QUICK).unwrap();
+    let cache = EvalCache::new();
+    let report = ExhaustiveGrid.run(&space, &ctx, &cache).unwrap();
+    let outcome = ExploreOutcome::new(report, &ctx, &cache, 42, &space.spec);
+    assert_eq!(outcome.paper_ok(), Some(true));
+    // the artifact round-trips through the diff loader
+    let json = outcome.to_json().to_pretty();
+    let f = mcaimem::report::pareto::frontier_from_artifact(&json).unwrap();
+    let d = mcaimem::dse::diff(&f, &outcome.frontier);
+    assert!(d.is_unchanged());
+}
+
+#[test]
+fn frontier_spans_the_three_way_tradeoff() {
+    // the frontier must expose real trade-offs, not a single winner: its
+    // extremes in area, energy and accuracy are different designs
+    let ctx = default_ctx(1024);
+    let (outcome, _) = run_default_grid(&ctx);
+    let pts = &outcome.frontier.points;
+    assert!(pts.len() >= 5, "a 200-point grid must keep a non-trivial frontier");
+    let min_by = |f: fn(&mcaimem::dse::Objectives) -> f64| {
+        pts.iter()
+            .min_by(|a, b| f(&a.objectives).partial_cmp(&f(&b.objectives)).unwrap())
+            .unwrap()
+            .point
+            .clone()
+    };
+    let best_area = min_by(|o| o.area_mm2);
+    let best_err = min_by(|o| o.err_proxy);
+    assert_ne!(best_area, best_err, "area and accuracy must pull apart");
+    // the area extreme is the most eDRAM-heavy ratio in the space
+    assert_eq!(best_area.ratio, 15);
+}
