@@ -35,7 +35,7 @@ fn main() {
         ("infer mcaimem p=1% batch=128", BackendSpec::mcaimem_default(), 0.01),
         (
             "infer noenc p=1% batch=128",
-            BackendSpec::Mcaimem { vref: 0.8, encode: false },
+            BackendSpec::Mcaimem { vref: 0.8, encode: false, ecc: false },
             0.01,
         ),
     ] {

@@ -211,6 +211,18 @@ fn main() {
             );
             std::process::exit(1);
         }
+        // a renamed or deleted gated bench pairs with nothing, so the
+        // regression filter below is blind to it — fail instead of
+        // greening on a vanished benchmark
+        let gone = report.gated_missing(|n| n.contains("word-parallel"));
+        if !gone.is_empty() {
+            eprintln!(
+                "bench gate FAIL: gated bench(es) missing from this run: {} — renamed? \
+                 refresh the committed baseline in the same PR",
+                gone.join(", ")
+            );
+            std::process::exit(1);
+        }
         let bad = report.regressions(gate_pct, |n| n.contains("word-parallel"));
         if !bad.is_empty() {
             for d in &bad {

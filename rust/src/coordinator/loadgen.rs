@@ -77,6 +77,11 @@ pub struct LoadConfig {
     /// retry; open-loop arrivals are lost — an open-loop client cannot
     /// defer traffic).
     pub retry_rejects: bool,
+    /// Per-request deadline budget for closed-loop retries: the total time
+    /// one request may spend in [`retry_backoff`] pauses before the client
+    /// abandons it (counted in [`LoadReport::abandoned`]). A budget of zero
+    /// abandons on the first reject.
+    pub retry_budget: Duration,
     pub seed: u64,
 }
 
@@ -87,6 +92,7 @@ impl Default for LoadConfig {
             tenants: Vec::new(),
             requests: 512,
             retry_rejects: true,
+            retry_budget: Duration::from_secs(5),
             seed: 0x10AD,
         }
     }
@@ -105,6 +111,9 @@ pub struct LoadReport {
     pub completed: usize,
     /// Requests answered with an inference error.
     pub errors: usize,
+    /// Closed-loop requests abandoned after their retry deadline budget
+    /// ran out (0 for open-loop runs, which shed instead of retrying).
+    pub abandoned: usize,
     pub wall_s: f64,
     /// Completed requests per wall second.
     pub achieved_rps: f64,
@@ -113,7 +122,14 @@ pub struct LoadReport {
 }
 
 impl LoadReport {
-    fn from_outcomes(offered: usize, rejected: u64, lat_us: &mut Vec<f64>, errors: usize, wall_s: f64) -> Self {
+    fn from_outcomes(
+        offered: usize,
+        rejected: u64,
+        lat_us: &mut Vec<f64>,
+        errors: usize,
+        abandoned: usize,
+        wall_s: f64,
+    ) -> Self {
         lat_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let completed = lat_us.len();
         LoadReport {
@@ -122,6 +138,7 @@ impl LoadReport {
             rejected,
             completed,
             errors,
+            abandoned,
             wall_s,
             achieved_rps: completed as f64 / wall_s.max(1e-9),
             p50_latency_us: if completed == 0 { 0.0 } else { percentile_sorted(lat_us, 50.0) },
@@ -214,25 +231,43 @@ fn run_open(pool: &WorkerPool, cfg: &LoadConfig, rps: f64) -> LoadReport {
         }
     }
     let wall_s = start.elapsed().as_secs_f64();
-    LoadReport::from_outcomes(cfg.requests, rejected, &mut lat_us, errors, wall_s)
+    LoadReport::from_outcomes(cfg.requests, rejected, &mut lat_us, errors, 0, wall_s)
+}
+
+/// One closed-loop client's reject pacing: honour the server's retry-after
+/// hint, escalate exponentially over consecutive rejects of the same
+/// request (doubling, capped at 16×), and jitter each pause uniformly over
+/// `[0.5, 1.5)×` from the client's own seeded stream — clients that were
+/// rejected together must not re-arrive together, or the synchronized
+/// retry storm re-trips admission in lockstep.
+pub fn retry_backoff(hint: Duration, consecutive: u32, rng: &mut Pcg64) -> Duration {
+    let scale = (1u64 << consecutive.min(4)) as f64;
+    hint.mul_f64(scale * (0.5 + rng.f64()))
 }
 
 fn run_closed(pool: &WorkerPool, cfg: &LoadConfig, clients: usize) -> LoadReport {
     let clients = clients.max(1);
     let start = Instant::now();
-    let results: Vec<(Vec<f64>, u64, usize, usize)> = std::thread::scope(|scope| {
+    let results: Vec<(Vec<f64>, u64, usize, usize, usize)> = std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(clients);
         for c in 0..clients {
             let share = cfg.requests / clients + usize::from(c < cfg.requests % clients);
             let mut rng = Pcg64::new(cfg.seed ^ (0xC11E47 + c as u64));
+            // jitter draws live on their own stream: the payload sequence
+            // stays a pure function of the seed no matter how many rejects
+            // wall-clock timing happens to produce
+            let mut jitter_rng = Pcg64::new(cfg.seed ^ (0xBAC_0FF + c as u64));
             handles.push(scope.spawn(move || {
                 let mut lat_us = Vec::with_capacity(share);
                 let mut rejected = 0u64;
                 let mut errors = 0usize;
                 let mut offered = 0usize;
+                let mut abandoned = 0usize;
                 for _ in 0..share {
                     offered += 1;
                     let row = draw_request(&mut rng, &cfg.tenants);
+                    let mut consecutive = 0u32;
+                    let mut budget_left = cfg.retry_budget;
                     loop {
                         match pool.submit(row.clone()) {
                             Ok(rx) => {
@@ -247,13 +282,20 @@ fn run_closed(pool: &WorkerPool, cfg: &LoadConfig, clients: usize) -> LoadReport
                                 if !cfg.retry_rejects {
                                     break;
                                 }
-                                std::thread::sleep(retry_after);
+                                let pause = retry_backoff(retry_after, consecutive, &mut jitter_rng);
+                                consecutive += 1;
+                                if pause > budget_left {
+                                    abandoned += 1;
+                                    break;
+                                }
+                                budget_left -= pause;
+                                std::thread::sleep(pause);
                             }
                             Err(SubmitError::Closed) => break,
                         }
                     }
                 }
-                (lat_us, rejected, errors, offered)
+                (lat_us, rejected, errors, offered, abandoned)
             }));
         }
         handles.into_iter().map(|h| h.join().expect("client thread")).collect()
@@ -263,13 +305,15 @@ fn run_closed(pool: &WorkerPool, cfg: &LoadConfig, clients: usize) -> LoadReport
     let mut rejected = 0u64;
     let mut errors = 0usize;
     let mut offered = 0usize;
-    for (l, r, e, o) in results {
+    let mut abandoned = 0usize;
+    for (l, r, e, o, a) in results {
         lat_us.extend(l);
         rejected += r;
         errors += e;
         offered += o;
+        abandoned += a;
     }
-    LoadReport::from_outcomes(offered, rejected, &mut lat_us, errors, wall_s)
+    LoadReport::from_outcomes(offered, rejected, &mut lat_us, errors, abandoned, wall_s)
 }
 
 #[cfg(test)]
@@ -323,6 +367,80 @@ mod tests {
         }
         let frac_b = counts[1] as f64 / 2000.0;
         assert!((frac_b - 0.75).abs() < 0.05, "weighted draw off: {frac_b}");
+    }
+
+    #[test]
+    fn retry_backoff_is_seeded_jittered_and_capped() {
+        let hint = Duration::from_micros(100);
+        let pauses = |seed: u64| -> Vec<Duration> {
+            let mut rng = Pcg64::new(seed);
+            (0..8).map(|i| retry_backoff(hint, i, &mut rng)).collect()
+        };
+        assert_eq!(pauses(1), pauses(1), "same seed, same pauses");
+        assert_ne!(pauses(1), pauses(2), "different seed, different jitter");
+        for (i, d) in pauses(1).into_iter().enumerate() {
+            // pause i lives in [0.5, 1.5) × 2^min(i,4) × hint: the hint is
+            // honoured (never less than half), escalation doubles, and the
+            // envelope caps at 16× so a long reject streak cannot sleep
+            // unboundedly past the deadline budget
+            let scale = (1u64 << i.min(4)) as f64;
+            assert!(d >= hint.mul_f64(scale * 0.5), "attempt {i}: {d:?} under the envelope");
+            assert!(d < hint.mul_f64(scale * 1.5), "attempt {i}: {d:?} over the envelope");
+        }
+    }
+
+    #[test]
+    fn deadline_budget_abandons_instead_of_retrying_forever() {
+        use crate::coordinator::pool::{PoolConfig, SyntheticEngine, WorkerPool};
+        use crate::mem::backend::BackendSpec;
+        // high_water 0 rejects every submission unconditionally — the one
+        // server state where reject behaviour is timing-independent, which
+        // lets the client-side budget logic be asserted exactly
+        let cfg = PoolConfig {
+            backend: BackendSpec::Sram,
+            workers: 1,
+            shards: 1,
+            buffer_bytes: 16 * 1024,
+            high_water: 0,
+            seed: 21,
+            ..PoolConfig::default()
+        };
+        let engine = Box::new(SyntheticEngine { exec_latency: Duration::ZERO, ..Default::default() });
+        let pool = WorkerPool::start_with_engines(cfg, vec![engine]).unwrap();
+        // zero budget: the first reject abandons, no sleeping at all
+        let zero = run(
+            &pool,
+            &LoadConfig {
+                arrival: Arrival::ClosedLoop { clients: 1 },
+                requests: 4,
+                retry_budget: Duration::ZERO,
+                seed: 33,
+                ..LoadConfig::default()
+            },
+        );
+        assert_eq!(zero.offered, 4);
+        assert_eq!(zero.abandoned, 4, "zero budget abandons on the first reject");
+        assert_eq!(zero.completed, 0);
+        assert_eq!(zero.rejected, 4, "exactly one reject event per request");
+        // a small positive budget: clients back off and retry several times
+        // (more reject events than requests) before the deadline gives up
+        let small = run(
+            &pool,
+            &LoadConfig {
+                arrival: Arrival::ClosedLoop { clients: 2 },
+                requests: 6,
+                retry_budget: Duration::from_millis(2),
+                seed: 34,
+                ..LoadConfig::default()
+            },
+        );
+        assert_eq!(small.abandoned, 6, "an unyielding server exhausts every budget");
+        assert!(
+            small.rejected > 6,
+            "a positive budget must retry before abandoning (saw {} rejects)",
+            small.rejected
+        );
+        pool.shutdown();
     }
 
     #[test]

@@ -18,6 +18,14 @@
 //! * **Exactly-once replies** — every accepted request is answered exactly
 //!   once: with its class on success, or with the batch's inference error
 //!   on failure (never a silently dropped channel).
+//! * **Graceful degradation** — an inference error carrying
+//!   [`crate::faults::FATAL_MARKER`] is unrecoverable for that worker: it
+//!   answers its in-flight batch with errors, leaves the pool's live set,
+//!   and exits. Admission then scales the high-water mark by the surviving
+//!   capacity (never below one batch), peers steal the dead worker's queued
+//!   jobs, and once *every* worker has died `submit` refuses with `Closed`
+//!   while [`WorkerPool::shutdown`] drains any stranded jobs with error
+//!   replies — the exactly-once guarantee holds through total engine loss.
 //!
 //! Engines: with PJRT artifacts each worker owns a [`ModelRunner`]; without
 //! them a [`SyntheticEngine`] classifies deterministically while *really*
@@ -222,6 +230,10 @@ struct Shared {
     /// Queue depth sampled at every accepted submit (for the p99 readout).
     depth_samples: Mutex<Vec<f64>>,
     rr: AtomicUsize,
+    /// Workers still serving. A fatally-crashed worker decrements this on
+    /// the way out; admission scales its high-water mark by `alive/workers`
+    /// and closes entirely at zero.
+    alive: AtomicUsize,
 }
 
 impl Shared {
@@ -373,6 +385,7 @@ impl WorkerPool {
             rejected: AtomicU64::new(0),
             depth_samples: Mutex::new(Vec::new()),
             rr: AtomicUsize::new(0),
+            alive: AtomicUsize::new(cfg.workers),
         });
 
         let mut workers = Vec::with_capacity(cfg.workers);
@@ -406,19 +419,38 @@ impl WorkerPool {
         self.shared.depth.load(Ordering::Relaxed)
     }
 
+    /// Workers still serving (started workers minus fatal engine crashes).
+    pub fn alive_workers(&self) -> usize {
+        self.shared.alive.load(Ordering::SeqCst)
+    }
+
     /// Submit one row. `Err(Rejected)` above the high-water mark — callers
     /// should back off for the hinted duration before retrying.
     pub fn submit(&self, row: Vec<i8>) -> std::result::Result<mpsc::Receiver<Reply>, SubmitError> {
         if self.shared.closed.load(Ordering::SeqCst) {
             return Err(SubmitError::Closed);
         }
+        let alive = self.shared.alive.load(Ordering::SeqCst);
+        if alive == 0 {
+            // every worker's engine crashed fatally: nothing can serve, so
+            // accepting would only strand the job until shutdown's drain
+            return Err(SubmitError::Closed);
+        }
+        // degraded mode: the high-water mark tracks surviving capacity, but
+        // never drops below one batch (a lone survivor must accept work);
+        // a healthy pool keeps the configured mark bit-for-bit
+        let high_water = if alive == self.cfg.workers {
+            self.cfg.high_water
+        } else {
+            (self.cfg.high_water * alive / self.cfg.workers).max(self.batch)
+        };
         let depth = self.shared.depth.load(Ordering::Relaxed);
-        if depth >= self.cfg.high_water {
+        if depth >= high_water {
             self.shared.rejected.fetch_add(1, Ordering::Relaxed);
-            let over = (depth + 1 - self.cfg.high_water) as u64;
+            let over = (depth + 1 - high_water) as u64;
             // backlog above the mark, in batches, times the service estimate
-            let us = (over * self.cfg.est_service_us)
-                / (self.cfg.workers as u64 * self.batch as u64).max(1);
+            let us =
+                (over * self.cfg.est_service_us) / (alive as u64 * self.batch as u64).max(1);
             let floor = (self.cfg.est_service_us / 2).min(50_000);
             let retry_after = Duration::from_micros(us.clamp(floor, 50_000));
             return Err(SubmitError::Rejected { depth, retry_after });
@@ -457,6 +489,19 @@ impl WorkerPool {
             merged.merge(&report.metrics);
             for m in report.shard_meters {
                 shards.push((k, m));
+            }
+        }
+        // jobs can be stranded only when workers crashed fatally before the
+        // close (nobody left to pop or steal); answer them here so every
+        // accepted request still gets exactly one reply
+        for q in &self.shared.queues {
+            let mut q = q.lock().unwrap();
+            while let Some(job) = q.pop_front() {
+                self.shared.depth.fetch_sub(1, Ordering::Relaxed);
+                merged.record_error();
+                let _ = job
+                    .reply
+                    .send(Err(anyhow::anyhow!("pool shut down before the request was served")));
             }
         }
         let total_rw: u64 = shards
@@ -560,9 +605,17 @@ fn worker_loop(
                 // answer every pending request with the error — exactly
                 // once, never a dropped channel
                 let msg = format!("inference failed: {e:#}");
+                let fatal = msg.contains(crate::faults::FATAL_MARKER);
                 for job in pending {
                     metrics.record_error();
                     let _ = job.reply.send(Err(anyhow::anyhow!("{msg}")));
+                }
+                if fatal {
+                    // the engine is gone for good: leave the live set and
+                    // exit. Already-queued jobs survive — peers steal them,
+                    // and shutdown drains any leftovers once everyone dies.
+                    shared.alive.fetch_sub(1, Ordering::SeqCst);
+                    break;
                 }
             }
         }
@@ -639,6 +692,69 @@ mod tests {
         let short: Vec<BufferManager> =
             vec![BufferManager::from_spec(&BackendSpec::Sram, 16 * 1024, 9)];
         assert!(WorkerPool::start_with_buffers(quick_cfg(2, 2), fast_engines(2), short).is_err());
+    }
+
+    fn crash_engine(k: u64) -> Box<dyn InferEngine> {
+        let plan: crate::faults::FaultPlan = format!("engine-crash@{k}").parse().unwrap();
+        Box::new(crate::faults::FaultyEngine::wrap(
+            Box::new(SyntheticEngine { exec_latency: Duration::ZERO, ..Default::default() }),
+            &plan,
+        ))
+    }
+
+    /// Poll until the live-worker count reaches `want` (crash propagation
+    /// is asynchronous: the worker decrements on its way out).
+    fn wait_alive(pool: &WorkerPool, want: usize) {
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while pool.alive_workers() != want {
+            assert!(Instant::now() < deadline, "alive never reached {want}");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    #[test]
+    fn fatal_crash_degrades_the_pool_without_losing_replies() {
+        // worker 0's engine dies fatally on its first batch; worker 1 is
+        // healthy. Every submitted request must still be answered exactly
+        // once, and the pool must keep serving on the survivor.
+        let pool = WorkerPool::start_with_engines(
+            quick_cfg(2, 2),
+            vec![crash_engine(1), fast_engines(1).pop().unwrap()],
+        )
+        .unwrap();
+        let rxs: Vec<_> = (0..16).map(|_| pool.submit(vec![7i8; 784]).unwrap()).collect();
+        wait_alive(&pool, 1);
+        // the degraded pool still classifies (stealing routes around the
+        // dead worker's queue)
+        let (_, _) = pool.classify(vec![9i8; 784]).unwrap();
+        let replies: Vec<_> = rxs.into_iter().map(|rx| rx.recv()).collect();
+        let lost = replies.iter().filter(|r| r.is_err()).count();
+        assert_eq!(lost, 0, "a dropped reply channel means a lost request");
+        assert!(
+            replies.iter().any(|r| matches!(r, Ok(Err(_)))),
+            "the crashed batch must surface as error replies"
+        );
+        let stats = pool.shutdown();
+        assert_eq!(stats.requests + stats.errors, 17, "all submissions accounted for");
+    }
+
+    #[test]
+    fn total_engine_loss_closes_admission_and_drains_the_queue() {
+        // a lone worker crashes on its first batch: the jobs it held get
+        // error replies from the worker, everything still queued is drained
+        // with error replies at shutdown, and new submissions are refused.
+        let pool = WorkerPool::start_with_engines(quick_cfg(1, 1), vec![crash_engine(1)]).unwrap();
+        let rxs: Vec<_> = (0..12).map(|_| pool.submit(vec![3i8; 784]).unwrap()).collect();
+        wait_alive(&pool, 0);
+        assert!(
+            matches!(pool.submit(vec![1i8; 784]), Err(SubmitError::Closed)),
+            "a pool with no live workers must refuse admission"
+        );
+        let stats = pool.shutdown();
+        let replies: Vec<_> = rxs.into_iter().map(|rx| rx.recv()).collect();
+        assert!(replies.iter().all(|r| r.is_ok()), "every request gets exactly one reply");
+        assert!(replies.iter().all(|r| matches!(r, Ok(Err(_)))), "none could be served");
+        assert_eq!(stats.errors, 12, "crashed-batch + drained errors cover every request");
     }
 
     #[test]

@@ -254,7 +254,12 @@ mod tests {
         let acc = AcceleratorConfig::eyeriss();
         let hi = simulate_inference(&net, &acc, &BackendSpec::mcaimem_default(), 2).unwrap();
         let lo =
-            simulate_inference(&net, &acc, &BackendSpec::Mcaimem { vref: 0.5, encode: true }, 2)
+            simulate_inference(
+                &net,
+                &acc,
+                &BackendSpec::Mcaimem { vref: 0.5, encode: true, ecc: false },
+                2,
+            )
                 .unwrap();
         assert!(lo.refresh_j > 5.0 * hi.refresh_j, "lo={} hi={}", lo.refresh_j, hi.refresh_j);
         // flips affect only the ~1% weakest cells among freshly written

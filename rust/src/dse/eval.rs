@@ -38,6 +38,13 @@
 //!   (`duty = rows·T_RC / t_ref / shards`). Energy integrates over the
 //!   compute time so the closed form stays consistent with
 //!   [`crate::energy::system_eval`]; the stall shows up in latency.
+//! * ECC (`ecc=on`): the SECDED check plane ([`crate::mem::ecc`]) adds
+//!   [`AreaModel::ecc_overhead`] silicon, check-byte write energy per
+//!   store and a scrub term on the refresh rail, and in exchange squeezes
+//!   the retention/mis-sense flip probabilities down to their double-fault
+//!   escape rate (single flips per 64-bit codeword are corrected at every
+//!   scrub). Strictly worse area/energy/refresh power, strictly better
+//!   `err_proxy` — the twin points never dominate each other.
 //! * Read-1 margin: the CVSA compares the bit-line against V_REF, and the
 //!   worst-case stored-1 bit-line sits [`BL1_DROOP`] below VDD with
 //!   [`SIGMA_READ1`] of cell/bit-line mismatch — this is what caps the
@@ -229,6 +236,9 @@ pub fn evaluate(p: &DesignPoint, ctx: &EvalContext) -> Objectives {
     let trace = simulate_network(&ctx.network, &ctx.acc);
     let card = EnergyCard::mcaimem_ratio(p.vref, p.ratio);
     let enc = p.encode && p.ratio > 0;
+    // the SECDED plane protects eDRAM-mapped bits; it's vacuous on the
+    // pure-SRAM reference (ratio 0)
+    let ecc = p.ecc && p.ratio > 0;
     let resident = trace.mean_ones_frac(enc);
     let access = trace.access_ones_frac(enc);
     let buf = ctx.acc.buffer_bytes;
@@ -236,11 +246,19 @@ pub fn evaluate(p: &DesignPoint, ctx: &EvalContext) -> Objectives {
     let reads = trace.total_sram_reads() as usize;
     let writes = trace.total_sram_writes() as usize;
 
-    let area_m2 = AreaModel::lp45().macro_area_banked(buf, p.ratio, p.rows, p.row_bytes)
+    let model = AreaModel::lp45();
+    let area_m2 = (model.macro_area_banked(buf, p.ratio, p.rows, p.row_bytes)
+        + if ecc { model.ecc_overhead(buf) } else { 0.0 })
         * (1.0 + SHARD_AREA_FRAC * (p.shards - 1) as f64);
 
     let refreshed = p.refresh == RefreshPolicy::Periodic && card.refresh_period.is_some();
-    let refresh_w = if refreshed { card.refresh_power(buf, resident) } else { 0.0 };
+    // the scrub rides the refresh pass, so its power lands on the same rail
+    let scrub_w = match (ecc && refreshed, card.refresh_period) {
+        (true, Some(t_ref)) => card.ecc_scrub_energy(buf) / t_ref,
+        _ => 0.0,
+    };
+    let refresh_w =
+        if refreshed { card.refresh_power(buf, resident) } else { 0.0 } + scrub_w;
     let duty = match (refreshed, card.refresh_period) {
         (true, Some(t_ref)) => (p.rows as f64 * T_RC) / t_ref / p.shards as f64,
         _ => 0.0,
@@ -249,8 +267,16 @@ pub fn evaluate(p: &DesignPoint, ctx: &EvalContext) -> Objectives {
     let dyn_scale = 0.5 * (p.rows as f64 / 256.0 + p.cols() as f64 / 512.0);
     let static_j = card.static_power(buf, resident) * t;
     let refresh_j = refresh_w * t;
-    let dynamic_j =
-        dyn_scale * (card.read_energy(reads, access) + card.write_energy(writes, access));
+    // check-byte updates ride each store; the check plane has its own
+    // (short) column path, so it doesn't scale with the data-bank geometry
+    let ecc_write_j = if ecc {
+        card.ecc_write_energy(writes.div_ceil(crate::mem::ecc::WORD_BYTES))
+    } else {
+        0.0
+    };
+    let dynamic_j = dyn_scale
+        * (card.read_energy(reads, access) + card.write_energy(writes, access))
+        + ecc_write_j;
 
     Objectives {
         area_mm2: area_m2 * 1e6,
@@ -338,6 +364,21 @@ fn err_proxy(p: &DesignPoint, ctx: &EvalContext, trace: &NetworkTrace) -> f64 {
     let sigma_eff = (SIGMA_READ1 * SIGMA_READ1 + sa.sigma_offset * sa.sigma_offset).sqrt();
     let margin = (flip.leak.vdd - BL1_DROOP) - p.vref;
     let p1 = crate::util::stats::normal_cdf(-margin / sigma_eff);
+
+    // SECDED over 64-bit codewords, corrected every scrub (= refresh)
+    // pass: an exposed bit stays wrong only when a *second* eDRAM bit of
+    // its codeword also flipped inside the same window — double faults
+    // escape, O(p²). Gated refresh never scrubs, so the plane buys
+    // nothing there.
+    let (p0, p1) = if p.ecc && p.refresh == RefreshPolicy::Periodic {
+        let group = (p.ratio + 1) as f64;
+        let n_edram = (64.0 * p.ratio as f64 / group).max(2.0);
+        let p_avg = 0.5 * (p0 + p1);
+        let escape = 1.0 - (1.0 - p_avg).powf(n_edram - 1.0);
+        (p0 * escape, p1 * escape)
+    } else {
+        (p0, p1)
+    };
 
     let enc = p.encode;
     // the context's shared data sample: common random numbers make
@@ -500,6 +541,30 @@ mod tests {
         );
         assert!(tall.area_mm2 < reference.area_mm2, "bigger banks amortize periphery");
         assert!(tall.energy_j > reference.energy_j, "longer bit-lines cost access energy");
+    }
+
+    #[test]
+    fn ecc_trades_silicon_for_error() {
+        let c = ctx();
+        let off = evaluate(&DesignPoint::paper(), &c);
+        let on = evaluate(&DesignPoint { ecc: true, ..DesignPoint::paper() }, &c);
+        assert!(on.area_mm2 > off.area_mm2, "check plane costs silicon");
+        assert!(on.energy_j > off.energy_j, "scrub + check writes cost energy");
+        assert!(on.refresh_w > off.refresh_w, "scrub rides the refresh rail");
+        assert_eq!(on.latency_s, off.latency_s, "scrub hides in the refresh slot");
+        assert!(
+            on.err_proxy < off.err_proxy,
+            "SECDED must strictly reduce exposure: {} vs {}",
+            on.err_proxy,
+            off.err_proxy
+        );
+        // neither twin dominates the other, so both can sit on a frontier
+        // the plane is vacuous on the pure-SRAM reference (no eDRAM bits)
+        let sram = DesignPoint::sram_reference();
+        assert_eq!(
+            evaluate(&DesignPoint { ecc: true, ..sram.clone() }, &c),
+            evaluate(&sram, &c)
+        );
     }
 
     #[test]

@@ -14,7 +14,7 @@
 //! and `FromStr` round-trips it:
 //!
 //! ```text
-//! ratio=7,vref=0.8,enc=on,geom=256x64,shards=1,refresh=periodic
+//! ratio=7,vref=0.8,enc=on,geom=256x64,shards=1,refresh=periodic,ecc=off
 //! ```
 //!
 //! A [`Space`] uses the same keys but each value may be an axis:
@@ -27,8 +27,8 @@
 //! ```
 //!
 //! [`Space::expand`] takes the cartesian product in fixed axis order
-//! (ratio, vref, enc, geom, shards, refresh), so grid order — and with it
-//! every downstream artifact — is deterministic.
+//! (ratio, vref, enc, geom, shards, refresh, ecc), so grid order — and
+//! with it every downstream artifact — is deterministic.
 
 use std::fmt;
 use std::str::FromStr;
@@ -85,6 +85,9 @@ pub struct DesignPoint {
     pub shards: usize,
     /// Refresh policy for the eDRAM planes.
     pub refresh: RefreshPolicy,
+    /// SECDED check plane over the eDRAM-mapped bits, scrubbed on refresh
+    /// (see [`crate::mem::ecc`]). Off at the paper's operating point.
+    pub ecc: bool,
 }
 
 /// Validation bounds (kept wide but finite so a typo'd grid can't explode).
@@ -106,6 +109,7 @@ impl DesignPoint {
             row_bytes: 64,
             shards: 1,
             refresh: RefreshPolicy::Periodic,
+            ecc: false,
         }
     }
 
@@ -168,6 +172,9 @@ impl DesignPoint {
         if self.refresh != RefreshPolicy::Periodic {
             s.push_str(" gated");
         }
+        if self.ecc {
+            s.push_str(" +ecc");
+        }
         s
     }
 }
@@ -176,14 +183,15 @@ impl fmt::Display for DesignPoint {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(
             f,
-            "ratio={},vref={},enc={},geom={}x{},shards={},refresh={}",
+            "ratio={},vref={},enc={},geom={}x{},shards={},refresh={},ecc={}",
             self.ratio,
             self.vref,
             if self.encode { "on" } else { "off" },
             self.rows,
             self.row_bytes,
             self.shards,
-            self.refresh.label()
+            self.refresh.label(),
+            if self.ecc { "on" } else { "off" }
         )
     }
 }
@@ -201,6 +209,7 @@ impl FromStr for DesignPoint {
                 "geom" => (p.rows, p.row_bytes) = parse_geom(value)?,
                 "shards" => p.shards = parse_num(key, value)?,
                 "refresh" => p.refresh = value.parse()?,
+                "ecc" => p.ecc = parse_enc(value)?,
                 other => bail!("unknown design-point key `{other}` ({GRAMMAR})"),
             }
         }
@@ -210,7 +219,7 @@ impl FromStr for DesignPoint {
 }
 
 const GRAMMAR: &str =
-    "keys: ratio, vref, enc, geom (ROWSxROWBYTES), shards, refresh (periodic|gated)";
+    "keys: ratio, vref, enc, geom (ROWSxROWBYTES), shards, refresh (periodic|gated), ecc (on|off)";
 
 fn split_fields(s: &str) -> Result<Vec<(&str, &str)>> {
     let mut out = Vec::new();
@@ -269,17 +278,18 @@ pub struct Space {
     pub geoms: Vec<(usize, usize)>,
     pub shards: Vec<usize>,
     pub refresh: Vec<RefreshPolicy>,
+    pub eccs: Vec<bool>,
     /// The spec string this space was parsed from (for artifacts).
     pub spec: String,
 }
 
 impl Space {
     /// The default exploration grid: every mixed ratio × a V_REF sweep
-    /// bracketing the paper's candidates × two bank geometries — 210
-    /// points, comfortably covering the acceptance bar while staying
-    /// seconds-fast to evaluate.
+    /// bracketing the paper's candidates × two bank geometries × the ECC
+    /// plane on/off — 420 points, comfortably covering the acceptance bar
+    /// while staying seconds-fast to evaluate.
     pub const DEFAULT: &'static str =
-        "ratio=1..15,vref=0.6:0.9:0.05,enc=on,geom=256x64|512x64,shards=1,refresh=periodic";
+        "ratio=1..15,vref=0.6:0.9:0.05,enc=on,geom=256x64|512x64,shards=1,refresh=periodic,ecc=off|on";
 
     /// The CI smoke grid: the paper point with its ratio/vref/encoder
     /// neighbours — 18 points (the degenerate SRAM reference is always
@@ -296,6 +306,7 @@ impl Space {
             geoms: vec![(256, 64)],
             shards: vec![1],
             refresh: vec![RefreshPolicy::Periodic],
+            eccs: vec![false],
             spec: s.trim().to_string(),
         };
         for (key, value) in split_fields(s)? {
@@ -306,6 +317,7 @@ impl Space {
                 "geom" => sp.geoms = expand_with(value, parse_geom)?,
                 "shards" => sp.shards = expand_ints_usize(key, value)?,
                 "refresh" => sp.refresh = expand_with(value, |v| v.parse::<RefreshPolicy>())?,
+                "ecc" => sp.eccs = expand_with(value, parse_enc)?,
                 other => bail!("unknown design-space key `{other}` ({GRAMMAR})"),
             }
         }
@@ -326,6 +338,7 @@ impl Space {
             row_bytes: self.geoms[pick(self.geoms.len())].1,
             shards: self.shards[pick(self.shards.len())],
             refresh: self.refresh[pick(self.refresh.len())],
+            ecc: self.eccs[pick(self.eccs.len())],
         }
     }
 
@@ -337,6 +350,7 @@ impl Space {
             * self.geoms.len()
             * self.shards.len()
             * self.refresh.len()
+            * self.eccs.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -352,17 +366,20 @@ impl Space {
                     for &(rows, row_bytes) in &self.geoms {
                         for &shards in &self.shards {
                             for &refresh in &self.refresh {
-                                let p = DesignPoint {
-                                    ratio,
-                                    vref,
-                                    encode,
-                                    rows,
-                                    row_bytes,
-                                    shards,
-                                    refresh,
-                                };
-                                p.validate()?;
-                                out.push(p);
+                                for &ecc in &self.eccs {
+                                    let p = DesignPoint {
+                                        ratio,
+                                        vref,
+                                        encode,
+                                        rows,
+                                        row_bytes,
+                                        shards,
+                                        refresh,
+                                        ecc,
+                                    };
+                                    p.validate()?;
+                                    out.push(p);
+                                }
                             }
                         }
                     }
@@ -423,14 +440,14 @@ mod tests {
 
     #[test]
     fn point_roundtrips_through_display() {
-        let canon = "ratio=7,vref=0.8,enc=on,geom=256x64,shards=1,refresh=periodic";
+        let canon = "ratio=7,vref=0.8,enc=on,geom=256x64,shards=1,refresh=periodic,ecc=off";
         let p: DesignPoint = canon.parse().unwrap();
         assert_eq!(p, DesignPoint::paper());
         assert_eq!(p.to_string(), canon);
         for s in [
-            "ratio=3,vref=0.65,enc=off,geom=512x32,shards=4,refresh=gated",
-            "ratio=0,vref=0.8,enc=off,geom=256x64,shards=1,refresh=periodic",
-            "ratio=15,vref=0.9,enc=on,geom=128x128,shards=2,refresh=periodic",
+            "ratio=3,vref=0.65,enc=off,geom=512x32,shards=4,refresh=gated,ecc=on",
+            "ratio=0,vref=0.8,enc=off,geom=256x64,shards=1,refresh=periodic,ecc=off",
+            "ratio=15,vref=0.9,enc=on,geom=128x128,shards=2,refresh=periodic,ecc=on",
         ] {
             let p: DesignPoint = s.parse().unwrap();
             assert_eq!(p.to_string(), s, "{s}");
@@ -459,6 +476,7 @@ mod tests {
             "geom=0x64",
             "shards=0",
             "refresh=sometimes",
+            "ecc=maybe",
             "color=red",
             "ratio",
         ] {
@@ -521,10 +539,12 @@ mod tests {
         assert_eq!(a, DesignPoint::paper().content_hash());
         let b = DesignPoint { ratio: 6, ..DesignPoint::paper() }.content_hash();
         assert_ne!(a, b);
+        let c = DesignPoint { ecc: true, ..DesignPoint::paper() }.content_hash();
+        assert_ne!(a, c);
         // pinned: the canonical string of the paper point never changes
         assert_eq!(
             a,
-            fnv1a(b"ratio=7,vref=0.8,enc=on,geom=256x64,shards=1,refresh=periodic")
+            fnv1a(b"ratio=7,vref=0.8,enc=on,geom=256x64,shards=1,refresh=periodic,ecc=off")
         );
     }
 

@@ -91,7 +91,7 @@ mod tests {
     }
 
     fn mcaimem(vref: f64) -> BackendSpec {
-        BackendSpec::Mcaimem { vref, encode: true }
+        BackendSpec::Mcaimem { vref, encode: true, ecc: false }
     }
 
     #[test]
@@ -126,7 +126,8 @@ mod tests {
         let (t, acc) = trace_eyeriss("VGG11");
         let with = evaluate(&t, &acc, &mcaimem(0.8)).total_j();
         let without =
-            evaluate(&t, &acc, &BackendSpec::Mcaimem { vref: 0.8, encode: false }).total_j();
+            evaluate(&t, &acc, &BackendSpec::Mcaimem { vref: 0.8, encode: false, ecc: false })
+                .total_j();
         assert!(with < without, "encoder must save energy: {with} vs {without}");
     }
 
@@ -171,7 +172,10 @@ mod tests {
             ("sram", BackendSpec::Sram),
             ("edram2t", BackendSpec::Edram2t),
             ("rram", BackendSpec::Rram),
-            ("mcaimem@0.7-noenc", BackendSpec::Mcaimem { vref: 0.7, encode: false }),
+            (
+                "mcaimem@0.7-noenc",
+                BackendSpec::Mcaimem { vref: 0.7, encode: false, ecc: false },
+            ),
         ] {
             let parsed: BackendSpec = s.parse().unwrap();
             assert_eq!(parsed, spec);

@@ -1,0 +1,603 @@
+//! Deterministic fault injection across the memory and serving tiers
+//! (PR 6, §Faults).
+//!
+//! The paper trades SRAM's "never decays" for area; this module makes the
+//! failure side of that trade a first-class, *seeded* input instead of an
+//! assumption. A [`FaultPlan`] is a parseable schedule of fault clauses; a
+//! [`FaultyBackend`] wraps any [`MemoryBackend`] — flat, sharded, tracing —
+//! and applies the plan's memory-tier transforms outside the array, so the
+//! production path and the golden model ([`crate::sim::oracle`]) can be
+//! wrapped in the *same* plan and stay bit- and meter-exact under faults:
+//! agreement is structural, not coincidental.
+//!
+//! Fault classes (grammar in [`FaultPlan::GRAMMAR`]):
+//!
+//! * `retention-tail@RATE` — a weak-cell tail population beyond the
+//!   calibrated flip model: each stored payload byte takes a seeded 0→1
+//!   flip mask over the 7 eDRAM-mapped bits at per-bit probability `RATE`
+//!   (the [`crate::inject::apply_flip_mask`] algebra — the SRAM/sign plane
+//!   is immune).
+//! * `stuck-at[@DENSITY]` — a manufacturing stuck-at-1 cell map drawn once
+//!   from the plan seed and the array capacity: the affected byte reads
+//!   and writes with that bit forced, idempotently.
+//! * `vref-drift@P` — CVSA mis-sense under reference drift: each loaded
+//!   eDRAM bit independently reads 1→0 with probability `P`.
+//! * `refresh-stall@K` — every K-th manager-driven refresh slot is dropped
+//!   (a stalled refresh engine), so rows age past their guarantee.
+//! * `shard-outage@T[/S]` — shard `S` (default 0) dies at device time `T`:
+//!   the wrapper calls [`MemoryBackend::quarantine_shard`] on the first op
+//!   at or after `T` (a no-op on backends without failover provisioning).
+//! * `engine-timeout@K` / `engine-crash@K` — serving-tier faults consumed
+//!   by [`FaultyEngine`]: every K-th batch errors transiently, or the K-th
+//!   batch kills its worker fatally (the pool must degrade, not drop
+//!   replies).
+//!
+//! Determinism: the wrapper owns one [`Pcg64`] stream seeded from the plan;
+//! every probabilistic draw is made *unconditionally* per candidate bit, so
+//! the stream position depends only on the op sequence (addresses and
+//! lengths), never on data values — record, replay and the differential
+//! oracle all see identical masks.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::inject::apply_flip_mask;
+use crate::mem::backend::{BackendSpec, MemoryBackend};
+use crate::mem::energy::EnergyCard;
+use crate::mem::mcaimem::EnergyMeter;
+use crate::util::rng::Pcg64;
+
+/// Marker carried by an injected *fatal* engine crash: the worker loop
+/// treats an inference error containing this marker as unrecoverable for
+/// that worker (it replies errors to its batch, then exits), while plain
+/// errors — including injected timeouts — are transient.
+pub const FATAL_MARKER: &str = "fatal injected engine crash";
+
+/// Default plan seed (`seed=N` overrides).
+pub const DEFAULT_PLAN_SEED: u64 = 0xFA_0175;
+
+/// Default stuck-cell density for a bare `stuck-at` clause: one affected
+/// byte per 4096 (a realistic shipped-part defect tail).
+pub const DEFAULT_STUCK_DENSITY: f64 = 1.0 / 4096.0;
+
+/// A seeded, reproducible fault schedule — the one parseable fault type
+/// the CLI, the trace header and the chaos campaigns all share.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// Seed of the wrapper's draw stream and the stuck-cell map.
+    pub seed: u64,
+    /// Per-bit 0→1 store-path flip probability (7 eDRAM bits).
+    pub retention_tail: Option<f64>,
+    /// Per-byte probability of carrying one stuck-at-1 eDRAM bit.
+    pub stuck_at: Option<f64>,
+    /// Per-bit 1→0 load-path mis-sense probability (7 eDRAM bits).
+    pub vref_drift: Option<f64>,
+    /// Drop every K-th manager-driven refresh slot.
+    pub refresh_stall: Option<u64>,
+    /// Quarantine shard `.1` at device time `.0` (s).
+    pub shard_outage: Option<(f64, usize)>,
+    /// Every K-th inference batch fails transiently.
+    pub engine_timeout: Option<u64>,
+    /// The K-th inference batch kills its worker fatally.
+    pub engine_crash: Option<u64>,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            seed: DEFAULT_PLAN_SEED,
+            retention_tail: None,
+            stuck_at: None,
+            vref_drift: None,
+            refresh_stall: None,
+            shard_outage: None,
+            engine_timeout: None,
+            engine_crash: None,
+        }
+    }
+}
+
+impl FaultPlan {
+    pub const GRAMMAR: &'static str = "comma-separated clauses: retention-tail@RATE | \
+         stuck-at[@DENSITY] | vref-drift@P | refresh-stall@K | shard-outage@T[/SHARD] | \
+         engine-timeout@K | engine-crash@K | seed=N  (rates in 0..=1, K >= 1, T in seconds)";
+
+    /// Does the plan carry any memory-tier clause (one a [`FaultyBackend`]
+    /// acts on)?
+    pub fn has_memory_faults(&self) -> bool {
+        self.retention_tail.is_some()
+            || self.stuck_at.is_some()
+            || self.vref_drift.is_some()
+            || self.refresh_stall.is_some()
+            || self.shard_outage.is_some()
+    }
+
+    /// Does the plan carry any serving-tier engine clause (one a
+    /// [`FaultyEngine`] acts on)?
+    pub fn has_engine_faults(&self) -> bool {
+        self.engine_timeout.is_some() || self.engine_crash.is_some()
+    }
+}
+
+impl std::str::FromStr for FaultPlan {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        let mut plan = FaultPlan::default();
+        let mut any = false;
+        let rate = |clause: &str, v: &str| -> Result<f64> {
+            let r: f64 = v
+                .parse()
+                .map_err(|_| anyhow!("bad rate `{v}` in `{clause}` ({})", Self::GRAMMAR))?;
+            if !(0.0..=1.0).contains(&r) {
+                bail!("rate {r} out of 0..=1 in `{clause}` ({})", Self::GRAMMAR);
+            }
+            Ok(r)
+        };
+        let every = |clause: &str, v: &str| -> Result<u64> {
+            let k: u64 = v
+                .parse()
+                .map_err(|_| anyhow!("bad count `{v}` in `{clause}` ({})", Self::GRAMMAR))?;
+            if k == 0 {
+                bail!("count must be >= 1 in `{clause}` ({})", Self::GRAMMAR);
+            }
+            Ok(k)
+        };
+        for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            any = true;
+            let lower = part.to_ascii_lowercase();
+            let (key, val) = match lower.split_once('@') {
+                Some((k, v)) => (k, Some(v)),
+                None => (lower.as_str(), None),
+            };
+            match (key, val) {
+                ("retention-tail", Some(v)) => plan.retention_tail = Some(rate(part, v)?),
+                ("stuck-at", None) => plan.stuck_at = Some(DEFAULT_STUCK_DENSITY),
+                ("stuck-at", Some(v)) => plan.stuck_at = Some(rate(part, v)?),
+                ("vref-drift", Some(v)) => plan.vref_drift = Some(rate(part, v)?),
+                ("refresh-stall", Some(v)) => plan.refresh_stall = Some(every(part, v)?),
+                ("shard-outage", Some(v)) => {
+                    let (t_str, shard) = match v.split_once('/') {
+                        Some((t, sh)) => (
+                            t,
+                            sh.parse::<usize>().map_err(|_| {
+                                anyhow!("bad shard `{sh}` in `{part}` ({})", Self::GRAMMAR)
+                            })?,
+                        ),
+                        None => (v, 0),
+                    };
+                    let t: f64 = t_str.parse().map_err(|_| {
+                        anyhow!("bad outage time `{t_str}` in `{part}` ({})", Self::GRAMMAR)
+                    })?;
+                    if !(t >= 0.0) {
+                        bail!("outage time must be >= 0 in `{part}` ({})", Self::GRAMMAR);
+                    }
+                    plan.shard_outage = Some((t, shard));
+                }
+                ("engine-timeout", Some(v)) => plan.engine_timeout = Some(every(part, v)?),
+                ("engine-crash", Some(v)) => plan.engine_crash = Some(every(part, v)?),
+                _ => {
+                    if let Some(v) = lower.strip_prefix("seed=") {
+                        plan.seed = v
+                            .parse()
+                            .map_err(|_| anyhow!("bad seed `{v}` ({})", Self::GRAMMAR))?;
+                    } else {
+                        bail!("unknown fault clause `{part}` ({})", Self::GRAMMAR);
+                    }
+                }
+            }
+        }
+        if !any {
+            bail!("empty fault plan ({})", Self::GRAMMAR);
+        }
+        Ok(plan)
+    }
+}
+
+impl std::fmt::Display for FaultPlan {
+    /// Canonical clause order (the parse order of the grammar), `seed=N`
+    /// last and only when non-default — `parse(display(p)) == p` always,
+    /// and `display(parse(s)) == s` for canonical inputs (pinned by the
+    /// round-trip test; the trace JSON stores this string).
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut parts: Vec<String> = Vec::new();
+        if let Some(r) = self.retention_tail {
+            parts.push(format!("retention-tail@{r}"));
+        }
+        if let Some(d) = self.stuck_at {
+            parts.push(format!("stuck-at@{d}"));
+        }
+        if let Some(p) = self.vref_drift {
+            parts.push(format!("vref-drift@{p}"));
+        }
+        if let Some(k) = self.refresh_stall {
+            parts.push(format!("refresh-stall@{k}"));
+        }
+        if let Some((t, s)) = self.shard_outage {
+            parts.push(format!("shard-outage@{t}/{s}"));
+        }
+        if let Some(k) = self.engine_timeout {
+            parts.push(format!("engine-timeout@{k}"));
+        }
+        if let Some(k) = self.engine_crash {
+            parts.push(format!("engine-crash@{k}"));
+        }
+        if self.seed != DEFAULT_PLAN_SEED {
+            parts.push(format!("seed={}", self.seed));
+        }
+        write!(f, "{}", parts.join(","))
+    }
+}
+
+/// Wrap any backend in a reproducible fault schedule. Implements
+/// [`MemoryBackend`] by delegation; the plan's memory-tier transforms sit
+/// *outside* the wrapped array, so wrapping the production backend and the
+/// golden oracle in the same plan preserves their bit/meter agreement.
+pub struct FaultyBackend {
+    inner: Box<dyn MemoryBackend>,
+    plan: FaultPlan,
+    /// The op-stream draw source (store masks, load mis-sense).
+    rng: Pcg64,
+    /// Per-byte stuck-at-1 masks (empty when the clause is absent).
+    stuck: Vec<u8>,
+    refresh_calls: u64,
+    outage_fired: bool,
+}
+
+impl FaultyBackend {
+    pub fn wrap(inner: Box<dyn MemoryBackend>, plan: &FaultPlan) -> Self {
+        // the stuck-cell map is a manufacturing property: drawn once from
+        // the plan seed and the capacity, on a stream separate from the
+        // per-op draws so op traffic cannot shift it
+        let stuck = match plan.stuck_at {
+            Some(density) => {
+                let mut map_rng = Pcg64::new(plan.seed ^ 0x57C4_A7B1);
+                (0..inner.capacity())
+                    .map(|_| {
+                        // unconditional position draw keeps the stream
+                        // capacity-indexed (one pair of draws per byte)
+                        let hit = map_rng.bernoulli(density);
+                        let bit = map_rng.below(7) as u8;
+                        if hit {
+                            1u8 << bit
+                        } else {
+                            0
+                        }
+                    })
+                    .collect()
+            }
+            None => Vec::new(),
+        };
+        FaultyBackend {
+            rng: Pcg64::new(plan.seed),
+            stuck,
+            inner,
+            plan: plan.clone(),
+            refresh_calls: 0,
+            outage_fired: false,
+        }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Stuck cells in the map (test/report introspection).
+    pub fn stuck_cells(&self) -> usize {
+        self.stuck.iter().filter(|&&m| m != 0).count()
+    }
+
+    fn maybe_outage(&mut self, now: f64) {
+        if let Some((t, shard)) = self.plan.shard_outage {
+            if !self.outage_fired && now >= t {
+                self.outage_fired = true;
+                self.inner.quarantine_shard(shard, now);
+            }
+        }
+    }
+
+    /// Seeded 7-bit mask at per-bit probability `p` — drawn unconditionally
+    /// so the stream position is data-independent.
+    #[inline]
+    fn draw_mask(&mut self, p: f64) -> u8 {
+        let mut mask = 0u8;
+        for bit in 0..7 {
+            if self.rng.bernoulli(p) {
+                mask |= 1 << bit;
+            }
+        }
+        mask
+    }
+}
+
+impl MemoryBackend for FaultyBackend {
+    fn spec(&self) -> BackendSpec {
+        self.inner.spec()
+    }
+
+    fn capacity(&self) -> usize {
+        self.inner.capacity()
+    }
+
+    fn now(&self) -> f64 {
+        self.inner.now()
+    }
+
+    fn store(&mut self, addr: usize, data: &[u8], now: f64) {
+        self.maybe_outage(now);
+        if self.plan.retention_tail.is_none() && self.stuck.is_empty() {
+            return self.inner.store(addr, data, now);
+        }
+        let mut d = data.to_vec();
+        if let Some(rate) = self.plan.retention_tail {
+            for b in d.iter_mut() {
+                let mask = self.draw_mask(rate);
+                *b = apply_flip_mask(*b, mask);
+            }
+        }
+        if !self.stuck.is_empty() {
+            for (i, b) in d.iter_mut().enumerate() {
+                *b |= self.stuck[addr + i];
+            }
+        }
+        self.inner.store(addr, &d, now);
+    }
+
+    fn load(&mut self, addr: usize, len: usize, now: f64) -> Vec<u8> {
+        self.maybe_outage(now);
+        let mut out = self.inner.load(addr, len, now);
+        if let Some(p) = self.plan.vref_drift {
+            for b in out.iter_mut() {
+                // CVSA mis-sense: a stored 1 reads as 0 (never the SRAM
+                // plane); draws are unconditional per bit position
+                let mask = self.draw_mask(p);
+                *b &= !(mask & 0x7f) | 0x80;
+            }
+        }
+        if !self.stuck.is_empty() {
+            for (i, b) in out.iter_mut().enumerate() {
+                *b |= self.stuck[addr + i];
+            }
+        }
+        out
+    }
+
+    fn tick(&mut self, now: f64) {
+        self.maybe_outage(now);
+        self.inner.tick(now);
+    }
+
+    fn refresh_due(&self) -> Option<f64> {
+        self.inner.refresh_due()
+    }
+
+    fn refresh_row(&mut self, row: usize, now: f64) {
+        self.maybe_outage(now);
+        self.refresh_calls += 1;
+        if let Some(k) = self.plan.refresh_stall {
+            if self.refresh_calls % k == 0 {
+                return; // stalled slot: the row silently ages on
+            }
+        }
+        self.inner.refresh_row(row, now);
+    }
+
+    fn rows_per_bank(&self) -> usize {
+        self.inner.rows_per_bank()
+    }
+
+    fn meter(&self) -> &EnergyMeter {
+        self.inner.meter()
+    }
+
+    fn shard_meters(&self) -> Vec<EnergyMeter> {
+        self.inner.shard_meters()
+    }
+
+    fn energy_card(&self) -> &EnergyCard {
+        self.inner.energy_card()
+    }
+
+    fn area(&self) -> f64 {
+        self.inner.area()
+    }
+
+    fn quarantine_shard(&mut self, shard: usize, now: f64) -> bool {
+        self.inner.quarantine_shard(shard, now)
+    }
+
+    fn label(&self) -> String {
+        format!("{} [faults: {}]", self.inner.label(), self.plan)
+    }
+}
+
+/// Wrap an inference engine in the plan's serving-tier clauses: every
+/// `engine-timeout@K`-th batch fails transiently (the pool replies errors
+/// and keeps the worker), and the `engine-crash@K`-th batch fails with
+/// [`FATAL_MARKER`] (the worker replies errors to its batch and exits; the
+/// pool degrades admission to the survivors).
+pub struct FaultyEngine {
+    inner: Box<dyn crate::coordinator::pool::InferEngine>,
+    plan: FaultPlan,
+    calls: u64,
+}
+
+impl FaultyEngine {
+    pub fn wrap(inner: Box<dyn crate::coordinator::pool::InferEngine>, plan: &FaultPlan) -> Self {
+        FaultyEngine { inner, plan: plan.clone(), calls: 0 }
+    }
+}
+
+impl crate::coordinator::pool::InferEngine for FaultyEngine {
+    fn batch(&self) -> usize {
+        self.inner.batch()
+    }
+
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn infer(&mut self, x: &[i8]) -> Result<Vec<usize>> {
+        self.calls += 1;
+        if let Some(k) = self.plan.engine_crash {
+            if self.calls == k {
+                bail!("{FATAL_MARKER} at batch {k}");
+            }
+        }
+        if let Some(k) = self.plan.engine_timeout {
+            if self.calls % k == 0 {
+                bail!("injected engine timeout at batch {}", self.calls);
+            }
+        }
+        self.inner.infer(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::backend;
+
+    fn plan(s: &str) -> FaultPlan {
+        s.parse().unwrap()
+    }
+
+    #[test]
+    fn plan_grammar_roundtrips_canonical_forms() {
+        for s in [
+            "retention-tail@0.01",
+            "stuck-at@0.001",
+            "vref-drift@0.0005",
+            "refresh-stall@7",
+            "shard-outage@0.002/1",
+            "engine-timeout@5",
+            "engine-crash@9",
+            "retention-tail@0.01,stuck-at@0.001,vref-drift@0.0005,refresh-stall@7,shard-outage@0.002/1,engine-timeout@5,engine-crash@9,seed=42",
+        ] {
+            let p = plan(s);
+            assert_eq!(p.to_string(), s, "{s}");
+            let again: FaultPlan = p.to_string().parse().unwrap();
+            assert_eq!(again, p, "{s}");
+        }
+        // sugar: bare stuck-at takes the default density, bare outage
+        // takes shard 0, seed is elided from Display when default
+        assert_eq!(plan("stuck-at").stuck_at, Some(DEFAULT_STUCK_DENSITY));
+        assert_eq!(plan("shard-outage@0.01").shard_outage, Some((0.01, 0)));
+        assert_eq!(plan("refresh-stall@3").seed, DEFAULT_PLAN_SEED);
+        assert_eq!(plan("refresh-stall@3").to_string(), "refresh-stall@3");
+    }
+
+    #[test]
+    fn plan_grammar_rejects_garbage() {
+        for s in [
+            "",
+            " , ,",
+            "retention-tail",
+            "retention-tail@1.5",
+            "vref-drift@-0.1",
+            "refresh-stall@0",
+            "engine-crash@x",
+            "shard-outage@-1",
+            "shard-outage@0.1/x",
+            "seed=abc",
+            "unknown-fault@1",
+        ] {
+            assert!(s.parse::<FaultPlan>().is_err(), "`{s}` must not parse");
+        }
+    }
+
+    #[test]
+    fn plan_classifies_tiers() {
+        assert!(plan("retention-tail@0.01").has_memory_faults());
+        assert!(!plan("retention-tail@0.01").has_engine_faults());
+        assert!(plan("engine-crash@3").has_engine_faults());
+        assert!(!plan("engine-crash@3").has_memory_faults());
+        assert!(plan("shard-outage@0.01").has_memory_faults());
+    }
+
+    #[test]
+    fn wrapping_with_same_plan_is_deterministic() {
+        // two independently wrapped SRAM arrays under one plan must agree
+        // byte-for-byte: the whole fault layer is a function of (plan, op
+        // sequence)
+        let p = plan("retention-tail@0.05,stuck-at@0.01,vref-drift@0.03,seed=7");
+        let mk = || FaultyBackend::wrap(backend::build(&BackendSpec::Sram, 16 * 1024, 1), &p);
+        let (mut a, mut b) = (mk(), mk());
+        let data: Vec<u8> = (0..777u32).map(|i| (i * 13) as u8).collect();
+        for (i, addr) in [(1u64, 0usize), (2, 131), (3, 64), (4, 1000)].iter().enumerate().map(|(i, &(t, a))| ((i as f64 + 1.0) * 1e-6 * t as f64, a)) {
+            a.store(addr, &data, i);
+            b.store(addr, &data, i);
+            assert_eq!(a.load(addr, data.len(), i + 1e-9), b.load(addr, data.len(), i + 1e-9));
+        }
+        assert_eq!(a.meter(), b.meter());
+    }
+
+    #[test]
+    fn retention_tail_spares_the_sign_plane() {
+        let p = plan("retention-tail@1,seed=3");
+        let mut f = FaultyBackend::wrap(backend::build(&BackendSpec::Sram, 16 * 1024, 1), &p);
+        f.store(0, &[0u8; 64], 1e-6);
+        let out = f.load(0, 64, 2e-6);
+        // rate 1: every eDRAM zero flips; bit 7 never does
+        assert!(out.iter().all(|&b| b == 0x7f), "{out:?}");
+    }
+
+    #[test]
+    fn vref_drift_only_clears_edram_bits() {
+        let p = plan("vref-drift@1,seed=3");
+        let mut f = FaultyBackend::wrap(backend::build(&BackendSpec::Sram, 16 * 1024, 1), &p);
+        f.store(0, &[0xffu8; 64], 1e-6);
+        let out = f.load(0, 64, 2e-6);
+        assert!(out.iter().all(|&b| b == 0x80), "sign survives mis-sense: {out:?}");
+        // the array itself is untouched: a clean wrapper reads it back
+        let mut clean = FaultyBackend::wrap(backend::build(&BackendSpec::Sram, 16 * 1024, 1), &plan("refresh-stall@1000"));
+        clean.store(0, &[0xffu8; 64], 1e-6);
+        assert!(clean.load(0, 64, 2e-6).iter().all(|&b| b == 0xff));
+    }
+
+    #[test]
+    fn stuck_cells_force_bits_idempotently() {
+        let p = plan("stuck-at@0.5,seed=11");
+        let mut f = FaultyBackend::wrap(backend::build(&BackendSpec::Sram, 16 * 1024, 1), &p);
+        assert!(f.stuck_cells() > 3000, "{}", f.stuck_cells());
+        f.store(0, &[0u8; 256], 1e-6);
+        let once = f.load(0, 256, 2e-6);
+        // store-side and load-side forcing agree: re-reading changes nothing
+        let twice = f.load(0, 256, 3e-6);
+        assert_eq!(once, twice);
+        assert!(once.iter().any(|&b| b != 0), "density 0.5 must hit something");
+        assert!(once.iter().all(|&b| b & 0x80 == 0), "stuck map covers eDRAM bits only");
+    }
+
+    #[test]
+    fn refresh_stall_drops_every_kth_slot() {
+        let p = plan("refresh-stall@3");
+        let spec = BackendSpec::mcaimem_default();
+        let mut f = FaultyBackend::wrap(backend::build(&spec, 16 * 1024, 1), &p);
+        for i in 0..9usize {
+            f.refresh_row(i % 256, (i + 1) as f64 * 1e-7);
+        }
+        assert_eq!(f.meter().refreshes, 6, "3 of 9 slots stalled");
+    }
+
+    #[test]
+    fn faulty_engine_injects_timeouts_and_a_fatal_crash() {
+        use crate::coordinator::pool::{InferEngine, SyntheticEngine};
+        let inner = Box::new(SyntheticEngine {
+            exec_latency: std::time::Duration::ZERO,
+            ..Default::default()
+        });
+        let mut eng = FaultyEngine::wrap(inner, &plan("engine-timeout@3,engine-crash@5"));
+        let x = vec![1i8; eng.batch() * eng.dim()];
+        let outcomes: Vec<bool> = (0..6).map(|_| eng.infer(&x).is_ok()).collect();
+        // calls 3 and 6 time out; call 5 crashes
+        assert_eq!(outcomes, vec![true, true, false, true, false, false]);
+        let err = {
+            let mut eng2 = FaultyEngine::wrap(
+                Box::new(SyntheticEngine { exec_latency: std::time::Duration::ZERO, ..Default::default() }),
+                &plan("engine-crash@1"),
+            );
+            eng2.infer(&x).unwrap_err().to_string()
+        };
+        assert!(err.contains(FATAL_MARKER), "{err}");
+    }
+}

@@ -37,6 +37,7 @@ pub mod device;
 pub mod dse;
 pub mod encode;
 pub mod energy;
+pub mod faults;
 pub mod inject;
 pub mod mem;
 pub mod report;

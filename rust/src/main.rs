@@ -43,7 +43,8 @@ USAGE:
                   [--fidelity N] [--json FILE] [--diff FILE] [--quick] [--paper-gate]
       design-space exploration: expand the design grid (SPEC grammar:
       ratio=1..15,vref=0.6:0.9:0.05,enc=on,geom=256x64|512x64,shards=1,
-      refresh=periodic|gated), evaluate every point in parallel through
+      refresh=periodic|gated,ecc=off|on), evaluate every point in parallel
+      through
       the composed circuit/area/energy/scalesim models, and print the
       Pareto frontier + hypervolume. --json writes the frontier artifact;
       --diff compares against a previous artifact; --quick runs the small
@@ -68,7 +69,20 @@ USAGE:
       geometries. Failures shrink (ddmin; disable with --no-shrink) to
       minimal reproducing traces saved under --save-dir. --quick bounds the
       run for CI (<30 s). --replay re-runs a saved failure trace (e.g. a
-      CI artifact) locally
+      CI artifact) locally. --faults PLAN runs the whole campaign under a
+      seeded fault schedule (see `mcaimem chaos`)
+  mcaimem chaos [--faults PLAN] [--seed S] [--ops N] [--shards N] [--workers K]
+                [--requests N] [--no-shrink] [--quick] [--save-dir DIR]
+                [--replay FILE] [--json FILE]
+      seeded chaos drill across both tiers: the conformance campaign under
+      an active fault plan (mcaimem@0.8 and mcaimem@0.8+ecc, flat and
+      sharded, fault-aware golden-oracle agreement) plus a degraded-mode
+      serving pool (failover shard pairs, injected engine timeouts and one
+      fatal crash) asserting zero lost replies. PLAN grammar:
+      retention-tail@RATE,stuck-at[@D],vref-drift@P,refresh-stall@K,
+      shard-outage@T[/S],engine-timeout@K,engine-crash@K,seed=N
+      (default: all six fault classes). Failures ddmin-shrink to minimal
+      traces under --save-dir; --replay re-runs one locally
   mcaimem selftest [--artifacts DIR]
       cross-check the Rust and Pallas implementations through PJRT
 
@@ -109,7 +123,7 @@ fn run() -> Result<()> {
             "csv", "artifacts", "network", "platform", "backend", "seed", "requests", "p",
             "window-ms", "shards", "workers", "target-rps", "clients", "high-water",
             "buffer-kb", "mix", "ops", "bytes-kb", "save-dir", "replay", "json", "space",
-            "strategy", "samples", "fidelity", "diff",
+            "strategy", "samples", "fidelity", "diff", "faults",
         ],
         &["quick", "help", "sweep", "no-retry", "no-shrink", "paper-gate"],
     );
@@ -150,6 +164,7 @@ fn run() -> Result<()> {
         "explore" => cmd_explore(&args),
         "serve" => cmd_serve(&args),
         "conform" => cmd_conform(&args),
+        "chaos" => cmd_chaos(&args),
         "selftest" => cmd_selftest(&args),
         other => bail!("unknown command `{other}`\n{USAGE}"),
     }
@@ -458,6 +473,10 @@ fn cmd_conform(args: &mcaimem::cli::ParsedArgs) -> Result<()> {
         // artifact; --no-shrink skips the (re-record-heavy) minimization
         // when debugging a long campaign by hand
         shrink: !args.has_flag("no-shrink"),
+        faults: args
+            .get("faults")
+            .map(|s| s.parse::<mcaimem::faults::FaultPlan>())
+            .transpose()?,
     };
     if args.has_flag("quick") {
         cfg = cfg.quick();
@@ -487,6 +506,59 @@ fn cmd_conform(args: &mcaimem::cli::ParsedArgs) -> Result<()> {
         );
     }
     bail!("conformance FAILED: {} failing run(s)", outcomes.iter().filter(|o| !o.ok()).count());
+}
+
+fn cmd_chaos(args: &mcaimem::cli::ParsedArgs) -> Result<()> {
+    use mcaimem::sim::chaos::{ChaosConfig, DEFAULT_DRILL};
+
+    // chaos failure artifacts are conformance traces with a fault-plan
+    // header; --replay re-runs one through the same fault-aware path
+    if args.get("replay").is_some() {
+        return cmd_conform(args);
+    }
+
+    let mut cfg = ChaosConfig {
+        plan: args.get("faults").unwrap_or(DEFAULT_DRILL).parse()?,
+        seed: args.get_usize("seed", 42)? as u64,
+        ops: args.get_usize("ops", 6_000)?,
+        shards: args.get_usize("shards", 4)?,
+        workers: args.get_usize("workers", 2)?,
+        requests: args.get_usize("requests", 320)?,
+        shrink: !args.has_flag("no-shrink"),
+        ..ChaosConfig::default()
+    };
+    if args.has_flag("quick") {
+        cfg = cfg.quick();
+    }
+
+    let (table, outcome, ok) = mcaimem::report::chaos::chaos(&cfg)?;
+    println!("{}", table.render());
+    if let Some(path) = args.get("json") {
+        let doc = mcaimem::report::chaos::outcome_json(&outcome, &cfg);
+        std::fs::write(path, doc.to_pretty())?;
+        println!("machine-readable report written to {path}");
+    }
+    if ok {
+        println!(
+            "chaos drill OK: conformance held and no reply was lost under `{}`",
+            cfg.plan
+        );
+        return Ok(());
+    }
+    let dir = std::path::PathBuf::from(args.get("save-dir").unwrap_or("."));
+    let written = mcaimem::report::conformance::save_failures(&outcome.memory, &dir)?;
+    for p in &written {
+        eprintln!(
+            "minimal reproducing trace saved: {} (replay with `mcaimem chaos --replay {}`)",
+            p.display(),
+            p.display()
+        );
+    }
+    bail!(
+        "chaos drill FAILED: {} memory-tier failure(s), {} lost replies",
+        outcome.memory.iter().filter(|o| !o.ok()).count(),
+        outcome.serving.lost
+    );
 }
 
 fn cmd_selftest(args: &mcaimem::cli::ParsedArgs) -> Result<()> {
@@ -530,7 +602,7 @@ fn cmd_selftest(args: &mcaimem::cli::ParsedArgs) -> Result<()> {
 
     let enc = runner.accuracy(&BackendSpec::mcaimem_default(), 0.05, 4, 2)?;
     let noenc =
-        runner.accuracy(&BackendSpec::Mcaimem { vref: 0.8, encode: false }, 0.05, 4, 2)?;
+        runner.accuracy(&BackendSpec::Mcaimem { vref: 0.8, encode: false, ecc: false }, 0.05, 4, 2)?;
     anyhow::ensure!(enc > noenc, "one-enhancement must protect accuracy");
     println!(
         "p=5%: with one-enh {} > without {} OK",

@@ -148,6 +148,16 @@ impl AreaModel {
         array + periph + Self::mixed_extras(ratio)
     }
 
+    /// SECDED check-plane overhead (m²) for a protected macro of `bytes`
+    /// data capacity: one 6T SRAM check byte per 8 data bytes (12.5 % of
+    /// the cells, but in the dense SRAM corner of the layout), carrying the
+    /// same periphery fraction as the array it rides in. Charged on top of
+    /// [`Self::macro_area_mixed`] by `mcaimem@V+ecc` backends and the
+    /// `ecc=on` axis of the design-space explorer.
+    pub fn ecc_overhead(&self, bytes: usize) -> f64 {
+        self.array_area(MemKind::Sram6t, bytes.div_ceil(8)) * (1.0 + PERIPHERY_FRAC)
+    }
+
     /// The Fig. 13 comparison: area of a 16 KB bank.
     pub fn bank16k_area(&self, kind: MemKind) -> f64 {
         self.macro_area(kind, 16 * 1024)
@@ -280,6 +290,22 @@ mod tests {
         // has the same 1/cols + 1/rows as the 256×64 B reference
         let skewed = m.macro_area_banked(bytes, 7, 512, 32);
         assert!((skewed / reference - 1.0).abs() < 1e-12, "{skewed} vs {reference}");
+    }
+
+    #[test]
+    fn ecc_overhead_is_a_modest_sram_plane() {
+        let m = AreaModel::lp45();
+        for bytes in [16 * 1024, MIB] {
+            let base = m.macro_area_mixed(bytes, 7);
+            let ecc = m.ecc_overhead(bytes);
+            // 1 SRAM check byte per 8 data bytes: 12.5 % of the *SRAM*
+            // macro, i.e. ~24 % of the (48 %-smaller) mixed macro — the
+            // protection still beats unprotected SRAM by a wide margin
+            assert!(ecc > 0.0 && ecc < 0.30 * base, "ecc={ecc} base={base}");
+            assert!(base + ecc < m.macro_area(MemKind::Sram6t, bytes));
+        }
+        // scales linearly with capacity like the plane it shadows
+        assert!((m.ecc_overhead(MIB) / m.ecc_overhead(16 * 1024) - 64.0).abs() < 1e-9);
     }
 
     #[test]

@@ -6,7 +6,8 @@
 //! scheduler, server and reports talk to a buffer. That is:
 //!
 //! * [`BackendSpec`] — the parseable spec (`"sram"`, `"edram2t"`,
-//!   `"rram"`, `"mcaimem@0.8"`, `"mcaimem@0.7-noenc"`), with
+//!   `"rram"`, `"mcaimem@0.8"`, `"mcaimem@0.7-noenc"`,
+//!   `"mcaimem@0.8+ecc"`), with
 //!   `FromStr`/`Display` round-tripping. This is the *only* spec type: the
 //!   CLI parses it, `BufferManager`/`InferenceServer`/`system_eval` and the
 //!   report drivers all accept it. ([`super::MemKind`] remains the
@@ -58,8 +59,9 @@ pub enum BackendSpec {
     /// baseline) — no encoder, 1.3 µs refresh charged analytically.
     Edram2t,
     /// MCAIMem at a given V_REF; `encode = false` is the Fig. 11
-    /// "without one-enhancement" ablation.
-    Mcaimem { vref: f64, encode: bool },
+    /// "without one-enhancement" ablation; `ecc = true` adds the SECDED
+    /// check-byte plane scrubbed on the refresh pass ([`super::ecc`]).
+    Mcaimem { vref: f64, encode: bool, ecc: bool },
     /// Chimera-like non-volatile RRAM buffer (Fig. 15b).
     Rram,
 }
@@ -67,7 +69,7 @@ pub enum BackendSpec {
 impl BackendSpec {
     /// The paper's operating point: V_REF = 0.8 V, encoder on.
     pub const fn mcaimem_default() -> Self {
-        BackendSpec::Mcaimem { vref: 0.8, encode: true }
+        BackendSpec::Mcaimem { vref: 0.8, encode: true, ecc: false }
     }
 
     /// Pretty label for tables/reports (the grammar form is `Display`).
@@ -75,8 +77,11 @@ impl BackendSpec {
         match self {
             BackendSpec::Sram => "SRAM".into(),
             BackendSpec::Edram2t => "eDRAM(2T)".into(),
-            BackendSpec::Mcaimem { vref, encode: true } => format!("MCAIMem@{vref}"),
-            BackendSpec::Mcaimem { vref, encode: false } => format!("MCAIMem@{vref}-noenc"),
+            BackendSpec::Mcaimem { vref, encode, ecc } => format!(
+                "MCAIMem@{vref}{}{}",
+                if *encode { "" } else { "-noenc" },
+                if *ecc { "+ECC" } else { "" }
+            ),
             BackendSpec::Rram => "RRAM".into(),
         }
     }
@@ -139,18 +144,26 @@ impl BackendSpec {
     }
 }
 
-const GRAMMAR: &str = "sram | edram2t | rram | mcaimem[@VREF[-noenc]]  (VREF in volts, 0.3..=1.1)";
+const GRAMMAR: &str =
+    "sram | edram2t | rram | mcaimem[@VREF[-noenc]][+ecc]  (VREF in volts, 0.3..=1.1)";
 
 impl FromStr for BackendSpec {
     type Err = anyhow::Error;
 
     fn from_str(s: &str) -> Result<Self> {
         let t = s.trim().to_ascii_lowercase();
+        let (t, ecc) = match t.strip_suffix("+ecc") {
+            Some(t) => (t.to_string(), true),
+            None => (t, false),
+        };
         match t.as_str() {
+            "sram" | "edram2t" | "rram" if ecc => {
+                bail!("`+ecc` applies to mcaimem specs only (grammar: {GRAMMAR})")
+            }
             "sram" => return Ok(BackendSpec::Sram),
             "edram2t" => return Ok(BackendSpec::Edram2t),
             "rram" => return Ok(BackendSpec::Rram),
-            "mcaimem" => return Ok(BackendSpec::mcaimem_default()),
+            "mcaimem" => return Ok(BackendSpec::Mcaimem { vref: 0.8, encode: true, ecc }),
             _ => {}
         }
         let rest = t
@@ -166,7 +179,7 @@ impl FromStr for BackendSpec {
         if !(0.3..=1.1).contains(&vref) {
             bail!("V_REF {vref} out of range in backend spec `{s}` (grammar: {GRAMMAR})");
         }
-        Ok(BackendSpec::Mcaimem { vref, encode })
+        Ok(BackendSpec::Mcaimem { vref, encode, ecc })
     }
 }
 
@@ -176,9 +189,12 @@ impl fmt::Display for BackendSpec {
             BackendSpec::Sram => write!(f, "sram"),
             BackendSpec::Edram2t => write!(f, "edram2t"),
             BackendSpec::Rram => write!(f, "rram"),
-            BackendSpec::Mcaimem { vref, encode } => {
-                write!(f, "mcaimem@{vref}{}", if *encode { "" } else { "-noenc" })
-            }
+            BackendSpec::Mcaimem { vref, encode, ecc } => write!(
+                f,
+                "mcaimem@{vref}{}{}",
+                if *encode { "" } else { "-noenc" },
+                if *ecc { "+ecc" } else { "" }
+            ),
         }
     }
 }
@@ -235,6 +251,16 @@ pub trait MemoryBackend: Send {
         1
     }
 
+    /// Quarantine a failed shard at time `now`, remapping its addresses to
+    /// failover storage. Returns whether the request was honored; the
+    /// default (single-array backends, or a
+    /// [`super::sharded::ShardedBackend`] built without failover
+    /// provisioning) ignores it — dying without a standby replica is not a
+    /// recoverable event.
+    fn quarantine_shard(&mut self, _shard: usize, _now: f64) -> bool {
+        false
+    }
+
     /// The shared energy/event meter.
     fn meter(&self) -> &EnergyMeter;
 
@@ -267,8 +293,10 @@ pub fn build(spec: &BackendSpec, bytes: usize, seed: u64) -> Box<dyn MemoryBacke
         BackendSpec::Sram => Box::new(SramBackend::new(bytes)),
         BackendSpec::Edram2t => Box::new(Edram2tBackend::new(bytes)),
         BackendSpec::Rram => Box::new(RramBackend::new(bytes)),
-        BackendSpec::Mcaimem { vref, encode } => {
-            Box::new(McaimemBackend::new(bytes, *vref, *encode, seed))
+        BackendSpec::Mcaimem { vref, encode, ecc } => {
+            let mut b = McaimemBackend::new(bytes, *vref, *encode, seed);
+            b.mem.ecc_enabled = *ecc;
+            Box::new(b)
         }
     }
 }
@@ -304,7 +332,11 @@ impl McaimemBackend {
 
 impl MemoryBackend for McaimemBackend {
     fn spec(&self) -> BackendSpec {
-        BackendSpec::Mcaimem { vref: self.mem.vref, encode: self.mem.encode_enabled }
+        BackendSpec::Mcaimem {
+            vref: self.mem.vref,
+            encode: self.mem.encode_enabled,
+            ecc: self.mem.ecc_enabled,
+        }
     }
 
     fn capacity(&self) -> usize {
@@ -348,7 +380,13 @@ impl MemoryBackend for McaimemBackend {
     }
 
     fn area(&self) -> f64 {
-        AreaModel::lp45().macro_area_mixed(self.capacity(), self.mem.ratio)
+        let m = AreaModel::lp45();
+        let base = m.macro_area_mixed(self.capacity(), self.mem.ratio);
+        if self.mem.ecc_enabled {
+            base + m.ecc_overhead(self.capacity())
+        } else {
+            base
+        }
     }
 
     fn label(&self) -> String {
@@ -651,7 +689,16 @@ mod tests {
 
     #[test]
     fn spec_roundtrip_canonical_forms() {
-        for s in ["sram", "edram2t", "rram", "mcaimem@0.8", "mcaimem@0.7-noenc", "mcaimem@0.55"] {
+        for s in [
+            "sram",
+            "edram2t",
+            "rram",
+            "mcaimem@0.8",
+            "mcaimem@0.7-noenc",
+            "mcaimem@0.55",
+            "mcaimem@0.8+ecc",
+            "mcaimem@0.7-noenc+ecc",
+        ] {
             let spec: BackendSpec = s.parse().unwrap();
             assert_eq!(spec.to_string(), s, "{s}");
             let again: BackendSpec = spec.to_string().parse().unwrap();
@@ -668,7 +715,18 @@ mod tests {
 
     #[test]
     fn spec_grammar_rejects_garbage() {
-        for s in ["", "sram@0.8", "mcaimem@", "mcaimem@abc", "edram", "mcaimem@0.8-enc", "mcaimem@9.9"] {
+        for s in [
+            "",
+            "sram@0.8",
+            "mcaimem@",
+            "mcaimem@abc",
+            "edram",
+            "mcaimem@0.8-enc",
+            "mcaimem@9.9",
+            "sram+ecc",
+            "rram+ecc",
+            "mcaimem@0.8+ecc2",
+        ] {
             assert!(s.parse::<BackendSpec>().is_err(), "`{s}` must not parse");
         }
     }
@@ -783,7 +841,7 @@ mod tests {
 
     #[test]
     fn mcaimem_backend_is_the_functional_array() {
-        let spec = BackendSpec::Mcaimem { vref: 0.8, encode: true };
+        let spec = BackendSpec::Mcaimem { vref: 0.8, encode: true, ecc: false };
         let mut b = build(&spec, 16 * 1024, 0xBEEF);
         assert!(b.refresh_due().is_some());
         assert_eq!(b.rows_per_bank(), 256);
@@ -791,6 +849,23 @@ mod tests {
         b.store(0, &data, 1e-9);
         assert_eq!(b.load(0, 64, 2e-9), data);
         assert!(b.meter().write_j > 0.0 && b.meter().read_j > 0.0);
+    }
+
+    #[test]
+    fn ecc_spec_builds_a_protected_array() {
+        let spec: BackendSpec = "mcaimem@0.8+ecc".parse().unwrap();
+        assert_eq!(spec, BackendSpec::Mcaimem { vref: 0.8, encode: true, ecc: true });
+        assert_eq!(spec.label(), "MCAIMem@0.8+ECC");
+        let mut b = build(&spec, 16 * 1024, 0xBEEF);
+        assert_eq!(b.spec(), spec, "spec round-trips through build");
+        // the check plane costs area but keeps the functional contract
+        let plain = build(&BackendSpec::mcaimem_default(), 16 * 1024, 0xBEEF);
+        assert!(b.area() > plain.area());
+        let data: Vec<u8> = (0..64).collect();
+        b.store(0, &data, 1e-9);
+        assert_eq!(b.load(0, 64, 2e-9), data);
+        // quarantine is refused by a flat array (no failover provisioning)
+        assert!(!b.quarantine_shard(0, 3e-9));
     }
 
     #[test]

@@ -1,0 +1,146 @@
+//! SECDED check-byte plane for the eDRAM-mapped bits (PR 6, §Faults).
+//!
+//! The paper's mixed cell trades SRAM's "never decays" for area; the
+//! protection story that makes the trade credible end-to-end is a standard
+//! single-error-correct / double-error-detect plane over each 64-bit data
+//! word, scrubbed on the refresh cadence the array already pays for
+//! (§III-C refresh-by-read): the CVSA pass senses the row anyway, so the
+//! scrub costs only the check-plane read (1 check byte per 8 data bytes)
+//! plus a correction write-back when a syndrome fires.
+//!
+//! The code here is the *specification* shared by the functional array
+//! ([`super::mcaimem::MixedCellMemory`]) and the golden model
+//! ([`crate::sim::oracle`]): both must compute bit-identical check bytes
+//! and apply bit-identical corrections for the conformance campaigns to
+//! stay meaningful under ECC.
+//!
+//! Construction: each of the 64 data-bit positions `i` carries the 7-bit
+//! nonzero label `i + 1`; the check byte is the XOR-fold of the labels of
+//! the word's set bits (bits 6..0) plus the word's overall parity (bit 7).
+//! The check plane itself is modeled as 6T SRAM cells (it protects the
+//! decaying plane, so it must not decay) — its 12.5 % cell overhead is
+//! charged through [`super::area::AreaModel::ecc_overhead`] and its scrub
+//! energy through [`super::energy::EnergyCard::ecc_scrub_energy`].
+//!
+//! * single bit-error in the data word: parity mismatches and the syndrome
+//!   is the flipped bit's label → corrected;
+//! * double error: parity matches but the syndrome is nonzero → detected,
+//!   not corrected (left for the differential oracle to agree on);
+//! * check bits never err (SRAM plane).
+
+/// Bytes of data covered by one check byte (a 64-bit word).
+pub const WORD_BYTES: usize = 8;
+
+/// SECDED check byte for one 64-bit data word: low 7 bits are the XOR-fold
+/// of label `i + 1` over the word's set bit positions, bit 7 is the word's
+/// overall parity.
+#[inline]
+pub fn check_byte(word: u64) -> u8 {
+    let mut syn = 0u8;
+    let mut w = word;
+    while w != 0 {
+        let i = w.trailing_zeros() as u8;
+        syn ^= i + 1;
+        w &= w - 1;
+    }
+    (syn & 0x7f) | (((word.count_ones() as u8) & 1) << 7)
+}
+
+/// Diagnosis of one stored word against its check byte.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Syndrome {
+    /// Word and check byte agree.
+    Clean,
+    /// Exactly one data bit flipped; the payload is the bit index (0..64)
+    /// to flip back.
+    Correct(u8),
+    /// Multi-bit damage (even parity with a nonzero syndrome, or an
+    /// out-of-range label): detected, not correctable.
+    Detect,
+}
+
+/// Diagnose a stored word against the check byte recorded at store time.
+#[inline]
+pub fn diagnose(stored: u64, check: u8) -> Syndrome {
+    let s = check ^ check_byte(stored);
+    if s == 0 {
+        return Syndrome::Clean;
+    }
+    let parity_flipped = s & 0x80 != 0;
+    let label = s & 0x7f;
+    if parity_flipped && (1..=64).contains(&label) {
+        Syndrome::Correct(label - 1)
+    } else {
+        Syndrome::Detect
+    }
+}
+
+/// Scrub one stored word: return the corrected word (and the corrected bit
+/// index) for a single-bit error, or `None` when the word is clean or the
+/// damage is uncorrectable.
+#[inline]
+pub fn scrub_word(stored: u64, check: u8) -> Option<(u64, u8)> {
+    match diagnose(stored, check) {
+        Syndrome::Correct(bit) => Some((stored ^ (1u64 << bit), bit)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clean_words_diagnose_clean() {
+        for w in [0u64, u64::MAX, 0xdead_beef_0bad_f00d, 1, 1 << 63] {
+            assert_eq!(diagnose(w, check_byte(w)), Syndrome::Clean, "{w:#x}");
+            assert_eq!(scrub_word(w, check_byte(w)), None);
+        }
+    }
+
+    #[test]
+    fn every_single_bit_error_is_corrected() {
+        for w in [0u64, u64::MAX, 0x0123_4567_89ab_cdef, 0x8000_0000_0000_0001] {
+            let c = check_byte(w);
+            for bit in 0..64u8 {
+                let damaged = w ^ (1u64 << bit);
+                assert_eq!(diagnose(damaged, c), Syndrome::Correct(bit), "{w:#x} bit {bit}");
+                let (fixed, b) = scrub_word(damaged, c).unwrap();
+                assert_eq!(fixed, w);
+                assert_eq!(b, bit);
+            }
+        }
+    }
+
+    #[test]
+    fn double_errors_detect_not_correct() {
+        let w = 0x0f0f_1234_5678_9abcu64;
+        let c = check_byte(w);
+        for (a, b) in [(0u8, 1u8), (3, 40), (62, 63), (7, 56)] {
+            let damaged = w ^ (1u64 << a) ^ (1u64 << b);
+            assert_eq!(diagnose(damaged, c), Syndrome::Detect, "bits {a},{b}");
+            assert_eq!(scrub_word(damaged, c), None);
+        }
+    }
+
+    #[test]
+    fn labels_are_distinct_and_nonzero() {
+        // the correction map is injective: 64 distinct nonzero labels
+        let mut seen = [false; 128];
+        for i in 0..64usize {
+            let label = check_byte(1u64 << i) & 0x7f;
+            assert_ne!(label, 0, "bit {i}");
+            assert!(!seen[label as usize], "bit {i} collides");
+            seen[label as usize] = true;
+        }
+    }
+
+    #[test]
+    fn check_byte_is_linear_in_xor() {
+        // check(a ^ b) == check(a) ^ check(b): the property the syndrome
+        // computation relies on
+        for (a, b) in [(0x1u64, 0x2u64), (0xffff, 0xff00), (u64::MAX, 0x5555_5555_5555_5555)] {
+            assert_eq!(check_byte(a ^ b), check_byte(a) ^ check_byte(b));
+        }
+    }
+}

@@ -211,6 +211,23 @@ impl EnergyCard {
         }
     }
 
+    /// Check-plane write energy riding a data store that touches `words`
+    /// 64-bit codewords (one 6T SRAM check byte each) — the per-store cost
+    /// of a `mcaimem@V+ecc` spec's SECDED plane ([`super::ecc`]).
+    pub fn ecc_write_energy(&self, words: usize) -> f64 {
+        EnergyCard::sram().write_energy(words, 0.5)
+    }
+
+    /// Check-plane read energy riding one refresh pass over `bytes` data
+    /// bytes: the scrub senses one SRAM check byte per
+    /// [`super::ecc::WORD_BYTES`]-byte codeword while the CVSA is already
+    /// sensing the data row, so only the check-plane column path is extra.
+    /// Correction write-backs are data-dependent events charged separately
+    /// by the array.
+    pub fn ecc_scrub_energy(&self, bytes: usize) -> f64 {
+        EnergyCard::sram().read_energy(bytes.div_ceil(super::ecc::WORD_BYTES), 0.5)
+    }
+
     /// Effective ones fraction *inside the storage array*: for MCAIMem, only
     /// the 7 eDRAM bits are data-dependent (the SRAM bit is symmetric), so
     /// the caller passes the eDRAM-plane ones fraction directly; for uniform
@@ -364,6 +381,19 @@ mod tests {
         assert!((pass - e.read_energy(MIB, 0.5) * 0.75).abs() < EPS);
         // retention physics is per-cell: the period depends on V_REF only
         assert_eq!(m3.refresh_period, m7.refresh_period);
+    }
+
+    #[test]
+    fn ecc_costs_are_an_sram_check_plane() {
+        let m = EnergyCard::mcaimem_default();
+        let s = EnergyCard::sram();
+        // one check byte per 8-byte codeword, both directions
+        assert!((m.ecc_scrub_energy(4096) - s.read_energy(512, 0.5)).abs() < EPS);
+        assert!((m.ecc_write_energy(16) - s.write_energy(16, 0.5)).abs() < EPS);
+        // the scrub ride-along must stay below the pass it rides on
+        // (encoded-data corner: SRAM check reads are pricier per byte than
+        // CVSA senses, but there are 8× fewer of them)
+        assert!(m.ecc_scrub_energy(MIB) < 0.5 * m.refresh_pass_energy(MIB, 0.8));
     }
 
     #[test]

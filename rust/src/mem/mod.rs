@@ -27,6 +27,8 @@
 //! * [`bank`] — 16 KB bank geometry; 1 MB = 64 banks (Fig. 13 caption).
 //! * [`bitplane`] — SWAR 8×64 bit-matrix transpose powering the
 //!   word-parallel access path of [`mcaimem`].
+//! * [`ecc`] — the SECDED check-byte plane specification shared by the
+//!   functional array and the golden oracle (`mcaimem@V+ecc` specs).
 //! * [`refresh`] — the global periodic row-refresh controller (§III-C).
 //! * [`vref`] — the reference-voltage controller and its refresh-period
 //!   lever (§IV-B).
@@ -44,6 +46,7 @@ pub mod area;
 pub mod backend;
 pub mod bank;
 pub mod bitplane;
+pub mod ecc;
 pub mod energy;
 pub mod mcaimem;
 pub mod refresh;

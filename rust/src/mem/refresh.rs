@@ -53,6 +53,16 @@ impl RefreshController {
 
     /// Advance simulated time to `now`, returning every refresh op that
     /// fires in the interval. The caller applies them to the array.
+    ///
+    /// Catch-up is bounded: a jump spanning more than two full periods
+    /// emits (about) `2 * rows` ops and skips the older backlog. Two
+    /// periods is enough to walk every row twice; older missed slots add
+    /// no information — the rows already aged past `t_ref`, and a
+    /// pathological clock jump (a stalled refresh engine, a fault-campaign
+    /// time warp) must cost O(rows), not O(elapsed/slot). Skipping keeps
+    /// the round-robin phase and the due-time grid, so one further period
+    /// still covers every row exactly once. The normal in-window path is
+    /// untouched (bit-exact slot arithmetic for recorded traces).
     pub fn advance(&mut self, now: f64) -> Vec<RefreshOp> {
         let mut ops = Vec::new();
         if !self.enabled {
@@ -61,6 +71,16 @@ impl RefreshController {
                 self.next_due += self.slot();
             }
             return ops;
+        }
+        if self.next_due <= now {
+            let cap = 2 * self.rows as u64;
+            let pending = ((now - self.next_due) / self.slot()).floor() as u64 + 1;
+            if pending > cap {
+                let skipped = pending - cap;
+                self.next_due += skipped as f64 * self.slot();
+                self.next_row =
+                    (self.next_row + (skipped % self.rows as u64) as usize) % self.rows;
+            }
         }
         while self.next_due <= now {
             ops.push(RefreshOp { row: self.next_row, seq: self.issued, due: self.next_due });
@@ -137,6 +157,42 @@ mod tests {
         for w in ops.windows(2) {
             assert!((w[1].due - w[0].due - rc.slot()).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn pathological_clock_jump_is_bounded_and_keeps_period_coverage() {
+        let rows = 64;
+        let mut rc = RefreshController::new(rows, 1e-6);
+        // a million-period jump: the old code emitted 64M ops here
+        let jump = 1.0; // seconds, vs a 1 µs period
+        let ops = rc.advance(jump);
+        assert!(
+            (2 * rows - 1..=2 * rows + 1).contains(&ops.len()),
+            "catch-up must emit ~two periods worth, got {}",
+            ops.len()
+        );
+        // the property that matters after a skip: one further full period
+        // covers every row exactly once (round-robin phase survived)
+        let mut all = ops;
+        all.extend(rc.advance(jump + 1e-6));
+        let mut last: Vec<usize> = all[all.len() - rows..].iter().map(|o| o.row).collect();
+        last.sort_unstable();
+        last.dedup();
+        assert_eq!(last.len(), rows, "a full period must cover every row once");
+        // seq stays contiguous across the skip (skipped slots are dropped,
+        // not issued) and due times stay on the slot grid
+        for w in all.windows(2) {
+            assert_eq!(w[1].seq, w[0].seq + 1);
+            assert!(w[1].due > w[0].due);
+        }
+        for o in &all {
+            let k = (o.due / rc.slot()).round();
+            assert!((o.due - k * rc.slot()).abs() < rc.slot() * 1e-3, "off-grid due {}", o.due);
+        }
+        // in-window behaviour is untouched: a fresh controller advanced by
+        // exactly one period still fires every slot
+        let mut fresh = RefreshController::new(rows, 1e-6);
+        assert_eq!(fresh.advance(1e-6).len(), rows);
     }
 
     #[test]

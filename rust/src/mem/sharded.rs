@@ -51,6 +51,18 @@ pub fn staggered_row(row: usize, shard: usize, rows: usize, n: usize) -> usize {
 
 /// N independently-clocked shards of one backend technology behind the
 /// single-array device API.
+///
+/// With [`ShardedBackend::with_failover`] the buffer is provisioned for
+/// **single-shard-outage tolerance**: every shard is built at twice its
+/// logical size, the upper half serving as the mirror region for its
+/// *predecessor* — shard `s`'s data is duplicated into shard `(s+1) % n` at
+/// local offset `logical + addr`. Stores write both copies (the energy cost
+/// of provisioning is metered honestly); after
+/// [`MemoryBackend::quarantine_shard`] declares shard `s` dead, loads that
+/// would route to it are served from the buddy mirror, dead silicon stops
+/// refreshing and ticking, and new stores skip dead primaries/mirrors. One
+/// outage is survivable by construction; a second outage may lose the
+/// un-mirrored remainder (exactly like RAID-1 degraded mode).
 pub struct ShardedBackend {
     spec: BackendSpec,
     shards: Vec<Box<dyn MemoryBackend>>,
@@ -59,6 +71,12 @@ pub struct ShardedBackend {
     merged: EnergyMeter,
     card: EnergyCard,
     shard_capacity: usize,
+    /// Failover provisioning active (`with_failover` construction).
+    failover: bool,
+    /// Logical bytes each shard serves in failover mode; also the local
+    /// offset where a shard's buddy-mirror region starts.
+    mirror_base: usize,
+    quarantined: Vec<bool>,
 }
 
 impl ShardedBackend {
@@ -91,6 +109,41 @@ impl ShardedBackend {
             merged: EnergyMeter::default(),
             card: spec.energy_card(),
             shard_capacity,
+            failover: false,
+            mirror_base: 0,
+            quarantined: vec![false; n],
+        };
+        b.remerge();
+        Ok(b)
+    }
+
+    /// Build `n` shards serving `bytes` logical total, each provisioned at
+    /// twice its logical size so the upper half mirrors its predecessor
+    /// shard (see the type docs). `n >= 2`: a lone shard has no buddy.
+    pub fn with_failover(spec: &BackendSpec, n: usize, bytes: usize, seed: u64) -> Result<Self> {
+        if n < 2 {
+            bail!("failover provisioning needs at least 2 shards (a lone shard has no buddy)");
+        }
+        if bytes % n != 0 {
+            bail!("buffer bytes {bytes} not divisible by {n} shards");
+        }
+        if (bytes / n) % STRIPE != 0 {
+            bail!("shard size {} is not a multiple of the {STRIPE}-byte stripe", bytes / n)
+        }
+        let mirror_base = bytes / n;
+        let seeds = shard_seeds(seed, n);
+        let shards: Vec<Box<dyn MemoryBackend>> =
+            seeds.iter().map(|&s| backend::build(spec, 2 * mirror_base, s)).collect();
+        let shard_capacity = shards[0].capacity();
+        let mut b = ShardedBackend {
+            spec: *spec,
+            shards,
+            merged: EnergyMeter::default(),
+            card: spec.energy_card(),
+            shard_capacity,
+            failover: true,
+            mirror_base,
+            quarantined: vec![false; n],
         };
         b.remerge();
         Ok(b)
@@ -98,6 +151,11 @@ impl ShardedBackend {
 
     pub fn num_shards(&self) -> usize {
         self.shards.len()
+    }
+
+    /// Shards still in service (all of them until a quarantine fires).
+    pub fn alive_shards(&self) -> usize {
+        self.quarantined.iter().filter(|&&q| !q).count()
     }
 
     fn remerge(&mut self) {
@@ -136,7 +194,12 @@ impl MemoryBackend for ShardedBackend {
     }
 
     fn capacity(&self) -> usize {
-        self.shard_capacity * self.shards.len()
+        if self.failover {
+            // the mirror half of every shard is provisioning, not capacity
+            self.mirror_base * self.shards.len()
+        } else {
+            self.shard_capacity * self.shards.len()
+        }
     }
 
     fn now(&self) -> f64 {
@@ -147,19 +210,37 @@ impl MemoryBackend for ShardedBackend {
 
     fn store(&mut self, addr: usize, data: &[u8], now: f64) {
         assert!(addr + data.len() <= self.capacity(), "write out of range");
+        let (n, base) = (self.shards.len(), self.mirror_base);
         let pieces: Vec<_> = self.chunks(addr, data.len()).collect();
         for (shard, local, off, len) in pieces {
-            self.shards[shard].store(local, &data[off..off + len], now);
+            let slice = &data[off..off + len];
+            if self.failover {
+                if !self.quarantined[shard] {
+                    self.shards[shard].store(local, slice, now);
+                }
+                let buddy = (shard + 1) % n;
+                if !self.quarantined[buddy] {
+                    self.shards[buddy].store(base + local, slice, now);
+                }
+            } else {
+                self.shards[shard].store(local, slice, now);
+            }
         }
         self.remerge();
     }
 
     fn load(&mut self, addr: usize, len: usize, now: f64) -> Vec<u8> {
         assert!(addr + len <= self.capacity(), "read out of range");
+        let (n, base) = (self.shards.len(), self.mirror_base);
         let mut out = vec![0u8; len];
         let pieces: Vec<_> = self.chunks(addr, len).collect();
         for (shard, local, off, clen) in pieces {
-            let piece = self.shards[shard].load(local, clen, now);
+            let piece = if self.failover && self.quarantined[shard] {
+                // degraded mode: the buddy's mirror region serves the read
+                self.shards[(shard + 1) % n].load(base + local, clen, now)
+            } else {
+                self.shards[shard].load(local, clen, now)
+            };
             out[off..off + clen].copy_from_slice(&piece);
         }
         self.remerge();
@@ -167,8 +248,10 @@ impl MemoryBackend for ShardedBackend {
     }
 
     fn tick(&mut self, now: f64) {
-        for s in &mut self.shards {
-            s.tick(now);
+        for (i, s) in self.shards.iter_mut().enumerate() {
+            if !self.quarantined[i] {
+                s.tick(now);
+            }
         }
         self.remerge();
     }
@@ -185,7 +268,9 @@ impl MemoryBackend for ShardedBackend {
         let rows = self.rows_per_bank();
         let n = self.shards.len();
         for (i, s) in self.shards.iter_mut().enumerate() {
-            s.refresh_row(staggered_row(row, i, rows, n), now);
+            if !self.quarantined[i] {
+                s.refresh_row(staggered_row(row, i, rows, n), now);
+            }
         }
         self.remerge();
     }
@@ -206,8 +291,20 @@ impl MemoryBackend for ShardedBackend {
         &self.card
     }
 
+    /// Declare a shard dead. Honoured only under failover provisioning —
+    /// without a mirror there is nowhere to route its data, so the plain
+    /// geometry keeps the default no-op contract and returns `false`.
+    fn quarantine_shard(&mut self, shard: usize, _now: f64) -> bool {
+        if !self.failover || shard >= self.shards.len() {
+            return false;
+        }
+        self.quarantined[shard] = true;
+        true
+    }
+
     fn label(&self) -> String {
-        format!("{}×{}", self.spec.label(), self.shards.len())
+        let fo = if self.failover { "+failover" } else { "" };
+        format!("{}×{}{}", self.spec.label(), self.shards.len(), fo)
     }
 }
 
@@ -369,6 +466,50 @@ mod tests {
             assert_eq!(m.refreshes, rows as u64, "shard {i} must refresh once per slot");
         }
         assert_eq!(sh.meter().refreshes, 3 * rows as u64);
+    }
+
+    #[test]
+    fn failover_survives_a_shard_outage_with_no_data_loss() {
+        let spec = BackendSpec::mcaimem_default();
+        let mut sh = ShardedBackend::with_failover(&spec, 4, 64 * 1024, 9).unwrap();
+        // the mirror half is provisioning, not served capacity
+        assert_eq!(sh.capacity(), 64 * 1024);
+        assert_eq!(sh.alive_shards(), 4);
+        assert!(sh.label().ends_with("+failover"), "{}", sh.label());
+        // ns-scale gaps: every access is inside every cell's retention, so
+        // byte-exactness is purely a routing property
+        let data: Vec<u8> = (0..4096u32).map(|i| (i * 31 + 7) as u8).collect();
+        sh.store(100, &data, 1e-6);
+        // mirrored stores are metered honestly: both copies charge writes
+        assert_eq!(sh.meter().bytes_written, 2 * 4096);
+        assert!(sh.quarantine_shard(1, 1e-6 + 1e-9));
+        assert_eq!(sh.alive_shards(), 3);
+        // reads that would route to the dead shard come from the buddy
+        assert_eq!(sh.load(100, data.len(), 1e-6 + 2e-9), data);
+        // dead silicon stops refreshing and ticking
+        let before = sh.shard_meters()[1].clone();
+        sh.refresh_row(0, 1e-6 + 3e-9);
+        sh.tick(1e-6 + 4e-9);
+        let after = sh.shard_meters()[1].clone();
+        assert_eq!(after.refreshes, before.refreshes);
+        assert_eq!(after.static_j.to_bits(), before.static_j.to_bits());
+        // degraded-mode stores keep round-tripping
+        sh.store(0, &[0xA5; 1024], 1e-6 + 5e-9);
+        assert_eq!(sh.load(0, 1024, 1e-6 + 6e-9), vec![0xA5; 1024]);
+    }
+
+    #[test]
+    fn plain_geometry_refuses_quarantine() {
+        // without the mirror provisioning there is nowhere to route data —
+        // the default no-op contract holds and nothing changes
+        let mut sh = ShardedBackend::new(&BackendSpec::Sram, 4, 64 * 1024, 1).unwrap();
+        assert!(!sh.quarantine_shard(0, 1e-6));
+        assert_eq!(sh.alive_shards(), 4);
+        let data = vec![7u8; 256];
+        sh.store(0, &data, 2e-6);
+        assert_eq!(sh.load(0, 256, 3e-6), data);
+        // failover needs a buddy
+        assert!(ShardedBackend::with_failover(&BackendSpec::Sram, 1, 16 * 1024, 1).is_err());
     }
 
     #[test]

@@ -1,0 +1,102 @@
+//! Chaos drill report — the table `mcaimem chaos` renders.
+//!
+//! One row per memory-tier campaign run (backend × geometry, conformance
+//! verdicts under the active fault plan) plus one row for the serving-tier
+//! drill (reply accounting and surviving workers). Failing minimal traces
+//! reuse the conformance artifact format, so CI uploads them and anyone
+//! can replay with `mcaimem conform --replay <file>`.
+
+use crate::sim::chaos::{self, ChaosConfig, ChaosOutcome};
+use crate::util::json::Json;
+use crate::util::table::Table;
+use crate::Result;
+
+/// Run the drill and render the outcome table. Returns the table, the raw
+/// outcome, and whether everything passed.
+pub fn chaos(cfg: &ChaosConfig) -> Result<(Table, ChaosOutcome, bool)> {
+    let out = chaos::run(cfg)?;
+    let mut t = Table::new(
+        &format!("chaos drill — plan `{}`, seed {}", cfg.plan, cfg.seed),
+        &["tier", "target", "geometry", "checks", "verdict"],
+    );
+    for o in &out.memory {
+        let (s, l, k, r) = o.counts;
+        t.row(vec![
+            "memory".into(),
+            o.spec.label(),
+            o.geometry(),
+            format!("{s} stores / {l} loads / {k} ticks / {r} refreshes"),
+            if o.ok() {
+                "exact (self + oracle)".into()
+            } else {
+                let f = o.failures.first();
+                format!(
+                    "DIVERGED: {}",
+                    f.map(|f| format!(
+                        "{} (minimal {} ops)",
+                        f.divergence,
+                        f.minimal.entries.len()
+                    ))
+                    .unwrap_or_else(|| "see failures".into())
+                )
+            },
+        ]);
+    }
+    let s = &out.serving;
+    t.row(vec![
+        "serving".into(),
+        format!("mcaimem@0.8 pool, {} workers", s.workers),
+        "failover pairs".into(),
+        format!(
+            "{} offered: {} ok / {} errors / {} abandoned / {} rejects; {}/{} workers alive",
+            s.offered, s.completed, s.errors, s.abandoned, s.rejected, s.alive_workers, s.workers
+        ),
+        if s.ok() { "0 lost replies".into() } else { format!("{} LOST replies", s.lost) },
+    ]);
+    let ok = out.ok();
+    Ok((t, out, ok))
+}
+
+/// Machine-readable drill report for `mcaimem chaos --json`.
+pub fn outcome_json(out: &ChaosOutcome, cfg: &ChaosConfig) -> Json {
+    let memory: Vec<Json> = out
+        .memory
+        .iter()
+        .map(|o| {
+            Json::obj(vec![
+                ("backend", Json::Str(o.spec.to_string())),
+                ("geometry", Json::Str(o.geometry().replace('×', "x"))),
+                ("self_replay_ok", Json::Bool(o.self_replay_ok)),
+                (
+                    "oracle_ok",
+                    match o.oracle_ok {
+                        None => Json::Null,
+                        Some(b) => Json::Bool(b),
+                    },
+                ),
+                ("failures", Json::Num(o.failures.len() as f64)),
+            ])
+        })
+        .collect();
+    let s = &out.serving;
+    Json::obj(vec![
+        ("plan", Json::Str(cfg.plan.to_string())),
+        ("seed", Json::Num(cfg.seed as f64)),
+        ("ops", Json::Num(cfg.ops as f64)),
+        ("ok", Json::Bool(out.ok())),
+        ("memory", Json::Arr(memory)),
+        (
+            "serving",
+            Json::obj(vec![
+                ("offered", Json::Num(s.offered as f64)),
+                ("completed", Json::Num(s.completed as f64)),
+                ("errors", Json::Num(s.errors as f64)),
+                ("abandoned", Json::Num(s.abandoned as f64)),
+                ("rejected", Json::Num(s.rejected as f64)),
+                ("lost", Json::Num(s.lost as f64)),
+                ("workers", Json::Num(s.workers as f64)),
+                ("alive_workers", Json::Num(s.alive_workers as f64)),
+            ]),
+        ),
+    ])
+}

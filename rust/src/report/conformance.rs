@@ -151,7 +151,14 @@ mod tests {
 
     #[test]
     fn quick_conformance_table_renders_green() {
-        let cfg = CampaignConfig { ops: 80, seed: 3, bytes: 32 * 1024, shards: 2, shrink: false };
+        let cfg = CampaignConfig {
+            ops: 80,
+            seed: 3,
+            bytes: 32 * 1024,
+            shards: 2,
+            shrink: false,
+            faults: None,
+        };
         let specs = [BackendSpec::Sram, BackendSpec::mcaimem_default()];
         let (table, outcomes, ok) = conformance(&specs, &cfg).unwrap();
         assert!(ok, "{outcomes:?}");

@@ -34,7 +34,7 @@ pub fn fig11(artifacts: &Path, quick: bool) -> Result<Vec<Table>> {
     for (i, &p) in ERROR_RATES.iter().enumerate() {
         let with = runner.accuracy(&BackendSpec::mcaimem_default(), p, batches, 100 + i as u64)?;
         let without = runner.accuracy(
-            &BackendSpec::Mcaimem { vref: 0.8, encode: false },
+            &BackendSpec::Mcaimem { vref: 0.8, encode: false, ecc: false },
             p,
             batches,
             200 + i as u64,

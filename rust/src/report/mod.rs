@@ -5,6 +5,7 @@
 //! mirrors everything to CSV under `results/`.
 
 pub mod ablations;
+pub mod chaos;
 pub mod circuit_reports;
 pub mod conformance;
 pub mod fig11;

@@ -102,7 +102,7 @@ mod tests {
         assert_eq!(serving_model(&BackendSpec::Rram), ("model_clean", false));
         assert_eq!(serving_model(&BackendSpec::mcaimem_default()), ("model_enc", true));
         assert_eq!(
-            serving_model(&BackendSpec::Mcaimem { vref: 0.7, encode: false }),
+            serving_model(&BackendSpec::Mcaimem { vref: 0.7, encode: false, ecc: false }),
             ("model_noenc", true)
         );
         assert_eq!(serving_model(&BackendSpec::Edram2t), ("model_noenc", true));

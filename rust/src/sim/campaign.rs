@@ -25,6 +25,7 @@
 
 use anyhow::Result;
 
+use crate::faults::{FaultPlan, FaultyBackend};
 use crate::mem::backend::{self, BackendSpec, MemoryBackend};
 use crate::mem::sharded::ShardedBackend;
 use crate::sim::oracle::OracleBackend;
@@ -46,11 +47,23 @@ pub struct CampaignConfig {
     pub shards: usize,
     /// Shrink failures to minimal reproducing traces.
     pub shrink: bool,
+    /// Optional fault schedule: when set, the recorded target *and* every
+    /// replay target (self and oracle) are wrapped in a [`FaultyBackend`]
+    /// under this plan, so conformance is checked under fault injection —
+    /// the plan rides the trace header and the artifact stays replayable.
+    pub faults: Option<FaultPlan>,
 }
 
 impl Default for CampaignConfig {
     fn default() -> Self {
-        CampaignConfig { ops: 20_000, seed: 7, bytes: 64 * 1024, shards: 4, shrink: true }
+        CampaignConfig {
+            ops: 20_000,
+            seed: 7,
+            bytes: 64 * 1024,
+            shards: 4,
+            shrink: true,
+            faults: None,
+        }
     }
 }
 
@@ -182,7 +195,10 @@ pub fn record(spec: &BackendSpec, shards: usize, cfg: &CampaignConfig) -> Result
     let rows = inner.rows_per_bank();
     // decorrelate the op stream per spec and geometry
     let op_seed = cfg.seed ^ digest(spec.to_string().as_bytes()) ^ (shards as u64).rotate_left(17);
-    let (mut traced, log) = TracingBackend::wrap(inner, cfg.bytes, cfg.seed, shards);
+    let (mut traced, log) = match &cfg.faults {
+        Some(plan) => TracingBackend::wrap_with_faults(inner, cfg.bytes, cfg.seed, shards, plan),
+        None => TracingBackend::wrap(inner, cfg.bytes, cfg.seed, shards),
+    };
     for op in gen_ops(cap, refresh, rows, op_seed, cfg.ops) {
         apply_op(traced.as_mut(), &op);
     }
@@ -256,10 +272,21 @@ pub fn verify_self(trace: &Trace) -> Result<ReplayReport> {
     Ok(replay(trace, target.as_mut()))
 }
 
+/// The golden replay target for `trace`: the oracle model, re-wrapped in
+/// the trace's fault plan when one is recorded — agreement under faults is
+/// structural (both sides see the identical seeded fault stream).
+pub fn oracle_target(trace: &Trace) -> Result<Box<dyn MemoryBackend>> {
+    let orc: Box<dyn MemoryBackend> = Box::new(OracleBackend::for_trace(trace)?);
+    Ok(match &trace.faults {
+        Some(plan) => Box::new(FaultyBackend::wrap(orc, plan)),
+        None => orc,
+    })
+}
+
 /// Replay `trace` against the golden model (MCAIMem specs only).
 pub fn verify_oracle(trace: &Trace) -> Result<ReplayReport> {
-    let mut orc = OracleBackend::for_trace(trace)?;
-    Ok(replay(trace, &mut orc))
+    let mut orc = oracle_target(trace)?;
+    Ok(replay(trace, orc.as_mut()))
 }
 
 /// Run the full campaign for one (spec, geometry).
@@ -301,10 +328,7 @@ pub fn run_one(spec: &BackendSpec, shards: usize, cfg: &CampaignConfig) -> Resul
                 minimize(
                     &trace,
                     &mut || trace.build_target().expect("header validated"),
-                    &mut || {
-                        Box::new(OracleBackend::for_trace(&trace).expect("mcaimem spec"))
-                            as Box<dyn MemoryBackend>
-                    },
+                    &mut || oracle_target(&trace).expect("mcaimem spec"),
                 )
             } else {
                 trace.clone()
@@ -337,7 +361,7 @@ mod tests {
     use super::*;
 
     fn tiny() -> CampaignConfig {
-        CampaignConfig { ops: 120, seed: 7, bytes: 32 * 1024, shards: 2, shrink: true }
+        CampaignConfig { ops: 120, seed: 7, bytes: 32 * 1024, shards: 2, ..Default::default() }
     }
 
     #[test]
@@ -381,6 +405,29 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn campaign_stays_conformant_under_an_active_fault_plan() {
+        // all four memory-tier fault classes live at once: production path
+        // and golden oracle must still agree bit- and meter-exactly,
+        // because both replay targets rebuild the same seeded fault wrapper
+        let plan: FaultPlan =
+            "retention-tail@0.01,stuck-at@0.005,vref-drift@0.005,refresh-stall@3,shard-outage@1e-4"
+                .parse()
+                .unwrap();
+        let cfg = CampaignConfig { faults: Some(plan.clone()), ..tiny() };
+        for spec in ["mcaimem@0.8", "mcaimem@0.8+ecc"] {
+            let spec: BackendSpec = spec.parse().unwrap();
+            for shards in [0usize, 2] {
+                let out = run_one(&spec, shards, &cfg).unwrap();
+                assert!(out.ok(), "{spec} {}: {:?}", out.geometry(), out.failures);
+                assert_eq!(out.oracle_ok, Some(true), "{spec} {}", out.geometry());
+            }
+        }
+        // the plan really rode the header
+        let trace = record(&"mcaimem@0.8".parse().unwrap(), 0, &cfg).unwrap();
+        assert_eq!(trace.faults, Some(plan));
     }
 
     #[test]

@@ -1,0 +1,267 @@
+//! Seeded chaos drills: one fault campaign across both tiers
+//! (`mcaimem chaos`).
+//!
+//! A drill takes one [`FaultPlan`] — the default exercises every fault
+//! class the grammar knows — and runs it end to end:
+//!
+//! * **Memory tier** — the conformance campaign ([`crate::sim::campaign`])
+//!   with the plan active: adversarial op sequences against `mcaimem@0.8`
+//!   and `mcaimem@0.8+ecc`, flat and sharded, each recorded under fault
+//!   injection and replayed against a fresh identical target *and* the
+//!   golden oracle. Agreement is structural (both replay targets rebuild
+//!   the same seeded fault wrapper from the trace header), so any
+//!   divergence is a real nondeterminism or semantics bug, not fault
+//!   noise. Failures ddmin-shrink to minimal replayable traces.
+//! * **Serving tier** — a worker pool whose buffers are failover-
+//!   provisioned shard pairs ([`ShardedBackend::with_failover`]) wrapped
+//!   in the plan's fault schedule, and whose engines inject the plan's
+//!   timeouts plus one fatal crash ([`FaultyEngine`], crash confined to
+//!   worker 0 so the drill exercises *degradation*, not total loss).
+//!   Closed-loop clients drive it with deadline-budgeted retries; the
+//!   invariant asserted is **zero lost replies**: every offered request is
+//!   completed, answered with an error, or abandoned by its own client —
+//!   never silently dropped.
+
+use anyhow::Result;
+
+use crate::coordinator::buffer_manager::BufferManager;
+use crate::coordinator::loadgen::{self, Arrival, LoadConfig};
+use crate::coordinator::pool::{InferEngine, PoolConfig, SyntheticEngine, WorkerPool};
+use crate::faults::{FaultPlan, FaultyBackend, FaultyEngine};
+use crate::mem::backend::{BackendSpec, MemoryBackend};
+use crate::mem::sharded::ShardedBackend;
+use crate::sim::campaign::{self, CampaignConfig, SpecOutcome};
+
+/// The default drill schedule: all six fault classes at once. The outage
+/// time (20 µs of device time) is early enough to fire in both tiers, and
+/// the crash batch is small enough to fire even in `--quick` runs.
+pub const DEFAULT_DRILL: &str = "retention-tail@0.01,stuck-at@0.005,vref-drift@0.005,\
+refresh-stall@3,shard-outage@2e-5,engine-timeout@6,engine-crash@4";
+
+/// Chaos drill knobs (the CLI's `mcaimem chaos` flags map 1:1 onto this).
+#[derive(Clone, Debug)]
+pub struct ChaosConfig {
+    /// The fault schedule both tiers run under.
+    pub plan: FaultPlan,
+    pub seed: u64,
+    /// Memory-drill ops per (spec, geometry).
+    pub ops: usize,
+    /// Memory-drill backend capacity (bytes).
+    pub bytes: usize,
+    /// Memory-drill sharded geometry (the flat geometry always runs too).
+    pub shards: usize,
+    /// Serving-drill workers (floored at 2 — degradation needs a survivor).
+    pub workers: usize,
+    /// Serving-drill offered requests.
+    pub requests: usize,
+    /// Shrink memory-drill failures to minimal reproducing traces.
+    pub shrink: bool,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        ChaosConfig {
+            plan: DEFAULT_DRILL.parse().expect("default drill plan parses"),
+            seed: 42,
+            ops: 6_000,
+            bytes: 64 * 1024,
+            shards: 4,
+            workers: 2,
+            requests: 320,
+            shrink: true,
+        }
+    }
+}
+
+impl ChaosConfig {
+    /// The CI smoke configuration: bounded well under 30 s.
+    pub fn quick(self) -> Self {
+        ChaosConfig {
+            ops: self.ops.min(1_200),
+            bytes: self.bytes.min(64 * 1024),
+            requests: self.requests.min(96),
+            ..self
+        }
+    }
+}
+
+/// What the serving-tier drill measured. The one hard invariant is
+/// `lost == 0`; everything else is reported so a human can see *how* the
+/// tier degraded (crashed workers, error replies, abandoned retries).
+#[derive(Clone, Debug)]
+pub struct ServingDrill {
+    pub offered: usize,
+    pub completed: usize,
+    /// Requests answered with an inference error (injected timeouts and the
+    /// crashed batch — answered, not dropped).
+    pub errors: usize,
+    /// Requests whose client gave up after its retry deadline budget.
+    pub abandoned: usize,
+    /// Admission-reject events (one request can reject many times).
+    pub rejected: u64,
+    /// `offered − completed − errors − abandoned`: requests that vanished
+    /// without any reply. Must be 0 under every fault class.
+    pub lost: usize,
+    pub workers: usize,
+    /// Workers still serving after the drill (the fatal crash takes one).
+    pub alive_workers: usize,
+}
+
+impl ServingDrill {
+    pub fn ok(&self) -> bool {
+        self.lost == 0
+    }
+}
+
+/// Memory-tier drill: the conformance campaign under the active plan.
+pub fn memory_drill(cfg: &ChaosConfig) -> Result<Vec<SpecOutcome>> {
+    let campaign_cfg = CampaignConfig {
+        ops: cfg.ops,
+        seed: cfg.seed,
+        bytes: cfg.bytes,
+        shards: cfg.shards,
+        shrink: cfg.shrink,
+        faults: Some(cfg.plan.clone()),
+    };
+    let specs: Vec<BackendSpec> =
+        vec!["mcaimem@0.8".parse().unwrap(), "mcaimem@0.8+ecc".parse().unwrap()];
+    campaign::run(&specs, &campaign_cfg)
+}
+
+/// Serving-tier drill: a degraded-mode pool under the plan's engine and
+/// memory faults, driven by deadline-budgeted closed-loop clients.
+pub fn serving_drill(cfg: &ChaosConfig) -> Result<ServingDrill> {
+    let spec: BackendSpec = "mcaimem@0.8".parse().unwrap();
+    let workers = cfg.workers.max(2);
+    // the fatal crash stays on worker 0; the rest see only transient
+    // timeouts — a drill where every engine dies measures shutdown, not
+    // degradation (total loss is covered by the pool's own tests)
+    let mut transient = cfg.plan.clone();
+    transient.engine_crash = None;
+    let engines: Vec<Box<dyn InferEngine>> = (0..workers)
+        .map(|k| {
+            let plan = if k == 0 { &cfg.plan } else { &transient };
+            Box::new(FaultyEngine::wrap(Box::new(SyntheticEngine::default()), plan))
+                as Box<dyn InferEngine>
+        })
+        .collect();
+    // per worker: a failover pair of mcaimem shards under the fault plan,
+    // so the shard-outage clause quarantines a primary mid-drill and the
+    // buddy mirror keeps serving the staged batches
+    let buffer_bytes = 16 * 1024;
+    let buffers = (0..workers)
+        .map(|k| {
+            let pair = ShardedBackend::with_failover(&spec, 2, buffer_bytes, cfg.seed ^ k as u64)?;
+            let faulty: Box<dyn MemoryBackend> =
+                Box::new(FaultyBackend::wrap(Box::new(pair), &cfg.plan));
+            Ok(BufferManager::from_backend(faulty))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let pool_cfg = PoolConfig {
+        backend: spec,
+        workers,
+        shards: 2 * workers,
+        buffer_bytes: workers * buffer_bytes,
+        high_water: 64,
+        seed: cfg.seed,
+        ..PoolConfig::default()
+    };
+    let pool = WorkerPool::start_with_buffers(pool_cfg, engines, buffers)?;
+    let load = LoadConfig {
+        arrival: Arrival::ClosedLoop { clients: 2 * workers },
+        requests: cfg.requests,
+        retry_rejects: true,
+        seed: cfg.seed ^ 0x10AD,
+        ..LoadConfig::default()
+    };
+    let report = loadgen::run(&pool, &load);
+    let alive_workers = pool.alive_workers();
+    pool.shutdown();
+    let answered = report.completed + report.errors + report.abandoned;
+    Ok(ServingDrill {
+        offered: report.offered,
+        completed: report.completed,
+        errors: report.errors,
+        abandoned: report.abandoned,
+        rejected: report.rejected,
+        lost: report.offered.saturating_sub(answered),
+        workers,
+        alive_workers,
+    })
+}
+
+/// Outcome of one full drill.
+#[derive(Clone, Debug)]
+pub struct ChaosOutcome {
+    pub plan: FaultPlan,
+    pub memory: Vec<SpecOutcome>,
+    pub serving: ServingDrill,
+}
+
+impl ChaosOutcome {
+    pub fn ok(&self) -> bool {
+        self.memory.iter().all(|o| o.ok()) && self.serving.ok()
+    }
+}
+
+/// Run both drills under the configured plan.
+pub fn run(cfg: &ChaosConfig) -> Result<ChaosOutcome> {
+    Ok(ChaosOutcome {
+        plan: cfg.plan.clone(),
+        memory: memory_drill(cfg)?,
+        serving: serving_drill(cfg)?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ChaosConfig {
+        ChaosConfig {
+            ops: 250,
+            bytes: 32 * 1024,
+            shards: 2,
+            requests: 96,
+            ..ChaosConfig::default()
+        }
+    }
+
+    #[test]
+    fn default_drill_covers_all_six_fault_classes() {
+        let plan: FaultPlan = DEFAULT_DRILL.parse().unwrap();
+        assert!(plan.retention_tail.is_some());
+        assert!(plan.stuck_at.is_some());
+        assert!(plan.vref_drift.is_some());
+        assert!(plan.refresh_stall.is_some());
+        assert!(plan.shard_outage.is_some());
+        assert!(plan.engine_timeout.is_some());
+        assert!(plan.engine_crash.is_some());
+        assert!(plan.has_memory_faults() && plan.has_engine_faults());
+    }
+
+    #[test]
+    fn memory_drill_stays_conformant_under_the_default_plan() {
+        let outcomes = memory_drill(&tiny()).unwrap();
+        // 2 specs × (flat + sharded)
+        assert_eq!(outcomes.len(), 4);
+        for o in &outcomes {
+            assert!(o.ok(), "{} {}: {:?}", o.spec, o.geometry(), o.failures);
+            assert_eq!(o.oracle_ok, Some(true), "{} {}", o.spec, o.geometry());
+        }
+    }
+
+    #[test]
+    fn serving_drill_degrades_without_losing_a_single_reply() {
+        let drill = serving_drill(&tiny()).unwrap();
+        assert_eq!(drill.lost, 0, "{drill:?}");
+        assert_eq!(drill.offered, 96);
+        assert_eq!(
+            drill.alive_workers,
+            drill.workers - 1,
+            "the injected fatal crash must take exactly worker 0: {drill:?}"
+        );
+        assert!(drill.errors > 0, "injected engine faults must surface as error replies");
+        assert!(drill.ok());
+    }
+}

@@ -23,10 +23,15 @@
 //!   `mcaimem conform`: adversarial op sequences (unaligned stores,
 //!   grow/shrink frontiers, refresh-boundary ticks, zero-length ops) and a
 //!   ddmin shrinker that reduces failures to minimal reproducing traces.
+//! * [`chaos`] — seeded chaos drills behind `mcaimem chaos`: one
+//!   [`crate::faults::FaultPlan`] driven through the memory-tier campaign
+//!   (fault-aware oracle agreement) *and* a degraded-mode serving pool
+//!   (zero lost replies under engine crashes and shard outages).
 //!
 //! [`EnergyMeter`]: crate::mem::mcaimem::EnergyMeter
 
 pub mod campaign;
+pub mod chaos;
 pub mod oracle;
 pub mod replay;
 pub mod trace;

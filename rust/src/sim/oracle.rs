@@ -37,6 +37,7 @@ use crate::circuit::flip_model::FlipModel;
 use crate::encode::one_enhancement::{decode_byte, encode_byte};
 use crate::mem::backend::{BackendSpec, MemoryBackend};
 use crate::mem::bank::MemoryMap;
+use crate::mem::ecc::{check_byte, scrub_word, WORD_BYTES};
 use crate::mem::energy::EnergyCard;
 use crate::mem::mcaimem::{z_to_q, EnergyMeter};
 use crate::mem::sharded::{staggered_row, STRIPE};
@@ -52,8 +53,15 @@ pub struct OracleArray {
     vref: f64,
     card: EnergyCard,
     encode: bool,
+    /// SECDED check plane active (`mcaimem@V+ecc` specs): stores
+    /// re-baseline their codewords, refresh passes scrub — re-derived here
+    /// with naive per-word arithmetic against the production
+    /// `MixedCellMemory` implementation.
+    ecc: bool,
     /// The stored byte (post-encoder image, all 8 bits) per address.
     stored: Vec<u8>,
+    /// One SECDED check byte per 64-bit stored word (consulted when `ecc`).
+    ecc_check: Vec<u8>,
     /// Per-cell quantized leakage z-score, `leak_q[plane][addr]`, sampled
     /// with the exact seeded draw order of the production array.
     leak_q: [Vec<u8>; 7],
@@ -66,7 +74,7 @@ pub struct OracleArray {
 }
 
 impl OracleArray {
-    pub fn new(bytes: usize, vref: f64, encode: bool, seed: u64) -> Self {
+    pub fn new(bytes: usize, vref: f64, encode: bool, ecc: bool, seed: u64) -> Self {
         let map = MemoryMap::with_capacity(bytes);
         let cap = map.capacity();
         // identical corner sampling to MixedCellMemory::with_vref: a
@@ -98,8 +106,10 @@ impl OracleArray {
             vref,
             card: EnergyCard::mcaimem(vref),
             encode,
+            ecc,
             // power-on state: pull-up leakage parks every cell at bit-1
             stored: vec![0xff; cap],
+            ecc_check: vec![check_byte(u64::MAX); cap / WORD_BYTES],
             leak_q,
             cell_time: std::array::from_fn(|_| vec![0.0; cap]),
             edram_ones: (cap * 7) as u64,
@@ -157,6 +167,69 @@ impl OracleArray {
         }
     }
 
+    /// The stored 64-bit word `w` — little-endian over bytes
+    /// `[8w, 8w+8)` — the codeword unit of the SECDED plane (the naive
+    /// counterpart of `MixedCellMemory::word_raw`).
+    fn word_raw(&self, w: usize) -> u64 {
+        let mut v = 0u64;
+        for i in 0..WORD_BYTES {
+            v |= (self.stored[w * WORD_BYTES + i] as u64) << (8 * i);
+        }
+        v
+    }
+
+    /// Re-baseline the check bytes of every codeword overlapped by
+    /// `[addr, addr + len)` from the post-store image; returns the count.
+    fn rewrite_checks(&mut self, addr: usize, len: usize) -> usize {
+        if len == 0 {
+            return 0;
+        }
+        let first = addr / WORD_BYTES;
+        let last = (addr + len - 1) / WORD_BYTES;
+        for w in first..=last {
+            self.ecc_check[w] = check_byte(self.word_raw(w));
+        }
+        last - first + 1
+    }
+
+    /// SECDED scrub riding the refresh pass — the naive mirror of
+    /// `MixedCellMemory::scrub_row`, including the energy-accounting order:
+    /// the scrub read is charged unconditionally, correction write-backs at
+    /// the ones-fraction *after* the corrections commit.
+    fn scrub_row(&mut self, row: usize, bytes: usize) {
+        let row_bytes = self.map.bank.row_bytes;
+        let mut corrections = 0usize;
+        for bank in 0..self.map.banks {
+            let start = bank * self.map.bank.bytes + row * row_bytes;
+            for w in start / WORD_BYTES..(start + row_bytes) / WORD_BYTES {
+                let stored = self.word_raw(w);
+                if let Some((fixed, bit)) = scrub_word(stored, self.ecc_check[w]) {
+                    let byte_in_word = (bit / 8) as usize;
+                    let a = w * WORD_BYTES + byte_in_word;
+                    let new = (fixed >> (8 * byte_in_word)) as u8;
+                    let old = self.stored[a];
+                    for p in 0..7 {
+                        let (was, is) = ((old >> p) & 1, (new >> p) & 1);
+                        if was != is {
+                            if is == 1 {
+                                self.edram_ones += 1;
+                            } else {
+                                self.edram_ones -= 1;
+                            }
+                        }
+                    }
+                    self.stored[a] = new;
+                    corrections += 1;
+                }
+            }
+        }
+        self.meter.refresh_j += self.card.ecc_scrub_energy(bytes);
+        if corrections > 0 {
+            self.meter.refresh_j += self.card.write_energy(corrections, self.edram_ones_frac());
+            self.meter.ecc_corrected += corrections as u64;
+        }
+    }
+
     fn age_range(&mut self, addr: usize, len: usize) {
         if len == 0 {
             return;
@@ -192,6 +265,10 @@ impl OracleArray {
         }
         let frac = ones as f64 / (data.len() * 7).max(1) as f64;
         self.meter.write_j += self.card.write_energy(data.len(), frac);
+        if self.ecc {
+            let words = self.rewrite_checks(addr, data.len());
+            self.meter.write_j += self.card.ecc_write_energy(words);
+        }
         self.meter.writes += 1;
         self.meter.bytes_written += data.len() as u64;
     }
@@ -226,6 +303,9 @@ impl OracleArray {
         let bytes = self.map.bank.row_bytes * self.map.banks;
         self.meter.refresh_j += self.card.refresh_pass_energy(bytes, self.edram_ones_frac());
         self.meter.refreshes += 1;
+        if self.ecc {
+            self.scrub_row(row, bytes);
+        }
     }
 }
 
@@ -242,9 +322,9 @@ pub struct OracleBackend {
     card: EnergyCard,
 }
 
-fn spec_params(spec: &BackendSpec) -> Result<(f64, bool)> {
+fn spec_params(spec: &BackendSpec) -> Result<(f64, bool, bool)> {
     match spec {
-        BackendSpec::Mcaimem { vref, encode } => Ok((*vref, *encode)),
+        BackendSpec::Mcaimem { vref, encode, ecc } => Ok((*vref, *encode, *ecc)),
         other => bail!("the golden model covers MCAIMem semantics only (got `{other}`)"),
     }
 }
@@ -253,11 +333,11 @@ impl OracleBackend {
     /// A flat (unsharded) golden array for `spec` — the counterpart of
     /// `backend::build(spec, bytes, seed)`.
     pub fn new(spec: &BackendSpec, bytes: usize, seed: u64) -> Result<OracleBackend> {
-        let (vref, encode) = spec_params(spec)?;
+        let (vref, encode, ecc) = spec_params(spec)?;
         let mut b = OracleBackend {
             spec: *spec,
             striped: false,
-            arrays: vec![OracleArray::new(bytes, vref, encode, seed)],
+            arrays: vec![OracleArray::new(bytes, vref, encode, ecc, seed)],
             merged: EnergyMeter::default(),
             card: EnergyCard::mcaimem(vref),
         };
@@ -268,7 +348,7 @@ impl OracleBackend {
     /// A striped golden array — the counterpart of `ShardedBackend::new`:
     /// same shard-seed derivation, same stripe map, same staggered refresh.
     pub fn sharded(spec: &BackendSpec, n: usize, bytes: usize, seed: u64) -> Result<OracleBackend> {
-        let (vref, encode) = spec_params(spec)?;
+        let (vref, encode, ecc) = spec_params(spec)?;
         if n == 0 {
             bail!("sharded oracle needs at least one shard");
         }
@@ -277,7 +357,7 @@ impl OracleBackend {
         }
         let arrays = shard_seeds(seed, n)
             .into_iter()
-            .map(|s| OracleArray::new(bytes / n, vref, encode, s))
+            .map(|s| OracleArray::new(bytes / n, vref, encode, ecc, s))
             .collect();
         let mut b = OracleBackend {
             spec: *spec,
@@ -431,7 +511,7 @@ mod tests {
         // the leakage population is part of the array's identity: a fresh
         // store of worst-case zeros aged far past retention must corrupt
         // the exact same cells in oracle and production array
-        let spec = BackendSpec::Mcaimem { vref: 0.8, encode: false };
+        let spec = BackendSpec::Mcaimem { vref: 0.8, encode: false, ecc: false };
         let mut real = backend::build(&spec, 16 * 1024, 0xC0FFEE);
         let mut orc = OracleBackend::new(&spec, 16 * 1024, 0xC0FFEE).unwrap();
         let zeros = vec![0u8; 256];
@@ -478,12 +558,40 @@ mod tests {
         // the oracle is an independent third implementation)
         let mut scalar = MixedCellMemory::with_vref(16 * 1024, 0.7, 5);
         scalar.word_parallel = false;
-        let mut orc = OracleArray::new(16 * 1024, 0.7, true, 5);
+        let mut orc = OracleArray::new(16 * 1024, 0.7, true, false, 5);
         let data: Vec<u8> = (0..300u32).map(|i| (i * 7 + 3) as u8).collect();
         scalar.write(17, &data, 1e-6);
         orc.store(17, &data, 1e-6);
         assert_eq!(scalar.read(17, 300, 30e-6), orc.load(17, 300, 30e-6));
         assert_eq!(scalar.meter, orc.meter);
+    }
+
+    #[test]
+    fn ecc_oracle_matches_the_protected_array_post_scrub() {
+        // the acceptance property of the protection tier: with the SECDED
+        // plane on, production array and golden model commit the same
+        // flips, correct the same codewords, and land on bit-identical
+        // meters — including the scrub energy and `ecc_corrected`
+        let spec: BackendSpec = "mcaimem@0.8+ecc".parse().unwrap();
+        let mut real = backend::build(&spec, 16 * 1024, 0xC0FFEE);
+        let mut orc = OracleBackend::new(&spec, 16 * 1024, 0xC0FFEE).unwrap();
+        let zeros = vec![0u8; 256];
+        real.store(0, &zeros, 0.0);
+        orc.store(0, &zeros, 0.0);
+        // age far past retention, then scrub the rows covering the block
+        for row in 0..8 {
+            let t = 200e-6 + row as f64 * 1e-7;
+            real.refresh_row(row, t);
+            orc.refresh_row(row, t);
+        }
+        let t = 210e-6;
+        assert_eq!(real.load(0, 256, t), orc.load(0, 256, t));
+        assert!(real.meter().flips_committed > 0, "200 µs staleness must corrupt something");
+        let (rm, om) = (real.meter().clone(), orc.meter().clone());
+        assert_eq!(rm, om, "post-scrub meters must match field-for-field");
+        assert_eq!(rm.refresh_j.to_bits(), om.refresh_j.to_bits());
+        assert_eq!(rm.write_j.to_bits(), om.write_j.to_bits());
+        assert!(rm.ecc_corrected <= rm.flips_committed);
     }
 
     #[test]

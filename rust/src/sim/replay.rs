@@ -67,6 +67,7 @@ pub fn meter_diff(
         .or_else(|| u("bytes_read", expected.bytes_read, got.bytes_read))
         .or_else(|| u("bytes_written", expected.bytes_written, got.bytes_written))
         .or_else(|| u("flips_committed", expected.flips_committed, got.flips_committed))
+        .or_else(|| u("ecc_corrected", expected.ecc_corrected, got.ecc_corrected))
         .or_else(|| f("read_j", expected.read_j, got.read_j))
         .or_else(|| f("write_j", expected.write_j, got.write_j))
         .or_else(|| f("refresh_j", expected.refresh_j, got.refresh_j))
@@ -192,13 +193,16 @@ mod tests {
         let mut c = a.clone();
         c.flips_committed = 1;
         assert_eq!(meter_diff(&a, &c).unwrap().0, "flips_committed");
+        let mut e = a.clone();
+        e.ecc_corrected = 1;
+        assert_eq!(meter_diff(&a, &e).unwrap().0, "ecc_corrected");
     }
 
     #[test]
     fn cross_seed_mcaimem_replay_diverges() {
         // different construction seed → different weak-cell population →
         // stale reads corrupt differently; the replay must catch it
-        let spec = BackendSpec::Mcaimem { vref: 0.8, encode: false };
+        let spec = BackendSpec::Mcaimem { vref: 0.8, encode: false, ecc: false };
         let (mut b, log) = TracingBackend::wrap(backend::build(&spec, 16 * 1024, 1), 16 * 1024, 1, 0);
         b.store(0, &vec![0u8; 256], 0.0);
         let _ = b.load(0, 256, 300e-6); // way past retention
@@ -207,6 +211,42 @@ mod tests {
         let mut target = trace.build_target().unwrap();
         let rep = replay(&trace, target.as_mut());
         assert!(rep.divergence.is_some(), "cross-seed corruption must differ");
+    }
+
+    #[test]
+    fn faulty_mcaimem_trace_replays_bit_exact() {
+        // record a stale-read workload through every memory-tier fault
+        // class at once; replay rebuilds the wrapper from the header and
+        // must reproduce corrupted bytes AND meters exactly
+        let plan: crate::faults::FaultPlan =
+            "retention-tail@0.02,stuck-at@0.01,vref-drift@0.01,refresh-stall@2,seed=5"
+                .parse()
+                .unwrap();
+        let spec: BackendSpec = "mcaimem@0.8".parse().unwrap();
+        let (mut b, log) = TracingBackend::wrap_with_faults(
+            backend::build(&spec, 16 * 1024, 1),
+            16 * 1024,
+            1,
+            0,
+            &plan,
+        );
+        b.store(0, &vec![0x55u8; 512], 1e-6);
+        let _ = b.load(0, 512, 50e-6); // stale: the calibrated model flips too
+        for row in 0..4 {
+            b.refresh_row(row, 60e-6 + row as f64 * 1e-7);
+        }
+        let _ = b.load(0, 512, 70e-6);
+        let trace = log.lock().unwrap().clone();
+        assert_eq!(trace.faults, Some(plan));
+        let mut target = trace.build_target().unwrap();
+        let rep = replay(&trace, target.as_mut());
+        assert!(rep.exact(), "{}", rep.divergence.unwrap());
+        // dropping the plan from the header must break the replay: the
+        // recorded outcomes include fault damage the clean target lacks
+        let mut stripped = trace.clone();
+        stripped.faults = None;
+        let mut clean = stripped.build_target().unwrap();
+        assert!(replay(&stripped, clean.as_mut()).divergence.is_some());
     }
 
     #[test]

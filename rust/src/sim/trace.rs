@@ -27,6 +27,7 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Result};
 
+use crate::faults::{FaultPlan, FaultyBackend};
 use crate::mem::backend::{self, BackendSpec, MemoryBackend};
 use crate::mem::energy::EnergyCard;
 use crate::mem::mcaimem::EnergyMeter;
@@ -105,6 +106,13 @@ pub struct Trace {
     /// flat array — striping splits every access into 64-byte chunk events,
     /// so the meters differ — hence the explicit 0 for flat.
     pub shards: usize,
+    /// Active fault schedule, if the trace was recorded through a
+    /// [`FaultyBackend`]. Replay rebuilds the same wrapper around the same
+    /// plan, so the seeded fault stream re-fires identically — conformance
+    /// stays bit-exact *under* faults, not just without them. Serialized as
+    /// the plan's canonical grammar string; absent for fault-free traces,
+    /// so pre-existing artifacts parse unchanged.
+    pub faults: Option<FaultPlan>,
     pub entries: Vec<TraceEntry>,
 }
 
@@ -120,16 +128,29 @@ pub fn digest(bytes: &[u8]) -> u64 {
 impl Trace {
     /// An empty trace for the given geometry.
     pub fn new(spec: BackendSpec, bytes: usize, seed: u64, shards: usize) -> Trace {
-        Trace { version: TRACE_VERSION, spec, bytes, seed, shards, entries: Vec::new() }
+        Trace {
+            version: TRACE_VERSION,
+            spec,
+            bytes,
+            seed,
+            shards,
+            faults: None,
+            entries: Vec::new(),
+        }
     }
 
-    /// Build the backend this trace was recorded against (flat or sharded).
+    /// Build the backend this trace was recorded against (flat or sharded,
+    /// re-wrapped in the recorded fault plan when one is present).
     pub fn build_target(&self) -> Result<Box<dyn MemoryBackend>> {
-        if self.shards == 0 {
-            Ok(backend::build(&self.spec, self.bytes, self.seed))
+        let inner: Box<dyn MemoryBackend> = if self.shards == 0 {
+            backend::build(&self.spec, self.bytes, self.seed)
         } else {
-            Ok(Box::new(ShardedBackend::new(&self.spec, self.shards, self.bytes, self.seed)?))
-        }
+            Box::new(ShardedBackend::new(&self.spec, self.shards, self.bytes, self.seed)?)
+        };
+        Ok(match &self.faults {
+            Some(plan) => Box::new(FaultyBackend::wrap(inner, plan)),
+            None => inner,
+        })
     }
 
     /// The bare op sequence (what the shrinker permutes subsets of).
@@ -144,6 +165,7 @@ impl Trace {
     /// candidate is re-recorded on a fresh reference before re-checking.
     pub fn record_onto(&self, target: &mut dyn MemoryBackend, ops: &[Op]) -> Trace {
         let mut out = Trace::new(self.spec, self.bytes, self.seed, self.shards);
+        out.faults = self.faults.clone();
         for op in ops {
             let dig = apply_op(target, op);
             out.entries.push(TraceEntry {
@@ -171,7 +193,7 @@ impl Trace {
     // -- JSON serialization -------------------------------------------------
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("version", Json::Num(self.version as f64)),
             ("spec", Json::Str(self.spec.to_string())),
             ("bytes", Json::Num(self.bytes as f64)),
@@ -181,11 +203,12 @@ impl Trace {
             // population — corrupting the --replay artifact contract
             ("seed", Json::Str(format!("{:016x}", self.seed))),
             ("shards", Json::Num(self.shards as f64)),
-            (
-                "ops",
-                Json::Arr(self.entries.iter().map(entry_to_json).collect()),
-            ),
-        ])
+        ];
+        if let Some(plan) = &self.faults {
+            fields.push(("faults", Json::Str(plan.to_string())));
+        }
+        fields.push(("ops", Json::Arr(self.entries.iter().map(entry_to_json).collect())));
+        Json::obj(fields)
     }
 
     pub fn from_json(j: &Json) -> Result<Trace> {
@@ -200,6 +223,12 @@ impl Trace {
             u64::from_str_radix(j.get("seed")?.as_str().unwrap_or("0"), 16)?,
             j.get("shards")?.as_usize().unwrap_or(0),
         );
+        // optional key: fault-free traces (and all pre-faults artifacts)
+        // simply omit it
+        t.faults = match j.get("faults") {
+            Ok(p) => Some(p.as_str().unwrap_or("").parse()?),
+            Err(_) => None,
+        };
         for e in j.get("ops")?.as_arr().unwrap_or(&[]) {
             t.entries.push(entry_from_json(e)?);
         }
@@ -273,6 +302,7 @@ pub fn meter_to_json(m: &EnergyMeter) -> Json {
         ("bytes_read", Json::Num(m.bytes_read as f64)),
         ("bytes_written", Json::Num(m.bytes_written as f64)),
         ("flips_committed", Json::Num(m.flips_committed as f64)),
+        ("ecc_corrected", Json::Num(m.ecc_corrected as f64)),
         ("busy_s", Json::Num(m.busy_s)),
     ])
 }
@@ -290,6 +320,9 @@ pub fn meter_from_json(j: &Json) -> Result<EnergyMeter> {
         bytes_read: f("bytes_read")? as u64,
         bytes_written: f("bytes_written")? as u64,
         flips_committed: f("flips_committed")? as u64,
+        // optional for artifacts recorded before the ECC plane existed
+        ecc_corrected: j.get("ecc_corrected").map(|v| v.as_f64().unwrap_or(0.0)).unwrap_or(0.0)
+            as u64,
         busy_s: f("busy_s")?,
     })
 }
@@ -385,6 +418,27 @@ impl TracingBackend {
         (Box::new(TracingBackend { inner, log }), handle)
     }
 
+    /// Wrap `inner` in a [`FaultyBackend`] under `plan` *and* record the
+    /// faulted traffic, stamping the plan into the trace header so
+    /// [`Trace::build_target`] rebuilds the identical wrapper. The recorder
+    /// sits outside the fault layer: the trace captures what the layers
+    /// above actually observed (post-fault bytes, post-fault meters), and
+    /// replay re-derives the same observations from the same seeds.
+    pub fn wrap_with_faults(
+        inner: Box<dyn MemoryBackend>,
+        bytes: usize,
+        seed: u64,
+        shards: usize,
+        plan: &FaultPlan,
+    ) -> (Box<dyn MemoryBackend>, TraceHandle) {
+        let faulty: Box<dyn MemoryBackend> = Box::new(FaultyBackend::wrap(inner, plan));
+        let mut trace = Trace::new(faulty.spec(), bytes, seed, shards);
+        trace.faults = Some(plan.clone());
+        let log = Arc::new(Mutex::new(trace));
+        let handle = Arc::clone(&log);
+        (Box::new(TracingBackend { inner: faulty, log }), handle)
+    }
+
     fn record(&mut self, op: Op, dig: Option<u64>) {
         let expect =
             Expect { digest: dig, meter: self.inner.meter().clone(), now: self.inner.now() };
@@ -444,6 +498,12 @@ impl MemoryBackend for TracingBackend {
 
     fn energy_card(&self) -> &EnergyCard {
         self.inner.energy_card()
+    }
+
+    fn quarantine_shard(&mut self, shard: usize, now: f64) -> bool {
+        // quarantine is driven by the fault plan (deterministic from the
+        // header), not by recorded ops — delegate without logging
+        self.inner.quarantine_shard(shard, now)
     }
 
     fn label(&self) -> String {
@@ -525,6 +585,37 @@ mod tests {
         assert_eq!(hex_decode(&hex_encode(&data)).unwrap(), data);
         assert!(hex_decode("abc").is_err());
         assert!(hex_decode("zz").is_err());
+    }
+
+    #[test]
+    fn fault_plans_ride_the_trace_header() {
+        let plan: FaultPlan = "retention-tail@0.02,stuck-at@0.001,seed=9".parse().unwrap();
+        let spec = BackendSpec::Sram;
+        let (mut b, log) = TracingBackend::wrap_with_faults(
+            backend::build(&spec, 16 * 1024, 3),
+            16 * 1024,
+            3,
+            0,
+            &plan,
+        );
+        b.store(0, &[0u8; 128], 1e-6);
+        let _ = b.load(0, 128, 2e-6);
+        let t = log.lock().unwrap().clone();
+        assert_eq!(t.faults, Some(plan.clone()));
+        // the plan serializes as its canonical grammar string and survives
+        // the JSON round-trip
+        let j = t.to_json().to_pretty();
+        assert!(j.contains("retention-tail@0.02"), "{j}");
+        let back = Trace::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back, t);
+        // rebuild wraps the same plan: the recorded digests replay exactly
+        let mut target = t.build_target().unwrap();
+        let rep = crate::sim::replay::replay(&t, target.as_mut());
+        assert!(rep.exact(), "{:?}", rep.divergence);
+        // fault-free traces keep the pre-faults schema (no `faults` key)
+        let clean = sample_trace();
+        assert_eq!(clean.faults, None);
+        assert!(!clean.to_json().to_pretty().contains("faults"));
     }
 
     #[test]

@@ -276,6 +276,15 @@ impl CompareReport {
         self.deltas.iter().filter(|d| filter(&d.name) && d.pct() > pct).collect()
     }
 
+    /// Baseline benches matching `filter` that are absent from the current
+    /// run. A renamed or deleted gated bench pairs with nothing, so
+    /// [`Self::regressions`] (which only sees paired deltas) is blind to
+    /// it — the gate must fail on these instead of greening on a vanished
+    /// benchmark.
+    pub fn gated_missing<'a>(&'a self, filter: impl Fn(&str) -> bool + 'a) -> Vec<&'a str> {
+        self.missing.iter().map(String::as_str).filter(|n| filter(n)).collect()
+    }
+
     /// The delta table, markdown-formatted (rendered into the CI job
     /// summary).
     pub fn markdown(&self) -> String {
@@ -429,6 +438,29 @@ mod tests {
         let md = rep.markdown();
         assert!(md.contains("+20.0%"), "{md}");
         assert!(md.contains("missing from current run"), "{md}");
+    }
+
+    #[test]
+    fn gated_missing_catches_a_renamed_gated_bench() {
+        let mut base = BenchSuite::new("hotpath");
+        base.record(res("mem::write 16KB (word-parallel)", 100.0));
+        base.record(res("rng::next_u64 ×1M", 50.0));
+        let mut cur = BenchSuite::new("hotpath");
+        cur.record(res("mem::write 16KB (word-parallel v2)", 500.0)); // renamed
+        cur.record(res("rng::next_u64 ×1M", 50.0));
+        let rep = compare(&base, &cur);
+        // the rename leaves no paired delta, so the regression filter alone
+        // would wave a 5× slowdown through
+        assert!(rep.regressions(15.0, |n| n.contains("word-parallel")).is_empty());
+        assert_eq!(
+            rep.gated_missing(|n| n.contains("word-parallel")),
+            vec!["mem::write 16KB (word-parallel)"]
+        );
+        // ungated benches may come and go freely
+        assert!(rep.gated_missing(|n| n.contains("refresh")).is_empty());
+        // an intact bench set reports nothing
+        let clean = compare(&base, &base);
+        assert!(clean.gated_missing(|n| n.contains("word-parallel")).is_empty());
     }
 
     #[test]

@@ -43,9 +43,10 @@ fn spec_fromstr_display_roundtrip() {
         // sum cannot cross it
         let vref = (rng.next_u64() % 780) as f64 / 1000.0 + 0.3;
         let encode = rng.next_u64() % 2 == 0;
-        let spec = BackendSpec::Mcaimem { vref, encode };
+        let ecc = rng.next_u64() % 2 == 0;
+        let spec = BackendSpec::Mcaimem { vref, encode, ecc };
         let back: BackendSpec = spec.to_string().parse().unwrap();
-        assert_eq!(back, spec, "vref={vref} encode={encode}");
+        assert_eq!(back, spec, "vref={vref} encode={encode} ecc={ecc}");
     }
 }
 

@@ -1,0 +1,222 @@
+//! Chaos acceptance tests (ISSUE 6): one seeded drill exercising all six
+//! fault classes across both tiers — the memory tier must stay bit- and
+//! meter-exact against the fault-aware oracle (flat and sharded ×4,
+//! with and without the ECC plane), the degraded serving pool must lose
+//! zero replies, an unrecoverable defect under an active fault plan must
+//! shrink to a ≤20-op replayable trace, and sharded per-shard meters must
+//! merge exactly while the plan is live.
+//!
+//! The CLI drill (`mcaimem chaos --quick --seed 42`) runs the same
+//! machinery; these tests keep op counts test-suite friendly.
+
+use mcaimem::faults::FaultPlan;
+use mcaimem::mem::backend::{BackendSpec, MemoryBackend};
+use mcaimem::mem::mcaimem::EnergyMeter;
+use mcaimem::sim::campaign::{self, minimize, CampaignConfig};
+use mcaimem::sim::chaos::{self, ChaosConfig};
+use mcaimem::sim::replay::replay;
+use mcaimem::sim::trace::Op;
+
+/// The memory-tier fault classes (the engine classes would be inert in a
+/// backend-only campaign).
+const MEMORY_PLAN: &str =
+    "retention-tail@0.01,stuck-at@0.005,vref-drift@0.005,refresh-stall@3,shard-outage@1e-4";
+
+#[test]
+fn full_drill_survives_all_six_fault_classes_with_zero_lost_replies() {
+    // the acceptance drill: the default plan (all six classes at once)
+    // over mcaimem@0.8 and mcaimem@0.8+ecc, flat and sharded ×4, plus a
+    // degraded worker pool — seeded, so the run is reproducible
+    let cfg = ChaosConfig {
+        ops: 600,
+        bytes: 32 * 1024,
+        shards: 4,
+        requests: 96,
+        ..ChaosConfig::default()
+    };
+    let outcome = chaos::run(&cfg).unwrap();
+
+    // the plan really carries every class
+    assert!(outcome.plan.retention_tail.is_some());
+    assert!(outcome.plan.stuck_at.is_some());
+    assert!(outcome.plan.vref_drift.is_some());
+    assert!(outcome.plan.refresh_stall.is_some());
+    assert!(outcome.plan.shard_outage.is_some());
+    assert!(outcome.plan.engine_timeout.is_some());
+    assert!(outcome.plan.engine_crash.is_some());
+
+    // memory tier: 2 specs × (flat + sharded ×4), every geometry bit- and
+    // meter-exact against the fault-aware oracle
+    assert_eq!(outcome.memory.len(), 4);
+    for o in &outcome.memory {
+        assert!(o.ok(), "{} {}: {:?}", o.spec, o.geometry(), o.failures);
+        assert_eq!(o.oracle_ok, Some(true), "{} {}", o.spec, o.geometry());
+        assert!(o.counts.3 > 0, "{} {}: the drill must exercise refresh", o.spec, o.geometry());
+    }
+    assert!(outcome
+        .memory
+        .iter()
+        .any(|o| o.shards == 4 && matches!(o.spec, BackendSpec::Mcaimem { ecc: false, .. })));
+    assert!(outcome
+        .memory
+        .iter()
+        .any(|o| o.shards == 4 && matches!(o.spec, BackendSpec::Mcaimem { ecc: true, .. })));
+
+    // serving tier: the fatal crash takes exactly one worker, injected
+    // engine faults surface as error replies, and nothing vanishes
+    let s = &outcome.serving;
+    assert_eq!(s.lost, 0, "{s:?}");
+    assert_eq!(s.offered, 96);
+    assert_eq!(s.alive_workers, s.workers - 1, "{s:?}");
+    assert!(s.errors > 0, "injected engine faults must surface as error replies: {s:?}");
+    assert!(outcome.ok());
+}
+
+#[test]
+fn unrecoverable_fault_shrinks_to_a_replayable_minimal_trace() {
+    // a defect the plan cannot absorb (a corrupted load path) recorded
+    // UNDER an active fault plan must ddmin-shrink to a ≤20-op trace that
+    // still carries the plan in its header, replays exactly on a good
+    // target and still diverges on the defective one
+    let plan: FaultPlan = MEMORY_PLAN.parse().unwrap();
+    let cfg = CampaignConfig {
+        ops: 200,
+        seed: 7,
+        bytes: 32 * 1024,
+        shards: 2,
+        shrink: true,
+        faults: Some(plan.clone()),
+    };
+    let spec: BackendSpec = "mcaimem@0.8".parse().unwrap();
+    let trace = campaign::record(&spec, 0, &cfg).unwrap();
+    assert_eq!(trace.faults, Some(plan.clone()), "the plan must ride the header");
+    assert!(
+        trace.entries.iter().any(|e| matches!(e.op, Op::Load { len, .. } if len > 64)),
+        "op stream must contain a load long enough to trip the defect"
+    );
+
+    let minimal = minimize(
+        &trace,
+        &mut || trace.build_target().unwrap(),
+        &mut || {
+            Box::new(Corrupting { inner: trace.build_target().unwrap() })
+                as Box<dyn MemoryBackend>
+        },
+    );
+    assert!(!minimal.entries.is_empty());
+    assert!(minimal.entries.len() <= 20, "shrunk to {} ops", minimal.entries.len());
+    assert_eq!(minimal.faults, Some(plan), "the shrunk artifact must stay fault-aware");
+    // internally consistent: exact on a good (fault-wrapped) target …
+    let mut good = minimal.build_target().unwrap();
+    assert!(replay(&minimal, good.as_mut()).exact());
+    // … and still failing on the defective one
+    let mut bad = Corrupting { inner: minimal.build_target().unwrap() };
+    assert!(replay(&minimal, &mut bad).divergence.is_some());
+}
+
+#[test]
+fn sharded_meters_merge_exactly_under_an_active_fault_plan() {
+    // satellite: EnergyMeter::merge on the serving read-out path, with
+    // faults live — per-shard meters must fold into the trait-level merged
+    // meter, the merged meter must match the recorded expectation, and
+    // striping must conserve bytes against the flat geometry
+    let plan: FaultPlan = MEMORY_PLAN.parse().unwrap();
+    let cfg = CampaignConfig {
+        ops: 400,
+        seed: 9,
+        bytes: 32 * 1024,
+        shards: 4,
+        shrink: false,
+        faults: Some(plan),
+    };
+    let spec: BackendSpec = "mcaimem@0.8".parse().unwrap();
+
+    let sharded = campaign::record(&spec, 4, &cfg).unwrap();
+    let mut target = sharded.build_target().unwrap();
+    let rep = replay(&sharded, target.as_mut());
+    assert!(rep.exact(), "sharded self-replay under faults: {}", rep.divergence.unwrap());
+
+    // the fault wrapper forwards the per-shard break-down; the field-wise
+    // merge reproduces the merged read-out
+    let per = target.shard_meters();
+    assert_eq!(per.len(), 4);
+    let mut sum = EnergyMeter::default();
+    for m in &per {
+        sum.merge(m);
+    }
+    let merged = target.meter();
+    assert!((sum.total_j() - merged.total_j()).abs() < 1e-18);
+    assert_eq!(sum.reads, merged.reads);
+    assert_eq!(sum.writes, merged.writes);
+    assert_eq!(sum.refreshes, merged.refreshes);
+    assert_eq!(sum.bytes_read, merged.bytes_read);
+    assert_eq!(sum.bytes_written, merged.bytes_written);
+    assert_eq!(sum.flips_committed, merged.flips_committed);
+    assert_eq!(sum.ecc_corrected, merged.ecc_corrected);
+    // meter-exactness: the replayed merged meter IS the last recorded
+    // expectation (replay checks every snapshot; pin the final one)
+    assert_eq!(sharded.entries.last().unwrap().expect.meter, *merged);
+
+    // flat geometry under the same plan: the identical op stream conserves
+    // bytes exactly (striping splits events, never payloads; the fault
+    // wrapper drops the same refresh slots in both geometries) and lands
+    // within the per-shard weak-cell wobble on energy
+    let flat = campaign::record(&spec, 0, &cfg).unwrap();
+    let mut ftarget = flat.build_target().unwrap();
+    assert!(replay(&flat, ftarget.as_mut()).exact());
+    let fm = ftarget.meter();
+    assert_eq!(fm.bytes_written, merged.bytes_written);
+    assert_eq!(fm.bytes_read, merged.bytes_read);
+    assert!(
+        (fm.total_j() - merged.total_j()).abs() / fm.total_j() < 0.02,
+        "flat {} J vs sharded {} J",
+        fm.total_j(),
+        merged.total_j()
+    );
+}
+
+/// Test double: corrupts the first byte of any load longer than 64 B —
+/// a defect no fault plan explains, so conformance must flag and shrink it.
+struct Corrupting {
+    inner: Box<dyn MemoryBackend>,
+}
+
+impl MemoryBackend for Corrupting {
+    fn spec(&self) -> BackendSpec {
+        self.inner.spec()
+    }
+    fn capacity(&self) -> usize {
+        self.inner.capacity()
+    }
+    fn now(&self) -> f64 {
+        self.inner.now()
+    }
+    fn store(&mut self, addr: usize, data: &[u8], now: f64) {
+        self.inner.store(addr, data, now)
+    }
+    fn load(&mut self, addr: usize, len: usize, now: f64) -> Vec<u8> {
+        let mut out = self.inner.load(addr, len, now);
+        if out.len() > 64 {
+            out[0] ^= 1;
+        }
+        out
+    }
+    fn tick(&mut self, now: f64) {
+        self.inner.tick(now)
+    }
+    fn refresh_due(&self) -> Option<f64> {
+        self.inner.refresh_due()
+    }
+    fn refresh_row(&mut self, row: usize, now: f64) {
+        self.inner.refresh_row(row, now)
+    }
+    fn rows_per_bank(&self) -> usize {
+        self.inner.rows_per_bank()
+    }
+    fn meter(&self) -> &EnergyMeter {
+        self.inner.meter()
+    }
+    fn energy_card(&self) -> &mcaimem::mem::energy::EnergyCard {
+        self.inner.energy_card()
+    }
+}

@@ -27,7 +27,14 @@ fn acceptance_specs() -> Vec<BackendSpec> {
 
 #[test]
 fn every_backend_replays_its_own_campaign_trace_exactly() {
-    let cfg = CampaignConfig { ops: 300, seed: 7, bytes: 64 * 1024, shards: 4, shrink: false };
+    let cfg = CampaignConfig {
+        ops: 300,
+        seed: 7,
+        bytes: 64 * 1024,
+        shards: 4,
+        shrink: false,
+        faults: None,
+    };
     for spec in acceptance_specs() {
         for shards in [0usize, 4] {
             let trace = campaign::record(&spec, shards, &cfg).unwrap();
@@ -45,7 +52,14 @@ fn every_backend_replays_its_own_campaign_trace_exactly() {
 fn mcaimem_sharded_x4_matches_the_golden_model_bit_and_meter_exactly() {
     // the acceptance configuration: word-parallel mcaimem@0.8 striped
     // across 4 shards, diffed against the naive byte-per-cell oracle
-    let cfg = CampaignConfig { ops: 400, seed: 7, bytes: 64 * 1024, shards: 4, shrink: false };
+    let cfg = CampaignConfig {
+        ops: 400,
+        seed: 7,
+        bytes: 64 * 1024,
+        shards: 4,
+        shrink: false,
+        faults: None,
+    };
     for spec in ["mcaimem@0.8", "mcaimem@0.7-noenc"] {
         let spec: BackendSpec = spec.parse().unwrap();
         for shards in [0usize, 4] {
@@ -177,7 +191,8 @@ impl MemoryBackend for OffByOne {
 
 #[test]
 fn injected_off_by_one_is_caught_and_shrunk_to_a_minimal_trace() {
-    let cfg = CampaignConfig { ops: 500, seed: 7, bytes: 64 * 1024, shards: 0, shrink: true };
+    let cfg =
+        CampaignConfig { ops: 500, seed: 7, bytes: 64 * 1024, shards: 0, ..Default::default() };
     let spec = BackendSpec::mcaimem_default();
     let trace = campaign::record(&spec, 0, &cfg).unwrap();
 
@@ -220,7 +235,8 @@ fn injected_off_by_one_is_caught_and_shrunk_to_a_minimal_trace() {
 fn campaign_runner_end_to_end_is_green_for_the_acceptance_sweep() {
     // the `mcaimem conform` path in miniature: all five acceptance specs,
     // flat + sharded ×4, self-replay + oracle where applicable
-    let cfg = CampaignConfig { ops: 150, seed: 7, bytes: 64 * 1024, shards: 4, shrink: true };
+    let cfg =
+        CampaignConfig { ops: 150, seed: 7, bytes: 64 * 1024, shards: 4, ..Default::default() };
     let outcomes = campaign::run(&acceptance_specs(), &cfg).unwrap();
     assert_eq!(outcomes.len(), 10, "5 specs × (flat + sharded)");
     for o in &outcomes {

@@ -15,7 +15,7 @@ use mcaimem::util::rng::Pcg64;
 
 const CLEAN: BackendSpec = BackendSpec::Sram;
 const AGED: BackendSpec = BackendSpec::mcaimem_default();
-const AGED_NOENC: BackendSpec = BackendSpec::Mcaimem { vref: 0.8, encode: false };
+const AGED_NOENC: BackendSpec = BackendSpec::Mcaimem { vref: 0.8, encode: false, ecc: false };
 
 fn runner() -> Option<ModelRunner> {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
