@@ -9,7 +9,11 @@
 //! * **mem::energy** — the ratio-parameterized Table II card
 //!   ([`EnergyCard::mcaimem_ratio`]) for static / refresh / access energy;
 //! * **mem::area** — the ratio- and geometry-parameterized macro area
-//!   ([`AreaModel::macro_area_banked`]);
+//!   ([`AreaModel::macro_area_banked`]) — or, with
+//!   [`EvalContext::with_compiled`], the macro compiler's bottom-up
+//!   per-block composition ([`crate::mem::compiler::compile`]), which is
+//!   bit-identical at the calibration bank and structurally richer off it
+//!   (decoder/mux excess levels, stretched row cycle);
 //! * **circuit** — the calibrated Fig. 12 retention statistics
 //!   ([`crate::device::StorageLeakage`]'s lognormal per-cell law) and the
 //!   CVSA read-1 margin feeding the accuracy proxy over a seeded sample of
@@ -147,6 +151,14 @@ pub struct EvalContext {
     /// Monte-Carlo sample count of the accuracy proxy (successive halving
     /// runs early rungs at reduced fidelity).
     pub fidelity: usize,
+    /// Evaluate through the macro compiler ([`crate::mem::compiler`])
+    /// instead of the analytic cards: each point compiles to a structural
+    /// [`crate::mem::compiler::MacroSpec`] and area / access scale / row
+    /// cycle come from the generated blocks. Bit-identical to the analytic
+    /// path at the 256 × 64 B calibration bank; off-reference geometries
+    /// pay decoder/mux excess levels and a stretched `t_rc` the analytic
+    /// interpolation cannot see.
+    pub compiled: bool,
     /// Constant SRAM-plane failure floor folded into `err_proxy`: sampled
     /// once per context from the PMOS-access 6T write yield (Fig. 9b, FS
     /// corner, −0.1 V word-line under-drive) times the half-range error a
@@ -179,8 +191,15 @@ impl EvalContext {
             seed,
             fidelity,
             sign_fail_err: (1.0 - yield_ud).max(0.0) * 64.0,
+            compiled: false,
             err_data: Self::sample_data(seed, fidelity),
         }
+    }
+
+    /// The same context evaluating through compiled macros (or back).
+    pub fn with_compiled(mut self, compiled: bool) -> Self {
+        self.compiled = compiled;
+        self
     }
 
     fn sample_data(seed: u64, fidelity: usize) -> Vec<i8> {
@@ -222,11 +241,17 @@ impl EvalCache {
 }
 
 /// The content-hashed memo key: canonical point string + workload +
-/// platform + fidelity + seed.
+/// platform + fidelity + seed (+ a fidelity-model tag for compiled-macro
+/// evaluations, so analytic and compiled objectives never alias in one
+/// cache).
 fn memo_key(p: &DesignPoint, ctx: &EvalContext) -> u64 {
     let s = format!(
-        "{p}|{}|{}|{}|{}",
-        ctx.network.name, ctx.acc.name, ctx.fidelity, ctx.seed
+        "{p}|{}|{}|{}|{}{}",
+        ctx.network.name,
+        ctx.acc.name,
+        ctx.fidelity,
+        ctx.seed,
+        if ctx.compiled { "|compiled" } else { "" }
     );
     fnv1a(s.as_bytes())
 }
@@ -234,7 +259,6 @@ fn memo_key(p: &DesignPoint, ctx: &EvalContext) -> u64 {
 /// Evaluate one design point (uncached).
 pub fn evaluate(p: &DesignPoint, ctx: &EvalContext) -> Objectives {
     let trace = simulate_network(&ctx.network, &ctx.acc);
-    let card = EnergyCard::mcaimem_ratio(p.vref, p.ratio);
     let enc = p.encode && p.ratio > 0;
     // the SECDED plane protects eDRAM-mapped bits; it's vacuous on the
     // pure-SRAM reference (ratio 0)
@@ -246,10 +270,28 @@ pub fn evaluate(p: &DesignPoint, ctx: &EvalContext) -> Objectives {
     let reads = trace.total_sram_reads() as usize;
     let writes = trace.total_sram_writes() as usize;
 
-    let model = AreaModel::lp45();
-    let area_m2 = (model.macro_area_banked(buf, p.ratio, p.rows, p.row_bytes)
-        + if ecc { model.ecc_overhead(buf) } else { 0.0 })
-        * (1.0 + SHARD_AREA_FRAC * (p.shards - 1) as f64);
+    // One fidelity switch, one body: the analytic path composes the
+    // hand-calibrated cards; the compiled path asks the macro compiler for
+    // a structural spec and takes area / access scale / row cycle from the
+    // generated blocks. Both feed the identical downstream arithmetic, so
+    // at the calibration bank (where the compiler reproduces the analytic
+    // cards bit-exactly) the two fidelities agree bit-for-bit.
+    let (card, area_unsharded, dyn_scale, t_rc) = if ctx.compiled {
+        let spec = crate::mem::compiler::compile(p, buf)
+            .expect("grid points are in-bounds by construction");
+        (EnergyCard::from_macro(&spec), spec.area_m2, spec.dyn_scale, spec.t_rc_s)
+    } else {
+        let model = AreaModel::lp45();
+        let area = model.macro_area_banked(buf, p.ratio, p.rows, p.row_bytes)
+            + if ecc { model.ecc_overhead(buf) } else { 0.0 };
+        (
+            EnergyCard::mcaimem_ratio(p.vref, p.ratio),
+            area,
+            crate::mem::geometry::access_scale(p.rows, p.row_bytes),
+            T_RC,
+        )
+    };
+    let area_m2 = area_unsharded * (1.0 + SHARD_AREA_FRAC * (p.shards - 1) as f64);
 
     let refreshed = p.refresh == RefreshPolicy::Periodic && card.refresh_period.is_some();
     // the scrub rides the refresh pass, so its power lands on the same rail
@@ -260,11 +302,10 @@ pub fn evaluate(p: &DesignPoint, ctx: &EvalContext) -> Objectives {
     let refresh_w =
         if refreshed { card.refresh_power(buf, resident) } else { 0.0 } + scrub_w;
     let duty = match (refreshed, card.refresh_period) {
-        (true, Some(t_ref)) => (p.rows as f64 * T_RC) / t_ref / p.shards as f64,
+        (true, Some(t_ref)) => (p.rows as f64 * t_rc) / t_ref / p.shards as f64,
         _ => 0.0,
     };
 
-    let dyn_scale = 0.5 * (p.rows as f64 / 256.0 + p.cols() as f64 / 512.0);
     let static_j = card.static_power(buf, resident) * t;
     let refresh_j = refresh_w * t;
     // check-byte updates ride each store; the check plane has its own
@@ -565,6 +606,44 @@ mod tests {
             evaluate(&DesignPoint { ecc: true, ..sram.clone() }, &c),
             evaluate(&sram, &c)
         );
+    }
+
+    #[test]
+    fn compiled_fidelity_is_bit_identical_at_the_calibration_bank() {
+        // the compiler's calibration contract, seen end-to-end: at the
+        // 256 × 64 B reference bank the compiled-macro evaluation is the
+        // analytic evaluation, bit-for-bit, across the point families
+        let c = ctx();
+        let cc = c.clone().with_compiled(true);
+        for p in [
+            DesignPoint::paper(),
+            pt(3, 0.7),
+            pt(15, 0.9),
+            pt(0, 0.8),
+            DesignPoint { ecc: true, ..DesignPoint::paper() },
+            DesignPoint { shards: 4, ..DesignPoint::paper() },
+            DesignPoint { refresh: RefreshPolicy::Gated, ..DesignPoint::paper() },
+        ] {
+            assert_eq!(evaluate(&p, &c), evaluate(&p, &cc), "{p}");
+        }
+    }
+
+    #[test]
+    fn compiled_fidelity_diverges_off_the_reference_geometry() {
+        // at 512 rows the 9th decoder level costs area and stretches the
+        // row cycle — structure only the compiled macro carries
+        let c = ctx();
+        let cc = c.clone().with_compiled(true);
+        let tall = DesignPoint { rows: 512, ..DesignPoint::paper() };
+        let analytic = evaluate(&tall, &c);
+        let compiled = evaluate(&tall, &cc);
+        assert!(compiled.area_mm2 > analytic.area_mm2);
+        assert!(compiled.latency_s > analytic.latency_s, "stretched t_rc raises the duty");
+        // the two fidelities never alias in one memo cache
+        let cache = EvalCache::new();
+        let _ = evaluate_cached(&DesignPoint::paper(), &c, &cache);
+        let _ = evaluate_cached(&DesignPoint::paper(), &cc, &cache);
+        assert_eq!(cache.misses(), 2, "compiled evaluations get their own key");
     }
 
     #[test]

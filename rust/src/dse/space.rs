@@ -138,7 +138,9 @@ impl DesignPoint {
         fnv1a(self.to_string().as_bytes())
     }
 
-    fn validate(&self) -> Result<()> {
+    /// Bounds-check every axis (the same gate `FromStr` applies). Public
+    /// so the macro compiler can refuse out-of-space points up front.
+    pub fn validate(&self) -> Result<()> {
         if self.ratio > MAX_RATIO {
             bail!("ratio {} out of range 0..={MAX_RATIO}", self.ratio);
         }

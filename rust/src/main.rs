@@ -40,7 +40,8 @@ USAGE:
       to a machine-readable file
   mcaimem explore [--space SPEC] [--strategy grid|random|halving] [--samples N]
                   [--network NAME] [--platform eyeriss|tpuv1] [--seed N]
-                  [--fidelity N] [--json FILE] [--diff FILE] [--quick] [--paper-gate]
+                  [--fidelity N] [--json FILE] [--diff FILE] [--quick]
+                  [--paper-gate] [--compiled]
       design-space exploration: expand the design grid (SPEC grammar:
       ratio=1..15,vref=0.6:0.9:0.05,enc=on,geom=256x64|512x64,shards=1,
       refresh=periodic|gated,ecc=off|on), evaluate every point in parallel
@@ -49,7 +50,17 @@ USAGE:
       Pareto frontier + hypervolume. --json writes the frontier artifact;
       --diff compares against a previous artifact; --quick runs the small
       pinned CI grid and gates on the paper point staying on the frontier
-      (--paper-gate adds the same gate to any run)
+      (--paper-gate adds the same gate to any run). --compiled evaluates
+      through the macro compiler (structural per-block models) instead of
+      the analytic cards and prints the analytic→compiled frontier diff
+  mcaimem compile [--point POINT] [--bytes-kb KB] [--json FILE] [--table]
+      compile one design point (the explore point grammar, e.g.
+      ratio=7,vref=0.8 — unset axes take the paper's values) into a
+      structural macro: tiled bitcell array, sized decoders/muxes, S/A and
+      write-driver stripes, V_REF/encoder/ECC periphery, refresh domains,
+      with area/energy/timing derived bottom-up per block. Prints the
+      block-level breakdown (--table; default when no --json) and/or
+      writes the deterministic netlist-summary artifact (--json)
   mcaimem serve [--backend SPEC] [--shards N] [--workers K] [--target-rps R]
                 [--requests N] [--clients C] [--high-water H] [--buffer-kb KB]
                 [--mix NET,NET] [--p P] [--window-ms MS] [--artifacts DIR]
@@ -123,9 +134,9 @@ fn run() -> Result<()> {
             "csv", "artifacts", "network", "platform", "backend", "seed", "requests", "p",
             "window-ms", "shards", "workers", "target-rps", "clients", "high-water",
             "buffer-kb", "mix", "ops", "bytes-kb", "save-dir", "replay", "json", "space",
-            "strategy", "samples", "fidelity", "diff", "faults",
+            "strategy", "samples", "fidelity", "diff", "faults", "point",
         ],
-        &["quick", "help", "sweep", "no-retry", "no-shrink", "paper-gate"],
+        &["quick", "help", "sweep", "no-retry", "no-shrink", "paper-gate", "compiled", "table"],
     );
     let args = parser.parse(std::env::args().skip(1))?;
     if args.has_flag("help") || args.positionals.is_empty() {
@@ -162,6 +173,7 @@ fn run() -> Result<()> {
         }
         "simulate" => cmd_simulate(&args),
         "explore" => cmd_explore(&args),
+        "compile" => cmd_compile(&args),
         "serve" => cmd_serve(&args),
         "conform" => cmd_conform(&args),
         "chaos" => cmd_chaos(&args),
@@ -235,7 +247,7 @@ fn cmd_simulate(args: &mcaimem::cli::ParsedArgs) -> Result<()> {
             ("seed", Json::Num(seed as f64)),
             ("reports", Json::Arr(reports.iter().map(|r| r.to_json()).collect())),
         ]);
-        std::fs::write(path, doc.to_pretty())?;
+        mcaimem::util::json::save_pretty(std::path::Path::new(path), &doc)?;
         println!("machine-readable report written to {path}");
     }
     Ok(())
@@ -265,19 +277,33 @@ fn cmd_explore(args: &mcaimem::cli::ParsedArgs) -> Result<()> {
         seed,
     )?;
 
+    let compiled = args.has_flag("compiled");
     println!(
-        "exploring {} design points — {} strategy, {} on {}, seed {}",
+        "exploring {} design points — {} strategy, {} on {}, seed {}{}",
         space.len(),
         strategy.name(),
         net.name,
         acc.name,
-        seed
+        seed,
+        if compiled { ", compiled-macro fidelity" } else { "" }
     );
-    let ctx = EvalContext::new(net, acc, seed, fidelity);
+    let ctx = EvalContext::new(net, acc, seed, fidelity).with_compiled(compiled);
     let cache = EvalCache::new();
     let report = strategy.run(&space, &ctx, &cache)?;
     let outcome = ExploreOutcome::new(report, &ctx, &cache, seed, &space.spec);
     println!("{}", outcome.table().render());
+
+    if compiled {
+        // the same strategy over the analytic cards (separate memo keys in
+        // the same cache) — the diff is what the structural per-block
+        // models see that the interpolated analytic law cannot
+        let actx = ctx.clone().with_compiled(false);
+        let areport = strategy.run(&space, &actx, &cache)?;
+        let aoutcome = ExploreOutcome::new(areport, &actx, &cache, seed, &space.spec);
+        let d = mcaimem::dse::pareto::diff(&aoutcome.frontier, &outcome.frontier);
+        println!("analytic → compiled frontier:");
+        println!("{}", render_diff(&d));
+    }
 
     match outcome.paper_ok() {
         None => println!("paper point 1S7E@0.8 was not part of this space"),
@@ -295,7 +321,16 @@ fn cmd_explore(args: &mcaimem::cli::ParsedArgs) -> Result<()> {
     }
 
     if let Some(path) = args.get("json") {
-        std::fs::write(path, outcome.to_json().to_pretty())?;
+        use mcaimem::util::json::Json;
+        let mut doc = outcome.to_json();
+        if compiled {
+            // tag the artifact's objective space so diffs across
+            // fidelities are recognizable (readers only require "frontier")
+            if let Json::Obj(o) = &mut doc {
+                o.insert("eval".into(), Json::Str("compiled".into()));
+            }
+        }
+        mcaimem::util::json::save_pretty(std::path::Path::new(path), &doc)?;
         println!("frontier artifact written to {path}");
     }
     if let Some(old) = args.get("diff") {
@@ -312,6 +347,33 @@ fn cmd_explore(args: &mcaimem::cli::ParsedArgs) -> Result<()> {
                 "paper-point gate FAILED: 1S7E@0.8 must stay on the frontier with ≥40% area and ≥3x energy vs SRAM"
             ),
         }
+    }
+    Ok(())
+}
+
+fn cmd_compile(args: &mcaimem::cli::ParsedArgs) -> Result<()> {
+    use mcaimem::dse::DesignPoint;
+    use mcaimem::mem::compiler;
+
+    // the explore point grammar; axes left unset take the paper's values,
+    // so `--point ratio=7,vref=0.8` is the Table I operating point
+    let point: DesignPoint = match args.get("point") {
+        Some(s) => s.parse()?,
+        None => DesignPoint::paper(),
+    };
+    let bytes = args.get_usize("bytes-kb", 1024)? * 1024;
+    let spec = compiler::compile(&point, bytes)?;
+
+    // breakdown table by default; with --json the table only prints when
+    // asked for, so scripted runs stay quiet
+    if args.has_flag("table") || args.get("json").is_none() {
+        for t in mcaimem::report::macro_spec::breakdown(&spec) {
+            println!("{}", t.render());
+        }
+    }
+    if let Some(path) = args.get("json") {
+        spec.save(std::path::Path::new(path))?;
+        println!("netlist summary written to {path}");
     }
     Ok(())
 }
@@ -486,7 +548,7 @@ fn cmd_conform(args: &mcaimem::cli::ParsedArgs) -> Result<()> {
     println!("{}", table.render());
     if let Some(path) = args.get("json") {
         let doc = mcaimem::report::conformance::outcomes_json(&outcomes, &cfg);
-        std::fs::write(path, doc.to_pretty())?;
+        mcaimem::util::json::save_pretty(std::path::Path::new(path), &doc)?;
         println!("machine-readable report written to {path}");
     }
     if ok {
@@ -535,7 +597,7 @@ fn cmd_chaos(args: &mcaimem::cli::ParsedArgs) -> Result<()> {
     println!("{}", table.render());
     if let Some(path) = args.get("json") {
         let doc = mcaimem::report::chaos::outcome_json(&outcome, &cfg);
-        std::fs::write(path, doc.to_pretty())?;
+        mcaimem::util::json::save_pretty(std::path::Path::new(path), &doc)?;
         println!("machine-readable report written to {path}");
     }
     if ok {

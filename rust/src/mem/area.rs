@@ -34,16 +34,10 @@ use crate::circuit::{edram1t1c, edram2t, edram3t, sram6t};
 use crate::device::TechNode;
 use crate::encode::one_enhancement::ENCODER_COST_45NM;
 
-/// Fraction of a memory macro spent on peripheral circuitry (row/col
-/// decoders, S/A stripe, write drivers, timing) at the paper's reference
-/// bank geometry (256 rows × 512 columns). Representative of compiled
-/// SRAM macros at this capacity.
-pub const PERIPHERY_FRAC: f64 = 0.25;
-
-/// Reference bank geometry the periphery fraction is calibrated at: the
-/// paper's 16 KB bank, 256 rows × 64 bytes (= 512 bit columns).
-pub const REF_ROWS: usize = 256;
-pub const REF_COLS: usize = 512;
+// The calibration constants moved to the shared [`super::geometry`] module
+// (one source of truth for this model, `dse::eval` and `mem::compiler`);
+// re-exported here so existing call sites keep their paths.
+pub use super::geometry::{PERIPHERY_FRAC, REF_COLS, REF_ROWS};
 
 /// Relative cell area (vs 6T SRAM = 1.0) of the 1S·NE mixed composition:
 /// one 6T SRAM cell per `n` widened 2T eDRAM cells, averaged per bit.
@@ -99,7 +93,7 @@ impl AreaModel {
     /// refresh FSM at 2× the encoder as a conservative bound. Zero for a
     /// pure-SRAM composition (`ratio == 0`): no eDRAM cells means no
     /// reference voltage, no refresh and nothing to encode for.
-    fn mixed_extras(ratio: u32) -> f64 {
+    pub(crate) fn mixed_extras(ratio: u32) -> f64 {
         if ratio == 0 {
             0.0
         } else {
@@ -141,10 +135,7 @@ impl AreaModel {
     ) -> f64 {
         assert!(rows > 0 && row_bytes > 0, "degenerate bank geometry");
         let array = self.array_area_mixed(bytes, ratio);
-        let cols = (row_bytes * 8) as f64;
-        let geom = (1.0 / cols + 1.0 / rows as f64)
-            / (1.0 / REF_COLS as f64 + 1.0 / REF_ROWS as f64);
-        let periph = array * (PERIPHERY_FRAC * geom);
+        let periph = array * (PERIPHERY_FRAC * super::geometry::periphery_factor(rows, row_bytes));
         array + periph + Self::mixed_extras(ratio)
     }
 

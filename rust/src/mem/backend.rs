@@ -328,6 +328,64 @@ impl McaimemBackend {
         mem.encode_enabled = encode;
         McaimemBackend { mem }
     }
+
+    /// A functional array over a compiled macro's generated geometry: the
+    /// [`crate::mem::compiler::MacroSpec`]'s bank organization becomes the
+    /// runnable memory map, so conformance traces replay through the exact
+    /// structure the compiler emitted. Fails on compositions the
+    /// byte-oriented functional array cannot represent (non-byte-tiling
+    /// ratios — the analytic evaluator covers those) and on row widths the
+    /// word-parallel access path cannot scan (must be whole 64-byte words).
+    pub fn from_macro(spec: &crate::mem::compiler::MacroSpec, seed: u64) -> crate::Result<Self> {
+        let p = &spec.point;
+        anyhow::ensure!(
+            p.functional_ratio(),
+            "1S·{}E does not tile a byte — no functional array for this macro",
+            p.ratio
+        );
+        anyhow::ensure!(
+            spec.row_bytes % 64 == 0,
+            "compiled row width {} B is not whole 64-byte words",
+            spec.row_bytes
+        );
+        let bank = crate::mem::bank::BankGeometry {
+            bytes: spec.rows * spec.row_bytes,
+            rows: spec.rows,
+            row_bytes: spec.row_bytes,
+        };
+        let map = crate::mem::bank::MemoryMap::with_geometry(spec.bytes, bank);
+        let mut mem = MixedCellMemory::with_map(map, p.vref, p.ratio, seed);
+        mem.encode_enabled = p.encode;
+        mem.ecc_enabled = p.ecc && p.ratio > 0;
+        Ok(McaimemBackend { mem })
+    }
+}
+
+/// [`build`] with an explicit bank geometry — the conformance campaign's
+/// entry point for exercising compiler-generated organizations. Only the
+/// functional mixed-cell array is geometry-parameterized; the closed-form
+/// baselines have no banked state to re-shape.
+pub fn build_with_geometry(
+    spec: &BackendSpec,
+    bytes: usize,
+    bank: crate::mem::bank::BankGeometry,
+    seed: u64,
+) -> crate::Result<Box<dyn MemoryBackend>> {
+    match spec {
+        BackendSpec::Mcaimem { vref, encode, ecc } => {
+            anyhow::ensure!(
+                bank.row_bytes % 64 == 0,
+                "row width {} B is not whole 64-byte words",
+                bank.row_bytes
+            );
+            let map = crate::mem::bank::MemoryMap::with_geometry(bytes, bank);
+            let mut mem = MixedCellMemory::with_map(map, *vref, 7, seed);
+            mem.encode_enabled = *encode;
+            mem.ecc_enabled = *ecc;
+            Ok(Box::new(McaimemBackend { mem }))
+        }
+        other => anyhow::bail!("{} has no banked geometry to re-shape", other.label()),
+    }
 }
 
 impl MemoryBackend for McaimemBackend {
@@ -686,6 +744,36 @@ impl MemoryBackend for RramBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn compiled_macro_becomes_a_runnable_backend() {
+        use crate::dse::space::DesignPoint;
+        use crate::mem::compiler::compile;
+
+        // a non-default generated geometry: 512 × 128 B banks
+        let point =
+            DesignPoint { rows: 512, row_bytes: 128, ecc: true, ..DesignPoint::paper() };
+        let mspec = compile(&point, 64 * 1024).unwrap();
+        let mut b = McaimemBackend::from_macro(&mspec, 0xC0DE).unwrap();
+        assert_eq!(b.capacity(), 64 * 1024);
+        assert_eq!(b.mem.map.bank.rows, 512);
+        assert_eq!(b.rows_per_bank(), 512);
+        assert!(b.mem.ecc_enabled && b.mem.encode_enabled);
+        let data: Vec<u8> = (0..256).map(|i| i as u8).collect();
+        b.store(777, &data, 1e-9);
+        assert_eq!(b.load(777, data.len(), 2e-9), data);
+
+        // the compiler refuses to hand non-representable compositions to
+        // the functional array
+        let odd = compile(&DesignPoint { ratio: 5, ..DesignPoint::paper() }, 64 * 1024).unwrap();
+        assert!(McaimemBackend::from_macro(&odd, 1).is_err());
+
+        // geometry-parameterized build: only the mixed-cell array re-shapes
+        let bank = crate::mem::bank::BankGeometry::new(16 * 1024, 128);
+        let g = build_with_geometry(&BackendSpec::mcaimem_default(), 64 * 1024, bank, 7);
+        assert_eq!(g.unwrap().capacity(), 64 * 1024);
+        assert!(build_with_geometry(&BackendSpec::Sram, 64 * 1024, bank, 7).is_err());
+    }
 
     #[test]
     fn spec_roundtrip_canonical_forms() {

@@ -50,7 +50,13 @@ impl MemoryMap {
     /// how the Eyeriss (108 KB ⇒ 7 banks) and TPUv1 (8 MB ⇒ 512 banks)
     /// configurations are assembled.
     pub fn with_capacity(bytes: usize) -> Self {
-        let bank = BankGeometry::bank16k();
+        Self::with_geometry(bytes, BankGeometry::bank16k())
+    }
+
+    /// A buffer of arbitrary capacity built from `bank`-shaped banks
+    /// (rounded up) — how a compiler-generated macro's geometry becomes a
+    /// runnable memory map.
+    pub fn with_geometry(bytes: usize, bank: BankGeometry) -> Self {
         MemoryMap { bank, banks: bytes.div_ceil(bank.bytes) }
     }
 
@@ -100,6 +106,19 @@ mod tests {
         assert!(ey.capacity() >= 108 * 1024);
         let tpu = MemoryMap::with_capacity(8 * 1024 * 1024);
         assert_eq!(tpu.banks, 512);
+    }
+
+    #[test]
+    fn custom_geometry_maps_like_the_default_path() {
+        // with_capacity is with_geometry at the paper bank
+        let a = MemoryMap::with_capacity(108 * 1024);
+        let b = MemoryMap::with_geometry(108 * 1024, BankGeometry::bank16k());
+        assert_eq!((a.banks, a.bank), (b.banks, b.bank));
+        // a compiled 512×64 B bank: half the banks, same capacity
+        let tall = MemoryMap::with_geometry(1024 * 1024, BankGeometry::new(32 * 1024, 512));
+        assert_eq!(tall.banks, 32);
+        assert_eq!(tall.capacity(), 1024 * 1024);
+        assert_eq!(tall.total_rows(), MemoryMap::mb1().total_rows());
     }
 
     #[test]

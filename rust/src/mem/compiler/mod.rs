@@ -1,0 +1,619 @@
+//! The memory macro compiler: a [`DesignPoint`] compiles to a structural
+//! [`MacroSpec`] whose area/energy/timing are derived **bottom-up** from
+//! per-block component models, replacing the hand-calibrated periphery law
+//! of [`super::area`] with a generated netlist summary.
+//!
+//! ## What gets generated
+//!
+//! * **Bitcell array** — `banks × rows × row_bytes` tiled by the
+//!   [`sram_plane_mask`] striping law: one 6T SRAM cell per `(ratio + 1)`
+//!   cells anchored at the sign bit, the rest widened 2T eDRAM.
+//! * **Row stripe** — word-line drivers plus a row decoder sized from the
+//!   integer log₂ fanout (`ceil_log2(rows)` address bits); decoders deeper
+//!   than the reference bank pay an excess-levels term.
+//! * **Column stripe** — one CVSA sense amp and one write driver per
+//!   column, plus the column mux (sized from the column/IO-word fanout)
+//!   with its own excess-levels term.
+//! * **Conditional periphery** — the V_REF generator + refresh FSM and the
+//!   one-enhancement encoder/decoder exist only when the composition has
+//!   eDRAM cells (`ratio > 0`); the encoder block is emitted whenever the
+//!   reference machinery is (the `enc=off` ablation *bypasses* it, it does
+//!   not remove the silicon).
+//! * **ECC check plane** — SECDED check columns (one check byte per 8 data
+//!   bytes) when `ecc=on` and there are eDRAM bits to protect.
+//! * **Refresh domains** — one per bank (banks refresh one row each in
+//!   parallel) under the periodic policy; zero when refresh is gated or
+//!   the array is pure SRAM.
+//!
+//! ## The calibration contract
+//!
+//! At the reference bank ([`geometry::REF_ROWS`] × [`geometry::REF_COLS`],
+//! i.e. 256 rows × 64 bytes) the bottom-up composition reproduces the
+//! analytic cards **bit-exactly** — pinned by test at the paper point
+//! (N = 7). This is engineered, not approximated:
+//!
+//! * the array block uses the identical
+//!   [`AreaModel::array_area_mixed`] expression;
+//! * the stripe split always computes the *major* share (≥ ½) by
+//!   multiplication and the minor by subtraction, so by Sterbenz's lemma
+//!   the two stripes sum back to the periphery total exactly;
+//! * sub-splits within a stripe are dyadic (halves and quarters), and the
+//!   final fold re-associates in an order where every partial sum is
+//!   exact;
+//! * decoder/mux depth uses integer `ceil_log2` (never `f64::log2`, which
+//!   is not guaranteed correctly rounded), so the excess-levels terms are
+//!   exactly `0.0` at the reference depths (8 row bits, 9 column bits).
+//!
+//! Off the reference shape the compiled macro *diverges on purpose*: extra
+//! decoder/mux levels cost area ([`EXCESS_K`] per doubling beyond the
+//! reference depth) and deeper rows stretch the row cycle
+//! ([`T_RC_SLOPE`]) — structure the interpolated analytic law cannot see.
+//! That divergence is what `mcaimem explore --compiled` surfaces as a
+//! frontier diff. Both excess terms are second-order by construction
+//! (`EXCESS_K` is small enough that amortization still wins everywhere in
+//! the legal space at realistic aspect ratios), so compiled area stays
+//! monotone in rows, columns and eDRAM share — property-tested below.
+//!
+//! ## Serialization
+//!
+//! [`MacroSpec::to_json`] emits a deterministic netlist-summary artifact
+//! (version-tagged, keys sorted, floats in shortest-round-trip form);
+//! [`MacroSpec::from_json`] re-*compiles* from the header and bit-compares
+//! the derived totals, so a stale artifact from a different calibration is
+//! rejected instead of silently trusted, and re-serialization is
+//! byte-identical.
+
+use anyhow::{bail, ensure};
+
+use super::area::AreaModel;
+use super::energy::EnergyCard;
+use super::geometry::{self, PERIPHERY_FRAC, REF_COLS, REF_ROWS};
+use super::mcaimem::sram_plane_mask;
+use crate::dse::eval::T_RC;
+use crate::dse::space::{DesignPoint, RefreshPolicy};
+use crate::util::json::Json;
+use crate::Result;
+
+/// Netlist-summary artifact version (see [`MacroSpec::to_json`]).
+pub const MACRO_SPEC_VERSION: u64 = 1;
+
+/// Relative area cost of one extra decoder/mux level beyond the reference
+/// depth, charged against the stripe that owns the structure. Small enough
+/// that bank-growth amortization dominates across the legal design space
+/// (monotonicity is property-tested), large enough that off-reference
+/// geometries measurably diverge from the analytic interpolation.
+pub const EXCESS_K: f64 = 0.12;
+
+/// Row-cycle stretch per extra row-decoder level beyond the reference
+/// depth: deeper word-line fanout slows the activation edge.
+pub const T_RC_SLOPE: f64 = 0.15;
+
+/// Integer ceil(log₂ n): the address-bit / tree-depth count of an n-way
+/// structure. Exact by construction (unlike `f64::log2`, which libm does
+/// not guarantee correctly rounded even at powers of two).
+#[inline]
+pub fn ceil_log2(n: usize) -> u32 {
+    usize::BITS - (n.max(1) - 1).leading_zeros()
+}
+
+/// Split `total` into (major, minor) shares with `major_share ∈ [0.5, 1]`.
+/// The major part is computed by multiplication, the minor by subtraction:
+/// `major = fl(total·s)` lands in `[total/2, total]`, so by Sterbenz's
+/// lemma the subtraction is exact and `major + minor == total` bit-for-bit.
+#[inline]
+fn split(total: f64, major_share: f64) -> (f64, f64) {
+    debug_assert!((0.5..=1.0).contains(&major_share));
+    let major = total * major_share;
+    (major, total - major)
+}
+
+/// One generated periphery/array block of the macro.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Block {
+    pub name: &'static str,
+    /// Instance count (cells, drivers, decoders, …).
+    pub count: u64,
+    /// Total area of all instances (m²).
+    pub area_m2: f64,
+}
+
+/// The compiled structural macro: what the compiler generated, with its
+/// bottom-up derived area/timing totals. Energy attribution per block is
+/// presentation (see [`crate::report::macro_spec`]); the access/refresh
+/// energy *card* derives via [`EnergyCard::from_macro`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct MacroSpec {
+    /// The design point this macro realizes.
+    pub point: DesignPoint,
+    /// Requested capacity (bytes); the array rounds up to whole banks.
+    pub bytes: usize,
+    pub banks: usize,
+    pub rows: usize,
+    pub row_bytes: usize,
+    /// Bit columns per bank (`row_bytes × 8`).
+    pub cols: usize,
+    /// Cell counts over the rounded (whole-bank) capacity.
+    pub cells_total: u64,
+    pub cells_sram: u64,
+    pub cells_edram: u64,
+    /// The per-byte SRAM stripe mask, when the ratio tiles a byte
+    /// (N ∈ {0, 1, 3, 7}); non-tiling ratios stripe per-cell only.
+    pub sram_mask: Option<u8>,
+    /// Row-decoder address bits (`ceil_log2(rows)`).
+    pub row_decoder_bits: u32,
+    /// Column-mux select bits down to the 8-byte IO word.
+    pub col_mux_bits: u32,
+    /// One CVSA per column per bank.
+    pub sense_amps: u64,
+    /// One write driver per column per bank.
+    pub write_drivers: u64,
+    /// SECDED check-plane columns (0 when ECC is off or vacuous).
+    pub ecc_check_cols: u64,
+    /// Per-bank refresh domains under the periodic policy (0 otherwise).
+    pub refresh_domains: usize,
+    /// The whole-array refresh period the V_REF choice buys (s); `None`
+    /// for a pure-SRAM composition.
+    pub refresh_period_s: Option<f64>,
+    /// The generated block list, array first (presentation order).
+    pub blocks: Vec<Block>,
+    /// Bottom-up macro area (m²), shard periphery excluded (the evaluator
+    /// charges sharding on top, exactly like the analytic path).
+    pub area_m2: f64,
+    /// Row cycle time (s) after the decoder-depth stretch.
+    pub t_rc_s: f64,
+    /// Per-access dynamic-energy scale vs the reference bank
+    /// ([`geometry::access_scale`]).
+    pub dyn_scale: f64,
+}
+
+/// Compile `point` into a structural macro of `bytes` requested capacity.
+/// Rejects out-of-space points (the same bounds the DSE grammar enforces)
+/// and degenerate capacities.
+pub fn compile(point: &DesignPoint, bytes: usize) -> Result<MacroSpec> {
+    point.validate()?;
+    ensure!(bytes > 0, "cannot compile a zero-byte macro");
+    let rows = point.rows;
+    let row_bytes = point.row_bytes;
+    let cols = row_bytes * 8;
+    let bank_bytes = rows * row_bytes;
+    let banks = bytes.div_ceil(bank_bytes);
+    let ratio = point.ratio;
+
+    // -- bitcell array: the same per-bit composition the analytic model
+    // charges (identical expression ⇒ identical bits), tiled by the
+    // sram_plane_mask striping law
+    let model = AreaModel::lp45();
+    let array = model.array_area_mixed(bytes, ratio);
+    let cells_total = (banks * bank_bytes) as u64 * 8;
+    let cells_sram = cells_total.div_ceil(ratio as u64 + 1);
+    let cells_edram = cells_total - cells_sram;
+    let sram_mask = (ratio <= 7 && 8 % (ratio + 1) == 0).then(|| sram_plane_mask(ratio));
+
+    // -- periphery budget at this bank shape, split into the two stripes.
+    // The row stripe (WL drivers + row decoder) instantiates per row, so
+    // its per-bit weight is 1/cols; the column stripe (S/A, write drivers,
+    // mux) instantiates per column, weight 1/rows. Always split major-first
+    // so the stripes re-sum exactly (Sterbenz).
+    let periph0 = array * (PERIPHERY_FRAC * geometry::periphery_factor(rows, row_bytes));
+    let inv_rows = 1.0 / rows as f64; // column-stripe weight
+    let inv_cols = 1.0 / cols as f64; // row-stripe weight
+    let denom = inv_rows + inv_cols;
+    let col_share = inv_rows / denom;
+    let (col_stripe, row_stripe) = if col_share >= 0.5 {
+        split(periph0, col_share)
+    } else {
+        let (r, c) = split(periph0, inv_cols / denom);
+        (c, r)
+    };
+
+    // row stripe: ¾ word-line drivers, ¼ decoder tree (dyadic — exact)
+    let wl = row_stripe * 0.75;
+    let dec = row_stripe - wl;
+    // column stripe: ½ sense amps, then the rest halves into write
+    // drivers and the column mux (all dyadic — exact)
+    let sa = col_stripe * 0.5;
+    let rest = col_stripe - sa;
+    let wr = rest * 0.5;
+    let mux = rest - wr;
+
+    // excess tree levels beyond the reference depths (integer log₂, so
+    // exactly 0.0 at the 256-row / 512-column calibration bank)
+    let row_bits = ceil_log2(rows);
+    let col_bits = ceil_log2(cols);
+    let dec_excess =
+        row_stripe * (EXCESS_K * (row_bits as f64 / ceil_log2(REF_ROWS) as f64 - 1.0));
+    let mux_excess =
+        col_stripe * (EXCESS_K * (col_bits as f64 / ceil_log2(REF_COLS) as f64 - 1.0));
+
+    // -- conditional periphery: reference machinery exists iff there are
+    // eDRAM cells. ⅔ V_REF DAC + refresh FSM, the rest encoder/decoder
+    // (major-first again, so the pair re-sums exactly).
+    let extras = AreaModel::mixed_extras(ratio);
+    let (vref_fsm, encoder) = split(extras, 2.0 / 3.0);
+
+    // -- ECC check plane: vacuous without eDRAM bits (same gate as the
+    // evaluator and the backend factory)
+    let ecc_active = point.ecc && ratio > 0;
+    let ecc_area = if ecc_active { model.ecc_overhead(bytes) } else { 0.0 };
+    let ecc_check_cols = if ecc_active { (banks * cols) as u64 / 8 } else { 0 };
+
+    // -- bottom-up total. The fold order is chosen so every partial sum is
+    // exact where the analytic law has no corresponding rounding step:
+    // each stripe re-sums to its split total, the stripes re-sum to
+    // periph0, and the excess terms add exact zeros at the reference bank
+    // — reproducing fl(fl(array + periph) + extras) + ecc bit-for-bit.
+    let row_total = wl + dec;
+    let col_total = sa + (wr + mux);
+    let periph_total = (row_total + col_total) + dec_excess + mux_excess;
+    let area_m2 = ((array + periph_total) + (vref_fsm + encoder)) + ecc_area;
+
+    // -- timing: deeper row decoders stretch the activation edge
+    let t_rc_s =
+        T_RC * (1.0 + T_RC_SLOPE * (row_bits as f64 / ceil_log2(REF_ROWS) as f64 - 1.0));
+
+    // -- refresh organization rides the energy card's V_REF law
+    let card = EnergyCard::mcaimem_ratio(point.vref, ratio);
+    let refreshed = point.refresh == RefreshPolicy::Periodic && card.refresh_period.is_some();
+
+    let mut blocks = vec![
+        Block { name: "bitcell_array", count: cells_total, area_m2: array },
+        Block { name: "wordline_drivers", count: (banks * rows) as u64, area_m2: wl },
+        Block { name: "row_decoder", count: banks as u64, area_m2: dec + dec_excess },
+        Block { name: "sense_amps", count: (banks * cols) as u64, area_m2: sa },
+        Block { name: "write_drivers", count: (banks * cols) as u64, area_m2: wr },
+        Block { name: "column_mux", count: banks as u64, area_m2: mux + mux_excess },
+    ];
+    if ratio > 0 {
+        blocks.push(Block { name: "vref_refresh_fsm", count: 1, area_m2: vref_fsm });
+        blocks.push(Block { name: "one_enh_encoder", count: 1, area_m2: encoder });
+    }
+    if ecc_active {
+        blocks.push(Block { name: "ecc_check_plane", count: ecc_check_cols, area_m2: ecc_area });
+    }
+
+    Ok(MacroSpec {
+        point: point.clone(),
+        bytes,
+        banks,
+        rows,
+        row_bytes,
+        cols,
+        cells_total,
+        cells_sram,
+        cells_edram,
+        sram_mask,
+        row_decoder_bits: row_bits,
+        col_mux_bits: ceil_log2(row_bytes.div_ceil(8)),
+        sense_amps: (banks * cols) as u64,
+        write_drivers: (banks * cols) as u64,
+        ecc_check_cols,
+        refresh_domains: if refreshed { banks } else { 0 },
+        refresh_period_s: card.refresh_period,
+        blocks,
+        area_m2,
+        t_rc_s,
+        dyn_scale: geometry::access_scale(rows, row_bytes),
+    })
+}
+
+impl MacroSpec {
+    /// The deterministic netlist-summary artifact: version-tagged, keys
+    /// sorted (the JSON layer stores objects in a BTreeMap), floats in
+    /// shortest-round-trip form — same point + bytes ⇒ byte-identical
+    /// file, and re-serializing a parsed artifact is byte-identical too.
+    pub fn to_json(&self) -> Json {
+        let blocks: Vec<Json> = self
+            .blocks
+            .iter()
+            .map(|b| {
+                Json::obj(vec![
+                    ("name", Json::Str(b.name.into())),
+                    ("count", Json::Num(b.count as f64)),
+                    ("area_m2", Json::Num(b.area_m2)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("version", Json::Num(MACRO_SPEC_VERSION as f64)),
+            ("point", Json::Str(self.point.to_string())),
+            ("bytes", Json::Num(self.bytes as f64)),
+            ("banks", Json::Num(self.banks as f64)),
+            ("rows", Json::Num(self.rows as f64)),
+            ("row_bytes", Json::Num(self.row_bytes as f64)),
+            ("cols", Json::Num(self.cols as f64)),
+            ("cells_total", Json::Num(self.cells_total as f64)),
+            ("cells_sram", Json::Num(self.cells_sram as f64)),
+            ("cells_edram", Json::Num(self.cells_edram as f64)),
+            (
+                "sram_mask",
+                match self.sram_mask {
+                    Some(m) => Json::Num(m as f64),
+                    None => Json::Null,
+                },
+            ),
+            ("row_decoder_bits", Json::Num(self.row_decoder_bits as f64)),
+            ("col_mux_bits", Json::Num(self.col_mux_bits as f64)),
+            ("sense_amps", Json::Num(self.sense_amps as f64)),
+            ("write_drivers", Json::Num(self.write_drivers as f64)),
+            ("ecc_check_cols", Json::Num(self.ecc_check_cols as f64)),
+            ("refresh_domains", Json::Num(self.refresh_domains as f64)),
+            (
+                "refresh_period_s",
+                match self.refresh_period_s {
+                    Some(t) => Json::Num(t),
+                    None => Json::Null,
+                },
+            ),
+            ("blocks", Json::Arr(blocks)),
+            ("area_m2", Json::Num(self.area_m2)),
+            ("t_rc_s", Json::Num(self.t_rc_s)),
+            ("dyn_scale", Json::Num(self.dyn_scale)),
+        ])
+    }
+
+    /// Parse an artifact by **re-compiling** its header (point + bytes)
+    /// and bit-comparing the derived totals against the stored ones: an
+    /// artifact produced under a different component-model calibration is
+    /// rejected, never silently trusted. The round trip is therefore
+    /// byte-identical by construction.
+    pub fn from_json(j: &Json) -> Result<MacroSpec> {
+        let version = j.get("version")?.as_f64().unwrap_or(0.0) as u64;
+        if version != MACRO_SPEC_VERSION {
+            bail!("macro spec version {version} (this build compiles version {MACRO_SPEC_VERSION})");
+        }
+        let point: DesignPoint = j.get("point")?.as_str().unwrap_or("").parse()?;
+        let bytes = j
+            .get("bytes")?
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("macro spec `bytes` is not an integer"))?;
+        let spec = compile(&point, bytes)?;
+        for (name, stored, derived) in [
+            ("area_m2", j.get("area_m2")?.as_f64(), spec.area_m2),
+            ("t_rc_s", j.get("t_rc_s")?.as_f64(), spec.t_rc_s),
+        ] {
+            match stored {
+                Some(v) if v.to_bits() == derived.to_bits() => {}
+                _ => bail!(
+                    "macro spec `{name}` {stored:?} does not match the recompiled value \
+                     {derived} — artifact from a different component-model calibration"
+                ),
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Write the artifact, creating missing parent directories.
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        crate::util::json::save_pretty(path, &self.to_json())
+    }
+
+    /// eDRAM share of the cell population (0.0 for pure SRAM).
+    pub fn edram_frac(&self) -> f64 {
+        self.cells_edram as f64 / self.cells_total.max(1) as f64
+    }
+}
+
+impl EnergyCard {
+    /// The Table II energy card of a compiled macro. The card composes the
+    /// same per-plane component models the compiler's blocks are built
+    /// from (SRAM plane at density `1/(N+1)`, widened-2T planes at the
+    /// compiled V_REF), so this is exactly the ratio-parameterized
+    /// composition law — bit-identical to the analytic card by the
+    /// calibration contract.
+    pub fn from_macro(spec: &MacroSpec) -> EnergyCard {
+        EnergyCard::mcaimem_ratio(spec.point.vref, spec.point.ratio)
+    }
+}
+
+impl AreaModel {
+    /// The component-model basis a compiled macro is characterized on
+    /// (lp45 — the node every per-block model in this repo is drawn at).
+    /// The spec's own `area_m2` is the bottom-up total; this model is for
+    /// cross-checking individual blocks against the analytic expressions.
+    pub fn from_macro(_spec: &MacroSpec) -> AreaModel {
+        AreaModel::lp45()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::space::Space;
+    use crate::mem::MemKind;
+    use crate::util::units::MIB;
+
+    fn paper_at(rows: usize, row_bytes: usize) -> DesignPoint {
+        DesignPoint { rows, row_bytes, ..DesignPoint::paper() }
+    }
+
+    #[test]
+    fn calibration_point_reproduces_the_analytic_cards_bit_exactly() {
+        // the contract the whole subsystem hangs on: at N=7, 256×512 the
+        // bottom-up composition is the analytic model, to the last bit
+        let model = AreaModel::lp45();
+        for bytes in [16 * 1024, 108 * 1024, MIB] {
+            let spec = compile(&DesignPoint::paper(), bytes).unwrap();
+            let analytic = model.macro_area_banked(bytes, 7, 256, 64) + 0.0;
+            assert_eq!(spec.area_m2.to_bits(), analytic.to_bits(), "bytes={bytes}");
+            assert_eq!(spec.t_rc_s.to_bits(), T_RC.to_bits());
+            assert_eq!(spec.dyn_scale.to_bits(), 1.0f64.to_bits());
+
+            // the derived energy card is the analytic card, field by field
+            // (EnergyCard has no PartialEq; Asym does)
+            let card = EnergyCard::from_macro(&spec);
+            let legacy = EnergyCard::mcaimem_ratio(0.8, 7);
+            assert_eq!(card.static_w_per_mb, legacy.static_w_per_mb);
+            assert_eq!(card.read_j_per_byte, legacy.read_j_per_byte);
+            assert_eq!(card.write_j_per_byte, legacy.write_j_per_byte);
+            assert_eq!(card.refresh_period, legacy.refresh_period);
+            assert_eq!(card.edram_frac, legacy.edram_frac);
+
+            // and the Table I 48 % headline falls out of the compiled total
+            let sram = model.macro_area(MemKind::Sram6t, bytes);
+            let red = 1.0 - spec.area_m2 / sram;
+            assert!((red - 0.48).abs() < 0.005, "reduction={red} at {bytes}B");
+        }
+        // same contract with the ECC plane on top
+        let ecc = DesignPoint { ecc: true, ..DesignPoint::paper() };
+        let spec = compile(&ecc, MIB).unwrap();
+        let analytic = model.macro_area_banked(MIB, 7, 256, 64) + model.ecc_overhead(MIB);
+        assert_eq!(spec.area_m2.to_bits(), analytic.to_bits());
+        assert_eq!(spec.ecc_check_cols, (spec.banks * spec.cols) as u64 / 8);
+    }
+
+    #[test]
+    fn structure_matches_the_striping_and_fanout_laws() {
+        let spec = compile(&DesignPoint::paper(), MIB).unwrap();
+        assert_eq!(spec.banks, 64);
+        assert_eq!((spec.rows, spec.row_bytes, spec.cols), (256, 64, 512));
+        assert_eq!(spec.cells_total, 64 * 16 * 1024 * 8);
+        assert_eq!(spec.cells_sram, spec.cells_total / 8, "1 SRAM cell per byte at N=7");
+        assert_eq!(spec.sram_mask, Some(0x80), "the sign plane");
+        assert_eq!(spec.row_decoder_bits, 8);
+        assert_eq!(spec.sense_amps, (64 * 512) as u64);
+        assert_eq!(spec.write_drivers, spec.sense_amps);
+        assert_eq!(spec.refresh_domains, 64, "one per bank under periodic refresh");
+        assert!(spec.refresh_period_s.is_some());
+        // non-tiling ratios stripe per-cell, no per-byte mask
+        let spec5 = compile(&DesignPoint { ratio: 5, ..DesignPoint::paper() }, MIB).unwrap();
+        assert_eq!(spec5.sram_mask, None);
+        // pure SRAM: no reference machinery, no refresh, no eDRAM cells
+        let spec0 = compile(&DesignPoint { ratio: 0, ..DesignPoint::paper() }, MIB).unwrap();
+        assert_eq!(spec0.cells_edram, 0);
+        assert_eq!(spec0.refresh_domains, 0);
+        assert_eq!(spec0.refresh_period_s, None);
+        assert!(spec0.blocks.iter().all(|b| b.name != "vref_refresh_fsm"));
+    }
+
+    #[test]
+    fn every_point_of_the_default_grid_compiles() {
+        let space = Space::parse(Space::DEFAULT).unwrap();
+        let points = space.expand().unwrap();
+        assert_eq!(points.len(), 420, "the default grid the issue pins");
+        for p in &points {
+            let spec = compile(p, MIB).unwrap_or_else(|e| panic!("{p}: {e}"));
+            assert!(spec.area_m2.is_finite() && spec.area_m2 > 0.0, "{p}");
+            assert!(spec.t_rc_s >= T_RC, "{p}");
+            assert_eq!(spec.cells_sram + spec.cells_edram, spec.cells_total, "{p}");
+        }
+    }
+
+    #[test]
+    fn compiled_area_is_monotone_in_rows_cols_and_edram_share() {
+        // area falls as banks grow (periphery amortizes faster than the
+        // excess decoder levels accrue) and as the eDRAM share rises
+        let mut last = f64::INFINITY;
+        for rows in [64, 128, 256, 512, 1024, 2048] {
+            let a = compile(&paper_at(rows, 64), MIB).unwrap().area_m2;
+            assert!(a < last, "area must fall with rows: {rows}");
+            last = a;
+        }
+        let mut last = f64::INFINITY;
+        for row_bytes in [16, 32, 64, 128, 256] {
+            let a = compile(&paper_at(256, row_bytes), MIB).unwrap().area_m2;
+            assert!(a < last, "area must fall with cols: {row_bytes}");
+            last = a;
+        }
+        let mut last = f64::INFINITY;
+        for ratio in 0..=15u32 {
+            let a = compile(&DesignPoint { ratio, ..DesignPoint::paper() }, MIB).unwrap().area_m2;
+            assert!(a < last, "area must fall with eDRAM share: {ratio}");
+            last = a;
+        }
+    }
+
+    #[test]
+    fn compiled_access_energy_is_monotone_in_rows_cols_and_edram_share() {
+        // longer lines cost access energy; more eDRAM cells cost less
+        let e = |p: &DesignPoint| {
+            let spec = compile(p, MIB).unwrap();
+            spec.dyn_scale * EnergyCard::from_macro(&spec).read_energy(1024, 0.5)
+        };
+        let mut last = 0.0;
+        for rows in [64, 128, 256, 512, 1024, 2048] {
+            let v = e(&paper_at(rows, 64));
+            assert!(v > last, "access energy must rise with rows: {rows}");
+            last = v;
+        }
+        let mut last = 0.0;
+        for row_bytes in [16, 32, 64, 128, 256] {
+            let v = e(&paper_at(256, row_bytes));
+            assert!(v > last, "access energy must rise with cols: {row_bytes}");
+            last = v;
+        }
+        let mut last = f64::INFINITY;
+        for ratio in 0..=15u32 {
+            let v = e(&DesignPoint { ratio, ..DesignPoint::paper() });
+            assert!(v < last, "access energy must fall with eDRAM share: {ratio}");
+            last = v;
+        }
+    }
+
+    #[test]
+    fn off_reference_geometries_diverge_from_the_analytic_law() {
+        // the divergence --compiled frontier diffs surface: at 512×64 the
+        // 9th decoder level costs area and stretches t_rc — structure the
+        // interpolated analytic law cannot see
+        let model = AreaModel::lp45();
+        let spec = compile(&paper_at(512, 64), MIB).unwrap();
+        let analytic = model.macro_area_banked(MIB, 7, 512, 64);
+        assert!(spec.area_m2 > analytic, "{} vs {analytic}", spec.area_m2);
+        assert!(spec.t_rc_s > T_RC);
+        // but still below the reference bank's area: amortization dominates
+        assert!(spec.area_m2 < compile(&DesignPoint::paper(), MIB).unwrap().area_m2);
+    }
+
+    #[test]
+    fn blocks_account_for_the_whole_macro() {
+        // the block list is the area: its sum re-folds to the total within
+        // float re-association slack
+        for p in [
+            DesignPoint::paper(),
+            paper_at(512, 128),
+            DesignPoint { ratio: 0, ..DesignPoint::paper() },
+            DesignPoint { ecc: true, ..DesignPoint::paper() },
+        ] {
+            let spec = compile(&p, MIB).unwrap();
+            let sum: f64 = spec.blocks.iter().map(|b| b.area_m2).sum();
+            assert!(
+                (sum / spec.area_m2 - 1.0).abs() < 1e-12,
+                "{p}: blocks {sum} vs total {}",
+                spec.area_m2
+            );
+        }
+    }
+
+    #[test]
+    fn json_artifact_roundtrips_byte_identically() {
+        let spec = compile(&DesignPoint::paper(), MIB).unwrap();
+        let first = spec.to_json().to_pretty();
+        let back = MacroSpec::from_json(&Json::parse(&first).unwrap()).unwrap();
+        assert_eq!(back, spec);
+        assert_eq!(back.to_json().to_pretty(), first, "byte-identical re-serialization");
+
+        // determinism across independent compiles
+        let again = compile(&DesignPoint::paper(), MIB).unwrap().to_json().to_pretty();
+        assert_eq!(again, first);
+
+        // a tampered total is a calibration mismatch, not a trusted value
+        let mut j = Json::parse(&first).unwrap();
+        if let Json::Obj(o) = &mut j {
+            o.insert("area_m2".into(), Json::Num(1.0));
+        }
+        let err = MacroSpec::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("calibration"), "{err}");
+        // and a future version is rejected outright
+        let mut j = Json::parse(&first).unwrap();
+        if let Json::Obj(o) = &mut j {
+            o.insert("version".into(), Json::Num(99.0));
+        }
+        assert!(MacroSpec::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn compiler_rejects_out_of_space_points() {
+        assert!(compile(&DesignPoint { ratio: 99, ..DesignPoint::paper() }, MIB).is_err());
+        assert!(compile(&DesignPoint { rows: 5, ..DesignPoint::paper() }, MIB).is_err());
+        assert!(compile(&DesignPoint::paper(), 0).is_err());
+    }
+}

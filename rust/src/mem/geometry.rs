@@ -1,0 +1,79 @@
+//! The single source of truth for the bank-shape calibration point.
+//!
+//! Every geometry-aware model in the repo — the analytic periphery law in
+//! [`super::area`], the access-energy line-length scaling in
+//! [`crate::dse::eval`], and the bottom-up macro compiler in
+//! [`super::compiler`] — is calibrated at the paper's reference bank:
+//! 256 rows × 64 bytes (= 512 bit columns), the 16 KB bank of Fig. 13.
+//! Before this module the constants were duplicated per consumer; now the
+//! reference shape, the periphery normalization and the access scale live
+//! here and everyone derives from the same three numbers.
+
+/// Fraction of a memory macro spent on peripheral circuitry (row/col
+/// decoders, S/A stripe, write drivers, timing) at the paper's reference
+/// bank geometry. Representative of compiled SRAM macros at this capacity.
+pub const PERIPHERY_FRAC: f64 = 0.25;
+
+/// Reference bank geometry the periphery fraction is calibrated at: the
+/// paper's 16 KB bank, 256 rows × 64 bytes (= 512 bit columns).
+pub const REF_ROWS: usize = 256;
+pub const REF_COLS: usize = 512;
+
+/// Relative periphery cost of a `rows` × `row_bytes` bank vs the reference
+/// shape: periphery splits into row circuitry (word-line drivers + row
+/// decoder, amortized over columns) and column circuitry (S/A stripe,
+/// write drivers, column mux, amortized over rows), so the per-bit
+/// overhead goes as `1/cols + 1/rows`, normalized to 1.0 at the
+/// [`REF_ROWS`] × [`REF_COLS`] reference. Multiply by [`PERIPHERY_FRAC`]
+/// for the periphery-to-array area ratio.
+pub fn periphery_factor(rows: usize, row_bytes: usize) -> f64 {
+    let cols = (row_bytes * 8) as f64;
+    (1.0 / cols + 1.0 / rows as f64) / (1.0 / REF_COLS as f64 + 1.0 / REF_ROWS as f64)
+}
+
+/// Relative per-access dynamic energy of a `rows` × `row_bytes` bank vs
+/// the reference shape: word- and bit-lines lengthen linearly with the
+/// bank's sides, so access energy scales with the mean of the two
+/// normalized dimensions — 1.0 at the reference bank. Bigger banks
+/// amortize periphery silicon ([`periphery_factor`]) but pay per access;
+/// that opposition is the real compiler trade.
+pub fn access_scale(rows: usize, row_bytes: usize) -> f64 {
+    0.5 * (rows as f64 / REF_ROWS as f64 + (row_bytes * 8) as f64 / REF_COLS as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn both_factors_are_unity_at_the_reference_bank() {
+        // the calibration contract: at 256 × 64 B the geometry laws are
+        // exactly neutral, bit-for-bit (0.5 * (1.0 + 1.0) and x/x are
+        // exact in f64 for these dyadic values)
+        assert_eq!(periphery_factor(REF_ROWS, 64).to_bits(), 1.0f64.to_bits());
+        assert_eq!(access_scale(REF_ROWS, 64).to_bits(), 1.0f64.to_bits());
+    }
+
+    #[test]
+    fn periphery_amortizes_where_access_pays() {
+        // the two laws pull opposite ways: growing either dimension
+        // amortizes periphery silicon but lengthens the access lines
+        for (rows, row_bytes) in [(512, 64), (256, 128), (512, 128), (1024, 256)] {
+            assert!(periphery_factor(rows, row_bytes) < 1.0, "{rows}x{row_bytes}");
+            assert!(access_scale(rows, row_bytes) > 1.0, "{rows}x{row_bytes}");
+        }
+        for (rows, row_bytes) in [(128, 64), (256, 32), (128, 32)] {
+            assert!(periphery_factor(rows, row_bytes) > 1.0, "{rows}x{row_bytes}");
+            assert!(access_scale(rows, row_bytes) < 1.0, "{rows}x{row_bytes}");
+        }
+    }
+
+    #[test]
+    fn periphery_factor_is_symmetric_in_rows_and_columns() {
+        // 512 rows × 32 B (256 cols) swaps the two terms of the reference
+        // 256 × 512: identical per-bit overhead
+        let a = periphery_factor(512, 32);
+        let b = periphery_factor(256, 64);
+        assert!((a / b - 1.0).abs() < 1e-12, "{a} vs {b}");
+    }
+}

@@ -196,14 +196,28 @@ impl MixedCellMemory {
     /// behaves as SRAM on identical plumbing (no eDRAM planes, no flips,
     /// no refresh).
     pub fn with_geometry(bytes: usize, vref: f64, ratio: u32, seed: u64) -> Self {
+        Self::with_map(MemoryMap::with_capacity(bytes), vref, ratio, seed)
+    }
+
+    /// A mixed array over an explicit bank organization — how a compiled
+    /// [`crate::mem::compiler::MacroSpec`]'s geometry becomes a runnable
+    /// array. The per-cell leakage population depends only on (capacity,
+    /// seed), so re-banking the same capacity keeps the same cells in the
+    /// same address order (the map changes *where* a row boundary falls,
+    /// not *who* leaks).
+    pub fn with_map(map: MemoryMap, vref: f64, ratio: u32, seed: u64) -> Self {
         assert!(
             ratio <= 7 && 8 % (ratio + 1) == 0,
             "functional array supports byte-tiling ratios 0/1/3/7, got 1S·{ratio}E \
              (use dse::eval for the analytic full range)"
         );
+        assert!(
+            map.bank.row_bytes % 64 == 0,
+            "row width must be whole 64-byte words (word-parallel row scan), got {} B",
+            map.bank.row_bytes
+        );
         let edram_mask = !sram_plane_mask(ratio);
         let n_edram = edram_mask.count_ones() as usize;
-        let map = MemoryMap::with_capacity(bytes);
         let cap = map.capacity();
         let words = cap.div_ceil(64);
         let mut rng = Pcg64::new(seed);
@@ -634,6 +648,35 @@ mod tests {
 
     fn fresh(bytes: usize) -> MixedCellMemory {
         MixedCellMemory::new(bytes, 0xBEEF)
+    }
+
+    #[test]
+    fn rebanked_geometry_keeps_the_same_cell_population() {
+        // with_map is the compiled-macro entry point: same capacity + seed
+        // ⇒ the identical per-cell leakage draw, so re-banking only moves
+        // row boundaries. An op sequence that ages the whole array equally
+        // must flip the exact same cells under either organization.
+        use crate::mem::bank::{BankGeometry, MemoryMap};
+        let bytes = 32 * 1024;
+        let run = |map: MemoryMap| {
+            let mut m = MixedCellMemory::with_map(map, 0.8, 7, 0xBEEF);
+            assert_eq!(m.capacity(), bytes);
+            let data: Vec<u8> = (0..bytes).map(|i| (i * 31) as u8).collect();
+            m.write(0, &data, 1e-9);
+            // one whole retention window with no refresh, then read it all
+            m.read(0, bytes, 40e-6)
+        };
+        let flat = run(MemoryMap::with_capacity(bytes));
+        let tall = run(MemoryMap::with_geometry(bytes, BankGeometry::new(bytes / 2, 128)));
+        assert_eq!(flat, tall, "aging must be a cell property, not a banking property");
+    }
+
+    #[test]
+    #[should_panic(expected = "64-byte words")]
+    fn sub_word_rows_are_rejected() {
+        use crate::mem::bank::{BankGeometry, MemoryMap};
+        let g = BankGeometry { bytes: 1024, rows: 32, row_bytes: 32 };
+        MixedCellMemory::with_map(MemoryMap::with_geometry(4096, g), 0.8, 7, 1);
     }
 
     #[test]

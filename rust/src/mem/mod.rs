@@ -27,6 +27,14 @@
 //! * [`bank`] — 16 KB bank geometry; 1 MB = 64 banks (Fig. 13 caption).
 //! * [`bitplane`] — SWAR 8×64 bit-matrix transpose powering the
 //!   word-parallel access path of [`mcaimem`].
+//! * [`compiler`] — the macro compiler: a [`crate::dse::DesignPoint`]
+//!   compiles to a structural [`compiler::MacroSpec`] (tiled bitcell array,
+//!   sized decoders, S/A stripe, conditional V_REF/encoder/ECC periphery,
+//!   refresh domains) whose area/energy/timing are derived bottom-up from
+//!   per-block component models — bit-identical to the analytic cards at
+//!   the calibration bank.
+//! * [`geometry`] — the single source of truth for the 256 × 512 bank-shape
+//!   calibration point (periphery and access-energy scaling laws).
 //! * [`ecc`] — the SECDED check-byte plane specification shared by the
 //!   functional array and the golden oracle (`mcaimem@V+ecc` specs).
 //! * [`refresh`] — the global periodic row-refresh controller (§III-C).
@@ -46,8 +54,10 @@ pub mod area;
 pub mod backend;
 pub mod bank;
 pub mod bitplane;
+pub mod compiler;
 pub mod ecc;
 pub mod energy;
+pub mod geometry;
 pub mod mcaimem;
 pub mod refresh;
 pub mod rram;

@@ -134,7 +134,7 @@ pub fn save_failures(outcomes: &[SpecOutcome], dir: &Path) -> Result<Vec<PathBuf
             let name = format!(
                 "conformance_failure_{}_{}_{}.json",
                 o.spec.to_string().replace(['@', '.'], "_"),
-                o.geometry().replace('×', "x"),
+                o.geometry().replace('×', "x").replace(' ', "-"),
                 f.stage
             );
             let path = dir.join(name);
@@ -162,7 +162,12 @@ mod tests {
         let specs = [BackendSpec::Sram, BackendSpec::mcaimem_default()];
         let (table, outcomes, ok) = conformance(&specs, &cfg).unwrap();
         assert!(ok, "{outcomes:?}");
-        assert_eq!(outcomes.len(), 4, "flat + sharded per spec");
+        assert_eq!(
+            outcomes.len(),
+            5,
+            "flat + sharded per spec, plus one compiled-geometry pass for the MCAIMem spec"
+        );
+        assert_eq!(outcomes.iter().filter(|o| o.geom.is_some()).count(), 1);
         let rendered = table.render();
         assert!(rendered.contains("exact"), "{rendered}");
         assert!(!rendered.contains("DIVERGED"), "{rendered}");

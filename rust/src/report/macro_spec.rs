@@ -1,0 +1,146 @@
+//! Render a compiled [`MacroSpec`] as block-level area/energy breakdown
+//! tables — the human-readable face of `mcaimem compile --table`.
+//!
+//! Two tables:
+//!
+//! 1. **Structure** — what the compiler generated: bank organization,
+//!    cell population and striping mask, decoder/mux fanout, refresh
+//!    domains, row cycle and the derived totals.
+//! 2. **Blocks** — every generated block with its instance count, area,
+//!    share of the macro, and the energy rail it carries (static leakage
+//!    on the array, per-byte access energy on the S/A and write-driver
+//!    stripes, refresh power on the V_REF/FSM block, scrub energy on the
+//!    ECC plane). Energy attribution is presentation: it reads the same
+//!    [`EnergyCard`] the evaluator charges, it does not re-model it.
+
+use crate::mem::compiler::MacroSpec;
+use crate::mem::energy::EnergyCard;
+use crate::util::table::{fnum, Table};
+use crate::util::units::{si, to_um2};
+
+/// Typical DNN-buffer ones-fraction used for the representative energy
+/// column (the evaluator uses the workload's measured fractions; a static
+/// table needs one number).
+const ONES_FRAC: f64 = 0.5;
+
+/// The block-level breakdown of one compiled macro.
+pub fn breakdown(spec: &MacroSpec) -> Vec<Table> {
+    let card = EnergyCard::from_macro(spec);
+
+    let mut s = Table::new(
+        &format!("Compiled macro — {} ({} B requested)", spec.point, spec.bytes),
+        &["property", "value"],
+    );
+    s.row(vec![
+        "organization".into(),
+        format!("{} banks x {} rows x {} B ({} bit cols)", spec.banks, spec.rows, spec.row_bytes, spec.cols),
+    ]);
+    s.row(vec![
+        "cells (SRAM / eDRAM)".into(),
+        format!(
+            "{} / {} of {} ({} eDRAM)",
+            spec.cells_sram,
+            spec.cells_edram,
+            spec.cells_total,
+            fnum(100.0 * spec.edram_frac(), 1) + " %"
+        ),
+    ]);
+    s.row(vec![
+        "SRAM stripe mask".into(),
+        match spec.sram_mask {
+            Some(m) => format!("{m:#04x} per byte"),
+            None => "per-cell striping (non-tiling ratio)".into(),
+        },
+    ]);
+    s.row(vec![
+        "row decoder / column mux".into(),
+        format!("{} address bits / {} select bits", spec.row_decoder_bits, spec.col_mux_bits),
+    ]);
+    s.row(vec![
+        "refresh".into(),
+        match spec.refresh_period_s {
+            Some(t) if spec.refresh_domains > 0 => {
+                format!("{} domains @ {}", spec.refresh_domains, si(t, "s"))
+            }
+            Some(t) => format!("gated (retention window {})", si(t, "s")),
+            None => "none (pure SRAM)".into(),
+        },
+    ]);
+    s.row(vec!["row cycle t_rc".into(), si(spec.t_rc_s, "s")]);
+    s.row(vec!["access-energy scale".into(), fnum(spec.dyn_scale, 3)]);
+    s.row(vec!["macro area".into(), format!("{} mm²", fnum(spec.area_m2 * 1e6, 4))]);
+
+    let mut b = Table::new(
+        "Block breakdown (bottom-up)",
+        &["block", "count", "area (µm²)", "share", "energy rail"],
+    );
+    for blk in &spec.blocks {
+        let rail = match blk.name {
+            "bitcell_array" => {
+                format!("static {} @ {:.0}% ones", si(card.static_power(spec.bytes, ONES_FRAC), "W"), ONES_FRAC * 100.0)
+            }
+            "sense_amps" => {
+                format!("read {} / B", si(spec.dyn_scale * card.read_energy(1, ONES_FRAC), "J"))
+            }
+            "write_drivers" => {
+                format!("write {} / B", si(spec.dyn_scale * card.write_energy(1, ONES_FRAC), "J"))
+            }
+            "vref_refresh_fsm" => match spec.refresh_period_s {
+                Some(_) if spec.refresh_domains > 0 => {
+                    format!("refresh {}", si(card.refresh_power(spec.bytes, ONES_FRAC), "W"))
+                }
+                _ => "refresh gated".into(),
+            },
+            "ecc_check_plane" => {
+                format!("scrub {} / pass", si(card.ecc_scrub_energy(spec.bytes), "J"))
+            }
+            _ => "—".into(),
+        };
+        b.row(vec![
+            blk.name.into(),
+            blk.count.to_string(),
+            fnum(to_um2(blk.area_m2), 1),
+            fnum(100.0 * blk.area_m2 / spec.area_m2, 2) + " %",
+            rail,
+        ]);
+    }
+    vec![s, b]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::space::DesignPoint;
+    use crate::mem::compiler::compile;
+    use crate::util::units::MIB;
+
+    #[test]
+    fn breakdown_renders_every_block_and_the_shares_close() {
+        let spec = compile(&DesignPoint::paper(), MIB).unwrap();
+        let tables = breakdown(&spec);
+        assert_eq!(tables.len(), 2);
+        let blocks = &tables[1];
+        assert_eq!(blocks.rows.len(), spec.blocks.len());
+        let text = blocks.render();
+        for name in ["bitcell_array", "sense_amps", "vref_refresh_fsm", "one_enh_encoder"] {
+            assert!(text.contains(name), "missing {name} in:\n{text}");
+        }
+        // shares re-sum to the whole macro
+        let total: f64 = spec.blocks.iter().map(|b| 100.0 * b.area_m2 / spec.area_m2).sum();
+        assert!((total - 100.0).abs() < 1e-9, "{total}");
+        // the structure table names the striping mask and the refresh plan
+        let s = tables[0].render();
+        assert!(s.contains("0x80"), "{s}");
+        assert!(s.contains("64 domains"), "{s}");
+    }
+
+    #[test]
+    fn pure_sram_macro_reads_as_such() {
+        let spec = compile(&DesignPoint { ratio: 0, ..DesignPoint::paper() }, MIB).unwrap();
+        let tables = breakdown(&spec);
+        let s = tables[0].render();
+        assert!(s.contains("none (pure SRAM)"), "{s}");
+        let b = tables[1].render();
+        assert!(!b.contains("vref_refresh_fsm"), "{b}");
+    }
+}

@@ -9,6 +9,7 @@ pub mod chaos;
 pub mod circuit_reports;
 pub mod conformance;
 pub mod fig11;
+pub mod macro_spec;
 pub mod pareto;
 pub mod serving;
 pub mod system_reports;

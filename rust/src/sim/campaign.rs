@@ -27,6 +27,7 @@ use anyhow::Result;
 
 use crate::faults::{FaultPlan, FaultyBackend};
 use crate::mem::backend::{self, BackendSpec, MemoryBackend};
+use crate::mem::bank::BankGeometry;
 use crate::mem::sharded::ShardedBackend;
 use crate::sim::oracle::OracleBackend;
 use crate::sim::replay::{replay, ReplayReport};
@@ -74,6 +75,23 @@ impl CampaignConfig {
     }
 }
 
+/// The compiler-legal non-default bank shapes the campaign samples from:
+/// every `ROWSxROW_BYTES` pair the macro compiler's DEFAULT space can emit
+/// (geom `128..512` rows × whole-64-byte-word rows) minus the default
+/// 256×64 the flat run already covers. One is drawn per MCAIMem spec,
+/// deterministically from the campaign seed, so generated geometries get
+/// randomized differential coverage without doubling the campaign.
+pub const COMPILED_GEOMETRIES: [(usize, usize); 5] =
+    [(128, 64), (128, 128), (256, 128), (512, 64), (512, 128)];
+
+/// Deterministic geometry draw for one spec: seed ⊕ spec digest indexes
+/// [`COMPILED_GEOMETRIES`].
+pub fn pick_geometry(spec: &BackendSpec, seed: u64) -> BankGeometry {
+    let idx = (seed ^ digest(spec.to_string().as_bytes())) % COMPILED_GEOMETRIES.len() as u64;
+    let (rows, row_bytes) = COMPILED_GEOMETRIES[idx as usize];
+    BankGeometry { bytes: rows * row_bytes, rows, row_bytes }
+}
+
 /// One failed check, with its shrunk reproduction.
 #[derive(Clone, Debug)]
 pub struct FailureReport {
@@ -91,6 +109,9 @@ pub struct SpecOutcome {
     pub spec: BackendSpec,
     /// 0 = flat, n = striped across n shards.
     pub shards: usize,
+    /// Explicit bank organization of a flat run (compiled-geometry pass);
+    /// `None` = the default 16 KB × 256-row banking.
+    pub geom: Option<BankGeometry>,
     /// (stores, loads, ticks, refreshes) generated.
     pub counts: (usize, usize, usize, usize),
     pub self_replay_ok: bool,
@@ -104,9 +125,14 @@ impl SpecOutcome {
         self.self_replay_ok && self.oracle_ok.unwrap_or(true)
     }
 
-    /// Geometry label for tables/artifacts (`flat` / `sharded×4`).
+    /// Geometry label for tables/artifacts (`flat` / `flat 512×64` /
+    /// `sharded×4`).
     pub fn geometry(&self) -> String {
-        if self.shards == 0 { "flat".into() } else { format!("sharded×{}", self.shards) }
+        match (self.shards, self.geom) {
+            (0, None) => "flat".into(),
+            (0, Some(g)) => format!("flat {}×{}", g.rows, g.row_bytes),
+            (n, _) => format!("sharded×{n}"),
+        }
     }
 }
 
@@ -178,27 +204,50 @@ pub fn gen_ops(cap: usize, refresh_due: Option<f64>, rows: usize, seed: u64, n: 
 }
 
 /// Build the campaign target for one (spec, geometry).
-fn build(spec: &BackendSpec, shards: usize, bytes: usize, seed: u64) -> Result<Box<dyn MemoryBackend>> {
-    if shards == 0 {
-        Ok(backend::build(spec, bytes, seed))
-    } else {
-        Ok(Box::new(ShardedBackend::new(spec, shards, bytes, seed)?))
+fn build(
+    spec: &BackendSpec,
+    shards: usize,
+    geom: Option<BankGeometry>,
+    bytes: usize,
+    seed: u64,
+) -> Result<Box<dyn MemoryBackend>> {
+    match (shards, geom) {
+        (0, None) => Ok(backend::build(spec, bytes, seed)),
+        (0, Some(bank)) => backend::build_with_geometry(spec, bytes, bank, seed),
+        (n, None) => Ok(Box::new(ShardedBackend::new(spec, n, bytes, seed)?)),
+        (_, Some(_)) => anyhow::bail!("sharded campaign runs use the default banking"),
     }
 }
 
 /// Record the campaign trace for one (spec, geometry): generate ops and
 /// drive them through a [`TracingBackend`]-wrapped target.
 pub fn record(spec: &BackendSpec, shards: usize, cfg: &CampaignConfig) -> Result<Trace> {
-    let inner = build(spec, shards, cfg.bytes, cfg.seed)?;
+    record_with(spec, shards, None, cfg)
+}
+
+/// [`record`] against an explicit flat bank organization (the
+/// compiled-geometry pass); `geom` rides the trace header so both replay
+/// targets rebuild the same banking.
+pub fn record_with(
+    spec: &BackendSpec,
+    shards: usize,
+    geom: Option<BankGeometry>,
+    cfg: &CampaignConfig,
+) -> Result<Trace> {
+    let inner = build(spec, shards, geom, cfg.bytes, cfg.seed)?;
     let cap = inner.capacity();
     let refresh = inner.refresh_due();
     let rows = inner.rows_per_bank();
     // decorrelate the op stream per spec and geometry
-    let op_seed = cfg.seed ^ digest(spec.to_string().as_bytes()) ^ (shards as u64).rotate_left(17);
+    let op_seed = cfg.seed
+        ^ digest(spec.to_string().as_bytes())
+        ^ (shards as u64).rotate_left(17)
+        ^ geom.map_or(0, |g| digest(format!("{}x{}", g.rows, g.row_bytes).as_bytes()));
     let (mut traced, log) = match &cfg.faults {
         Some(plan) => TracingBackend::wrap_with_faults(inner, cfg.bytes, cfg.seed, shards, plan),
         None => TracingBackend::wrap(inner, cfg.bytes, cfg.seed, shards),
     };
+    log.lock().unwrap().geom = geom;
     for op in gen_ops(cap, refresh, rows, op_seed, cfg.ops) {
         apply_op(traced.as_mut(), &op);
     }
@@ -291,10 +340,21 @@ pub fn verify_oracle(trace: &Trace) -> Result<ReplayReport> {
 
 /// Run the full campaign for one (spec, geometry).
 pub fn run_one(spec: &BackendSpec, shards: usize, cfg: &CampaignConfig) -> Result<SpecOutcome> {
-    let trace = record(spec, shards, cfg)?;
+    run_one_with(spec, shards, None, cfg)
+}
+
+/// [`run_one`] against an explicit flat bank organization.
+pub fn run_one_with(
+    spec: &BackendSpec,
+    shards: usize,
+    geom: Option<BankGeometry>,
+    cfg: &CampaignConfig,
+) -> Result<SpecOutcome> {
+    let trace = record_with(spec, shards, geom, cfg)?;
     let mut outcome = SpecOutcome {
         spec: *spec,
         shards,
+        geom,
         counts: trace.op_counts(),
         self_replay_ok: true,
         oracle_ok: None,
@@ -343,14 +403,20 @@ pub fn run_one(spec: &BackendSpec, shards: usize, cfg: &CampaignConfig) -> Resul
     Ok(outcome)
 }
 
-/// Run the campaign for every spec, flat plus (when `cfg.shards > 0`) the
-/// striped geometry.
+/// Run the campaign for every spec: flat, (when `cfg.shards > 0`) the
+/// striped geometry, and — for MCAIMem specs — one flat run in a
+/// compiler-legal non-default banking drawn deterministically from the
+/// seed ([`pick_geometry`]), so generated macros get differential coverage
+/// on every campaign.
 pub fn run(specs: &[BackendSpec], cfg: &CampaignConfig) -> Result<Vec<SpecOutcome>> {
     let mut out = Vec::new();
     for spec in specs {
         out.push(run_one(spec, 0, cfg)?);
         if cfg.shards > 0 {
             out.push(run_one(spec, cfg.shards, cfg)?);
+        }
+        if matches!(spec, BackendSpec::Mcaimem { .. }) {
+            out.push(run_one_with(spec, 0, Some(pick_geometry(spec, cfg.seed)), cfg)?);
         }
     }
     Ok(out)
@@ -405,6 +471,29 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn compiled_geometry_pass_conforms_too() {
+        let cfg = tiny();
+        let spec = BackendSpec::mcaimem_default();
+        // every compiler-legal bank shape self-replays and matches the
+        // golden model, not just the one the seed happens to draw
+        for (rows, row_bytes) in COMPILED_GEOMETRIES {
+            let bank = BankGeometry { bytes: rows * row_bytes, rows, row_bytes };
+            let out = run_one_with(&spec, 0, Some(bank), &cfg).unwrap();
+            assert!(out.ok(), "{spec} {}: {:?}", out.geometry(), out.failures);
+            assert_eq!(out.oracle_ok, Some(true), "{}", out.geometry());
+            assert_eq!(out.geometry(), format!("flat {rows}×{row_bytes}"));
+        }
+        // the draw is deterministic and stays in the legal set
+        let a = pick_geometry(&spec, 7);
+        assert_eq!(a, pick_geometry(&spec, 7));
+        assert!(COMPILED_GEOMETRIES.contains(&(a.rows, a.row_bytes)));
+        // run() appends exactly one geometry pass per MCAIMem spec
+        let outcomes = run(&[BackendSpec::Sram, spec], &cfg).unwrap();
+        assert_eq!(outcomes.len(), 5, "2×(flat+sharded) + 1 geometry pass");
+        assert_eq!(outcomes.iter().filter(|o| o.geom.is_some()).count(), 1);
     }
 
     #[test]

@@ -6,7 +6,8 @@
 //!
 //! * **Memory tier** — the conformance campaign ([`crate::sim::campaign`])
 //!   with the plan active: adversarial op sequences against `mcaimem@0.8`
-//!   and `mcaimem@0.8+ecc`, flat and sharded, each recorded under fault
+//!   and `mcaimem@0.8+ecc`, flat, sharded and one seeded compiler-legal
+//!   re-banking per spec, each recorded under fault
 //!   injection and replayed against a fresh identical target *and* the
 //!   golden oracle. Agreement is structural (both replay targets rebuild
 //!   the same seeded fault wrapper from the trace header), so any
@@ -243,8 +244,8 @@ mod tests {
     #[test]
     fn memory_drill_stays_conformant_under_the_default_plan() {
         let outcomes = memory_drill(&tiny()).unwrap();
-        // 2 specs × (flat + sharded)
-        assert_eq!(outcomes.len(), 4);
+        // 2 specs × (flat + sharded + compiled-geometry pass)
+        assert_eq!(outcomes.len(), 6);
         for o in &outcomes {
             assert!(o.ok(), "{} {}: {:?}", o.spec, o.geometry(), o.failures);
             assert_eq!(o.oracle_ok, Some(true), "{} {}", o.spec, o.geometry());

@@ -36,7 +36,7 @@ use anyhow::{bail, Result};
 use crate::circuit::flip_model::FlipModel;
 use crate::encode::one_enhancement::{decode_byte, encode_byte};
 use crate::mem::backend::{BackendSpec, MemoryBackend};
-use crate::mem::bank::MemoryMap;
+use crate::mem::bank::{BankGeometry, MemoryMap};
 use crate::mem::ecc::{check_byte, scrub_word, WORD_BYTES};
 use crate::mem::energy::EnergyCard;
 use crate::mem::mcaimem::{z_to_q, EnergyMeter};
@@ -75,7 +75,15 @@ pub struct OracleArray {
 
 impl OracleArray {
     pub fn new(bytes: usize, vref: f64, encode: bool, ecc: bool, seed: u64) -> Self {
-        let map = MemoryMap::with_capacity(bytes);
+        Self::with_map(MemoryMap::with_capacity(bytes), vref, encode, ecc, seed)
+    }
+
+    /// The golden array over an explicit bank organization — the oracle
+    /// counterpart of [`crate::mem::mcaimem::MixedCellMemory::with_map`],
+    /// so compiler-generated geometries get differential coverage too.
+    /// Same (capacity, seed) ⇒ the identical leakage draw regardless of
+    /// banking.
+    pub fn with_map(map: MemoryMap, vref: f64, encode: bool, ecc: bool, seed: u64) -> Self {
         let cap = map.capacity();
         // identical corner sampling to MixedCellMemory::with_vref: a
         // 4096-entry inverse-CDF table over 12-bit uniforms, five draws per
@@ -345,6 +353,34 @@ impl OracleBackend {
         Ok(b)
     }
 
+    /// A flat golden array over an explicit bank organization — the
+    /// counterpart of [`crate::mem::backend::build_with_geometry`], so
+    /// traces recorded against compiler-generated macros replay against
+    /// the golden model in the same banking.
+    pub fn with_geometry(
+        spec: &BackendSpec,
+        bytes: usize,
+        bank: BankGeometry,
+        seed: u64,
+    ) -> Result<OracleBackend> {
+        let (vref, encode, ecc) = spec_params(spec)?;
+        let mut b = OracleBackend {
+            spec: *spec,
+            striped: false,
+            arrays: vec![OracleArray::with_map(
+                MemoryMap::with_geometry(bytes, bank),
+                vref,
+                encode,
+                ecc,
+                seed,
+            )],
+            merged: EnergyMeter::default(),
+            card: EnergyCard::mcaimem(vref),
+        };
+        b.remerge();
+        Ok(b)
+    }
+
     /// A striped golden array — the counterpart of `ShardedBackend::new`:
     /// same shard-seed derivation, same stripe map, same staggered refresh.
     pub fn sharded(spec: &BackendSpec, n: usize, bytes: usize, seed: u64) -> Result<OracleBackend> {
@@ -371,12 +407,16 @@ impl OracleBackend {
     }
 
     /// The golden counterpart of [`Trace::build_target`]: flat for
-    /// `shards == 0`, striped otherwise.
+    /// `shards == 0` (in the recorded bank geometry, when the header
+    /// carries one), striped otherwise.
     pub fn for_trace(trace: &Trace) -> Result<OracleBackend> {
-        if trace.shards == 0 {
-            Self::new(&trace.spec, trace.bytes, trace.seed)
-        } else {
-            Self::sharded(&trace.spec, trace.shards, trace.bytes, trace.seed)
+        match (trace.shards, trace.geom) {
+            (0, None) => Self::new(&trace.spec, trace.bytes, trace.seed),
+            (0, Some(bank)) => Self::with_geometry(&trace.spec, trace.bytes, bank, trace.seed),
+            (n, None) => Self::sharded(&trace.spec, n, trace.bytes, trace.seed),
+            (_, Some(_)) => {
+                bail!("sharded traces use the default banking (geom applies to flat targets)")
+            }
         }
     }
 
@@ -592,6 +632,26 @@ mod tests {
         assert_eq!(rm.refresh_j.to_bits(), om.refresh_j.to_bits());
         assert_eq!(rm.write_j.to_bits(), om.write_j.to_bits());
         assert!(rm.ecc_corrected <= rm.flips_committed);
+    }
+
+    #[test]
+    fn rebanked_oracle_mirrors_the_rebanked_backend() {
+        // a compiler-generated bank shape (128 rows × 128 B) must get the
+        // same differential coverage as the default 256 × 64 banking
+        let spec = BackendSpec::mcaimem_default();
+        let bank = BankGeometry::new(16 * 1024, 128);
+        let mut real = backend::build_with_geometry(&spec, 32 * 1024, bank, 21).unwrap();
+        let mut orc = OracleBackend::with_geometry(&spec, 32 * 1024, bank, 21).unwrap();
+        assert_eq!(real.capacity(), orc.capacity());
+        assert_eq!(real.rows_per_bank(), 128);
+        assert_eq!(orc.rows_per_bank(), 128);
+        let data: Vec<u8> = (0..500u32).map(|i| (i * 11) as u8).collect();
+        real.store(64, &data, 1e-6);
+        orc.store(64, &data, 1e-6);
+        real.refresh_row(5, 2e-6);
+        orc.refresh_row(5, 2e-6);
+        assert_eq!(real.load(64, 500, 20e-6), orc.load(64, 500, 20e-6));
+        assert_eq!(real.meter(), orc.meter(), "rebanked meters must match field-for-field");
     }
 
     #[test]

@@ -28,6 +28,7 @@ use std::sync::{Arc, Mutex};
 use anyhow::{bail, Result};
 
 use crate::faults::{FaultPlan, FaultyBackend};
+use crate::mem::bank::BankGeometry;
 use crate::mem::backend::{self, BackendSpec, MemoryBackend};
 use crate::mem::energy::EnergyCard;
 use crate::mem::mcaimem::EnergyMeter;
@@ -113,6 +114,15 @@ pub struct Trace {
     /// the plan's canonical grammar string; absent for fault-free traces,
     /// so pre-existing artifacts parse unchanged.
     pub faults: Option<FaultPlan>,
+    /// Explicit bank organization of a flat target, when the trace was
+    /// recorded against a compiler-generated geometry
+    /// ([`backend::build_with_geometry`]). `None` = the default 16 KB ×
+    /// 256-row banking. Serialized as the space grammar's `ROWSxROW_BYTES`
+    /// form; absent for default-geometry traces, so pre-existing artifacts
+    /// parse unchanged. Sharded targets always use the default banking
+    /// (the stripe map is geometry-blind), so `geom` with `shards > 0` is
+    /// rejected at build time.
+    pub geom: Option<BankGeometry>,
     pub entries: Vec<TraceEntry>,
 }
 
@@ -135,17 +145,20 @@ impl Trace {
             seed,
             shards,
             faults: None,
+            geom: None,
             entries: Vec::new(),
         }
     }
 
     /// Build the backend this trace was recorded against (flat or sharded,
-    /// re-wrapped in the recorded fault plan when one is present).
+    /// custom bank geometry when recorded, re-wrapped in the recorded
+    /// fault plan when one is present).
     pub fn build_target(&self) -> Result<Box<dyn MemoryBackend>> {
-        let inner: Box<dyn MemoryBackend> = if self.shards == 0 {
-            backend::build(&self.spec, self.bytes, self.seed)
-        } else {
-            Box::new(ShardedBackend::new(&self.spec, self.shards, self.bytes, self.seed)?)
+        let inner: Box<dyn MemoryBackend> = match (self.shards, self.geom) {
+            (0, None) => backend::build(&self.spec, self.bytes, self.seed),
+            (0, Some(bank)) => backend::build_with_geometry(&self.spec, self.bytes, bank, self.seed)?,
+            (n, None) => Box::new(ShardedBackend::new(&self.spec, n, self.bytes, self.seed)?),
+            (_, Some(_)) => bail!("sharded traces use the default banking (geom applies to flat targets)"),
         };
         Ok(match &self.faults {
             Some(plan) => Box::new(FaultyBackend::wrap(inner, plan)),
@@ -166,6 +179,7 @@ impl Trace {
     pub fn record_onto(&self, target: &mut dyn MemoryBackend, ops: &[Op]) -> Trace {
         let mut out = Trace::new(self.spec, self.bytes, self.seed, self.shards);
         out.faults = self.faults.clone();
+        out.geom = self.geom;
         for op in ops {
             let dig = apply_op(target, op);
             out.entries.push(TraceEntry {
@@ -207,6 +221,9 @@ impl Trace {
         if let Some(plan) = &self.faults {
             fields.push(("faults", Json::Str(plan.to_string())));
         }
+        if let Some(g) = self.geom {
+            fields.push(("geom", Json::Str(format!("{}x{}", g.rows, g.row_bytes))));
+        }
         fields.push(("ops", Json::Arr(self.entries.iter().map(entry_to_json).collect())));
         Json::obj(fields)
     }
@@ -229,15 +246,21 @@ impl Trace {
             Ok(p) => Some(p.as_str().unwrap_or("").parse()?),
             Err(_) => None,
         };
+        // optional key: default-geometry traces simply omit it
+        t.geom = match j.get("geom") {
+            Ok(g) => Some(parse_geom(g.as_str().unwrap_or(""))?),
+            Err(_) => None,
+        };
         for e in j.get("ops")?.as_arr().unwrap_or(&[]) {
             t.entries.push(entry_from_json(e)?);
         }
         Ok(t)
     }
 
+    /// Write the trace artifact, creating missing parent directories (a CI
+    /// `--save-dir` need not pre-exist).
     pub fn save(&self, path: &std::path::Path) -> Result<()> {
-        std::fs::write(path, self.to_json().to_pretty())
-            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
+        crate::util::json::save_pretty(path, &self.to_json())
     }
 
     pub fn load(path: &std::path::Path) -> Result<Trace> {
@@ -245,6 +268,20 @@ impl Trace {
             .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
         Trace::from_json(&Json::parse(&text)?)
     }
+}
+
+/// Parse the `ROWSxROW_BYTES` geometry form of the trace header (the same
+/// shape grammar the explore space uses, e.g. `512x128`).
+fn parse_geom(s: &str) -> Result<BankGeometry> {
+    let (rows, row_bytes) = s
+        .split_once('x')
+        .ok_or_else(|| anyhow::anyhow!("bad geometry `{s}` (want ROWSxROW_BYTES)"))?;
+    let rows: usize = rows.trim().parse()?;
+    let row_bytes: usize = row_bytes.trim().parse()?;
+    if rows == 0 || row_bytes == 0 {
+        bail!("degenerate geometry `{s}`");
+    }
+    Ok(BankGeometry { bytes: rows * row_bytes, rows, row_bytes })
 }
 
 /// Execute one op against a backend, returning the load digest if any.
@@ -585,6 +622,37 @@ mod tests {
         assert_eq!(hex_decode(&hex_encode(&data)).unwrap(), data);
         assert!(hex_decode("abc").is_err());
         assert!(hex_decode("zz").is_err());
+    }
+
+    #[test]
+    fn generated_geometries_ride_the_trace_header() {
+        // record against a compiler-legal non-default banking, round-trip
+        // the artifact, rebuild, and replay exactly
+        let spec = BackendSpec::mcaimem_default();
+        let bank = BankGeometry::new(16 * 1024, 128); // 128 × 128 B
+        let mut target = backend::build_with_geometry(&spec, 32 * 1024, bank, 11).unwrap();
+        let mut t = Trace::new(spec, 32 * 1024, 11, 0);
+        t.geom = Some(bank);
+        let t = t.record_onto(target.as_mut(), &[
+            Op::Store { addr: 0, data: vec![0xA5; 256], t: 1e-6 },
+            Op::Load { addr: 0, len: 256, t: 2e-6 },
+            Op::Tick { t: 5e-6 },
+        ]);
+        let j = t.to_json().to_pretty();
+        assert!(j.contains("\"geom\": \"128x128\""), "{j}");
+        let back = Trace::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back, t);
+        let mut rebuilt = back.build_target().unwrap();
+        let rep = crate::sim::replay::replay(&back, rebuilt.as_mut());
+        assert!(rep.exact(), "{:?}", rep.divergence);
+        // default-geometry traces keep the pre-geom schema (no `geom` key)
+        let clean = sample_trace();
+        assert!(!clean.to_json().to_pretty().contains("\"geom\""));
+        // sharded + geom is a contradiction, not a silent default
+        let mut bad = sample_trace();
+        bad.shards = 2;
+        bad.geom = Some(bank);
+        assert!(bad.build_target().is_err());
     }
 
     #[test]

@@ -398,9 +398,39 @@ impl<'a> Parser<'a> {
     }
 }
 
+/// Write `doc` pretty-printed to `path`, creating any missing parent
+/// directories first. Every JSON artifact writer in the CLI (`explore
+/// --json`, `compile --json`, conformance failure dumps) funnels through
+/// here so `--json out/run7/frontier.json` works on a fresh checkout
+/// instead of erroring on the absent directory.
+pub fn save_pretty(path: &std::path::Path, doc: &Json) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .map_err(|e| anyhow!("creating {}: {e}", parent.display()))?;
+        }
+    }
+    std::fs::write(path, doc.to_pretty()).map_err(|e| anyhow!("writing {}: {e}", path.display()))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn save_pretty_creates_missing_parent_directories() {
+        let dir = std::env::temp_dir().join(format!("mcaimem_json_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("deep/nested/artifact.json");
+        let doc = Json::obj(vec![("hello", Json::Num(1.0))]);
+        save_pretty(&path, &doc).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, doc.to_pretty());
+        // and a second write over the now-existing tree still succeeds
+        save_pretty(&path, &Json::Null).unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "null\n");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
 
     #[test]
     fn parse_scalars() {
