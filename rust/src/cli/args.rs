@@ -77,19 +77,29 @@ impl ArgParser {
     /// The known option closest to `name` within edit distance 2, if any
     /// (ties break toward the earliest declared option).
     fn nearest_option(&self, name: &str) -> Option<&'static str> {
-        let mut best: Option<(usize, &'static str)> = None;
-        for &cand in self.value_opts.iter().chain(self.flag_opts.iter()) {
-            let d = edit_distance(name, cand);
-            let better = match best {
-                Some((bd, _)) => d < bd,
-                None => true,
-            };
-            if d <= 2 && better {
-                best = Some((d, cand));
-            }
-        }
-        best.map(|(_, cand)| cand)
+        let pool: Vec<&'static str> =
+            self.value_opts.iter().chain(self.flag_opts.iter()).copied().collect();
+        nearest_keyword(name, &pool)
     }
+}
+
+/// The keyword in `candidates` closest to `name` within edit distance 2,
+/// if any (ties break toward the earliest candidate) — shared by the
+/// unknown-option suggester above and the [`crate::mem::backend`] spec
+/// grammar's unknown-keyword hints.
+pub fn nearest_keyword(name: &str, candidates: &[&'static str]) -> Option<&'static str> {
+    let mut best: Option<(usize, &'static str)> = None;
+    for &cand in candidates {
+        let d = edit_distance(name, cand);
+        let better = match best {
+            Some((bd, _)) => d < bd,
+            None => true,
+        };
+        if d <= 2 && better {
+            best = Some((d, cand));
+        }
+    }
+    best.map(|(_, cand)| cand)
 }
 
 /// Levenshtein distance (insert/delete/substitute, unit costs) — small

@@ -291,11 +291,11 @@ impl WorkerPool {
     pub fn start_with_artifacts(cfg: PoolConfig, artifacts: Option<PathBuf>) -> Result<WorkerPool> {
         let seeds = shard_seeds(cfg.seed ^ 0xE4617E, cfg.workers.max(1));
         if let Some(dir) = artifacts {
-            match PjrtEngine::new(&dir, cfg.backend, cfg.flip_p, seeds[0]) {
+            match PjrtEngine::new(&dir, cfg.backend.clone(), cfg.flip_p, seeds[0]) {
                 Ok(first) => {
                     let mut engines: Vec<Box<dyn InferEngine>> = vec![Box::new(first)];
                     for &s in &seeds[1..] {
-                        engines.push(Box::new(PjrtEngine::new(&dir, cfg.backend, cfg.flip_p, s)?));
+                        engines.push(Box::new(PjrtEngine::new(&dir, cfg.backend.clone(), cfg.flip_p, s)?));
                     }
                     return Self::start_with_engines(cfg, engines);
                 }

@@ -68,7 +68,7 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use super::space::{fnv1a, DesignPoint, RefreshPolicy};
+use super::space::{fnv1a, DesignPoint, RefreshPolicy, TierConfig};
 use crate::circuit::flip_model::{FlipModel, MAX_FLIP_FOR_DNN};
 use crate::circuit::sense_amp::SenseAmp;
 use crate::circuit::snm::{SnmAnalysis, FS_CORNER};
@@ -319,13 +319,53 @@ pub fn evaluate(p: &DesignPoint, ctx: &EvalContext) -> Objectives {
         * (card.read_energy(reads, access) + card.write_energy(writes, access))
         + ecc_write_j;
 
-    Objectives {
+    let mut obj = Objectives {
         area_mm2: area_m2 * 1e6,
         energy_j: static_j + refresh_j + dynamic_j,
         latency_s: t * (1.0 + duty),
         refresh_w,
         err_proxy: err_proxy(p, ctx, &trace),
+    };
+
+    // Hierarchy axis (`tier=sram:NNk`): an SRAM write-back front tier —
+    // the system-level counterpart of `mem::tiered` — absorbs the hit
+    // fraction of the access stream; only the miss traffic (fills and
+    // dirty write-backs) reaches the back array. The flat path above is
+    // untouched, so `tier=none` evaluates bit-identically to the
+    // pre-hierarchy evaluator.
+    if p.tier != TierConfig::None {
+        let front_bytes = p.tier.front_bytes().min(buf);
+        // linear working-set model: a front covering h of the buffer
+        // captures h of the accesses (crude but monotone + deterministic)
+        let h = (front_bytes as f64 / buf as f64).clamp(0.0, 1.0);
+        let sram = EnergyCard::sram();
+        let front_area = AreaModel::lp45().macro_area(crate::mem::MemKind::Sram6t, front_bytes)
+            * (1.0 + SHARD_AREA_FRAC * (p.shards - 1) as f64);
+        // front silicon is strictly additive, so a tiered twin can never
+        // area-dominate its flat sibling — enabling the axis cannot evict
+        // a flat frontier point (the paper's 1S7E@0.8 stays put)
+        obj.area_mm2 += front_area * 1e6;
+
+        // every access lands in the front; misses also move a block on
+        // the back rail (fill on a read miss, write-back on eviction)
+        let back_reads = ((1.0 - h) * reads as f64).round() as usize;
+        let back_writes = ((1.0 - h) * writes as f64).round() as usize;
+        let front_dyn =
+            sram.read_energy(reads, access) + sram.write_energy(writes, access);
+        let back_dyn = dyn_scale
+            * (card.read_energy(back_reads, access) + card.write_energy(back_writes, access));
+        // check-byte updates track back-array stores only
+        let ecc_tiered = ecc_write_j * (1.0 - h);
+        let front_static = sram.static_power(front_bytes, resident) * t;
+        obj.energy_j = static_j + refresh_j + front_dyn + back_dyn + ecc_tiered + front_static;
+
+        // hits never see a refresh stall; write-backs drain to the back
+        // array one 64-B block (= one row activation) at a time
+        obj.latency_s =
+            t * (1.0 + duty * (1.0 - h)) + (back_writes as f64 / 64.0) * t_rc;
     }
+
+    obj
 }
 
 /// Evaluate through the memo cache.
@@ -606,6 +646,33 @@ mod tests {
             evaluate(&DesignPoint { ecc: true, ..sram.clone() }, &c),
             evaluate(&sram, &c)
         );
+    }
+
+    #[test]
+    fn tier_axis_trades_silicon_for_hidden_stalls() {
+        let c = ctx();
+        let flat = evaluate(&DesignPoint::paper(), &c);
+        let t32 = DesignPoint { tier: TierConfig::SramFront { kib: 32 }, ..DesignPoint::paper() };
+        let t64 = DesignPoint { tier: TierConfig::SramFront { kib: 64 }, ..DesignPoint::paper() };
+        let o32 = evaluate(&t32, &c);
+        let o64 = evaluate(&t64, &c);
+        // front silicon is strictly additive: the flat twin keeps a
+        // strictly smaller area, so it can never be dominated off the
+        // frontier by its tiered sibling
+        assert!(o32.area_mm2 > flat.area_mm2, "front tier must cost silicon");
+        assert!(o64.area_mm2 > o32.area_mm2, "and more front costs more");
+        // the back array, its refresh rail and its retention exposure are
+        // unchanged — the front is a write buffer, not a new store
+        assert_eq!(o32.refresh_w, flat.refresh_w);
+        assert_eq!(o32.err_proxy, flat.err_proxy);
+        // a bigger front absorbs more traffic and hides more stalls
+        assert!(o64.latency_s < o32.latency_s);
+        // tiered twins get their own memo key (tier= rides the canon string)
+        let cache = EvalCache::new();
+        let _ = evaluate_cached(&DesignPoint::paper(), &c, &cache);
+        let _ = evaluate_cached(&t32, &c, &cache);
+        let _ = evaluate_cached(&t64, &c, &cache);
+        assert_eq!(cache.misses(), 3);
     }
 
     #[test]

@@ -38,4 +38,4 @@ pub mod space;
 pub use eval::{evaluate, evaluate_many, EvalCache, EvalContext, Objectives};
 pub use pareto::{diff, Frontier, FrontierDiff};
 pub use search::{SearchReport, SearchStrategy};
-pub use space::{DesignPoint, RefreshPolicy, Space};
+pub use space::{DesignPoint, RefreshPolicy, Space, TierConfig};

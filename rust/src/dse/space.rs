@@ -24,11 +24,14 @@
 //! vref=0.6:0.9:0.05        stepped float range (inclusive of both ends)
 //! geom=256x64|512x64       `|`-separated alternatives
 //! refresh=periodic|gated
+//! tier=none|sram:16k|sram:32k|sram:64k   optional SRAM front hierarchy
 //! ```
 //!
 //! [`Space::expand`] takes the cartesian product in fixed axis order
-//! (ratio, vref, enc, geom, shards, refresh, ecc), so grid order — and
-//! with it every downstream artifact — is deterministic.
+//! (ratio, vref, enc, geom, shards, refresh, ecc, tier), so grid order —
+//! and with it every downstream artifact — is deterministic. `tier` is an
+//! opt-in axis: omitted it stays `none`, the canonical string gains no
+//! `tier=` field, and every pre-hierarchy content hash is unchanged.
 
 use std::fmt;
 use std::str::FromStr;
@@ -67,6 +70,65 @@ impl FromStr for RefreshPolicy {
     }
 }
 
+/// The memory-hierarchy axis: an optional SRAM write-back buffer in front
+/// of the evaluated array (the system-level counterpart of the
+/// `tiered=sram:BYTES+BACK` backend combinator — see
+/// [`crate::mem::tiered`]). `None` is the paper's flat organization and
+/// the canonical default: a `tier=` field is only emitted/parsed when the
+/// hierarchy is enabled, so every pre-hierarchy canonical string (and with
+/// it every content hash and memo key) is unchanged.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TierConfig {
+    /// Flat: the array is the buffer.
+    None,
+    /// An SRAM front tier of `kib` KiB absorbing the write stream.
+    SramFront { kib: usize },
+}
+
+impl TierConfig {
+    pub fn label(&self) -> String {
+        match self {
+            TierConfig::None => "none".to_string(),
+            TierConfig::SramFront { kib } => format!("sram:{kib}k"),
+        }
+    }
+
+    /// Front-tier capacity in bytes (0 when flat).
+    pub fn front_bytes(&self) -> usize {
+        match self {
+            TierConfig::None => 0,
+            TierConfig::SramFront { kib } => kib * 1024,
+        }
+    }
+}
+
+impl fmt::Display for TierConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
+impl FromStr for TierConfig {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        if s == "none" {
+            return Ok(TierConfig::None);
+        }
+        let Some(rest) = s.strip_prefix("sram:") else {
+            bail!("unknown tier `{s}` (none | sram:KIBk, e.g. sram:32k)");
+        };
+        let digits = rest
+            .strip_suffix('k')
+            .ok_or_else(|| anyhow!("tier size `{rest}` must end in `k` (e.g. sram:32k)"))?;
+        let kib: usize = parse_num("tier", digits)?;
+        if kib == 0 {
+            bail!("tier size must be positive");
+        }
+        Ok(TierConfig::SramFront { kib })
+    }
+}
+
 /// One complete buffer design — the unit the explorer evaluates.
 #[derive(Clone, Debug, PartialEq)]
 pub struct DesignPoint {
@@ -88,6 +150,9 @@ pub struct DesignPoint {
     /// SECDED check plane over the eDRAM-mapped bits, scrubbed on refresh
     /// (see [`crate::mem::ecc`]). Off at the paper's operating point.
     pub ecc: bool,
+    /// Optional SRAM write-back front tier (the hierarchy axis). The
+    /// paper's organization is flat ([`TierConfig::None`]).
+    pub tier: TierConfig,
 }
 
 /// Validation bounds (kept wide but finite so a typo'd grid can't explode).
@@ -96,6 +161,7 @@ pub const VREF_RANGE: (f64, f64) = (0.3, 0.95);
 pub const ROWS_RANGE: (usize, usize) = (16, 4096);
 pub const ROW_BYTES_RANGE: (usize, usize) = (8, 1024);
 pub const SHARDS_RANGE: (usize, usize) = (1, 64);
+pub const TIER_KIB_RANGE: (usize, usize) = (1, 1024);
 
 impl DesignPoint {
     /// The paper's operating point: 1S·7E @ V_REF = 0.8 V, encoder on,
@@ -110,6 +176,7 @@ impl DesignPoint {
             shards: 1,
             refresh: RefreshPolicy::Periodic,
             ecc: false,
+            tier: TierConfig::None,
         }
     }
 
@@ -156,6 +223,11 @@ impl DesignPoint {
         if !(SHARDS_RANGE.0..=SHARDS_RANGE.1).contains(&self.shards) {
             bail!("shards {} out of range {:?}", self.shards, SHARDS_RANGE);
         }
+        if let TierConfig::SramFront { kib } = self.tier {
+            if !(TIER_KIB_RANGE.0..=TIER_KIB_RANGE.1).contains(&kib) {
+                bail!("tier size {kib} KiB out of range {:?}", TIER_KIB_RANGE);
+            }
+        }
         Ok(())
     }
 
@@ -177,6 +249,9 @@ impl DesignPoint {
         if self.ecc {
             s.push_str(" +ecc");
         }
+        if self.tier != TierConfig::None {
+            s.push_str(&format!(" +{}", self.tier.label()));
+        }
         s
     }
 }
@@ -194,7 +269,13 @@ impl fmt::Display for DesignPoint {
             self.shards,
             self.refresh.label(),
             if self.ecc { "on" } else { "off" }
-        )
+        )?;
+        // emitted only when the hierarchy is enabled, so every flat
+        // canonical string — and its content hash — predates the axis
+        if self.tier != TierConfig::None {
+            write!(f, ",tier={}", self.tier)?;
+        }
+        Ok(())
     }
 }
 
@@ -212,6 +293,7 @@ impl FromStr for DesignPoint {
                 "shards" => p.shards = parse_num(key, value)?,
                 "refresh" => p.refresh = value.parse()?,
                 "ecc" => p.ecc = parse_enc(value)?,
+                "tier" => p.tier = value.parse()?,
                 other => bail!("unknown design-point key `{other}` ({GRAMMAR})"),
             }
         }
@@ -221,7 +303,7 @@ impl FromStr for DesignPoint {
 }
 
 const GRAMMAR: &str =
-    "keys: ratio, vref, enc, geom (ROWSxROWBYTES), shards, refresh (periodic|gated), ecc (on|off)";
+    "keys: ratio, vref, enc, geom (ROWSxROWBYTES), shards, refresh (periodic|gated), ecc (on|off), tier (none|sram:KIBk)";
 
 fn split_fields(s: &str) -> Result<Vec<(&str, &str)>> {
     let mut out = Vec::new();
@@ -281,6 +363,7 @@ pub struct Space {
     pub shards: Vec<usize>,
     pub refresh: Vec<RefreshPolicy>,
     pub eccs: Vec<bool>,
+    pub tiers: Vec<TierConfig>,
     /// The spec string this space was parsed from (for artifacts).
     pub spec: String,
 }
@@ -309,6 +392,7 @@ impl Space {
             shards: vec![1],
             refresh: vec![RefreshPolicy::Periodic],
             eccs: vec![false],
+            tiers: vec![TierConfig::None],
             spec: s.trim().to_string(),
         };
         for (key, value) in split_fields(s)? {
@@ -320,6 +404,7 @@ impl Space {
                 "shards" => sp.shards = expand_ints_usize(key, value)?,
                 "refresh" => sp.refresh = expand_with(value, |v| v.parse::<RefreshPolicy>())?,
                 "ecc" => sp.eccs = expand_with(value, parse_enc)?,
+                "tier" => sp.tiers = expand_with(value, |v| v.parse::<TierConfig>())?,
                 other => bail!("unknown design-space key `{other}` ({GRAMMAR})"),
             }
         }
@@ -341,6 +426,7 @@ impl Space {
             shards: self.shards[pick(self.shards.len())],
             refresh: self.refresh[pick(self.refresh.len())],
             ecc: self.eccs[pick(self.eccs.len())],
+            tier: self.tiers[pick(self.tiers.len())],
         }
     }
 
@@ -353,6 +439,7 @@ impl Space {
             * self.shards.len()
             * self.refresh.len()
             * self.eccs.len()
+            * self.tiers.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -369,18 +456,21 @@ impl Space {
                         for &shards in &self.shards {
                             for &refresh in &self.refresh {
                                 for &ecc in &self.eccs {
-                                    let p = DesignPoint {
-                                        ratio,
-                                        vref,
-                                        encode,
-                                        rows,
-                                        row_bytes,
-                                        shards,
-                                        refresh,
-                                        ecc,
-                                    };
-                                    p.validate()?;
-                                    out.push(p);
+                                    for &tier in &self.tiers {
+                                        let p = DesignPoint {
+                                            ratio,
+                                            vref,
+                                            encode,
+                                            rows,
+                                            row_bytes,
+                                            shards,
+                                            refresh,
+                                            ecc,
+                                            tier,
+                                        };
+                                        p.validate()?;
+                                        out.push(p);
+                                    }
                                 }
                             }
                         }
@@ -548,6 +638,41 @@ mod tests {
             a,
             fnv1a(b"ratio=7,vref=0.8,enc=on,geom=256x64,shards=1,refresh=periodic,ecc=off")
         );
+    }
+
+    #[test]
+    fn tier_axis_roundtrips_and_expands() {
+        // knob grammar round-trips through Display
+        for s in ["none", "sram:16k", "sram:32k", "sram:64k"] {
+            let t: TierConfig = s.parse().unwrap();
+            assert_eq!(t.to_string(), s);
+        }
+        assert_eq!("sram:32k".parse::<TierConfig>().unwrap().front_bytes(), 32 * 1024);
+        for s in ["sram:32", "sram:0k", "dram:32k", "32k", "sram:"] {
+            assert!(s.parse::<TierConfig>().is_err(), "`{s}` must not parse");
+        }
+
+        // a tiered point emits the field and round-trips exactly
+        let s = "ratio=7,vref=0.8,enc=on,geom=256x64,shards=1,refresh=periodic,ecc=off,tier=sram:32k";
+        let p: DesignPoint = s.parse().unwrap();
+        assert_eq!(p.tier, TierConfig::SramFront { kib: 32 });
+        assert_eq!(p.to_string(), s);
+        assert_ne!(p.content_hash(), DesignPoint::paper().content_hash());
+        assert!(p.short_label().contains("+sram:32k"));
+
+        // the flat point never emits a tier field: pinned hash unaffected
+        assert!(!DesignPoint::paper().to_string().contains("tier"));
+
+        // tier is a real grid axis with `none` in the mix
+        let sp = Space::parse("ratio=7,tier=none|sram:16k|sram:32k|sram:64k").unwrap();
+        assert_eq!(sp.len(), 4);
+        let pts = sp.expand().unwrap();
+        assert_eq!(pts.len(), 4);
+        assert_eq!(pts[0].tier, TierConfig::None);
+        assert_eq!(pts[3].tier, TierConfig::SramFront { kib: 64 });
+
+        // out-of-bounds tier sizes rejected by validate()
+        assert!("tier=sram:2048k".parse::<DesignPoint>().is_err());
     }
 
     #[test]

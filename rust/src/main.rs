@@ -3,10 +3,11 @@
 //! artifacts.
 //!
 //! Every subcommand shares one `--backend` flag taking the repo-wide spec
-//! grammar (`sram | edram2t | rram | mcaimem[@VREF[-noenc]]`, comma-list
-//! where a sweep makes sense), so the same spec string selects the buffer
-//! technology in closed-form reports, the event-driven scheduler, and the
-//! serving path.
+//! grammar (`sram | edram2t | rram | mcaimem[@VREF[-noenc]][+ecc] |
+//! sttmram[@ret=S] | sotmram[@ret=S] | tiered=FRONT:BYTES+BACK`,
+//! comma-list where a sweep makes sense), so the same spec string selects
+//! the buffer technology in closed-form reports, the event-driven
+//! scheduler, and the serving path.
 
 use std::path::PathBuf;
 use std::time::Duration;
@@ -44,9 +45,11 @@ USAGE:
                   [--paper-gate] [--compiled]
       design-space exploration: expand the design grid (SPEC grammar:
       ratio=1..15,vref=0.6:0.9:0.05,enc=on,geom=256x64|512x64,shards=1,
-      refresh=periodic|gated,ecc=off|on), evaluate every point in parallel
-      through
-      the composed circuit/area/energy/scalesim models, and print the
+      refresh=periodic|gated,ecc=off|on,tier=none|sram:16k|sram:32k|sram:64k
+      — tier puts an SRAM write-back front in front of the array, the
+      hierarchy axis of the tiered=... backend combinator), evaluate every
+      point in parallel
+      through the composed circuit/area/energy/scalesim models, and print the
       Pareto frontier + hypervolume. --json writes the frontier artifact;
       --diff compares against a previous artifact; --quick runs the small
       pinned CI grid and gates on the paper point staying on the frontier
@@ -75,9 +78,10 @@ USAGE:
                   [--bytes-kb KB] [--no-shrink] [--quick] [--save-dir DIR]
                   [--replay FILE] [--json FILE]
       seeded randomized conformance campaign: every backend must replay its
-      own recorded trace exactly, and MCAIMem specs must match the golden
-      model (sim::oracle) bit- and meter-exactly — flat and sharded (×N)
-      geometries. Failures shrink (ddmin; disable with --no-shrink) to
+      own recorded trace exactly, and MCAIMem + tiered-over-leaf specs must
+      match the golden model (sim::oracle) bit- and meter-exactly — flat
+      and sharded (×N) geometries. Failures shrink (ddmin; disable with
+      --no-shrink) to
       minimal reproducing traces saved under --save-dir. --quick bounds the
       run for CI (<30 s). --replay re-runs a saved failure trace (e.g. a
       CI artifact) locally. --faults PLAN runs the whole campaign under a
@@ -98,8 +102,13 @@ USAGE:
       cross-check the Rust and Pallas implementations through PJRT
 
 BACKEND SPECS:
-  sram | edram2t | rram | mcaimem[@VREF[-noenc]]     (default mcaimem@0.8)
-  e.g. --backend sram,edram2t,rram,mcaimem@0.8,mcaimem@0.7-noenc
+  sram | edram2t | rram | mcaimem[@VREF[-noenc]][+ecc]
+       | sttmram[@ret=SECONDS] | sotmram[@ret=SECONDS]
+       | tiered=FRONT:BYTES+BACK                      (default mcaimem@0.8)
+  MRAM retention `ret` (default ~10 years) trades archival retention for
+  cheaper, faster writes; `tiered=sram:32k+sotmram` puts a 32 KiB SRAM
+  write-back buffer in front of a SOT-MRAM array (BYTES like 32k, 1m).
+  e.g. --backend sram,mcaimem@0.8,sotmram@ret=1e-3,tiered=sram:32k+sotmram
 ";
 
 fn main() {
@@ -116,16 +125,16 @@ fn artifacts_dir(args: &mcaimem::cli::ParsedArgs) -> PathBuf {
 /// The shared `--backend` flag as a sweep list (default: the paper's
 /// operating point).
 fn backend_list(args: &mcaimem::cli::ParsedArgs) -> Result<Vec<BackendSpec>> {
-    BackendSpec::parse_list(args.get("backend").unwrap_or("mcaimem@0.8"))
+    Ok(BackendSpec::parse_list(args.get("backend").unwrap_or("mcaimem@0.8"))?)
 }
 
 /// The shared `--backend` flag where exactly one spec makes sense.
 fn backend_single(args: &mcaimem::cli::ParsedArgs) -> Result<BackendSpec> {
-    let specs = backend_list(args)?;
+    let mut specs = backend_list(args)?;
     if specs.len() != 1 {
         bail!("this subcommand takes exactly one --backend spec, got {}", specs.len());
     }
-    Ok(specs[0])
+    Ok(specs.swap_remove(0))
 }
 
 fn run() -> Result<()> {
@@ -495,7 +504,7 @@ fn cmd_conform(args: &mcaimem::cli::ParsedArgs) -> Result<()> {
             trace.entries.len(),
             trace.spec.label(),
             if trace.shards == 0 { "flat".to_string() } else { format!("sharded×{}", trace.shards) },
-            if matches!(trace.spec, BackendSpec::Mcaimem { .. }) { " + golden model" } else { "" },
+            if trace.spec.oracle_modeled() { " + golden model" } else { "" },
         );
         let mut failed = false;
         let rep = verify_self(&trace)?;
@@ -506,7 +515,7 @@ fn cmd_conform(args: &mcaimem::cli::ParsedArgs) -> Result<()> {
                 println!("self-replay DIVERGED at {d}");
             }
         }
-        if matches!(trace.spec, BackendSpec::Mcaimem { .. }) {
+        if trace.spec.oracle_modeled() {
             let rep = verify_oracle(&trace)?;
             match rep.divergence {
                 None => println!("vs oracle: exact over {} ops", rep.ops),
@@ -524,7 +533,7 @@ fn cmd_conform(args: &mcaimem::cli::ParsedArgs) -> Result<()> {
 
     let specs = BackendSpec::parse_list(
         args.get("backend")
-            .unwrap_or("sram,edram2t,rram,mcaimem@0.8,mcaimem@0.7-noenc"),
+            .unwrap_or("sram,edram2t,rram,mcaimem@0.8,mcaimem@0.7-noenc,sttmram,sotmram@ret=1e-3,tiered=sram:32k+sotmram"),
     )?;
     let mut cfg = CampaignConfig {
         ops: args.get_usize("ops", 20_000)?,

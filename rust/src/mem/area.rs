@@ -58,6 +58,11 @@ pub fn cell_area_rel(kind: MemKind) -> f64 {
         MemKind::Mcaimem => mixed_cell_area_rel(7),
         // RRAM crossbar bit-cell (4F² ideal, ~0.1× SRAM with select device)
         MemKind::Rram => 0.10,
+        // 1T1MTJ STT cell (~25 F² with the write-current-sized access
+        // transistor) — the density pitch of arxiv 2104.02199
+        MemKind::Sttmram => 0.17,
+        // SOT cell pays a second (write-line) transistor over STT
+        MemKind::Sotmram => 0.24,
     }
 }
 

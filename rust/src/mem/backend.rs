@@ -41,7 +41,7 @@
 use std::fmt;
 use std::str::FromStr;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{bail, Result};
 
 use super::area::AreaModel;
 use super::bank::MemoryMap;
@@ -51,7 +51,14 @@ use super::rram::RramCard;
 use super::MemKind;
 
 /// Which buffer design to build/evaluate — the one spec type of the repo.
-#[derive(Clone, Copy, Debug, PartialEq)]
+///
+/// The grammar is *recursive*: the `tiered=FRONT:BYTES+BACK` combinator
+/// composes any two specs into a two-level hierarchy (a small fast
+/// write-back buffer in front of a slow-write device — see
+/// [`super::tiered::TieredBackend`]), and `Display` is the canonical form
+/// every spec round-trips through (`parse(display(s)) == s`, property-
+/// tested over random spec trees in `tests/backend_conformance.rs`).
+#[derive(Clone, Debug, PartialEq)]
 pub enum BackendSpec {
     /// 6T SRAM: no flips, no refresh.
     Sram,
@@ -64,6 +71,17 @@ pub enum BackendSpec {
     Mcaimem { vref: f64, encode: bool, ecc: bool },
     /// Chimera-like non-volatile RRAM buffer (Fig. 15b).
     Rram,
+    /// STT-MRAM at a retention target (s) — `sttmram[@ret=SECONDS]`,
+    /// defaulting to the 10-year archival corner. Relaxing `ret` shrinks
+    /// write energy/latency ∝ the thermal stability Δ ([`super::mram`]).
+    Sttmram { ret: f64 },
+    /// SOT-MRAM at a retention target (s) — `sotmram[@ret=SECONDS]`; the
+    /// separate spin-orbit write path starts ~4× cheaper than STT.
+    Sotmram { ret: f64 },
+    /// Two-level hierarchy: `Tiered(front, front_bytes, back)` — a
+    /// `front_bytes` write-back buffer of the front technology in front of
+    /// a full-capacity back technology (`tiered=sram:32k+sotmram`).
+    Tiered(Box<BackendSpec>, usize, Box<BackendSpec>),
 }
 
 impl BackendSpec {
@@ -71,6 +89,9 @@ impl BackendSpec {
     pub const fn mcaimem_default() -> Self {
         BackendSpec::Mcaimem { vref: 0.8, encode: true, ecc: false }
     }
+
+    /// STT/SOT-MRAM spec retention default: the 10-year archival corner.
+    pub const RET_DEFAULT: f64 = crate::mem::mram::RET_NOMINAL_S;
 
     /// Pretty label for tables/reports (the grammar form is `Display`).
     pub fn label(&self) -> String {
@@ -83,52 +104,106 @@ impl BackendSpec {
                 if *ecc { "+ECC" } else { "" }
             ),
             BackendSpec::Rram => "RRAM".into(),
+            BackendSpec::Sttmram { ret } => mram_label("STT-MRAM", *ret),
+            BackendSpec::Sotmram { ret } => mram_label("SOT-MRAM", *ret),
+            BackendSpec::Tiered(front, bytes, back) => {
+                format!("{}:{}→{}", front.label(), size_str(*bytes), back.label())
+            }
         }
     }
 
     /// The circuit-level kind this spec is characterized by (area model,
-    /// Table I/II cards).
+    /// Table I/II cards). A tiered spec reports its *back* tier — the tier
+    /// that holds the full capacity.
     pub fn kind(&self) -> MemKind {
         match self {
             BackendSpec::Sram => MemKind::Sram6t,
             BackendSpec::Edram2t => MemKind::Edram2t,
             BackendSpec::Mcaimem { .. } => MemKind::Mcaimem,
             BackendSpec::Rram => MemKind::Rram,
+            BackendSpec::Sttmram { .. } => MemKind::Sttmram,
+            BackendSpec::Sotmram { .. } => MemKind::Sotmram,
+            BackendSpec::Tiered(_, _, back) => back.kind(),
         }
     }
 
-    /// The Table II characterization card for this spec.
+    /// The Table II characterization card for this spec (the back tier's
+    /// card for a tiered spec — the capacity-holding technology).
     pub fn energy_card(&self) -> EnergyCard {
         match self {
             BackendSpec::Sram => EnergyCard::sram(),
             BackendSpec::Edram2t => EnergyCard::edram2t(),
             BackendSpec::Mcaimem { vref, .. } => EnergyCard::mcaimem(*vref),
             BackendSpec::Rram => EnergyCard::rram(),
+            BackendSpec::Sttmram { ret } => EnergyCard::sttmram(*ret),
+            BackendSpec::Sotmram { ret } => EnergyCard::sotmram(*ret),
+            BackendSpec::Tiered(_, _, back) => back.energy_card(),
         }
     }
 
     /// Does data pass through the one-enhancement encoder in front of the
     /// array?
     pub fn encoded(&self) -> bool {
-        matches!(self, BackendSpec::Mcaimem { encode: true, .. })
+        match self {
+            BackendSpec::Mcaimem { encode, .. } => *encode,
+            BackendSpec::Tiered(front, _, back) => front.encoded() || back.encoded(),
+            _ => false,
+        }
+    }
+
+    /// Is this a *leaf* spec the golden oracle models naively (a plain
+    /// byte array whose meter is pure card arithmetic — no aging, no
+    /// self-charged refresh stream)?
+    pub fn oracle_leaf(&self) -> bool {
+        matches!(
+            self,
+            BackendSpec::Sram
+                | BackendSpec::Rram
+                | BackendSpec::Sttmram { .. }
+                | BackendSpec::Sotmram { .. }
+        )
+    }
+
+    /// Does the golden oracle ([`crate::sim::oracle`]) carry a naive model
+    /// of this spec? MCAIMem always; a tiered spec when both members are
+    /// naive leaves (the two-level golden model).
+    pub fn oracle_modeled(&self) -> bool {
+        match self {
+            BackendSpec::Mcaimem { .. } => true,
+            BackendSpec::Tiered(front, _, back) => front.oracle_leaf() && back.oracle_leaf(),
+            _ => false,
+        }
     }
 
     /// Parse a comma-separated sweep list (`"sram,edram2t,mcaimem@0.8"`).
     /// Repeated specs are deduplicated order-preserving (first occurrence
     /// wins), so a sweep like `--backend sram,sram,mcaimem@0.8` doesn't
-    /// evaluate — and print — the same column twice. Dedup happens on the
-    /// *parsed* value, so textual variants (`mcaimem@0.80`, `MCAIMem@0.8`)
-    /// of one spec collapse too.
-    pub fn parse_list(s: &str) -> Result<Vec<BackendSpec>> {
+    /// evaluate — and print — the same column twice. Dedup is keyed on the
+    /// canonical `Display` form (the round-trip key for the recursive
+    /// grammar), so textual variants (`mcaimem@0.80`, `MCAIMem@0.8`,
+    /// `sttmram@ret=315600000`) of one spec collapse too. A failing
+    /// element is reported with its list position.
+    pub fn parse_list(s: &str) -> std::result::Result<Vec<BackendSpec>, SpecError> {
         let mut specs: Vec<BackendSpec> = Vec::new();
-        for part in s.split(',').filter(|p| !p.trim().is_empty()) {
-            let spec: BackendSpec = part.parse()?;
-            if !specs.contains(&spec) {
+        let mut keys: Vec<String> = Vec::new();
+        for (index, part) in s.split(',').enumerate() {
+            if part.trim().is_empty() {
+                continue;
+            }
+            let spec: BackendSpec =
+                part.parse().map_err(|source: SpecError| SpecError::ListElement {
+                    index,
+                    element: part.trim().to_string(),
+                    source: Box::new(source),
+                })?;
+            let key = spec.to_string();
+            if !keys.contains(&key) {
+                keys.push(key);
                 specs.push(spec);
             }
         }
         if specs.is_empty() {
-            bail!("empty backend list `{s}`");
+            return Err(SpecError::EmptyList { list: s.to_string() });
         }
         Ok(specs)
     }
@@ -144,42 +219,279 @@ impl BackendSpec {
     }
 }
 
-const GRAMMAR: &str =
-    "sram | edram2t | rram | mcaimem[@VREF[-noenc]][+ecc]  (VREF in volts, 0.3..=1.1)";
+/// The spec grammar, quoted by every parse error.
+pub const GRAMMAR: &str = "sram | edram2t | rram | mcaimem[@VREF[-noenc]][+ecc] | \
+     sttmram[@ret=SECONDS] | sotmram[@ret=SECONDS] | tiered=FRONT:BYTES+BACK  \
+     (VREF in volts 0.3..=1.1; ret in seconds 1e-6..=3.2e8; BYTES like 32k, 1m)";
 
-impl FromStr for BackendSpec {
-    type Err = anyhow::Error;
+/// The leaf keywords of the grammar — the "expected one of" set quoted by
+/// [`SpecError`], and the candidate pool for its edit-distance suggestions.
+pub const KEYWORDS: [&str; 7] =
+    ["sram", "edram2t", "rram", "mcaimem", "sttmram", "sotmram", "tiered"];
 
-    fn from_str(s: &str) -> Result<Self> {
-        let t = s.trim().to_ascii_lowercase();
-        let (t, ecc) = match t.strip_suffix("+ecc") {
-            Some(t) => (t.to_string(), true),
-            None => (t, false),
-        };
-        match t.as_str() {
-            "sram" | "edram2t" | "rram" if ecc => {
-                bail!("`+ecc` applies to mcaimem specs only (grammar: {GRAMMAR})")
-            }
-            "sram" => return Ok(BackendSpec::Sram),
-            "edram2t" => return Ok(BackendSpec::Edram2t),
-            "rram" => return Ok(BackendSpec::Rram),
-            "mcaimem" => return Ok(BackendSpec::Mcaimem { vref: 0.8, encode: true, ecc }),
-            _ => {}
+/// Structured parse error for the [`BackendSpec`] grammar: every variant
+/// carries the byte span of the offending token in the *original* input,
+/// and unknown-keyword errors attach a nearest-keyword suggestion (the
+/// same edit-distance suggester the CLI uses for unknown options).
+#[derive(Clone, Debug, PartialEq)]
+pub enum SpecError {
+    /// The head token is not a known backend keyword.
+    Unknown { token: String, span: (usize, usize), suggest: Option<&'static str> },
+    /// A keyword parsed but a parameter (V_REF, retention, `+ecc`
+    /// placement, …) is malformed or out of range.
+    Param { msg: String, span: (usize, usize) },
+    /// A `BYTES` size in a tiered spec is malformed.
+    Size { msg: String, span: (usize, usize) },
+    /// A `tiered=` combinator is missing a structural piece.
+    Structure { msg: String, span: (usize, usize) },
+    /// One element of a [`BackendSpec::parse_list`] sweep failed.
+    ListElement { index: usize, element: String, source: Box<SpecError> },
+    /// A sweep list with no non-empty elements.
+    EmptyList { list: String },
+}
+
+impl SpecError {
+    /// Byte span of the offending token in the original input.
+    pub fn span(&self) -> (usize, usize) {
+        match self {
+            SpecError::Unknown { span, .. }
+            | SpecError::Param { span, .. }
+            | SpecError::Size { span, .. }
+            | SpecError::Structure { span, .. } => *span,
+            SpecError::ListElement { source, .. } => source.span(),
+            SpecError::EmptyList { .. } => (0, 0),
         }
-        let rest = t
-            .strip_prefix("mcaimem@")
-            .ok_or_else(|| anyhow!("unknown backend spec `{s}` (grammar: {GRAMMAR})"))?;
+    }
+
+    /// Shift every span by `base` bytes — how sub-spec errors surface with
+    /// coordinates in the *outer* input string.
+    fn offset(self, base: usize) -> Self {
+        let shift = |(a, b): (usize, usize)| (a + base, b + base);
+        match self {
+            SpecError::Unknown { token, span, suggest } => {
+                SpecError::Unknown { token, span: shift(span), suggest }
+            }
+            SpecError::Param { msg, span } => SpecError::Param { msg, span: shift(span) },
+            SpecError::Size { msg, span } => SpecError::Size { msg, span: shift(span) },
+            SpecError::Structure { msg, span } => {
+                SpecError::Structure { msg, span: shift(span) }
+            }
+            other => other,
+        }
+    }
+}
+
+impl fmt::Display for SpecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SpecError::Unknown { token, span, suggest } => {
+                write!(f, "unknown backend spec `{token}` at {}..{}", span.0, span.1)?;
+                if let Some(s) = suggest {
+                    write!(f, " (did you mean `{s}`?)")?;
+                }
+                write!(f, "; expected one of: {}", KEYWORDS.join(", "))?;
+                write!(f, " (grammar: {GRAMMAR})")
+            }
+            SpecError::Param { msg, span } | SpecError::Size { msg, span } => {
+                write!(f, "{msg} at {}..{} (grammar: {GRAMMAR})", span.0, span.1)
+            }
+            SpecError::Structure { msg, span } => {
+                write!(
+                    f,
+                    "{msg} at {}..{}; expected tiered=FRONT:BYTES+BACK (grammar: {GRAMMAR})",
+                    span.0, span.1
+                )
+            }
+            SpecError::ListElement { index, element, source } => {
+                write!(f, "backend list element {} (`{element}`): {source}", index + 1)
+            }
+            SpecError::EmptyList { list } => write!(f, "empty backend list `{list}`"),
+        }
+    }
+}
+
+impl std::error::Error for SpecError {}
+
+/// Parse helpers are span-aware: `base` is the byte offset of `t` inside
+/// the original input, so errors from nested sub-specs point at the right
+/// place in what the user actually typed.
+fn parse_spec(t: &str, base: usize) -> std::result::Result<BackendSpec, SpecError> {
+    let span = (base, base + t.len());
+    // parenthesized sub-spec (nested tiered members)
+    if let Some(inner) = t.strip_prefix('(') {
+        let inner = inner.strip_suffix(')').ok_or(SpecError::Structure {
+            msg: "unbalanced `(` in backend spec".into(),
+            span,
+        })?;
+        return parse_spec(inner, base + 1);
+    }
+    if let Some(rest) = t.strip_prefix("tiered=") {
+        return parse_tiered(rest, base + "tiered=".len());
+    }
+    let (body, ecc) = match t.strip_suffix("+ecc") {
+        Some(body) => (body, true),
+        None => (t, false),
+    };
+    if ecc && !body.starts_with("mcaimem") {
+        return Err(SpecError::Param {
+            msg: "`+ecc` applies to mcaimem specs only".into(),
+            span: (base + body.len(), base + t.len()),
+        });
+    }
+    match body {
+        "sram" => return Ok(BackendSpec::Sram),
+        "edram2t" => return Ok(BackendSpec::Edram2t),
+        "rram" => return Ok(BackendSpec::Rram),
+        "mcaimem" => return Ok(BackendSpec::Mcaimem { vref: 0.8, encode: true, ecc }),
+        "sttmram" => return Ok(BackendSpec::Sttmram { ret: BackendSpec::RET_DEFAULT }),
+        "sotmram" => return Ok(BackendSpec::Sotmram { ret: BackendSpec::RET_DEFAULT }),
+        _ => {}
+    }
+    if let Some(rest) = body.strip_prefix("mcaimem@") {
+        let at = base + "mcaimem@".len();
         let (v, encode) = match rest.strip_suffix("-noenc") {
             Some(v) => (v, false),
             None => (rest, true),
         };
-        let vref: f64 = v
-            .parse()
-            .map_err(|_| anyhow!("bad V_REF `{v}` in backend spec `{s}` (grammar: {GRAMMAR})"))?;
+        let vspan = (at, at + v.len());
+        let vref: f64 = v.parse().map_err(|_| SpecError::Param {
+            msg: format!("bad V_REF `{v}` in backend spec"),
+            span: vspan,
+        })?;
         if !(0.3..=1.1).contains(&vref) {
-            bail!("V_REF {vref} out of range in backend spec `{s}` (grammar: {GRAMMAR})");
+            return Err(SpecError::Param {
+                msg: format!("V_REF {vref} out of range 0.3..=1.1"),
+                span: vspan,
+            });
         }
-        Ok(BackendSpec::Mcaimem { vref, encode, ecc })
+        return Ok(BackendSpec::Mcaimem { vref, encode, ecc });
+    }
+    for (prefix, kind) in [("sttmram@", MemKind::Sttmram), ("sotmram@", MemKind::Sotmram)] {
+        if let Some(rest) = body.strip_prefix(prefix) {
+            let at = base + prefix.len();
+            let ret = parse_retention(rest, at)?;
+            return Ok(match kind {
+                MemKind::Sttmram => BackendSpec::Sttmram { ret },
+                _ => BackendSpec::Sotmram { ret },
+            });
+        }
+    }
+    // unknown keyword: suggest the nearest one (≤ 2 edits, like the CLI)
+    let head: String =
+        body.chars().take_while(|c| c.is_ascii_alphanumeric()).collect();
+    let suggest = crate::cli::args::nearest_keyword(&head, &KEYWORDS);
+    Err(SpecError::Unknown { token: t.to_string(), span, suggest })
+}
+
+/// Parse the `ret=SECONDS` knob of an MRAM spec.
+fn parse_retention(rest: &str, base: usize) -> std::result::Result<f64, SpecError> {
+    let span = (base, base + rest.len());
+    let v = rest.strip_prefix("ret=").ok_or_else(|| SpecError::Param {
+        msg: format!("expected `ret=SECONDS` after `@`, got `{rest}`"),
+        span,
+    })?;
+    let vspan = (base + "ret=".len(), base + rest.len());
+    let ret: f64 = v.parse().map_err(|_| SpecError::Param {
+        msg: format!("bad retention `{v}` (seconds)"),
+        span: vspan,
+    })?;
+    if !(crate::mem::mram::RET_MIN_S..=3.2e8).contains(&ret) {
+        return Err(SpecError::Param {
+            msg: format!("retention {ret} s out of range 1e-6..=3.2e8"),
+            span: vspan,
+        });
+    }
+    Ok(ret)
+}
+
+/// Parse the body of a `tiered=` combinator: `FRONT:BYTES+BACK`, where
+/// `:` and `+` split at paren depth 0 so nested tiered members stay whole.
+fn parse_tiered(rest: &str, base: usize) -> std::result::Result<BackendSpec, SpecError> {
+    let span = (base, base + rest.len());
+    let colon = split_at_depth0(rest, ':').ok_or(SpecError::Structure {
+        msg: "tiered spec is missing its `:BYTES` buffer size".into(),
+        span,
+    })?;
+    let (front_str, after) = (&rest[..colon], &rest[colon + 1..]);
+    let plus = split_at_depth0(after, '+').ok_or(SpecError::Structure {
+        msg: "tiered spec is missing its `+BACK` member".into(),
+        span,
+    })?;
+    let (size_str, back_str) = (&after[..plus], &after[plus + 1..]);
+    let front = parse_spec(front_str, base)?;
+    let bytes = parse_size(size_str, base + colon + 1)?;
+    let back = parse_spec(back_str, base + colon + 1 + plus + 1)?;
+    Ok(BackendSpec::Tiered(Box::new(front), bytes, Box::new(back)))
+}
+
+/// Position of the first `sep` at paren depth 0, or None.
+fn split_at_depth0(s: &str, sep: char) -> Option<usize> {
+    let mut depth = 0i32;
+    for (i, c) in s.char_indices() {
+        match c {
+            '(' => depth += 1,
+            ')' => depth -= 1,
+            c if c == sep && depth == 0 => return Some(i),
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Parse a buffer size like `32k`, `1m`, or `4096` (binary suffixes). The
+/// tier buffer is managed at 64-byte blocks, so it must be a positive
+/// multiple of 64.
+fn parse_size(s: &str, base: usize) -> std::result::Result<usize, SpecError> {
+    use crate::util::units::{KIB, MIB};
+    let span = (base, base + s.len());
+    let (digits, mult) = match s.strip_suffix(['k', 'm']) {
+        Some(d) if s.ends_with('k') => (d, KIB),
+        Some(d) => (d, MIB),
+        None => (s, 1),
+    };
+    let n: usize = digits.parse().map_err(|_| SpecError::Size {
+        msg: format!("bad buffer size `{s}` (expected BYTES like 32k, 1m, 4096)"),
+        span,
+    })?;
+    let bytes = n * mult;
+    if bytes == 0 || bytes % 64 != 0 {
+        return Err(SpecError::Size {
+            msg: format!("buffer size {bytes} B must be a positive multiple of 64"),
+            span,
+        });
+    }
+    Ok(bytes)
+}
+
+/// Canonical rendering of a tier buffer size (`32k`, `1m`, raw bytes).
+fn size_str(bytes: usize) -> String {
+    use crate::util::units::{KIB, MIB};
+    if bytes % MIB == 0 {
+        format!("{}m", bytes / MIB)
+    } else if bytes % KIB == 0 {
+        format!("{}k", bytes / KIB)
+    } else {
+        format!("{bytes}")
+    }
+}
+
+/// Pretty MRAM label: bare at the archival default, retention-annotated
+/// otherwise.
+fn mram_label(name: &str, ret: f64) -> String {
+    if ret == BackendSpec::RET_DEFAULT {
+        name.to_string()
+    } else {
+        format!("{name}@ret={ret}")
+    }
+}
+
+impl FromStr for BackendSpec {
+    type Err = SpecError;
+
+    fn from_str(s: &str) -> std::result::Result<Self, SpecError> {
+        let start = s.len() - s.trim_start().len();
+        let t = s.trim().to_ascii_lowercase();
+        parse_spec(&t, 0).map_err(|e| e.offset(start))
     }
 }
 
@@ -195,6 +507,19 @@ impl fmt::Display for BackendSpec {
                 if *encode { "" } else { "-noenc" },
                 if *ecc { "+ecc" } else { "" }
             ),
+            BackendSpec::Sttmram { ret } if *ret == Self::RET_DEFAULT => write!(f, "sttmram"),
+            BackendSpec::Sttmram { ret } => write!(f, "sttmram@ret={ret}"),
+            BackendSpec::Sotmram { ret } if *ret == Self::RET_DEFAULT => write!(f, "sotmram"),
+            BackendSpec::Sotmram { ret } => write!(f, "sotmram@ret={ret}"),
+            BackendSpec::Tiered(front, bytes, back) => {
+                // nested tiered members parenthesize so the recursive
+                // grammar re-parses the exact same tree
+                let wrap = |m: &BackendSpec| match m {
+                    BackendSpec::Tiered(..) => format!("({m})"),
+                    _ => m.to_string(),
+                };
+                write!(f, "tiered={}:{}+{}", wrap(front), size_str(*bytes), wrap(back))
+            }
         }
     }
 }
@@ -287,17 +612,174 @@ pub trait MemoryBackend: Send {
 }
 
 /// Build a backend from its spec: the single construction point every
-/// consumer (CLI, buffer manager, server, sweeps) goes through.
+/// consumer (CLI, buffer manager, server, sweeps) goes through. For the
+/// optioned construction paths (geometry, shards, failover, ratio,
+/// compiled macros, trace recording) use [`Builder`]; this is the flat
+/// factory `Builder` itself bottoms out in.
 pub fn build(spec: &BackendSpec, bytes: usize, seed: u64) -> Box<dyn MemoryBackend> {
     match spec {
         BackendSpec::Sram => Box::new(SramBackend::new(bytes)),
         BackendSpec::Edram2t => Box::new(Edram2tBackend::new(bytes)),
         BackendSpec::Rram => Box::new(RramBackend::new(bytes)),
+        BackendSpec::Sttmram { .. } | BackendSpec::Sotmram { .. } => {
+            Box::new(MramBackend::new(spec.clone(), bytes))
+        }
+        BackendSpec::Tiered(..) => {
+            Box::new(super::tiered::TieredBackend::new(spec.clone(), bytes, seed))
+        }
         BackendSpec::Mcaimem { vref, encode, ecc } => {
             let mut b = McaimemBackend::new(bytes, *vref, *encode, seed);
             b.mem.ecc_enabled = *ecc;
             Box::new(b)
         }
+    }
+}
+
+/// The one optioned construction path for every backend shape the repo can
+/// run: flat, banked geometry, sharded (with or without failover
+/// provisioning), explicit 1S·NE ratio, compiled macro, and
+/// trace-recording variants of all of them.
+///
+/// This collapses what used to be four ad-hoc constructors — [`build`],
+/// [`build_with_geometry`], [`McaimemBackend::with_ratio`]/
+/// [`McaimemBackend::from_macro`] and
+/// [`super::sharded::ShardedBackend::with_failover`] — into one builder;
+/// those remain as thin shims over this type (prefer `Builder` in new
+/// code).
+///
+/// ```text
+/// Builder::new(spec, bytes).seed(7).shards(4).failover(true).build()?
+/// Builder::new(spec, bytes).geometry(bank).recording()?   // + TraceHandle
+/// ```
+pub struct Builder {
+    spec: BackendSpec,
+    bytes: usize,
+    seed: u64,
+    geometry: Option<crate::mem::bank::BankGeometry>,
+    shards: usize,
+    failover: bool,
+    ratio: Option<u32>,
+    compiled: Option<crate::mem::compiler::MacroSpec>,
+}
+
+impl Builder {
+    /// A flat `spec` backend of `bytes` capacity, seed 0 — every other
+    /// option layers on top.
+    pub fn new(spec: BackendSpec, bytes: usize) -> Self {
+        Builder {
+            spec,
+            bytes,
+            seed: 0,
+            geometry: None,
+            shards: 0,
+            failover: false,
+            ratio: None,
+            compiled: None,
+        }
+    }
+
+    /// Deterministic seed for per-cell leakage populations (and, sharded,
+    /// the per-shard seed derivation).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// An explicit bank geometry (functional mixed-cell array only).
+    pub fn geometry(mut self, bank: crate::mem::bank::BankGeometry) -> Self {
+        self.geometry = Some(bank);
+        self
+    }
+
+    /// Stripe across `n` independently-clocked shards (0 = flat).
+    pub fn shards(mut self, n: usize) -> Self {
+        self.shards = n;
+        self
+    }
+
+    /// Provision every shard at 2× for single-shard-outage tolerance
+    /// (meaningful only with `shards >= 2`).
+    pub fn failover(mut self, on: bool) -> Self {
+        self.failover = on;
+        self
+    }
+
+    /// An explicit 1S·NE cell ratio (mcaimem specs only; byte-tiling
+    /// ratios 0/1/3/7).
+    pub fn ratio(mut self, n: u32) -> Self {
+        self.ratio = Some(n);
+        self
+    }
+
+    /// Build over a compiled macro's generated bank organization
+    /// ([`crate::mem::compiler::MacroSpec`]); capacity and geometry come
+    /// from the macro.
+    pub fn compiled(mut self, spec: &crate::mem::compiler::MacroSpec) -> Self {
+        self.compiled = Some(spec.clone());
+        self
+    }
+
+    /// Construct the backend.
+    pub fn build(self) -> Result<Box<dyn MemoryBackend>> {
+        if let Some(mspec) = &self.compiled {
+            if self.shards > 0 || self.geometry.is_some() || self.ratio.is_some() {
+                bail!("a compiled macro fixes geometry/ratio; drop the conflicting options");
+            }
+            return Ok(Box::new(McaimemBackend::from_macro(mspec, self.seed)?));
+        }
+        if self.shards > 0 {
+            if self.geometry.is_some() {
+                bail!("sharded backends with explicit bank geometry are not supported");
+            }
+            if self.ratio.is_some() {
+                bail!("sharded backends with explicit cell ratio are not supported");
+            }
+            let sh = if self.failover {
+                super::sharded::ShardedBackend::with_failover(
+                    &self.spec, self.shards, self.bytes, self.seed,
+                )?
+            } else {
+                super::sharded::ShardedBackend::new(
+                    &self.spec, self.shards, self.bytes, self.seed,
+                )?
+            };
+            return Ok(Box::new(sh));
+        }
+        if self.failover {
+            bail!("failover provisioning needs shards >= 2");
+        }
+        if let Some(bank) = self.geometry {
+            if self.ratio.is_some() {
+                bail!("pick either an explicit geometry or an explicit ratio, not both");
+            }
+            return build_with_geometry(&self.spec, self.bytes, bank, self.seed);
+        }
+        if let Some(n) = self.ratio {
+            let BackendSpec::Mcaimem { vref, encode, ecc } = &self.spec else {
+                bail!("{} has no mixed-cell ratio to set", self.spec.label());
+            };
+            let mut b = McaimemBackend::with_ratio(self.bytes, *vref, *encode, n, self.seed);
+            b.mem.ecc_enabled = *ecc;
+            return Ok(Box::new(b));
+        }
+        Ok(build(&self.spec, self.bytes, self.seed))
+    }
+
+    /// Construct the backend wrapped in a trace recorder: every device-API
+    /// call is logged onto the returned [`crate::sim::trace::TraceHandle`]
+    /// so the run replays bit- and meter-exactly (`mcaimem conform`).
+    pub fn recording(
+        self,
+    ) -> Result<(Box<dyn MemoryBackend>, crate::sim::trace::TraceHandle)> {
+        let (bytes, seed, shards, geometry) =
+            (self.bytes, self.seed, self.shards, self.geometry);
+        let inner = self.build()?;
+        let (traced, handle) =
+            crate::sim::trace::TracingBackend::wrap(inner, bytes, seed, shards);
+        if let Some(bank) = geometry {
+            handle.lock().unwrap().geom = Some(bank);
+        }
+        Ok((traced, handle))
     }
 }
 
@@ -741,6 +1223,96 @@ impl MemoryBackend for RramBackend {
     }
 }
 
+// ---------------------------------------------------------------------------
+// MRAM — non-volatile, retention-tunable write rail.
+// ---------------------------------------------------------------------------
+
+/// The STT/SOT-MRAM buffer: zero standby power and no refresh like RRAM,
+/// but the write energy/latency scale with the *retention target* — the
+/// spec's `@ret=SECONDS` knob ([`crate::mem::mram`]). One struct covers
+/// both flavors; the [`crate::mem::mram::MramCard`] carries the per-kind
+/// calibration.
+pub struct MramBackend {
+    spec: BackendSpec,
+    data: Vec<u8>,
+    mram: crate::mem::mram::MramCard,
+    card: EnergyCard,
+    meter: EnergyMeter,
+    now: f64,
+}
+
+impl MramBackend {
+    pub fn new(spec: BackendSpec, bytes: usize) -> Self {
+        let (mram, card) = match &spec {
+            BackendSpec::Sttmram { ret } => {
+                (crate::mem::mram::MramCard::stt(*ret), EnergyCard::sttmram(*ret))
+            }
+            BackendSpec::Sotmram { ret } => {
+                (crate::mem::mram::MramCard::sot(*ret), EnergyCard::sotmram(*ret))
+            }
+            other => panic!("MramBackend::new on non-MRAM spec {other}"),
+        };
+        let cap = MemoryMap::with_capacity(bytes).capacity();
+        MramBackend { spec, data: vec![0; cap], mram, card, meter: EnergyMeter::default(), now: 0.0 }
+    }
+
+    fn advance_to(&mut self, now: f64) {
+        assert!(now + 1e-15 >= self.now, "time must be monotone");
+        // non-volatile: no static power, nothing to integrate
+        self.now = now;
+    }
+}
+
+impl MemoryBackend for MramBackend {
+    fn spec(&self) -> BackendSpec {
+        self.spec.clone()
+    }
+
+    fn capacity(&self) -> usize {
+        self.data.len()
+    }
+
+    fn now(&self) -> f64 {
+        self.now
+    }
+
+    fn store(&mut self, addr: usize, data: &[u8], now: f64) {
+        assert!(addr + data.len() <= self.data.len(), "write out of range");
+        self.advance_to(now);
+        self.data[addr..addr + data.len()].copy_from_slice(data);
+        self.meter.write_j += self.mram.write_energy(data.len());
+        self.meter.busy_s += self.mram.write_latency_ns * 1e-9;
+        self.meter.writes += 1;
+        self.meter.bytes_written += data.len() as u64;
+    }
+
+    fn load(&mut self, addr: usize, len: usize, now: f64) -> Vec<u8> {
+        assert!(addr + len <= self.data.len(), "read out of range");
+        self.advance_to(now);
+        self.meter.read_j += self.mram.read_energy(len);
+        self.meter.busy_s += self.mram.read_latency_ns * 1e-9;
+        self.meter.reads += 1;
+        self.meter.bytes_read += len as u64;
+        self.data[addr..addr + len].to_vec()
+    }
+
+    fn tick(&mut self, now: f64) {
+        self.advance_to(now);
+    }
+
+    fn refresh_due(&self) -> Option<f64> {
+        None
+    }
+
+    fn meter(&self) -> &EnergyMeter {
+        &self.meter
+    }
+
+    fn energy_card(&self) -> &EnergyCard {
+        &self.card
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -962,5 +1534,195 @@ mod tests {
         let ours = build(&BackendSpec::mcaimem_default(), 1024 * 1024, 1).area();
         let red = 1.0 - ours / sram;
         assert!((red - 0.48).abs() < 0.005, "reduction={red}");
+    }
+
+    #[test]
+    fn mram_specs_roundtrip_and_retention_trades_write_cost() {
+        // bare names are the archival default; the knob renders canonically
+        for s in ["sttmram", "sotmram"] {
+            let spec: BackendSpec = s.parse().unwrap();
+            assert_eq!(spec.to_string(), s);
+        }
+        let spec: BackendSpec = "sotmram@ret=1e-3".parse().unwrap();
+        assert_eq!(spec, BackendSpec::Sotmram { ret: 1e-3 });
+        // Display is canonical decimal; the value round-trips exactly
+        let again: BackendSpec = spec.to_string().parse().unwrap();
+        assert_eq!(again, spec);
+
+        // non-volatile: no static burn, no refresh, asymmetric writes
+        let mut b = build(&spec, 16 * 1024, 1);
+        b.store(0, &[0xA5; 1024], 1e-6);
+        let _ = b.load(0, 1024, 2e-6);
+        b.tick(1e-3);
+        let m = b.meter();
+        assert_eq!(m.static_j, 0.0);
+        assert_eq!(m.refresh_j, 0.0);
+        assert_eq!(b.refresh_due(), None);
+        assert!(m.write_j > m.read_j, "MRAM writes dominate reads");
+        assert!(m.busy_s > 0.0, "programming latency must accrue");
+
+        // relaxing retention 10 yr → 1 ms must cheapen and speed up writes
+        let mut archival = build(&"sotmram".parse().unwrap(), 16 * 1024, 1);
+        archival.store(0, &[0xA5; 1024], 1e-6);
+        let ma = archival.meter();
+        assert!(m.write_j < ma.write_j, "{} !< {}", m.write_j, ma.write_j);
+        assert!(m.busy_s < ma.busy_s);
+        // while reads are retention-independent
+        let _ = archival.load(0, 1024, 2e-6);
+        assert_eq!(b.meter().read_j, archival.meter().read_j);
+    }
+
+    #[test]
+    fn tiered_specs_roundtrip_recursively() {
+        let spec: BackendSpec = "tiered=sram:32k+sotmram".parse().unwrap();
+        assert_eq!(
+            spec,
+            BackendSpec::Tiered(
+                Box::new(BackendSpec::Sram),
+                32 * 1024,
+                Box::new(BackendSpec::Sotmram { ret: BackendSpec::RET_DEFAULT }),
+            )
+        );
+        assert_eq!(spec.to_string(), "tiered=sram:32k+sotmram");
+        // raw-byte sizes canonicalize (32768 → 32k)
+        assert_eq!(
+            "tiered=sram:32768+sotmram".parse::<BackendSpec>().unwrap().to_string(),
+            "tiered=sram:32k+sotmram"
+        );
+        // nested members parenthesize and re-parse to the same tree
+        let nested: BackendSpec =
+            "tiered=(tiered=sram:16k+edram2t):64k+rram".parse().unwrap();
+        let printed = nested.to_string();
+        assert_eq!(printed, "tiered=(tiered=sram:16k+edram2t):64k+rram");
+        assert_eq!(printed.parse::<BackendSpec>().unwrap(), nested);
+        // and build() produces a runnable device for the whole family
+        let mut b = build(&spec, 64 * 1024, 7);
+        let data: Vec<u8> = (0..=255).collect();
+        b.store(4096, &data, 1e-6);
+        assert_eq!(b.load(4096, 256, 2e-6), data);
+        assert_eq!(b.shard_meters().len(), 2, "one meter per tier");
+
+        for bad in [
+            "tiered=sram+rram",          // missing :BYTES
+            "tiered=sram:32k",           // missing +BACK
+            "tiered=sram:33+rram",       // not a multiple of 64
+            "tiered=sram:0k+rram",       // empty buffer
+            "tiered=(sram:32k+rram",     // unbalanced paren
+            "tiered=sram:32k+zzz",       // unknown back member
+        ] {
+            assert!(bad.parse::<BackendSpec>().is_err(), "`{bad}` must not parse");
+        }
+    }
+
+    #[test]
+    fn spec_errors_carry_spans_and_suggestions() {
+        let err = "sttmrm".parse::<BackendSpec>().unwrap_err();
+        assert_eq!(
+            err,
+            SpecError::Unknown {
+                token: "sttmrm".into(),
+                span: (0, 6),
+                suggest: Some("sttmram"),
+            }
+        );
+        let msg = err.to_string();
+        assert!(msg.contains("did you mean `sttmram`?"), "{msg}");
+        assert!(msg.contains("expected one of"), "{msg}");
+
+        // spans are offsets into what the user actually typed (post-trim)
+        let err = "  zzzzzz  ".parse::<BackendSpec>().unwrap_err();
+        assert_eq!(err.span(), (2, 8));
+
+        // parameter errors point at the offending parameter, not the head
+        let err = "mcaimem@9.9".parse::<BackendSpec>().unwrap_err();
+        assert!(matches!(err, SpecError::Param { .. }), "{err:?}");
+        assert_eq!(err.span(), (8, 11));
+
+        // a bad member inside a tiered spec keeps outer-string coordinates
+        let err = "tiered=sram:32k+sttmrm".parse::<BackendSpec>().unwrap_err();
+        assert_eq!(err.span(), (16, 22));
+        assert!(err.to_string().contains("sttmram"), "{err}");
+    }
+
+    #[test]
+    fn parse_list_reports_the_failing_element() {
+        let err = BackendSpec::parse_list("sram,sttmrm").unwrap_err();
+        let SpecError::ListElement { index, element, source } = &err else {
+            panic!("expected ListElement, got {err:?}");
+        };
+        assert_eq!((*index, element.as_str()), (1, "sttmrm"));
+        assert!(matches!(**source, SpecError::Unknown { .. }));
+        assert!(err.to_string().contains("element 2"), "{err}");
+        // dedupe keys on the canonical rendering: byte and suffix forms of
+        // one tiered spec collapse
+        let specs = BackendSpec::parse_list(
+            "tiered=sram:32k+sotmram,tiered=sram:32768+sotmram",
+        )
+        .unwrap();
+        assert_eq!(specs.len(), 1);
+    }
+
+    #[test]
+    fn builder_collapses_the_constructor_zoo() {
+        let spec = BackendSpec::mcaimem_default();
+        // flat: same device the free function makes
+        let b = Builder::new(spec.clone(), 32 * 1024).seed(7).build().unwrap();
+        assert_eq!(b.spec(), spec);
+        assert_eq!(b.capacity(), 32 * 1024);
+
+        // sharded (+failover) in one chain
+        let sh = Builder::new(spec.clone(), 64 * 1024)
+            .seed(7)
+            .shards(4)
+            .build()
+            .unwrap();
+        assert_eq!(sh.shard_meters().len(), 4);
+        let mut fo = Builder::new(spec.clone(), 64 * 1024)
+            .seed(7)
+            .shards(4)
+            .failover(true)
+            .build()
+            .unwrap();
+        assert!(fo.quarantine_shard(0, 1e-9), "failover provisioning must accept");
+
+        // explicit ratio is mcaimem-only
+        assert!(Builder::new(spec.clone(), 32 * 1024).ratio(3).build().is_ok());
+        assert!(Builder::new(BackendSpec::Sram, 32 * 1024).ratio(3).build().is_err());
+
+        // conflicting options are refused, not silently resolved
+        let bank = crate::mem::bank::BankGeometry::new(16 * 1024, 128);
+        assert!(Builder::new(spec.clone(), 32 * 1024)
+            .geometry(bank)
+            .ratio(3)
+            .build()
+            .is_err());
+        assert!(Builder::new(spec.clone(), 32 * 1024).failover(true).build().is_err());
+        assert!(Builder::new(BackendSpec::Sram, 32 * 1024).geometry(bank).build().is_err());
+
+        // recording wraps any shape and logs geometry into the header
+        let (mut traced, handle) = Builder::new(spec, 32 * 1024)
+            .seed(7)
+            .geometry(bank)
+            .recording()
+            .unwrap();
+        traced.store(0, &[1, 2, 3], 1e-9);
+        let t = handle.lock().unwrap();
+        assert_eq!(t.geom, Some(bank));
+        assert!(!t.entries.is_empty());
+    }
+
+    #[test]
+    fn builder_builds_tiered_and_mram_specs() {
+        for s in ["sttmram", "sotmram@ret=1e-3", "tiered=sram:16k+rram"] {
+            let spec: BackendSpec = s.parse().unwrap();
+            let b = Builder::new(spec.clone(), 32 * 1024).seed(3).build().unwrap();
+            assert_eq!(b.spec(), spec, "{s}");
+            assert_eq!(b.capacity(), 32 * 1024, "{s}");
+        }
+        // striped tiered devices: each shard is a full two-tier stack
+        let spec: BackendSpec = "tiered=sram:16k+sotmram".parse().unwrap();
+        let sh = Builder::new(spec, 128 * 1024).seed(9).shards(4).build().unwrap();
+        assert_eq!(sh.capacity(), 128 * 1024);
+        assert_eq!(sh.shard_meters().len(), 4);
     }
 }

@@ -167,6 +167,30 @@ impl EnergyCard {
         }
     }
 
+    /// STT-MRAM at a retention target (s) — card form of
+    /// [`crate::mem::mram::MramCard::stt`]: non-volatile (zero standby, no
+    /// refresh), data-independent access energy, write-asymmetric.
+    pub fn sttmram(retention_s: f64) -> Self {
+        Self::from_mram(&crate::mem::mram::MramCard::stt(retention_s))
+    }
+
+    /// SOT-MRAM at a retention target (s) — card form of
+    /// [`crate::mem::mram::MramCard::sot`].
+    pub fn sotmram(retention_s: f64) -> Self {
+        Self::from_mram(&crate::mem::mram::MramCard::sot(retention_s))
+    }
+
+    fn from_mram(m: &crate::mem::mram::MramCard) -> Self {
+        EnergyCard {
+            kind: m.kind,
+            static_w_per_mb: Asym::symmetric(0.0),
+            read_j_per_byte: Asym::symmetric(m.read_j_per_byte),
+            write_j_per_byte: Asym::symmetric(m.write_j_per_byte),
+            refresh_period: None,
+            edram_frac: 0.0,
+        }
+    }
+
     /// Static power (W) for a buffer of `bytes` holding data with the given
     /// ones fraction. Scales linearly with capacity from the 1 MB macro —
     /// exactly the paper's §V-B procedure ("reducing it to one-tenth … /

@@ -43,9 +43,15 @@
 //! * [`mcaimem`] — the *functional* mixed-cell memory: real bytes, real
 //!   bit-planes, physical 0→1 flips on the eDRAM plane, refresh-by-read.
 //! * [`rram`] — the non-volatile on-chip-buffer baseline of Fig. 15b.
+//! * [`mram`] — the STT/SOT-MRAM cards with the retention-relaxation knob
+//!   (the two MRAM co-design papers' lever: shorter retention ⇒ cheaper,
+//!   faster writes).
 //! * [`sharded`] — N independently-clocked bank shards of any backend
 //!   behind one device API: striped addresses, merged meters, staggered
 //!   refresh (the serving tier's banked buffer).
+//! * [`tiered`] — the two-level hybrid: a small SRAM write-back buffer in
+//!   front of any slow-write backend (`tiered=sram:32k+sotmram`), behind
+//!   the same device API.
 //!
 //! See EXPERIMENTS.md §Backends for the spec grammar, the trait contract
 //! and the functional-vs-analytic table.
@@ -59,13 +65,16 @@ pub mod ecc;
 pub mod energy;
 pub mod geometry;
 pub mod mcaimem;
+pub mod mram;
 pub mod refresh;
 pub mod rram;
 pub mod sharded;
+pub mod tiered;
 pub mod vref;
 
-pub use backend::{build, BackendSpec, MemoryBackend};
+pub use backend::{build, BackendSpec, Builder, MemoryBackend, SpecError};
 pub use sharded::ShardedBackend;
+pub use tiered::TieredBackend;
 
 /// The embedded-memory kinds the paper compares — the circuit-level
 /// characterization key (see [`backend::BackendSpec`] for the system-level
@@ -78,6 +87,8 @@ pub enum MemKind {
     Edram2t,
     Mcaimem,
     Rram,
+    Sttmram,
+    Sotmram,
 }
 
 impl MemKind {
@@ -89,6 +100,8 @@ impl MemKind {
             MemKind::Edram2t => "Asymmetric eDRAM (2T)",
             MemKind::Mcaimem => "MCAIMem",
             MemKind::Rram => "RRAM",
+            MemKind::Sttmram => "STT-MRAM",
+            MemKind::Sotmram => "SOT-MRAM",
         }
     }
 }

@@ -1,0 +1,149 @@
+//! MRAM-class on-chip-buffer baselines: STT-MRAM and SOT-MRAM with a
+//! retention knob.
+//!
+//! The two MRAM co-design papers in PAPERS.md quantify the same trade the
+//! MCAIMem paper argues from: magnetic tunnel junctions read fast and pack
+//! small, but *writing* one means flipping a free layer whose thermal
+//! stability factor Δ also sets how long it retains data. Both papers'
+//! co-optimization lever is to **relax retention** — an on-chip buffer
+//! only needs its data to live for milliseconds, not ten years — which
+//! shrinks the critical switching current and with it write energy and
+//! write latency, roughly in proportion to Δ:
+//!
+//! * **STT-MRAM** (arxiv 2104.02199): the write current passes *through*
+//!   the junction — ~10 ns pulses and tens of pJ/byte at the 10-year
+//!   corner, the classic slow/hungry NVM write.
+//! * **SOT-MRAM** (arxiv 2303.12310): a separate spin-orbit-torque write
+//!   line decouples the read and write paths — ~1.5 ns writes at a few
+//!   pJ/byte nominal, converging toward SRAM-class writes once retention
+//!   is relaxed.
+//!
+//! Δ scales with the ln of the retention target (`Δ = ln(t_ret/τ₀)`,
+//! attempt period τ₀ ≈ 1 ns), so the knob is logarithmic: ten *orders of
+//! magnitude* of retention buy ~2.5× on the write rail. Like RRAM, both
+//! are non-volatile — zero standby power, no refresh — and charge their
+//! programming latency through `EnergyMeter.busy_s`.
+
+use crate::mem::MemKind;
+use crate::util::units::PICO;
+
+/// Attempt period τ₀ of the thermal-activation retention law (s).
+pub const TAU0_S: f64 = 1e-9;
+/// Nominal (spec-default) retention target: 10 years, the archival corner
+/// both papers start from before relaxing it.
+pub const RET_NOMINAL_S: f64 = 3.156e8;
+/// Shortest sensible retention target (s): below ~1 µs the junction no
+/// longer holds data across a refresh-free buffer residency at all.
+pub const RET_MIN_S: f64 = 1e-6;
+
+/// Thermal-stability scale factor for a retention target: `Δ(t)/Δ(nominal)`
+/// with `Δ(t) = ln(t/τ₀)`. 1.0 at the 10-year corner, ~0.34 at 1 ms.
+pub fn retention_scale(retention_s: f64) -> f64 {
+    (retention_s / TAU0_S).ln() / (RET_NOMINAL_S / TAU0_S).ln()
+}
+
+/// MRAM per-access energy/latency card (per byte), STT or SOT flavoured.
+#[derive(Clone, Copy, Debug)]
+pub struct MramCard {
+    pub kind: MemKind,
+    pub read_j_per_byte: f64,
+    pub write_j_per_byte: f64,
+    pub read_latency_ns: f64,
+    pub write_latency_ns: f64,
+    /// The retention target this card was scaled to (s).
+    pub retention_s: f64,
+}
+
+impl MramCard {
+    /// STT-MRAM after the 2104.02199-class reporting: SRAM-like reads, a
+    /// through-junction write path that needs ~10 ns and ~20 pJ/byte at
+    /// the 10-year corner.
+    pub fn stt(retention_s: f64) -> Self {
+        Self::scaled(MemKind::Sttmram, 2.4, 19.2, 3.0, 10.0, retention_s)
+    }
+
+    /// SOT-MRAM after the 2303.12310-class reporting: the separate
+    /// spin-orbit write line cuts both the pulse width and the energy —
+    /// ~1.5 ns and ~5 pJ/byte nominal.
+    pub fn sot(retention_s: f64) -> Self {
+        Self::scaled(MemKind::Sotmram, 1.6, 4.8, 2.0, 1.5, retention_s)
+    }
+
+    fn scaled(
+        kind: MemKind,
+        read_pj: f64,
+        write_pj_nominal: f64,
+        read_ns: f64,
+        write_ns_nominal: f64,
+        retention_s: f64,
+    ) -> Self {
+        let s = retention_scale(retention_s);
+        MramCard {
+            kind,
+            read_j_per_byte: read_pj * PICO,
+            write_j_per_byte: write_pj_nominal * PICO * s,
+            read_latency_ns: read_ns,
+            write_latency_ns: write_ns_nominal * s,
+            retention_s,
+        }
+    }
+
+    /// Read energy (J) for `bytes`.
+    pub fn read_energy(&self, bytes: usize) -> f64 {
+        self.read_j_per_byte * bytes as f64
+    }
+
+    /// Write energy (J) for `bytes`.
+    pub fn write_energy(&self, bytes: usize) -> f64 {
+        self.write_j_per_byte * bytes as f64
+    }
+
+    /// Non-volatile: no refresh, no standby power.
+    pub fn static_power(&self) -> f64 {
+        0.0
+    }
+
+    /// Write-to-read energy asymmetry — the quantity the retention knob
+    /// exists to shrink.
+    pub fn write_read_ratio(&self) -> f64 {
+        self.write_j_per_byte / self.read_j_per_byte
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn retention_knob_is_logarithmic_and_normalized() {
+        assert!((retention_scale(RET_NOMINAL_S) - 1.0).abs() < 1e-12);
+        let ms = retention_scale(1e-3);
+        assert!(ms > 0.3 && ms < 0.4, "1 ms ≈ 0.34×: {ms}");
+        // monotone in the target
+        assert!(retention_scale(1.0) > ms);
+        assert!(retention_scale(RET_MIN_S) < ms);
+        assert!(retention_scale(RET_MIN_S) > 0.0);
+    }
+
+    #[test]
+    fn sot_beats_stt_on_the_write_rail() {
+        let stt = MramCard::stt(RET_NOMINAL_S);
+        let sot = MramCard::sot(RET_NOMINAL_S);
+        assert!(sot.write_j_per_byte < stt.write_j_per_byte / 3.0);
+        assert!(sot.write_latency_ns < stt.write_latency_ns / 5.0);
+        // both still write-asymmetric at the archival corner
+        assert!(stt.write_read_ratio() > 5.0);
+        assert!(sot.write_read_ratio() > 2.0);
+    }
+
+    #[test]
+    fn relaxed_retention_cuts_write_cost_not_read() {
+        let archival = MramCard::sot(RET_NOMINAL_S);
+        let relaxed = MramCard::sot(1e-3);
+        assert!(relaxed.write_j_per_byte < 0.4 * archival.write_j_per_byte);
+        assert!(relaxed.write_latency_ns < 0.4 * archival.write_latency_ns);
+        assert_eq!(relaxed.read_j_per_byte, archival.read_j_per_byte);
+        assert_eq!(relaxed.read_latency_ns, archival.read_latency_ns);
+        assert_eq!(relaxed.static_power(), 0.0);
+    }
+}

@@ -104,7 +104,7 @@ impl ShardedBackend {
             seeds.iter().map(|&s| backend::build(spec, bytes / n, s)).collect();
         let shard_capacity = shards[0].capacity();
         let mut b = ShardedBackend {
-            spec: *spec,
+            spec: spec.clone(),
             shards,
             merged: EnergyMeter::default(),
             card: spec.energy_card(),
@@ -136,7 +136,7 @@ impl ShardedBackend {
             seeds.iter().map(|&s| backend::build(spec, 2 * mirror_base, s)).collect();
         let shard_capacity = shards[0].capacity();
         let mut b = ShardedBackend {
-            spec: *spec,
+            spec: spec.clone(),
             shards,
             merged: EnergyMeter::default(),
             card: spec.energy_card(),
@@ -190,7 +190,7 @@ impl ShardedBackend {
 
 impl MemoryBackend for ShardedBackend {
     fn spec(&self) -> BackendSpec {
-        self.spec
+        self.spec.clone()
     }
 
     fn capacity(&self) -> usize {

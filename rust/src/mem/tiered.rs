@@ -1,0 +1,330 @@
+//! The two-level hybrid buffer: a small fast write-back tier in front of
+//! any slow-write backend, behind the same [`MemoryBackend`] device API.
+//!
+//! `tiered=sram:32k+sotmram` is the MRAM co-design papers' system answer
+//! to the write rail: the SRAM front absorbs the write stream at SRAM
+//! energy/latency and only evicted *dirty* 64-byte blocks ever pay the
+//! back tier's programming cost. Because [`TieredBackend`] is just another
+//! `MemoryBackend`, the buffer manager, [`super::sharded::ShardedBackend`],
+//! the worker pool, fault wrapping and trace recording all work on tiered
+//! devices with zero call-site changes — and the `tiered=FRONT:BYTES+BACK`
+//! spec composes recursively with every other spec.
+//!
+//! Policy (mirrored exactly, f64-op for f64-op, by the golden oracle's
+//! naive two-level model in [`crate::sim::oracle`]):
+//!
+//! * 64-byte blocks; the front tier is a fully-associative block cache
+//!   with exact-LRU replacement (a monotone use counter — no ties).
+//! * Writes allocate. A full-block overwrite allocates *without* a back
+//!   fill; a partial-block write fills from the back tier first.
+//! * Write-back: stores dirty the resident block; the back tier is only
+//!   written when a dirty victim is evicted.
+//! * Both tiers' clocks advance together (`tick` forwards), the merged
+//!   meter is re-derived after every mutating call, and
+//!   [`MemoryBackend::shard_meters`] reports `[front, back]` so per-tier
+//!   accounting survives the composition.
+
+use std::collections::HashMap;
+
+use super::backend::{build, BackendSpec, MemoryBackend};
+use super::energy::EnergyCard;
+use super::mcaimem::EnergyMeter;
+
+/// Transfer granularity between the tiers (one cache block, bytes).
+pub const BLOCK: usize = 64;
+
+struct Slot {
+    /// Back-tier block index resident in this slot.
+    block: usize,
+    dirty: bool,
+    /// Monotone use stamp; the victim is the strict minimum.
+    last_use: u64,
+}
+
+/// A write-back front tier over a backing tier — see the module docs for
+/// the policy contract.
+pub struct TieredBackend {
+    spec: BackendSpec,
+    front: Box<dyn MemoryBackend>,
+    back: Box<dyn MemoryBackend>,
+    slots: Vec<Option<Slot>>,
+    /// back-tier block index → slot index, for resident blocks.
+    resident: HashMap<usize, usize>,
+    use_clock: u64,
+    merged: EnergyMeter,
+    now: f64,
+}
+
+impl TieredBackend {
+    /// Build both tiers from a `BackendSpec::Tiered` spec: the front at
+    /// its declared capacity, the back at the requested total `bytes`,
+    /// with decorrelated per-tier seeds (`shard_seeds(seed, 2)`).
+    pub fn new(spec: BackendSpec, bytes: usize, seed: u64) -> Self {
+        let BackendSpec::Tiered(front_spec, front_bytes, back_spec) = &spec else {
+            panic!("TieredBackend::new on non-tiered spec {spec}");
+        };
+        let seeds = crate::util::rng::shard_seeds(seed, 2);
+        let front = build(front_spec, *front_bytes, seeds[0]);
+        let back = build(back_spec, bytes, seeds[1]);
+        let n_slots = front.capacity() / BLOCK;
+        assert!(n_slots > 0, "front tier smaller than one {BLOCK} B block");
+        let mut slots = Vec::with_capacity(n_slots);
+        slots.resize_with(n_slots, || None);
+        let mut t = TieredBackend {
+            spec,
+            front,
+            back,
+            slots,
+            resident: HashMap::new(),
+            use_clock: 0,
+            merged: EnergyMeter::default(),
+            now: 0.0,
+        };
+        t.remerge();
+        t
+    }
+
+    fn remerge(&mut self) {
+        let mut m = EnergyMeter::default();
+        m.merge(self.front.meter());
+        m.merge(self.back.meter());
+        self.merged = m;
+    }
+
+    fn touch(&mut self, slot: usize) {
+        self.use_clock += 1;
+        self.slots[slot].as_mut().unwrap().last_use = self.use_clock;
+    }
+
+    /// Slot holding `block`, allocating (and filling from the back tier
+    /// unless `full_overwrite`) on a miss. Evicts the exact-LRU victim,
+    /// writing it back first if dirty.
+    fn slot_for(&mut self, block: usize, full_overwrite: bool, now: f64) -> usize {
+        if let Some(&slot) = self.resident.get(&block) {
+            self.touch(slot);
+            return slot;
+        }
+        // Victim selection: first empty slot, else the strict-LRU minimum.
+        let slot = match self.slots.iter().position(|s| s.is_none()) {
+            Some(empty) => empty,
+            None => {
+                let (victim, _) = self
+                    .slots
+                    .iter()
+                    .enumerate()
+                    .map(|(i, s)| (i, s.as_ref().unwrap().last_use))
+                    .min_by_key(|&(_, stamp)| stamp)
+                    .unwrap();
+                let evicted = self.slots[victim].take().unwrap();
+                self.resident.remove(&evicted.block);
+                if evicted.dirty {
+                    let data = self.front.load(victim * BLOCK, BLOCK, now);
+                    self.back.store(evicted.block * BLOCK, &data, now);
+                }
+                victim
+            }
+        };
+        if !full_overwrite {
+            let data = self.back.load(block * BLOCK, BLOCK, now);
+            self.front.store(slot * BLOCK, &data, now);
+        }
+        self.use_clock += 1;
+        self.slots[slot] = Some(Slot { block, dirty: false, last_use: self.use_clock });
+        self.resident.insert(block, slot);
+        slot
+    }
+
+    fn advance_to(&mut self, now: f64) {
+        assert!(now + 1e-15 >= self.now, "time must be monotone");
+        self.front.tick(now);
+        self.back.tick(now);
+        self.now = now;
+    }
+}
+
+impl MemoryBackend for TieredBackend {
+    fn spec(&self) -> BackendSpec {
+        self.spec.clone()
+    }
+
+    fn capacity(&self) -> usize {
+        self.back.capacity()
+    }
+
+    fn now(&self) -> f64 {
+        self.now
+    }
+
+    fn store(&mut self, addr: usize, data: &[u8], now: f64) {
+        assert!(addr + data.len() <= self.back.capacity(), "write out of range");
+        self.advance_to(now);
+        let mut off = 0;
+        while off < data.len() {
+            let a = addr + off;
+            let block = a / BLOCK;
+            let within = a % BLOCK;
+            let take = (BLOCK - within).min(data.len() - off);
+            let slot = self.slot_for(block, within == 0 && take == BLOCK, now);
+            self.front.store(slot * BLOCK + within, &data[off..off + take], now);
+            self.slots[slot].as_mut().unwrap().dirty = true;
+            off += take;
+        }
+        self.remerge();
+    }
+
+    fn load(&mut self, addr: usize, len: usize, now: f64) -> Vec<u8> {
+        assert!(addr + len <= self.back.capacity(), "read out of range");
+        self.advance_to(now);
+        let mut out = Vec::with_capacity(len);
+        let mut off = 0;
+        while off < len {
+            let a = addr + off;
+            let block = a / BLOCK;
+            let within = a % BLOCK;
+            let take = (BLOCK - within).min(len - off);
+            let slot = self.slot_for(block, false, now);
+            out.extend_from_slice(&self.front.load(slot * BLOCK + within, take, now));
+            off += take;
+        }
+        self.remerge();
+        out
+    }
+
+    fn tick(&mut self, now: f64) {
+        self.advance_to(now);
+        self.remerge();
+    }
+
+    fn refresh_due(&self) -> Option<f64> {
+        self.front.refresh_due().or(self.back.refresh_due())
+    }
+
+    fn refresh_row(&mut self, row: usize, now: f64) {
+        self.advance_to(now);
+        if self.back.refresh_due().is_some() {
+            self.back.refresh_row(row, now);
+        } else {
+            self.front.refresh_row(row, now);
+        }
+        self.remerge();
+    }
+
+    fn rows_per_bank(&self) -> usize {
+        if self.back.refresh_due().is_some() {
+            self.back.rows_per_bank()
+        } else if self.front.refresh_due().is_some() {
+            self.front.rows_per_bank()
+        } else {
+            1
+        }
+    }
+
+    fn meter(&self) -> &EnergyMeter {
+        &self.merged
+    }
+
+    fn shard_meters(&self) -> Vec<EnergyMeter> {
+        vec![self.front.meter().clone(), self.back.meter().clone()]
+    }
+
+    fn energy_card(&self) -> &EnergyCard {
+        self.back.energy_card()
+    }
+
+    fn area(&self) -> f64 {
+        self.front.area() + self.back.area()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiered(spec: &str, bytes: usize, seed: u64) -> TieredBackend {
+        TieredBackend::new(spec.parse().unwrap(), bytes, seed)
+    }
+
+    #[test]
+    fn bytes_round_trip_through_evictions() {
+        // Front holds one 16 KiB bank = 256 blocks; write 64 KiB so every
+        // block is evicted at least once, then read it all back.
+        let mut t = tiered("tiered=sram:16k+sotmram", 64 * 1024, 7);
+        let total = t.capacity();
+        let pattern: Vec<u8> = (0..total).map(|i| (i % 251) as u8).collect();
+        for (i, chunk) in pattern.chunks(160).enumerate() {
+            t.store(i * 160, chunk, i as f64 * 1e-6);
+        }
+        let got = t.load(0, total, 1.0);
+        assert_eq!(got, pattern);
+    }
+
+    #[test]
+    fn write_buffering_cuts_back_tier_writes() {
+        // Hammer one hot block: the back tier must see at most the initial
+        // fill, never the write stream.
+        let mut t = tiered("tiered=sram:16k+sotmram", 64 * 1024, 7);
+        for i in 0..1000u64 {
+            t.store(128, &[i as u8; 32], i as f64 * 1e-6);
+        }
+        let tiers = t.shard_meters();
+        // 1 fill store + 1000 payload stores, all on the SRAM rail.
+        assert_eq!(tiers[0].writes, 1001, "front absorbs the stream");
+        assert_eq!(tiers[1].writes, 0, "hot block never written back");
+        assert_eq!(tiers[1].write_j, 0.0, "no MRAM programming energy spent");
+    }
+
+    #[test]
+    fn dirty_victims_write_back_and_survive() {
+        // The 16 KiB front rounds to exactly one bank = 256 slots; dirtying
+        // 257 distinct blocks forces the LRU victim (block 0) out.
+        let mut t = tiered("tiered=sram:16k+sotmram", 64 * 1024, 3);
+        assert_eq!(t.slots.len(), 256);
+        t.store(0, &[0xAA; 64], 0.0);
+        for b in 1..=256usize {
+            t.store(b * 64, &[b as u8; 64], b as f64 * 1e-6);
+        }
+        let tiers = t.shard_meters();
+        assert_eq!(tiers[1].writes, 1, "exactly the one LRU victim written back");
+        assert_eq!(t.load(0, 64, 1.0), vec![0xAA; 64]); // refills from back
+    }
+
+    #[test]
+    fn merged_meter_equals_tier_sum() {
+        let mut t = tiered("tiered=sram:16k+sttmram@ret=1e-3", 32 * 1024, 11);
+        for i in 0..64 {
+            t.store(i * 97, &[i as u8; 33], i as f64 * 1e-6);
+            t.load(i * 61, 17, (i as f64 + 0.5) * 1e-6);
+        }
+        let tiers = t.shard_meters();
+        let mut sum = EnergyMeter::default();
+        sum.merge(&tiers[0]);
+        sum.merge(&tiers[1]);
+        assert_eq!(sum.total_j(), t.meter().total_j());
+        assert_eq!(sum.writes, t.meter().writes);
+        assert_eq!(sum.reads, t.meter().reads);
+        assert_eq!(sum.busy_s, t.meter().busy_s);
+    }
+
+    #[test]
+    fn full_block_overwrite_skips_the_fill() {
+        let mut t = tiered("tiered=sram:16k+sotmram", 64 * 1024, 7);
+        t.store(0, &[1u8; 64], 0.0); // aligned full block: no back read
+        assert_eq!(t.shard_meters()[1].reads, 0);
+        t.store(100, &[2u8; 8], 1e-6); // partial: fills block 1 from back
+        assert_eq!(t.shard_meters()[1].reads, 1);
+    }
+
+    #[test]
+    fn non_volatile_tiers_report_no_refresh() {
+        let t = tiered("tiered=sram:16k+sotmram", 64 * 1024, 7);
+        assert_eq!(t.refresh_due(), None);
+        assert_eq!(t.rows_per_bank(), 1);
+    }
+
+    #[test]
+    fn mcaimem_back_tier_keeps_manager_driven_refresh() {
+        let t = tiered("tiered=sram:16k+mcaimem@0.8", 64 * 1024, 7);
+        assert!(t.refresh_due().is_some());
+        assert!(t.rows_per_bank() > 1);
+    }
+}

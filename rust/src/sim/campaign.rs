@@ -332,7 +332,8 @@ pub fn oracle_target(trace: &Trace) -> Result<Box<dyn MemoryBackend>> {
     })
 }
 
-/// Replay `trace` against the golden model (MCAIMem specs only).
+/// Replay `trace` against the golden model ([`BackendSpec::oracle_modeled`]
+/// specs: MCAIMem, and tiered combinators over naive-leaf members).
 pub fn verify_oracle(trace: &Trace) -> Result<ReplayReport> {
     let mut orc = oracle_target(trace)?;
     Ok(replay(trace, orc.as_mut()))
@@ -352,7 +353,7 @@ pub fn run_one_with(
 ) -> Result<SpecOutcome> {
     let trace = record_with(spec, shards, geom, cfg)?;
     let mut outcome = SpecOutcome {
-        spec: *spec,
+        spec: spec.clone(),
         shards,
         geom,
         counts: trace.op_counts(),
@@ -380,7 +381,7 @@ pub fn run_one_with(
         });
     }
 
-    if matches!(spec, BackendSpec::Mcaimem { .. }) {
+    if spec.oracle_modeled() {
         let rep = verify_oracle(&trace)?;
         outcome.oracle_ok = Some(rep.exact());
         if let Some(div) = rep.divergence {
@@ -388,7 +389,7 @@ pub fn run_one_with(
                 minimize(
                     &trace,
                     &mut || trace.build_target().expect("header validated"),
-                    &mut || oracle_target(&trace).expect("mcaimem spec"),
+                    &mut || oracle_target(&trace).expect("oracle-modeled spec"),
                 )
             } else {
                 trace.clone()

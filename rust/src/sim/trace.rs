@@ -177,7 +177,7 @@ impl Trace {
     /// the full sequence go stale the moment an op is dropped, so every
     /// candidate is re-recorded on a fresh reference before re-checking.
     pub fn record_onto(&self, target: &mut dyn MemoryBackend, ops: &[Op]) -> Trace {
-        let mut out = Trace::new(self.spec, self.bytes, self.seed, self.shards);
+        let mut out = Trace::new(self.spec.clone(), self.bytes, self.seed, self.shards);
         out.faults = self.faults.clone();
         out.geom = self.geom;
         for op in ops {

@@ -16,12 +16,26 @@
 //!    to drive refresh).
 
 use mcaimem::mem::backend::{build, BackendSpec, MemoryBackend};
+use mcaimem::mem::mcaimem::EnergyMeter;
 use mcaimem::util::rng::Pcg64;
 
-/// Every spec shape the grammar can produce (several V_REF points).
+/// Every flat spec shape the grammar can produce (several V_REF points,
+/// both MRAM classes, a relaxed-retention point).
 fn all_specs() -> Vec<BackendSpec> {
     BackendSpec::parse_list(
-        "sram,edram2t,rram,mcaimem@0.8,mcaimem@0.8-noenc,mcaimem@0.7,mcaimem@0.5-noenc",
+        "sram,edram2t,rram,mcaimem@0.8,mcaimem@0.8-noenc,mcaimem@0.7,mcaimem@0.5-noenc,\
+         sttmram,sotmram,sotmram@ret=1e-3",
+    )
+    .unwrap()
+}
+
+/// Tiered (two-level) spec shapes. Kept out of [`all_specs`]: the exact
+/// byte-accounting test counts payload bytes only, and a tiered device
+/// legitimately moves extra fill/write-back traffic between its tiers.
+fn tiered_specs() -> Vec<BackendSpec> {
+    BackendSpec::parse_list(
+        "tiered=sram:32k+sotmram,tiered=sram:16k+rram,tiered=sram:16k+mcaimem@0.8,\
+         tiered=(tiered=sram:16k+edram2t):32k+sttmram",
     )
     .unwrap()
 }
@@ -52,11 +66,94 @@ fn spec_fromstr_display_roundtrip() {
 
 #[test]
 fn spec_grammar_error_paths() {
-    for s in ["", "sram@0.8", "mcaimem@", "mcaimem@x", "rram-noenc", "mcaimem@1.2", "6t"] {
+    for s in [
+        "",
+        "sram@0.8",
+        "mcaimem@",
+        "mcaimem@x",
+        "rram-noenc",
+        "mcaimem@1.2",
+        "6t",
+        "sttmram@",
+        "sotmram@ret=",
+        "sotmram@ret=1e-9", // below the 1 µs physical floor
+        "sttmram@ret=1e9",  // above the archival ceiling
+        "tiered=",
+        "tiered=sram:32k",
+        "tiered=sram:31+rram",
+        "sttmram+ecc",
+    ] {
         assert!(s.parse::<BackendSpec>().is_err(), "`{s}` must be rejected");
     }
     assert!(BackendSpec::parse_list("sram,,edram2t").is_ok(), "empty segments are skipped");
     assert!(BackendSpec::parse_list("sram,bogus").is_err());
+}
+
+#[test]
+fn retention_knob_roundtrips_through_the_grammar() {
+    // the knob is part of the spec identity: distinct retentions are
+    // distinct specs, the default collapses to the bare name
+    let relaxed: BackendSpec = "sotmram@ret=1e-3".parse().unwrap();
+    let archival: BackendSpec = "sotmram".parse().unwrap();
+    assert_ne!(relaxed, archival);
+    assert_eq!(relaxed.to_string().parse::<BackendSpec>().unwrap(), relaxed);
+    assert_eq!(archival.to_string(), "sotmram");
+    // and it survives a trip through a tiered composition
+    let spec: BackendSpec = "tiered=sram:32k+sotmram@ret=1e-3".parse().unwrap();
+    let again: BackendSpec = spec.to_string().parse().unwrap();
+    assert_eq!(again, spec);
+    let BackendSpec::Tiered(_, _, back) = spec else { panic!() };
+    assert_eq!(*back, relaxed);
+}
+
+/// A random spec tree of paren depth ≤ `depth` (leaves include random
+/// V_REF and retention knobs — every value the grammar can carry).
+fn random_spec(rng: &mut Pcg64, depth: usize) -> BackendSpec {
+    if depth > 0 && rng.next_u64() % 3 == 0 {
+        let front = random_spec(rng, depth - 1);
+        let back = random_spec(rng, depth - 1);
+        let bytes = 64 * (1 + (rng.next_u64() % 2048) as usize);
+        return BackendSpec::Tiered(Box::new(front), bytes, Box::new(back));
+    }
+    match rng.next_u64() % 6 {
+        0 => BackendSpec::Sram,
+        1 => BackendSpec::Edram2t,
+        2 => BackendSpec::Rram,
+        3 => BackendSpec::Mcaimem {
+            vref: (rng.next_u64() % 780) as f64 / 1000.0 + 0.3,
+            encode: rng.next_u64() % 2 == 0,
+            ecc: rng.next_u64() % 2 == 0,
+        },
+        4 => BackendSpec::Sttmram {
+            ret: if rng.next_u64() % 4 == 0 {
+                BackendSpec::RET_DEFAULT
+            } else {
+                1e-6 + (rng.next_u64() % 1_000_000) as f64 * 1e-4
+            },
+        },
+        _ => BackendSpec::Sotmram {
+            ret: if rng.next_u64() % 4 == 0 {
+                BackendSpec::RET_DEFAULT
+            } else {
+                1e-6 + (rng.next_u64() % 1_000_000) as f64 * 1e-4
+            },
+        },
+    }
+}
+
+#[test]
+fn random_spec_trees_roundtrip_through_the_grammar() {
+    // property: parse(display(s)) == s over random spec trees up to two
+    // tiering levels deep — f64 Display prints the shortest representation
+    // that re-parses to the same bits, so knob values survive exactly
+    let mut rng = Pcg64::new(0x5EED_72EE);
+    for i in 0..512 {
+        let spec = random_spec(&mut rng, 2);
+        let s = spec.to_string();
+        let back: BackendSpec = s.parse().unwrap_or_else(|e| panic!("#{i} `{s}`: {e}"));
+        assert_eq!(back, spec, "#{i} `{s}`");
+        assert_eq!(back.to_string(), s, "#{i} display must be canonical");
+    }
 }
 
 #[test]
@@ -212,4 +309,122 @@ fn static_energy_ranking_holds_on_live_backends() {
     let rram = idle("rram");
     assert!(sram > ours && ours > edram, "sram={sram} ours={ours} edram={edram}");
     assert_eq!(rram, 0.0);
+}
+
+#[test]
+fn tiered_load_after_store_roundtrips_fresh() {
+    // the device contract holds through the write-back buffer: stored
+    // bytes come back exactly, aligned or ragged, hit or miss
+    for spec in tiered_specs() {
+        let mut b = build(&spec, 64 * 1024, 0xF00D);
+        let mut rng = Pcg64::new(42);
+        let mut t = 0.0;
+        for (addr, len) in [(0usize, 256usize), (13, 131), (64, 64), (1000, 1), (65, 63)] {
+            let data: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+            t += 1e-9;
+            b.store(addr, &data, t);
+            t += 1e-9;
+            assert_eq!(b.load(addr, len, t), data, "{spec} @{addr}+{len}");
+        }
+    }
+}
+
+#[test]
+fn tiered_meter_total_is_monotone() {
+    for spec in tiered_specs() {
+        let mut b = build(&spec, 64 * 1024, 7);
+        let mut rng = Pcg64::new(spec.to_string().len() as u64);
+        let mut t = 0.0;
+        let mut last = b.meter().total_j();
+        for i in 0..200 {
+            t += 1e-7;
+            match rng.next_u64() % 3 {
+                0 => {
+                    let len = 1 + (rng.next_u64() % 300) as usize;
+                    let addr = (rng.next_u64() as usize) % (b.capacity() - len);
+                    let data: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+                    b.store(addr, &data, t);
+                }
+                1 => {
+                    let len = 1 + (rng.next_u64() % 300) as usize;
+                    let addr = (rng.next_u64() as usize) % (b.capacity() - len);
+                    let _ = b.load(addr, len, t);
+                }
+                _ => b.tick(t),
+            }
+            let now = b.meter().total_j();
+            assert!(
+                now >= last && now.is_finite(),
+                "{spec}: total_j regressed at op {i}: {last} -> {now}"
+            );
+            last = now;
+        }
+    }
+}
+
+#[test]
+fn tiered_refresh_due_matches_the_member_technologies() {
+    // non-volatile stacks never ask the manager for refresh; a volatile
+    // member's stream surfaces through the composition
+    for (s, some) in [
+        ("tiered=sram:32k+sotmram", false),
+        ("tiered=sram:16k+rram", false),
+        ("tiered=sram:16k+mcaimem@0.8", true),
+        ("tiered=(tiered=sram:16k+edram2t):32k+sttmram", false),
+    ] {
+        let spec: BackendSpec = s.parse().unwrap();
+        let b = build(&spec, 64 * 1024, 1);
+        assert_eq!(b.refresh_due().is_some(), some, "{s}");
+        if some {
+            assert!(b.rows_per_bank() > 1, "{s}");
+        }
+    }
+}
+
+#[test]
+fn tiered_replays_the_flat_op_stream_bit_exactly() {
+    // the same op stream through `tiered=sram:32k+X` and flat `X` must
+    // return identical payloads (the buffer is transparent), and the
+    // tiered device's per-tier meters must sum field-wise to its totals
+    for back in ["sotmram", "rram", "sttmram@ret=1e-3"] {
+        let tiered_spec: BackendSpec = format!("tiered=sram:32k+{back}").parse().unwrap();
+        let flat_spec: BackendSpec = back.parse().unwrap();
+        let mut tiered = build(&tiered_spec, 64 * 1024, 0xC0FFEE);
+        let mut flat = build(&flat_spec, 64 * 1024, 0xC0FFEE);
+        assert_eq!(tiered.capacity(), flat.capacity());
+
+        let mut rng = Pcg64::new(99);
+        let mut t = 0.0;
+        for _ in 0..300 {
+            t += 1e-7;
+            let len = 1 + (rng.next_u64() % 200) as usize;
+            let addr = (rng.next_u64() as usize) % (tiered.capacity() - len);
+            if rng.next_u64() % 2 == 0 {
+                let data: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+                tiered.store(addr, &data, t);
+                flat.store(addr, &data, t);
+            } else {
+                assert_eq!(
+                    tiered.load(addr, len, t),
+                    flat.load(addr, len, t),
+                    "{back} @{addr}+{len}"
+                );
+            }
+        }
+        // per-tier accounting survives the composition exactly
+        let tiers = tiered.shard_meters();
+        assert_eq!(tiers.len(), 2, "{back}");
+        let mut sum = EnergyMeter::default();
+        sum.merge(&tiers[0]);
+        sum.merge(&tiers[1]);
+        assert_eq!(&sum, tiered.meter(), "{back}: [front, back] must sum to the totals");
+        // the write buffer's whole point: the slow-write back tier sees
+        // less programming energy than the flat twin paid
+        assert!(
+            tiers[1].write_j < flat.meter().write_j,
+            "{back}: back rail {} !< flat {}",
+            tiers[1].write_j,
+            flat.meter().write_j
+        );
+    }
 }

@@ -9,7 +9,7 @@
 //!   inference.
 
 use mcaimem::dse::search::{ExhaustiveGrid, SearchStrategy};
-use mcaimem::dse::{evaluate, EvalCache, EvalContext, DesignPoint, Space};
+use mcaimem::dse::{evaluate, DesignPoint, EvalCache, EvalContext, Space, TierConfig};
 use mcaimem::report::pareto::ExploreOutcome;
 use mcaimem::scalesim::{network, AcceleratorConfig};
 
@@ -94,6 +94,36 @@ fn quick_grid_gates_the_paper_point() {
     let f = mcaimem::report::pareto::frontier_from_artifact(&json).unwrap();
     let d = mcaimem::dse::diff(&f, &outcome.frontier);
     assert!(d.is_unchanged());
+}
+
+#[test]
+fn paper_point_survives_the_tier_axis() {
+    // the hierarchy axis (ISSUE 8): crossing the quick grid with
+    // tier=none|sram:16k|32k|64k quadruples the space, but the flat
+    // 1S7E@0.8 must keep its frontier slot — a tiered twin adds front
+    // silicon, so it can never dominate its flat sibling on area
+    let ctx = default_ctx(1024);
+    let spec = format!("{},tier=none|sram:16k|sram:32k|sram:64k", Space::QUICK);
+    let space = Space::parse(&spec).unwrap();
+    assert_eq!(space.len(), 4 * Space::parse(Space::QUICK).unwrap().len());
+    let cache = EvalCache::new();
+    let report = ExhaustiveGrid.run(&space, &ctx, &cache).unwrap();
+    let outcome = ExploreOutcome::new(report, &ctx, &cache, 42, &space.spec);
+    assert!(
+        outcome.frontier.contains(&DesignPoint::paper()),
+        "1S7E@0.8 must stay on the frontier with the tier axis enabled"
+    );
+    assert_eq!(outcome.paper_ok(), Some(true));
+    // structural guarantee behind the acceptance bar: every tiered twin
+    // carries strictly more silicon than its flat sibling at otherwise
+    // identical retention exposure, so no flat point can be evicted
+    let flat = evaluate(&DesignPoint::paper(), &ctx);
+    let tiered = evaluate(
+        &DesignPoint { tier: TierConfig::SramFront { kib: 32 }, ..DesignPoint::paper() },
+        &ctx,
+    );
+    assert!(tiered.area_mm2 > flat.area_mm2);
+    assert_eq!(tiered.err_proxy, flat.err_proxy);
 }
 
 #[test]

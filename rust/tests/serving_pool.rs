@@ -67,7 +67,7 @@ fn every_request_is_answered_exactly_once_and_meters_match_unsharded() {
     // SRAM is exact up to float summation order; the functional MCAIMem
     // array carries per-shard weak-cell wobble → 1 %
     for (spec, tol) in [(BackendSpec::Sram, 1e-9), (BackendSpec::mcaimem_default(), 0.01)] {
-        let cfg = pool_cfg(spec, 1, 4);
+        let cfg = pool_cfg(spec.clone(), 1, 4);
         let total_bytes = cfg.buffer_bytes;
         let pool = WorkerPool::start_with_engines(cfg, instant_engines(1)).unwrap();
         let rows: Vec<Vec<i8>> =
@@ -100,7 +100,7 @@ fn every_request_is_answered_exactly_once_and_meters_match_unsharded() {
 
         // determinism across an identical second pool
         let pool2 =
-            WorkerPool::start_with_engines(pool_cfg(spec, 1, 4), instant_engines(1)).unwrap();
+            WorkerPool::start_with_engines(pool_cfg(spec.clone(), 1, 4), instant_engines(1)).unwrap();
         let classes2: Vec<usize> =
             rows.iter().map(|r| pool2.classify(r.clone()).unwrap().0).collect();
         let _ = pool2.shutdown();
