@@ -33,6 +33,25 @@ impl ParsedArgs {
         }
     }
 
+    /// A comma-separated numeric list (`--rates 50000,100000,200000`).
+    /// Empty items are skipped, so a trailing comma is harmless.
+    pub fn get_f64_list(&self, key: &str) -> Result<Option<Vec<f64>>> {
+        let Some(raw) = self.get(key) else { return Ok(None) };
+        let xs = raw
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.parse::<f64>()
+                    .map_err(|_| anyhow!("--{key} expects comma-separated numbers, got `{s}`"))
+            })
+            .collect::<Result<Vec<f64>>>()?;
+        if xs.is_empty() {
+            bail!("--{key} expects at least one number");
+        }
+        Ok(Some(xs))
+    }
+
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
@@ -188,5 +207,22 @@ mod tests {
     #[test]
     fn missing_value_rejected() {
         assert!(parse("--csv").is_err());
+    }
+
+    #[test]
+    fn f64_lists_parse_and_reject_garbage() {
+        let a = ArgParser::new(&["rates"], &[])
+            .parse(["--rates".into(), "50000, 100000,200000,".into()])
+            .unwrap();
+        assert_eq!(a.get_f64_list("rates").unwrap(), Some(vec![50_000.0, 100_000.0, 200_000.0]));
+        assert_eq!(a.get_f64_list("absent").unwrap(), None);
+        let bad = ArgParser::new(&["rates"], &[])
+            .parse(["--rates".into(), "1,abc".into()])
+            .unwrap();
+        assert!(bad.get_f64_list("rates").is_err());
+        let empty = ArgParser::new(&["rates"], &[])
+            .parse(["--rates".into(), ",".into()])
+            .unwrap();
+        assert!(empty.get_f64_list("rates").is_err());
     }
 }

@@ -205,6 +205,45 @@ impl BufferManager {
         self.mem.load(h.offset, h.len, self.now)
     }
 
+    /// Store an `i8` tensor without a conversion copy: `i8` and `u8` have
+    /// identical size and alignment, so the payload is viewed in place as
+    /// device bytes. This is the serving hot path — a full-batch
+    /// `Vec<i8>` → `Vec<u8>` round trip per staged pass is pure waste.
+    pub fn store_i8(&mut self, h: TensorHandle, data: &[i8]) -> Result<()> {
+        // SAFETY: i8 and u8 have the same size, alignment and validity;
+        // reinterpreting a shared slice between them is sound.
+        let bytes = unsafe { std::slice::from_raw_parts(data.as_ptr().cast::<u8>(), data.len()) };
+        self.store(h, bytes)
+    }
+
+    /// Load a tensor as `i8`, reinterpreting the device bytes in place
+    /// (no copy; the returned vector owns the backend's buffer).
+    pub fn load_i8(&mut self, h: TensorHandle) -> Vec<i8> {
+        let mut v = std::mem::ManuallyDrop::new(self.load(h));
+        // SAFETY: Vec<u8> → Vec<i8> with identical length/capacity is a
+        // pure element-type reinterpretation (same size, same alignment,
+        // every bit pattern valid); ManuallyDrop hands ownership of the
+        // allocation to the new vector exactly once.
+        unsafe { Vec::from_raw_parts(v.as_mut_ptr().cast::<i8>(), v.len(), v.capacity()) }
+    }
+
+    /// Absolute virtual time (s) of the next refresh slot, `None` when the
+    /// backend needs no manager-driven refresh — the quantity a
+    /// refresh-aware dispatcher plans batch windows around.
+    pub fn next_refresh_due(&self) -> Option<f64> {
+        if self.refresh.enabled {
+            Some(self.refresh.next_due())
+        } else {
+            None
+        }
+    }
+
+    /// Total refresh slots fired so far (the dispatcher's per-window delta
+    /// gives the refresh work that landed inside that window).
+    pub fn refresh_issued(&self) -> u64 {
+        self.refresh.issued
+    }
+
     /// Fraction of capacity currently allocated.
     pub fn utilization(&self) -> f64 {
         let used: usize = self.allocated.iter().map(|&(_, l, _)| l).sum();
@@ -370,5 +409,39 @@ mod tests {
         assert!((bm.utilization() - 0.5).abs() < 0.01);
         bm.release(h);
         assert_eq!(bm.utilization(), 0.0);
+    }
+
+    #[test]
+    fn i8_staging_roundtrips_without_conversion() {
+        // the zero-copy path must behave byte-for-byte like store+load
+        // through explicit u8 conversion — on SRAM (exact persistence)
+        // that means an exact roundtrip including negative values
+        let mut bm = BufferManager::from_spec(&BackendSpec::Sram, 16 * 1024, 3);
+        let h = bm.alloc(256).unwrap();
+        let data: Vec<i8> = (0..256).map(|i| (i as i64 - 128) as i8).collect();
+        bm.store_i8(h, &data).unwrap();
+        let back = bm.load_i8(h);
+        assert_eq!(back, data);
+        // and a sub-handle (continuous batching stages `real × dim` into a
+        // prefix of the full-batch region) stores/loads the prefix only
+        let sub = TensorHandle { offset: h.offset, len: 100, id: h.id };
+        bm.store_i8(sub, &data[..100]).unwrap();
+        assert_eq!(bm.load_i8(sub), data[..100].to_vec());
+    }
+
+    #[test]
+    fn refresh_telemetry_tracks_the_slot_grid() {
+        // mcaimem at the paper point runs manager-driven refresh
+        let mut bm = BufferManager::new(16 * 1024, 4);
+        let due0 = bm.next_refresh_due().expect("mcaimem needs refresh");
+        assert!(due0 > 0.0);
+        assert_eq!(bm.refresh_issued(), 0);
+        // ticking past several slots fires them and advances the horizon
+        bm.tick(due0 + bm.refresh.slot() * 2.5);
+        assert!(bm.refresh_issued() >= 3);
+        assert!(bm.next_refresh_due().unwrap() > bm.now());
+        // SRAM needs none: the dispatcher sees an empty schedule
+        let sram = BufferManager::from_spec(&BackendSpec::Sram, 16 * 1024, 4);
+        assert_eq!(sram.next_refresh_due(), None);
     }
 }

@@ -98,10 +98,58 @@ impl Default for LoadConfig {
     }
 }
 
+/// A structurally invalid load configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LoadError {
+    /// A tenant weight is negative or non-finite — there is no sensible
+    /// traffic share it could mean. (An *all-zero* mix is legal and draws
+    /// uniformly; see [`LoadConfig::validate`].)
+    BadWeight { tenant: String, weight: f64 },
+}
+
+impl std::fmt::Display for LoadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LoadError::BadWeight { tenant, weight } => write!(
+                f,
+                "tenant '{tenant}' has weight {weight}; weights must be finite and >= 0 \
+                 (a mix of all zeros draws uniformly)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for LoadError {}
+
+impl LoadConfig {
+    /// Validate the tenant mix: every weight must be finite and
+    /// non-negative. A mix whose weights sum to zero is accepted — the
+    /// generator treats it as a uniform draw over the tenants rather than
+    /// silently routing all traffic to the last one.
+    pub fn validate(&self) -> Result<(), LoadError> {
+        for t in &self.tenants {
+            if !t.weight.is_finite() || t.weight < 0.0 {
+                return Err(LoadError::BadWeight { tenant: t.name.clone(), weight: t.weight });
+            }
+        }
+        Ok(())
+    }
+
+    /// Construction-time validation: `LoadConfig { .. }.validated()?`
+    /// surfaces a structured [`LoadError`] before the load ever runs.
+    pub fn validated(self) -> Result<Self, LoadError> {
+        self.validate()?;
+        Ok(self)
+    }
+}
+
 /// What the load run measured.
 #[derive(Clone, Debug)]
 pub struct LoadReport {
-    /// Requests the generator tried to submit (excluding retries).
+    /// Requests the generator actually tried to submit (excluding
+    /// retries). On a pool that closes mid-run this is the attempts made
+    /// before the generator stopped, **not** the configured request count
+    /// — a dead pool must not report traffic it was never offered.
     pub offered: usize,
     /// Requests past admission control.
     pub accepted: usize,
@@ -119,6 +167,16 @@ pub struct LoadReport {
     pub achieved_rps: f64,
     pub p50_latency_us: f64,
     pub p99_latency_us: f64,
+    /// Tail-of-the-tail latency — the SLO quantile the refresh-aware
+    /// dispatcher is judged on.
+    pub p999_latency_us: f64,
+    /// p99 of the open-loop generator's *schedule slip* (µs): how late an
+    /// arrival actually fired relative to its Poisson due time. Near the
+    /// pacing resolution the offered rate is honest; a large value means
+    /// the generator itself could not keep the schedule, so the measured
+    /// "offered rate" understates the configured one (0 for closed-loop
+    /// runs, which have no schedule).
+    pub sched_lag_p99_us: f64,
 }
 
 impl LoadReport {
@@ -129,8 +187,10 @@ impl LoadReport {
         errors: usize,
         abandoned: usize,
         wall_s: f64,
+        lag_us: &mut Vec<f64>,
     ) -> Self {
         lat_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        lag_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let completed = lat_us.len();
         LoadReport {
             offered,
@@ -143,6 +203,8 @@ impl LoadReport {
             achieved_rps: completed as f64 / wall_s.max(1e-9),
             p50_latency_us: if completed == 0 { 0.0 } else { percentile_sorted(lat_us, 50.0) },
             p99_latency_us: if completed == 0 { 0.0 } else { percentile_sorted(lat_us, 99.0) },
+            p999_latency_us: if completed == 0 { 0.0 } else { percentile_sorted(lat_us, 99.9) },
+            sched_lag_p99_us: if lag_us.is_empty() { 0.0 } else { percentile_sorted(lag_us, 99.0) },
         }
     }
 }
@@ -157,20 +219,37 @@ pub fn poisson_interarrivals(seed: u64, rps: f64, n: usize) -> Vec<f64> {
 }
 
 /// Draw a request payload for a weighted-random tenant.
+///
+/// Degenerate mixes are handled explicitly rather than silently routing
+/// to the last tenant: negative/non-finite weights (which
+/// [`LoadConfig::validate`] rejects at construction) are clamped to zero
+/// here as defense in depth, and a mix whose weights sum to zero draws
+/// uniformly.
 fn draw_request(rng: &mut Pcg64, tenants: &[Tenant]) -> Vec<i8> {
     let dim = if tenants.is_empty() {
         784
     } else {
-        let total: f64 = tenants.iter().map(|t| t.weight).sum();
-        let mut x = rng.f64() * total;
-        let mut pick = tenants.len() - 1;
-        for (i, t) in tenants.iter().enumerate() {
-            if x < t.weight {
-                pick = i;
-                break;
+        let w = |t: &Tenant| if t.weight.is_finite() { t.weight.max(0.0) } else { 0.0 };
+        let total: f64 = tenants.iter().map(w).sum();
+        let pick = if total <= 0.0 {
+            // zero-total mix: uniform over the tenants
+            rng.below(tenants.len() as u64) as usize
+        } else {
+            let mut x = rng.f64() * total;
+            // fall back to the last tenant that can carry traffic, so fp
+            // underflow at the end of the walk never lands on a
+            // zero-weight tenant
+            let mut pick =
+                tenants.iter().rposition(|t| w(t) > 0.0).unwrap_or(tenants.len() - 1);
+            for (i, t) in tenants.iter().enumerate() {
+                if x < w(t) {
+                    pick = i;
+                    break;
+                }
+                x -= w(t);
             }
-            x -= t.weight;
-        }
+            pick
+        };
         tenants[pick].dim
     };
     (0..dim).map(|_| rng.next_u64() as i8).collect()
@@ -207,15 +286,24 @@ fn run_open(pool: &WorkerPool, cfg: &LoadConfig, rps: f64) -> LoadReport {
     let mut rng = Pcg64::new(cfg.seed ^ 0xFEED);
     let mut receivers = Vec::with_capacity(cfg.requests);
     let mut rejected = 0u64;
+    let mut offered = 0usize;
+    let mut lag_us = Vec::with_capacity(cfg.requests);
     let start = Instant::now();
     let mut due = start;
     for gap in gaps {
         due += Duration::from_secs_f64(gap);
         pace_until(due);
+        // schedule slip: how late this arrival fires relative to its
+        // Poisson due time — at rates the generator cannot pace, this is
+        // the honest record that the offered rate fell short
+        lag_us.push(Instant::now().saturating_duration_since(due).as_secs_f64() * 1e6);
         let row = draw_request(&mut rng, &cfg.tenants);
+        offered += 1;
         match pool.submit(row) {
             Ok(rx) => receivers.push(rx),
             Err(SubmitError::Rejected { .. }) => rejected += 1, // open loop sheds
+            // the pool is gone: stop generating — the remaining schedule
+            // was never offered and must not be reported as if it were
             Err(SubmitError::Closed) => break,
         }
     }
@@ -231,7 +319,7 @@ fn run_open(pool: &WorkerPool, cfg: &LoadConfig, rps: f64) -> LoadReport {
         }
     }
     let wall_s = start.elapsed().as_secs_f64();
-    LoadReport::from_outcomes(cfg.requests, rejected, &mut lat_us, errors, 0, wall_s)
+    LoadReport::from_outcomes(offered, rejected, &mut lat_us, errors, 0, wall_s, &mut lag_us)
 }
 
 /// One closed-loop client's reject pacing: honour the server's retry-after
@@ -313,7 +401,15 @@ fn run_closed(pool: &WorkerPool, cfg: &LoadConfig, clients: usize) -> LoadReport
         offered += o;
         abandoned += a;
     }
-    LoadReport::from_outcomes(offered, rejected, &mut lat_us, errors, abandoned, wall_s)
+    LoadReport::from_outcomes(
+        offered,
+        rejected,
+        &mut lat_us,
+        errors,
+        abandoned,
+        wall_s,
+        &mut Vec::new(), // closed loop has no arrival schedule to slip
+    )
 }
 
 #[cfg(test)]
@@ -448,5 +544,159 @@ mod tests {
         let mix = Tenant::default_mix();
         assert_eq!(mix.len(), 2);
         assert!(mix.iter().all(|t| (16..=784).contains(&t.dim)));
+    }
+
+    #[test]
+    fn bad_weights_are_a_structured_error_and_zero_total_draws_uniform() {
+        let cfg = LoadConfig {
+            tenants: vec![
+                Tenant { name: "good".into(), weight: 1.0, dim: 16 },
+                Tenant { name: "bad".into(), weight: -2.0, dim: 32 },
+            ],
+            ..LoadConfig::default()
+        };
+        match cfg.validate() {
+            Err(LoadError::BadWeight { tenant, weight }) => {
+                assert_eq!(tenant, "bad");
+                assert_eq!(weight, -2.0);
+            }
+            other => panic!("negative weight must be rejected, got {other:?}"),
+        }
+        let nan = LoadConfig {
+            tenants: vec![Tenant { name: "n".into(), weight: f64::NAN, dim: 16 }],
+            ..LoadConfig::default()
+        };
+        assert!(nan.validated().is_err(), "non-finite weight must be rejected");
+
+        // an all-zero mix is legal and draws uniformly — previously every
+        // request silently routed to the last tenant
+        let tenants = vec![
+            Tenant { name: "a".into(), weight: 0.0, dim: 16 },
+            Tenant { name: "b".into(), weight: 0.0, dim: 32 },
+            Tenant { name: "c".into(), weight: 0.0, dim: 64 },
+        ];
+        assert!(LoadConfig { tenants: tenants.clone(), ..LoadConfig::default() }
+            .validate()
+            .is_ok());
+        let mut rng = Pcg64::new(11);
+        let mut counts = [0usize; 3];
+        for _ in 0..3000 {
+            match draw_request(&mut rng, &tenants).len() {
+                16 => counts[0] += 1,
+                32 => counts[1] += 1,
+                64 => counts[2] += 1,
+                other => panic!("unexpected dim {other}"),
+            }
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            let frac = c as f64 / 3000.0;
+            assert!((frac - 1.0 / 3.0).abs() < 0.05, "tenant {i} drew {frac}, want ~1/3");
+        }
+    }
+
+    #[test]
+    fn mixed_zero_weights_never_receive_traffic() {
+        // a zero-weight tenant alongside positive ones must get nothing,
+        // including via the end-of-walk fp fallback (the old code defaulted
+        // to the *last* tenant regardless of its weight)
+        let tenants = vec![
+            Tenant { name: "hot".into(), weight: 2.0, dim: 16 },
+            Tenant { name: "cold".into(), weight: 0.0, dim: 32 },
+        ];
+        let mut rng = Pcg64::new(12);
+        for _ in 0..2000 {
+            assert_eq!(draw_request(&mut rng, &tenants).len(), 16);
+        }
+    }
+
+    #[test]
+    fn dead_pool_reports_only_the_attempts_actually_offered() {
+        use crate::coordinator::pool::{InferEngine, PoolConfig, WorkerPool};
+        use crate::faults::FATAL_MARKER;
+        use crate::mem::backend::BackendSpec;
+
+        struct CrashEngine;
+        impl InferEngine for CrashEngine {
+            fn batch(&self) -> usize {
+                1
+            }
+            fn dim(&self) -> usize {
+                16
+            }
+            fn infer(&mut self, _x: &[i8]) -> anyhow::Result<Vec<usize>> {
+                anyhow::bail!(FATAL_MARKER)
+            }
+        }
+
+        let cfg = PoolConfig {
+            backend: BackendSpec::Sram,
+            workers: 1,
+            shards: 1,
+            buffer_bytes: 16 * 1024,
+            batch_window: Duration::ZERO,
+            seed: 51,
+            ..PoolConfig::default()
+        };
+        let pool = WorkerPool::start_with_engines(cfg, vec![Box::new(CrashEngine)]).unwrap();
+        // kill the only worker, then wait for admission to close
+        let rx = pool.submit(vec![0i8; 16]).expect("first submit admitted");
+        assert!(rx.recv().expect("reply delivered").is_err(), "crash surfaces as an error");
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while pool.alive_workers() > 0 {
+            assert!(Instant::now() < deadline, "worker death must close admission");
+            std::thread::sleep(Duration::from_micros(200));
+        }
+
+        // the generator is configured for 50 requests, but the first
+        // attempt sees Closed and stops: offered must say 1, not 50
+        let report = run(
+            &pool,
+            &LoadConfig {
+                arrival: Arrival::OpenPoisson { rps: 1.0e6 },
+                requests: 50,
+                seed: 52,
+                ..LoadConfig::default()
+            },
+        );
+        assert_eq!(report.offered, 1, "only the attempted submit counts as offered");
+        assert_eq!(report.completed, 0);
+        assert_eq!(report.accepted, 0);
+        assert_eq!(report.rejected, 0);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn unkeepable_schedules_report_their_slip() {
+        use crate::coordinator::pool::{PoolConfig, SyntheticEngine, WorkerPool};
+        use crate::mem::backend::BackendSpec;
+        let cfg = PoolConfig {
+            backend: BackendSpec::Sram,
+            workers: 1,
+            shards: 1,
+            buffer_bytes: 16 * 1024,
+            seed: 61,
+            ..PoolConfig::default()
+        };
+        let engine = Box::new(SyntheticEngine { exec_latency: Duration::ZERO, ..Default::default() });
+        let pool = WorkerPool::start_with_engines(cfg, vec![engine]).unwrap();
+        // 10M req/s asks for ~0.1 µs gaps — no generator thread can pace
+        // that, so the slip must be visible instead of silently absorbed
+        let report = run(
+            &pool,
+            &LoadConfig {
+                arrival: Arrival::OpenPoisson { rps: 1.0e7 },
+                requests: 2000,
+                seed: 62,
+                ..LoadConfig::default()
+            },
+        );
+        pool.shutdown();
+        assert_eq!(report.offered, 2000);
+        assert!(
+            report.sched_lag_p99_us > 100.0,
+            "a 10M req/s schedule must report real slip, saw {} µs",
+            report.sched_lag_p99_us
+        );
+        assert!(report.p999_latency_us >= report.p99_latency_us);
     }
 }

@@ -1,11 +1,35 @@
 //! Coordinator metrics: request latencies, throughput, buffer health.
+//!
+//! Latency and refresh-stall samples live in seeded bounded
+//! [`Reservoir`]s, so a worker's accumulator is allocation-bounded no
+//! matter how long it serves: a week-long soak holds the same few KiB as
+//! a ten-second smoke, and the report-time sort is bounded by the
+//! reservoir capacity instead of the request count. Quantiles are exact
+//! below capacity and uniform-subsampled estimates above it, and
+//! [`Metrics::merge`] preserves quantile weight across worker
+//! aggregation (see [`Reservoir::merge`]).
 
 use std::time::{Duration, Instant};
+
+use crate::util::stats::Reservoir;
 
 /// Online latency/throughput accumulator.
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
-    latencies_us: Vec<f64>,
+    latencies_us: Reservoir,
+    /// Per-request refresh-attributable stall (µs): the share of a
+    /// request's latency spent waiting on eDRAM refresh slots that fired
+    /// inside its dispatched batch window. A refresh-aware dispatcher
+    /// pushes these to zero by paying the stall in inter-window slack.
+    refresh_stall_us: Reservoir,
+    /// Exact running sum of latency samples (the reservoir subsamples, so
+    /// the mean is tracked separately).
+    latency_sum_us: f64,
+    /// Total refresh stall charged to requests (µs).
+    pub refresh_stall_total_us: f64,
+    /// Refresh stall absorbed in inter-window slack instead (µs) —
+    /// the refresh work is still paid, just never inside a window.
+    pub refresh_slack_total_us: f64,
     pub requests: u64,
     pub batches: u64,
     pub padded_slots: u64,
@@ -34,14 +58,28 @@ impl Metrics {
 
     pub fn record_latency(&mut self, d: Duration) {
         self.touch();
-        self.latencies_us.push(d.as_secs_f64() * 1e6);
+        let us = d.as_secs_f64() * 1e6;
+        self.latencies_us.push(us);
+        self.latency_sum_us += us;
         self.requests += 1;
     }
 
-    pub fn record_batch(&mut self, real: usize, padded: usize) {
+    /// Refresh-attributable stall charged to one request (0 when its
+    /// window was refresh-free or the dispatcher deferred the stall).
+    pub fn record_refresh_stall(&mut self, us: f64) {
+        self.refresh_stall_us.push(us);
+        self.refresh_stall_total_us += us;
+    }
+
+    /// Refresh stall paid in inter-window slack (refresh-aware dispatch).
+    pub fn record_refresh_slack(&mut self, us: f64) {
+        self.refresh_slack_total_us += us;
+    }
+
+    pub fn record_batch(&mut self, real: usize, executed: usize) {
         self.touch();
         self.batches += 1;
-        self.padded_slots += (padded - real) as u64;
+        self.padded_slots += executed.saturating_sub(real) as u64;
     }
 
     pub fn record_bytes_in(&mut self, bytes: usize) {
@@ -57,10 +95,15 @@ impl Metrics {
     }
 
     /// Fold another worker's accumulator into this one — how the pool
-    /// aggregates per-worker metrics at shutdown. Latency samples concat;
-    /// the serving window spans the union of both windows.
+    /// aggregates per-worker metrics at shutdown. Latency reservoirs merge
+    /// weight-preservingly; the serving window spans the union of both
+    /// windows.
     pub fn merge(&mut self, other: &Metrics) {
-        self.latencies_us.extend_from_slice(&other.latencies_us);
+        self.latencies_us.merge(&other.latencies_us);
+        self.refresh_stall_us.merge(&other.refresh_stall_us);
+        self.latency_sum_us += other.latency_sum_us;
+        self.refresh_stall_total_us += other.refresh_stall_total_us;
+        self.refresh_slack_total_us += other.refresh_slack_total_us;
         self.requests += other.requests;
         self.batches += other.batches;
         self.padded_slots += other.padded_slots;
@@ -112,20 +155,26 @@ impl Metrics {
         self.quantile(0.99)
     }
 
+    /// Tail-of-the-tail latency — the SLO the refresh-aware dispatcher is
+    /// judged on.
+    pub fn p999_us(&self) -> f64 {
+        self.quantile(0.999)
+    }
+
+    /// p99.9 of per-request refresh-attributable stall (µs).
+    pub fn refresh_stall_p999_us(&self) -> f64 {
+        self.refresh_stall_us.quantile(0.999)
+    }
+
     pub fn mean_us(&self) -> f64 {
-        if self.latencies_us.is_empty() {
+        if self.requests == 0 {
             return 0.0;
         }
-        self.latencies_us.iter().sum::<f64>() / self.latencies_us.len() as f64
+        self.latency_sum_us / self.requests as f64
     }
 
     fn quantile(&self, q: f64) -> f64 {
-        if self.latencies_us.is_empty() {
-            return 0.0;
-        }
-        let mut xs = self.latencies_us.clone();
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        crate::util::stats::percentile_sorted(&xs, q * 100.0)
+        self.latencies_us.quantile(q)
     }
 
     /// Batch-occupancy efficiency: fraction of executed slots that carried
@@ -153,6 +202,7 @@ mod tests {
         assert_eq!(m.requests, 5);
         assert!((m.p50_us() - 300.0).abs() < 1.0);
         assert!(m.p99_us() > 900.0);
+        assert!(m.p999_us() >= m.p99_us());
         assert!((m.occupancy() - 5.0 / 8.0).abs() < 1e-12);
     }
 
@@ -160,6 +210,8 @@ mod tests {
     fn empty_metrics_safe() {
         let m = Metrics::default();
         assert_eq!(m.p50_us(), 0.0);
+        assert_eq!(m.p999_us(), 0.0);
+        assert_eq!(m.refresh_stall_p999_us(), 0.0);
         assert_eq!(m.occupancy(), 0.0);
         assert_eq!(m.requests_per_s(), 0.0);
         assert_eq!(m.bytes_per_s(), 0.0);
@@ -205,5 +257,33 @@ mod tests {
         // an idle tail after the last activity must not deflate the rates
         std::thread::sleep(Duration::from_millis(10));
         assert_eq!(m.elapsed_s(), active);
+    }
+
+    #[test]
+    fn long_runs_stay_allocation_bounded() {
+        // the satellite regression: a million-request soak must not grow
+        // the accumulator, and quantiles must stay meaningful
+        let mut m = Metrics::default();
+        let cap = Reservoir::default().capacity();
+        for i in 0..200_000u64 {
+            // latency ramp 1..=1000 µs, uniform
+            m.record_latency(Duration::from_micros(1 + i % 1000));
+            m.record_refresh_stall(if i % 10 == 0 { 50.0 } else { 0.0 });
+        }
+        assert_eq!(m.requests, 200_000);
+        assert!(m.p99_us() > 900.0 && m.p99_us() <= 1000.0, "p99 {}", m.p99_us());
+        assert!(m.p999_us() >= m.p99_us());
+        assert!((m.mean_us() - 500.5).abs() < 1.0, "exact mean survives subsampling");
+        assert!(m.refresh_stall_p999_us() >= 49.0, "stall tail visible");
+        // the kept sample is bounded by the reservoir capacity
+        let clone_probe = format!("{m:?}");
+        assert!(clone_probe.len() < cap * 64, "debug repr bounded (no unbounded vecs)");
+
+        // merging two long-run accumulators stays bounded and keeps the tail
+        let m2 = m.clone();
+        m.merge(&m2);
+        assert_eq!(m.requests, 400_000);
+        assert!(m.p999_us() >= m.p99_us());
+        assert!(m.p99_us() > 850.0);
     }
 }

@@ -8,10 +8,11 @@
 //! simulated accelerator clock (the event-driven counterpart of the
 //! closed-form energy model — the two are cross-checked in tests); the
 //! single-worker batched inference [`server`]; and the production-scale
-//! serving tier — a [`pool`] of K workers over N bank shards behind a
-//! work-stealing, admission-controlled queue, driven by the [`loadgen`]
-//! arrival processes (threads + channels — the offline crate set has no
-//! tokio).
+//! serving tier — a [`pool`] of K workers over N bank shards behind an
+//! event-loop dispatcher (per-worker parking, continuous batching,
+//! refresh-aware stall placement) with admission control, driven by the
+//! [`loadgen`] arrival processes (threads + channels — the offline crate
+//! set has no tokio).
 
 pub mod buffer_manager;
 pub mod loadgen;
@@ -21,7 +22,7 @@ pub mod scheduler;
 pub mod server;
 
 pub use buffer_manager::{BufferManager, TensorHandle};
-pub use loadgen::{Arrival, LoadConfig, LoadReport, Tenant};
-pub use pool::{PoolConfig, SubmitError, WorkerPool};
-pub use scheduler::{simulate_inference, SimReport};
+pub use loadgen::{Arrival, LoadConfig, LoadError, LoadReport, Tenant};
+pub use pool::{InferEngine, PoolConfig, SubmitError, SyntheticEngine, WorkerPool};
+pub use scheduler::{plan_window, simulate_inference, DispatchMode, SimReport, WindowPlan};
 pub use server::{InferenceServer, ServerConfig, ServerStats, ShardStat};

@@ -3,13 +3,40 @@
 //! Replaces the one-thread/one-buffer/one-queue server for heavy traffic:
 //! K workers each own an inference engine plus a [`BufferManager`] over
 //! their slice of the tier's N bank shards (a [`ShardedBackend`] stripe —
-//! per-shard meters, staggered refresh), fed by a bounded work-stealing
-//! queue with admission control:
+//! per-shard meters, staggered refresh), fed by an event-loop dispatcher
+//! with admission control:
 //!
-//! * **Work stealing** — each worker has its own deque; submissions land
-//!   round-robin, a worker drains its own deque front-first and steals from
-//!   the *back* of its neighbours when idle, so a slow worker cannot
-//!   strand queued requests.
+//! * **Event-loop dispatch** — each worker owns a queue + condvar pair and
+//!   parks on *its own* condvar when idle; `submit` routes round-robin over
+//!   the live workers and signals only the target, and only when it is
+//!   actually parked. There is no shared wakeup channel and no periodic
+//!   blind poll on the idle path: a fully idle tier burns no CPU, and a
+//!   submission wakes exactly one worker. Waits become bounded only while
+//!   work is known to be queued somewhere (so a worker can steal from a
+//!   busy or dead peer's queue back).
+//! * **Continuous batching** — a dispatch window merges whatever compatible
+//!   requests are queued instead of always padding to the engine batch: the
+//!   window's jobs are grouped by row width and each same-width group runs
+//!   as one staged pass. Engines that accept partial batches
+//!   ([`InferEngine::supports_partial`]) execute exactly the real rows;
+//!   fixed-shape engines are padded transparently by the
+//!   [`InferEngine::infer_rows`] default.
+//! * **Zero-copy staging** — a request's `i8` payload is staged through the
+//!   worker's buffer shards by reinterpreting the bytes in place
+//!   ([`BufferManager::store_i8`] / [`BufferManager::load_i8`]); only the
+//!   real rows are stored and loaded (a sub-handle over the batch region),
+//!   so the hot path never round-trips through a widening copy.
+//! * **Refresh-aware admission** — the dispatcher plans every window
+//!   against the buffer's refresh slot grid
+//!   ([`super::scheduler::plan_window`]). The virtual refresh schedule is
+//!   identical in both modes (meters and recorded traces are bit-exact);
+//!   what moves is when the modeled wall-clock refresh stall
+//!   (`refresh_stall` per slot, default zero) is paid:
+//!   [`DispatchMode::Oblivious`] stalls the window's requests before their
+//!   replies (the stall lands in their latency tail), while
+//!   [`DispatchMode::RefreshAware`] answers first and absorbs the stall in
+//!   the inter-window slack the planner computed — refresh work still
+//!   happens, but off the request critical path.
 //! * **Admission control** — when total queue depth reaches the
 //!   `high_water` mark, `submit` refuses with a retry-after hint instead of
 //!   letting the queue grow without bound (reject-with-retry-after beats
@@ -21,11 +48,12 @@
 //! * **Graceful degradation** — an inference error carrying
 //!   [`crate::faults::FATAL_MARKER`] is unrecoverable for that worker: it
 //!   answers its in-flight batch with errors, leaves the pool's live set,
-//!   and exits. Admission then scales the high-water mark by the surviving
-//!   capacity (never below one batch), peers steal the dead worker's queued
-//!   jobs, and once *every* worker has died `submit` refuses with `Closed`
-//!   while [`WorkerPool::shutdown`] drains any stranded jobs with error
-//!   replies — the exactly-once guarantee holds through total engine loss.
+//!   re-routes its queued jobs to the surviving workers, and exits.
+//!   Admission then scales the high-water mark by the surviving capacity
+//!   (never below one batch), and once *every* worker has died `submit`
+//!   refuses with `Closed` while [`WorkerPool::shutdown`] drains any
+//!   stranded jobs with error replies — the exactly-once guarantee holds
+//!   through total engine loss.
 //!
 //! Engines: with PJRT artifacts each worker owns a [`ModelRunner`]; without
 //! them a [`SyntheticEngine`] classifies deterministically while *really*
@@ -47,13 +75,27 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-use super::buffer_manager::BufferManager;
+use super::buffer_manager::{BufferManager, TensorHandle};
 use super::metrics::Metrics;
+use super::scheduler::{plan_window, DispatchMode};
 use super::server::{Reply, ServerStats, ShardStat};
 use crate::mem::backend::BackendSpec;
 use crate::mem::mcaimem::EnergyMeter;
 use crate::runtime::executor::ModelRunner;
 use crate::util::rng::{shard_seeds, Pcg64};
+use crate::util::stats::Reservoir;
+
+/// Queue-depth samples kept for the p99 readout (seeded reservoir — the
+/// submit hot path stays allocation-bounded no matter how long the run).
+const DEPTH_SAMPLE_CAP: usize = 4096;
+
+/// Bound on a wait while work is known to be queued somewhere: a worker
+/// wakes at least this often to steal from a busy or dead peer.
+const STEAL_POLL: Duration = Duration::from_millis(1);
+
+/// Bound on a fill-window wait: peer pushes don't signal this worker, so
+/// while collecting a batch it re-checks the steal path on this cadence.
+const FILL_POLL: Duration = Duration::from_micros(200);
 
 /// Serving-tier configuration.
 #[derive(Clone, Debug)]
@@ -79,6 +121,14 @@ pub struct PoolConfig {
     pub flip_p: f64,
     /// Per-batch service-time estimate (µs) scaling the retry-after hint.
     pub est_service_us: u64,
+    /// Where the modeled refresh stall is paid relative to replies (the
+    /// virtual refresh schedule itself is identical either way).
+    pub dispatch: DispatchMode,
+    /// Modeled wall-clock stall per refresh slot that fires inside a
+    /// dispatched window. Zero (the default) disables stall modeling
+    /// entirely — refresh then affects only the virtual meters, exactly
+    /// the pre-existing behaviour.
+    pub refresh_stall: Duration,
     pub seed: u64,
 }
 
@@ -94,6 +144,8 @@ impl Default for PoolConfig {
             sim_compute_s: 2e-6,
             flip_p: 0.01,
             est_service_us: 300,
+            dispatch: DispatchMode::RefreshAware,
+            refresh_stall: Duration::ZERO,
             seed: 0xD00D,
         }
     }
@@ -123,14 +175,44 @@ impl std::fmt::Display for SubmitError {
 
 impl std::error::Error for SubmitError {}
 
-/// One worker's inference engine: turns a staged `batch × dim` int8 tensor
-/// into per-row class indices.
+/// One worker's inference engine: turns a staged int8 tensor into per-row
+/// class indices.
 pub trait InferEngine: Send {
     /// Rows per executed batch.
     fn batch(&self) -> usize;
     /// Bytes per row.
     fn dim(&self) -> usize;
+    /// Full-batch inference: `x` is exactly `batch × dim`.
     fn infer(&mut self, x: &[i8]) -> Result<Vec<usize>>;
+
+    /// Whether [`Self::infer_rows`] executes partial batches natively. The
+    /// dispatcher uses this for padding accounting: a partial-capable
+    /// engine executes `rows` slots, a fixed-shape one executes `batch`.
+    fn supports_partial(&self) -> bool {
+        false
+    }
+
+    /// Inference over the first `rows` rows (`x` is `rows × dim`,
+    /// `rows <= batch`). The default pads up to the fixed batch shape and
+    /// truncates the classes — engines that can execute a partial batch
+    /// directly override this (and [`Self::supports_partial`]).
+    fn infer_rows(&mut self, x: &[i8], rows: usize) -> Result<Vec<usize>> {
+        let (b, d) = (self.batch(), self.dim());
+        anyhow::ensure!(x.len() == rows * d && rows <= b, "partial batch shape mismatch");
+        if rows == b {
+            return self.infer(x);
+        }
+        let mut full = vec![0i8; b * d];
+        full[..x.len()].copy_from_slice(x);
+        let mut classes = self.infer(&full)?;
+        anyhow::ensure!(
+            classes.len() >= rows,
+            "engine returned {} classes for {rows} rows",
+            classes.len()
+        );
+        classes.truncate(rows);
+        Ok(classes)
+    }
 }
 
 /// PJRT-less engine: a deterministic classifier plus a *real* block for the
@@ -168,6 +250,18 @@ impl InferEngine for SyntheticEngine {
 
     fn infer(&mut self, x: &[i8]) -> Result<Vec<usize>> {
         anyhow::ensure!(x.len() == self.batch * self.dim, "batch shape mismatch");
+        self.infer_rows(x, self.batch)
+    }
+
+    fn supports_partial(&self) -> bool {
+        true
+    }
+
+    fn infer_rows(&mut self, x: &[i8], rows: usize) -> Result<Vec<usize>> {
+        anyhow::ensure!(
+            x.len() == rows * self.dim && rows <= self.batch,
+            "partial batch shape mismatch"
+        );
         if !self.exec_latency.is_zero() {
             std::thread::sleep(self.exec_latency);
         }
@@ -218,17 +312,35 @@ struct Job {
     reply: mpsc::Sender<Reply>,
 }
 
+/// One worker's dispatch endpoint: its queue, its private condvar, and the
+/// park/live flags the event loop routes by.
+struct WorkerSlot {
+    q: Mutex<VecDeque<Job>>,
+    cv: Condvar,
+    /// The owner is blocked on `cv`. Set and cleared while holding `q`'s
+    /// lock, so a submitter that pushed under the same lock and then reads
+    /// `true` knows its targeted signal cannot be lost.
+    parked: AtomicBool,
+    /// The owner still serves; cleared when its engine dies fatally.
+    /// `submit` routes around dead slots.
+    live: AtomicBool,
+}
+
 struct Shared {
-    /// One deque per worker (owner pops the front, thieves pop the back).
-    queues: Vec<Mutex<VecDeque<Job>>>,
+    /// One dispatch slot per worker (owner pops its queue front, thieves
+    /// pop the back).
+    slots: Vec<WorkerSlot>,
     /// Total queued (not yet popped) requests — the admission signal.
     depth: AtomicUsize,
     closed: AtomicBool,
-    sleep_mx: Mutex<()>,
-    cv: Condvar,
     rejected: AtomicU64,
-    /// Queue depth sampled at every accepted submit (for the p99 readout).
-    depth_samples: Mutex<Vec<f64>>,
+    /// Queue depth sampled at accepted submits (bounded seeded reservoir).
+    /// `depth_offers` counts offers so the Algorithm-R keep/drop decision
+    /// runs lock-free; the mutex is taken only for kept samples, a rate
+    /// that decays to `cap / n`.
+    depth_samples: Mutex<Reservoir>,
+    depth_offers: AtomicU64,
+    depth_seed: u64,
     rr: AtomicUsize,
     /// Workers still serving. A fatally-crashed worker decrements this on
     /// the way out; admission scales its high-water mark by `alive/workers`
@@ -237,14 +349,55 @@ struct Shared {
 }
 
 impl Shared {
+    /// First live worker at or after `start` (wrapping), if any.
+    fn route_live(&self, start: usize) -> Option<usize> {
+        let n = self.slots.len();
+        (0..n).map(|i| (start + i) % n).find(|&k| self.slots[k].live.load(Ordering::SeqCst))
+    }
+
+    /// Push a job onto worker `k`'s queue and signal `k` iff it is parked.
+    /// Does not touch `depth` — callers account for it.
+    fn push_job(&self, k: usize, job: Job) {
+        let slot = &self.slots[k];
+        let mut q = slot.q.lock().unwrap();
+        q.push_back(job);
+        // read under the lock: park transitions happen under it too, so
+        // "parked now" means the owner is committed to (or inside) a wait
+        // on this condvar and the signal cannot be lost
+        let parked = slot.parked.load(Ordering::SeqCst);
+        drop(q);
+        if parked {
+            slot.cv.notify_one();
+        }
+    }
+
+    /// Record one accepted submit's observed depth into the reservoir.
+    fn sample_depth(&self, d: usize) {
+        let i = self.depth_offers.fetch_add(1, Ordering::Relaxed);
+        if let Some(slot) = Reservoir::slot_for(self.depth_seed, i, DEPTH_SAMPLE_CAP) {
+            self.depth_samples.lock().unwrap().place(slot, d as f64);
+        }
+    }
+
+    /// Wake every worker. Each signal is sent while holding that slot's
+    /// queue lock, so a worker between its wake-condition check and its
+    /// wait cannot miss it (the signal waits for the lock the worker still
+    /// holds).
+    fn wake_all(&self) {
+        for slot in &self.slots {
+            let _q = slot.q.lock().unwrap();
+            slot.cv.notify_all();
+        }
+    }
+
     fn try_pop(&self, k: usize) -> Option<Job> {
-        if let Some(j) = self.queues[k].lock().unwrap().pop_front() {
+        if let Some(j) = self.slots[k].q.lock().unwrap().pop_front() {
             self.depth.fetch_sub(1, Ordering::Relaxed);
             return Some(j);
         }
-        let n = self.queues.len();
+        let n = self.slots.len();
         for i in 1..n {
-            if let Some(j) = self.queues[(k + i) % n].lock().unwrap().pop_back() {
+            if let Some(j) = self.slots[(k + i) % n].q.lock().unwrap().pop_back() {
                 self.depth.fetch_sub(1, Ordering::Relaxed);
                 return Some(j);
             }
@@ -254,7 +407,17 @@ impl Shared {
 
     /// Block until a job is available; `None` once the pool is closed and
     /// every queue has drained.
-    fn pop_or_wait(&self, k: usize) -> Option<Job> {
+    ///
+    /// Parking protocol: the worker publishes `parked` and enters the wait
+    /// while holding its own queue lock. A submitter pushes under that same
+    /// lock, so by the time it observes `parked` the worker is committed to
+    /// the wait — the targeted signal cannot be lost. When the whole tier
+    /// is idle (`depth == 0`, read *after* publishing `parked`) the wait is
+    /// untimed: the next submit wakes exactly this worker, and a dying
+    /// peer's hand-off or `shutdown` signals through [`Shared::wake_all`].
+    /// With work queued somewhere else the wait is bounded by
+    /// [`STEAL_POLL`] so this worker can steal from a busy or dead peer.
+    fn next_job(&self, k: usize) -> Option<Job> {
         loop {
             if let Some(j) = self.try_pop(k) {
                 return Some(j);
@@ -264,9 +427,31 @@ impl Shared {
                 // and the flag read
                 return self.try_pop(k);
             }
-            let guard = self.sleep_mx.lock().unwrap();
-            // the 1 ms timeout bounds any missed-wakeup window
-            let _ = self.cv.wait_timeout(guard, Duration::from_millis(1)).unwrap();
+            let slot = &self.slots[k];
+            let mut q = slot.q.lock().unwrap();
+            if let Some(j) = q.pop_front() {
+                // a push landed between try_pop and taking the lock
+                self.depth.fetch_sub(1, Ordering::Relaxed);
+                return Some(j);
+            }
+            slot.parked.store(true, Ordering::SeqCst);
+            // `closed` re-checked after publishing parked: shutdown sets it
+            // before wake_all, and wake_all's lock-held signal serializes
+            // with this critical section — one of the two is always seen
+            if self.closed.load(Ordering::SeqCst) {
+                slot.parked.store(false, Ordering::SeqCst);
+                continue;
+            }
+            q = if self.depth.load(Ordering::SeqCst) == 0 {
+                slot.cv.wait(q).unwrap()
+            } else {
+                slot.cv.wait_timeout(q, STEAL_POLL).unwrap().0
+            };
+            slot.parked.store(false, Ordering::SeqCst);
+            if let Some(j) = q.pop_front() {
+                self.depth.fetch_sub(1, Ordering::Relaxed);
+                return Some(j);
+            }
         }
     }
 }
@@ -377,13 +562,20 @@ impl WorkerPool {
         }
         let batch = engines[0].batch();
         let shared = Arc::new(Shared {
-            queues: (0..cfg.workers).map(|_| Mutex::new(VecDeque::new())).collect(),
+            slots: (0..cfg.workers)
+                .map(|_| WorkerSlot {
+                    q: Mutex::new(VecDeque::new()),
+                    cv: Condvar::new(),
+                    parked: AtomicBool::new(false),
+                    live: AtomicBool::new(true),
+                })
+                .collect(),
             depth: AtomicUsize::new(0),
             closed: AtomicBool::new(false),
-            sleep_mx: Mutex::new(()),
-            cv: Condvar::new(),
             rejected: AtomicU64::new(0),
-            depth_samples: Mutex::new(Vec::new()),
+            depth_samples: Mutex::new(Reservoir::new(DEPTH_SAMPLE_CAP, cfg.seed ^ 0xDE97)),
+            depth_offers: AtomicU64::new(0),
+            depth_seed: cfg.seed ^ 0xDE97,
             rr: AtomicUsize::new(0),
             alive: AtomicUsize::new(cfg.workers),
         });
@@ -457,14 +649,24 @@ impl WorkerPool {
         }
         let (reply_tx, reply_rx) = mpsc::channel();
         let job = Job { row, submitted: Instant::now(), reply: reply_tx };
-        let k = self.shared.rr.fetch_add(1, Ordering::Relaxed) % self.cfg.workers;
+        let start = self.shared.rr.fetch_add(1, Ordering::Relaxed) % self.cfg.workers;
+        let Some(k) = self.shared.route_live(start) else {
+            // the last survivor died between the alive check and routing
+            return Err(SubmitError::Closed);
+        };
         // count the job before it becomes poppable: a fast worker popping
         // (and decrementing) between push and a late increment would wrap
         // the counter to usize::MAX
         let d = self.shared.depth.fetch_add(1, Ordering::Relaxed) + 1;
-        self.shared.queues[k].lock().unwrap().push_back(job);
-        self.shared.depth_samples.lock().unwrap().push(d as f64);
-        self.shared.cv.notify_one();
+        self.shared.push_job(k, job);
+        self.shared.sample_depth(d);
+        if !self.shared.slots[k].live.load(Ordering::SeqCst) {
+            // the target died between routing and push, and its exit drain
+            // may already have run — kick everyone so a survivor (possibly
+            // in an untimed park) steals this job instead of it waiting
+            // for shutdown
+            self.shared.wake_all();
+        }
         Ok(reply_rx)
     }
 
@@ -478,7 +680,7 @@ impl WorkerPool {
     /// and aggregate their metrics plus the per-shard meter break-down.
     pub fn shutdown(self) -> ServerStats {
         self.shared.closed.store(true, Ordering::SeqCst);
-        self.shared.cv.notify_all();
+        self.shared.wake_all();
         let mut merged = Metrics::default();
         let mut shards = Vec::new();
         for (k, w) in self.workers.into_iter().enumerate() {
@@ -494,8 +696,8 @@ impl WorkerPool {
         // jobs can be stranded only when workers crashed fatally before the
         // close (nobody left to pop or steal); answer them here so every
         // accepted request still gets exactly one reply
-        for q in &self.shared.queues {
-            let mut q = q.lock().unwrap();
+        for slot in &self.shared.slots {
+            let mut q = slot.q.lock().unwrap();
             while let Some(job) = q.pop_front() {
                 self.shared.depth.fetch_sub(1, Ordering::Relaxed);
                 merged.record_error();
@@ -510,15 +712,7 @@ impl WorkerPool {
             .sum();
         let mut stats = ServerStats::from_metrics(&merged);
         stats.rejected = self.shared.rejected.load(Ordering::Relaxed);
-        stats.queue_depth_p99 = {
-            let mut xs = self.shared.depth_samples.lock().unwrap().clone();
-            if xs.is_empty() {
-                0.0
-            } else {
-                xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
-                crate::util::stats::percentile_sorted(&xs, 99.0)
-            }
-        };
+        stats.queue_depth_p99 = self.shared.depth_samples.lock().unwrap().quantile(0.99);
         stats.shards = shards
             .into_iter()
             .enumerate()
@@ -538,6 +732,116 @@ impl WorkerPool {
     }
 }
 
+/// Serve one same-width group as a single staged pass. Returns `true` if
+/// the engine failure (if any) was fatal for this worker.
+#[allow(clippy::too_many_arguments)]
+fn serve_group(
+    group: Vec<Job>,
+    engine: &mut dyn InferEngine,
+    bm: &mut BufferManager,
+    stage: TensorHandle,
+    cfg: &PoolConfig,
+    metrics: &mut Metrics,
+    x: &mut Vec<i8>,
+) -> bool {
+    let batch = engine.batch();
+    let dim = engine.dim();
+    let real = group.len();
+    x.clear();
+    x.resize(real * dim, 0);
+    for (i, job) in group.iter().enumerate() {
+        let n = job.row.len().min(dim);
+        x[i * dim..i * dim + n].copy_from_slice(&job.row[..n]);
+        metrics.record_bytes_in(n);
+    }
+    // continuous batching: a partial-capable engine executes only the real
+    // rows; a fixed-shape one still pays (and reports) the padded slots
+    metrics.record_batch(real, if engine.supports_partial() { real } else { batch });
+
+    // plan this window against the refresh slot grid before advancing the
+    // clock: `ops_due` is the refresh work the window will absorb and
+    // `slack_s` the gap to the next slot after it — what a refresh-aware
+    // dispatcher schedules the stall into
+    let plan = plan_window(bm.next_refresh_due(), bm.refresh.slot(), bm.now(), cfg.sim_compute_s);
+    let stall = cfg
+        .refresh_stall
+        .saturating_mul(plan.ops_due.min(u32::MAX as u64) as u32);
+    let stall_us = stall.as_secs_f64() * 1e6;
+
+    // zero-copy staging through this worker's buffer shards: the request
+    // bytes are viewed as device bytes in place, and only the real rows go
+    // through store → compute tick → load (a sub-handle over the batch
+    // region)
+    let h = TensorHandle { offset: stage.offset, len: real * dim, id: stage.id };
+    let staged: Vec<i8> = match bm.store_i8(h, x) {
+        Ok(()) => {
+            bm.tick(cfg.sim_compute_s);
+            bm.load_i8(h)
+        }
+        Err(_) => x.clone(), // sizes are validated at start; defensive only
+    };
+
+    if matches!(cfg.dispatch, DispatchMode::Oblivious) && !stall.is_zero() {
+        // refresh-oblivious: the slots that fired inside the window stall
+        // the array before the batch completes — every request in the
+        // group eats the pause in its latency
+        std::thread::sleep(stall);
+    }
+
+    match engine.infer_rows(&staged, real) {
+        Ok(classes) => {
+            for (i, job) in group.into_iter().enumerate() {
+                let latency = job.submitted.elapsed();
+                metrics.record_latency(latency);
+                metrics.record_refresh_stall(if cfg.dispatch == DispatchMode::Oblivious {
+                    stall_us
+                } else {
+                    0.0
+                });
+                let _ = job.reply.send(Ok((classes[i], latency)));
+            }
+            if cfg.dispatch == DispatchMode::RefreshAware && !stall.is_zero() {
+                // refresh-aware: the same stall is paid *after* the replies
+                // left, absorbed into the inter-window slack the planner
+                // computed — off every request's critical path
+                std::thread::sleep(stall);
+                metrics.record_refresh_slack(stall_us);
+            }
+            false
+        }
+        Err(e) => {
+            // answer every request in the group with the error — exactly
+            // once, never a dropped channel
+            let msg = format!("inference failed: {e:#}");
+            let fatal = msg.contains(crate::faults::FATAL_MARKER);
+            for job in group {
+                metrics.record_error();
+                let _ = job.reply.send(Err(anyhow::anyhow!("{msg}")));
+            }
+            fatal
+        }
+    }
+}
+
+/// Fatal-crash exit path: leave the live set, then re-route everything this
+/// worker still holds (un-served jobs from its window plus its queue) to
+/// the survivors — they may be in untimed parks and would otherwise never
+/// look at a dead peer's queue. With no survivors the jobs stay parked in
+/// the dead queue for shutdown's error drain.
+fn abandon_worker(k: usize, shared: &Shared, in_hand: Vec<Job>) {
+    shared.slots[k].live.store(false, Ordering::SeqCst);
+    shared.alive.fetch_sub(1, Ordering::SeqCst);
+    // jobs already popped from a queue re-enter one: re-count them
+    shared.depth.fetch_add(in_hand.len(), Ordering::Relaxed);
+    let queued: Vec<Job> = shared.slots[k].q.lock().unwrap().drain(..).collect();
+    for job in in_hand.into_iter().chain(queued) {
+        match shared.route_live(k + 1) {
+            Some(t) => shared.push_job(t, job),
+            None => shared.slots[k].q.lock().unwrap().push_back(job),
+        }
+    }
+}
+
 fn worker_loop(
     k: usize,
     shared: Arc<Shared>,
@@ -549,8 +853,11 @@ fn worker_loop(
     let batch = engine.batch();
     let dim = engine.dim();
     let stage = bm.alloc(batch * dim).expect("stage capacity validated at start");
+    // reused staging scratch: the submit → serve hot path allocates only
+    // the per-request row and reply channel
+    let mut x: Vec<i8> = Vec::with_capacity(batch * dim);
 
-    while let Some(first) = shared.pop_or_wait(k) {
+    'serve: while let Some(first) = shared.next_job(k) {
         let mut pending = vec![first];
         let deadline = Instant::now() + cfg.batch_window;
         while pending.len() < batch {
@@ -562,61 +869,37 @@ fn worker_loop(
             if now >= deadline || shared.closed.load(Ordering::SeqCst) {
                 break;
             }
-            let guard = shared.sleep_mx.lock().unwrap();
-            let _ = shared
-                .cv
-                .wait_timeout(guard, (deadline - now).min(Duration::from_micros(200)))
-                .unwrap();
+            // park on our own condvar for the remaining window (capped so
+            // the steal path is re-checked — peer pushes don't signal us)
+            let slot = &shared.slots[k];
+            let mut q = slot.q.lock().unwrap();
+            if q.is_empty() {
+                slot.parked.store(true, Ordering::SeqCst);
+                q = slot.cv.wait_timeout(q, (deadline - now).min(FILL_POLL)).unwrap().0;
+                slot.parked.store(false, Ordering::SeqCst);
+            }
+            if let Some(j) = q.pop_front() {
+                shared.depth.fetch_sub(1, Ordering::Relaxed);
+                pending.push(j);
+            }
         }
 
-        // assemble the padded batch
-        let real = pending.len();
-        let mut x = vec![0i8; batch * dim];
-        for (i, job) in pending.iter().enumerate() {
-            let n = job.row.len().min(dim);
-            for (dstv, &srcv) in x[i * dim..i * dim + n].iter_mut().zip(&job.row[..n]) {
-                *dstv = srcv;
-            }
-            metrics.record_bytes_in(n);
-        }
-        metrics.record_batch(real, batch);
-
-        // stage the batch through this worker's buffer shards: the memory
-        // technology sees the serving traffic (store → compute → load)
-        let bytes: Vec<u8> = x.iter().map(|&v| v as u8).collect();
-        let staged = match bm.store(stage, &bytes) {
-            Ok(()) => {
-                bm.tick(cfg.sim_compute_s);
-                bm.load(stage)
-            }
-            Err(_) => bytes, // sizes are validated at start; defensive only
-        };
-        let staged_i8: Vec<i8> = staged.iter().map(|&b| b as i8).collect();
-
-        match engine.infer(&staged_i8) {
-            Ok(classes) => {
-                for (i, job) in pending.into_iter().enumerate() {
-                    let latency = job.submitted.elapsed();
-                    metrics.record_latency(latency);
-                    let _ = job.reply.send(Ok((classes[i], latency)));
-                }
-            }
-            Err(e) => {
-                // answer every pending request with the error — exactly
-                // once, never a dropped channel
-                let msg = format!("inference failed: {e:#}");
-                let fatal = msg.contains(crate::faults::FATAL_MARKER);
-                for job in pending {
-                    metrics.record_error();
-                    let _ = job.reply.send(Err(anyhow::anyhow!("{msg}")));
-                }
-                if fatal {
-                    // the engine is gone for good: leave the live set and
-                    // exit. Already-queued jobs survive — peers steal them,
-                    // and shutdown drains any leftovers once everyone dies.
-                    shared.alive.fetch_sub(1, Ordering::SeqCst);
-                    break;
-                }
+        // continuous batching: merge same-width requests into one staged
+        // pass each. The sort is stable, so arrival order survives within
+        // a width class.
+        pending.sort_by_key(|j| j.row.len());
+        let mut jobs = VecDeque::from(pending);
+        while !jobs.is_empty() {
+            let width = jobs[0].row.len();
+            let n = jobs.iter().take_while(|j| j.row.len() == width).count();
+            let group: Vec<Job> = jobs.drain(..n).collect();
+            let fatal =
+                serve_group(group, engine.as_mut(), &mut bm, stage, &cfg, &mut metrics, &mut x);
+            if fatal {
+                // the engine is gone for good: hand the rest of the window
+                // and our queue to the survivors, leave the live set, exit
+                abandon_worker(k, &shared, jobs.into_iter().collect());
+                break 'serve;
             }
         }
     }
@@ -724,8 +1007,8 @@ mod tests {
         .unwrap();
         let rxs: Vec<_> = (0..16).map(|_| pool.submit(vec![7i8; 784]).unwrap()).collect();
         wait_alive(&pool, 1);
-        // the degraded pool still classifies (stealing routes around the
-        // dead worker's queue)
+        // the degraded pool still classifies (the dying worker's hand-off
+        // and stealing route around the dead queue)
         let (_, _) = pool.classify(vec![9i8; 784]).unwrap();
         let replies: Vec<_> = rxs.into_iter().map(|rx| rx.recv()).collect();
         let lost = replies.iter().filter(|r| r.is_err()).count();
@@ -769,5 +1052,118 @@ mod tests {
         let by_worker: Vec<usize> =
             (0..2).map(|w| stats.shards.iter().filter(|s| s.worker == w).count()).collect();
         assert_eq!(by_worker, vec![3, 2]);
+    }
+
+    /// Engine that records the row count of every `infer_rows` call and can
+    /// gate its first call open so a test can queue work behind it.
+    struct GroupingProbe {
+        calls: Arc<Mutex<Vec<usize>>>,
+        gate: Arc<(Mutex<bool>, Condvar)>,
+        gated_once: bool,
+    }
+
+    impl InferEngine for GroupingProbe {
+        fn batch(&self) -> usize {
+            4
+        }
+        fn dim(&self) -> usize {
+            32
+        }
+        fn infer(&mut self, x: &[i8]) -> Result<Vec<usize>> {
+            self.infer_rows(x, 4)
+        }
+        fn supports_partial(&self) -> bool {
+            true
+        }
+        fn infer_rows(&mut self, x: &[i8], rows: usize) -> Result<Vec<usize>> {
+            assert_eq!(x.len(), rows * 32);
+            self.calls.lock().unwrap().push(rows);
+            if !self.gated_once {
+                self.gated_once = true;
+                let (mx, cv) = &*self.gate;
+                let mut open = mx.lock().unwrap();
+                while !*open {
+                    open = cv.wait(open).unwrap();
+                }
+            }
+            Ok(vec![0; rows])
+        }
+    }
+
+    #[test]
+    fn windows_merge_per_width_groups_without_padding() {
+        // block the worker on a first request, queue four more with two
+        // distinct widths, release: the worker must drain the window as
+        // exactly two partial passes (one per width), not four padded ones.
+        let calls = Arc::new(Mutex::new(Vec::new()));
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let engine = GroupingProbe { calls: Arc::clone(&calls), gate: Arc::clone(&gate), gated_once: false };
+        let mut cfg = quick_cfg(1, 1);
+        cfg.batch_window = Duration::from_millis(50);
+        let pool = WorkerPool::start_with_engines(cfg, vec![Box::new(engine)]).unwrap();
+
+        let blocker = pool.submit(vec![1i8; 32]).unwrap();
+        // wait until the worker is inside the gated first call
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while calls.lock().unwrap().is_empty() {
+            assert!(Instant::now() < deadline, "worker never reached the engine");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let queued: Vec<_> = [16usize, 32, 16, 32]
+            .iter()
+            .map(|&w| pool.submit(vec![2i8; w]).unwrap())
+            .collect();
+        {
+            let (mx, cv) = &*gate;
+            *mx.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        for rx in std::iter::once(blocker).chain(queued) {
+            rx.recv().unwrap().unwrap();
+        }
+        let stats = pool.shutdown();
+        assert_eq!(stats.requests, 5);
+        // first call: the gated single request; then the four queued jobs
+        // grouped by width — narrow rows first (stable sort by width)
+        assert_eq!(*calls.lock().unwrap(), vec![1, 2, 2]);
+        // partial-capable engine ⇒ no padded slots reported at all
+        assert_eq!(stats.occupancy, 1.0);
+    }
+
+    #[test]
+    fn refresh_stall_lands_on_requests_only_in_oblivious_mode() {
+        // same backend, same traffic, refresh stall modeled at 2 µs/slot:
+        // the oblivious dispatcher charges the stall to request latency,
+        // the aware one records it as slack and keeps requests clean. The
+        // virtual refresh meters must agree bit-for-bit.
+        let run = |dispatch: DispatchMode| {
+            let cfg = PoolConfig {
+                backend: BackendSpec::mcaimem_default(),
+                workers: 1,
+                shards: 1,
+                buffer_bytes: 256 * 1024,
+                high_water: 10_000,
+                dispatch,
+                refresh_stall: Duration::from_micros(2),
+                seed: 77,
+                ..PoolConfig::default()
+            };
+            let pool = WorkerPool::start_with_engines(cfg, fast_engines(1)).unwrap();
+            for i in 0..8 {
+                pool.classify(vec![i as i8; 784]).unwrap();
+            }
+            pool.shutdown()
+        };
+        let obl = run(DispatchMode::Oblivious);
+        let aware = run(DispatchMode::RefreshAware);
+        // mcaimem at sim_compute_s = 2 µs fires ~40 slots per window: the
+        // oblivious tier must attribute stall to requests, the aware one
+        // must not — it reports the same time as slack instead
+        assert!(obl.refresh_stall_p999_us > 0.0, "oblivious stall must hit the tail");
+        assert_eq!(aware.refresh_stall_p999_us, 0.0, "aware requests must see zero stall");
+        assert!(aware.refresh_slack_total_us > 0.0, "the stall is paid in slack instead");
+        // identical virtual schedule: same refresh count on the meters
+        let refreshes = |s: &ServerStats| s.shards.iter().map(|sh| sh.refreshes).sum::<u64>();
+        assert_eq!(refreshes(&obl), refreshes(&aware), "modes must not change the schedule");
     }
 }

@@ -91,6 +91,9 @@ pub struct ServerStats {
     pub mean_latency_us: f64,
     pub p50_latency_us: f64,
     pub p99_latency_us: f64,
+    /// p99.9 request latency (µs) — the SLO tail the serving sweeps gate
+    /// on; estimated from the same bounded reservoir as p50/p99.
+    pub p999_latency_us: f64,
     pub occupancy: f64,
     /// Request payload bytes accepted over the server's lifetime.
     pub bytes_in: u64,
@@ -107,6 +110,16 @@ pub struct ServerStats {
     /// p99 of the admission-queue depth sampled at every accepted submit
     /// (pool only).
     pub queue_depth_p99: f64,
+    /// p99.9 of the per-request refresh stall (µs) — the part of the tail
+    /// attributable to refresh slots firing on the request critical path.
+    /// Zero under refresh-aware dispatch (the stall moves off-path) and
+    /// whenever stall modeling is off (`refresh_stall == 0`).
+    pub refresh_stall_p999_us: f64,
+    /// Total modeled refresh stall charged to requests (µs, pool only).
+    pub refresh_stall_total_us: f64,
+    /// Total modeled refresh stall absorbed into inter-window slack
+    /// instead of request latency (µs; refresh-aware dispatch only).
+    pub refresh_slack_total_us: f64,
     /// Per-shard occupancy/refresh/energy counters (pool only; empty for
     /// the single-worker server, which owns no buffer shards).
     pub shards: Vec<ShardStat>,
@@ -122,6 +135,7 @@ impl ServerStats {
             mean_latency_us: m.mean_us(),
             p50_latency_us: m.p50_us(),
             p99_latency_us: m.p99_us(),
+            p999_latency_us: m.p999_us(),
             occupancy: m.occupancy(),
             bytes_in: m.bytes_in,
             requests_per_s: m.requests_per_s(),
@@ -129,6 +143,9 @@ impl ServerStats {
             errors: m.errors,
             rejected: 0,
             queue_depth_p99: 0.0,
+            refresh_stall_p999_us: m.refresh_stall_p999_us(),
+            refresh_stall_total_us: m.refresh_stall_total_us,
+            refresh_slack_total_us: m.refresh_slack_total_us,
             shards: Vec::new(),
         }
     }

@@ -17,7 +17,7 @@ use anyhow::{bail, Result};
 use mcaimem::cli::ArgParser;
 use mcaimem::coordinator::loadgen::{Arrival, LoadConfig, Tenant};
 use mcaimem::coordinator::pool::{PoolConfig, WorkerPool};
-use mcaimem::coordinator::scheduler::simulate_inference;
+use mcaimem::coordinator::scheduler::{simulate_inference, DispatchMode};
 use mcaimem::mem::backend::BackendSpec;
 use mcaimem::runtime::executor::ModelRunner;
 use mcaimem::scalesim::accelerator::AcceleratorConfig;
@@ -67,13 +67,20 @@ USAGE:
   mcaimem serve [--backend SPEC] [--shards N] [--workers K] [--target-rps R]
                 [--requests N] [--clients C] [--high-water H] [--buffer-kb KB]
                 [--mix NET,NET] [--p P] [--window-ms MS] [--artifacts DIR]
-                [--sweep] [--no-retry]
+                [--dispatch aware|oblivious] [--refresh-stall-us US]
+                [--sweep] [--rates R1,R2,..] [--json FILE] [--quick] [--no-retry]
       run the sharded multi-worker serving tier: K workers over N striped
-      bank shards behind an admission-controlled work-stealing queue.
-      --target-rps > 0 drives open-loop Poisson arrivals; otherwise C
-      closed-loop clients (default 4×K). --sweep prints the workers×shards
-      saturation sweep instead. PJRT engines are used when --artifacts
-      holds an export; otherwise a latency-faithful synthetic engine.
+      bank shards behind an event-loop dispatcher (per-worker parking,
+      continuous batching) with admission control. --target-rps > 0 drives
+      open-loop Poisson arrivals; otherwise C closed-loop clients (default
+      4×K). --dispatch picks where the modeled refresh stall lands
+      (aware = off the request path, the default) and --refresh-stall-us
+      sets the stall per refresh slot (0 = off). --sweep prints the
+      workers×shards saturation sweep; --rates holds the tier at fixed
+      offered rates and reads the p99.9 SLO tail (--json writes either
+      sweep's artifact; --quick shrinks them for CI). PJRT engines are used
+      when --artifacts holds an export; otherwise a latency-faithful
+      synthetic engine.
   mcaimem conform [--backend SPECS] [--ops N] [--seed S] [--shards N]
                   [--bytes-kb KB] [--no-shrink] [--quick] [--save-dir DIR]
                   [--replay FILE] [--json FILE]
@@ -143,7 +150,8 @@ fn run() -> Result<()> {
             "csv", "artifacts", "network", "platform", "backend", "seed", "requests", "p",
             "window-ms", "shards", "workers", "target-rps", "clients", "high-water",
             "buffer-kb", "mix", "ops", "bytes-kb", "save-dir", "replay", "json", "space",
-            "strategy", "samples", "fidelity", "diff", "faults", "point",
+            "strategy", "samples", "fidelity", "diff", "faults", "point", "rates",
+            "dispatch", "refresh-stall-us",
         ],
         &["quick", "help", "sweep", "no-retry", "no-shrink", "paper-gate", "compiled", "table"],
     );
@@ -388,17 +396,50 @@ fn cmd_compile(args: &mcaimem::cli::ParsedArgs) -> Result<()> {
 }
 
 fn cmd_serve(args: &mcaimem::cli::ParsedArgs) -> Result<()> {
+    use mcaimem::report::serving::{self, RateSweepConfig};
+
     let backend = backend_single(args)?;
     let requests = args.get_usize("requests", 1024)?;
     let seed = args.get_usize("seed", 0xD00D)? as u64;
+    let quick = args.has_flag("quick");
+    let dispatch: DispatchMode = match args.get("dispatch") {
+        None => DispatchMode::default(),
+        Some(s) => s.parse().map_err(|e: String| anyhow::anyhow!(e))?,
+    };
+    let refresh_stall =
+        Duration::from_secs_f64(args.get_f64("refresh-stall-us", 0.0)?.max(0.0) * 1e-6);
+
+    if let Some(rates) = args.get_f64_list("rates")? {
+        // open-loop rate sweep: hold the tier at each offered rate and read
+        // the p99.9 SLO tail + schedule slip
+        let workers = args.get_usize("workers", 4)?;
+        let sweep_cfg = RateSweepConfig {
+            workers,
+            shards: args.get_usize("shards", workers)?,
+            requests: if quick { requests.min(1024) } else { requests.max(4096) },
+            dispatch,
+            refresh_stall,
+            seed,
+        };
+        let (table, points) = serving::rate_sweep(&backend, &rates, &sweep_cfg)?;
+        println!("{}", table.render());
+        if let Some(path) = args.get("json") {
+            let doc = serving::rate_sweep_json(&backend, &sweep_cfg, &points);
+            mcaimem::util::json::save_pretty(std::path::Path::new(path), &doc)?;
+            println!("rate sweep written to {path}");
+        }
+        return Ok(());
+    }
 
     if args.has_flag("sweep") {
-        let (table, points) = mcaimem::report::serving::saturation_sweep(
-            &backend,
-            &mcaimem::report::serving::DEFAULT_SWEEP,
-            requests,
-            seed,
-        )?;
+        let grid: &[(usize, usize)] = if quick {
+            &[(1, 1), (2, 2)]
+        } else {
+            &mcaimem::report::serving::DEFAULT_SWEEP
+        };
+        let sweep_requests = if quick { requests.min(256) } else { requests };
+        let (table, points) =
+            mcaimem::report::serving::saturation_sweep(&backend, grid, sweep_requests, seed)?;
         println!("{}", table.render());
         if let (Some(base), Some(peak)) = (points.first(), points.iter().reduce(|a, b| {
             if b.achieved_rps > a.achieved_rps { b } else { a }
@@ -410,6 +451,11 @@ fn cmd_serve(args: &mcaimem::cli::ParsedArgs) -> Result<()> {
                 peak.shards,
                 fnum(peak.achieved_rps / base.achieved_rps.max(1e-9), 2)
             );
+        }
+        if let Some(path) = args.get("json") {
+            let doc = serving::saturation_sweep_json(&backend, &points);
+            mcaimem::util::json::save_pretty(std::path::Path::new(path), &doc)?;
+            println!("saturation sweep written to {path}");
         }
         return Ok(());
     }
@@ -427,6 +473,8 @@ fn cmd_serve(args: &mcaimem::cli::ParsedArgs) -> Result<()> {
         },
         high_water: args.get_usize("high-water", 256)?,
         flip_p: args.get_f64("p", 0.01)?,
+        dispatch,
+        refresh_stall,
         seed,
         ..PoolConfig::default()
     };
@@ -455,7 +503,9 @@ fn cmd_serve(args: &mcaimem::cli::ParsedArgs) -> Result<()> {
         requests,
         retry_rejects: !args.has_flag("no-retry"),
         seed: seed ^ 0x10AD,
-    };
+        ..LoadConfig::default()
+    }
+    .validated()?;
 
     println!(
         "serving tier: {} × {} workers × {} shards, high-water {}, {}",
@@ -481,11 +531,15 @@ fn cmd_serve(args: &mcaimem::cli::ParsedArgs) -> Result<()> {
         report.rejected
     );
     println!(
-        "  achieved   : {} req/s (client)  p50 {} µs  p99 {} µs",
+        "  achieved   : {} req/s (client)  p50 {} µs  p99 {} µs  p99.9 {} µs",
         fnum(report.achieved_rps, 0),
         fnum(report.p50_latency_us, 0),
-        fnum(report.p99_latency_us, 0)
+        fnum(report.p99_latency_us, 0),
+        fnum(report.p999_latency_us, 0)
     );
+    if matches!(load.arrival, Arrival::OpenPoisson { .. }) {
+        println!("  sched slip : p99 {} µs behind the arrival schedule", fnum(report.sched_lag_p99_us, 0));
+    }
     for t in mcaimem::report::serving::stats_tables(&stats) {
         println!("{}", t.render());
     }

@@ -576,6 +576,16 @@ pub trait MemoryBackend: Send {
         1
     }
 
+    /// Per-shard device clocks, furthest-advanced first: a singleton for
+    /// flat backends, one entry per shard for striped organizations
+    /// ([`crate::mem::sharded::ShardedBackend`] overrides). Refresh-aware
+    /// dispatch telemetry — a shard whose clock lags the rest is
+    /// quarantined or stalled, and batch windows should not be planned
+    /// around its slots.
+    fn shard_clocks(&self) -> Vec<f64> {
+        vec![self.now()]
+    }
+
     /// Quarantine a failed shard at time `now`, remapping its addresses to
     /// failover storage. Returns whether the request was honored; the
     /// default (single-array backends, or a

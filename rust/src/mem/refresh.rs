@@ -51,6 +51,15 @@ impl RefreshController {
         self.t_ref / self.rows as f64
     }
 
+    /// Absolute time (s) the next refresh slot fires — what a
+    /// refresh-aware dispatcher reads to plan batch windows into the
+    /// slack between slots. Slots still tick while the controller is
+    /// disabled (they are skipped, not deferred), so this is meaningful
+    /// either way.
+    pub fn next_due(&self) -> f64 {
+        self.next_due
+    }
+
     /// Advance simulated time to `now`, returning every refresh op that
     /// fires in the interval. The caller applies them to the array.
     ///

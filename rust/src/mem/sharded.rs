@@ -260,6 +260,15 @@ impl MemoryBackend for ShardedBackend {
         self.shards[0].refresh_due()
     }
 
+    /// The shards are independently clocked: a quarantined shard stops
+    /// ticking and its clock freezes where it died, while the survivors
+    /// keep advancing. A refresh-aware dispatcher reads these to confirm
+    /// every live shard sits on the same slot grid before planning batch
+    /// windows into the inter-slot slack.
+    fn shard_clocks(&self) -> Vec<f64> {
+        self.shards.iter().map(|s| s.now()).collect()
+    }
+
     /// One manager slot refreshes a *different* row in every shard
     /// (staggered by `rows/n`), so the whole array still turns over within
     /// one refresh period but no two shards pulse the same row index in
@@ -523,6 +532,22 @@ mod tests {
         assert_eq!(sh.now(), 5e-6);
         sh.tick(7e-6);
         assert_eq!(sh.shards[1].now(), 7e-6);
+    }
+
+    #[test]
+    fn shard_clocks_expose_the_per_shard_refresh_grid() {
+        let mut sh = ShardedBackend::with_failover(&BackendSpec::Sram, 2, 32 * 1024, 1).unwrap();
+        assert_eq!(sh.shard_clocks(), vec![0.0, 0.0]);
+        sh.tick(3e-6);
+        assert_eq!(sh.shard_clocks(), vec![3e-6, 3e-6], "ticked shards share a grid");
+        // a quarantined shard's clock freezes where it died — the signal a
+        // refresh-aware dispatcher uses to drop it from window planning
+        assert!(sh.quarantine_shard(1, 3e-6));
+        sh.tick(9e-6);
+        assert_eq!(sh.shard_clocks(), vec![9e-6, 3e-6]);
+        // flat backends report a singleton via the trait default
+        let flat = crate::mem::backend::build(&BackendSpec::Sram, 16 * 1024, 1);
+        assert_eq!(flat.shard_clocks().len(), 1);
     }
 
     #[test]

@@ -1,26 +1,33 @@
-//! Serving-tier read-outs: pool statistics tables and the saturation
-//! sweep (workers × shards → sustained req/s).
+//! Serving-tier read-outs: pool statistics tables, the saturation sweep
+//! (workers × shards → sustained req/s) and the open-loop rate sweep
+//! (offered req/s → tail latency + schedule slip).
 //!
-//! The sweep is the system-level counterpart of the paper's per-macro
-//! claims: it measures how far the banked buffer + worker pool scales the
-//! serving rate on one host, and it is what CI/benches print to check the
-//! ≥3× scaling of `--shards 4 --workers 4` over `--shards 1 --workers 1`.
+//! The sweeps are the system-level counterpart of the paper's per-macro
+//! claims: the saturation sweep measures how far the banked buffer +
+//! worker pool scales the serving rate on one host (CI/benches check the
+//! ≥3× scaling of `--shards 4 --workers 4` over `--shards 1 --workers 1`),
+//! and the rate sweep holds the tier at fixed offered rates — 100k+ req/s —
+//! and reads the p99.9 SLO tail plus the load generator's own schedule
+//! slip, which is what gates the event-loop dispatcher.
 
 use crate::coordinator::loadgen::{self, Arrival, LoadConfig};
 use crate::coordinator::pool::{PoolConfig, WorkerPool};
+use crate::coordinator::scheduler::DispatchMode;
 use crate::coordinator::server::ServerStats;
 use crate::mem::backend::BackendSpec;
+use crate::util::json::Json;
 use crate::util::table::{fnum, Table};
 use crate::Result;
+use std::time::Duration;
 
-/// Render the tier-level stats block (one row) plus the per-shard
-/// break-down.
+/// Render the tier-level stats block (one row), the refresh-stall
+/// attribution when stall modeling was on, and the per-shard break-down.
 pub fn stats_tables(stats: &ServerStats) -> Vec<Table> {
     let mut summary = Table::new(
         "serving-tier statistics",
         &[
             "requests", "errors", "rejected", "batches", "occupancy", "req/s", "KB/s",
-            "p50 (µs)", "p99 (µs)", "queue p99",
+            "p50 (µs)", "p99 (µs)", "p99.9 (µs)", "queue p99",
         ],
     );
     summary.row(vec![
@@ -33,9 +40,22 @@ pub fn stats_tables(stats: &ServerStats) -> Vec<Table> {
         fnum(stats.bytes_per_s / 1024.0, 1),
         fnum(stats.p50_latency_us, 0),
         fnum(stats.p99_latency_us, 0),
+        fnum(stats.p999_latency_us, 0),
         fnum(stats.queue_depth_p99, 1),
     ]);
     let mut out = vec![summary];
+    if stats.refresh_stall_total_us > 0.0 || stats.refresh_slack_total_us > 0.0 {
+        let mut t = Table::new(
+            "refresh stall attribution (on-path stall vs slack-absorbed)",
+            &["stall p99.9 (µs)", "stall total (µs)", "slack total (µs)"],
+        );
+        t.row(vec![
+            fnum(stats.refresh_stall_p999_us, 2),
+            fnum(stats.refresh_stall_total_us, 1),
+            fnum(stats.refresh_slack_total_us, 1),
+        ]);
+        out.push(t);
+    }
     if !stats.shards.is_empty() {
         let mut t = Table::new(
             "per-shard break-down (striping should balance occupancy at ~1/N)",
@@ -63,6 +83,7 @@ pub struct SweepPoint {
     pub shards: usize,
     pub achieved_rps: f64,
     pub p99_latency_us: f64,
+    pub p999_latency_us: f64,
     pub rejected: u64,
     /// Speedup over the (1, 1) single-worker/single-shard point.
     pub speedup: f64,
@@ -80,12 +101,12 @@ pub fn saturation_sweep(
 ) -> Result<(Table, Vec<SweepPoint>)> {
     let mut t = Table::new(
         &format!("saturation sweep — {} (closed loop, sustained req/s)", backend.label()),
-        &["workers", "shards", "req/s", "p99 (µs)", "rejected", "speedup vs 1×1"],
+        &["workers", "shards", "req/s", "p99 (µs)", "p99.9 (µs)", "rejected", "speedup vs 1×1"],
     );
     let mut points: Vec<SweepPoint> = Vec::with_capacity(combos.len());
     for &(workers, shards) in combos {
         let cfg = PoolConfig {
-            backend: *backend,
+            backend: backend.clone(),
             workers,
             shards,
             buffer_bytes: shards * 64 * 1024,
@@ -109,6 +130,7 @@ pub fn saturation_sweep(
             shards.to_string(),
             fnum(report.achieved_rps, 0),
             fnum(report.p99_latency_us, 0),
+            fnum(report.p999_latency_us, 0),
             report.rejected.to_string(),
             format!("{}x", fnum(speedup, 2)),
         ]);
@@ -117,6 +139,7 @@ pub fn saturation_sweep(
             shards,
             achieved_rps: report.achieved_rps,
             p99_latency_us: report.p99_latency_us,
+            p999_latency_us: report.p999_latency_us,
             rejected: report.rejected,
             speedup,
         });
@@ -126,6 +149,182 @@ pub fn saturation_sweep(
 
 /// The default sweep grid: single worker, scale workers+shards together.
 pub const DEFAULT_SWEEP: [(usize, usize); 4] = [(1, 1), (2, 2), (4, 4), (4, 8)];
+
+/// Machine-readable saturation-sweep artifact (what `mcaimem serve --sweep
+/// --json` writes; CI uploads it from the serve-smoke job).
+pub fn saturation_sweep_json(backend: &BackendSpec, points: &[SweepPoint]) -> Json {
+    Json::obj(vec![
+        ("backend", Json::Str(backend.label())),
+        (
+            "points",
+            Json::Arr(
+                points
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("workers", Json::Num(p.workers as f64)),
+                            ("shards", Json::Num(p.shards as f64)),
+                            ("achieved_rps", Json::Num(p.achieved_rps)),
+                            ("p99_latency_us", Json::Num(p.p99_latency_us)),
+                            ("p999_latency_us", Json::Num(p.p999_latency_us)),
+                            ("rejected", Json::Num(p.rejected as f64)),
+                            ("speedup", Json::Num(p.speedup)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Offered rates (req/s) for the default open-loop rate sweep — the top
+/// point is the 100k+ req/s target the event-loop dispatcher is gated on.
+pub const DEFAULT_RATES: [f64; 3] = [50_000.0, 100_000.0, 200_000.0];
+
+/// Pool/traffic shape for the open-loop rate sweep (one pool per rate).
+#[derive(Clone, Debug)]
+pub struct RateSweepConfig {
+    pub workers: usize,
+    pub shards: usize,
+    /// Requests offered per rate point.
+    pub requests: usize,
+    pub dispatch: DispatchMode,
+    /// Modeled wall-clock stall per refresh slot (zero = off).
+    pub refresh_stall: Duration,
+    pub seed: u64,
+}
+
+impl Default for RateSweepConfig {
+    fn default() -> Self {
+        RateSweepConfig {
+            workers: 4,
+            shards: 4,
+            requests: 4096,
+            dispatch: DispatchMode::RefreshAware,
+            refresh_stall: Duration::ZERO,
+            seed: 0x5E21E,
+        }
+    }
+}
+
+/// One point of the open-loop rate sweep.
+#[derive(Clone, Debug)]
+pub struct RatePoint {
+    /// Offered (target) arrival rate, req/s.
+    pub target_rps: f64,
+    pub offered: usize,
+    pub completed: usize,
+    pub rejected: u64,
+    pub achieved_rps: f64,
+    pub p99_latency_us: f64,
+    /// The SLO tail the sweep is gated on.
+    pub p999_latency_us: f64,
+    /// p99 of how far arrivals slipped behind the Poisson schedule — the
+    /// honesty meter for the offered rate (a generator that cannot keep
+    /// its own schedule is not really offering `target_rps`).
+    pub sched_lag_p99_us: f64,
+}
+
+/// Open-loop rate sweep: hold the tier at each offered rate (Poisson
+/// arrivals, rejects are lost, not retried) and read the tail. Fully
+/// deterministic given `cfg.seed`: the same seed draws the same arrival
+/// schedule and tenant sequence at every rate.
+pub fn rate_sweep(
+    backend: &BackendSpec,
+    rates: &[f64],
+    cfg: &RateSweepConfig,
+) -> Result<(Table, Vec<RatePoint>)> {
+    let mut t = Table::new(
+        &format!(
+            "rate sweep — {} ({} dispatch, open loop)",
+            backend.label(),
+            cfg.dispatch
+        ),
+        &[
+            "target req/s", "offered", "completed", "rejected", "req/s",
+            "p99 (µs)", "p99.9 (µs)", "sched lag p99 (µs)",
+        ],
+    );
+    let mut points = Vec::with_capacity(rates.len());
+    for &rps in rates {
+        let pool_cfg = PoolConfig {
+            backend: backend.clone(),
+            workers: cfg.workers,
+            shards: cfg.shards,
+            buffer_bytes: cfg.shards * 64 * 1024,
+            dispatch: cfg.dispatch,
+            refresh_stall: cfg.refresh_stall,
+            seed: cfg.seed,
+            ..PoolConfig::default()
+        };
+        let pool = WorkerPool::start(pool_cfg)?;
+        let load = LoadConfig {
+            arrival: Arrival::OpenPoisson { rps },
+            requests: cfg.requests,
+            retry_rejects: false,
+            seed: cfg.seed,
+            ..LoadConfig::default()
+        }
+        .validated()?;
+        let report = loadgen::run(&pool, &load);
+        let _ = pool.shutdown();
+        t.row(vec![
+            fnum(rps, 0),
+            report.offered.to_string(),
+            report.completed.to_string(),
+            report.rejected.to_string(),
+            fnum(report.achieved_rps, 0),
+            fnum(report.p99_latency_us, 0),
+            fnum(report.p999_latency_us, 0),
+            fnum(report.sched_lag_p99_us, 0),
+        ]);
+        points.push(RatePoint {
+            target_rps: rps,
+            offered: report.offered,
+            completed: report.completed,
+            rejected: report.rejected,
+            achieved_rps: report.achieved_rps,
+            p99_latency_us: report.p99_latency_us,
+            p999_latency_us: report.p999_latency_us,
+            sched_lag_p99_us: report.sched_lag_p99_us,
+        });
+    }
+    Ok((t, points))
+}
+
+/// Machine-readable rate-sweep artifact (what `mcaimem serve --rates …
+/// --json` writes; CI uploads it from the serve-smoke job).
+pub fn rate_sweep_json(backend: &BackendSpec, cfg: &RateSweepConfig, points: &[RatePoint]) -> Json {
+    Json::obj(vec![
+        ("backend", Json::Str(backend.label())),
+        ("dispatch", Json::Str(cfg.dispatch.to_string())),
+        ("workers", Json::Num(cfg.workers as f64)),
+        ("shards", Json::Num(cfg.shards as f64)),
+        ("requests_per_rate", Json::Num(cfg.requests as f64)),
+        ("refresh_stall_us", Json::Num(cfg.refresh_stall.as_secs_f64() * 1e6)),
+        ("seed", Json::Num(cfg.seed as f64)),
+        (
+            "points",
+            Json::Arr(
+                points
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("target_rps", Json::Num(p.target_rps)),
+                            ("offered", Json::Num(p.offered as f64)),
+                            ("completed", Json::Num(p.completed as f64)),
+                            ("rejected", Json::Num(p.rejected as f64)),
+                            ("achieved_rps", Json::Num(p.achieved_rps)),
+                            ("p99_latency_us", Json::Num(p.p99_latency_us)),
+                            ("p999_latency_us", Json::Num(p.p999_latency_us)),
+                            ("sched_lag_p99_us", Json::Num(p.sched_lag_p99_us)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
 
 #[cfg(test)]
 mod tests {
@@ -152,6 +351,12 @@ mod tests {
         let rendered = tables[1].render();
         assert!(rendered.contains("1024"), "{rendered}");
         assert!(tables[0].render().contains('7'));
+        assert!(tables[0].render().contains("p99.9"), "summary must show the SLO tail");
+        // refresh attribution appears only when stall modeling ran
+        stats.refresh_slack_total_us = 12.5;
+        let tables = stats_tables(&stats);
+        assert_eq!(tables.len(), 3);
+        assert!(tables[1].render().contains("slack"));
     }
 
     #[test]
@@ -163,5 +368,32 @@ mod tests {
         assert!(points[0].achieved_rps > 0.0);
         assert!((points[0].speedup - 1.0).abs() < 1e-12);
         assert!(t.render().contains("req/s"));
+    }
+
+    #[test]
+    fn rate_sweep_reports_the_tail_and_serializes() {
+        // one fast point end-to-end: offered == requested (open loop,
+        // nothing closes early), p99.9 present, JSON round-trips
+        let cfg = RateSweepConfig {
+            workers: 1,
+            shards: 1,
+            requests: 64,
+            seed: 9,
+            ..RateSweepConfig::default()
+        };
+        let (t, points) = rate_sweep(&BackendSpec::Sram, &[50_000.0], &cfg).unwrap();
+        assert_eq!(points.len(), 1);
+        assert_eq!(points[0].offered, 64);
+        assert!(points[0].p999_latency_us >= points[0].p99_latency_us);
+        assert!(t.render().contains("p99.9"));
+        let doc = rate_sweep_json(&BackendSpec::Sram, &cfg, &points);
+        let parsed = Json::parse(&doc.to_pretty()).unwrap();
+        assert_eq!(parsed, doc);
+        match &doc {
+            Json::Obj(map) => {
+                assert!(matches!(map.get("points"), Some(Json::Arr(a)) if a.len() == 1));
+            }
+            _ => panic!("rate sweep artifact must be an object"),
+        }
     }
 }

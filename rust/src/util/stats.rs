@@ -4,6 +4,8 @@
 //! populations the way the paper's figures do (means, spreads, percentiles,
 //! histograms, empirical CDFs).
 
+use crate::util::rng::SplitMix64;
+
 /// Summary statistics of a sample population.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Summary {
@@ -60,6 +62,161 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     let mut sorted = xs.to_vec();
     sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
     percentile_sorted(&sorted, p)
+}
+
+/// Default capacity for serving-tier [`Reservoir`]s: large enough that
+/// p99.9 over a window rests on ≥ 8 kept samples, small enough to sort in
+/// microseconds at report time.
+pub const DEFAULT_RESERVOIR_CAP: usize = 8192;
+
+/// Seeded fixed-capacity reservoir sample (Vitter's Algorithm R, with the
+/// replacement draw hashed from `(seed, index)` instead of a stateful RNG).
+///
+/// The serving hot path needs quantiles over unbounded sample streams —
+/// queue depths, latencies — without unbounded memory and without a lock
+/// held on every sample. Because the keep/replace decision for the `i`-th
+/// offer depends only on `(seed, i)` ([`Reservoir::slot_for`]), a producer
+/// can count offers with an atomic and take a lock **only** for the
+/// `cap / i` fraction of offers that actually land, so the lock rate on a
+/// shared reservoir decays toward zero as the stream grows. Each kept set
+/// is a uniform without-replacement draw from the stream, so quantiles
+/// over the kept samples estimate the stream's quantiles; below capacity
+/// the sample *is* the stream and quantiles are exact.
+#[derive(Clone, Debug)]
+pub struct Reservoir {
+    cap: usize,
+    seed: u64,
+    /// Offers seen (≥ `samples.len()`) — the Algorithm-R denominator and
+    /// the merge weight.
+    count: u64,
+    samples: Vec<f64>,
+}
+
+impl Default for Reservoir {
+    fn default() -> Self {
+        Reservoir::new(DEFAULT_RESERVOIR_CAP, 0x5EED_0BA5)
+    }
+}
+
+impl Reservoir {
+    pub fn new(cap: usize, seed: u64) -> Self {
+        assert!(cap > 0, "reservoir capacity must be positive");
+        Reservoir { cap, seed, count: 0, samples: Vec::new() }
+    }
+
+    /// Kept samples (unordered).
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Total offers seen, including ones not kept.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Where the `index`-th offer of a stream lands: `Some(slot)` to keep
+    /// it (dense fill below capacity, hashed replacement above), `None` to
+    /// drop it. Pure in `(seed, index, cap)` so callers sharing a
+    /// reservoir across threads can decide *outside* the lock.
+    pub fn slot_for(seed: u64, index: u64, cap: usize) -> Option<usize> {
+        if index < cap as u64 {
+            return Some(index as usize);
+        }
+        let mut sm = SplitMix64::new(seed ^ index.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let j = sm.next_u64() % (index + 1);
+        if j < cap as u64 {
+            Some(j as usize)
+        } else {
+            None
+        }
+    }
+
+    /// Offer one sample (single-producer path).
+    pub fn push(&mut self, x: f64) {
+        let i = self.count;
+        self.count += 1;
+        if let Some(slot) = Self::slot_for(self.seed, i, self.cap) {
+            self.place(slot, x);
+        }
+    }
+
+    /// Write a sample into a slot chosen by [`Reservoir::slot_for`]
+    /// (multi-producer path: the caller counts offers externally and only
+    /// locks when a slot was drawn). Does not advance `count`.
+    pub fn place(&mut self, slot: usize, x: f64) {
+        if slot == self.samples.len() {
+            self.samples.push(x);
+        } else if slot < self.samples.len() {
+            self.samples[slot] = x;
+        }
+        // slot > len only if offers were mis-counted; dropping the sample
+        // is the safe degradation
+    }
+
+    /// Fold another reservoir in, preserving quantile weight: below joint
+    /// capacity the kept sets concatenate losslessly; above it each merged
+    /// slot draws from either side with probability proportional to its
+    /// stream length (deterministic under this reservoir's seed).
+    pub fn merge(&mut self, other: &Reservoir) {
+        if other.samples.is_empty() {
+            self.count += other.count;
+            return;
+        }
+        let na = self.count.max(self.samples.len() as u64);
+        let nb = other.count.max(other.samples.len() as u64);
+        if self.samples.len() + other.samples.len() <= self.cap {
+            self.samples.extend_from_slice(&other.samples);
+            self.count = na + nb;
+            return;
+        }
+        let mut sm = SplitMix64::new(self.seed ^ na.rotate_left(32) ^ nb);
+        let wa = na as f64 / (na + nb) as f64;
+        let mut merged = Vec::with_capacity(self.cap);
+        let (mut ia, mut ib) = (0usize, 0usize);
+        while merged.len() < self.cap && (ia < self.samples.len() || ib < other.samples.len()) {
+            let u = (sm.next_u64() >> 11) as f64 / (1u64 << 53) as f64;
+            let from_a = if ia >= self.samples.len() {
+                false
+            } else if ib >= other.samples.len() {
+                true
+            } else {
+                u < wa
+            };
+            if from_a {
+                merged.push(self.samples[ia]);
+                ia += 1;
+            } else {
+                merged.push(other.samples[ib]);
+                ib += 1;
+            }
+        }
+        self.samples = merged;
+        self.count = na + nb;
+    }
+
+    /// Quantile of the kept sample, `q` in [0, 1]; 0.0 when empty. The
+    /// sort is bounded by the capacity, so this is report-time cheap no
+    /// matter how long the stream ran.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        percentile_sorted(&sorted, q * 100.0)
+    }
 }
 
 /// Fixed-width histogram over [lo, hi); values outside are clamped to the
@@ -334,6 +491,85 @@ mod tests {
             let z = normal_quantile(p);
             assert!((normal_cdf(z) - p).abs() < 1e-6, "p={p} z={z}");
         }
+    }
+
+    #[test]
+    fn reservoir_below_capacity_matches_exact_quantiles() {
+        // the satellite pin: at small n the reservoir *is* the stream, so
+        // its p99 equals the exact quantile bit-for-bit
+        let xs: Vec<f64> = (0..100).map(|i| ((i * 37) % 100) as f64).collect();
+        let mut r = Reservoir::new(4096, 0x5EED);
+        for &x in &xs {
+            r.push(x);
+        }
+        assert_eq!(r.len(), 100);
+        assert_eq!(r.quantile(0.99), percentile(&xs, 99.0));
+        assert_eq!(r.quantile(0.50), percentile(&xs, 50.0));
+        assert_eq!(r.quantile(1.0), 99.0);
+    }
+
+    #[test]
+    fn reservoir_is_bounded_and_deterministic_under_seed() {
+        let mut a = Reservoir::new(512, 7);
+        let mut b = Reservoir::new(512, 7);
+        for i in 0..100_000u64 {
+            a.push(i as f64);
+            b.push(i as f64);
+        }
+        assert_eq!(a.len(), 512, "capacity bounds memory on long runs");
+        assert_eq!(a.count(), 100_000);
+        assert_eq!(a.samples(), b.samples(), "same seed, same stream → same kept set");
+        // a uniform ramp keeps roughly uniform quantiles
+        let p50 = a.quantile(0.50);
+        assert!((p50 - 50_000.0).abs() < 10_000.0, "p50 {p50}");
+    }
+
+    #[test]
+    fn reservoir_slot_decisions_are_pure_and_decay() {
+        // dense prefix: every offer below capacity lands at its own index
+        for i in 0..64u64 {
+            assert_eq!(Reservoir::slot_for(1, i, 64), Some(i as usize));
+        }
+        // above capacity: keeps occur at ~cap/i rate, and the decision is
+        // reproducible (the multi-producer contract)
+        let hits: Vec<u64> =
+            (64..6400).filter(|&i| Reservoir::slot_for(1, i, 64).is_some()).collect();
+        assert!(!hits.is_empty() && hits.len() < 1000, "{} hits", hits.len());
+        for &i in &hits {
+            assert_eq!(Reservoir::slot_for(1, i, 64), Reservoir::slot_for(1, i, 64));
+        }
+    }
+
+    #[test]
+    fn reservoir_merge_preserves_quantile_weight() {
+        // below joint capacity: lossless concat
+        let mut a = Reservoir::new(1024, 1);
+        let mut b = Reservoir::new(1024, 2);
+        for i in 0..100 {
+            a.push(i as f64);
+            b.push(1000.0 + i as f64);
+        }
+        a.merge(&b);
+        assert_eq!(a.len(), 200);
+        assert_eq!(a.count(), 200);
+
+        // above joint capacity: bounded, and a side with 9x the stream
+        // keeps ~9x the slots so the merged quantiles stay meaningful
+        let mut big = Reservoir::new(256, 3);
+        let mut small = Reservoir::new(256, 4);
+        for i in 0..90_000 {
+            big.push(0.0 + (i % 100) as f64); // low population
+        }
+        for i in 0..10_000 {
+            small.push(1000.0 + (i % 100) as f64); // high population
+        }
+        big.merge(&small);
+        assert_eq!(big.len(), 256);
+        assert_eq!(big.count(), 100_000);
+        let high = big.samples().iter().filter(|&&x| x >= 1000.0).count() as f64;
+        let frac = high / big.len() as f64;
+        assert!((frac - 0.1).abs() < 0.08, "high-side weight {frac}, want ~0.1");
+        assert!(big.quantile(0.99) >= 1000.0, "tail survives the merge");
     }
 
     #[test]

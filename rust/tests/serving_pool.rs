@@ -16,8 +16,10 @@ use std::time::Duration;
 
 use mcaimem::coordinator::loadgen::{self, Arrival, LoadConfig};
 use mcaimem::coordinator::pool::{InferEngine, PoolConfig, SubmitError, SyntheticEngine, WorkerPool};
-use mcaimem::coordinator::BufferManager;
+use mcaimem::coordinator::scheduler::DispatchMode;
+use mcaimem::coordinator::{BufferManager, TensorHandle};
 use mcaimem::mem::backend::BackendSpec;
+use mcaimem::report::serving::{rate_sweep, rate_sweep_json, RateSweepConfig};
 
 fn pool_cfg(spec: BackendSpec, workers: usize, shards: usize) -> PoolConfig {
     PoolConfig {
@@ -42,21 +44,25 @@ fn instant_engines(workers: usize) -> Vec<Box<dyn InferEngine>> {
 }
 
 /// Replay the exact staging workload a single pool worker runs (store the
-/// padded batch, tick the compute window, load it back) on a fresh
-/// unsharded manager, returning (total_j, bytes_rw).
+/// real rows of each window through a sub-handle over the stage region,
+/// tick the compute window, load them back) on a fresh unsharded manager,
+/// returning (total_j, bytes_rw). Mirrors the pool's continuous batching:
+/// only `real × dim` bytes move per window, never the padded batch.
 fn replay_unsharded(spec: &BackendSpec, bytes: usize, rows: &[Vec<i8>]) -> (f64, u64) {
     let engine = SyntheticEngine::default();
     let (batch, dim) = (engine.batch, engine.dim);
     let mut bm = BufferManager::from_spec(spec, bytes, 1);
     let stage = bm.alloc(batch * dim).unwrap();
     for row in rows {
-        let mut x = vec![0u8; batch * dim];
+        // one-request window → one real row staged through the sub-handle
+        let h = TensorHandle { offset: stage.offset, len: dim, id: stage.id };
+        let mut x = vec![0u8; dim];
         for (dst, &src) in x.iter_mut().zip(row.iter()) {
             *dst = src as u8;
         }
-        bm.store(stage, &x).unwrap();
+        bm.store(h, &x).unwrap();
         bm.tick(PoolConfig::default().sim_compute_s);
-        let _ = bm.load(stage);
+        let _ = bm.load(h);
     }
     let m = bm.mem.meter();
     (m.total_j(), m.bytes_read + m.bytes_written)
@@ -305,4 +311,101 @@ fn closed_loop_retries_through_a_tiny_high_water_mark() {
     assert_eq!(report.completed, 80, "retries drain every request");
     assert_eq!(stats.requests, 80);
     assert_eq!(stats.rejected, report.rejected);
+}
+
+#[test]
+fn refresh_aware_dispatch_keeps_the_stall_off_the_request_tail() {
+    // the pinned scheduler comparison (mcaimem@0.8, same seeded load):
+    // with a modeled stall of 3 µs per refresh slot, the oblivious
+    // dispatcher must charge refresh to the request tail while the aware
+    // one reports zero refresh-attributable p99.9 and pays the identical
+    // stall in inter-window slack. The virtual refresh schedule — and so
+    // the per-shard meters — must not differ between the modes.
+    let run = |dispatch: DispatchMode| {
+        let cfg = PoolConfig {
+            backend: BackendSpec::mcaimem_default(),
+            workers: 1,
+            shards: 2,
+            buffer_bytes: 2 * 64 * 1024,
+            batch_window: Duration::ZERO,
+            high_water: 100_000,
+            dispatch,
+            refresh_stall: Duration::from_micros(3),
+            seed: 0xAB5E,
+            ..PoolConfig::default()
+        };
+        let pool = WorkerPool::start_with_engines(cfg, instant_engines(1)).unwrap();
+        let load = LoadConfig {
+            arrival: Arrival::OpenPoisson { rps: 3_000.0 },
+            requests: 64,
+            retry_rejects: false,
+            seed: 41,
+            ..LoadConfig::default()
+        }
+        .validated()
+        .unwrap();
+        let report = loadgen::run(&pool, &load);
+        let stats = pool.shutdown();
+        assert_eq!(report.completed, 64, "{dispatch}: nothing shed at this rate");
+        stats
+    };
+    let oblivious = run(DispatchMode::Oblivious);
+    let aware = run(DispatchMode::RefreshAware);
+
+    assert!(
+        oblivious.refresh_stall_p999_us > 0.0,
+        "oblivious dispatch must attribute refresh stall to requests"
+    );
+    assert_eq!(
+        aware.refresh_stall_p999_us, 0.0,
+        "aware dispatch must keep the request tail refresh-free"
+    );
+    assert!(
+        aware.refresh_stall_p999_us < oblivious.refresh_stall_p999_us,
+        "the refresh-attributable p99.9 must drop under aware dispatch"
+    );
+    assert!(
+        aware.refresh_slack_total_us > 0.0,
+        "the stall does not vanish — it is absorbed into slack"
+    );
+    assert!(oblivious.refresh_stall_total_us > 0.0);
+    assert_eq!(aware.refresh_stall_total_us, 0.0);
+    // identical virtual schedule either way
+    let refreshes =
+        |s: &mcaimem::coordinator::ServerStats| s.shards.iter().map(|x| x.refreshes).sum::<u64>();
+    assert_eq!(
+        refreshes(&oblivious),
+        refreshes(&aware),
+        "dispatch mode must never change the refresh schedule itself"
+    );
+}
+
+#[test]
+fn rate_sweep_holds_100k_rps_and_reports_the_slo_tail() {
+    // the 100k+ req/s gate: a seeded open-loop sweep over the paper's
+    // backend must offer every request at the target rate, read a p99.9,
+    // and serialize the artifact CI uploads
+    let cfg = RateSweepConfig {
+        workers: 2,
+        shards: 2,
+        requests: 2000,
+        dispatch: DispatchMode::RefreshAware,
+        refresh_stall: Duration::ZERO,
+        seed: 0xCAFE,
+    };
+    let (table, points) =
+        rate_sweep(&BackendSpec::mcaimem_default(), &[100_000.0], &cfg).unwrap();
+    assert_eq!(points.len(), 1);
+    let p = &points[0];
+    assert_eq!(p.target_rps, 100_000.0);
+    assert_eq!(p.offered, 2000, "open loop offers the whole schedule");
+    assert!(p.completed + p.rejected as usize <= p.offered);
+    assert!(p.p999_latency_us >= p.p99_latency_us, "tail ordering");
+    assert!(p.p999_latency_us > 0.0, "the SLO tail must be measured");
+    assert!(table.render().contains("p99.9"));
+    // the artifact round-trips through the repo's JSON layer
+    let doc = rate_sweep_json(&BackendSpec::mcaimem_default(), &cfg, &points);
+    let text = doc.to_pretty();
+    assert_eq!(mcaimem::util::json::Json::parse(&text).unwrap(), doc);
+    assert!(text.contains("p999_latency_us"));
 }
