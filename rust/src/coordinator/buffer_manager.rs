@@ -37,6 +37,14 @@ pub struct BufferManager {
     peak: usize,
     next_id: u64,
     now: f64,
+    /// Telemetry sink + this manager's worker track (see
+    /// [`BufferManager::attach_obs`]).
+    obs: crate::obs::ObsSink,
+    obs_track: u32,
+    /// Accumulated modeled stall/slack (µs) on this worker's timeline:
+    /// trace timestamps are `now·1e6 + obs_lag_us`, so spans stay monotone
+    /// per track even though modeled stalls don't advance the device clock.
+    obs_lag_us: f64,
 }
 
 impl BufferManager {
@@ -82,7 +90,43 @@ impl BufferManager {
             peak: 0,
             next_id: 0,
             now: 0.0,
+            obs: crate::obs::ObsSink::disabled(),
+            obs_track: 0,
+            obs_lag_us: 0.0,
         }
+    }
+
+    /// Attach a telemetry sink: refresh passes emitted by [`tick`] land on
+    /// `track` (this worker's trace track), and the backend's structural
+    /// events (failover, tier traffic, fault firings) on the shard range
+    /// starting at `shard_track_base`.
+    ///
+    /// [`tick`]: BufferManager::tick
+    pub fn attach_obs(&mut self, sink: &crate::obs::ObsSink, track: u32, shard_track_base: u32) {
+        self.obs = sink.clone();
+        self.obs_track = track;
+        self.mem.attach_obs(sink, shard_track_base);
+    }
+
+    /// This worker's current trace timestamp (µs): device clock plus the
+    /// accumulated modeled stall/slack lag.
+    pub fn obs_now_us(&self) -> f64 {
+        self.now * 1e6 + self.obs_lag_us
+    }
+
+    /// Push modeled stall/slack time (µs) onto this worker's trace
+    /// timeline (the device clock does not advance for modeled waits).
+    pub fn add_obs_lag(&mut self, us: f64) {
+        self.obs_lag_us += us;
+    }
+
+    /// The attached sink (disabled by default) and track.
+    pub fn obs(&self) -> &crate::obs::ObsSink {
+        &self.obs
+    }
+
+    pub fn obs_track(&self) -> u32 {
+        self.obs_track
     }
 
     pub fn capacity(&self) -> usize {
@@ -97,11 +141,45 @@ impl BufferManager {
     /// backend (each slot refreshes one row across all banks in parallel).
     pub fn tick(&mut self, dt: f64) {
         assert!(dt >= 0.0);
+        let _scan = crate::obs::profile::phase(crate::obs::profile::Phase::RefreshScan);
         let target = self.now + dt;
-        for op in self.refresh.advance(target) {
-            // fire each slot at its own due time so row staleness never
-            // exceeds t_ref even under coarse ticks
-            self.mem.refresh_row(op.row, op.due);
+        let ops = self.refresh.advance(target);
+        if self.obs.is_enabled() && !ops.is_empty() {
+            let ecc_before = self.mem.meter().ecc_corrected;
+            let (t0, t1) = (ops[0].due, ops[ops.len() - 1].due.max(ops[0].due));
+            self.obs.emit(crate::obs::Event::span_begin(
+                crate::obs::EventKind::RefreshPass,
+                self.obs_track,
+                t0 * 1e6 + self.obs_lag_us,
+                ops.len() as u64,
+                ops[0].row as u64,
+            ));
+            for op in &ops {
+                self.mem.refresh_row(op.row, op.due);
+            }
+            let ecc = self.mem.meter().ecc_corrected - ecc_before;
+            if ecc > 0 {
+                self.obs.emit(crate::obs::Event::instant(
+                    crate::obs::EventKind::EccCorrected,
+                    self.obs_track,
+                    t1 * 1e6 + self.obs_lag_us,
+                    ecc,
+                    0,
+                ));
+            }
+            self.obs.emit(crate::obs::Event::span_end(
+                crate::obs::EventKind::RefreshPass,
+                self.obs_track,
+                t1 * 1e6 + self.obs_lag_us,
+                ops.len() as u64,
+                0,
+            ));
+        } else {
+            for op in &ops {
+                // fire each slot at its own due time so row staleness never
+                // exceeds t_ref even under coarse ticks
+                self.mem.refresh_row(op.row, op.due);
+            }
         }
         self.mem.tick(target);
         self.now = target;

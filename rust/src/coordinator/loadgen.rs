@@ -207,6 +207,26 @@ impl LoadReport {
             sched_lag_p99_us: if lag_us.is_empty() { 0.0 } else { percentile_sorted(lag_us, 99.0) },
         }
     }
+
+    /// Snapshot into the unified metrics registry
+    /// (`mcaimem_loadgen_*` names) — the client-side counterpart of
+    /// [`crate::coordinator::server::ServerStats::registry`].
+    pub fn registry(&self) -> crate::obs::Registry {
+        let mut r = crate::obs::Registry::new();
+        r.count("mcaimem_loadgen_offered_total", self.offered as u64);
+        r.count("mcaimem_loadgen_accepted_total", self.accepted as u64);
+        r.count("mcaimem_loadgen_rejected_total", self.rejected);
+        r.count("mcaimem_loadgen_completed_total", self.completed as u64);
+        r.count("mcaimem_loadgen_errors_total", self.errors as u64);
+        r.count("mcaimem_loadgen_abandoned_total", self.abandoned as u64);
+        r.gauge("mcaimem_loadgen_wall_s", self.wall_s);
+        r.gauge("mcaimem_loadgen_achieved_rps", self.achieved_rps);
+        r.gauge("mcaimem_loadgen_latency_p50_us", self.p50_latency_us);
+        r.gauge("mcaimem_loadgen_latency_p99_us", self.p99_latency_us);
+        r.gauge("mcaimem_loadgen_latency_p999_us", self.p999_latency_us);
+        r.gauge("mcaimem_loadgen_sched_lag_p99_us", self.sched_lag_p99_us);
+        r
+    }
 }
 
 /// The deterministic Poisson arrival schedule: `n` exponential

@@ -1,27 +1,33 @@
 //! Coordinator metrics: request latencies, throughput, buffer health.
 //!
-//! Latency and refresh-stall samples live in seeded bounded
-//! [`Reservoir`]s, so a worker's accumulator is allocation-bounded no
-//! matter how long it serves: a week-long soak holds the same few KiB as
-//! a ten-second smoke, and the report-time sort is bounded by the
-//! reservoir capacity instead of the request count. Quantiles are exact
-//! below capacity and uniform-subsampled estimates above it, and
-//! [`Metrics::merge`] preserves quantile weight across worker
-//! aggregation (see [`Reservoir::merge`]).
+//! Quantiles are backed by [`LogHistogram`]s — exact counts with ≤ 1/32
+//! relative bucket error, so p99/p99.9 are stable at any completion
+//! count and merge exactly across workers. The seeded bounded
+//! [`Reservoir`]s are kept purely for raw-sample dumps
+//! ([`Metrics::raw_latency_samples`]); they no longer back any quantile.
+//! Both structures are allocation-bounded, so a week-long soak holds the
+//! same few KiB as a ten-second smoke. [`Metrics::registry`] snapshots
+//! the accumulator into the unified [`Registry`] naming scheme — the one
+//! aggregation path behind `ServerStats` exports.
 
 use std::time::{Duration, Instant};
 
+use crate::obs::{LogHistogram, Registry};
 use crate::util::stats::Reservoir;
 
 /// Online latency/throughput accumulator.
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
+    /// Raw latency samples (bounded, seeded) — kept only for sample dumps;
+    /// quantiles read `latency_hist`.
     latencies_us: Reservoir,
+    /// Exact-count log-bucketed latency distribution (the quantile path).
+    latency_hist: LogHistogram,
     /// Per-request refresh-attributable stall (µs): the share of a
     /// request's latency spent waiting on eDRAM refresh slots that fired
     /// inside its dispatched batch window. A refresh-aware dispatcher
     /// pushes these to zero by paying the stall in inter-window slack.
-    refresh_stall_us: Reservoir,
+    refresh_stall_hist: LogHistogram,
     /// Exact running sum of latency samples (the reservoir subsamples, so
     /// the mean is tracked separately).
     latency_sum_us: f64,
@@ -60,6 +66,7 @@ impl Metrics {
         self.touch();
         let us = d.as_secs_f64() * 1e6;
         self.latencies_us.push(us);
+        self.latency_hist.record(us);
         self.latency_sum_us += us;
         self.requests += 1;
     }
@@ -67,7 +74,7 @@ impl Metrics {
     /// Refresh-attributable stall charged to one request (0 when its
     /// window was refresh-free or the dispatcher deferred the stall).
     pub fn record_refresh_stall(&mut self, us: f64) {
-        self.refresh_stall_us.push(us);
+        self.refresh_stall_hist.record(us);
         self.refresh_stall_total_us += us;
     }
 
@@ -95,12 +102,14 @@ impl Metrics {
     }
 
     /// Fold another worker's accumulator into this one — how the pool
-    /// aggregates per-worker metrics at shutdown. Latency reservoirs merge
+    /// aggregates per-worker metrics at shutdown. Histograms merge exactly
+    /// (bucket-wise count addition); the raw-sample reservoirs merge
     /// weight-preservingly; the serving window spans the union of both
     /// windows.
     pub fn merge(&mut self, other: &Metrics) {
         self.latencies_us.merge(&other.latencies_us);
-        self.refresh_stall_us.merge(&other.refresh_stall_us);
+        self.latency_hist.merge(&other.latency_hist);
+        self.refresh_stall_hist.merge(&other.refresh_stall_hist);
         self.latency_sum_us += other.latency_sum_us;
         self.refresh_stall_total_us += other.refresh_stall_total_us;
         self.refresh_slack_total_us += other.refresh_slack_total_us;
@@ -163,7 +172,7 @@ impl Metrics {
 
     /// p99.9 of per-request refresh-attributable stall (µs).
     pub fn refresh_stall_p999_us(&self) -> f64 {
-        self.refresh_stall_us.quantile(0.999)
+        self.refresh_stall_hist.quantile(0.999)
     }
 
     pub fn mean_us(&self) -> f64 {
@@ -174,7 +183,54 @@ impl Metrics {
     }
 
     fn quantile(&self, q: f64) -> f64 {
-        self.latencies_us.quantile(q)
+        self.latency_hist.quantile(q)
+    }
+
+    /// Whether quantile `q` is sample-starved: with fewer than
+    /// `1/(1-q)` completions the tail bucket holds no genuine tail mass,
+    /// so the estimate degenerates to the max sample. The report layer
+    /// flags such cells rather than printing them as trustworthy.
+    pub fn quantile_starved(&self, q: f64) -> bool {
+        (self.requests as f64) * (1.0 - q) < 1.0
+    }
+
+    /// The retained raw latency samples (µs) — a bounded, seeded uniform
+    /// subsample for dumps and plots. Quantiles do NOT read this; they
+    /// come from the exact-count histogram.
+    pub fn raw_latency_samples(&self) -> &[f64] {
+        self.latencies_us.samples()
+    }
+
+    /// Full latency distribution (exact counts, log-bucketed).
+    pub fn latency_hist(&self) -> &LogHistogram {
+        &self.latency_hist
+    }
+
+    /// Full refresh-stall distribution (exact counts, log-bucketed).
+    pub fn refresh_stall_hist(&self) -> &LogHistogram {
+        &self.refresh_stall_hist
+    }
+
+    /// Snapshot into the unified metrics registry
+    /// (`mcaimem_serving_*` names): counters for volume, gauges for
+    /// rates, histograms for the latency/stall distributions. This is
+    /// the one aggregation path `ServerStats` and the exporters read.
+    pub fn registry(&self) -> Registry {
+        let mut r = Registry::default();
+        r.count("mcaimem_serving_requests_total", self.requests);
+        r.count("mcaimem_serving_batches_total", self.batches);
+        r.count("mcaimem_serving_padded_slots_total", self.padded_slots);
+        r.count("mcaimem_serving_bytes_in_total", self.bytes_in);
+        r.count("mcaimem_serving_errors_total", self.errors);
+        r.gauge("mcaimem_serving_requests_per_s", self.requests_per_s());
+        r.gauge("mcaimem_serving_bytes_per_s", self.bytes_per_s());
+        r.gauge("mcaimem_serving_occupancy_ratio", self.occupancy());
+        r.gauge("mcaimem_serving_window_s", self.elapsed_s());
+        r.gauge("mcaimem_serving_refresh_stall_total_us", self.refresh_stall_total_us);
+        r.gauge("mcaimem_serving_refresh_slack_total_us", self.refresh_slack_total_us);
+        r.merge_hist("mcaimem_serving_latency_us", &self.latency_hist);
+        r.merge_hist("mcaimem_serving_refresh_stall_us", &self.refresh_stall_hist);
+        r
     }
 
     /// Batch-occupancy efficiency: fraction of executed slots that carried
@@ -285,5 +341,55 @@ mod tests {
         assert_eq!(m.requests, 400_000);
         assert!(m.p999_us() >= m.p99_us());
         assert!(m.p99_us() > 850.0);
+    }
+
+    #[test]
+    fn quantiles_come_from_the_histogram_not_the_reservoir() {
+        // push far past the reservoir capacity with a distribution whose
+        // tail a subsample can miss entirely: one 10 ms outlier in 100k
+        let mut m = Metrics::default();
+        for _ in 0..99_999u64 {
+            m.record_latency(Duration::from_micros(100));
+        }
+        m.record_latency(Duration::from_micros(10_000));
+        // rank ceil(0.999999·100000) = 100000 ⇒ the outlier bucket, ±1/32
+        let q = m.quantile(0.999999);
+        assert!(q > 9_000.0, "exact-count tail must see the outlier, got {q}");
+        // raw samples stay bounded by the reservoir
+        assert!(m.raw_latency_samples().len() <= Reservoir::default().capacity());
+    }
+
+    #[test]
+    fn starved_quantiles_are_flagged() {
+        let mut m = Metrics::default();
+        for _ in 0..500 {
+            m.record_latency(Duration::from_micros(100));
+        }
+        assert!(!m.quantile_starved(0.5));
+        assert!(!m.quantile_starved(0.99)); // 500 * 0.01 = 5 ≥ 1
+        assert!(m.quantile_starved(0.999)); // 500 * 0.001 = 0.5 < 1
+    }
+
+    #[test]
+    fn registry_snapshot_carries_counters_and_distributions() {
+        let mut m = Metrics::default();
+        for us in [100u64, 200, 300] {
+            m.record_latency(Duration::from_micros(us));
+        }
+        m.record_batch(3, 4);
+        m.record_bytes_in(96);
+        m.record_refresh_stall(25.0);
+        let r = m.registry();
+        assert_eq!(r.counter("mcaimem_serving_requests_total"), 3);
+        assert_eq!(r.counter("mcaimem_serving_bytes_in_total"), 96);
+        let h = r.hist("mcaimem_serving_latency_us").expect("latency hist exported");
+        assert_eq!(h.count(), 3);
+        let stall = r.gauge_value("mcaimem_serving_refresh_stall_total_us").unwrap();
+        assert!((stall - 25.0).abs() < 1e-9);
+        // merging two snapshots doubles counters and histogram mass
+        let mut agg = r.clone();
+        agg.merge(&m.registry());
+        assert_eq!(agg.counter("mcaimem_serving_requests_total"), 6);
+        assert_eq!(agg.hist("mcaimem_serving_latency_us").unwrap().count(), 6);
     }
 }

@@ -130,6 +130,10 @@ pub struct PoolConfig {
     /// the pre-existing behaviour.
     pub refresh_stall: Duration,
     pub seed: u64,
+    /// Telemetry sink threaded through every worker's buffer manager and
+    /// backend (disabled by default — the submit/reply hot paths then pay
+    /// a single branch and zero allocations; see `crate::obs`).
+    pub obs: crate::obs::ObsSink,
 }
 
 impl Default for PoolConfig {
@@ -147,6 +151,7 @@ impl Default for PoolConfig {
             dispatch: DispatchMode::RefreshAware,
             refresh_stall: Duration::ZERO,
             seed: 0xD00D,
+            obs: crate::obs::ObsSink::disabled(),
         }
     }
 }
@@ -307,6 +312,9 @@ impl InferEngine for PjrtEngine {
 }
 
 struct Job {
+    /// Stable request id (the pool's admission sequence number) — threads
+    /// through the trace so a reply instant names the request it answers.
+    id: u64,
     row: Vec<i8>,
     submitted: Instant,
     reply: mpsc::Sender<Reply>,
@@ -346,6 +354,10 @@ struct Shared {
     /// the way out; admission scales its high-water mark by `alive/workers`
     /// and closes entirely at zero.
     alive: AtomicUsize,
+    /// Admission sequence: one ticket per submit (accepted or rejected).
+    /// Request ids and the pool trace track's logical timebase — wall
+    /// clock never enters the trace.
+    pool_seq: AtomicU64,
 }
 
 impl Shared {
@@ -578,10 +590,23 @@ impl WorkerPool {
             depth_seed: cfg.seed ^ 0xDE97,
             rr: AtomicUsize::new(0),
             alive: AtomicUsize::new(cfg.workers),
+            pool_seq: AtomicU64::new(0),
         });
 
         let mut workers = Vec::with_capacity(cfg.workers);
-        for (k, (engine, bm)) in engines.into_iter().zip(buffers).enumerate() {
+        // global shard-track bases: worker k's shards get consecutive
+        // trace tracks after all of worker k-1's
+        let mut shard_base = 0usize;
+        for (k, (engine, mut bm)) in engines.into_iter().zip(buffers).enumerate() {
+            if cfg.obs.is_enabled() {
+                let n_shards = bm.mem.shard_meters().len();
+                bm.attach_obs(
+                    &cfg.obs,
+                    crate::obs::worker_track(k),
+                    crate::obs::shard_track(shard_base),
+                );
+                shard_base += n_shards;
+            }
             let need = engine.batch() * engine.dim();
             if bm.capacity() < need {
                 bail!(
@@ -639,6 +664,16 @@ impl WorkerPool {
         let depth = self.shared.depth.load(Ordering::Relaxed);
         if depth >= high_water {
             self.shared.rejected.fetch_add(1, Ordering::Relaxed);
+            if self.cfg.obs.is_enabled() {
+                let seq = self.shared.pool_seq.fetch_add(1, Ordering::Relaxed);
+                self.cfg.obs.emit(crate::obs::Event::instant(
+                    crate::obs::EventKind::Reject,
+                    crate::obs::TRACK_POOL,
+                    seq as f64,
+                    seq,
+                    depth as u64,
+                ));
+            }
             let over = (depth + 1 - high_water) as u64;
             // backlog above the mark, in batches, times the service estimate
             let us =
@@ -648,7 +683,8 @@ impl WorkerPool {
             return Err(SubmitError::Rejected { depth, retry_after });
         }
         let (reply_tx, reply_rx) = mpsc::channel();
-        let job = Job { row, submitted: Instant::now(), reply: reply_tx };
+        let seq = self.shared.pool_seq.fetch_add(1, Ordering::Relaxed);
+        let job = Job { id: seq, row, submitted: Instant::now(), reply: reply_tx };
         let start = self.shared.rr.fetch_add(1, Ordering::Relaxed) % self.cfg.workers;
         let Some(k) = self.shared.route_live(start) else {
             // the last survivor died between the alive check and routing
@@ -658,6 +694,15 @@ impl WorkerPool {
         // (and decrementing) between push and a late increment would wrap
         // the counter to usize::MAX
         let d = self.shared.depth.fetch_add(1, Ordering::Relaxed) + 1;
+        if self.cfg.obs.is_enabled() {
+            self.cfg.obs.emit(crate::obs::Event::instant(
+                crate::obs::EventKind::Admit,
+                crate::obs::TRACK_POOL,
+                seq as f64,
+                seq,
+                d as u64,
+            ));
+        }
         self.shared.push_job(k, job);
         self.shared.sample_depth(d);
         if !self.shared.slots[k].live.load(Ordering::SeqCst) {
@@ -747,6 +792,8 @@ fn serve_group(
     let batch = engine.batch();
     let dim = engine.dim();
     let real = group.len();
+    let obs_on = bm.obs().is_enabled();
+    let track = bm.obs_track();
     x.clear();
     x.resize(real * dim, 0);
     for (i, job) in group.iter().enumerate() {
@@ -773,19 +820,81 @@ fn serve_group(
     // through store → compute tick → load (a sub-handle over the batch
     // region)
     let h = TensorHandle { offset: stage.offset, len: real * dim, id: stage.id };
-    let staged: Vec<i8> = match bm.store_i8(h, x) {
-        Ok(()) => {
-            bm.tick(cfg.sim_compute_s);
-            bm.load_i8(h)
+    if obs_on {
+        bm.obs().emit(crate::obs::Event::span_begin(
+            crate::obs::EventKind::Stage,
+            track,
+            bm.obs_now_us(),
+            real as u64,
+            dim as u64,
+        ));
+    }
+    let staged: Vec<i8> = {
+        let _staging = crate::obs::profile::phase(crate::obs::profile::Phase::Staging);
+        match bm.store_i8(h, x) {
+            Ok(()) => {
+                bm.tick(cfg.sim_compute_s);
+                bm.load_i8(h)
+            }
+            Err(_) => x.clone(), // sizes are validated at start; defensive only
         }
-        Err(_) => x.clone(), // sizes are validated at start; defensive only
     };
+    if obs_on {
+        bm.obs().emit(crate::obs::Event::span_end(
+            crate::obs::EventKind::Stage,
+            track,
+            bm.obs_now_us(),
+            real as u64,
+            0,
+        ));
+    }
 
     if matches!(cfg.dispatch, DispatchMode::Oblivious) && !stall.is_zero() {
         // refresh-oblivious: the slots that fired inside the window stall
         // the array before the batch completes — every request in the
-        // group eats the pause in its latency
+        // group eats the pause in its latency. On the trace the stall span
+        // sits on the request path: it ends exactly where the replies are
+        // stamped.
+        if obs_on {
+            bm.obs().emit(crate::obs::Event::span_begin(
+                crate::obs::EventKind::RefreshStall,
+                track,
+                bm.obs_now_us(),
+                plan.ops_due,
+                0,
+            ));
+        }
         std::thread::sleep(stall);
+        if obs_on {
+            bm.add_obs_lag(stall_us);
+            bm.obs().emit(crate::obs::Event::span_end(
+                crate::obs::EventKind::RefreshStall,
+                track,
+                bm.obs_now_us(),
+                plan.ops_due,
+                0,
+            ));
+        }
+    }
+
+    if obs_on {
+        // zero-width under the virtual clock: modeled compute time is the
+        // staged tick; the engine's wall latency never enters the trace
+        let t = bm.obs_now_us();
+        bm.obs().emit(crate::obs::Event::span_begin(
+            crate::obs::EventKind::Infer,
+            track,
+            t,
+            real as u64,
+            0,
+        ));
+        bm.obs().emit(crate::obs::Event::span_end(
+            crate::obs::EventKind::Infer,
+            track,
+            t,
+            real as u64,
+            0,
+        ));
     }
 
     match engine.infer_rows(&staged, real) {
@@ -798,14 +907,43 @@ fn serve_group(
                 } else {
                     0.0
                 });
+                if obs_on {
+                    bm.obs().emit(crate::obs::Event::instant(
+                        crate::obs::EventKind::Reply,
+                        track,
+                        bm.obs_now_us(),
+                        job.id,
+                        0,
+                    ));
+                }
                 let _ = job.reply.send(Ok((classes[i], latency)));
             }
             if cfg.dispatch == DispatchMode::RefreshAware && !stall.is_zero() {
                 // refresh-aware: the same stall is paid *after* the replies
                 // left, absorbed into the inter-window slack the planner
-                // computed — off every request's critical path
+                // computed — off every request's critical path. The trace
+                // shows the slack span starting at the reply timestamp.
+                if obs_on {
+                    bm.obs().emit(crate::obs::Event::span_begin(
+                        crate::obs::EventKind::RefreshSlack,
+                        track,
+                        bm.obs_now_us(),
+                        plan.ops_due,
+                        0,
+                    ));
+                }
                 std::thread::sleep(stall);
                 metrics.record_refresh_slack(stall_us);
+                if obs_on {
+                    bm.add_obs_lag(stall_us);
+                    bm.obs().emit(crate::obs::Event::span_end(
+                        crate::obs::EventKind::RefreshSlack,
+                        track,
+                        bm.obs_now_us(),
+                        plan.ops_due,
+                        0,
+                    ));
+                }
             }
             false
         }
@@ -816,6 +954,15 @@ fn serve_group(
             let fatal = msg.contains(crate::faults::FATAL_MARKER);
             for job in group {
                 metrics.record_error();
+                if obs_on {
+                    bm.obs().emit(crate::obs::Event::instant(
+                        crate::obs::EventKind::Reply,
+                        track,
+                        bm.obs_now_us(),
+                        job.id,
+                        1,
+                    ));
+                }
                 let _ = job.reply.send(Err(anyhow::anyhow!("{msg}")));
             }
             fatal
@@ -1165,5 +1312,113 @@ mod tests {
         // identical virtual schedule: same refresh count on the meters
         let refreshes = |s: &ServerStats| s.shards.iter().map(|sh| sh.refreshes).sum::<u64>();
         assert_eq!(refreshes(&obl), refreshes(&aware), "modes must not change the schedule");
+    }
+
+    #[test]
+    fn tracing_is_inert_and_places_stall_spans_by_dispatch_mode() {
+        use crate::obs::{EventKind, ObsSink, Ph, TRACK_POOL};
+        // one run per (mode, sink): the traced run must leave every virtual
+        // meter bit-identical to the untraced one, and its trace must put
+        // refresh-stall spans on the request path (ending at the reply
+        // stamp) under oblivious dispatch, but slack spans *after* the
+        // replies under refresh-aware dispatch.
+        let run = |dispatch: DispatchMode, obs: ObsSink| {
+            let cfg = PoolConfig {
+                backend: BackendSpec::mcaimem_default(),
+                workers: 1,
+                shards: 1,
+                buffer_bytes: 256 * 1024,
+                high_water: 10_000,
+                dispatch,
+                refresh_stall: Duration::from_micros(2),
+                seed: 77,
+                obs,
+                ..PoolConfig::default()
+            };
+            let pool = WorkerPool::start_with_engines(cfg, fast_engines(1)).unwrap();
+            for i in 0..8 {
+                pool.classify(vec![i as i8; 784]).unwrap();
+            }
+            pool.shutdown()
+        };
+        for mode in [DispatchMode::Oblivious, DispatchMode::RefreshAware] {
+            let sink = ObsSink::enabled(1 << 14);
+            let traced = run(mode, sink.clone());
+            let plain = run(mode, ObsSink::disabled());
+            // bit-identical meters: tracing must not perturb the simulation
+            assert_eq!(traced.requests, plain.requests);
+            let energies = |s: &ServerStats| {
+                s.shards.iter().map(|sh| sh.energy_j.to_bits()).collect::<Vec<_>>()
+            };
+            assert_eq!(energies(&traced), energies(&plain), "{mode:?}: meters must be bit-identical");
+            let refreshes = |s: &ServerStats| s.shards.iter().map(|sh| sh.refreshes).sum::<u64>();
+            assert_eq!(refreshes(&traced), refreshes(&plain), "{mode:?}");
+
+            let events = sink.events();
+            assert_eq!(sink.dropped_events(), 0, "ring sized for the run");
+            // every serving event type shows up
+            let count =
+                |k: EventKind| events.iter().filter(|(_, e)| e.kind == k).count();
+            assert_eq!(count(EventKind::Admit), 8);
+            assert_eq!(count(EventKind::Reply), 8);
+            assert!(count(EventKind::Stage) >= 2, "stage begin/end pairs");
+            assert!(count(EventKind::RefreshPass) >= 2, "refresh fires in every window");
+            // admit instants live on the pool track with the logical timebase
+            for (_, e) in events.iter().filter(|(_, e)| e.kind == EventKind::Admit) {
+                assert_eq!(e.track, TRACK_POOL);
+                assert_eq!(e.t_us, e.a as f64, "pool track time is the admission seq");
+            }
+            let replies: Vec<f64> = events
+                .iter()
+                .filter(|(_, e)| e.kind == EventKind::Reply)
+                .map(|(_, e)| e.t_us)
+                .collect();
+            match mode {
+                DispatchMode::Oblivious => {
+                    let stall_ends: Vec<f64> = events
+                        .iter()
+                        .filter(|(_, e)| e.kind == EventKind::RefreshStall && e.ph == Ph::E)
+                        .map(|(_, e)| e.t_us)
+                        .collect();
+                    assert!(!stall_ends.is_empty(), "oblivious must trace stall spans");
+                    assert_eq!(count(EventKind::RefreshSlack), 0);
+                    // the stall ends exactly where its window's replies are
+                    // stamped: on the request path
+                    for t in &stall_ends {
+                        assert!(
+                            replies.iter().any(|r| (r - t).abs() < 1e-9),
+                            "stall end {t} must coincide with a reply"
+                        );
+                    }
+                }
+                DispatchMode::RefreshAware => {
+                    let slack_begins: Vec<f64> = events
+                        .iter()
+                        .filter(|(_, e)| e.kind == EventKind::RefreshSlack && e.ph == Ph::B)
+                        .map(|(_, e)| e.t_us)
+                        .collect();
+                    assert!(!slack_begins.is_empty(), "aware must trace slack spans");
+                    assert_eq!(count(EventKind::RefreshStall), 0);
+                    // slack starts at the reply stamp — the stall is paid
+                    // after the replies left, in inter-window slack
+                    for t in &slack_begins {
+                        assert!(
+                            replies.iter().any(|r| (r - t).abs() < 1e-9),
+                            "slack begin {t} must start at a reply stamp"
+                        );
+                    }
+                }
+            }
+            // the worker track stays monotone despite the lag offsets
+            let mut worker_ts: Vec<(u64, f64)> = events
+                .iter()
+                .filter(|(_, e)| e.track == crate::obs::worker_track(0))
+                .map(|&(ticket, e)| (ticket, e.t_us))
+                .collect();
+            worker_ts.sort_by_key(|&(ticket, _)| ticket);
+            for w in worker_ts.windows(2) {
+                assert!(w[1].1 >= w[0].1 - 1e-9, "worker track must be monotone in emission order");
+            }
+        }
     }
 }

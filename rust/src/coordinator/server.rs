@@ -92,7 +92,8 @@ pub struct ServerStats {
     pub p50_latency_us: f64,
     pub p99_latency_us: f64,
     /// p99.9 request latency (µs) — the SLO tail the serving sweeps gate
-    /// on; estimated from the same bounded reservoir as p50/p99.
+    /// on; backed (like p50/p99) by the exact-count log-bucketed
+    /// histogram, so it is stable at any completion count.
     pub p999_latency_us: f64,
     pub occupancy: f64,
     /// Request payload bytes accepted over the server's lifetime.
@@ -123,6 +124,13 @@ pub struct ServerStats {
     /// Per-shard occupancy/refresh/energy counters (pool only; empty for
     /// the single-worker server, which owns no buffer shards).
     pub shards: Vec<ShardStat>,
+    /// The merged request-latency distribution (exact counts, log
+    /// buckets) — the p50/p99/p99.9 fields above are read from this; it
+    /// rides along so [`ServerStats::registry`] can export the full
+    /// quantile summary, not just point readings.
+    pub latency_hist: crate::obs::LogHistogram,
+    /// The merged per-request refresh-stall distribution (µs).
+    pub refresh_stall_hist: crate::obs::LogHistogram,
 }
 
 impl ServerStats {
@@ -147,7 +155,42 @@ impl ServerStats {
             refresh_stall_total_us: m.refresh_stall_total_us,
             refresh_slack_total_us: m.refresh_slack_total_us,
             shards: Vec::new(),
+            latency_hist: m.latency_hist().clone(),
+            refresh_stall_hist: m.refresh_stall_hist().clone(),
         }
+    }
+
+    /// Snapshot into the unified metrics registry
+    /// (`mcaimem_serving_*` / `mcaimem_shard_*` names): the export surface
+    /// behind `mcaimem serve --metrics-out` (JSON or Prometheus text).
+    pub fn registry(&self) -> crate::obs::Registry {
+        let mut r = crate::obs::Registry::new();
+        r.count("mcaimem_serving_requests_total", self.requests);
+        r.count("mcaimem_serving_batches_total", self.batches);
+        r.count("mcaimem_serving_bytes_in_total", self.bytes_in);
+        r.count("mcaimem_serving_errors_total", self.errors);
+        r.count("mcaimem_serving_rejected_total", self.rejected);
+        r.gauge("mcaimem_serving_latency_mean_us", self.mean_latency_us);
+        r.gauge("mcaimem_serving_latency_p50_us", self.p50_latency_us);
+        r.gauge("mcaimem_serving_latency_p99_us", self.p99_latency_us);
+        r.gauge("mcaimem_serving_latency_p999_us", self.p999_latency_us);
+        r.gauge("mcaimem_serving_occupancy_ratio", self.occupancy);
+        r.gauge("mcaimem_serving_requests_per_s", self.requests_per_s);
+        r.gauge("mcaimem_serving_bytes_per_s", self.bytes_per_s);
+        r.gauge("mcaimem_serving_queue_depth_p99", self.queue_depth_p99);
+        r.gauge("mcaimem_serving_refresh_stall_p999_us", self.refresh_stall_p999_us);
+        r.gauge("mcaimem_serving_refresh_stall_total_us", self.refresh_stall_total_us);
+        r.gauge("mcaimem_serving_refresh_slack_total_us", self.refresh_slack_total_us);
+        r.merge_hist("mcaimem_serving_latency_us", &self.latency_hist);
+        if self.refresh_stall_hist.count() > 0 {
+            r.merge_hist("mcaimem_serving_refresh_stall_us", &self.refresh_stall_hist);
+        }
+        for s in &self.shards {
+            r.count("mcaimem_shard_bytes_rw_total", s.bytes_rw);
+            r.count("mcaimem_shard_refresh_ops_total", s.refreshes);
+            r.gauge("mcaimem_shard_energy_j", s.energy_j);
+        }
+        r
     }
 }
 

@@ -51,6 +51,7 @@ pub fn decode_byte(x: u8) -> u8 {
 
 /// Encode a slice of int8 values into a new buffer.
 pub fn encode(data: &[i8]) -> Vec<i8> {
+    let _t = crate::obs::profile::phase(crate::obs::profile::Phase::Encode);
     data.iter().map(|&x| encode_byte(x as u8) as i8).collect()
 }
 
@@ -85,6 +86,7 @@ pub fn decode_words(planes: &mut [u64; 8]) {
 /// In-place encode over raw bytes (the hot path used by the buffer manager —
 /// zero-allocation).
 pub fn encode_in_place(data: &mut [u8]) {
+    let _t = crate::obs::profile::phase(crate::obs::profile::Phase::Encode);
     for b in data {
         *b = encode_byte(*b);
     }

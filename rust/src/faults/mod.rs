@@ -241,6 +241,10 @@ pub struct FaultyBackend {
     stuck: Vec<u8>,
     refresh_calls: u64,
     outage_fired: bool,
+    /// Telemetry sink + shard-track base (fault firings land on the track
+    /// of the shard they hit).
+    obs: crate::obs::ObsSink,
+    obs_base: u32,
 }
 
 impl FaultyBackend {
@@ -274,6 +278,8 @@ impl FaultyBackend {
             plan: plan.clone(),
             refresh_calls: 0,
             outage_fired: false,
+            obs: crate::obs::ObsSink::disabled(),
+            obs_base: 0,
         }
     }
 
@@ -290,6 +296,13 @@ impl FaultyBackend {
         if let Some((t, shard)) = self.plan.shard_outage {
             if !self.outage_fired && now >= t {
                 self.outage_fired = true;
+                self.obs.emit(crate::obs::Event::instant(
+                    crate::obs::EventKind::FaultFired,
+                    self.obs_base + shard as u32,
+                    now * 1e6,
+                    crate::obs::fault_code::SHARD_OUTAGE,
+                    shard as u64,
+                ));
                 self.inner.quarantine_shard(shard, now);
             }
         }
@@ -375,7 +388,16 @@ impl MemoryBackend for FaultyBackend {
         self.refresh_calls += 1;
         if let Some(k) = self.plan.refresh_stall {
             if self.refresh_calls % k == 0 {
-                return; // stalled slot: the row silently ages on
+                // stalled slot: the row silently ages on — silent to the
+                // manager, visible in the trace
+                self.obs.emit(crate::obs::Event::instant(
+                    crate::obs::EventKind::FaultFired,
+                    self.obs_base,
+                    now * 1e6,
+                    crate::obs::fault_code::REFRESH_STALL,
+                    row as u64,
+                ));
+                return;
             }
         }
         self.inner.refresh_row(row, now);
@@ -403,6 +425,12 @@ impl MemoryBackend for FaultyBackend {
 
     fn quarantine_shard(&mut self, shard: usize, now: f64) -> bool {
         self.inner.quarantine_shard(shard, now)
+    }
+
+    fn attach_obs(&mut self, sink: &crate::obs::ObsSink, track_base: u32) {
+        self.obs = sink.clone();
+        self.obs_base = track_base;
+        self.inner.attach_obs(sink, track_base);
     }
 
     fn label(&self) -> String {

@@ -40,6 +40,7 @@ pub mod energy;
 pub mod faults;
 pub mod inject;
 pub mod mem;
+pub mod obs;
 pub mod report;
 pub mod runtime;
 pub mod scalesim;

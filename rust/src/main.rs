@@ -69,6 +69,7 @@ USAGE:
                 [--mix NET,NET] [--p P] [--window-ms MS] [--artifacts DIR]
                 [--dispatch aware|oblivious] [--refresh-stall-us US]
                 [--sweep] [--rates R1,R2,..] [--json FILE] [--quick] [--no-retry]
+                [--trace-out FILE] [--metrics-out FILE]
       run the sharded multi-worker serving tier: K workers over N striped
       bank shards behind an event-loop dispatcher (per-worker parking,
       continuous batching) with admission control. --target-rps > 0 drives
@@ -80,10 +81,13 @@ USAGE:
       offered rates and reads the p99.9 SLO tail (--json writes either
       sweep's artifact; --quick shrinks them for CI). PJRT engines are used
       when --artifacts holds an export; otherwise a latency-faithful
-      synthetic engine.
+      synthetic engine. --trace-out writes the run's span trace as Chrome
+      trace-event JSON (open in Perfetto: one track per worker/shard plus
+      the admission track); --metrics-out snapshots the unified metrics
+      registry (.prom extension = Prometheus text, otherwise JSON).
   mcaimem conform [--backend SPECS] [--ops N] [--seed S] [--shards N]
                   [--bytes-kb KB] [--no-shrink] [--quick] [--save-dir DIR]
-                  [--replay FILE] [--json FILE]
+                  [--replay FILE] [--json FILE] [--trace-out FILE]
       seeded randomized conformance campaign: every backend must replay its
       own recorded trace exactly, and MCAIMem + tiered-over-leaf specs must
       match the golden model (sim::oracle) bit- and meter-exactly — flat
@@ -91,11 +95,13 @@ USAGE:
       --no-shrink) to
       minimal reproducing traces saved under --save-dir. --quick bounds the
       run for CI (<30 s). --replay re-runs a saved failure trace (e.g. a
-      CI artifact) locally. --faults PLAN runs the whole campaign under a
-      seeded fault schedule (see `mcaimem chaos`)
+      CI artifact) locally; with --trace-out the replayed op timeline is
+      also exported as Chrome trace-event JSON for Perfetto. --faults PLAN
+      runs the whole campaign under a seeded fault schedule (see
+      `mcaimem chaos`)
   mcaimem chaos [--faults PLAN] [--seed S] [--ops N] [--shards N] [--workers K]
                 [--requests N] [--no-shrink] [--quick] [--save-dir DIR]
-                [--replay FILE] [--json FILE]
+                [--replay FILE] [--json FILE] [--trace-out FILE]
       seeded chaos drill across both tiers: the conformance campaign under
       an active fault plan (mcaimem@0.8 and mcaimem@0.8+ecc, flat and
       sharded, fault-aware golden-oracle agreement) plus a degraded-mode
@@ -104,7 +110,9 @@ USAGE:
       retention-tail@RATE,stuck-at[@D],vref-drift@P,refresh-stall@K,
       shard-outage@T[/S],engine-timeout@K,engine-crash@K,seed=N
       (default: all six fault classes). Failures ddmin-shrink to minimal
-      traces under --save-dir; --replay re-runs one locally
+      traces under --save-dir; --replay re-runs one locally. --trace-out
+      exports the drill's serving-tier span trace (or, with --replay, the
+      replayed op timeline) as Chrome trace-event JSON
   mcaimem selftest [--artifacts DIR]
       cross-check the Rust and Pallas implementations through PJRT
 
@@ -151,7 +159,7 @@ fn run() -> Result<()> {
             "window-ms", "shards", "workers", "target-rps", "clients", "high-water",
             "buffer-kb", "mix", "ops", "bytes-kb", "save-dir", "replay", "json", "space",
             "strategy", "samples", "fidelity", "diff", "faults", "point", "rates",
-            "dispatch", "refresh-stall-us",
+            "dispatch", "refresh-stall-us", "trace-out", "metrics-out",
         ],
         &["quick", "help", "sweep", "no-retry", "no-shrink", "paper-gate", "compiled", "table"],
     );
@@ -462,6 +470,13 @@ fn cmd_serve(args: &mcaimem::cli::ParsedArgs) -> Result<()> {
 
     let workers = args.get_usize("workers", 1)?;
     let shards = args.get_usize("shards", workers)?;
+    // tracing is strictly opt-in: without --trace-out the sink stays
+    // disabled and the serving path runs its untraced (zero-allocation)
+    // fast path — meters are bit-identical either way
+    let obs = match args.get("trace-out") {
+        Some(_) => mcaimem::obs::ObsSink::enabled(mcaimem::obs::DEFAULT_RING_EVENTS),
+        None => mcaimem::obs::ObsSink::disabled(),
+    };
     let cfg = PoolConfig {
         backend,
         workers,
@@ -476,6 +491,7 @@ fn cmd_serve(args: &mcaimem::cli::ParsedArgs) -> Result<()> {
         dispatch,
         refresh_stall,
         seed,
+        obs: obs.clone(),
         ..PoolConfig::default()
     };
 
@@ -543,7 +559,72 @@ fn cmd_serve(args: &mcaimem::cli::ParsedArgs) -> Result<()> {
     for t in mcaimem::report::serving::stats_tables(&stats) {
         println!("{}", t.render());
     }
+    if let Some(path) = args.get("trace-out") {
+        let n = mcaimem::obs::export::write_chrome_trace(std::path::Path::new(path), &obs)?;
+        println!("span trace written to {path} ({n} events; open in https://ui.perfetto.dev)");
+    }
+    if let Some(path) = args.get("metrics-out") {
+        write_metrics(std::path::Path::new(path), &stats.registry())?;
+        println!("metrics snapshot written to {path}");
+    }
     Ok(())
+}
+
+/// Write a registry snapshot: Prometheus text for `.prom`/`.txt` paths,
+/// pretty JSON otherwise.
+fn write_metrics(path: &std::path::Path, reg: &mcaimem::obs::Registry) -> Result<()> {
+    let prom = matches!(
+        path.extension().and_then(|e| e.to_str()),
+        Some("prom") | Some("txt")
+    );
+    if prom {
+        std::fs::write(path, reg.to_prometheus())
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))?;
+    } else {
+        mcaimem::util::json::save_pretty(path, &reg.to_json())?;
+    }
+    Ok(())
+}
+
+/// Convert a recorded conformance/chaos trace into the obs event timeline
+/// and export it as Chrome trace-event JSON: stores/loads land on the
+/// `replay/ops` track, ticks and refresh slots on `replay/clock`, all at
+/// the trace's own device timestamps (µs).
+fn write_replay_trace(path: &std::path::Path, trace: &mcaimem::sim::trace::Trace) -> Result<usize> {
+    use mcaimem::obs::{Event, EventKind, ObsSink, TRACK_REPLAY_CLOCK, TRACK_REPLAY_OPS};
+    use mcaimem::sim::trace::Op;
+
+    let sink = ObsSink::enabled((trace.entries.len() + 1).next_power_of_two());
+    for (i, entry) in trace.entries.iter().enumerate() {
+        let ev = match &entry.op {
+            Op::Store { addr, data, t } => Event::instant(
+                EventKind::ReplayStore,
+                TRACK_REPLAY_OPS,
+                t * 1e6,
+                *addr as u64,
+                data.len() as u64,
+            ),
+            Op::Load { addr, len, t } => Event::instant(
+                EventKind::ReplayLoad,
+                TRACK_REPLAY_OPS,
+                t * 1e6,
+                *addr as u64,
+                *len as u64,
+            ),
+            Op::Tick { t } => {
+                Event::instant(EventKind::ReplayTick, TRACK_REPLAY_CLOCK, t * 1e6, i as u64, 0)
+            }
+            Op::RefreshRow { row, t } => Event::instant(
+                EventKind::ReplayRefresh,
+                TRACK_REPLAY_CLOCK,
+                t * 1e6,
+                i as u64,
+                *row as u64,
+            ),
+        };
+        sink.emit(ev);
+    }
+    mcaimem::obs::export::write_chrome_trace(path, &sink)
 }
 
 fn cmd_conform(args: &mcaimem::cli::ParsedArgs) -> Result<()> {
@@ -578,6 +659,13 @@ fn cmd_conform(args: &mcaimem::cli::ParsedArgs) -> Result<()> {
                     println!("vs oracle DIVERGED at {d}");
                 }
             }
+        }
+        // --trace-out: emit the replayed op timeline through the same
+        // exporter the serving tier uses — exported even when the replay
+        // diverges, since the timeline is exactly what needs inspecting
+        if let Some(path) = args.get("trace-out") {
+            let n = write_replay_trace(std::path::Path::new(path), &trace)?;
+            println!("replay timeline written to {path} ({n} events)");
         }
         if failed {
             bail!("replay diverged");
@@ -642,6 +730,10 @@ fn cmd_chaos(args: &mcaimem::cli::ParsedArgs) -> Result<()> {
         return cmd_conform(args);
     }
 
+    let obs = match args.get("trace-out") {
+        Some(_) => mcaimem::obs::ObsSink::enabled(mcaimem::obs::DEFAULT_RING_EVENTS),
+        None => mcaimem::obs::ObsSink::disabled(),
+    };
     let mut cfg = ChaosConfig {
         plan: args.get("faults").unwrap_or(DEFAULT_DRILL).parse()?,
         seed: args.get_usize("seed", 42)? as u64,
@@ -650,6 +742,7 @@ fn cmd_chaos(args: &mcaimem::cli::ParsedArgs) -> Result<()> {
         workers: args.get_usize("workers", 2)?,
         requests: args.get_usize("requests", 320)?,
         shrink: !args.has_flag("no-shrink"),
+        obs: obs.clone(),
         ..ChaosConfig::default()
     };
     if args.has_flag("quick") {
@@ -662,6 +755,10 @@ fn cmd_chaos(args: &mcaimem::cli::ParsedArgs) -> Result<()> {
         let doc = mcaimem::report::chaos::outcome_json(&outcome, &cfg);
         mcaimem::util::json::save_pretty(std::path::Path::new(path), &doc)?;
         println!("machine-readable report written to {path}");
+    }
+    if let Some(path) = args.get("trace-out") {
+        let n = mcaimem::obs::export::write_chrome_trace(std::path::Path::new(path), &obs)?;
+        println!("chaos span trace written to {path} ({n} events)");
     }
     if ok {
         println!(

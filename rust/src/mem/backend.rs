@@ -596,6 +596,14 @@ pub trait MemoryBackend: Send {
         false
     }
 
+    /// Attach a telemetry sink (`crate::obs`). `track_base` is the global
+    /// shard-track offset for this backend's shards (multi-worker pools
+    /// give each worker's backend a disjoint range). The default ignores
+    /// it — flat backends have no structural events to report; sharded /
+    /// tiered / fault-wrapped backends override to emit failover, tier
+    /// traffic and fault firings onto their tracks.
+    fn attach_obs(&mut self, _sink: &crate::obs::ObsSink, _track_base: u32) {}
+
     /// The shared energy/event meter.
     fn meter(&self) -> &EnergyMeter;
 

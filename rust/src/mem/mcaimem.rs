@@ -473,6 +473,7 @@ impl MixedCellMemory {
     /// Word-parallel store: aligned 64-byte blocks go through the SWAR
     /// transpose + word-level encode; ragged edges reuse the scalar step.
     fn store_words(&mut self, addr: usize, data: &[u8]) -> u64 {
+        let _t = crate::obs::profile::phase(crate::obs::profile::Phase::Transpose);
         let end = addr + data.len();
         let mut a = addr;
         let mut ones = 0u64;
@@ -518,6 +519,7 @@ impl MixedCellMemory {
     /// Word-parallel fetch: whole plane words → popcount census →
     /// word-level decode → inverse transpose.
     fn fetch_words(&self, addr: usize, len: usize, out: &mut Vec<u8>) -> u64 {
+        let _t = crate::obs::profile::phase(crate::obs::profile::Phase::Census);
         let end = addr + len;
         let mut a = addr;
         let mut ones = 0u64;

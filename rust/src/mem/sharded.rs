@@ -77,6 +77,10 @@ pub struct ShardedBackend {
     /// offset where a shard's buddy-mirror region starts.
     mirror_base: usize,
     quarantined: Vec<bool>,
+    /// Telemetry sink + global shard-track base (disabled by default;
+    /// see [`MemoryBackend::attach_obs`]).
+    obs: crate::obs::ObsSink,
+    obs_base: u32,
 }
 
 impl ShardedBackend {
@@ -112,6 +116,8 @@ impl ShardedBackend {
             failover: false,
             mirror_base: 0,
             quarantined: vec![false; n],
+            obs: crate::obs::ObsSink::disabled(),
+            obs_base: 0,
         };
         b.remerge();
         Ok(b)
@@ -144,6 +150,8 @@ impl ShardedBackend {
             failover: true,
             mirror_base,
             quarantined: vec![false; n],
+            obs: crate::obs::ObsSink::disabled(),
+            obs_base: 0,
         };
         b.remerge();
         Ok(b)
@@ -303,12 +311,29 @@ impl MemoryBackend for ShardedBackend {
     /// Declare a shard dead. Honoured only under failover provisioning —
     /// without a mirror there is nowhere to route its data, so the plain
     /// geometry keeps the default no-op contract and returns `false`.
-    fn quarantine_shard(&mut self, shard: usize, _now: f64) -> bool {
+    fn quarantine_shard(&mut self, shard: usize, now: f64) -> bool {
         if !self.failover || shard >= self.shards.len() {
             return false;
         }
         self.quarantined[shard] = true;
+        self.obs.emit(crate::obs::Event::instant(
+            crate::obs::EventKind::ShardFailover,
+            self.obs_base + shard as u32,
+            now * 1e6,
+            shard as u64,
+            ((shard + 1) % self.shards.len()) as u64,
+        ));
         true
+    }
+
+    fn attach_obs(&mut self, sink: &crate::obs::ObsSink, track_base: u32) {
+        self.obs = sink.clone();
+        self.obs_base = track_base;
+        // leaf shards are flat arrays (the trait default ignores this),
+        // but forward anyway so a nested structural backend keeps working
+        for (i, s) in self.shards.iter_mut().enumerate() {
+            s.attach_obs(sink, track_base + i as u32);
+        }
     }
 
     fn label(&self) -> String {

@@ -53,6 +53,9 @@ pub struct TieredBackend {
     use_clock: u64,
     merged: EnergyMeter,
     now: f64,
+    /// Telemetry sink; tier traffic lands on the fixed `tier/front` and
+    /// `tier/back` tracks (see [`crate::obs::tier_track`]).
+    obs: crate::obs::ObsSink,
 }
 
 impl TieredBackend {
@@ -79,6 +82,7 @@ impl TieredBackend {
             use_clock: 0,
             merged: EnergyMeter::default(),
             now: 0.0,
+            obs: crate::obs::ObsSink::disabled(),
         };
         t.remerge();
         t
@@ -120,6 +124,13 @@ impl TieredBackend {
                 if evicted.dirty {
                     let data = self.front.load(victim * BLOCK, BLOCK, now);
                     self.back.store(evicted.block * BLOCK, &data, now);
+                    self.obs.emit(crate::obs::Event::instant(
+                        crate::obs::EventKind::TierEvict,
+                        crate::obs::tier_track(1),
+                        now * 1e6,
+                        evicted.block as u64,
+                        victim as u64,
+                    ));
                 }
                 victim
             }
@@ -127,6 +138,13 @@ impl TieredBackend {
         if !full_overwrite {
             let data = self.back.load(block * BLOCK, BLOCK, now);
             self.front.store(slot * BLOCK, &data, now);
+            self.obs.emit(crate::obs::Event::instant(
+                crate::obs::EventKind::TierFill,
+                crate::obs::tier_track(0),
+                now * 1e6,
+                block as u64,
+                slot as u64,
+            ));
         }
         self.use_clock += 1;
         self.slots[slot] = Some(Slot { block, dirty: false, last_use: self.use_clock });
@@ -217,6 +235,13 @@ impl MemoryBackend for TieredBackend {
         } else {
             1
         }
+    }
+
+    fn attach_obs(&mut self, sink: &crate::obs::ObsSink, track_base: u32) {
+        self.obs = sink.clone();
+        // nested structural tiers (e.g. a sharded front) keep their events
+        self.front.attach_obs(sink, track_base);
+        self.back.attach_obs(sink, track_base);
     }
 
     fn meter(&self) -> &EnergyMeter {

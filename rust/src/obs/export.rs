@@ -1,0 +1,169 @@
+//! Chrome trace-event JSON export (Perfetto-loadable).
+//!
+//! Emits the `{"traceEvents": [...]}` object format: one process
+//! (`pid 1`, named "mcaimem"), one thread per track (`tid` = track id,
+//! named via `thread_name` metadata — `worker/0`, `shard/3`,
+//! `tier/front`, `pool`, `replay/ops`). Span events use `ph: "B"/"E"`,
+//! instants `ph: "i"` (thread scope); timestamps are the events'
+//! virtual/logical microseconds, so a fixed seed yields a diffable file.
+//!
+//! The exporter is defensive about ring overflow: events are sorted per
+//! track by `(t_us, ticket)`, unmatched span ends (their begin was
+//! overwritten) are dropped, and dangling begins are closed at the
+//! track's last timestamp — the emitted file always satisfies the CI
+//! schema check (well-formed, per-track monotone timestamps, balanced
+//! B/E).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use super::{track_name, Event, Ph};
+use crate::util::json::Json;
+use crate::Result;
+
+fn event_json(ph: &str, track: u32, t_us: f64, ev: &Event) -> Json {
+    let mut pairs = vec![
+        ("name", Json::Str(ev.kind.name().to_string())),
+        ("ph", Json::Str(ph.to_string())),
+        ("ts", Json::Num(t_us)),
+        ("pid", Json::Num(1.0)),
+        ("tid", Json::Num(track as f64)),
+    ];
+    if ph == "i" {
+        pairs.push(("s", Json::Str("t".to_string())));
+    }
+    // "E" events carry no args (matched by stack position); everything
+    // else ships the typed payload
+    if ph != "E" {
+        pairs.push((
+            "args",
+            Json::obj(vec![("a", Json::Num(ev.a as f64)), ("b", Json::Num(ev.b as f64))]),
+        ));
+    }
+    Json::obj(pairs)
+}
+
+fn thread_meta(track: u32) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str("thread_name".to_string())),
+        ("ph", Json::Str("M".to_string())),
+        ("pid", Json::Num(1.0)),
+        ("tid", Json::Num(track as f64)),
+        (
+            "args",
+            Json::obj(vec![("name", Json::Str(track_name(track)))]),
+        ),
+    ])
+}
+
+/// Build the trace document from `(ticket, event)` pairs (what
+/// [`super::ObsSink::events`] returns). `dropped` is the ring's overflow
+/// count, recorded top-level so a truncated trace is self-describing.
+pub fn chrome_trace(events: &[(u64, Event)], dropped: u64) -> Json {
+    // group per track; sort by (t, ticket) so equal timestamps keep
+    // emission order
+    let mut tracks: BTreeMap<u32, Vec<&(u64, Event)>> = BTreeMap::new();
+    for pair in events {
+        tracks.entry(pair.1.track).or_default().push(pair);
+    }
+    let mut out = Vec::with_capacity(events.len() + tracks.len() + 1);
+    out.push(Json::obj(vec![
+        ("name", Json::Str("process_name".to_string())),
+        ("ph", Json::Str("M".to_string())),
+        ("pid", Json::Num(1.0)),
+        ("args", Json::obj(vec![("name", Json::Str("mcaimem".to_string()))])),
+    ]));
+    for (&track, evs) in tracks.iter_mut() {
+        evs.sort_by(|x, y| {
+            x.1.t_us.partial_cmp(&y.1.t_us).unwrap_or(std::cmp::Ordering::Equal).then(x.0.cmp(&y.0))
+        });
+        out.push(thread_meta(track));
+        // balance pass: overflow can orphan one side of a span — drop
+        // end-without-begin, close begin-without-end at the last timestamp
+        let mut open: Vec<&Event> = Vec::new();
+        let mut last_t = 0.0f64;
+        let mut emitted: Vec<Json> = Vec::with_capacity(evs.len());
+        for &&(_, ref ev) in evs.iter() {
+            last_t = last_t.max(ev.t_us);
+            match ev.ph {
+                Ph::I => emitted.push(event_json("i", track, ev.t_us, ev)),
+                Ph::B => {
+                    open.push(ev);
+                    emitted.push(event_json("B", track, ev.t_us, ev));
+                }
+                Ph::E => match open.last() {
+                    Some(b) if b.kind == ev.kind => {
+                        open.pop();
+                        emitted.push(event_json("E", track, ev.t_us, ev));
+                    }
+                    // mismatched or orphaned end: its begin fell out of the
+                    // ring — dropping it keeps the track balanced
+                    _ => {}
+                },
+            }
+        }
+        for b in open.iter().rev() {
+            emitted.push(event_json("E", track, last_t, b));
+        }
+        out.extend(emitted);
+    }
+    Json::obj(vec![
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+        ("dropped_events", Json::Num(dropped as f64)),
+        ("traceEvents", Json::Arr(out)),
+    ])
+}
+
+/// Write the trace file for a sink (pretty-printed, parent dirs created).
+pub fn write_chrome_trace(path: &Path, sink: &super::ObsSink) -> Result<usize> {
+    let events = sink.events();
+    let n = events.len();
+    let doc = chrome_trace(&events, sink.dropped_events());
+    crate::util::json::save_pretty(path, &doc)?;
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{worker_track, Event, EventKind, ObsSink};
+
+    #[test]
+    fn tracks_are_named_sorted_and_balanced() {
+        let sink = ObsSink::enabled(64);
+        let w = worker_track(0);
+        sink.emit(Event::span_begin(EventKind::Stage, w, 10.0, 4, 0));
+        sink.emit(Event::span_end(EventKind::Stage, w, 20.0, 4, 0));
+        sink.emit(Event::instant(EventKind::Reply, w, 20.0, 7, 0));
+        // a dangling begin must be closed, an orphan end dropped
+        sink.emit(Event::span_begin(EventKind::Infer, w, 25.0, 4, 0));
+        sink.emit(Event::span_end(EventKind::RefreshPass, w, 30.0, 0, 0));
+        let doc = chrome_trace(&sink.events(), sink.dropped_events());
+        let text = doc.to_pretty();
+        assert_eq!(Json::parse(&text).unwrap(), doc);
+        let Json::Obj(top) = &doc else { panic!() };
+        let Some(Json::Arr(evs)) = top.get("traceEvents") else { panic!() };
+        let mut depth = 0i64;
+        let mut last_ts = f64::NEG_INFINITY;
+        for e in evs {
+            let Json::Obj(o) = e else { panic!() };
+            let ph = o.get("ph").and_then(|p| p.as_str()).unwrap();
+            if ph == "M" {
+                continue;
+            }
+            let ts = o.get("ts").and_then(|t| t.as_f64()).unwrap();
+            assert!(ts >= last_ts, "timestamps must be monotone per track");
+            last_ts = ts;
+            match ph {
+                "B" => depth += 1,
+                "E" => depth -= 1,
+                _ => {}
+            }
+            assert!(depth >= 0, "end before begin");
+        }
+        assert_eq!(depth, 0, "spans must balance");
+        assert!(text.contains("worker/0"));
+        assert!(text.contains("refresh_pass") == false, "orphan end must be dropped");
+        assert!(text.contains("infer"), "dangling begin survives, closed at last ts");
+    }
+}

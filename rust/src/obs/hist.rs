@@ -1,0 +1,256 @@
+//! Log-bucketed histogram with exact counts and bounded relative error.
+//!
+//! HDR-style integer bucketing at precision 5 (32 sub-buckets per octave):
+//! values below 64 get exact unit buckets; a value `v ≥ 64` lands in the
+//! bucket addressed by its octave and top five mantissa bits, whose width
+//! is `2^(octave-5)` — so the worst-case relative bucket error is 1/32
+//! (~3.1 %). Counts are exact (no sampling), histograms merge by
+//! element-wise addition, and quantiles interpolate within the bucket, so
+//! p99/p99.9 stay stable at low completion counts where reservoir
+//! sampling wobbles — the fidelity fix behind `ServerStats`.
+
+/// Sub-bucket precision: 2^5 = 32 mantissa buckets per octave.
+const PRECISION: u32 = 5;
+const SUB: usize = 1 << PRECISION; // 32
+/// Unit-bucket region: values below 2·SUB are exact.
+const UNIT: u64 = (2 * SUB) as u64; // 64
+/// Bucket count covering all of u64: 64 unit buckets + 58 octaves × 32.
+const BUCKETS: usize = 2 * SUB + (63 - PRECISION as usize) * SUB; // 1920
+
+/// Mergeable log-bucketed histogram over non-negative values (µs in this
+/// crate). Exact total/sum/min/max; quantiles carry ≤ 1/32 relative
+/// bucket error.
+#[derive(Clone)]
+pub struct LogHistogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum: f64,
+    min: u64,
+    max: u64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram::new()
+    }
+}
+
+impl std::fmt::Debug for LogHistogram {
+    // compact on purpose: Metrics' debug repr is pinned to stay bounded
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "LogHistogram {{ total: {}, min: {}, max: {}, p50: {:.1}, p99: {:.1} }}",
+            self.total,
+            if self.total == 0 { 0 } else { self.min },
+            self.max,
+            self.quantile(0.5),
+            self.quantile(0.99)
+        )
+    }
+}
+
+/// Bucket index of value `v`.
+fn index_of(v: u64) -> usize {
+    if v < UNIT {
+        return v as usize;
+    }
+    let o = 63 - v.leading_zeros(); // octave, ≥ 6
+    let m = (v >> (o - PRECISION)) as usize; // mantissa in [32, 64)
+    2 * SUB + (o as usize - 6) * SUB + (m - SUB)
+}
+
+/// Inclusive lower bound and width of bucket `idx`.
+fn bucket_bounds(idx: usize) -> (u64, u64) {
+    if idx < 2 * SUB {
+        return (idx as u64, 1);
+    }
+    let o = 6 + (idx - 2 * SUB) / SUB;
+    let m = (SUB + (idx - 2 * SUB) % SUB) as u64;
+    (m << (o as u32 - PRECISION), 1u64 << (o as u32 - PRECISION))
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        LogHistogram { counts: vec![0; BUCKETS], total: 0, sum: 0.0, min: u64::MAX, max: 0 }
+    }
+
+    /// Worst-case relative quantile error from bucketing alone.
+    pub fn relative_error() -> f64 {
+        1.0 / SUB as f64
+    }
+
+    /// Record one non-negative value (fractional µs round to the nearest
+    /// integer; negatives clamp to 0).
+    #[inline]
+    pub fn record(&mut self, v: f64) {
+        let v = if v.is_finite() && v > 0.0 { v.round() as u64 } else { 0 };
+        self.record_u64(v);
+    }
+
+    #[inline]
+    pub fn record_u64(&mut self, v: u64) {
+        self.counts[index_of(v)] += 1;
+        self.total += 1;
+        self.sum += v as f64;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    /// Merge another histogram (element-wise count addition — the
+    /// cross-worker aggregation path).
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (c, o) in self.counts.iter_mut().zip(&other.counts) {
+            *c += o;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Quantile `q ∈ [0, 1]`: rank-walk over the exact counts, linear
+    /// interpolation within the landing bucket, clamped to the observed
+    /// [min, max]. Empty histogram → 0.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let rank = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut cum = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if cum + c >= rank {
+                let (lower, width) = bucket_bounds(idx);
+                let pos = (rank - cum - 1) as f64; // 0-based within bucket
+                let est = lower as f64 + width as f64 * (pos + 0.5) / c as f64;
+                return est.clamp(self.min as f64, self.max as f64);
+            }
+            cum += c;
+        }
+        self.max as f64
+    }
+
+    /// Non-empty buckets as `(lower_bound, width, count)` — the raw shape
+    /// for machine-readable exports.
+    pub fn buckets(&self) -> Vec<(u64, u64, u64)> {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| {
+                let (lo, w) = bucket_bounds(i);
+                (lo, w, c)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_values_are_exact() {
+        let mut h = LogHistogram::new();
+        for v in [0u64, 1, 5, 63] {
+            h.record_u64(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 63);
+        // below 64 every bucket is a single integer, so quantiles are exact
+        assert_eq!(h.quantile(0.5), 1.5); // rank 2 → bucket [1,2), mid 1.5
+        assert_eq!(h.quantile(1.0), 63.5f64.min(63.0)); // clamped to max
+    }
+
+    #[test]
+    fn bucket_error_is_bounded() {
+        for v in [64u64, 100, 991, 4096, 123_456, u32::MAX as u64, 1 << 60] {
+            let (lo, w) = bucket_bounds(index_of(v));
+            assert!(lo <= v && v < lo + w, "v={v} lo={lo} w={w}");
+            assert!(
+                (w as f64) / (lo as f64) <= 1.0 / 32.0 + 1e-12,
+                "relative width {} at v={v}",
+                w as f64 / lo as f64
+            );
+        }
+    }
+
+    #[test]
+    fn index_and_bounds_roundtrip_over_all_buckets() {
+        for idx in 0..BUCKETS {
+            let (lo, w) = bucket_bounds(idx);
+            assert_eq!(index_of(lo), idx, "lower bound of {idx}");
+            assert_eq!(index_of(lo + w - 1), idx, "upper edge of {idx}");
+        }
+    }
+
+    #[test]
+    fn uniform_ramp_quantiles_land_inside_the_right_bucket() {
+        // the Metrics pinned workload: 1..=1000 µs, 200 of each
+        let mut h = LogHistogram::new();
+        for i in 0..200_000u64 {
+            h.record_u64(1 + i % 1000);
+        }
+        let p99 = h.quantile(0.99);
+        assert!(p99 > 900.0 && p99 <= 1000.0, "p99 {p99}");
+        assert!(h.quantile(0.999) >= p99);
+        assert!((h.mean() - 500.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_equals_concatenation() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        let mut both = LogHistogram::new();
+        let mut x = 0x9E37_79B9_7F4A_7C15u64;
+        for i in 0..4000u64 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let v = x >> 40;
+            if i % 2 == 0 {
+                a.record_u64(v);
+            } else {
+                b.record_u64(v);
+            }
+            both.record_u64(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), both.count());
+        assert_eq!(a.min(), both.min());
+        assert_eq!(a.max(), both.max());
+        for q in [0.5, 0.9, 0.99, 0.999] {
+            assert_eq!(a.quantile(q), both.quantile(q), "q={q}");
+        }
+    }
+}

@@ -1,0 +1,242 @@
+//! Telemetry backbone: structured span tracing, a unified metrics
+//! registry, and compile-time-gated profiling hooks.
+//!
+//! The paper's headline claims (48 % area, 3.4× energy vs SRAM) rest on
+//! *attribution* — knowing where refresh energy, stall time and write
+//! asymmetry land. This module makes that attribution observable at
+//! runtime without perturbing it:
+//!
+//! * [`ring`] — bounded lock-free event rings ([`EventRing`]): typed
+//!   events ([`Event`]) with stable ids and virtual-clock timestamps,
+//!   multi-writer safe, overflow drops the oldest event and counts it.
+//! * [`export`] — Chrome trace-event JSON (Perfetto-loadable): one track
+//!   per worker / shard / tier so refresh windows visually interleave
+//!   with batch windows (`mcaimem serve --trace-out trace.json`).
+//! * [`hist`] — [`LogHistogram`], an HDR-style log-bucketed histogram
+//!   with exact counts and ≤ 1/32 relative bucket error; the one
+//!   quantile path behind `ServerStats` p99/p99.9.
+//! * [`registry`] — [`Registry`], named counters/gauges/histograms
+//!   snapshot-exportable as JSON and Prometheus text format.
+//! * [`profile`] — scoped phase timers on the hot paths (transpose,
+//!   encode, census, staging, refresh scan), compiled out entirely
+//!   unless `--features obs-profile`.
+//!
+//! **Zero cost when disabled**: every producer holds an [`ObsSink`];
+//! the disabled sink is a `None` branch — no allocation, no atomics, no
+//! clock reads. **Deterministic**: event timestamps come from the
+//! virtual device clock (backends, refresh) or a logical admission
+//! sequence (the pool track) — never the wall clock — so traces are
+//! diffable across runs under a fixed seed (single-worker runs are
+//! byte-identical; multi-worker batch composition is inherently
+//! scheduling-dependent).
+
+pub mod export;
+pub mod hist;
+pub mod profile;
+pub mod registry;
+pub mod ring;
+
+pub use hist::LogHistogram;
+pub use registry::Registry;
+pub use ring::EventRing;
+
+use std::sync::Arc;
+
+/// What happened. Span kinds carry a begin/end phase ([`Ph`]); the rest
+/// are instants.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// Request admitted (pool track; `a` = request id, `b` = queue depth).
+    Admit,
+    /// Request rejected by admission control (pool track; `a` = seq).
+    Reject,
+    /// Staged store→tick→load pass (worker track; `a` = batch size).
+    Stage,
+    /// Engine inference (worker track; `a` = batch size).
+    Infer,
+    /// Reply delivered (worker track; `a` = request id, `b` = 1 on error).
+    Reply,
+    /// Manager refresh pass (worker track; `a` = rows due).
+    RefreshPass,
+    /// Modeled refresh stall on the request path (oblivious dispatch).
+    RefreshStall,
+    /// Modeled refresh stall absorbed in inter-window slack (aware).
+    RefreshSlack,
+    /// A fault-plan clause fired (`a` = [`fault_code`] value, `b` = detail).
+    FaultFired,
+    /// ECC scrubbing corrected cells during a refresh pass (`a` = count).
+    EccCorrected,
+    /// Tiered front fill from the back tier (`a` = block index).
+    TierFill,
+    /// Tiered dirty-victim write-back eviction (`a` = block index).
+    TierEvict,
+    /// Shard quarantined, buddy mirror took over (`a` = shard).
+    ShardFailover,
+    /// Replayed trace op (replay track; `a`/`b` per op kind).
+    ReplayStore,
+    ReplayLoad,
+    ReplayTick,
+    ReplayRefresh,
+}
+
+impl EventKind {
+    /// Stable name used in the exported trace.
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Admit => "admit",
+            EventKind::Reject => "reject",
+            EventKind::Stage => "stage",
+            EventKind::Infer => "infer",
+            EventKind::Reply => "reply",
+            EventKind::RefreshPass => "refresh_pass",
+            EventKind::RefreshStall => "refresh_stall",
+            EventKind::RefreshSlack => "refresh_slack",
+            EventKind::FaultFired => "fault_fired",
+            EventKind::EccCorrected => "ecc_corrected",
+            EventKind::TierFill => "tier_fill",
+            EventKind::TierEvict => "tier_evict",
+            EventKind::ShardFailover => "shard_failover",
+            EventKind::ReplayStore => "store",
+            EventKind::ReplayLoad => "load",
+            EventKind::ReplayTick => "tick",
+            EventKind::ReplayRefresh => "refresh_row",
+        }
+    }
+}
+
+/// Trace-event phase: span begin / span end / instant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Ph {
+    B,
+    E,
+    I,
+}
+
+/// One fixed-size telemetry event. `Copy` so ring slots never own heap
+/// state; `t_us` is virtual/logical microseconds (never wall clock).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Event {
+    pub kind: EventKind,
+    pub ph: Ph,
+    /// Export track (see [`worker_track`] and friends).
+    pub track: u32,
+    /// Virtual or logical timestamp, µs.
+    pub t_us: f64,
+    /// Kind-specific payload (request id, rows due, shard, …).
+    pub a: u64,
+    pub b: u64,
+}
+
+impl Event {
+    pub fn span_begin(kind: EventKind, track: u32, t_us: f64, a: u64, b: u64) -> Self {
+        Event { kind, ph: Ph::B, track, t_us, a, b }
+    }
+    pub fn span_end(kind: EventKind, track: u32, t_us: f64, a: u64, b: u64) -> Self {
+        Event { kind, ph: Ph::E, track, t_us, a, b }
+    }
+    pub fn instant(kind: EventKind, track: u32, t_us: f64, a: u64, b: u64) -> Self {
+        Event { kind, ph: Ph::I, track, t_us, a, b }
+    }
+}
+
+/// The pool (admission) track: logical submission-sequence timebase.
+pub const TRACK_POOL: u32 = 0xFFFF;
+/// Replay timeline tracks (`conform --replay --trace-out`).
+pub const TRACK_REPLAY_OPS: u32 = 0x3000;
+pub const TRACK_REPLAY_CLOCK: u32 = 0x3001;
+
+/// Track of worker `k`.
+pub fn worker_track(k: usize) -> u32 {
+    k as u32
+}
+/// Track of global shard `s`.
+pub fn shard_track(s: usize) -> u32 {
+    0x1000 + s as u32
+}
+/// Track of tier `j` (0 = front, 1 = back).
+pub fn tier_track(j: usize) -> u32 {
+    0x2000 + j as u32
+}
+
+/// Human-readable track name (becomes the Perfetto thread name).
+pub fn track_name(track: u32) -> String {
+    match track {
+        TRACK_POOL => "pool".to_string(),
+        TRACK_REPLAY_OPS => "replay/ops".to_string(),
+        TRACK_REPLAY_CLOCK => "replay/clock".to_string(),
+        t if t >= 0x2000 => {
+            if t == 0x2000 {
+                "tier/front".to_string()
+            } else {
+                "tier/back".to_string()
+            }
+        }
+        t if t >= 0x1000 => format!("shard/{}", t - 0x1000),
+        t => format!("worker/{t}"),
+    }
+}
+
+/// Stable codes for [`EventKind::FaultFired`] payloads.
+pub mod fault_code {
+    /// `shard-outage` clause fired (`b` = shard index).
+    pub const SHARD_OUTAGE: u64 = 1;
+    /// `refresh-stall` clause swallowed a refresh slot (`b` = row).
+    pub const REFRESH_STALL: u64 = 2;
+}
+
+/// Default ring capacity (events) for CLI-enabled tracing.
+pub const DEFAULT_RING_EVENTS: usize = 1 << 16;
+
+/// A cheap, cloneable handle every producer holds. Disabled (the
+/// default) it is a single `None` branch per emit — no allocation, no
+/// atomic traffic — which is what the pinned zero-allocation test pins.
+#[derive(Clone, Default)]
+pub struct ObsSink {
+    ring: Option<Arc<EventRing>>,
+}
+
+impl std::fmt::Debug for ObsSink {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "ObsSink {{ enabled: {} }}", self.ring.is_some())
+    }
+}
+
+impl ObsSink {
+    /// The no-op sink (also `Default`).
+    pub fn disabled() -> Self {
+        ObsSink { ring: None }
+    }
+
+    /// An enabled sink over a shared ring of at least `capacity` events.
+    pub fn enabled(capacity: usize) -> Self {
+        ObsSink { ring: Some(Arc::new(EventRing::new(capacity))) }
+    }
+
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.ring.is_some()
+    }
+
+    /// Record one event. Never allocates; never blocks.
+    #[inline]
+    pub fn emit(&self, ev: Event) {
+        if let Some(r) = &self.ring {
+            r.push(ev);
+        }
+    }
+
+    /// Published events with their ring tickets (the per-ring sequence
+    /// used as the tie-break under equal timestamps). Quiescent snapshot:
+    /// call only after every producer has stopped (workers joined).
+    pub fn events(&self) -> Vec<(u64, Event)> {
+        match &self.ring {
+            Some(r) => r.snapshot(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Events lost to ring overflow (drop-oldest) or writer collisions.
+    pub fn dropped_events(&self) -> u64 {
+        self.ring.as_ref().map_or(0, |r| r.dropped())
+    }
+}

@@ -1,0 +1,212 @@
+//! Scoped phase timers for the hot paths — compiled out by default.
+//!
+//! With `--features obs-profile` each [`phase`] guard reads the monotonic
+//! clock on entry and accumulates elapsed nanoseconds into per-phase
+//! global counters on drop, gated by a runtime switch ([`enable`],
+//! default off, so even an instrumented binary pays one relaxed atomic
+//! load per hook until profiling is turned on). Without the feature every
+//! function here is an empty `#[inline(always)]` stub and the guard is a
+//! zero-sized type: the hook sites in the transpose/encode/census/
+//! staging/refresh-scan paths vanish entirely — the default build adds
+//! zero new symbols to the hot-path benches (asserted by the CI
+//! `obs-smoke` job).
+//!
+//! Wall-clock durations are intentional here: profiling measures host
+//! cost, unlike the tracing timeline which stays on the deterministic
+//! virtual clock.
+
+/// The instrumented hot-path phases.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// 8×64 SWAR bit-plane transpose.
+    Transpose,
+    /// One-enhancement encode/decode.
+    Encode,
+    /// Ones-census popcount.
+    Census,
+    /// Zero-copy batch staging (store→tick→load).
+    Staging,
+    /// Manager refresh-pass scan.
+    RefreshScan,
+}
+
+/// Every phase, in display order.
+pub const PHASES: [Phase; 5] =
+    [Phase::Transpose, Phase::Encode, Phase::Census, Phase::Staging, Phase::RefreshScan];
+
+impl Phase {
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Transpose => "transpose",
+            Phase::Encode => "encode",
+            Phase::Census => "census",
+            Phase::Staging => "staging",
+            Phase::RefreshScan => "refresh_scan",
+        }
+    }
+
+    fn idx(self) -> usize {
+        match self {
+            Phase::Transpose => 0,
+            Phase::Encode => 1,
+            Phase::Census => 2,
+            Phase::Staging => 3,
+            Phase::RefreshScan => 4,
+        }
+    }
+}
+
+/// One accumulated phase reading.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PhaseStat {
+    pub phase: Phase,
+    pub calls: u64,
+    pub total_ns: u64,
+}
+
+#[cfg(feature = "obs-profile")]
+mod imp {
+    use super::{Phase, PhaseStat, PHASES};
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+    use std::time::Instant;
+
+    static ENABLED: AtomicBool = AtomicBool::new(false);
+    // const-item trick keeps this buildable on older toolchains
+    #[allow(clippy::declare_interior_mutable_const)]
+    const ZERO: AtomicU64 = AtomicU64::new(0);
+    static CALLS: [AtomicU64; 5] = [ZERO; 5];
+    static NANOS: [AtomicU64; 5] = [ZERO; 5];
+
+    pub fn enable(on: bool) {
+        ENABLED.store(on, Ordering::Relaxed);
+    }
+
+    pub fn enabled() -> bool {
+        ENABLED.load(Ordering::Relaxed)
+    }
+
+    pub fn reset() {
+        for i in 0..PHASES.len() {
+            CALLS[i].store(0, Ordering::Relaxed);
+            NANOS[i].store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// RAII phase timer: accumulates on drop when profiling is enabled.
+    pub struct PhaseTimer {
+        phase: Phase,
+        start: Option<Instant>,
+    }
+
+    #[inline]
+    pub fn phase(p: Phase) -> PhaseTimer {
+        PhaseTimer {
+            phase: p,
+            start: if enabled() { Some(Instant::now()) } else { None },
+        }
+    }
+
+    impl Drop for PhaseTimer {
+        fn drop(&mut self) {
+            if let Some(t0) = self.start {
+                let ns = t0.elapsed().as_nanos().min(u64::MAX as u128) as u64;
+                let i = self.phase.idx();
+                CALLS[i].fetch_add(1, Ordering::Relaxed);
+                NANOS[i].fetch_add(ns, Ordering::Relaxed);
+            }
+        }
+    }
+
+    pub fn snapshot() -> Vec<PhaseStat> {
+        PHASES
+            .iter()
+            .map(|&p| PhaseStat {
+                phase: p,
+                calls: CALLS[p.idx()].load(Ordering::Relaxed),
+                total_ns: NANOS[p.idx()].load(Ordering::Relaxed),
+            })
+            .filter(|s| s.calls > 0)
+            .collect()
+    }
+}
+
+#[cfg(not(feature = "obs-profile"))]
+mod imp {
+    use super::{Phase, PhaseStat};
+
+    /// Zero-sized stand-in; dropping it is a no-op the optimizer erases.
+    pub struct PhaseTimer;
+
+    #[inline(always)]
+    pub fn phase(_p: Phase) -> PhaseTimer {
+        PhaseTimer
+    }
+
+    #[inline(always)]
+    pub fn enable(_on: bool) {}
+
+    #[inline(always)]
+    pub fn enabled() -> bool {
+        false
+    }
+
+    #[inline(always)]
+    pub fn reset() {}
+
+    #[inline(always)]
+    pub fn snapshot() -> Vec<PhaseStat> {
+        Vec::new()
+    }
+}
+
+pub use imp::{enable, enabled, phase, reset, snapshot, PhaseTimer};
+
+/// Phase readings as a JSON array (rides into `BENCH_*.json` so the bench
+/// gate can localize a regression to a phase). Empty array when the
+/// feature is off or no phase fired.
+pub fn snapshot_json() -> crate::util::json::Json {
+    use crate::util::json::Json;
+    Json::Arr(
+        snapshot()
+            .into_iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("phase", Json::Str(s.phase.name().to_string())),
+                    ("calls", Json::Num(s.calls as f64)),
+                    ("total_ns", Json::Num(s.total_ns as f64)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_profiling_snapshots_empty() {
+        reset();
+        {
+            let _t = phase(Phase::Encode);
+        }
+        // without the feature: always empty; with it: disabled ⇒ no samples
+        assert!(snapshot().is_empty());
+    }
+
+    #[cfg(feature = "obs-profile")]
+    #[test]
+    fn enabled_profiling_accumulates_calls() {
+        reset();
+        enable(true);
+        for _ in 0..3 {
+            let _t = phase(Phase::Transpose);
+        }
+        enable(false);
+        let snap = snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].phase, Phase::Transpose);
+        assert_eq!(snap[0].calls, 3);
+        reset();
+    }
+}

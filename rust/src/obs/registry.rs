@@ -1,0 +1,194 @@
+//! The unified metrics registry: named counters, gauges and log-bucketed
+//! histograms behind one snapshot surface.
+//!
+//! Naming convention: `mcaimem_<tier>_<thing>_<unit>` — e.g.
+//! `mcaimem_serving_requests_total`, `mcaimem_serving_latency_us`,
+//! `mcaimem_mem_refresh_ops_total`. Counters are monotone `u64` totals
+//! (`_total` suffix), gauges are point-in-time `f64` readings, histograms
+//! are [`LogHistogram`]s (exact counts, ≤ 1/32 bucket error, mergeable).
+//!
+//! Registries merge across workers (counter add, gauge max, histogram
+//! element-wise add) and export deterministically — `BTreeMap` keys — as
+//! JSON ([`Registry::to_json`]) or Prometheus text exposition format
+//! ([`Registry::to_prometheus`]).
+
+use std::collections::BTreeMap;
+
+use super::LogHistogram;
+use crate::util::json::Json;
+
+/// Named counters/gauges/histograms; the one aggregation path behind
+/// `ServerStats` and `LoadReport` snapshots.
+#[derive(Clone, Debug, Default)]
+pub struct Registry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    hists: BTreeMap<String, LogHistogram>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry::default()
+    }
+
+    /// Add to (creating at zero) a monotone counter.
+    pub fn count(&mut self, name: &str, delta: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += delta;
+    }
+
+    /// Set a point-in-time gauge.
+    pub fn gauge(&mut self, name: &str, value: f64) {
+        self.gauges.insert(name.to_string(), value);
+    }
+
+    /// Record one observation into a histogram.
+    pub fn observe(&mut self, name: &str, value: f64) {
+        self.hists.entry(name.to_string()).or_default().record(value);
+    }
+
+    /// Merge a whole pre-built histogram under `name` (worker hand-off).
+    pub fn merge_hist(&mut self, name: &str, h: &LogHistogram) {
+        self.hists.entry(name.to_string()).or_default().merge(h);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge_value(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    pub fn hist(&self, name: &str) -> Option<&LogHistogram> {
+        self.hists.get(name)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.hists.is_empty()
+    }
+
+    /// Merge another registry: counters add, gauges keep the maximum
+    /// (the conservative cross-worker reading), histograms merge exactly.
+    pub fn merge(&mut self, other: &Registry) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, v) in &other.gauges {
+            let e = self.gauges.entry(k.clone()).or_insert(*v);
+            *e = e.max(*v);
+        }
+        for (k, h) in &other.hists {
+            self.hists.entry(k.clone()).or_default().merge(h);
+        }
+    }
+
+    /// Deterministic JSON snapshot (sorted keys; histograms as summary
+    /// quantiles plus the raw non-empty buckets).
+    pub fn to_json(&self) -> Json {
+        let counters =
+            Json::Obj(self.counters.iter().map(|(k, &v)| (k.clone(), Json::Num(v as f64))).collect());
+        let gauges =
+            Json::Obj(self.gauges.iter().map(|(k, &v)| (k.clone(), Json::Num(v))).collect());
+        let hists = Json::Obj(
+            self.hists
+                .iter()
+                .map(|(k, h)| {
+                    (
+                        k.clone(),
+                        Json::obj(vec![
+                            ("count", Json::Num(h.count() as f64)),
+                            ("sum", Json::Num(h.sum())),
+                            ("min", Json::Num(h.min() as f64)),
+                            ("max", Json::Num(h.max() as f64)),
+                            ("p50", Json::Num(h.quantile(0.5))),
+                            ("p99", Json::Num(h.quantile(0.99))),
+                            ("p999", Json::Num(h.quantile(0.999))),
+                            (
+                                "buckets",
+                                Json::Arr(
+                                    h.buckets()
+                                        .into_iter()
+                                        .map(|(lo, w, c)| {
+                                            Json::Arr(vec![
+                                                Json::Num(lo as f64),
+                                                Json::Num(w as f64),
+                                                Json::Num(c as f64),
+                                            ])
+                                        })
+                                        .collect(),
+                                ),
+                            ),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        Json::obj(vec![("counters", counters), ("gauges", gauges), ("histograms", hists)])
+    }
+
+    /// Prometheus text exposition format: counters and gauges verbatim,
+    /// histograms as summaries (`{quantile="..."}` series + `_sum` /
+    /// `_count`).
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.counters {
+            out.push_str(&format!("# TYPE {k} counter\n{k} {v}\n"));
+        }
+        for (k, v) in &self.gauges {
+            out.push_str(&format!("# TYPE {k} gauge\n{k} {v}\n"));
+        }
+        for (k, h) in &self.hists {
+            out.push_str(&format!("# TYPE {k} summary\n"));
+            for (label, q) in [("0.5", 0.5), ("0.99", 0.99), ("0.999", 0.999)] {
+                out.push_str(&format!("{k}{{quantile=\"{label}\"}} {}\n", h.quantile(q)));
+            }
+            out.push_str(&format!("{k}_sum {}\n{k}_count {}\n", h.sum(), h.count()));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_gauges_and_hists_round_trip() {
+        let mut r = Registry::new();
+        r.count("mcaimem_serving_requests_total", 5);
+        r.count("mcaimem_serving_requests_total", 3);
+        r.gauge("mcaimem_serving_occupancy", 0.75);
+        for v in [100.0, 200.0, 300.0] {
+            r.observe("mcaimem_serving_latency_us", v);
+        }
+        assert_eq!(r.counter("mcaimem_serving_requests_total"), 8);
+        assert_eq!(r.gauge_value("mcaimem_serving_occupancy"), Some(0.75));
+        assert_eq!(r.hist("mcaimem_serving_latency_us").unwrap().count(), 3);
+
+        let doc = r.to_json();
+        let parsed = Json::parse(&doc.to_pretty()).unwrap();
+        assert_eq!(parsed, doc);
+
+        let prom = r.to_prometheus();
+        assert!(prom.contains("# TYPE mcaimem_serving_requests_total counter"));
+        assert!(prom.contains("mcaimem_serving_requests_total 8"));
+        assert!(prom.contains("mcaimem_serving_latency_us{quantile=\"0.99\"}"));
+        assert!(prom.contains("mcaimem_serving_latency_us_count 3"));
+    }
+
+    #[test]
+    fn merge_adds_counters_and_histograms() {
+        let mut a = Registry::new();
+        let mut b = Registry::new();
+        a.count("x_total", 1);
+        b.count("x_total", 2);
+        a.gauge("g", 1.0);
+        b.gauge("g", 3.0);
+        a.observe("h_us", 10.0);
+        b.observe("h_us", 20.0);
+        a.merge(&b);
+        assert_eq!(a.counter("x_total"), 3);
+        assert_eq!(a.gauge_value("g"), Some(3.0));
+        assert_eq!(a.hist("h_us").unwrap().count(), 2);
+    }
+}

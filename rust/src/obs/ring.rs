@@ -1,0 +1,183 @@
+//! Bounded lock-free multi-writer event ring.
+//!
+//! Writers take a ticket from a shared counter and claim `slot = ticket mod
+//! capacity` with a CAS that sets a BUSY bit before touching the payload, so
+//! two writers lapping each other on the same slot can never interleave
+//! (tear) a payload write — the loser drops its event and counts it. A
+//! published newer ticket overwriting an older one is the ring's
+//! drop-oldest overflow policy, also counted. Draining is a quiescent-time
+//! operation (`snapshot` after all producers stopped): published slots are
+//! returned sorted by ticket, which doubles as the per-ring sequence number
+//! the exporter uses to tie-break equal timestamps.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::Event;
+
+/// Slot state: 0 = empty, `ticket + 1` = published, `BUSY | (ticket + 1)` =
+/// a writer is mid-payload.
+const BUSY: u64 = 1 << 63;
+
+struct Slot {
+    state: AtomicU64,
+    ev: UnsafeCell<Event>,
+}
+
+/// Fixed-capacity (power-of-two) multi-writer event ring. Overflow keeps
+/// the newest events and counts every drop.
+pub struct EventRing {
+    slots: Box<[Slot]>,
+    mask: u64,
+    head: AtomicU64,
+    dropped: AtomicU64,
+}
+
+// SAFETY: the payload cell is only written while the slot's state holds the
+// BUSY bit (claimed by exactly one writer via CAS), and only read by
+// `snapshot`, which skips BUSY slots and is documented quiescent-time.
+unsafe impl Sync for EventRing {}
+unsafe impl Send for EventRing {}
+
+impl EventRing {
+    /// Ring holding at least `capacity` events (rounded up to a power of
+    /// two, minimum 8).
+    pub fn new(capacity: usize) -> Self {
+        let cap = capacity.max(8).next_power_of_two();
+        let mut slots = Vec::with_capacity(cap);
+        let zero = Event {
+            kind: super::EventKind::Admit,
+            ph: super::Ph::I,
+            track: 0,
+            t_us: 0.0,
+            a: 0,
+            b: 0,
+        };
+        slots.resize_with(cap, || Slot {
+            state: AtomicU64::new(0),
+            ev: UnsafeCell::new(zero),
+        });
+        EventRing {
+            slots: slots.into_boxed_slice(),
+            mask: (cap - 1) as u64,
+            head: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Events dropped: ring overflow (a newer event overwrote a published
+    /// older one) plus writer collisions on a lapped slot.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.fetch_add(0, Ordering::Relaxed)
+    }
+
+    /// Total events ever offered (published + dropped).
+    pub fn offered(&self) -> u64 {
+        self.head.load(Ordering::Relaxed)
+    }
+
+    /// Record one event. Lock-free, allocation-free; on a full ring the
+    /// oldest event in the slot is replaced (and counted as dropped).
+    pub fn push(&self, ev: Event) {
+        let ticket = self.head.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(ticket & self.mask) as usize];
+        loop {
+            let cur = slot.state.load(Ordering::Acquire);
+            if cur & BUSY != 0 {
+                // another writer owns this slot right now (we lapped it or
+                // it lapped us): losing this event is the only way to keep
+                // payload writes exclusive
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+            if cur > ticket + 1 {
+                // a full lap already published a newer event here — ours is
+                // the older one, so drop-oldest means dropping ours
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+            if slot
+                .state
+                .compare_exchange_weak(cur, BUSY | (ticket + 1), Ordering::Acquire, Ordering::Relaxed)
+                .is_ok()
+            {
+                if cur != 0 {
+                    // overwrote a published older event: counted overflow
+                    self.dropped.fetch_add(1, Ordering::Relaxed);
+                }
+                // SAFETY: the BUSY bit makes this thread the slot's only
+                // writer until the release store below.
+                unsafe { *slot.ev.get() = ev };
+                slot.state.store(ticket + 1, Ordering::Release);
+                return;
+            }
+        }
+    }
+
+    /// Published events sorted by ticket. Quiescent-time: callers must
+    /// ensure no writer is concurrently pushing (in this crate: after the
+    /// worker pool has joined its threads). Slots still marked BUSY by a
+    /// writer that never completed are skipped.
+    pub fn snapshot(&self) -> Vec<(u64, Event)> {
+        let mut out = Vec::with_capacity(self.slots.len());
+        for slot in self.slots.iter() {
+            let st = slot.state.load(Ordering::Acquire);
+            if st != 0 && st & BUSY == 0 {
+                // SAFETY: quiescent — no concurrent writer (see doc).
+                out.push((st - 1, unsafe { *slot.ev.get() }));
+            }
+        }
+        out.sort_by_key(|&(t, _)| t);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{Event, EventKind, Ph};
+
+    fn ev(a: u64) -> Event {
+        Event { kind: EventKind::Reply, ph: Ph::I, track: 7, t_us: a as f64, a, b: a }
+    }
+
+    #[test]
+    fn fills_and_snapshots_in_ticket_order() {
+        let r = EventRing::new(16);
+        for i in 0..10 {
+            r.push(ev(i));
+        }
+        let got = r.snapshot();
+        assert_eq!(got.len(), 10);
+        assert_eq!(r.dropped(), 0);
+        for (i, (ticket, e)) in got.iter().enumerate() {
+            assert_eq!(*ticket, i as u64);
+            assert_eq!(e.a, i as u64);
+        }
+    }
+
+    #[test]
+    fn overflow_drops_oldest_and_counts() {
+        let r = EventRing::new(8);
+        for i in 0..20 {
+            r.push(ev(i));
+        }
+        let got = r.snapshot();
+        assert_eq!(got.len(), 8);
+        assert_eq!(r.dropped(), 12);
+        assert_eq!(r.offered(), 20);
+        // the survivors are exactly the newest 8, still in order
+        let kept: Vec<u64> = got.iter().map(|(_, e)| e.a).collect();
+        assert_eq!(kept, (12..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn capacity_rounds_up_to_power_of_two() {
+        assert_eq!(EventRing::new(100).capacity(), 128);
+        assert_eq!(EventRing::new(1).capacity(), 8);
+    }
+}

@@ -20,11 +20,33 @@ use crate::util::table::{fnum, Table};
 use crate::Result;
 use std::time::Duration;
 
+/// True when a quantile estimate rests on fewer than one expected tail
+/// sample (`n·(1−q) < 1`) — e.g. p99.9 below 1000 completions. Rendered
+/// with a `*` marker so sweep readers don't gate on noise.
+fn quantile_starved(requests: u64, q: f64) -> bool {
+    (requests as f64) * (1.0 - q) < 1.0
+}
+
 /// Render the tier-level stats block (one row), the refresh-stall
-/// attribution when stall modeling was on, and the per-shard break-down.
+/// attribution when stall modeling was on, the per-shard break-down, and
+/// (under `--features obs-profile` with profiling on) the hot-path phase
+/// table.
 pub fn stats_tables(stats: &ServerStats) -> Vec<Table> {
+    let q_cell = |v: f64, q: f64| {
+        if quantile_starved(stats.requests, q) {
+            format!("{}*", fnum(v, 0))
+        } else {
+            fnum(v, 0)
+        }
+    };
+    let any_starved = [0.5, 0.99, 0.999].iter().any(|&q| quantile_starved(stats.requests, q));
+    let title = if any_starved {
+        "serving-tier statistics (* = sample-starved quantile: fewer than one expected tail sample)"
+    } else {
+        "serving-tier statistics"
+    };
     let mut summary = Table::new(
-        "serving-tier statistics",
+        title,
         &[
             "requests", "errors", "rejected", "batches", "occupancy", "req/s", "KB/s",
             "p50 (µs)", "p99 (µs)", "p99.9 (µs)", "queue p99",
@@ -38,9 +60,9 @@ pub fn stats_tables(stats: &ServerStats) -> Vec<Table> {
         fnum(stats.occupancy, 3),
         fnum(stats.requests_per_s, 0),
         fnum(stats.bytes_per_s / 1024.0, 1),
-        fnum(stats.p50_latency_us, 0),
-        fnum(stats.p99_latency_us, 0),
-        fnum(stats.p999_latency_us, 0),
+        q_cell(stats.p50_latency_us, 0.5),
+        q_cell(stats.p99_latency_us, 0.99),
+        q_cell(stats.p999_latency_us, 0.999),
         fnum(stats.queue_depth_p99, 1),
     ]);
     let mut out = vec![summary];
@@ -69,6 +91,24 @@ pub fn stats_tables(stats: &ServerStats) -> Vec<Table> {
                 fnum(s.occupancy, 3),
                 s.refreshes.to_string(),
                 fnum(s.energy_j * 1e6, 3),
+            ]);
+        }
+        out.push(t);
+    }
+    // phase breakdown only exists when the binary was built with
+    // --features obs-profile and profiling was switched on for the run
+    let phases = crate::obs::profile::snapshot();
+    if !phases.is_empty() {
+        let mut t = Table::new(
+            "hot-path phase breakdown (host wall time; --features obs-profile)",
+            &["phase", "calls", "total (ms)", "mean (µs)"],
+        );
+        for s in &phases {
+            t.row(vec![
+                s.phase.name().to_string(),
+                s.calls.to_string(),
+                fnum(s.total_ns as f64 / 1e6, 3),
+                fnum(s.total_ns as f64 / 1e3 / s.calls.max(1) as f64, 2),
             ]);
         }
         out.push(t);
@@ -357,6 +397,24 @@ mod tests {
         let tables = stats_tables(&stats);
         assert_eq!(tables.len(), 3);
         assert!(tables[1].render().contains("slack"));
+    }
+
+    #[test]
+    fn starved_quantiles_are_marked_not_hidden() {
+        let mut m = crate::coordinator::metrics::Metrics::default();
+        m.record_latency(std::time::Duration::from_micros(100));
+        m.record_batch(1, 4);
+        let mut stats = ServerStats::from_metrics(&m);
+        // 500 completions: p50/p99 are honest, p99.9 expects < 1 tail
+        // sample — the summary must carry the * marker and the footnote
+        stats.requests = 500;
+        let rendered = stats_tables(&stats)[0].render();
+        assert!(rendered.contains("sample-starved"), "{rendered}");
+        assert!(rendered.contains('*'), "{rendered}");
+        // plenty of samples: marker and footnote both disappear
+        stats.requests = 100_000;
+        let rendered = stats_tables(&stats)[0].render();
+        assert!(!rendered.contains("sample-starved"), "{rendered}");
     }
 
     #[test]

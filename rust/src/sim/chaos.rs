@@ -57,6 +57,10 @@ pub struct ChaosConfig {
     pub requests: usize,
     /// Shrink memory-drill failures to minimal reproducing traces.
     pub shrink: bool,
+    /// Telemetry sink the serving drill emits spans into (disabled by
+    /// default; `mcaimem chaos --trace-out` enables it and exports the
+    /// drill's fault/failover timeline as a Chrome trace).
+    pub obs: crate::obs::ObsSink,
 }
 
 impl Default for ChaosConfig {
@@ -70,6 +74,7 @@ impl Default for ChaosConfig {
             workers: 2,
             requests: 320,
             shrink: true,
+            obs: crate::obs::ObsSink::disabled(),
         }
     }
 }
@@ -165,6 +170,7 @@ pub fn serving_drill(cfg: &ChaosConfig) -> Result<ServingDrill> {
         buffer_bytes: workers * buffer_bytes,
         high_water: 64,
         seed: cfg.seed,
+        obs: cfg.obs.clone(),
         ..PoolConfig::default()
     };
     let pool = WorkerPool::start_with_buffers(pool_cfg, engines, buffers)?;

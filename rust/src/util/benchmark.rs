@@ -137,6 +137,10 @@ impl BenchSuite {
             ("suite", Json::Str(self.suite.clone())),
             ("schema", Json::Num(1.0)),
             ("results", Json::Arr(self.results.iter().map(|r| r.to_json()).collect())),
+            // per-phase host-cost breakdown; [] unless the bench binary was
+            // built with --features obs-profile and switched profiling on,
+            // so default-build artifacts are byte-stable modulo timings
+            ("phases", crate::obs::profile::snapshot_json()),
         ])
     }
 

@@ -1,0 +1,185 @@
+//! Cross-thread and schema-level tests of the telemetry backbone: the
+//! multi-writer event ring under real contention, per-track ordering
+//! through the Chrome trace exporter, and the log-bucketed histogram's
+//! error bound checked property-style against an exact sort.
+
+use std::sync::Arc;
+use std::thread;
+
+use mcaimem::obs::export::chrome_trace;
+use mcaimem::obs::{worker_track, Event, EventKind, EventRing, LogHistogram, ObsSink};
+use mcaimem::util::json::Json;
+use mcaimem::util::rng::Pcg64;
+
+/// Concurrent writers never tear a payload: every event is written with
+/// `a == b == t_us` (as bits), so any interleaved payload write would
+/// surface as a mismatched triple in the snapshot.
+#[test]
+fn concurrent_writers_never_tear_events() {
+    const WRITERS: u64 = 8;
+    const PER_WRITER: u64 = 4_000;
+    // deliberately smaller than the offered volume so laps + collisions
+    // actually happen while the snapshot invariant still must hold
+    let ring = Arc::new(EventRing::new(1 << 10));
+    let handles: Vec<_> = (0..WRITERS)
+        .map(|w| {
+            let ring = Arc::clone(&ring);
+            thread::spawn(move || {
+                for i in 0..PER_WRITER {
+                    let tag = w * PER_WRITER + i;
+                    ring.push(Event::instant(
+                        EventKind::Reply,
+                        worker_track(w as usize),
+                        tag as f64,
+                        tag,
+                        tag,
+                    ));
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let got = ring.snapshot();
+    assert!(!got.is_empty());
+    for (_, e) in &got {
+        assert_eq!(e.a, e.b, "torn payload: {e:?}");
+        assert_eq!(e.t_us, e.a as f64, "torn payload: {e:?}");
+    }
+    // conservation: everything offered is either published or counted
+    assert_eq!(
+        got.len() as u64 + ring.dropped(),
+        WRITERS * PER_WRITER,
+        "events neither published nor counted as dropped"
+    );
+    // tickets are unique (each snapshot slot holds a distinct claim)
+    let mut tickets: Vec<u64> = got.iter().map(|&(t, _)| t).collect();
+    tickets.dedup();
+    assert_eq!(tickets.len(), got.len());
+}
+
+/// Events interleaved across threads/tracks come back with each track's
+/// own ordering preserved, and the exporter keeps every (pid, tid) series
+/// monotone in the emitted JSON.
+#[test]
+fn export_preserves_per_track_ordering() {
+    let sink = ObsSink::enabled(1 << 12);
+    let handles: Vec<_> = (0..4u32)
+        .map(|w| {
+            let sink = sink.clone();
+            thread::spawn(move || {
+                for i in 0..200u64 {
+                    // per-track timestamps strictly increase; tracks overlap
+                    sink.emit(Event::instant(
+                        EventKind::Reply,
+                        worker_track(w as usize),
+                        i as f64,
+                        i,
+                        0,
+                    ));
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(sink.dropped_events(), 0);
+
+    // source-level check: within one track, ticket order == time order
+    let events = sink.events();
+    for w in 0..4u32 {
+        let times: Vec<f64> = events
+            .iter()
+            .filter(|(_, e)| e.track == worker_track(w as usize))
+            .map(|(_, e)| e.t_us)
+            .collect();
+        assert_eq!(times.len(), 200);
+        assert!(times.windows(2).all(|p| p[0] < p[1]), "track {w} out of order");
+    }
+
+    // exporter-level check: the JSON round-trips and every tid's ts series
+    // is monotone non-decreasing
+    let doc = chrome_trace(&events, sink.dropped_events());
+    let parsed = Json::parse(&doc.to_pretty()).unwrap();
+    let evs = parsed.get("traceEvents").unwrap().as_arr().unwrap().to_vec();
+    let mut last: std::collections::HashMap<(u64, u64), f64> = std::collections::HashMap::new();
+    let mut seen = 0usize;
+    for e in &evs {
+        if e.get("ph").unwrap().as_str() == Some("M") {
+            continue; // metadata carries no ts
+        }
+        let pid = e.get("pid").unwrap().as_f64().unwrap() as u64;
+        let tid = e.get("tid").unwrap().as_f64().unwrap() as u64;
+        let ts = e.get("ts").unwrap().as_f64().unwrap();
+        let prev = last.insert((pid, tid), ts);
+        assert!(prev.map_or(true, |p| p <= ts), "tid {tid} went backwards");
+        seen += 1;
+    }
+    assert_eq!(seen, 800);
+}
+
+/// Property test: on seeded heavy-tailed samples, every histogram
+/// quantile lands within the bucket scheme's advertised relative error of
+/// the exact (sort-based) quantile, and merge equals recording the
+/// concatenation.
+#[test]
+fn histogram_quantiles_track_exact_sort_within_error_bound() {
+    let mut rng = Pcg64::new(0x0B5_CAFE);
+    for round in 0..5u64 {
+        let n = 4_000 + 1_500 * round as usize;
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        let mut exact: Vec<u64> = Vec::with_capacity(n);
+        for i in 0..n {
+            // heavy-tailed mix: mostly ~µs-scale, occasional large outliers
+            let v = if rng.bernoulli(0.02) {
+                rng.below(5_000_000) + 1
+            } else {
+                (rng.lognormal(5.0, 1.0).round() as u64).max(1)
+            };
+            exact.push(v);
+            if i % 2 == 0 { a.record_u64(v) } else { b.record_u64(v) };
+        }
+        exact.sort_unstable();
+        a.merge(&b);
+        assert_eq!(a.count(), n as u64);
+
+        for &q in &[0.01, 0.25, 0.5, 0.9, 0.99, 0.999, 1.0] {
+            let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+            let truth = exact[rank - 1] as f64;
+            let est = a.quantile(q);
+            // the estimate sits inside the truth's bucket: its bounds are
+            // within one bucket width (≤ truth/32, plus 1 for integer
+            // rounding at the low end) of the exact order statistic
+            let tol = truth * LogHistogram::relative_error() + 1.0;
+            assert!(
+                (est - truth).abs() <= tol,
+                "round {round} q={q}: est {est} vs exact {truth} (tol {tol})"
+            );
+        }
+        // exact aggregates survive bucketing and merging untouched
+        assert_eq!(a.min(), exact[0]);
+        assert_eq!(a.max(), *exact.last().unwrap());
+        assert_eq!(a.sum(), exact.iter().map(|&v| v as f64).sum::<f64>());
+    }
+}
+
+/// The disabled sink is inert end-to-end: no ring, no events, and an
+/// export of it is just the empty (but well-formed) trace document.
+#[test]
+fn disabled_sink_exports_an_empty_valid_trace() {
+    let sink = ObsSink::disabled();
+    sink.emit(Event::instant(EventKind::Admit, worker_track(0), 1.0, 1, 1));
+    assert!(!sink.is_enabled());
+    assert!(sink.events().is_empty());
+    assert_eq!(sink.dropped_events(), 0);
+    let doc = chrome_trace(&sink.events(), 0);
+    let parsed = Json::parse(&doc.to_pretty()).unwrap();
+    let evs = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+    // only the process_name metadata record remains
+    assert_eq!(evs.len(), 1);
+    assert_eq!(evs[0].get("ph").unwrap().as_str(), Some("M"));
+}

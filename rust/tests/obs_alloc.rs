@@ -1,0 +1,93 @@
+//! Pinned zero-cost guarantee: with tracing disabled (the default), the
+//! hot-path telemetry hooks — sink emits on the submit/reply path and
+//! histogram recording — perform **zero heap allocations**. This test
+//! binary installs a counting global allocator (own integration binary, so
+//! no other test shares the allocator) and pins the delta at exactly 0.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use mcaimem::obs::{worker_track, Event, EventKind, LogHistogram, ObsSink, TRACK_POOL};
+
+struct CountingAlloc;
+
+// Per-thread count so the two tests in this binary (which the harness runs
+// on parallel threads) can't pollute each other's measured window.
+// Const-initialized Cell: the TLS access itself never allocates; `try_with`
+// shrugs off accesses during thread teardown.
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+fn bump() {
+    let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        bump();
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static A: CountingAlloc = CountingAlloc;
+
+fn alloc_count() -> u64 {
+    ALLOCS.try_with(|c| c.get()).unwrap_or(0)
+}
+
+#[test]
+fn disabled_tracing_allocates_nothing_on_the_hot_path() {
+    let sink = ObsSink::disabled();
+    let mut hist = LogHistogram::new(); // allocates its bucket vec ONCE, here
+
+    // warm up any lazy one-time state outside the measured window
+    sink.emit(Event::instant(EventKind::Admit, TRACK_POOL, 0.0, 0, 0));
+    hist.record(1.0);
+
+    let before = alloc_count();
+    for i in 0..10_000u64 {
+        // the submit-path and reply-path emits the pool makes per request
+        sink.emit(Event::instant(EventKind::Admit, TRACK_POOL, i as f64, i, 0));
+        sink.emit(Event::span_begin(EventKind::Stage, worker_track(0), i as f64, i, 0));
+        sink.emit(Event::span_end(EventKind::Stage, worker_track(0), i as f64 + 1.0, i, 0));
+        sink.emit(Event::instant(EventKind::Reply, worker_track(0), i as f64 + 1.0, i, 0));
+        // the per-request latency record every reply performs
+        hist.record(100.0 + (i % 977) as f64);
+    }
+    let after = alloc_count();
+    assert_eq!(
+        after - before,
+        0,
+        "disabled-sink emit + histogram record must not touch the heap"
+    );
+    assert!(!sink.is_enabled());
+    assert_eq!(hist.count(), 10_001);
+}
+
+#[test]
+fn enabled_ring_pushes_do_not_allocate_after_construction() {
+    // the ring buffer is one up-front allocation; steady-state pushes are
+    // allocation-free even when tracing is ON (required for bounded,
+    // non-perturbing capture on the serving path)
+    let sink = ObsSink::enabled(1 << 10);
+    sink.emit(Event::instant(EventKind::Admit, TRACK_POOL, 0.0, 0, 0));
+
+    let before = alloc_count();
+    for i in 0..50_000u64 {
+        sink.emit(Event::instant(EventKind::Reply, worker_track(0), i as f64, i, 0));
+    }
+    let after = alloc_count();
+    assert_eq!(after - before, 0, "steady-state ring pushes must not allocate");
+    // the ring wrapped many times over: drops counted, capacity bounded
+    assert!(sink.dropped_events() >= 50_000 - 1024);
+    assert!(sink.events().len() <= 1024);
+}
